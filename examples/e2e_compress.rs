@@ -1,0 +1,117 @@
+//! End-to-end validation driver (DESIGN.md E2E row): exercises the whole
+//! three-layer system on a real small workload.
+//!
+//! 1. trains the `e2e` stand-in LM (~29M params) for several hundred
+//!    steps through the AOT train-step artifact, logging the loss curve;
+//! 2. runs the full §4 compression pipeline (RIA+SQ → 16:256 outliers →
+//!    8:16 mask → VC → EBFT) through the L1 kernel artifacts;
+//! 3. evaluates dense vs compressed perplexity and zero-shot accuracy;
+//! 4. writes a machine-readable report to runs/e2e_report.json.
+//!
+//! Flags: --model <cfg> --steps N --ebft N --fast (shrinks everything)
+
+use std::sync::Arc;
+
+use sparselm::bench::ExperimentCtx;
+use sparselm::coordinator::{CompressionPipeline, PipelineSpec};
+use sparselm::data::CorpusKind;
+use sparselm::eval::{perplexity, zero_shot_accuracy};
+use sparselm::pruning::PruneSpec;
+use sparselm::util::args::Args;
+use sparselm::util::json::Json;
+use sparselm::util::timer::Stopwatch;
+
+fn main() -> sparselm::Result<()> {
+    let args = Args::from_env();
+    if args.get_bool("fast") {
+        std::env::set_var("SPARSELM_FAST", "1");
+    }
+    let model = args.get_str("model", "e2e");
+    let steps = args.get_usize("steps", 300);
+    let ebft = args.get_usize("ebft", 24);
+    let sw = Stopwatch::start();
+
+    let ctx = ExperimentCtx::new("artifacts")?;
+    println!("== e2e driver: model={model} steps={steps} ebft={ebft} ==");
+
+    // ---- 1. train (loss curve logged by the Trainer; cached in runs/) --
+    let (exec, dense) = ctx.ensure_trained(&model, steps)?;
+    println!(
+        "model: {:.1}M params, trained ({:.1}s elapsed)",
+        exec.config.n_params() as f64 / 1e6,
+        sw.secs()
+    );
+
+    // ---- 2. evaluate dense ------------------------------------------------
+    let dense_lits = exec.upload(&dense)?;
+    let dense_wiki = perplexity(&exec, &dense_lits, &ctx.wiki_eval, ExperimentCtx::ppl_batches())?;
+    let dense_c4 = perplexity(&exec, &dense_lits, &ctx.c4_eval, ExperimentCtx::ppl_batches())?;
+    let dense_zs = zero_shot_accuracy(
+        &exec,
+        &dense_lits,
+        &ctx.tokenizer,
+        &ctx.world,
+        ExperimentCtx::zs_items(),
+        7,
+    )?;
+    println!(
+        "dense: wiki ppl {:.3} | c4 ppl {:.3} | mean acc {:.2}%",
+        dense_wiki.ppl,
+        dense_c4.ppl,
+        dense_zs.mean_accuracy() * 100.0
+    );
+
+    // ---- 3. compress ------------------------------------------------------
+    let spec = PipelineSpec::new(PruneSpec::new(8, 16).outliers(16)).ebft(ebft);
+    let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), &model)?;
+    let (compressed, report) = pipeline.run(&dense, &ctx.wiki_train, &spec)?;
+    println!(
+        "compressed with {}: {:.2}x storage reduction ({:.1}s elapsed)",
+        report.label,
+        report.compression_ratio(),
+        sw.secs()
+    );
+
+    // ---- 4. evaluate compressed -------------------------------------------
+    let lits = exec.upload(&compressed)?;
+    let sp_wiki = perplexity(&exec, &lits, &ctx.wiki_eval, ExperimentCtx::ppl_batches())?;
+    let sp_c4 = perplexity(&exec, &lits, &ctx.c4_eval, ExperimentCtx::ppl_batches())?;
+    let sp_zs = zero_shot_accuracy(
+        &exec,
+        &lits,
+        &ctx.tokenizer,
+        &ctx.world,
+        ExperimentCtx::zs_items(),
+        7,
+    )?;
+    println!(
+        "sparse: wiki ppl {:.3} | c4 ppl {:.3} | mean acc {:.2}%",
+        sp_wiki.ppl,
+        sp_c4.ppl,
+        sp_zs.mean_accuracy() * 100.0
+    );
+    for t in &sp_zs.tasks {
+        println!("  {:<12} {:.1}%", t.task, t.accuracy * 100.0);
+    }
+    println!("{}", pipeline.metrics.report());
+
+    // ---- 5. machine-readable report ----------------------------------------
+    let report_json = Json::obj(vec![
+        ("model", Json::str(model.clone())),
+        ("train_steps", Json::num(steps as f64)),
+        ("dense_ppl_wiki", Json::num(dense_wiki.ppl)),
+        ("dense_ppl_c4", Json::num(dense_c4.ppl)),
+        ("dense_mean_acc", Json::num(dense_zs.mean_accuracy())),
+        ("sparse_ppl_wiki", Json::num(sp_wiki.ppl)),
+        ("sparse_ppl_c4", Json::num(sp_c4.ppl)),
+        ("sparse_mean_acc", Json::num(sp_zs.mean_accuracy())),
+        ("compression_ratio", Json::num(report.compression_ratio())),
+        ("pipeline", Json::str(report.label.clone())),
+        ("elapsed_secs", Json::num(sw.secs())),
+    ]);
+    std::fs::create_dir_all("runs").ok();
+    std::fs::write("runs/e2e_report.json", report_json.to_string())?;
+    println!("report written to runs/e2e_report.json ({:.1}s total)", sw.secs());
+    let _ = CorpusKind::Wiki;
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Hardware projection report: the §2 analysis end-to-end for a *whole
+//! model* rather than a single GEMM.
+//!
+//! Takes a model config, walks its linear layers, and reports per-layer
+//! and total: dense vs sparse traffic, metadata overhead, projected
+//! decode-step speedup, and the salient side-stream cost — i.e. what an
+//! 8:16-capable accelerator would buy on this architecture.
+
+use sparselm::hwsim::{GemmShape, HwModel};
+use sparselm::model::ModelConfig;
+use sparselm::runtime::Engine;
+use sparselm::util::args::Args;
+
+fn main() -> sparselm::Result<()> {
+    let args = Args::from_env();
+    let model = args.get_str("model", "e2e");
+    let batch = args.get_usize("batch", 8);
+    let (n, m) = sparselm::cli::parse_pattern(&args.get_str("sparsity", "8:16"))?;
+    let k = args.get_usize("outliers", 16);
+
+    let engine = Engine::new(&args.get_str("artifacts", "artifacts"))?;
+    let manifest = engine.model_manifest(&model)?;
+    let cfg = ModelConfig::from_manifest(&manifest.raw);
+    let hw = HwModel::default();
+
+    println!(
+        "\n# hwsim report: {model} ({:.1}M params), {n}:{m} sparsity + {k}:256 outliers, batch {batch}\n",
+        cfg.n_params() as f64 / 1e6
+    );
+
+    let linears: Vec<(&str, usize, usize, usize)> = vec![
+        ("wq", cfg.dim, cfg.dim, cfg.n_layers),
+        ("wk/wv", cfg.kv_dim(), cfg.dim, 2 * cfg.n_layers),
+        ("wo", cfg.dim, cfg.dim, cfg.n_layers),
+        ("wg/wu", cfg.hidden, cfg.dim, 2 * cfg.n_layers),
+        ("wd", cfg.dim, cfg.hidden, cfg.n_layers),
+    ];
+
+    let mut dense_total = 0.0;
+    let mut sparse_total = 0.0;
+    println!(
+        "{:<8} {:>12} {:>7} {:>12} {:>12} {:>9}",
+        "layer", "shape", "count", "dense µs", "sparse µs", "speedup"
+    );
+    for (name, rows, cols, count) in linears {
+        let g = GemmShape::new(batch, rows, cols);
+        let d = hw.dense(g).latency * count as f64;
+        let s = (hw.sparse_nm(g, n, m).latency
+            + hw.outlier_overhead(g, k) / hw.bandwidth)
+            * count as f64;
+        dense_total += d;
+        sparse_total += s;
+        println!(
+            "{:<8} {:>12} {:>7} {:>12.2} {:>12.2} {:>8.2}x",
+            name,
+            format!("{rows}x{cols}"),
+            count,
+            d * 1e6,
+            s * 1e6,
+            d / s
+        );
+    }
+    println!(
+        "\nprojected decode-step linear-layer speedup: {:.2}x (dense {:.1} µs -> sparse {:.1} µs)",
+        dense_total / sparse_total,
+        dense_total * 1e6,
+        sparse_total * 1e6
+    );
+    println!("(paper §2: ~1.5-2x expected at transformer shapes; overhead-bound below ~1k dims)");
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Outlier study: how much quality do structured salient weights buy, and
+//! what do they cost?
+//!
+//! Sweeps the salient budget k ∈ {0, 4, 8, 16, 32}:256 on a trained tiny
+//! model under both 2:4 and 8:16 base sparsity, reporting PPL, storage,
+//! and the structured-vs-CSR traffic gap — the study behind the paper's
+//! Tables 5 and 7 and §1 contribution 2 ("SSP for SW").
+
+use std::sync::Arc;
+
+use sparselm::bench::{ExperimentCtx, TablePrinter};
+use sparselm::coordinator::{CompressionPipeline, PipelineSpec};
+use sparselm::eval::perplexity;
+use sparselm::hwsim::{GemmShape, HwModel};
+use sparselm::pruning::{PruneMethod, PruneSpec};
+use sparselm::util::args::Args;
+
+fn main() -> sparselm::Result<()> {
+    let args = Args::from_env();
+    let method = PruneMethod::parse(&args.get_str("method", "ria")).expect("bad --method");
+    let ctx = ExperimentCtx::new("artifacts")?;
+    let (exec, dense) = ctx.ensure_trained("tiny", 300)?;
+    let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), "tiny")?;
+
+    let dense_ppl = {
+        let lits = exec.upload(&dense)?;
+        perplexity(&exec, &lits, &ctx.wiki_eval, 8)?.ppl
+    };
+    println!("\n# outlier study ({method:?} scoring; dense ppl {dense_ppl:.3})\n");
+    let t = TablePrinter::new(
+        &["budget", "salient %", "2:4 ppl", "8:16 ppl", "extra KiB", "vs CSR KiB"],
+        &[10, 10, 9, 9, 10, 11],
+    );
+
+    // note: k = 32 is an extension beyond the paper's {4, 8, 16} grid —
+    // it shows the diminishing returns the paper predicts
+    for k in [0usize, 4, 8, 16, 32] {
+        let mut row = vec![
+            if k == 0 { "none".into() } else { format!("{k}:256") },
+            format!("{:.2}%", k as f64 / 256.0 * 100.0),
+        ];
+        let mut extra = 0usize;
+        let mut csr = 0usize;
+        for (n, m) in [(2usize, 4usize), (8, 16)] {
+            let mut prune = PruneSpec::new(n, m).method(method);
+            if k > 0 {
+                prune = prune.outliers(k);
+            }
+            let (sparse, rep) = pipeline.run(&dense, &ctx.wiki_train, &PipelineSpec::new(prune))?;
+            let lits = exec.upload(&sparse)?;
+            row.push(format!("{:.3}", perplexity(&exec, &lits, &ctx.wiki_eval, 8)?.ppl));
+            extra = rep.total_outlier_bytes();
+            csr = rep.layers.iter().map(|l| l.outlier_csr_bytes).sum();
+        }
+        row.push(format!("{}", extra / 1024));
+        row.push(format!("{}", csr / 1024));
+        t.row(&row);
+    }
+
+    let hw = HwModel::default();
+    let g = GemmShape::new(8, 4096, 4096);
+    println!(
+        "\nmodelled salient side-stream at 4096² GEMM: 16:256 structured {:.0} KiB vs CSR {:.0} KiB",
+        hw.outlier_overhead(g, 16) / 1024.0,
+        hw.csr_overhead(g, 16) / 1024.0
+    );
+    println!("expected shape: ppl falls monotonically with k; 8:16 always below 2:4");
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Pattern explorer: the §2 design-space study as a runnable tool.
+//!
+//! For every N:M pattern (plus custom ones passed as `--patterns
+//! 2:4,8:16,...`) it reports configuration counts, metadata bits under
+//! both encodings, packed-format compression ratio on a real weight
+//! matrix, modelled speedups at several GEMM sizes, and the PPL of the
+//! pattern on a trained tiny model — the full trade-off Table 1 argues
+//! about, in one place.
+
+use std::sync::Arc;
+
+use sparselm::bench::{ExperimentCtx, TablePrinter};
+use sparselm::coordinator::{CompressionPipeline, PipelineSpec};
+use sparselm::eval::perplexity;
+use sparselm::hwsim::{GemmShape, HwModel};
+use sparselm::pruning::{mask_topn_per_block, PruneSpec};
+use sparselm::sparse::{PackedNm, PatternInfo};
+use sparselm::tensor::Tensor;
+use sparselm::util::args::Args;
+use sparselm::util::Rng;
+
+fn main() -> sparselm::Result<()> {
+    let args = Args::from_env();
+    let patterns: Vec<(usize, usize)> = args
+        .get_str("patterns", "2:4,4:8,8:16,16:32")
+        .split(',')
+        .map(|s| sparselm::cli::parse_pattern(s).expect("bad pattern"))
+        .collect();
+
+    // static design-space numbers
+    println!("\n# pattern design space\n");
+    let t = TablePrinter::new(
+        &["pattern", "configs", "codebook b/e", "index b/e", "pack ratio", "speedup@4k"],
+        &[8, 12, 13, 10, 11, 11],
+    );
+    let hw = HwModel::default();
+    let mut rng = Rng::new(5);
+    let w = Tensor::randn(vec![512, 512], 0.05, &mut rng);
+    for &(n, m) in &patterns {
+        let info = PatternInfo::new(n, m);
+        let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+        let packed = PackedNm::from_dense_mask(&w, &mask, n, m);
+        t.row(&[
+            info.label(),
+            info.configurations().to_string(),
+            format!("{:.3}", info.bits_per_element_codebook()),
+            format!("{:.2}", info.bits_per_element_index()),
+            format!("{:.3}x", packed.compression_ratio()),
+            format!("{:.2}x", hw.speedup(GemmShape::new(8, 4096, 4096), n, m)),
+        ]);
+    }
+
+    // model-quality numbers (needs artifacts + a trained model)
+    if std::path::Path::new("artifacts/tiny").exists() && !args.get_bool("no-model") {
+        let ctx = ExperimentCtx::new("artifacts")?;
+        let (exec, dense) = ctx.ensure_trained("tiny", 300)?;
+        let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), "tiny")?;
+        let dense_ppl = {
+            let lits = exec.upload(&dense)?;
+            perplexity(&exec, &lits, &ctx.wiki_eval, 8)?.ppl
+        };
+        println!("\n# model quality (tiny stand-in, dense ppl {dense_ppl:.3})\n");
+        let t = TablePrinter::new(&["pattern", "ppl RIA+SQ", "ppl +VC"], &[8, 11, 9]);
+        for &(n, m) in &patterns {
+            let mut row = vec![format!("{n}:{m}")];
+            for vc in [false, true] {
+                let spec = PipelineSpec::new(PruneSpec::new(n, m).vc(vc));
+                let (sparse, _) = pipeline.run(&dense, &ctx.wiki_train, &spec)?;
+                let lits = exec.upload(&sparse)?;
+                row.push(format!("{:.3}", perplexity(&exec, &lits, &ctx.wiki_eval, 8)?.ppl));
+            }
+            t.row(&row);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: train a tiny stand-in LM, compress it with the paper's
+//! full pipeline (RIA + SQ + 8:16 sparsity + 16:256 structured outliers +
+//! VC + EBFT), and compare dense vs compressed perplexity and storage.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use sparselm::bench::ExperimentCtx;
+use sparselm::coordinator::{CompressionPipeline, ModelExec, PipelineSpec};
+use sparselm::eval::perplexity;
+use sparselm::pruning::PruneSpec;
+
+fn main() -> sparselm::Result<()> {
+    // 1. context: synthetic world, corpora, tokenizer, PJRT engine
+    let ctx = ExperimentCtx::new("artifacts")?;
+
+    // 2. a trained dense model (cached under runs/ after the first run)
+    let (exec, dense) = ctx.ensure_trained("tiny", 300)?;
+    let exec: ModelExec = exec;
+
+    let dense_lits = exec.upload(&dense)?;
+    let dense_ppl = perplexity(&exec, &dense_lits, &ctx.wiki_eval, 8)?;
+    println!("dense   : ppl {:.3}", dense_ppl.ppl);
+
+    // 3. the paper's §4 pipeline: SQ -> RIA -> 16:256 outliers -> 8:16
+    //    mask -> variance correction -> EBFT
+    let spec = PipelineSpec::new(PruneSpec::new(8, 16).outliers(16)).ebft(30);
+    let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), "tiny")?;
+    let (compressed, report) = pipeline.run(&dense, &ctx.wiki_train, &spec)?;
+
+    // 4. evaluate the compressed model
+    let lits = exec.upload(&compressed)?;
+    let sparse_ppl = perplexity(&exec, &lits, &ctx.wiki_eval, 8)?;
+    println!(
+        "{}: ppl {:.3} ({}x storage reduction)",
+        report.label,
+        sparse_ppl.ppl,
+        format!("{:.2}", report.compression_ratio())
+    );
+    println!(
+        "storage: packed N:M {} KiB + outliers {} KiB (dense {} KiB)",
+        report.total_nm_bytes() / 1024,
+        report.total_outlier_bytes() / 1024,
+        report.total_dense_bytes() / 1024
+    );
+    println!("\n{}", pipeline.metrics.report());
+    Ok(())
+}

@@ -1,0 +1,96 @@
+//! Serve a compressed model and talk to it — the deployment story
+//! end-to-end, in one process:
+//!
+//! 1. load (or train) the `tiny` stand-in and compress it with the §4
+//!    pipeline (RIA+SQ+VC @ 8:16 + 16:256 structured outliers);
+//! 2. start the scoring server on a loopback port, PJRT behind a
+//!    dynamic batcher;
+//! 3. run concurrent clients issuing `nll` and `choice` requests;
+//! 4. print the latency/batching profile and shut down cleanly.
+//!
+//! Run: `cargo run --release --example serve_demo`
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sparselm::bench::ExperimentCtx;
+use sparselm::cli::standard_tokenizer;
+use sparselm::coordinator::{CompressionPipeline, PipelineSpec};
+use sparselm::pruning::PruneSpec;
+use sparselm::serve::{pjrt_scorer, serve, ServeClient, ServerConfig};
+
+fn main() -> sparselm::Result<()> {
+    let ctx = ExperimentCtx::new("artifacts")?;
+    let model = "tiny";
+    let (_exec, dense) = ctx.ensure_trained(model, ExperimentCtx::default_steps(model))?;
+
+    println!("== compressing {model} with RIA+SQ+VC @ 8:16 + 16:256 ==");
+    let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), model)?;
+    let spec = PipelineSpec::new(PruneSpec::new(8, 16).outliers(16));
+    let (compressed, report) = pipeline.run(&dense, &ctx.wiki_train, &spec)?;
+    println!(
+        "   compression {:.2}x (nm {} KiB + outliers {} KiB)",
+        report.compression_ratio(),
+        report.total_nm_bytes() / 1024,
+        report.total_outlier_bytes() / 1024
+    );
+
+    println!("== starting scoring server ==");
+    let batch = compressed.config.batch;
+    let handle = serve(
+        pjrt_scorer("artifacts".into(), model.into(), compressed),
+        Arc::new(standard_tokenizer(sparselm::bench::fast_mode())),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(), // OS-assigned port
+            max_conns: 16,
+            max_batch: batch,
+            max_wait: Duration::from_millis(10),
+        },
+    )?;
+    let addr = handle.addr;
+    println!("   listening on {addr}");
+
+    // ---- concurrent clients -------------------------------------------
+    let texts = [
+        "the river runs through the old town",
+        "a model with structured sparsity serves requests",
+        "quick brown foxes jump over lazy dogs",
+        "variance correction preserves the weight distribution",
+    ];
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for (c, chunk) in texts.chunks(2).enumerate() {
+        let chunk: Vec<String> = chunk.iter().map(|s| s.to_string()).collect();
+        clients.push(std::thread::spawn(move || -> sparselm::Result<()> {
+            let mut cl = ServeClient::connect(addr)?;
+            cl.set_timeout(Duration::from_secs(120))?;
+            assert!(cl.ping()?);
+            for text in &chunk {
+                let (nll, tokens) = cl.nll(text)?;
+                println!("   client{c}: nll {nll:.3} over {tokens} tokens — {text:?}");
+            }
+            let (best, scores) = cl.choice(
+                "the sparse model answered",
+                &["quickly and correctly", "zxqv gblort unword"],
+            )?;
+            println!("   client{c}: choice -> {best} (scores {scores:?})");
+            Ok(())
+        }));
+    }
+    for cl in clients {
+        cl.join().map_err(|_| anyhow::anyhow!("client panicked"))??;
+    }
+    println!("   all clients served in {:.2}s", t0.elapsed().as_secs_f64());
+
+    let bs = handle.batcher_stats();
+    println!(
+        "== batcher: {} requests in {} PJRT calls (mean fill {:.2}), {} deadline flushes ==",
+        bs.requests,
+        bs.batches,
+        bs.rows_scored as f64 / bs.batches.max(1) as f64,
+        bs.timeout_flushes
+    );
+    handle.shutdown()?;
+    println!("== server stopped ==");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""sparselm build-time Python package: L1 Pallas kernels + L2 JAX graphs.
+
+Never imported at runtime — ``compile.aot`` lowers everything to HLO text
+once and the Rust binary is self-contained afterwards.
+"""

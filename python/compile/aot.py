@@ -1,0 +1,269 @@
+"""AOT lowering: every L1/L2 graph -> HLO *text* artifacts + JSON manifests.
+
+This is the only place Python runs in the whole system, and it runs once
+(``make artifacts``).  The Rust runtime loads the text with
+``HloModuleProto::from_text_file`` and executes via PJRT.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Layout:
+
+    artifacts/
+      kernels/<r>x<c>/<name>.hlo.txt   # shape-keyed, shared across configs
+      kernels/<r>x<c>/manifest.json
+      <config>/<name>.hlo.txt          # model-level graphs
+      <config>/manifest.json
+
+Usage: ``python -m compile.aot --out-root ../artifacts [--configs tiny,small]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, pipeline
+from .configs import (
+    BLOCK_LINEAR,
+    BLOCK_PARAMS,
+    CONFIGS,
+    OUTLIER_PATTERNS,
+    SPARSITY_PATTERNS,
+    ModelConfig,
+)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args):
+    out = []
+    for a in args:
+        out.append({"shape": list(a.shape), "dtype": str(a.dtype)})
+    return out
+
+
+class Exporter:
+    """Lowers functions and records their signatures into a manifest."""
+
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.entries = {}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def export(self, name: str, fn, in_specs, static_out=None):
+        # keep_unused: an input that a variant ignores (e.g. finalize_vc0's
+        # omask) must stay an HLO parameter so every variant shares one
+        # calling convention on the Rust side.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = lowered.out_info
+        flat_out, _ = jax.tree.flatten(out_avals)
+        self.entries[name] = {
+            "file": fname,
+            "inputs": _sig(in_specs),
+            "outputs": _sig(flat_out),
+        }
+        print(f"  [{name}] {len(text) / 1024:.0f} KiB "
+              f"({len(in_specs)} in / {len(flat_out)} out)")
+
+    def write_manifest(self, extra=None):
+        manifest = {"artifacts": self.entries}
+        if extra:
+            manifest.update(extra)
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1, sort_keys=True)
+
+
+# ---------------------------------------------------------------------------
+# kernel artifacts (shape-keyed, shared across model configs)
+# ---------------------------------------------------------------------------
+
+def export_kernels_for_shape(root: str, r: int, c: int, spmm_batch: int):
+    ex = Exporter(os.path.join(root, "kernels", f"{r}x{c}"))
+    w = spec((r, c))
+    vec = spec((c,))
+
+    for sq in (False, True):
+        ex.export(
+            f"score_sq{int(sq)}",
+            functools.partial(pipeline.score_graph, sq=sq),
+            [w, vec, vec],
+        )
+    ex.export("magnitude", pipeline.magnitude_graph, [w])
+    ex.export("wanda", pipeline.wanda_graph, [w, vec])
+
+    for (n, m) in SPARSITY_PATTERNS + OUTLIER_PATTERNS:
+        if c % m != 0:
+            continue
+        ex.export(
+            f"mask_{n}_{m}",
+            functools.partial(pipeline.mask_excluding_graph, n=n, m=m),
+            [w, w],
+        )
+
+    for vc in (False, True):
+        ex.export(
+            f"finalize_vc{int(vc)}",
+            functools.partial(pipeline.finalize_graph, vc=vc),
+            [w, w, w],
+        )
+
+    from .kernels import masked_matmul, quant_dequant
+    ex.export(
+        "spmm",
+        lambda x, wt, mk: masked_matmul(x, wt, mk),
+        [spec((spmm_batch, c)), w, w],
+    )
+    # SPQR-composition twin: fake group quantization of the base weights
+    for bits, group in ((4, 128), (8, 128)):
+        if c % group == 0:
+            ex.export(
+                f"quant_{bits}_{group}",
+                functools.partial(quant_dequant, bits=bits, group=group),
+                [w],
+            )
+    ex.write_manifest({"shape": [r, c], "spmm_batch": spmm_batch})
+
+
+# ---------------------------------------------------------------------------
+# model artifacts
+# ---------------------------------------------------------------------------
+
+def export_model(root: str, cfg: ModelConfig):
+    ex = Exporter(os.path.join(root, cfg.name))
+    b, s, d, v = cfg.batch, cfg.seq, cfg.dim, cfg.vocab
+    names = cfg.param_names()
+    pspecs = [spec(cfg.param_shape(n)) for n in names]
+    nb = len(BLOCK_PARAMS)
+    bspecs = pspecs[1:1 + nb]  # block 0 params (all blocks share shapes)
+
+    ex.export("embed_fwd", model.embed_fwd, [spec((v, d)), spec((b, s), I32)])
+
+    def bf(*args):
+        return model.block_fwd(cfg, args[:nb], args[nb], with_stats=True)
+
+    ex.export("block_fwd", bf, bspecs + [spec((b, s, d))])
+
+    ex.export(
+        "head_nll",
+        model.head_nll,
+        [spec((d,)), spec((v, d)), spec((b, s, d)), spec((b, s), I32)],
+    )
+
+    def nll(*args):
+        return model.lm_nll(cfg, args[:-1], args[-1])
+
+    ex.export("lm_nll", nll, pspecs + [spec((b, s + 1), I32)])
+
+    np = len(pspecs)
+
+    def ts(*args):
+        params = args[:np]
+        m_st = args[np:2 * np]
+        v_st = args[2 * np:3 * np]
+        step, lr, tokens = args[3 * np], args[3 * np + 1], args[3 * np + 2]
+        return model.train_step(cfg, params, m_st, v_st, step, lr, tokens)
+
+    ex.export(
+        "train_step",
+        ts,
+        pspecs * 3 + [spec(()), spec(()), spec((b, s + 1), I32)],
+    )
+
+    nl = len(BLOCK_LINEAR)
+    lin_specs = [spec(cfg.param_shape(f"blk0.{n}")) for n in BLOCK_LINEAR]
+
+    def es(*args):
+        i = 0
+        params = args[i:i + nb]; i += nb
+        masks = args[i:i + nl]; i += nl
+        salient = args[i:i + nl]; i += nl
+        x, y = args[i], args[i + 1]; i += 2
+        m_st = args[i:i + nb]; i += nb
+        v_st = args[i:i + nb]; i += nb
+        step, lr = args[i], args[i + 1]
+        return model.ebft_step(cfg, params, masks, salient, x, y, m_st, v_st,
+                               step, lr)
+
+    ex.export(
+        "ebft_step",
+        es,
+        list(bspecs) + lin_specs + lin_specs
+        + [spec((b, s, d)), spec((b, s, d))]
+        + list(bspecs) * 2 + [spec(()), spec(())],
+    )
+
+    ex.write_manifest({
+        "config": {
+            "name": cfg.name, "dim": cfg.dim, "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads, "n_kv_heads": cfg.n_kv_heads,
+            "hidden": cfg.hidden, "vocab": cfg.vocab, "seq": cfg.seq,
+            "batch": cfg.batch, "rope_theta": cfg.rope_theta,
+            "adam_b1": cfg.adam_b1, "adam_b2": cfg.adam_b2,
+            "adam_eps": cfg.adam_eps, "weight_decay": cfg.weight_decay,
+            "head_dim": cfg.head_dim, "kv_dim": cfg.kv_dim,
+            "n_params": cfg.n_params(),
+        },
+        "params": [{"name": n, "shape": list(cfg.param_shape(n))}
+                   for n in names],
+        "block_params": BLOCK_PARAMS,
+        "block_linear": BLOCK_LINEAR,
+        "linear_shapes": [[k, list(sh)] for k, sh in cfg.linear_shapes()],
+    })
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-root", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small,gqa,wide,e2e")
+    args = ap.parse_args()
+
+    cfgs = [CONFIGS[c] for c in args.configs.split(",") if c]
+    shapes = {}
+    for cfg in cfgs:
+        for _, (r, c) in cfg.linear_shapes():
+            shapes[(r, c)] = cfg.batch * cfg.seq
+
+    for (r, c), sb in sorted(shapes.items()):
+        print(f"kernels {r}x{c}:")
+        export_kernels_for_shape(args.out_root, r, c, sb)
+
+    for cfg in cfgs:
+        print(f"model {cfg.name}:")
+        export_model(args.out_root, cfg)
+
+    with open(os.path.join(args.out_root, "index.json"), "w") as f:
+        json.dump({
+            "configs": [c.name for c in cfgs],
+            "kernel_shapes": [[r, c] for (r, c) in sorted(shapes)],
+        }, f, indent=1)
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Model configurations shared between the JAX build path and Rust runtime.
+
+The paper evaluates LLaMA-2-7B/13B, LLaMA-3-8B and Mistral-7B.  Those
+checkpoints are not available here (repro band 0/5), so each is substituted
+by a from-scratch-trainable stand-in that keeps the *architectural contrast*
+the corresponding table needs (see DESIGN.md §Substitutions):
+
+* ``tiny``  ↔ LLaMA-2-7B   (baseline MHA model)
+* ``small`` ↔ LLaMA-2-13B  (~2.3× params of ``tiny`` — the Performance
+  Threshold comparison "sparse 13B ≥ dense 7B" becomes
+  "sparse small ≥ dense tiny")
+* ``gqa``   ↔ LLaMA-3-8B   (grouped-query attention, larger vocab)
+* ``wide``  ↔ Mistral-7B   (wider MLP, fewer heads)
+* ``e2e``   ↔ the end-to-end validation model (largest; examples only)
+
+Every linear input dimension is a multiple of 256 so the structured
+outlier patterns (k:256) tile exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    dim: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    hidden: int
+    vocab: int
+    seq: int
+    batch: int  # batch size baked into the AOT artifacts
+    rope_theta: float = 10000.0
+    # EBFT / train hyperparameters baked into the optimizer artifacts
+    adam_b1: float = 0.9
+    adam_b2: float = 0.95
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.01
+
+    @property
+    def head_dim(self) -> int:
+        return self.dim // self.n_heads
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    def linear_shapes(self):
+        """Distinct (rows, cols) of the prunable linear layers."""
+        shapes = {
+            ("attn_qo", (self.dim, self.dim)),
+            ("attn_kv", (self.kv_dim, self.dim)),
+            ("mlp_in", (self.hidden, self.dim)),
+            ("mlp_out", (self.dim, self.hidden)),
+        }
+        return sorted(shapes)
+
+    def param_names(self):
+        """Flat parameter ordering shared with the Rust side."""
+        names = ["tok_emb"]
+        for i in range(self.n_layers):
+            for p in BLOCK_PARAMS:
+                names.append(f"blk{i}.{p}")
+        names.append("ln_f")
+        return names
+
+    def param_shape(self, name: str):
+        d, h, kv, v = self.dim, self.hidden, self.kv_dim, self.vocab
+        if name == "tok_emb":
+            return (v, d)
+        if name == "ln_f":
+            return (d,)
+        base = name.split(".")[-1]
+        return {
+            "ln1": (d,),
+            "wq": (d, d),
+            "wk": (kv, d),
+            "wv": (kv, d),
+            "wo": (d, d),
+            "ln2": (d,),
+            "wg": (h, d),
+            "wu": (h, d),
+            "wd": (d, h),
+        }[base]
+
+    def n_params(self) -> int:
+        total = 0
+        for n in self.param_names():
+            s = self.param_shape(n)
+            p = 1
+            for x in s:
+                p *= x
+            total += p
+        return total
+
+
+# per-block parameter order (shared contract with rust/src/model/)
+BLOCK_PARAMS = ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"]
+# linear (maskable) weights within a block, in BLOCK_PARAMS order
+BLOCK_LINEAR = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+
+CONFIGS = {
+    "tiny": ModelConfig("tiny", dim=256, n_layers=4, n_heads=4, n_kv_heads=4,
+                        hidden=512, vocab=2048, seq=128, batch=4),
+    "small": ModelConfig("small", dim=256, n_layers=8, n_heads=8, n_kv_heads=8,
+                         hidden=768, vocab=2048, seq=128, batch=4),
+    "gqa": ModelConfig("gqa", dim=256, n_layers=6, n_heads=8, n_kv_heads=2,
+                       hidden=768, vocab=4096, seq=128, batch=4),
+    "wide": ModelConfig("wide", dim=256, n_layers=6, n_heads=4, n_kv_heads=4,
+                        hidden=1024, vocab=2048, seq=128, batch=4),
+    "e2e": ModelConfig("e2e", dim=512, n_layers=8, n_heads=8, n_kv_heads=8,
+                       hidden=1536, vocab=4096, seq=128, batch=4),
+}
+
+# sparsity patterns the artifacts are built for
+SPARSITY_PATTERNS = [(2, 4), (4, 8), (8, 16), (16, 32)]
+OUTLIER_PATTERNS = [(4, 256), (8, 256), (16, 256)]

@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for the sparselm compression pipeline.
+
+Every kernel has a pure-jnp oracle in :mod:`ref` and is swept against it by
+``python/tests/test_kernels.py`` (hypothesis over shapes/patterns/dtypes).
+All kernels lower with ``interpret=True`` so the emitted HLO runs on the
+CPU PJRT plugin the Rust runtime uses.
+"""
+
+from .nm_prune import nm_mask
+from .ria_score import ria_score
+from .nm_spmm import masked_matmul
+from .outlier_extract import outlier_mask, split_salient, pack_outliers, unpack_outliers
+from .variance_correct import variance_correct
+from .quant import quant_dequant
+
+__all__ = [
+    "nm_mask",
+    "ria_score",
+    "masked_matmul",
+    "outlier_mask",
+    "split_salient",
+    "pack_outliers",
+    "unpack_outliers",
+    "variance_correct",
+]

@@ -1,0 +1,34 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+All kernels run ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret mode lowers the kernel into plain HLO so
+the Rust runtime can execute it.  Interpret mode evaluates one grid cell at
+a time in Python, so the tiling below deliberately keeps grids SMALL
+(large row tiles) — on a real TPU the same BlockSpecs would be shrunk to
+VMEM-sized tiles (see DESIGN.md §Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+INTERPRET = True  # flipped to False only for TPU compile-only builds
+
+# Row tile used by the streaming (row-parallel) kernels. Grid size for a
+# (4096, 4096) layer is 16 cells — cheap even under interpret mode, and on
+# TPU a (256, C) f32 tile of a transformer linear (C <= 2048) is < 2 MiB,
+# comfortably inside the ~16 MiB VMEM budget together with its outputs.
+ROW_TILE = 256
+
+
+def row_tile(rows: int) -> int:
+    """Largest power-of-two row tile that divides ``rows`` (cap ROW_TILE)."""
+    t = min(ROW_TILE, rows)
+    while rows % t != 0:
+        t //= 2
+        if t == 1:
+            return 1
+    return t
+
+
+def check_divisible(cols: int, m: int) -> None:
+    if cols % m != 0:
+        raise ValueError(f"cols={cols} must be divisible by block size m={m}")

@@ -1,0 +1,54 @@
+"""Pallas kernel: exact top-N per (1, M) block mask selection.
+
+This is the structural heart of the paper — the N:M pattern selector that
+turns an importance-score matrix into a semi-structured keep mask.  It is
+used both for weight sparsity (2:4, 4:8, 8:16, 16:32) and, with M=256, for
+the structured salient-weight patterns (4:256, 8:256, 16:256).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): selection is a
+bandwidth-bound streaming pass.  The kernel tiles over rows with the full
+channel dimension resident in VMEM; inside the tile the scores are reshaped
+to (TILE_R, C//M, M) and ranked with a double-argsort along the length-M
+axis — for M <= 32 this lowers to a small sorting network, and for M = 256
+it is still a single-lane sort well inside the VPU budget.  Ranks, not a
+threshold, give *exactly* N survivors per block even with tied scores
+(stable order: earlier index wins), which the packed storage format on the
+Rust side relies on.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _nm_mask_kernel(s_ref, o_ref, *, n: int, m: int):
+    s = s_ref[...]
+    tr, c = s.shape
+    blocks = s.reshape(tr, c // m, m)
+    order = jnp.argsort(-blocks, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    mask = (ranks < n).astype(s.dtype)
+    o_ref[...] = mask.reshape(tr, c)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "m"))
+def nm_mask(scores: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Top-``n`` per ``(1, m)`` block keep mask, Pallas-tiled over rows."""
+    rows, cols = scores.shape
+    common.check_divisible(cols, m)
+    tr = common.row_tile(rows)
+    grid = (rows // tr,)
+    return pl.pallas_call(
+        functools.partial(_nm_mask_kernel, n=n, m=m),
+        grid=grid,
+        in_specs=[pl.BlockSpec((tr, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(scores.shape, scores.dtype),
+        interpret=common.INTERPRET,
+    )(scores)

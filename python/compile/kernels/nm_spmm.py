@@ -1,0 +1,87 @@
+"""Pallas kernel: tiled masked GEMM — the sparse-weight matmul hot path.
+
+``y = x @ (W * mask)^T`` with x: (B, Cin), W/mask: (Cout, Cin).
+
+TPU adaptation of the paper's bandwidth argument (DESIGN.md
+§Hardware-Adaptation): on sparse tensor-core hardware the 2:4/8:16 weight
+stays compressed in DRAM and is expanded inside the MAC array.  The TPU
+analogue keeps the packed weight in HBM and expands tile-by-tile into VMEM
+before a dense MXU matmul — HBM traffic halves, MXU work unchanged.  This
+kernel expresses that schedule: the mask-multiply happens on the VMEM tile
+right before the ``jnp.dot`` (which maps onto the MXU with
+``preferred_element_type=f32``), and the K-loop is the innermost grid axis
+so each (i, j) output tile accumulates in a VMEM scratch accumulator across
+K steps (classic double-buffered Pallas matmul shape).
+
+Under interpret mode the expansion is simulated with a dense mask-multiply;
+``hwsim`` on the Rust side models the actual bytes moved by the packed
+format.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import common
+
+
+def _spmm_kernel(x_ref, w_ref, m_ref, o_ref, acc_ref, *, nk: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = w_ref[...] * m_ref[...]          # expand sparse tile in VMEM
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w.T, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick(t: int, size: int) -> int:
+    t = min(t, size)
+    while size % t != 0:
+        t //= 2
+    return max(t, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "tn", "tk"))
+def masked_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    mask: jnp.ndarray,
+    tb: int = 128,
+    tn: int = 256,
+    tk: int = 512,
+) -> jnp.ndarray:
+    """Tiled ``x @ (w * mask)^T`` with K-innermost accumulation."""
+    b, cin = x.shape
+    cout, cin2 = w.shape
+    assert cin == cin2, f"x Cin={cin} vs w Cin={cin2}"
+    tb = _pick(tb, b)
+    tn = _pick(tn, cout)
+    tk = _pick(tk, cin)
+    nk = cin // tk
+    grid = (b // tb, cout // tn, nk)
+    return pl.pallas_call(
+        functools.partial(_spmm_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, tk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((tn, tk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((tn, tk), lambda i, j, k: (j, k)),
+        ],
+        out_specs=pl.BlockSpec((tb, tn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, cout), x.dtype),
+        scratch_shapes=[pltpu.VMEM((tb, tn), jnp.float32)],
+        interpret=common.INTERPRET,
+    )(x, w, mask)

@@ -1,0 +1,90 @@
+"""Pallas kernel: structured salient-weight (outlier) extraction.
+
+The paper stores the top-k most important weights of every (1, 256) block
+in a separate structured matrix (patterns 4:256 / 8:256 / 16:256, §1, §4
+stage 2).  Selection is the same exact-top-k-per-block primitive as
+``nm_prune`` with M = 256; this module adds the *extraction* step used by
+the packing path: splitting W into the salient part (kept at full value)
+and the residual passed on to N:M pruning, plus the compact per-block
+(values, byte-index) representation mirrored by ``sparse::outliers`` on the
+Rust side.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .nm_prune import nm_mask
+
+OUTLIER_M = 256
+
+
+def outlier_mask(scores: jnp.ndarray, k: int, m: int = OUTLIER_M) -> jnp.ndarray:
+    """Top-``k`` per ``(1, m)`` block salient mask (Pallas)."""
+    return nm_mask(scores, k, m)
+
+
+def _split_kernel(w_ref, mask_ref, sal_ref, res_ref):
+    w = w_ref[...]
+    mask = mask_ref[...]
+    sal_ref[...] = w * mask
+    res_ref[...] = w * (1.0 - mask)
+
+
+@jax.jit
+def split_salient(w: jnp.ndarray, mask: jnp.ndarray):
+    """Split ``w`` into (salient, residual) along a precomputed mask."""
+    rows, cols = w.shape
+    tr = common.row_tile(rows)
+    grid = (rows // tr,)
+    spec = pl.BlockSpec((tr, cols), lambda i: (i, 0))
+    return pl.pallas_call(
+        _split_kernel,
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[
+            pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+            pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+            jax.ShapeDtypeStruct(w.shape, w.dtype),
+        ],
+        interpret=common.INTERPRET,
+    )(w, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "m"))
+def pack_outliers(w: jnp.ndarray, mask: jnp.ndarray, k: int, m: int = OUTLIER_M):
+    """Compact (values, indices) form of a k:m structured salient matrix.
+
+    Returns ``values`` (rows, cols//m, k) f32 and ``indices`` (rows,
+    cols//m, k) int32 — the in-block byte offsets.  This is the memory
+    layout whose footprint ``hwsim`` accounts (k * (2 + 1) bytes per block
+    at bf16).  Requires the mask to hold exactly k entries per block, which
+    the selection kernel guarantees.
+    """
+    rows, cols = w.shape
+    common.check_divisible(cols, m)
+    nb = cols // m
+    mb = mask.reshape(rows, nb, m)
+    wb = w.reshape(rows, nb, m)
+    # stable: kept positions in ascending index order
+    order = jnp.argsort(-mb, axis=-1, stable=True)[..., :k]
+    idx = jnp.sort(order, axis=-1)
+    vals = jnp.take_along_axis(wb, idx, axis=-1)
+    return vals, idx.astype(jnp.int32)
+
+
+def unpack_outliers(vals, idx, rows: int, cols: int, m: int = OUTLIER_M):
+    """Inverse of :func:`pack_outliers` — scatter back to dense."""
+    nb = cols // m
+    dense = jnp.zeros((rows, nb, m), vals.dtype)
+    dense = jnp.put_along_axis(dense, idx.astype(jnp.int32), vals, axis=-1,
+                               inplace=False)
+    return dense.reshape(rows, cols)

@@ -1,0 +1,52 @@
+"""Pallas kernel: symmetric per-group fake-quantization (quantize →
+dequantize in one pass).
+
+The Rust coordinator owns real packed int storage
+(``rust/src/quant/groupq.rs``); this kernel is its on-accelerator twin —
+the compute path a fused sparse+quant deployment would run before the
+matmul, and the oracle the Rust packer is cross-validated against in
+``rust/tests/runtime_kernels.rs``.
+
+Grid: one program per row tile; each tile holds ``(TILE_R, cols)`` so a
+row's groups are reduced entirely in VMEM (groups are contiguous spans of
+the row — the same layout the packed format streams).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+
+
+def _quant_kernel(w_ref, o_ref, *, group: int, qmax: float):
+    w = w_ref[...]
+    tr, cols = w.shape
+    g = w.reshape(tr, cols // group, group)
+    absmax = jnp.max(jnp.abs(g), axis=2, keepdims=True)
+    scale = jnp.where(absmax > 0.0, absmax / qmax, 0.0)
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(g * inv), -qmax, qmax)
+    o_ref[...] = (q * scale).reshape(tr, cols)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group"))
+def quant_dequant(w: jnp.ndarray, bits: int = 4, group: int = 128) -> jnp.ndarray:
+    """Round-trip ``w`` through the symmetric ``bits``-wide integer grid
+    with one absmax scale per ``group`` contiguous elements per row."""
+    rows, cols = w.shape
+    assert cols % group == 0, f"cols {cols} % group {group}"
+    qmax = float(2 ** (bits - 1) - 1)
+    tr = common.row_tile(rows)
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, group=group, qmax=qmax),
+        grid=(rows // tr,),
+        in_specs=[pl.BlockSpec((tr, cols), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=common.INTERPRET,
+    )(w)

@@ -1,0 +1,205 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: each Pallas kernel in
+``nm_prune.py`` / ``ria_score.py`` / ``nm_spmm.py`` / ``outlier_extract.py`` /
+``variance_correct.py`` must match its oracle here to float tolerance
+(``python/tests/`` sweeps shapes and dtypes with hypothesis).
+
+The math follows the paper:
+
+* **RIA** (Zhang et al., 2024, as used in §4):
+  ``score_ij = (|W_ij| / sum_i' |W_i'j| + |W_ij| / sum_j' |W_ij'|) * a_j^alpha``
+  where ``a_j`` is the L2 norm of input channel ``j`` over the calibration
+  set and ``alpha`` defaults to 0.5.
+* **SmoothQuant-style equalization** (§4.1, Eq. 1): channel scale
+  ``s_j = max|x_j| / max|W_:,j|``; ``W_ec = W @ S^{-1}``.  Only the
+  *importance metric* is computed on ``W_ec`` — actual weights never change.
+* **N:M mask selection**: within every contiguous ``(1, M)`` block along the
+  input-channel axis keep the ``N`` highest-scoring entries (exactly ``N``,
+  ties broken by position — first occurrence wins, matching a stable
+  descending argsort).
+* **Variance correction** (§4.2, Eq. 2):
+  ``W_ns_corrected = W_ns * sqrt(Var(W_dense) / (Var(W_ns) + eps))``
+  with variances taken over the full matrix (``global`` mode) or per output
+  row (``row`` mode).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DEFAULT_ALPHA = 0.5
+VC_EPS = 1e-8
+
+
+# ---------------------------------------------------------------------------
+# mask selection
+# ---------------------------------------------------------------------------
+
+def nm_mask_ref(scores: jnp.ndarray, n: int, m: int) -> jnp.ndarray:
+    """Exact top-``n`` per ``(1, m)`` block mask. Returns float mask (0/1).
+
+    ``scores`` has shape ``(rows, cols)`` with ``cols % m == 0``. Ties are
+    broken by position: stable argsort of ``-scores`` means the earlier
+    element of a tied pair is kept first.
+    """
+    rows, cols = scores.shape
+    assert cols % m == 0, f"cols={cols} not divisible by m={m}"
+    blocks = scores.reshape(rows, cols // m, m)
+    # rank[i] = position of element i in the descending order of its block
+    order = jnp.argsort(-blocks, axis=-1, stable=True)
+    ranks = jnp.argsort(order, axis=-1, stable=True)
+    mask = (ranks < n).astype(scores.dtype)
+    return mask.reshape(rows, cols)
+
+
+def outlier_mask_ref(scores: jnp.ndarray, k: int, m: int = 256) -> jnp.ndarray:
+    """Structured salient-weight mask: top-``k`` per ``(1, m)`` block."""
+    return nm_mask_ref(scores, k, m)
+
+
+# ---------------------------------------------------------------------------
+# importance scoring
+# ---------------------------------------------------------------------------
+
+def sq_scales_ref(w: jnp.ndarray, colmax_x: jnp.ndarray) -> jnp.ndarray:
+    """SmoothQuant channel scales ``s_j = max|x_j| / max|W_:,j|`` (Eq. 1).
+
+    Guarded so dead channels (all-zero weight column or activation) give
+    ``s_j = 1`` instead of inf/0.
+    """
+    wmax = jnp.max(jnp.abs(w), axis=0)
+    s = jnp.abs(colmax_x) / jnp.where(wmax > 0, wmax, 1.0)
+    return jnp.where((wmax > 0) & (jnp.abs(colmax_x) > 0), s, 1.0)
+
+
+def equalize_ref(w: jnp.ndarray, colmax_x: jnp.ndarray) -> jnp.ndarray:
+    """``W_ec = W @ S^{-1}`` — the metric-only equalized weights."""
+    s = sq_scales_ref(w, colmax_x)
+    return w / s[None, :]
+
+
+def ria_score_ref(
+    w: jnp.ndarray, act_l2: jnp.ndarray, alpha: float = DEFAULT_ALPHA
+) -> jnp.ndarray:
+    """RIA importance score (relative row + column importance × activation)."""
+    aw = jnp.abs(w)
+    rowsum = jnp.sum(aw, axis=1, keepdims=True)
+    colsum = jnp.sum(aw, axis=0, keepdims=True)
+    rel = aw / jnp.where(rowsum > 0, rowsum, 1.0) + aw / jnp.where(
+        colsum > 0, colsum, 1.0
+    )
+    return rel * jnp.power(jnp.maximum(act_l2, 0.0), alpha)[None, :]
+
+
+def magnitude_score_ref(w: jnp.ndarray) -> jnp.ndarray:
+    """Magnitude pruning baseline score: ``|W|``."""
+    return jnp.abs(w)
+
+
+def wanda_score_ref(w: jnp.ndarray, act_l2: jnp.ndarray) -> jnp.ndarray:
+    """Wanda (Sun et al., 2023) baseline score: ``|W| * ||x_j||_2``."""
+    return jnp.abs(w) * act_l2[None, :]
+
+
+# ---------------------------------------------------------------------------
+# variance correction
+# ---------------------------------------------------------------------------
+
+def variance_correct_ref(
+    w_pruned: jnp.ndarray,
+    w_dense: jnp.ndarray,
+    mode: str = "global",
+    eps: float = VC_EPS,
+) -> jnp.ndarray:
+    """Rescale the pruned (non-salient) weights to restore dense variance.
+
+    ``mode='global'`` uses one scale for the matrix (the paper's Eq. 2);
+    ``mode='row'`` computes the correction per output row.
+    """
+    if mode == "global":
+        var_d = jnp.var(w_dense)
+        var_p = jnp.var(w_pruned)
+        scale = jnp.sqrt(var_d / (var_p + eps))
+        return w_pruned * scale
+    if mode == "row":
+        var_d = jnp.var(w_dense, axis=1, keepdims=True)
+        var_p = jnp.var(w_pruned, axis=1, keepdims=True)
+        scale = jnp.sqrt(var_d / (var_p + eps))
+        return w_pruned * scale
+    raise ValueError(f"unknown vc mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# fake quantization (SPQR-composition oracle)
+# ---------------------------------------------------------------------------
+
+def quant_dequant_ref(w: jnp.ndarray, bits: int = 4, group: int = 128) -> jnp.ndarray:
+    """Symmetric per-group integer round-trip: one absmax scale per
+    ``group`` contiguous row elements, values on ``[-qmax, qmax]``."""
+    rows, cols = w.shape
+    qmax = float(2 ** (bits - 1) - 1)
+    g = w.reshape(rows, cols // group, group)
+    absmax = jnp.max(jnp.abs(g), axis=2, keepdims=True)
+    scale = jnp.where(absmax > 0.0, absmax / qmax, 0.0)
+    inv = jnp.where(scale > 0.0, 1.0 / scale, 0.0)
+    q = jnp.clip(jnp.round(g * inv), -qmax, qmax)
+    return (q * scale).reshape(rows, cols)
+
+
+# ---------------------------------------------------------------------------
+# sparse matmul
+# ---------------------------------------------------------------------------
+
+def masked_matmul_ref(
+    x: jnp.ndarray, w: jnp.ndarray, mask: jnp.ndarray
+) -> jnp.ndarray:
+    """``y = x @ (W * mask)^T`` — x: (B, Cin), W/mask: (Cout, Cin)."""
+    return x @ (w * mask).T
+
+
+# ---------------------------------------------------------------------------
+# end-to-end prune reference (used by pipeline tests)
+# ---------------------------------------------------------------------------
+
+def prune_layer_ref(
+    w: jnp.ndarray,
+    colmax_x: jnp.ndarray,
+    act_l2: jnp.ndarray,
+    n: int,
+    m: int,
+    k_outlier: int = 0,
+    m_outlier: int = 256,
+    use_sq: bool = True,
+    use_vc: bool = True,
+    alpha: float = DEFAULT_ALPHA,
+    method: str = "ria",
+):
+    """Full per-layer pipeline oracle.
+
+    Returns ``(w_nonsalient, keep_mask, outlier_mask)`` where the effective
+    compressed weight is ``w_nonsalient + w * outlier_mask``.
+    Salient positions are excluded from the N:M budget by forcing their
+    score to -inf before block top-N selection.
+    """
+    w_metric = equalize_ref(w, colmax_x) if use_sq else w
+    if method == "ria":
+        score = ria_score_ref(w_metric, act_l2, alpha)
+    elif method == "magnitude":
+        score = magnitude_score_ref(w_metric)
+    elif method == "wanda":
+        score = wanda_score_ref(w_metric, act_l2)
+    else:
+        raise ValueError(f"unknown method {method!r}")
+
+    if k_outlier > 0:
+        omask = outlier_mask_ref(score, k_outlier, m_outlier)
+        score = jnp.where(omask > 0, -jnp.inf, score)
+    else:
+        omask = jnp.zeros_like(w)
+
+    keep = nm_mask_ref(score, n, m) * (1.0 - omask)
+    w_ns = w * keep
+    if use_vc:
+        w_ns = variance_correct_ref(w_ns, w * (1.0 - omask))
+    return w_ns, keep, omask

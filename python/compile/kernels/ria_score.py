@@ -1,0 +1,85 @@
+"""Pallas kernel: RIA importance scores (+ SmoothQuant equalization fold).
+
+RIA (Zhang et al., 2024) evaluates each weight's importance *relative to its
+row and column*:
+
+    score_ij = (|W_ij| / rowsum_i + |W_ij| / colsum_j) * act_l2_j ** alpha
+
+The kernel is tiled over output rows with the full input-channel dimension
+resident, so row sums are computed in-tile; column sums span all rows and
+are passed in as a precomputed vector (one cheap ``jnp.sum`` in the L2
+wrapper — on TPU this is a single-pass reduction fused by XLA).
+
+When ``sq=True`` the SmoothQuant-style equalization (paper Eq. 1) is folded
+into the same pass: the metric is computed on ``W_ec = W / s_j`` with
+``s_j = max|x_j| / max|W_:,j|``.  Column max-abs is likewise passed in
+precomputed.  Only the *metric* sees the equalized weights; W is unchanged.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .ref import DEFAULT_ALPHA
+
+
+def _ria_kernel(w_ref, colsum_ref, colmax_w_ref, colmax_x_ref, actl2_ref,
+                o_ref, *, alpha: float, sq: bool):
+    w = w_ref[...]
+    if sq:
+        wmax = colmax_w_ref[...]
+        xmax = jnp.abs(colmax_x_ref[...])
+        s = jnp.where((wmax > 0) & (xmax > 0), xmax / jnp.where(wmax > 0, wmax, 1.0), 1.0)
+        w = w / s[None, :]
+    aw = jnp.abs(w)
+    rowsum = jnp.sum(aw, axis=1, keepdims=True)
+    colsum = colsum_ref[...][None, :]
+    rel = aw / jnp.where(rowsum > 0, rowsum, 1.0) + aw / jnp.where(
+        colsum > 0, colsum, 1.0
+    )
+    act = jnp.power(jnp.maximum(actl2_ref[...], 0.0), alpha)
+    o_ref[...] = rel * act[None, :]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "sq"))
+def ria_score(
+    w: jnp.ndarray,
+    colmax_x: jnp.ndarray,
+    act_l2: jnp.ndarray,
+    alpha: float = DEFAULT_ALPHA,
+    sq: bool = True,
+) -> jnp.ndarray:
+    """RIA score matrix for ``w`` (Cout, Cin); stats are per input channel."""
+    rows, cols = w.shape
+    tr = common.row_tile(rows)
+    grid = (rows // tr,)
+
+    # Column statistics must be consistent with the (possibly equalized)
+    # metric weights, so compute the equalization scale first, then the
+    # column sums of |W_ec|.
+    colmax_w = jnp.max(jnp.abs(w), axis=0)
+    if sq:
+        xmax = jnp.abs(colmax_x)
+        s = jnp.where((colmax_w > 0) & (xmax > 0),
+                      xmax / jnp.where(colmax_w > 0, colmax_w, 1.0), 1.0)
+        colsum = jnp.sum(jnp.abs(w / s[None, :]), axis=0)
+    else:
+        colsum = jnp.sum(jnp.abs(w), axis=0)
+
+    vec = lambda: pl.BlockSpec((cols,), lambda i: (0,))
+    return pl.pallas_call(
+        functools.partial(_ria_kernel, alpha=alpha, sq=sq),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+            vec(), vec(), vec(), vec(),
+        ],
+        out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(w.shape, w.dtype),
+        interpret=common.INTERPRET,
+    )(w, colsum, colmax_w, colmax_x, act_l2)

@@ -1,0 +1,72 @@
+"""Pallas kernel: post-pruning Variance Correction (paper §4.2, Eq. 2).
+
+    W_ns_corrected = W_ns * sqrt(Var(W_dense) / (Var(W_ns) + eps))
+
+``global`` mode (the paper's formulation) applies one scalar per matrix —
+the two variances are computed by a cheap fused reduction in the wrapper
+and the kernel is a streaming scale.  ``row`` mode computes both variances
+per output row inside the row tile (a strictly more local variant we
+ablate in bench t4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import common
+from .ref import VC_EPS
+
+
+def _vc_global_kernel(w_ref, scale_ref, o_ref):
+    o_ref[...] = w_ref[...] * scale_ref[0]
+
+
+def _vc_row_kernel(w_ref, wd_ref, o_ref, *, eps: float):
+    w = w_ref[...]
+    wd = wd_ref[...]
+    var_p = jnp.var(w, axis=1, keepdims=True)
+    var_d = jnp.var(wd, axis=1, keepdims=True)
+    o_ref[...] = w * jnp.sqrt(var_d / (var_p + eps))
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "eps"))
+def variance_correct(
+    w_pruned: jnp.ndarray,
+    w_dense: jnp.ndarray,
+    mode: str = "global",
+    eps: float = VC_EPS,
+) -> jnp.ndarray:
+    """Variance-preserving rescale of the pruned non-salient weights."""
+    rows, cols = w_pruned.shape
+    tr = common.row_tile(rows)
+    grid = (rows // tr,)
+    if mode == "global":
+        scale = jnp.sqrt(jnp.var(w_dense) / (jnp.var(w_pruned) + eps))
+        return pl.pallas_call(
+            _vc_global_kernel,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+                pl.BlockSpec((1,), lambda i: (0,)),
+            ],
+            out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct(w_pruned.shape, w_pruned.dtype),
+            interpret=common.INTERPRET,
+        )(w_pruned, scale.reshape(1))
+    if mode == "row":
+        return pl.pallas_call(
+            functools.partial(_vc_row_kernel, eps=eps),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+                pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((tr, cols), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct(w_pruned.shape, w_pruned.dtype),
+            interpret=common.INTERPRET,
+        )(w_pruned, w_dense)
+    raise ValueError(f"unknown vc mode {mode!r}")

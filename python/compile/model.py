@@ -1,0 +1,270 @@
+"""Layer-2 JAX model: a LLaMA-style transformer LM.
+
+Architecture (matching the paper's subjects): RMSNorm pre-norm blocks,
+rotary position embeddings, SwiGLU MLP, optional grouped-query attention,
+tied input/output embedding.  Everything is written over *flat positional
+parameter lists* so each function lowers to an HLO artifact whose inputs
+the Rust runtime feeds as PJRT literals in manifest order (no pytrees on
+the wire).
+
+The functions exported by ``aot.py``:
+
+* ``embed_fwd``    — token embedding lookup
+* ``block_fwd``    — one transformer block + per-linear input activation
+                     statistics (channel max-abs and L2) for calibration
+* ``head_nll``     — final norm + tied head + per-token negative
+                     log-likelihood
+* ``lm_nll``       — whole-model fwd (cross-checks the layered chain)
+* ``train_step``   — fwd + bwd + AdamW, donated state (pre-training driver)
+* ``ebft_step``    — EBFT (Guo et al., 2024): one blockwise reconstruction
+                     fine-tuning step under fixed sparsity masks
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .configs import BLOCK_LINEAR, BLOCK_PARAMS, ModelConfig
+
+RMS_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + RMS_EPS) * w
+
+
+def rope_tables(seq: int, head_dim: int, theta: float):
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    freq = theta ** (-jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    ang = pos * freq[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, Dh); rotate pairs (even, odd)."""
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    c = cos[None, :, None, :]
+    s = sin[None, :, None, :]
+    out = jnp.stack([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+    return out.reshape(x.shape)
+
+
+def _stats(x2d: jnp.ndarray):
+    """(colmax, l2) per input channel of a linear layer input."""
+    colmax = jnp.max(jnp.abs(x2d), axis=0)
+    l2 = jnp.sqrt(jnp.sum(jnp.square(x2d), axis=0))
+    return colmax, l2
+
+
+# ---------------------------------------------------------------------------
+# transformer block
+# ---------------------------------------------------------------------------
+
+def block_fwd(cfg: ModelConfig, params: Sequence[jnp.ndarray], h: jnp.ndarray,
+              with_stats: bool = True):
+    """One pre-norm block.  ``params`` in BLOCK_PARAMS order.
+
+    Returns ``h_out`` and, when ``with_stats``, the calibration statistics
+    of the four distinct linear inputs: (attn_in, o_in, mlp_in, down_in)
+    as interleaved (colmax, l2) vectors.
+    """
+    ln1, wq, wk, wv, wo, ln2, wg, wu, wd = params
+    b, s, d = h.shape
+    hd, nh, nkv = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+
+    x = rmsnorm(h, ln1)
+    x2 = x.reshape(b * s, d)
+    q = (x2 @ wq.T).reshape(b, s, nh, hd)
+    k = (x2 @ wk.T).reshape(b, s, nkv, hd)
+    v = (x2 @ wv.T).reshape(b, s, nkv, hd)
+
+    cos, sin = rope_tables(s, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if nkv != nh:
+        rep = nh // nkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+
+    att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(causal[None, None, :, :], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * s, d)
+    attn_out = (o @ wo.T).reshape(b, s, d)
+    h1 = h + attn_out
+
+    y = rmsnorm(h1, ln2)
+    y2 = y.reshape(b * s, d)
+    g = y2 @ wg.T
+    u = y2 @ wu.T
+    z = jax.nn.silu(g) * u
+    mlp_out = (z @ wd.T).reshape(b, s, d)
+    h2 = h1 + mlp_out
+
+    if not with_stats:
+        return h2
+    stats = []
+    for t in (x2, o, y2, z):
+        cm, l2 = _stats(t)
+        stats.extend([cm, l2])
+    return (h2, *stats)
+
+
+# ---------------------------------------------------------------------------
+# whole model
+# ---------------------------------------------------------------------------
+
+def split_params(cfg: ModelConfig, params: Sequence[jnp.ndarray]):
+    """flat list -> (tok_emb, [block params], ln_f)."""
+    nb = len(BLOCK_PARAMS)
+    tok_emb = params[0]
+    blocks = [params[1 + i * nb: 1 + (i + 1) * nb] for i in range(cfg.n_layers)]
+    ln_f = params[1 + cfg.n_layers * nb]
+    return tok_emb, blocks, ln_f
+
+
+def embed_fwd(tok_emb: jnp.ndarray, tokens: jnp.ndarray) -> jnp.ndarray:
+    return tok_emb[tokens]
+
+
+def head_nll(ln_f: jnp.ndarray, tok_emb: jnp.ndarray, h: jnp.ndarray,
+             targets: jnp.ndarray) -> jnp.ndarray:
+    """Per-token negative log-likelihood (B, S). Head is tied to tok_emb."""
+    x = rmsnorm(h, ln_f)
+    logits = x @ tok_emb.T  # (B, S, V)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return lse - tgt
+
+
+def lm_nll(cfg: ModelConfig, params: Sequence[jnp.ndarray],
+           tokens: jnp.ndarray) -> jnp.ndarray:
+    """Whole-model per-token nll over ``tokens`` (B, S+1)."""
+    tok_emb, blocks, ln_f = split_params(cfg, params)
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    h = embed_fwd(tok_emb, inp)
+    for bp in blocks:
+        h = block_fwd(cfg, bp, h, with_stats=False)
+    return head_nll(ln_f, tok_emb, h, tgt)
+
+
+def lm_loss(cfg: ModelConfig, params: Sequence[jnp.ndarray],
+            tokens: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(lm_nll(cfg, params, tokens))
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def adamw_update(cfg: ModelConfig, p, g, m, v, step, lr, mask=None,
+                 weight_decay=None):
+    """One AdamW step for a single tensor; ``mask`` freezes zeroed entries."""
+    wd = cfg.weight_decay if weight_decay is None else weight_decay
+    b1, b2, eps = cfg.adam_b1, cfg.adam_b2, cfg.adam_eps
+    if mask is not None:
+        g = g * mask
+    m = b1 * m + (1.0 - b1) * g
+    v = b2 * v + (1.0 - b2) * jnp.square(g)
+    mhat = m / (1.0 - jnp.power(b1, step))
+    vhat = v / (1.0 - jnp.power(b2, step))
+    upd = mhat / (jnp.sqrt(vhat) + eps) + wd * p
+    if mask is not None:
+        upd = upd * mask
+    return p - lr * upd, m, v
+
+
+def train_step(cfg: ModelConfig, params, m_state, v_state, step, lr, tokens):
+    """Full-model AdamW pre-training step. Returns (params', m', v', loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda ps: lm_loss(cfg, ps, tokens)
+    )(list(params))
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(params, grads, m_state, v_state):
+        p2, m2, v2 = adamw_update(cfg, p, g, m, v, step, lr)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_p, new_m, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# EBFT — blockwise reconstruction fine-tuning (Guo et al., 2024)
+# ---------------------------------------------------------------------------
+
+def ebft_loss(cfg: ModelConfig, params, masks, salient, x, y):
+    """MSE between the sparse block's output and the dense block's output.
+
+    ``params`` are the *trainable* block tensors (BLOCK_PARAMS order) where
+    linear weights hold only non-salient values; ``masks`` fix the N:M keep
+    pattern of each linear; ``salient`` are the frozen structured-outlier
+    matrices added back to form the effective weight.
+    """
+    eff = []
+    li = 0
+    for name, p in zip(BLOCK_PARAMS, params):
+        if name in BLOCK_LINEAR:
+            eff.append(p * masks[li] + salient[li])
+            li += 1
+        else:
+            eff.append(p)
+    out = block_fwd(cfg, eff, x, with_stats=False)
+    return jnp.mean(jnp.square(out - y))
+
+
+def ebft_step(cfg: ModelConfig, params, masks, salient, x, y,
+              m_state, v_state, step, lr):
+    """One masked AdamW step on the block-reconstruction objective.
+
+    Only non-salient linear weights (through their masks) and the RMSNorm
+    gains are updated, exactly as §4 stage 4 prescribes.  Returns
+    ``(params', m', v', loss)``.
+    """
+    loss, grads = jax.value_and_grad(
+        lambda ps: ebft_loss(cfg, ps, masks, salient, x, y)
+    )(list(params))
+    new_p, new_m, new_v = [], [], []
+    li = 0
+    for name, p, g, m, v in zip(BLOCK_PARAMS, params, grads, m_state, v_state):
+        mask = None
+        wd = None
+        if name in BLOCK_LINEAR:
+            mask = masks[li]
+            li += 1
+        else:
+            wd = 0.0  # no weight decay on norm gains
+        p2, m2, v2 = adamw_update(cfg, p, g, m, v, step, lr, mask=mask,
+                                  weight_decay=wd)
+        new_p.append(p2)
+        new_m.append(m2)
+        new_v.append(v2)
+    return new_p, new_m, new_v, loss
+
+
+# ---------------------------------------------------------------------------
+# initialization (used by tests; the Rust side has its own initializer
+# mirroring these scales)
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> list:
+    params = []
+    for name in cfg.param_names():
+        shape = cfg.param_shape(name)
+        key, sub = jax.random.split(key)
+        if len(shape) == 1:
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[1]
+            std = fan_in ** -0.5
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params

@@ -1,0 +1,62 @@
+"""Layer-2 pruning pipeline graphs (compose the L1 Pallas kernels).
+
+Each function here becomes one HLO artifact per distinct linear-layer shape
+of a model config.  The Rust coordinator chains them per layer:
+
+    score  ->  (outlier mask)  ->  (nm mask)  ->  finalize(+VC)
+
+Keeping the stages granular (rather than one fused prune_layer artifact)
+lets the coordinator mix methods per experiment cell — e.g. magnitude
+scores with structured outlier recovery (Table 5), or RIA without SQ
+(Table 4) — without a combinatorial artifact explosion.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import nm_mask, ria_score, variance_correct
+from .kernels.ref import DEFAULT_ALPHA
+
+
+def score_graph(w, colmax_x, act_l2, *, sq: bool, alpha: float = DEFAULT_ALPHA):
+    """RIA importance scores (Pallas), optionally SmoothQuant-equalized."""
+    return ria_score(w, colmax_x, act_l2, alpha=alpha, sq=sq)
+
+
+def magnitude_graph(w):
+    """|W| baseline scores (kept in L2 so the artifact set is uniform)."""
+    return jnp.abs(w)
+
+
+def wanda_graph(w, act_l2):
+    """Wanda baseline scores |W| * ||x||_2."""
+    return jnp.abs(w) * act_l2[None, :]
+
+
+def mask_graph(score, *, n: int, m: int):
+    """Exact top-N per (1, M) block keep mask (Pallas)."""
+    return nm_mask(score, n, m)
+
+
+def mask_excluding_graph(score, excl, *, n: int, m: int):
+    """N:M mask over ``score`` with already-salient positions excluded.
+
+    Salient weights live in their own structured matrix, so they must not
+    consume N:M slots: their score is forced to -inf first (§4 stage 2).
+    """
+    neg = jnp.asarray(-jnp.inf, score.dtype)
+    return nm_mask(jnp.where(excl > 0, neg, score), n, m) * (1.0 - excl)
+
+
+def finalize_graph(w, keep, omask, *, vc: bool):
+    """Apply the keep mask and (optionally) variance-correct (Pallas).
+
+    Returns the corrected non-salient weight matrix; the effective
+    compressed weight is ``w_ns + w * omask``.
+    """
+    w_ns = w * keep
+    if vc:
+        dense_ref = w * (1.0 - omask)
+        w_ns = variance_correct(w_ns, dense_ref, mode="global")
+    return w_ns

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests are run from the ``python/`` directory (see Makefile), but make the
+# package importable regardless of the invocation cwd.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,337 @@
+"""Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes, N:M patterns and value distributions; every
+property here is an invariant the Rust packing/runtime layers rely on.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    masked_matmul,
+    nm_mask,
+    outlier_mask,
+    pack_outliers,
+    ria_score,
+    split_salient,
+    unpack_outliers,
+    variance_correct,
+)
+from compile.kernels import ref
+
+PATTERNS = [(2, 4), (4, 8), (8, 16), (16, 32)]
+OUTLIER_PATTERNS = [(4, 256), (8, 256), (16, 256)]
+
+
+def _rand(rng, *shape):
+    return jnp.array(rng.standard_normal(shape), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# nm_mask
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", PATTERNS + OUTLIER_PATTERNS)
+def test_nm_mask_matches_ref(n, m):
+    rng = np.random.default_rng(n * 1000 + m)
+    s = _rand(rng, 32, 512)
+    got = np.asarray(nm_mask(s, n, m))
+    want = np.asarray(ref.nm_mask_ref(s, n, m))
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+def test_nm_mask_exact_n_per_block(n, m):
+    rng = np.random.default_rng(7)
+    s = _rand(rng, 16, 256)
+    mask = np.asarray(nm_mask(s, n, m)).reshape(16, -1, m)
+    assert (mask.sum(-1) == n).all()
+
+
+def test_nm_mask_ties_stable():
+    # All-equal scores: the first N positions of each block must win.
+    s = jnp.ones((4, 64), jnp.float32)
+    mask = np.asarray(nm_mask(s, 8, 16)).reshape(4, 4, 16)
+    want = np.zeros((4, 4, 16), np.float32)
+    want[..., :8] = 1.0
+    assert np.array_equal(mask, want)
+
+
+def test_nm_mask_keeps_largest():
+    rng = np.random.default_rng(3)
+    s = np.abs(rng.standard_normal((8, 128))).astype(np.float32)
+    mask = np.asarray(nm_mask(jnp.array(s), 2, 4)).reshape(8, 32, 4)
+    sb = s.reshape(8, 32, 4)
+    kept_min = np.where(mask > 0, sb, np.inf).min(-1)
+    dropped_max = np.where(mask == 0, sb, -np.inf).max(-1)
+    assert (kept_min >= dropped_max).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    rows=st.sampled_from([1, 2, 8, 32, 96]),
+    blocks=st.integers(1, 8),
+    pattern=st.sampled_from(PATTERNS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_nm_mask_property(rows, blocks, pattern, seed):
+    n, m = pattern
+    rng = np.random.default_rng(seed)
+    s = _rand(rng, rows, blocks * m)
+    got = np.asarray(nm_mask(s, n, m))
+    want = np.asarray(ref.nm_mask_ref(s, n, m))
+    assert np.array_equal(got, want)
+    assert (got.reshape(rows, blocks, m).sum(-1) == n).all()
+
+
+# ---------------------------------------------------------------------------
+# ria_score
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sq", [False, True])
+def test_ria_matches_ref(sq):
+    rng = np.random.default_rng(11)
+    w = _rand(rng, 64, 512)
+    colmax = jnp.abs(_rand(rng, 512))
+    al2 = jnp.abs(_rand(rng, 512))
+    got = np.asarray(ria_score(w, colmax, al2, sq=sq))
+    wm = ref.equalize_ref(w, colmax) if sq else w
+    want = np.asarray(ref.ria_score_ref(wm, al2))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_ria_zero_column_guard():
+    rng = np.random.default_rng(13)
+    w = np.asarray(_rand(rng, 16, 256)).copy()
+    w[:, 3] = 0.0  # dead input channel
+    al2 = jnp.abs(_rand(rng, 256))
+    colmax = jnp.abs(_rand(rng, 256))
+    s = np.asarray(ria_score(jnp.array(w), colmax, al2, sq=True))
+    assert np.isfinite(s).all()
+    assert (s[:, 3] == 0).all()
+
+
+def test_ria_sq_changes_ordering_only_via_metric():
+    # SQ equalization must not change W itself — it only reweights the score.
+    rng = np.random.default_rng(17)
+    w = _rand(rng, 32, 256)
+    colmax = jnp.abs(_rand(rng, 256)) * 10.0
+    al2 = jnp.abs(_rand(rng, 256))
+    s_plain = np.asarray(ria_score(w, colmax, al2, sq=False))
+    s_sq = np.asarray(ria_score(w, colmax, al2, sq=True))
+    assert not np.allclose(s_plain, s_sq)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([4, 16, 64]),
+    cols=st.sampled_from([256, 512]),
+    alpha=st.sampled_from([0.0, 0.5, 1.0]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ria_property(rows, cols, alpha, seed):
+    rng = np.random.default_rng(seed)
+    w = _rand(rng, rows, cols)
+    colmax = jnp.abs(_rand(rng, cols))
+    al2 = jnp.abs(_rand(rng, cols))
+    got = np.asarray(ria_score(w, colmax, al2, alpha=alpha, sq=False))
+    want = np.asarray(ref.ria_score_ref(w, al2, alpha=alpha))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# variance correction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["global", "row"])
+def test_vc_matches_ref(mode):
+    rng = np.random.default_rng(19)
+    w = _rand(rng, 64, 512)
+    wp = w * ref.nm_mask_ref(jnp.abs(w), 8, 16)
+    got = np.asarray(variance_correct(wp, w, mode=mode))
+    want = np.asarray(ref.variance_correct_ref(wp, w, mode=mode))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_vc_restores_variance():
+    rng = np.random.default_rng(23)
+    w = _rand(rng, 128, 512)
+    wp = w * ref.nm_mask_ref(jnp.abs(w), 2, 4)
+    out = np.asarray(variance_correct(wp, w))
+    assert abs(out.var() - np.asarray(w).var()) / np.asarray(w).var() < 0.05
+
+
+def test_vc_preserves_mask():
+    rng = np.random.default_rng(29)
+    w = _rand(rng, 32, 256)
+    mask = np.asarray(ref.nm_mask_ref(jnp.abs(w), 8, 16))
+    wp = w * mask
+    out = np.asarray(variance_correct(wp, w))
+    assert (out[mask == 0] == 0).all()
+
+
+def test_vc_noop_on_dense():
+    rng = np.random.default_rng(31)
+    w = _rand(rng, 32, 256)
+    out = np.asarray(variance_correct(w, w))
+    np.testing.assert_allclose(out, np.asarray(w), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# masked matmul
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.sampled_from([1, 8, 32]),
+    cout=st.sampled_from([32, 64, 256]),
+    cin=st.sampled_from([256, 512]),
+    pattern=st.sampled_from(PATTERNS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_property(b, cout, cin, pattern, seed):
+    n, m = pattern
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, b, cin)
+    w = _rand(rng, cout, cin)
+    mask = ref.nm_mask_ref(jnp.abs(w), n, m)
+    got = np.asarray(masked_matmul(x, w, mask))
+    want = np.asarray(ref.masked_matmul_ref(x, w, mask))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_spmm_tiling_boundaries():
+    rng = np.random.default_rng(37)
+    x = _rand(rng, 8, 1536)  # cin not a power of two (3 * 512)
+    w = _rand(rng, 96, 1536)
+    mask = ref.nm_mask_ref(jnp.abs(w), 8, 16)
+    got = np.asarray(masked_matmul(x, w, mask))
+    want = np.asarray(ref.masked_matmul_ref(x, w, mask))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# outlier extraction / packing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,m", OUTLIER_PATTERNS)
+def test_outlier_roundtrip(k, m):
+    rng = np.random.default_rng(41)
+    w = _rand(rng, 32, 512)
+    score = ref.ria_score_ref(w, jnp.abs(_rand(rng, 512)))
+    omask = outlier_mask(score, k, m)
+    vals, idx = pack_outliers(w, omask, k, m)
+    assert vals.shape == (32, 512 // m, k)
+    dense = np.asarray(unpack_outliers(vals, idx, 32, 512, m))
+    np.testing.assert_allclose(dense, np.asarray(w * omask), rtol=1e-6)
+
+
+def test_outlier_indices_sorted_unique():
+    rng = np.random.default_rng(43)
+    w = _rand(rng, 16, 512)
+    omask = outlier_mask(jnp.abs(w), 16, 256)
+    _, idx = pack_outliers(w, omask, 16, 256)
+    idx = np.asarray(idx)
+    assert (np.diff(idx, axis=-1) > 0).all(), "indices strictly ascending"
+    assert idx.min() >= 0 and idx.max() < 256
+
+
+def test_split_salient_partitions():
+    rng = np.random.default_rng(47)
+    w = _rand(rng, 32, 512)
+    omask = outlier_mask(jnp.abs(w), 8, 256)
+    sal, res = split_salient(w, omask)
+    np.testing.assert_allclose(np.asarray(sal + res), np.asarray(w), rtol=1e-6)
+    assert (np.asarray(sal)[np.asarray(omask) == 0] == 0).all()
+    assert (np.asarray(res)[np.asarray(omask) == 1] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# full prune_layer oracle self-consistency
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,m", PATTERNS)
+@pytest.mark.parametrize("k", [0, 4, 16])
+def test_prune_layer_ref_budget(n, m, k):
+    rng = np.random.default_rng(53)
+    w = _rand(rng, 64, 512)
+    colmax = jnp.abs(_rand(rng, 512))
+    al2 = jnp.abs(_rand(rng, 512))
+    w_ns, keep, omask = ref.prune_layer_ref(
+        w, colmax, al2, n, m, k_outlier=k, use_sq=True, use_vc=True
+    )
+    keep, omask = np.asarray(keep), np.asarray(omask)
+    # salient and kept sets are disjoint
+    assert (keep * omask == 0).all()
+    # N:M budget exactly filled in blocks without salient positions
+    blocks_keep = keep.reshape(64, -1, m).sum(-1)
+    blocks_sal = omask.reshape(64, -1, m).sum(-1)
+    assert (blocks_keep + np.minimum(blocks_sal, 99) >= n).all() or k == 0
+    if k == 0:
+        assert (blocks_keep == n).all()
+    # non-salient output vanishes outside the keep mask
+    assert (np.asarray(w_ns)[keep == 0] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# quant_dequant
+# ---------------------------------------------------------------------------
+
+from compile.kernels import quant_dequant
+
+
+@pytest.mark.parametrize("bits,group", [(3, 64), (4, 128), (8, 128)])
+def test_quant_matches_ref(bits, group):
+    rng = np.random.default_rng(bits * 100 + group)
+    w = _rand(rng, 16, 512)
+    got = np.asarray(quant_dequant(w, bits=bits, group=group))
+    want = np.asarray(ref.quant_dequant_ref(w, bits=bits, group=group))
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+
+
+def test_quant_error_bounded_by_half_step():
+    rng = np.random.default_rng(7)
+    w = _rand(rng, 8, 256)
+    bits, group = 4, 64
+    qmax = 2 ** (bits - 1) - 1
+    d = np.asarray(quant_dequant(w, bits=bits, group=group))
+    wg = np.asarray(w).reshape(8, 256 // group, group)
+    dg = d.reshape(8, 256 // group, group)
+    step = np.abs(wg).max(axis=2, keepdims=True) / qmax
+    assert (np.abs(dg - wg) <= 0.5 * step + 1e-7).all()
+
+
+def test_quant_zero_group_stays_zero():
+    w = jnp.zeros((2, 128), jnp.float32).at[1, 64].set(3.0)
+    d = np.asarray(quant_dequant(w, bits=4, group=64))
+    assert (d[0] == 0).all()
+    assert (d[1, :64] == 0).all()
+    assert abs(d[1, 64] - 3.0) < 1e-6
+
+
+def test_quant_more_bits_less_error():
+    rng = np.random.default_rng(9)
+    w = _rand(rng, 16, 512)
+    errs = []
+    for bits in (2, 3, 4, 8):
+        d = np.asarray(quant_dequant(w, bits=bits, group=128))
+        errs.append(np.abs(d - np.asarray(w)).mean())
+    assert errs == sorted(errs, reverse=True)
+
+
+@settings(deadline=None, max_examples=15)
+@given(
+    rows=st.integers(1, 16),
+    groups=st.integers(1, 4),
+    bits=st.sampled_from([3, 4, 8]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_quant_property_idempotent(rows, groups, bits, seed):
+    rng = np.random.default_rng(seed)
+    group = 64
+    w = _rand(rng, rows, groups * group)
+    d1 = np.asarray(quant_dequant(w, bits=bits, group=group))
+    d2 = np.asarray(quant_dequant(jnp.array(d1), bits=bits, group=group))
+    np.testing.assert_allclose(d2, d1, rtol=1e-5, atol=1e-7)

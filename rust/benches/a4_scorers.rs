@@ -1,0 +1,114 @@
+//! Ablation A4 — pruning-criterion comparison including the OBS
+//! (SparseGPT-style) baseline the paper's related work positions RIA
+//! against.
+//!
+//! Part 1: full-model PPL under magnitude / Wanda / RIA (the pipeline's
+//! scorer options) at 2:4 and 8:16.
+//! Part 2: layer-level reconstruction error ‖x(W−Ŵ)ᵀ‖/‖xWᵀ‖ on trained
+//! checkpoint weights, adding SparseGPT with its weight-update
+//! compensation (which operates below the mask-only pipeline).
+//!
+//! Expected shape: magnitude ≫ activation-aware scorers; SparseGPT's
+//! compensation gives the lowest layer reconstruction error; 8:16 beats
+//! 2:4 for every criterion.
+
+use sparselm::bench::{ExperimentCtx, TablePrinter};
+use sparselm::coordinator::{CompressionPipeline, PipelineSpec};
+use sparselm::eval::perplexity;
+use sparselm::model::ParamSet;
+use sparselm::pruning::{
+    mask_topn_per_block, magnitude_score, ria_score, sparsegpt_prune, wanda_score, Hessian,
+    PruneMethod, PruneSpec, SparseGptConfig,
+};
+use sparselm::tensor::{col_l2, matmul_wt, rel_error, Tensor};
+use sparselm::util::Rng;
+use std::sync::Arc;
+
+fn main() -> sparselm::Result<()> {
+    let ctx = ExperimentCtx::new("artifacts")?;
+    let model = "tiny";
+    let (exec, dense) = ctx.ensure_trained(model, ExperimentCtx::default_steps(model))?;
+    let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), model)?;
+
+    let ppl_of = |params: &ParamSet| -> sparselm::Result<f64> {
+        let l = exec.upload(params)?;
+        Ok(perplexity(&exec, &l, &ctx.wiki_eval, ExperimentCtx::ppl_batches())?.ppl)
+    };
+    let dense_ppl = ppl_of(&dense)?;
+
+    println!("\n# A4.1 — scorer comparison, full-model PPL ({model}, dense {dense_ppl:.3})\n");
+    let t = TablePrinter::new(&["Method", "2:4", "8:16"], &[12, 9, 9]);
+    for method in [PruneMethod::Magnitude, PruneMethod::Wanda, PruneMethod::Ria] {
+        let mut row = vec![format!("{method:?}")];
+        for (n, m) in [(2usize, 4usize), (8, 16)] {
+            let spec = PipelineSpec::new(
+                PruneSpec::new(n, m)
+                    .method(method)
+                    .sq(method == PruneMethod::Ria)
+                    .vc(false),
+            );
+            let (sparse, _) = pipeline.run(&dense, &ctx.wiki_train, &spec)?;
+            row.push(format!("{:.3}", ppl_of(&sparse)?));
+        }
+        t.row(&row);
+    }
+
+    // ---- Part 2: layer reconstruction error with OBS ------------------
+    println!("\n# A4.2 — layer reconstruction error ‖x(W−Ŵ)ᵀ‖/‖xWᵀ‖ (mean over layers)\n");
+    let t2 = TablePrinter::new(
+        &["Criterion", "2:4", "8:16"],
+        &[14, 11, 11],
+    );
+    let mut rng = Rng::new(0xA4);
+    let linear = dense.linear_indices();
+    let layers: Vec<&Tensor> = linear.iter().map(|(_, i)| &dense.tensors[*i]).collect();
+
+    let mut rows: Vec<(String, Vec<f64>)> = vec![
+        ("magnitude".into(), Vec::new()),
+        ("wanda".into(), Vec::new()),
+        ("ria".into(), Vec::new()),
+        ("sparsegpt".into(), Vec::new()),
+    ];
+    for (n, m) in [(2usize, 4usize), (8, 16)] {
+        let mut errs = vec![Vec::new(), Vec::new(), Vec::new(), Vec::new()];
+        for w in &layers {
+            let (_, cin) = w.dims2();
+            // synthetic calibration activations (channel-scaled gaussians)
+            let scales: Vec<f32> = (0..cin).map(|_| 0.3 + rng.f32() * 2.0).collect();
+            let mut x = Tensor::randn(vec![2 * cin.min(512), cin], 1.0, &mut rng);
+            for r in 0..x.dims2().0 {
+                let row = x.row_mut(r);
+                for (xi, s) in row.iter_mut().zip(&scales) {
+                    *xi *= s;
+                }
+            }
+            let y = matmul_wt(&x, w);
+            let denom = |wh: &Tensor| rel_error(&matmul_wt(&x, wh), &y);
+            let l2 = col_l2(&x);
+
+            let mag = w.mul(&mask_topn_per_block(&magnitude_score(w), n, m));
+            errs[0].push(denom(&mag));
+            let wan = w.mul(&mask_topn_per_block(&wanda_score(w, &l2), n, m));
+            errs[1].push(denom(&wan));
+            let ria = w.mul(&mask_topn_per_block(&ria_score(w, &l2, 0.5), n, m));
+            errs[2].push(denom(&ria));
+            let mut h = Hessian::new(cin);
+            h.update(&x);
+            let sg = sparsegpt_prune(w, &h, None, &SparseGptConfig::new(n, m))?;
+            errs[3].push(denom(&sg.w));
+        }
+        for (i, e) in errs.iter().enumerate() {
+            let mean = e.iter().sum::<f64>() / e.len() as f64;
+            rows[i].1.push(mean);
+        }
+    }
+    for (name, vals) in rows {
+        t2.row(&[
+            name,
+            format!("{:.4}", vals[0]),
+            format!("{:.4}", vals[1]),
+        ]);
+    }
+    println!("\nexpected: sparsegpt < ria ≈ wanda < magnitude; 8:16 < 2:4 everywhere");
+    Ok(())
+}

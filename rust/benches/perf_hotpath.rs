@@ -1,0 +1,138 @@
+//! Perf bench: the Rust-side hot paths (L3 targets in EXPERIMENTS.md
+//! §Perf) and the PJRT kernel-artifact latencies (L1/L2 path).
+//!
+//! Hot paths measured:
+//!   * score+mask+vc host mirror (per-layer prune fallback)
+//!   * PackedNm pack/unpack throughput (runs after every prune job)
+//!   * k:256 outlier extraction + packing
+//!   * PJRT prune chain (score -> mask -> finalize artifacts)
+//!   * lm_nll eval batch latency (the eval loop's unit of work)
+
+use std::sync::Arc;
+
+use sparselm::bench::{fmt_rate, time_it, ExperimentCtx, TablePrinter};
+use sparselm::coordinator::ModelExec;
+use sparselm::model::ParamSet;
+use sparselm::pruning::{prune_layer, ActStats, PruneSpec};
+use sparselm::runtime::{literal_f32, Engine};
+use sparselm::sparse::{Csr, PackedNm, StructuredOutliers};
+use sparselm::tensor::Tensor;
+use sparselm::util::Rng;
+
+fn main() -> sparselm::Result<()> {
+    sparselm::util::logging::init();
+    let mut rng = Rng::new(99);
+    let (r, c) = (768usize, 256usize);
+    let w = Tensor::randn_outliers(vec![r, c], 0.05, 0.01, 8.0, &mut rng);
+    let stats = ActStats::uniform(c);
+    let bytes = (r * c * 4) as f64;
+
+    println!("\n# perf_hotpath — host mirrors ({r}x{c} f32)\n");
+    let t = TablePrinter::new(&["path", "latency", "throughput"], &[34, 12, 14]);
+
+    let spec = PruneSpec::new(8, 16).outliers(16);
+    let dt = time_it(2, 10, || prune_layer(&w, &stats, &spec));
+    t.row(&[
+        "prune_layer host (ria+sq+vc+o16)".into(),
+        format!("{:.2} ms", dt * 1e3),
+        fmt_rate(bytes / dt),
+    ]);
+
+    let res = prune_layer(&w, &stats, &spec);
+    let dt = time_it(2, 20, || {
+        PackedNm::from_dense_mask(&res.w_ns, &res.keep, 8, 16)
+    });
+    t.row(&[
+        "PackedNm pack 8:16".into(),
+        format!("{:.2} ms", dt * 1e3),
+        fmt_rate(bytes / dt),
+    ]);
+
+    let packed = PackedNm::from_dense_mask(&res.w_ns, &res.keep, 8, 16);
+    let dt = time_it(2, 20, || packed.to_dense());
+    t.row(&[
+        "PackedNm unpack 8:16".into(),
+        format!("{:.2} ms", dt * 1e3),
+        fmt_rate(bytes / dt),
+    ]);
+
+    let dt = time_it(2, 20, || {
+        StructuredOutliers::from_dense_mask(&w, &res.omask, 16, 256)
+    });
+    t.row(&[
+        "StructuredOutliers pack 16:256".into(),
+        format!("{:.2} ms", dt * 1e3),
+        fmt_rate(bytes / dt),
+    ]);
+
+    let dt = time_it(2, 20, || Csr::from_dense_mask(&w, &res.omask));
+    t.row(&[
+        "CSR pack (same salient set)".into(),
+        format!("{:.2} ms", dt * 1e3),
+        fmt_rate(bytes / dt),
+    ]);
+
+    // PJRT paths (need artifacts)
+    if std::path::Path::new("artifacts/kernels").exists() {
+        println!("\n# perf_hotpath — PJRT kernel chain ({r}x{c})\n");
+        let t = TablePrinter::new(
+            &["artifact", "upload-per-call", "device-resident"],
+            &[34, 15, 15],
+        );
+        let engine = Arc::new(Engine::new("artifacts")?);
+        let km = engine.kernel_manifest(r, c)?;
+        let wl = literal_f32(&w)?;
+        let cm = sparselm::runtime::literal_f32_slice(&stats.colmax, &[c])?;
+        let l2 = sparselm::runtime::literal_f32_slice(&stats.l2, &[c])?;
+        let zeros = literal_f32(&Tensor::zeros(vec![r, c]))?;
+
+        for name in ["score_sq1", "mask_8_16", "finalize_vc1"] {
+            let sig = km.artifact(name)?;
+            engine.compile(&sig.file)?; // warm the compile cache
+            let lits: Vec<xla::Literal> = match name {
+                "score_sq1" => vec![wl.clone(), cm.clone(), l2.clone()],
+                "mask_8_16" => vec![wl.clone(), zeros.clone()],
+                _ => vec![wl.clone(), zeros.clone(), zeros.clone()],
+            };
+            // (a) host literals uploaded on every call
+            let dt_lit = time_it(2, 10, || engine.run(&sig.file, &lits).unwrap());
+            // (b) inputs resident on device across calls
+            let bufs: Vec<_> = lits
+                .iter()
+                .map(|l| engine.upload(l.clone()).unwrap())
+                .collect();
+            let refs: Vec<&xla::PjRtBuffer> = bufs.iter().map(|d| &**d).collect();
+            let dt_buf = time_it(2, 10, || engine.run_buffers(&sig.file, &refs).unwrap());
+            t.row(&[
+                name.into(),
+                format!("{:.2} ms", dt_lit * 1e3),
+                format!("{:.2} ms", dt_buf * 1e3),
+            ]);
+        }
+
+        // eval unit of work
+        let ctx = ExperimentCtx::new("artifacts")?;
+        let exec = ModelExec::new(Arc::clone(&ctx.engine), "tiny")?;
+        let mut prng = Rng::new(3);
+        let params = ParamSet::init(&exec.config, &mut prng);
+        let lits = exec.upload(&params)?;
+        let window = ctx
+            .wiki_train
+            .sample_batch(exec.config.batch, exec.config.seq, &mut prng);
+        let dt = time_it(2, 10, || exec.lm_nll(&lits, &window).unwrap());
+        let toks = (exec.config.batch * exec.config.seq) as f64;
+        println!(
+            "\nlm_nll (tiny, {}x{}): {:.2} ms -> {:.0} tok/s",
+            exec.config.batch,
+            exec.config.seq,
+            dt * 1e3,
+            toks / dt
+        );
+        let st = ctx.engine.stats();
+        println!(
+            "engine: {} compiles ({:.2}s), {} executions ({:.2}s)",
+            st.compiles, st.compile_secs, st.executions, st.execute_secs
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,35 @@
+//! Table 3 — LLaMA2-13B stand-in (`small`): the Table 2 grid on the
+//! larger model.  Paper dense mean = 67.77%; the key extra claim is the
+//! Performance Threshold — sparse `small` (8:16 + outliers) should reach
+//! the dense `tiny` baseline (paper: sparse 13B ≈ dense 7B).
+
+#[path = "t2_acc_tiny.rs"]
+mod t2;
+
+use sparselm::bench::grids::{evaluate, prepare};
+use sparselm::bench::ExperimentCtx;
+
+fn main() -> sparselm::Result<()> {
+    t2::run_table("small", "Table 3", "LLaMA2-13B")?;
+
+    // Performance Threshold check (paper contribution 1)
+    let ctx = ExperimentCtx::new("artifacts")?;
+    let (exec_t, dense_t, _) = prepare(&ctx, "tiny")?;
+    let (exec_s, dense_s, pipeline_s) = prepare(&ctx, "small")?;
+    let tiny_dense = evaluate(&ctx, &exec_t, &dense_t, true)?;
+    let spec = sparselm::coordinator::PipelineSpec::new(
+        sparselm::pruning::PruneSpec::new(8, 16).outliers(16),
+    )
+    .ebft(if sparselm::bench::fast_mode() { 8 } else { 30 });
+    let (sparse_s, _) = pipeline_s.run(&dense_s, &ctx.wiki_train, &spec)?;
+    let sparse_cell = evaluate(&ctx, &exec_s, &sparse_s, true)?;
+    println!(
+        "\nPerformance Threshold: sparse small acc {:.2}% / ppl {:.3}  vs  dense tiny acc {:.2}% / ppl {:.3}",
+        sparse_cell.mean_acc * 100.0,
+        sparse_cell.ppl_wiki,
+        tiny_dense.mean_acc * 100.0,
+        tiny_dense.ppl_wiki,
+    );
+    println!("paper claim: sparse 13B matches dense 7B — expect sparse small ≳ dense tiny");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Table 5 — magnitude-based 2:4 pruning with and without 4:256
+//! structured outlier recovery, two model sizes.
+//!
+//! Paper: LLaMA2-7B 37.96 → 23.06; LLaMA2-13B 18.46 → 14.59.
+//! Shape: recovering just 1.56% of weights in structured form cuts the
+//! magnitude-pruning PPL dramatically on both sizes, and the larger model
+//! is more robust (substituted `tiny`/`small` stand-ins).
+
+use std::sync::Arc;
+
+use sparselm::bench::{ExperimentCtx, TablePrinter};
+use sparselm::coordinator::{CompressionPipeline, PipelineSpec};
+use sparselm::eval::perplexity;
+use sparselm::pruning::{PruneMethod, PruneSpec};
+
+fn main() -> sparselm::Result<()> {
+    let ctx = ExperimentCtx::new("artifacts")?;
+    println!("\n# Table 5 — magnitude pruning ± 4:256 outliers (wiki calibration, 2:4)\n");
+    let t = TablePrinter::new(
+        &["Outliers", "tiny (≈7B stand-in)", "small (≈13B stand-in)"],
+        &[14, 20, 22],
+    );
+
+    let mut rows: Vec<Vec<String>> = vec![
+        vec!["0%".to_string()],
+        vec!["1.56% (4:256)".to_string()],
+    ];
+
+    for model in ["tiny", "small"] {
+        let (exec, dense) = ctx.ensure_trained(model, ExperimentCtx::default_steps(model))?;
+        let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), model)?;
+        for (ri, k) in [0usize, 4].into_iter().enumerate() {
+            let mut prune = PruneSpec::new(2, 4)
+                .method(PruneMethod::Magnitude)
+                .sq(false)
+                .vc(false);
+            if k > 0 {
+                prune = prune.outliers(k);
+            }
+            let (sparse, _) = pipeline.run(&dense, &ctx.wiki_train, &PipelineSpec::new(prune))?;
+            let lits = exec.upload(&sparse)?;
+            let ppl =
+                perplexity(&exec, &lits, &ctx.wiki_eval, ExperimentCtx::ppl_batches())?.ppl;
+            rows[ri].push(format!("{ppl:.3}"));
+        }
+    }
+    for r in &rows {
+        t.row(r);
+    }
+    println!("\npaper shape: 4:256 recovery sharply improves magnitude pruning on both sizes");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Shared grid runners for the accuracy/PPL tables (T2/T3/T6/T7/T8):
+//! sweep (calibration corpus × method × outlier pattern × sparsity
+//! pattern), compress, evaluate, and hand rows to the caller.
+
+use std::sync::Arc;
+
+use crate::coordinator::{CompressionPipeline, ModelExec, PipelineSpec};
+use crate::data::CorpusKind;
+use crate::eval::{perplexity, zero_shot_accuracy};
+use crate::model::ParamSet;
+
+use super::ExperimentCtx;
+
+/// One evaluated grid cell.
+#[derive(Clone, Debug)]
+pub struct CellResult {
+    pub ppl_wiki: f64,
+    pub mean_acc: f64,
+    pub compression_ratio: f64,
+}
+
+/// Evaluate one compressed (or dense) model: wiki PPL + mean zero-shot.
+pub fn evaluate(
+    ctx: &ExperimentCtx,
+    exec: &ModelExec,
+    params: &ParamSet,
+    with_acc: bool,
+) -> crate::Result<CellResult> {
+    let lits = exec.upload(params)?;
+    let ppl = perplexity(exec, &lits, &ctx.wiki_eval, ExperimentCtx::ppl_batches())?.ppl;
+    let mean_acc = if with_acc {
+        zero_shot_accuracy(
+            exec,
+            &lits,
+            &ctx.tokenizer,
+            &ctx.world,
+            ExperimentCtx::zs_items(),
+            7,
+        )?
+        .mean_accuracy()
+    } else {
+        f64::NAN
+    };
+    Ok(CellResult {
+        ppl_wiki: ppl,
+        mean_acc,
+        compression_ratio: f64::NAN,
+    })
+}
+
+/// Compress `dense` under `spec` calibrated on `calib`, then evaluate.
+pub fn run_cell(
+    ctx: &ExperimentCtx,
+    exec: &ModelExec,
+    pipeline: &CompressionPipeline,
+    dense: &ParamSet,
+    calib: CorpusKind,
+    spec: &PipelineSpec,
+    with_acc: bool,
+) -> crate::Result<CellResult> {
+    let (sparse, report) = pipeline.run(dense, ctx.stream(calib), spec)?;
+    let mut cell = evaluate(ctx, exec, &sparse, with_acc)?;
+    cell.compression_ratio = report.compression_ratio();
+    log::info!(
+        "cell [{} calib={} o{}:{} {}:{}] ppl {:.3} acc {:.3}",
+        spec.label(),
+        calib.label(),
+        spec.prune.k_outlier,
+        spec.prune.m_outlier,
+        spec.prune.n,
+        spec.prune.m,
+        cell.ppl_wiki,
+        cell.mean_acc
+    );
+    Ok(cell)
+}
+
+/// Build (model exec, dense params, pipeline) for a config.
+pub fn prepare(
+    ctx: &ExperimentCtx,
+    model: &str,
+) -> crate::Result<(ModelExec, ParamSet, CompressionPipeline)> {
+    let (exec, dense) = ctx.ensure_trained(model, ExperimentCtx::default_steps(model))?;
+    let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), model)?;
+    Ok((exec, dense, pipeline))
+}

@@ -1,0 +1,237 @@
+//! Bench harness (criterion is unavailable offline) + the shared
+//! experiment context every table bench and example builds on.
+//!
+//! Each `rust/benches/*.rs` binary (harness = false) regenerates one paper
+//! table/figure: it trains (or loads from `runs/`) the stand-in model,
+//! sweeps the experiment grid, and prints rows in the paper's layout.
+//! `SPARSELM_FAST=1` shrinks grids/items for smoke runs.
+
+pub mod grids;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::{ModelExec, TrainConfig, Trainer};
+use crate::data::{CorpusKind, CorpusSpec, TokenStream, Tokenizer, World};
+use crate::model::{load_checkpoint, save_checkpoint, ParamSet};
+use crate::runtime::Engine;
+use crate::util::Rng;
+
+// ---------------------------------------------------------------- timing
+
+/// Measure a closure: warmup runs then timed iterations; returns seconds
+/// per iteration (mean).
+pub fn time_it<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> f64 {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let t = Instant::now();
+    for _ in 0..iters {
+        std::hint::black_box(f());
+    }
+    t.elapsed().as_secs_f64() / iters.max(1) as f64
+}
+
+/// Pretty throughput formatter.
+pub fn fmt_rate(bytes_per_sec: f64) -> String {
+    if bytes_per_sec > 1e9 {
+        format!("{:.2} GB/s", bytes_per_sec / 1e9)
+    } else {
+        format!("{:.1} MB/s", bytes_per_sec / 1e6)
+    }
+}
+
+/// `SPARSELM_FAST=1` → smoke-test sizing for benches.
+pub fn fast_mode() -> bool {
+    matches!(std::env::var("SPARSELM_FAST").as_deref(), Ok("1") | Ok("true"))
+}
+
+/// Markdown-ish table printer shared by the table benches.
+pub struct TablePrinter {
+    widths: Vec<usize>,
+}
+
+impl TablePrinter {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Self {
+        let widths = widths.to_vec();
+        let mut line = String::from("|");
+        for (h, w) in headers.iter().zip(&widths) {
+            line.push_str(&format!(" {h:<w$} |"));
+        }
+        println!("{line}");
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{:-<1$}|", "", w + 2));
+        }
+        println!("{sep}");
+        TablePrinter { widths }
+    }
+
+    pub fn row(&self, cells: &[String]) {
+        let mut line = String::from("|");
+        for (c, w) in cells.iter().zip(&self.widths) {
+            line.push_str(&format!(" {c:<w$} |"));
+        }
+        println!("{line}");
+    }
+}
+
+// ------------------------------------------------------- experiment ctx
+
+/// Everything a table bench needs: engine, world, tokenizer, corpora, and
+/// train-once-cached stand-in models.
+pub struct ExperimentCtx {
+    pub engine: Arc<Engine>,
+    pub world: World,
+    pub tokenizer: Tokenizer,
+    /// training/calibration streams per corpus kind
+    pub wiki_train: TokenStream,
+    pub c4_train: TokenStream,
+    /// held-out eval streams
+    pub wiki_eval: TokenStream,
+    pub c4_eval: TokenStream,
+    pub runs_dir: PathBuf,
+}
+
+pub const WORLD_SEED: u64 = 20250711;
+
+impl ExperimentCtx {
+    /// Build the standard context (vocab sized for the given config
+    /// family; all current configs use vocab >= 2048 so one tokenizer
+    /// serves them all).
+    pub fn new(artifacts: &str) -> crate::Result<ExperimentCtx> {
+        crate::util::logging::init();
+        let engine = Arc::new(Engine::new(artifacts)?);
+        let world = World::new(WORLD_SEED);
+        let sentences = if fast_mode() { 20_000 } else { 120_000 };
+        let wiki_text = CorpusSpec::new(CorpusKind::Wiki, sentences, 11).generate(&world);
+        let c4_text = CorpusSpec::new(CorpusKind::C4, sentences, 12).generate(&world);
+        let wiki_eval_text =
+            CorpusSpec::new(CorpusKind::Wiki, sentences / 10, 13).generate(&world);
+        let c4_eval_text =
+            CorpusSpec::new(CorpusKind::C4, sentences / 10, 14).generate(&world);
+        let tokenizer = Tokenizer::fit(&wiki_text, 2048);
+        let enc = |t: &str| TokenStream::new(tokenizer.encode(t));
+        Ok(ExperimentCtx {
+            engine,
+            world,
+            tokenizer: tokenizer.clone(),
+            wiki_train: enc(&wiki_text),
+            c4_train: enc(&c4_text),
+            wiki_eval: enc(&wiki_eval_text),
+            c4_eval: enc(&c4_eval_text),
+            runs_dir: PathBuf::from("runs"),
+        })
+    }
+
+    pub fn stream(&self, kind: CorpusKind) -> &TokenStream {
+        match kind {
+            CorpusKind::Wiki => &self.wiki_train,
+            CorpusKind::C4 => &self.c4_train,
+        }
+    }
+
+    pub fn eval_stream(&self, kind: CorpusKind) -> &TokenStream {
+        match kind {
+            CorpusKind::Wiki => &self.wiki_eval,
+            CorpusKind::C4 => &self.c4_eval,
+        }
+    }
+
+    /// Load a cached trained model or train one now (train-once-per-repo
+    /// semantics: benches share checkpoints under `runs/`).
+    pub fn ensure_trained(
+        &self,
+        config_name: &str,
+        steps: usize,
+    ) -> crate::Result<(ModelExec, ParamSet)> {
+        let exec = ModelExec::new(Arc::clone(&self.engine), config_name)?;
+        let steps = if fast_mode() { steps.min(40) } else { steps };
+        let path = self
+            .runs_dir
+            .join(format!("{config_name}-s{steps}.ckpt"));
+        if path.exists() {
+            match load_checkpoint(&path) {
+                Ok(ps) => {
+                    log::info!("loaded cached checkpoint {}", path.display());
+                    return Ok((exec, ps));
+                }
+                Err(e) => log::warn!("cached checkpoint unreadable ({e}); retraining"),
+            }
+        }
+        let mut rng = Rng::new(0xBEEF ^ steps as u64);
+        let mut params = ParamSet::init(&exec.config, &mut rng);
+        let trainer = Trainer {
+            exec: &exec,
+            config: TrainConfig {
+                steps,
+                lr: 3e-3,
+                warmup: (steps / 10).max(1),
+                log_every: (steps / 10).max(1),
+                seed: 0xABCD,
+            },
+        };
+        log::info!("training {config_name} for {steps} steps...");
+        let losses = trainer.run(&mut params, &self.wiki_train)?;
+        log::info!(
+            "trained {config_name}: loss {:.3} -> {:.3}",
+            losses.first().copied().unwrap_or(f32::NAN),
+            losses.last().copied().unwrap_or(f32::NAN)
+        );
+        save_checkpoint(&path, &params)?;
+        Ok((exec, params))
+    }
+
+    /// Default training budget per config family.
+    ///
+    /// Sized so the stand-ins actually *memorize* the synthetic fact
+    /// corpus (loss well past the bigram plateau): underfit models are
+    /// nearly free to prune — every criterion ties and the paper's
+    /// orderings vanish into noise. The post-leak-fix runtime trains
+    /// ~6× faster, which is what makes these budgets affordable.
+    pub fn default_steps(config_name: &str) -> usize {
+        match config_name {
+            "tiny" => 2000,
+            "small" => 350,
+            "gqa" | "wide" => 300,
+            "e2e" => 300,
+            _ => 200,
+        }
+    }
+
+    /// Items per zero-shot task for accuracy tables.
+    pub fn zs_items() -> usize {
+        if fast_mode() {
+            25
+        } else {
+            120
+        }
+    }
+
+    /// PPL eval batches.
+    pub fn ppl_batches() -> usize {
+        if fast_mode() {
+            4
+        } else {
+            16
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_positive() {
+        let secs = time_it(1, 3, || (0..1000).sum::<u64>());
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn fmt_rate_units() {
+        assert!(fmt_rate(2.5e9).contains("GB/s"));
+        assert!(fmt_rate(3.0e6).contains("MB/s"));
+    }
+}

@@ -1,0 +1,261 @@
+//! CLI subcommand dispatch for the `sparselm` binary.
+//!
+//! ```text
+//! sparselm train    --model tiny --steps 300 --out runs/tiny.ckpt
+//! sparselm compress --model tiny --ckpt runs/tiny.ckpt --sparsity 8:16 \
+//!                   --outliers 16 --method ria --sq --vc --ebft 40
+//! sparselm eval     --model tiny --ckpt runs/tiny-8x16.ckpt [--zeroshot]
+//! sparselm hwsim    --batch 8
+//! sparselm info     --model tiny
+//! sparselm quant    --ckpt runs/tiny.ckpt --bits 4 --group 128 --outliers 16
+//! sparselm owl      --ckpt runs/tiny.ckpt --m 16 --keep 0.5
+//! sparselm serve    --model tiny --ckpt runs/tiny-8x16.ckpt --addr 127.0.0.1:7433
+//! sparselm serve-bench --addr 127.0.0.1:7433 --clients 4 --requests 50
+//! ```
+
+mod quant_cmd;
+mod serve_cmd;
+
+pub use serve_cmd::standard_tokenizer;
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use crate::bench::ExperimentCtx;
+use crate::coordinator::{CompressionPipeline, ModelExec, PipelineSpec, TrainConfig, Trainer};
+use crate::data::CorpusKind;
+use crate::eval::{perplexity, zero_shot_accuracy};
+use crate::hwsim::{speedup_curve, HwModel};
+use crate::model::{load_checkpoint, save_checkpoint, ParamSet};
+use crate::pruning::{PruneMethod, PruneSpec};
+use crate::runtime::Engine;
+use crate::util::args::Args;
+use crate::util::Rng;
+
+pub fn main_entry() -> crate::Result<()> {
+    crate::util::logging::init();
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(args),
+        "compress" => cmd_compress(args),
+        "eval" => cmd_eval(args),
+        "hwsim" => cmd_hwsim(args),
+        "info" => cmd_info(args),
+        "quant" => quant_cmd::cmd_quant(args),
+        "owl" => quant_cmd::cmd_owl(args),
+        "serve" => serve_cmd::cmd_serve(args),
+        "serve-bench" => serve_cmd::cmd_serve_bench(args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "sparselm — 8:16 sparsity with structured outliers and variance correction
+
+subcommands:
+  train     train a stand-in model via the AOT train-step artifact
+  compress  run the §4 pipeline (SQ -> RIA -> N:M + k:256 outliers -> VC -> EBFT)
+  eval      perplexity (and --zeroshot accuracy) of a checkpoint
+  hwsim     projected sparse-GEMM speedups (the paper's §2 analysis)
+  info      model/artifact inventory
+  quant     group-quantize a checkpoint (SPQR-style outliers optional)
+  owl       OWL per-layer N:M allocation report
+  serve     scoring server (dynamic batching over the PJRT executable)
+  serve-bench  closed-loop load generator against a running server
+
+common flags: --model <tiny|small|gqa|wide|e2e> --artifacts <dir>
+run a subcommand with --help for its flags"
+    );
+}
+
+/// Parse "N:M" pattern strings.
+pub fn parse_pattern(s: &str) -> crate::Result<(usize, usize)> {
+    let (n, m) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow::anyhow!("pattern must be N:M, got {s:?}"))?;
+    Ok((n.parse()?, m.parse()?))
+}
+
+fn cmd_train(args: Args) -> crate::Result<()> {
+    let model = args.get_str("model", "tiny");
+    let steps = args.get_usize("steps", 300);
+    let out = args.get_str("out", &format!("runs/{model}.ckpt"));
+    let ctx = ExperimentCtx::new(&args.get_str("artifacts", "artifacts"))?;
+    let exec = ModelExec::new(Arc::clone(&ctx.engine), &model)?;
+    let mut rng = Rng::new(args.get_u64("seed", 0xBEEF));
+    let mut params = ParamSet::init(&exec.config, &mut rng);
+    let trainer = Trainer {
+        exec: &exec,
+        config: TrainConfig {
+            steps,
+            lr: args.get_f64("lr", 3e-3) as f32,
+            warmup: steps / 10,
+            log_every: (steps / 20).max(1),
+            seed: args.get_u64("seed", 0xBEEF),
+        },
+    };
+    let kind = CorpusKind::parse(&args.get_str("corpus", "wiki")).unwrap_or(CorpusKind::Wiki);
+    let losses = trainer.run(&mut params, ctx.stream(kind))?;
+    save_checkpoint(&PathBuf::from(&out), &params)?;
+    println!(
+        "trained {model} {steps} steps: loss {:.3} -> {:.3}; saved {out}",
+        losses[0],
+        losses.last().unwrap()
+    );
+    Ok(())
+}
+
+fn build_spec(args: &Args) -> crate::Result<PipelineSpec> {
+    let (n, m) = parse_pattern(&args.get_str("sparsity", "8:16"))?;
+    let k = args.get_usize("outliers", 0);
+    let method = PruneMethod::parse(&args.get_str("method", "ria"))
+        .ok_or_else(|| anyhow::anyhow!("bad --method"))?;
+    let mut prune = PruneSpec::new(n, m)
+        .method(method)
+        .sq(args.get_bool("sq"))
+        .vc(args.get_bool("vc"));
+    if k > 0 {
+        prune = prune.outliers(k);
+    }
+    let mut spec = PipelineSpec::new(prune);
+    spec.ebft_steps = args.get_usize("ebft", 0);
+    spec.ebft_lr = args.get_f64("ebft-lr", 1e-3) as f32;
+    spec.calib_batches = args.get_usize("calib-batches", 8);
+    spec.unstructured_outliers = args.get_bool("unstructured");
+    spec.use_kernels = !args.get_bool("host-prune");
+    Ok(spec)
+}
+
+fn cmd_compress(args: Args) -> crate::Result<()> {
+    let model = args.get_str("model", "tiny");
+    let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
+    let out = args.get_str("out", &format!("runs/{model}-compressed.ckpt"));
+    let ctx = ExperimentCtx::new(&args.get_str("artifacts", "artifacts"))?;
+    let dense = load_checkpoint(&PathBuf::from(&ckpt))?;
+    let spec = build_spec(&args)?;
+    let kind = CorpusKind::parse(&args.get_str("corpus", "wiki")).unwrap_or(CorpusKind::Wiki);
+
+    let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), &model)?;
+    let (compressed, report) = pipeline.run(&dense, ctx.stream(kind), &spec)?;
+    save_checkpoint(&PathBuf::from(&out), &compressed)?;
+
+    println!("pipeline: {} on {}", report.label, model);
+    println!(
+        "storage: nm {} KiB + outliers {} KiB vs dense {} KiB ({:.2}x)",
+        report.total_nm_bytes() / 1024,
+        report.total_outlier_bytes() / 1024,
+        report.total_dense_bytes() / 1024,
+        report.compression_ratio()
+    );
+    println!("{}", pipeline.metrics.report());
+    println!("saved {out}");
+    Ok(())
+}
+
+fn cmd_eval(args: Args) -> crate::Result<()> {
+    let model = args.get_str("model", "tiny");
+    let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
+    let ctx = ExperimentCtx::new(&args.get_str("artifacts", "artifacts"))?;
+    let exec = ModelExec::new(Arc::clone(&ctx.engine), &model)?;
+    let params = load_checkpoint(&PathBuf::from(&ckpt))?;
+    let lits = exec.upload(&params)?;
+    for kind in [CorpusKind::Wiki, CorpusKind::C4] {
+        let rep = perplexity(&exec, &lits, ctx.eval_stream(kind), ExperimentCtx::ppl_batches())?;
+        println!(
+            "{}: ppl {:.3} (nll {:.4}, {} tokens)",
+            kind.label(),
+            rep.ppl,
+            rep.mean_nll,
+            rep.tokens
+        );
+    }
+    if args.get_bool("zeroshot") {
+        let zs = zero_shot_accuracy(
+            &exec,
+            &lits,
+            &ctx.tokenizer,
+            &ctx.world,
+            args.get_usize("items", ExperimentCtx::zs_items()),
+            7,
+        )?;
+        for t in &zs.tasks {
+            println!(
+                "  {:<12} acc {:.1}% (chance {:.0}%)",
+                t.task,
+                t.accuracy * 100.0,
+                t.chance * 100.0
+            );
+        }
+        println!("mean accuracy: {:.2}%", zs.mean_accuracy() * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_hwsim(args: Args) -> crate::Result<()> {
+    let hw = HwModel::default();
+    let batch = args.get_usize("batch", 8);
+    let sizes = [512usize, 1024, 2048, 4096, 8192, 16384];
+    let patterns = [(2usize, 4usize), (4, 8), (8, 16), (16, 32)];
+    println!("projected sparse-GEMM speedup vs dense (batch={batch}):");
+    print!("{:>8}", "size");
+    for (n, m) in patterns {
+        print!("{:>9}", format!("{n}:{m}"));
+    }
+    println!();
+    for pt in speedup_curve(&hw, batch, &sizes, &patterns).chunks(patterns.len()) {
+        print!("{:>8}", pt[0].size);
+        for p in pt {
+            print!("{:>8.2}x", p.speedup);
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn cmd_info(args: Args) -> crate::Result<()> {
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let engine = Engine::new(&artifacts)?;
+    let model = args.get_str("model", "tiny");
+    let manifest = engine.model_manifest(&model)?;
+    let cfg = crate::model::ModelConfig::from_manifest(&manifest.raw);
+    println!(
+        "{}: dim={} layers={} heads={} (kv {}) hidden={} vocab={} seq={} batch={}",
+        cfg.name,
+        cfg.dim,
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.hidden,
+        cfg.vocab,
+        cfg.seq,
+        cfg.batch
+    );
+    println!("parameters: {:.2}M", cfg.n_params() as f64 / 1e6);
+    println!("artifacts:");
+    for (name, sig) in &manifest.artifacts {
+        println!(
+            "  {name:<12} {} in / {} out  ({})",
+            sig.inputs.len(),
+            sig.outputs.len(),
+            sig.file.file_name().unwrap().to_string_lossy()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pattern_parsing() {
+        assert_eq!(parse_pattern("8:16").unwrap(), (8, 16));
+        assert_eq!(parse_pattern("2:4").unwrap(), (2, 4));
+        assert!(parse_pattern("816").is_err());
+    }
+}

@@ -1,0 +1,103 @@
+//! `sparselm quant` — group-quantize a checkpoint's linear layers
+//! (optionally SPQR-style with structured outliers) and report
+//! reconstruction error + bits/param; `sparselm owl` — report the OWL
+//! per-layer pattern allocation for a checkpoint.
+
+use std::path::Path;
+
+use crate::model::load_checkpoint;
+use crate::pruning::{layer_outlier_distribution, owl_allocate, ActStats, LayerOutlierStats};
+use crate::quant::{OutlierStore, QuantSpec, SpqrLayer, SpqrSpec};
+use crate::tensor::rel_error;
+use crate::util::args::Args;
+
+pub fn cmd_quant(args: Args) -> crate::Result<()> {
+    let model = args.get_str("model", "tiny");
+    let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
+    let bits = args.get_usize("bits", 4) as u32;
+    let group = args.get_usize("group", 128);
+    let k = args.get_usize("outliers", 0);
+    let params = load_checkpoint(Path::new(&ckpt))?;
+    let store = if k > 0 {
+        OutlierStore::Structured { k, m: 256 }
+    } else {
+        OutlierStore::None
+    };
+    let spec = SpqrSpec::new(QuantSpec::new(bits, group), store);
+
+    println!(
+        "quantizing {ckpt}: int{bits} g{group}{}",
+        if k > 0 {
+            format!(" + {k}:256 outliers")
+        } else {
+            String::new()
+        }
+    );
+    let mut total_bytes = 0usize;
+    let mut total_dense = 0usize;
+    let mut worst: (f64, String) = (0.0, String::new());
+    let mut layers = 0usize;
+    for (name, idx) in params.linear_indices() {
+        let w = &params.tensors[idx];
+        let (_r, c) = w.dims2();
+        if c % group != 0 || c % 256 != 0 {
+            continue; // skip layers the group layout doesn't divide
+        }
+        let stats = ActStats::uniform(c);
+        let layer = SpqrLayer::compress(w, &stats, &spec);
+        let err = rel_error(&layer.to_dense(), w);
+        total_bytes += layer.bytes();
+        total_dense += w.len() * 2;
+        layers += 1;
+        if err > worst.0 {
+            worst = (err, name.clone());
+        }
+        if args.get_bool("verbose") {
+            println!("  {name:<28} err {err:.4}  {:.3} bits/param", layer.bits_per_param());
+        }
+    }
+    anyhow::ensure!(layers > 0, "no quantizable linear layers found");
+    println!(
+        "{layers} layers: {:.3} bits/param overall ({:.2}x vs bf16), worst layer {} (err {:.4})",
+        8.0 * total_bytes as f64 / (total_dense as f64 / 2.0),
+        total_dense as f64 / total_bytes as f64,
+        worst.1,
+        worst.0
+    );
+    Ok(())
+}
+
+pub fn cmd_owl(args: Args) -> crate::Result<()> {
+    let model = args.get_str("model", "tiny");
+    let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
+    let m = args.get_usize("m", 16);
+    let theta = args.get_f64("theta", 5.0) as f32;
+    let lambda = args.get_f64("lambda", 2.0);
+    let keep = args.get_f64("keep", 0.5);
+    let params = load_checkpoint(Path::new(&ckpt))?;
+
+    let stats: Vec<LayerOutlierStats> = params
+        .linear_indices()
+        .into_iter()
+        .map(|(name, idx)| {
+            let w = &params.tensors[idx];
+            LayerOutlierStats {
+                name,
+                size: w.len(),
+                lod: layer_outlier_distribution(w, theta),
+            }
+        })
+        .collect();
+    anyhow::ensure!(!stats.is_empty(), "no linear layers in checkpoint");
+    let allocs = owl_allocate(&stats, m, keep, lambda, 1);
+    println!("OWL allocation (theta={theta}, lambda={lambda}, target keep {keep}):");
+    for (s, a) in stats.iter().zip(&allocs) {
+        println!(
+            "  {:<28} lod {:.4}  ->  {:>2}:{m}",
+            s.name, s.lod, a.n
+        );
+    }
+    let realized = crate::pruning::owl::realized_keep(&allocs, &stats);
+    println!("realized keep fraction: {realized:.4}");
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! Calibration: stream batches through the dense model layer-by-layer,
+//! accumulating per-linear activation statistics (SmoothQuant max-abs,
+//! RIA/Wanda L2 norms) and caching the block input/output hidden states
+//! that EBFT later reconstructs against.
+
+use crate::data::TokenStream;
+use crate::model::{ParamSet, BLOCK_PARAMS};
+use crate::pruning::ActStats;
+use crate::util::Rng;
+
+use super::exec::{ModelExec, ParamLiterals};
+
+/// Activation statistics for the four distinct linear inputs of a block.
+#[derive(Clone, Debug)]
+pub struct BlockStats {
+    /// q/k/v projections input (post-ln1 hidden), dim D
+    pub attn_in: ActStats,
+    /// o projection input (attention output), dim D
+    pub o_in: ActStats,
+    /// gate/up projections input (post-ln2 hidden), dim D
+    pub mlp_in: ActStats,
+    /// down projection input (SwiGLU output), dim H
+    pub down_in: ActStats,
+}
+
+impl BlockStats {
+    fn new(d: usize, h: usize) -> Self {
+        BlockStats {
+            attn_in: ActStats::new(d),
+            o_in: ActStats::new(d),
+            mlp_in: ActStats::new(d),
+            down_in: ActStats::new(h),
+        }
+    }
+
+    /// Statistics for a named linear weight of the block.
+    pub fn for_linear(&self, name: &str) -> &ActStats {
+        match name {
+            "wq" | "wk" | "wv" => &self.attn_in,
+            "wo" => &self.o_in,
+            "wg" | "wu" => &self.mlp_in,
+            "wd" => &self.down_in,
+            _ => panic!("not a linear: {name}"),
+        }
+    }
+}
+
+/// Calibration output: stats per block + cached block IO for EBFT.
+pub struct CalibRecord {
+    pub stats: Vec<BlockStats>,
+    /// per batch: token ids (B*S) fed to the model
+    pub batch_ids: Vec<Vec<i32>>,
+    /// per batch, per block boundary (L+1 entries): hidden literals of the
+    /// *dense* model — `hiddens[bi][l]` is the input to block `l`,
+    /// `hiddens[bi][L]` the final hidden
+    pub hiddens: Vec<Vec<xla::Literal>>,
+}
+
+/// Runs calibration passes.
+pub struct Calibrator<'a> {
+    pub exec: &'a ModelExec,
+    pub n_batches: usize,
+}
+
+impl<'a> Calibrator<'a> {
+    pub fn new(exec: &'a ModelExec, n_batches: usize) -> Self {
+        Calibrator { exec, n_batches }
+    }
+
+    /// Run the dense model over `n_batches` sampled windows, collecting
+    /// stats and block IO.
+    pub fn run(
+        &self,
+        params: &ParamSet,
+        lits: &ParamLiterals,
+        stream: &TokenStream,
+        rng: &mut Rng,
+    ) -> crate::Result<CalibRecord> {
+        let cfg = &self.exec.config;
+        let (b, s) = (cfg.batch, cfg.seq);
+        let nb = BLOCK_PARAMS.len();
+        let mut stats: Vec<BlockStats> = (0..cfg.n_layers)
+            .map(|_| BlockStats::new(cfg.dim, cfg.hidden))
+            .collect();
+        let mut batch_ids = Vec::with_capacity(self.n_batches);
+        let mut hiddens = Vec::with_capacity(self.n_batches);
+
+        for _ in 0..self.n_batches {
+            let window = stream.sample_batch(b, s, rng); // (B, S+1)
+            // inputs only (drop the shifted target column)
+            let mut ids = Vec::with_capacity(b * s);
+            for r in 0..b {
+                ids.extend_from_slice(&window[r * (s + 1)..r * (s + 1) + s]);
+            }
+            let tok_emb = &lits.lits[0];
+            let mut h = self.exec.embed(tok_emb, &ids)?;
+            let mut layer_hiddens = Vec::with_capacity(cfg.n_layers + 1);
+            for l in 0..cfg.n_layers {
+                let base = 1 + l * nb;
+                let blk: Vec<&xla::PjRtBuffer> =
+                    lits.lits[base..base + nb].iter().map(|d| &**d).collect();
+                let (h_out, st) = self.exec.block_fwd(&blk, &h)?;
+                // aot order: (colmax, l2) × (attn_in, o_in, mlp_in, down_in)
+                stats[l].attn_in.merge(&st[0], &st[1]);
+                stats[l].o_in.merge(&st[2], &st[3]);
+                stats[l].mlp_in.merge(&st[4], &st[5]);
+                stats[l].down_in.merge(&st[6], &st[7]);
+                layer_hiddens.push(h);
+                h = h_out;
+            }
+            layer_hiddens.push(h);
+            batch_ids.push(ids);
+            hiddens.push(layer_hiddens);
+        }
+        let _ = params;
+        Ok(CalibRecord {
+            stats,
+            batch_ids,
+            hiddens,
+        })
+    }
+}

@@ -1,0 +1,142 @@
+//! EBFT — blockwise reconstruction fine-tuning (Guo et al., 2024; §4
+//! stage 4 of the paper).
+//!
+//! Each transformer block is fine-tuned *independently* to reproduce the
+//! dense block's output on the calibration set, under the fixed sparsity
+//! masks: only non-salient linear values (through their masks) and the
+//! RMSNorm gains receive updates; salient weights stay frozen and are
+//! added back inside the L2 graph (`ebft_step` artifact).
+
+use crate::model::{ParamSet, BLOCK_LINEAR, BLOCK_PARAMS};
+use crate::runtime::literal_f32;
+use crate::tensor::Tensor;
+
+use super::calib::CalibRecord;
+use super::exec::{run_refs, ModelExec};
+
+#[derive(Clone, Copy, Debug)]
+pub struct EbftConfig {
+    pub steps: usize,
+    pub lr: f32,
+}
+
+pub struct EbftTrainer<'a> {
+    pub exec: &'a ModelExec,
+    pub config: EbftConfig,
+}
+
+impl<'a> EbftTrainer<'a> {
+    /// Fine-tune every block of `params` in place. `block_masks` /
+    /// `block_salient` are per block in BLOCK_LINEAR order. Returns the
+    /// final reconstruction loss per block.
+    pub fn run(
+        &self,
+        params: &mut ParamSet,
+        calib: &CalibRecord,
+        block_masks: &[Vec<Tensor>],
+        block_salient: &[Vec<Tensor>],
+    ) -> crate::Result<Vec<f32>> {
+        let cfg = &self.exec.config;
+        anyhow::ensure!(!calib.hiddens.is_empty(), "EBFT requires calibration IO");
+        let mut final_losses = Vec::with_capacity(cfg.n_layers);
+        for b in 0..cfg.n_layers {
+            let loss = self.tune_block(params, calib, b, &block_masks[b], &block_salient[b])?;
+            log::info!("ebft block {b}: final reconstruction loss {loss:.3e}");
+            final_losses.push(loss);
+        }
+        Ok(final_losses)
+    }
+
+    /// One block: `steps` masked-AdamW steps cycling over calibration
+    /// batches; trainable = non-salient linears + norm gains.
+    fn tune_block(
+        &self,
+        params: &mut ParamSet,
+        calib: &CalibRecord,
+        block: usize,
+        masks: &[Tensor],
+        salient: &[Tensor],
+    ) -> crate::Result<f32> {
+        anyhow::ensure!(masks.len() == BLOCK_LINEAR.len());
+        let sig = self.exec.manifest.artifact("ebft_step")?;
+
+        // Trainable tensors: linears hold w_ns only (effective - salient).
+        let mut train: Vec<xla::Literal> = Vec::with_capacity(BLOCK_PARAMS.len());
+        let mut li = 0;
+        for p in BLOCK_PARAMS {
+            let name = format!("blk{block}.{p}");
+            let t = params.get(&name);
+            if BLOCK_LINEAR.contains(&p) {
+                let wns = t.zip(&salient[li], |a, s| a - s);
+                train.push(literal_f32(&wns)?);
+                li += 1;
+            } else {
+                train.push(literal_f32(t)?);
+            }
+        }
+        let mask_lits: Vec<xla::Literal> = masks
+            .iter()
+            .map(literal_f32)
+            .collect::<crate::Result<_>>()?;
+        let sal_lits: Vec<xla::Literal> = salient
+            .iter()
+            .map(literal_f32)
+            .collect::<crate::Result<_>>()?;
+        let mut m_state: Vec<xla::Literal> = Vec::with_capacity(BLOCK_PARAMS.len());
+        let mut v_state: Vec<xla::Literal> = Vec::with_capacity(BLOCK_PARAMS.len());
+        for p in BLOCK_PARAMS {
+            let name = format!("blk{block}.{p}");
+            let z = Tensor::zeros(params.get(&name).shape().to_vec());
+            m_state.push(literal_f32(&z)?);
+            v_state.push(literal_f32(&z)?);
+        }
+
+        let mut last_loss = f32::NAN;
+        for step in 1..=self.config.steps {
+            let bi = (step - 1) % calib.hiddens.len();
+            let x = &calib.hiddens[bi][block];
+            let y = &calib.hiddens[bi][block + 1];
+            let stepl = crate::runtime::literal_scalar(step as f32);
+            let lrl = crate::runtime::literal_scalar(self.config.lr);
+
+            let mut inputs: Vec<&xla::Literal> = Vec::new();
+            inputs.extend(train.iter());
+            inputs.extend(mask_lits.iter());
+            inputs.extend(sal_lits.iter());
+            inputs.push(x);
+            inputs.push(y);
+            inputs.extend(m_state.iter());
+            inputs.extend(v_state.iter());
+            inputs.push(&stepl);
+            inputs.push(&lrl);
+
+            let mut outs = run_refs(&self.exec.engine, &sig.file, &inputs)?;
+            let nb = BLOCK_PARAMS.len();
+            anyhow::ensure!(outs.len() == 3 * nb + 1, "ebft_step output arity");
+            last_loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+            let vs = outs.split_off(2 * nb);
+            let ms = outs.split_off(nb);
+            train = outs;
+            m_state = ms;
+            v_state = vs;
+        }
+
+        // Write back: effective linear = trained w_ns (mask re-applied in
+        // graph, but values outside the mask never moved) + salient.
+        let mut li = 0;
+        for (i, p) in BLOCK_PARAMS.iter().enumerate() {
+            let name = format!("blk{block}.{p}");
+            let t = crate::runtime::tensor_from_literal(&train[i])?;
+            if BLOCK_LINEAR.contains(p) {
+                // re-mask defensively (AdamW update is mask-gated in-graph)
+                let masked = t.mul(&masks[li]);
+                *params.get_mut(&name) = masked.add(&salient[li]);
+                li += 1;
+            } else {
+                *params.get_mut(&name) = t;
+            }
+        }
+        Ok(last_loss)
+    }
+}
+

@@ -1,0 +1,185 @@
+//! Model-graph execution: typed wrappers over the model-level HLO
+//! artifacts (embed_fwd / block_fwd / head_nll / lm_nll / train_step /
+//! ebft_step).
+//!
+//! Parameters are kept as PJRT literals (`upload`) so repeated executions
+//! (eval batches, train steps) don't re-serialize host tensors.
+
+use std::sync::Arc;
+
+use crate::model::{ModelConfig, ParamSet, BLOCK_PARAMS};
+use crate::runtime::{literal_f32, literal_i32, literal_scalar, DeviceBuffer, Engine, Manifest};
+use crate::tensor::Tensor;
+
+/// Executes the model-level artifacts of one config.
+pub struct ModelExec {
+    pub engine: Arc<Engine>,
+    pub manifest: Manifest,
+    pub config: ModelConfig,
+}
+
+/// Parameters resident **on device** (PJRT buffers), in flat artifact
+/// order. Uploaded once; every eval/train call borrows them, so the
+/// per-call host→device traffic is just the token batch.
+pub struct ParamLiterals {
+    pub lits: Vec<DeviceBuffer>,
+}
+
+impl ModelExec {
+    pub fn new(engine: Arc<Engine>, config_name: &str) -> crate::Result<ModelExec> {
+        let manifest = engine.model_manifest(config_name)?;
+        let config = ModelConfig::from_manifest(&manifest.raw);
+        Ok(ModelExec {
+            engine,
+            manifest,
+            config,
+        })
+    }
+
+    /// Upload a parameter set (flat order) to device buffers.
+    pub fn upload(&self, params: &ParamSet) -> crate::Result<ParamLiterals> {
+        let lits = params
+            .tensors
+            .iter()
+            .map(|t| self.engine.upload(literal_f32(t)?))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(ParamLiterals { lits })
+    }
+
+    /// Per-token negative log-likelihood over a (B, S+1) token batch.
+    pub fn lm_nll(&self, params: &ParamLiterals, tokens: &[i32]) -> crate::Result<Tensor> {
+        let (b, s) = (self.config.batch, self.config.seq);
+        anyhow::ensure!(tokens.len() == b * (s + 1), "lm_nll batch shape");
+        let mut inputs: Vec<&xla::PjRtBuffer> = params.lits.iter().map(|d| &**d).collect();
+        let tok = self.engine.upload(literal_i32(tokens, &[b, s + 1])?)?;
+        inputs.push(&tok);
+        let sig = self.manifest.artifact("lm_nll")?;
+        let outs = self.engine.run_buffers(&sig.file, &inputs)?;
+        crate::runtime::tensor_from_literal(&outs[0])
+    }
+
+    /// Token embedding: (B, S) ids -> (B, S, D) hidden.
+    pub fn embed(&self, tok_emb: &xla::PjRtBuffer, ids: &[i32]) -> crate::Result<xla::Literal> {
+        let (b, s) = (self.config.batch, self.config.seq);
+        anyhow::ensure!(ids.len() == b * s, "embed batch shape");
+        let idl = self.engine.upload(literal_i32(ids, &[b, s])?)?;
+        let sig = self.manifest.artifact("embed_fwd")?;
+        let mut outs = self.engine.run_buffers(&sig.file, &[tok_emb, &idl])?;
+        Ok(outs.remove(0))
+    }
+
+    /// One block forward with activation statistics.
+    ///
+    /// Returns `(hidden_out, stats)` where stats is the 8 aot-ordered
+    /// vectors: (colmax, l2) × (attn_in, o_in, mlp_in, down_in).
+    pub fn block_fwd(
+        &self,
+        block_params: &[&xla::PjRtBuffer],
+        hidden: &xla::Literal,
+    ) -> crate::Result<(xla::Literal, Vec<Vec<f32>>)> {
+        anyhow::ensure!(block_params.len() == BLOCK_PARAMS.len());
+        let mut inputs: Vec<&xla::PjRtBuffer> = block_params.to_vec();
+        let hb = self.engine.upload(hidden.clone())?;
+        inputs.push(&hb);
+        let sig = self.manifest.artifact("block_fwd")?;
+        let mut outs = self.engine.run_buffers(&sig.file, &inputs)?;
+        let hidden_out = outs.remove(0);
+        let stats = outs
+            .iter()
+            .map(|l| crate::runtime::vec_from_literal(l))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok((hidden_out, stats))
+    }
+
+    /// Final norm + tied head: per-token nll of `targets` given hidden.
+    pub fn head_nll(
+        &self,
+        ln_f: &xla::PjRtBuffer,
+        tok_emb: &xla::PjRtBuffer,
+        hidden: &xla::Literal,
+        targets: &[i32],
+    ) -> crate::Result<Tensor> {
+        let (b, s) = (self.config.batch, self.config.seq);
+        let tgt = self.engine.upload(literal_i32(targets, &[b, s])?)?;
+        let hb = self.engine.upload(hidden.clone())?;
+        let sig = self.manifest.artifact("head_nll")?;
+        let outs = self
+            .engine
+            .run_buffers(&sig.file, &[ln_f, tok_emb, &hb, &tgt])?;
+        crate::runtime::tensor_from_literal(&outs[0])
+    }
+
+    /// One AdamW pre-training step; updates `params`, `m`, `v` in place
+    /// (literal swap) and returns the loss.
+    pub fn train_step(
+        &self,
+        params: &mut ParamLiterals,
+        m: &mut ParamLiterals,
+        v: &mut ParamLiterals,
+        step: f32,
+        lr: f32,
+        tokens: &[i32],
+    ) -> crate::Result<f32> {
+        let (b, s) = (self.config.batch, self.config.seq);
+        anyhow::ensure!(tokens.len() == b * (s + 1), "train batch shape");
+        let np = params.lits.len();
+        let mut inputs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(3 * np + 3);
+        inputs.extend(params.lits.iter().map(|d| &**d));
+        inputs.extend(m.lits.iter().map(|d| &**d));
+        inputs.extend(v.lits.iter().map(|d| &**d));
+        let stepl = self.engine.upload(literal_scalar(step))?;
+        let lrl = self.engine.upload(literal_scalar(lr))?;
+        let tok = self.engine.upload(literal_i32(tokens, &[b, s + 1])?)?;
+        inputs.push(&stepl);
+        inputs.push(&lrl);
+        inputs.push(&tok);
+        let sig = self.manifest.artifact("train_step")?;
+        let mut outs = self.engine.run_buffers(&sig.file, &inputs)?;
+        anyhow::ensure!(outs.len() == 3 * np + 1, "train_step output arity");
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+        // re-upload the updated state as device buffers for the next step
+        let mut bufs = outs
+            .into_iter()
+            .map(|l| self.engine.upload(l))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let vs = bufs.split_off(2 * np);
+        let ms = bufs.split_off(np);
+        params.lits = bufs;
+        m.lits = ms;
+        v.lits = vs;
+        Ok(loss)
+    }
+
+    /// Download literal parameters back into a host [`ParamSet`].
+    pub fn download(&self, lits: &ParamLiterals, like: &ParamSet) -> crate::Result<ParamSet> {
+        anyhow::ensure!(lits.lits.len() == like.tensors.len());
+        let tensors = lits
+            .lits
+            .iter()
+            .map(|b| crate::runtime::tensor_from_literal(&b.to_literal_sync()?))
+            .collect::<crate::Result<Vec<_>>>()?;
+        Ok(ParamSet {
+            config: like.config.clone(),
+            names: like.names.clone(),
+            tensors,
+        })
+    }
+}
+
+/// Execute with borrowed host literals: uploads to device buffers for
+/// this call only (they drop on return). Use [`Engine::run_buffers`]
+/// directly when inputs are reused across calls.
+pub(crate) fn run_refs(
+    engine: &Engine,
+    file: &std::path::Path,
+    inputs: &[&xla::Literal],
+) -> crate::Result<Vec<xla::Literal>> {
+    // borrowed uploads: the caller's literals outlive this synchronous
+    // call, which awaits the output chain (see Engine::upload_borrowed)
+    let bufs = inputs
+        .iter()
+        .map(|l| engine.upload_borrowed(l))
+        .collect::<crate::Result<Vec<_>>>()?;
+    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+    engine.run_buffers(file, &refs)
+}

@@ -1,0 +1,108 @@
+//! Coordinator metrics registry: named counters + per-stage latency
+//! statistics, rendered as a report block at the end of a run.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::timer::LatencyStats;
+
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, u64>>,
+    stages: Mutex<BTreeMap<String, LatencyStats>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn incr(&self, name: &str, by: u64) {
+        *self
+            .counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_insert(0) += by;
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .unwrap()
+            .get(name)
+            .copied()
+            .unwrap_or(0)
+    }
+
+    /// Time a stage closure, recording its latency under `stage`.
+    pub fn time<T>(&self, stage: &str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.stages
+            .lock()
+            .unwrap()
+            .entry(stage.to_string())
+            .or_default()
+            .record(t.elapsed());
+        out
+    }
+
+    pub fn record_secs(&self, stage: &str, secs: f64) {
+        self.stages
+            .lock()
+            .unwrap()
+            .entry(stage.to_string())
+            .or_default()
+            .record_secs(secs);
+    }
+
+    pub fn stage_total(&self, stage: &str) -> f64 {
+        self.stages
+            .lock()
+            .unwrap()
+            .get(stage)
+            .map(|s| s.total())
+            .unwrap_or(0.0)
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::from("metrics:\n");
+        for (k, v) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("  {k:<32} {v}\n"));
+        }
+        for (k, s) in self.stages.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "  {k:<32} total={:.2}s {}\n",
+                s.total(),
+                s.summary(1e3, "ms")
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("layers", 3);
+        m.incr("layers", 4);
+        assert_eq!(m.counter("layers"), 7);
+        assert_eq!(m.counter("absent"), 0);
+    }
+
+    #[test]
+    fn stage_timing_recorded() {
+        let m = Metrics::new();
+        let out = m.time("stage_a", || 5);
+        assert_eq!(out, 5);
+        assert!(m.stage_total("stage_a") >= 0.0);
+        let r = m.report();
+        assert!(r.contains("stage_a"));
+    }
+}

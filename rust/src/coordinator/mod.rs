@@ -1,0 +1,39 @@
+//! The Layer-3 coordinator: the paper's §4 pipeline as a production
+//! service.
+//!
+//! ```text
+//!             ┌──────────────┐   per-layer jobs    ┌──────────────┐
+//!  corpus ──► │ calibration  │ ──────────────────► │ prune+pack   │
+//!             │ (stats + IO) │                     │ (L1 kernels) │
+//!             └──────┬───────┘                     └──────┬───────┘
+//!                    │ block io pairs                     │ effective W
+//!                    ▼                                    ▼
+//!             ┌──────────────┐                     ┌──────────────┐
+//!             │ EBFT sched   │ ◄────────────────── │ sparse store │
+//!             │ (L2 bwd)     │                     │ nm + k:256   │
+//!             └──────┬───────┘                     └──────────────┘
+//!                    ▼
+//!               eval (ppl + zero-shot) ► reports
+//! ```
+//!
+//! [`ModelExec`] owns PJRT execution of the model graphs; [`Calibrator`]
+//! streams calibration batches layer-by-layer collecting activation
+//! statistics and block IO pairs; [`CompressionPipeline`] runs scoring →
+//! outlier extraction → N:M masking → variance correction (through the L1
+//! kernel artifacts) and packs results into the sparse stores;
+//! [`EbftTrainer`] runs blockwise reconstruction fine-tuning; [`Trainer`]
+//! drives pre-training through the exported train-step artifact.
+
+mod calib;
+mod ebft;
+mod exec;
+mod metrics;
+mod pipeline;
+mod train;
+
+pub use calib::{BlockStats, CalibRecord, Calibrator};
+pub use ebft::{EbftConfig, EbftTrainer};
+pub use exec::{ModelExec, ParamLiterals};
+pub use metrics::Metrics;
+pub use pipeline::{CompressionPipeline, CompressionReport, LayerReport, PipelineSpec};
+pub use train::{TrainConfig, Trainer};

@@ -1,0 +1,105 @@
+//! Pre-training driver: loops the exported `train_step` (fwd + bwd +
+//! AdamW, all inside one HLO module) with a warmup+cosine LR schedule.
+//!
+//! This is how the stand-in models for LLaMA-2/3 and Mistral are produced
+//! (DESIGN.md §Substitutions) — the e2e example trains one and logs its
+//! loss curve to EXPERIMENTS.md.
+
+use crate::data::TokenStream;
+use crate::model::ParamSet;
+use crate::util::timer::Stopwatch;
+use crate::util::Rng;
+
+use super::exec::ModelExec;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub warmup: usize,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            lr: 3e-3,
+            warmup: 20,
+            log_every: 20,
+            seed: 1234,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Warmup then cosine decay to 10% of peak.
+    pub fn lr_at(&self, step: usize) -> f32 {
+        if step <= self.warmup {
+            return self.lr * step as f32 / self.warmup.max(1) as f32;
+        }
+        let t = (step - self.warmup) as f32 / (self.steps - self.warmup).max(1) as f32;
+        let cos = 0.5 * (1.0 + (std::f32::consts::PI * t.min(1.0)).cos());
+        self.lr * (0.1 + 0.9 * cos)
+    }
+}
+
+pub struct Trainer<'a> {
+    pub exec: &'a ModelExec,
+    pub config: TrainConfig,
+}
+
+impl<'a> Trainer<'a> {
+    /// Train `params` in place; returns the per-step loss curve.
+    pub fn run(&self, params: &mut ParamSet, stream: &TokenStream) -> crate::Result<Vec<f32>> {
+        let cfg = &self.exec.config;
+        let mut rng = Rng::new(self.config.seed);
+        let mut plits = self.exec.upload(params)?;
+        let zeros = params.zeros_like();
+        let mut m = self.exec.upload(&zeros)?;
+        let mut v = self.exec.upload(&zeros)?;
+
+        let mut losses = Vec::with_capacity(self.config.steps);
+        let sw = Stopwatch::start();
+        for step in 1..=self.config.steps {
+            let tokens = stream.sample_batch(cfg.batch, cfg.seq, &mut rng);
+            let lr = self.config.lr_at(step);
+            let loss = self
+                .exec
+                .train_step(&mut plits, &mut m, &mut v, step as f32, lr, &tokens)?;
+            losses.push(loss);
+            if step % self.config.log_every == 0 || step == 1 {
+                log::info!(
+                    "train step {step}/{}: loss {loss:.4} lr {lr:.2e} ({:.2}s/step)",
+                    self.config.steps,
+                    sw.secs() / step as f64
+                );
+            }
+            anyhow::ensure!(loss.is_finite(), "training diverged at step {step}");
+        }
+        *params = self.exec.download(&plits, params)?;
+        Ok(losses)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let c = TrainConfig {
+            steps: 100,
+            lr: 1.0,
+            warmup: 10,
+            log_every: 10,
+            seed: 0,
+        };
+        assert!(c.lr_at(1) < c.lr_at(10));
+        assert!((c.lr_at(10) - 1.0).abs() < 1e-6);
+        assert!(c.lr_at(50) < 1.0);
+        assert!(c.lr_at(100) >= 0.1 * 0.99);
+        assert!(c.lr_at(100) < c.lr_at(50));
+    }
+}

@@ -1,0 +1,137 @@
+//! Token batching: training windows, eval windows, and padded
+//! fixed-shape encodings for the zero-shot scorer.
+
+use super::tokenizer::PAD;
+use crate::util::Rng;
+
+/// A tokenized corpus with deterministic window sampling.
+#[derive(Clone, Debug)]
+pub struct TokenStream {
+    pub tokens: Vec<i32>,
+}
+
+impl TokenStream {
+    pub fn new(tokens: Vec<i32>) -> Self {
+        TokenStream { tokens }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Random (B, S+1) training batch, flattened row-major.
+    pub fn sample_batch(&self, b: usize, s: usize, rng: &mut Rng) -> Vec<i32> {
+        let w = s + 1;
+        assert!(self.tokens.len() > w, "corpus shorter than one window");
+        let mut out = Vec::with_capacity(b * w);
+        for _ in 0..b {
+            let start = rng.below(self.tokens.len() - w);
+            out.extend_from_slice(&self.tokens[start..start + w]);
+        }
+        out
+    }
+
+    /// Deterministic non-overlapping (B, S+1) eval batches covering the
+    /// stream prefix — the PPL protocol (stride = window, no overlap).
+    pub fn eval_batches(&self, b: usize, s: usize, max_batches: usize) -> Vec<Vec<i32>> {
+        let w = s + 1;
+        let n_windows = self.tokens.len() / w;
+        let n_batches = (n_windows / b).min(max_batches);
+        (0..n_batches)
+            .map(|bi| {
+                let mut flat = Vec::with_capacity(b * w);
+                for r in 0..b {
+                    let start = (bi * b + r) * w;
+                    flat.extend_from_slice(&self.tokens[start..start + w]);
+                }
+                flat
+            })
+            .collect()
+    }
+}
+
+/// Pack a list of variable-length sequences into a fixed (B, S) id matrix
+/// plus a 0/1 f32 mask selecting the *scored* positions of each row.
+///
+/// Each entry is `(ids, scored_from)`: positions `>= scored_from` (i.e.
+/// the completion tokens of a multiple-choice candidate) get mask 1 at
+/// their *target* offset. Rows are PAD-filled; sequences longer than
+/// `s + 1` are left-truncated (keeping the completion).
+pub fn pack_windows(
+    items: &[(Vec<i32>, usize)],
+    b: usize,
+    s: usize,
+) -> (Vec<i32>, Vec<f32>) {
+    assert!(items.len() <= b);
+    let w = s + 1;
+    let mut ids = vec![PAD; b * w];
+    let mut mask = vec![0.0f32; b * s];
+    for (r, (seq, scored_from)) in items.iter().enumerate() {
+        let (seq, scored_from) = if seq.len() > w {
+            let cut = seq.len() - w;
+            (&seq[cut..], scored_from.saturating_sub(cut))
+        } else {
+            (&seq[..], *scored_from)
+        };
+        ids[r * w..r * w + seq.len()].copy_from_slice(seq);
+        // target position t predicts token t+1, so token index j is scored
+        // at mask position j-1
+        for j in (*(&scored_from)).max(1)..seq.len() {
+            mask[r * s + (j - 1)] = 1.0;
+        }
+    }
+    (ids, mask)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_batch_shape() {
+        let ts = TokenStream::new((0..1000).collect());
+        let mut rng = Rng::new(1);
+        let batch = ts.sample_batch(4, 32, &mut rng);
+        assert_eq!(batch.len(), 4 * 33);
+    }
+
+    #[test]
+    fn eval_batches_nonoverlapping() {
+        let ts = TokenStream::new((0..330).collect());
+        let batches = ts.eval_batches(2, 10, 100);
+        // 330 / 11 = 30 windows -> 15 batches
+        assert_eq!(batches.len(), 15);
+        assert_eq!(batches[0][0], 0);
+        assert_eq!(batches[0][11], 11); // row 1 starts at next window
+        assert_eq!(batches[1][0], 22);
+    }
+
+    #[test]
+    fn pack_respects_scored_from() {
+        let items = vec![(vec![2, 10, 11, 12], 2usize)];
+        let (ids, mask) = pack_windows(&items, 2, 8);
+        assert_eq!(&ids[..4], &[2, 10, 11, 12]);
+        assert_eq!(ids[4], PAD);
+        // tokens 2,3 (values 11,12) are scored -> mask positions 1,2
+        assert_eq!(&mask[..4], &[0.0, 1.0, 1.0, 0.0]);
+        // second row fully padded / unscored
+        assert!(mask[8..].iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn pack_truncates_long_sequences_keeping_tail() {
+        let seq: Vec<i32> = (0..20).collect();
+        let (ids, mask) = pack_windows(&[(seq, 18)], 1, 8);
+        // keeps the last 9 tokens: 11..=19
+        assert_eq!(&ids[..9], &[11, 12, 13, 14, 15, 16, 17, 18, 19]);
+        // scored_from 18 shifts to 7: tokens at positions 7, 8 are scored,
+        // i.e. mask (target) positions 6 and 7
+        assert_eq!(mask[5], 0.0);
+        assert_eq!(mask[6], 1.0);
+        assert_eq!(mask[7], 1.0);
+    }
+}

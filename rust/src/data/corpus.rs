@@ -1,0 +1,125 @@
+//! Synthetic corpora: `wiki` (narrow, fact-dense) and `c4` (broad, noisy).
+//!
+//! Both verbalize the same [`super::world::World`] knowledge base but with
+//! different mixtures, mirroring the calibration-set contrast of the
+//! paper's Tables 2/3 (WikiText-2 vs C4): `wiki` is 75% fact sentences +
+//! 25% filler prose; `c4` is 35% facts + 65% Zipfian filler with a larger
+//! template variety, so its channel statistics are flatter and its
+//! calibration signal weaker — the same *qualitative* difference the paper
+//! exploits.
+
+use super::world::World;
+use crate::util::rng::ZipfSampler;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CorpusKind {
+    Wiki,
+    C4,
+}
+
+impl CorpusKind {
+    pub fn parse(s: &str) -> Option<CorpusKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "wiki" | "wikitext" | "wikitext2" => Some(CorpusKind::Wiki),
+            "c4" => Some(CorpusKind::C4),
+            _ => None,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            CorpusKind::Wiki => "wikitext2",
+            CorpusKind::C4 => "c4",
+        }
+    }
+}
+
+/// Generation parameters for one corpus draw.
+#[derive(Clone, Debug)]
+pub struct CorpusSpec {
+    pub kind: CorpusKind,
+    pub sentences: usize,
+    pub seed: u64,
+}
+
+impl CorpusSpec {
+    pub fn new(kind: CorpusKind, sentences: usize, seed: u64) -> Self {
+        CorpusSpec {
+            kind,
+            sentences,
+            seed,
+        }
+    }
+
+    /// Generate the corpus text (whitespace-tokenized words, "." sentence
+    /// separators).
+    pub fn generate(&self, world: &World) -> String {
+        let mut rng = Rng::new(self.seed ^ 0xC0_52_50_55_53);
+        let facts = world.fact_sentences();
+        let filler = World::filler_words();
+        let zipf = ZipfSampler::new(filler.len(), 1.05);
+        let fact_p = match self.kind {
+            CorpusKind::Wiki => 0.75,
+            CorpusKind::C4 => 0.35,
+        };
+        let mut out = String::with_capacity(self.sentences * 40);
+        for _ in 0..self.sentences {
+            if rng.f64() < fact_p {
+                out.push_str(&facts[rng.below(facts.len())]);
+            } else {
+                let len = match self.kind {
+                    CorpusKind::Wiki => 4 + rng.below(6),
+                    CorpusKind::C4 => 3 + rng.below(12),
+                };
+                for i in 0..len {
+                    if i > 0 {
+                        out.push(' ');
+                    }
+                    out.push_str(filler[zipf.sample(&mut rng)]);
+                }
+            }
+            out.push_str(" . ");
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let w = World::new(1);
+        let a = CorpusSpec::new(CorpusKind::Wiki, 100, 7).generate(&w);
+        let b = CorpusSpec::new(CorpusKind::Wiki, 100, 7).generate(&w);
+        assert_eq!(a, b);
+        let c = CorpusSpec::new(CorpusKind::Wiki, 100, 8).generate(&w);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn wiki_denser_in_facts_than_c4() {
+        let w = World::new(1);
+        let wiki = CorpusSpec::new(CorpusKind::Wiki, 2000, 3).generate(&w);
+        let c4 = CorpusSpec::new(CorpusKind::C4, 2000, 3).generate(&w);
+        // count a marker phrase that only fact templates produce
+        let count = |s: &str| s.matches("is made of").count();
+        assert!(count(&wiki) > count(&c4), "{} !> {}", count(&wiki), count(&c4));
+    }
+
+    #[test]
+    fn sentences_terminated() {
+        let w = World::new(2);
+        let text = CorpusSpec::new(CorpusKind::C4, 50, 1).generate(&w);
+        assert_eq!(text.matches(" . ").count(), 50);
+    }
+
+    #[test]
+    fn kind_parse() {
+        assert_eq!(CorpusKind::parse("WikiText2"), Some(CorpusKind::Wiki));
+        assert_eq!(CorpusKind::parse("c4"), Some(CorpusKind::C4));
+        assert_eq!(CorpusKind::parse("pile"), None);
+    }
+}

@@ -1,0 +1,23 @@
+//! Data substrate: synthetic corpora, tokenizer, batching, and the five
+//! zero-shot evaluation task generators.
+//!
+//! The paper calibrates on WikiText-2 / C4 and evaluates zero-shot on
+//! ARC-e/ARC-c/PIQA/Winogrande/HellaSwag. None of those ship with this
+//! sandbox, so this module builds the closest synthetic equivalents (see
+//! DESIGN.md §Substitutions): a deterministic *world model* of entities
+//! and attributes ([`world::World`]), two corpora with different
+//! statistics generated from it ([`corpus`]), and five multiple-choice
+//! task suites that query the same facts ([`tasks`]) using LM
+//! log-likelihood scoring exactly like lm-eval-harness.
+
+pub mod batch;
+pub mod corpus;
+pub mod tasks;
+pub mod tokenizer;
+pub mod world;
+
+pub use batch::{pack_windows, TokenStream};
+pub use corpus::{CorpusKind, CorpusSpec};
+pub use tasks::{McItem, TaskKind, ALL_TASKS};
+pub use tokenizer::Tokenizer;
+pub use world::World;

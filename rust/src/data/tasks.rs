@@ -1,0 +1,260 @@
+//! Five zero-shot multiple-choice task suites over the synthetic world —
+//! stand-ins for ARC-e, ARC-c, PIQA, Winogrande and HellaSwag with the
+//! same *scoring protocol* (LM log-likelihood of each candidate
+//! completion, length-normalized, argmin-nll wins).
+
+use super::world::{World, ABILITIES, COLORS, PLACES, SIZES, USES};
+use crate::util::Rng;
+
+/// One multiple-choice item: a context, N candidate completions, the
+/// correct index.
+#[derive(Clone, Debug)]
+pub struct McItem {
+    pub context: String,
+    pub choices: Vec<String>,
+    pub answer: usize,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    /// "what color is X" — factual recall, easy distractors (ARC-e)
+    ArcEasy,
+    /// material question with confusable distractors (ARC-c)
+    ArcChallenge,
+    /// tool-use affordance, 2 choices (PIQA)
+    Piqa,
+    /// referent disambiguation, 2 choices (Winogrande)
+    Winogrande,
+    /// sentence continuation, 4 choices (HellaSwag)
+    HellaSwag,
+}
+
+pub const ALL_TASKS: [TaskKind; 5] = [
+    TaskKind::ArcEasy,
+    TaskKind::ArcChallenge,
+    TaskKind::Piqa,
+    TaskKind::Winogrande,
+    TaskKind::HellaSwag,
+];
+
+impl TaskKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            TaskKind::ArcEasy => "arc_e",
+            TaskKind::ArcChallenge => "arc_c",
+            TaskKind::Piqa => "piqa",
+            TaskKind::Winogrande => "winogrande",
+            TaskKind::HellaSwag => "hellaswag",
+        }
+    }
+
+    pub fn n_choices(&self) -> usize {
+        match self {
+            TaskKind::Piqa | TaskKind::Winogrande => 2,
+            _ => 4,
+        }
+    }
+
+    /// Generate `n` deterministic items for this task over `world`.
+    pub fn generate(&self, world: &World, n: usize, seed: u64) -> Vec<McItem> {
+        let mut rng = Rng::new(seed ^ (*self as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        (0..n).map(|_| self.gen_one(world, &mut rng)).collect()
+    }
+
+    fn gen_one(&self, world: &World, rng: &mut Rng) -> McItem {
+        match self {
+            TaskKind::ArcEasy => {
+                let o = world.object(rng.below(world.objects.len()));
+                let mut choices = distractors(COLORS, o.color, 4, rng);
+                let answer = rng.below(4);
+                choices.insert(answer, o.color.to_string());
+                choices.truncate(4);
+                McItem {
+                    context: format!("the {} is", o.name),
+                    choices,
+                    answer,
+                }
+            }
+            TaskKind::ArcChallenge => {
+                // distractors = materials of *other* objects (confusable)
+                let oi = rng.below(world.objects.len());
+                let o = world.object(oi);
+                let mut pool: Vec<&str> = world
+                    .objects
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, x)| *i != oi && x.material != o.material)
+                    .map(|(_, x)| x.material)
+                    .collect();
+                pool.dedup();
+                let mut choices = distractors(&pool, o.material, 4, rng);
+                let answer = rng.below(4);
+                choices.insert(answer, o.material.to_string());
+                choices.truncate(4);
+                McItem {
+                    context: format!("the {} is made of", o.name),
+                    choices,
+                    answer,
+                }
+            }
+            TaskKind::Piqa => {
+                let oi = rng.below(world.objects.len());
+                let o = world.object(oi);
+                let wrong = loop {
+                    let w = USES[rng.below(USES.len())];
+                    if w != o.use_verb {
+                        break w;
+                    }
+                };
+                let answer = rng.below(2);
+                let mut choices = vec![wrong.to_string()];
+                choices.insert(answer, o.use_verb.to_string());
+                choices.truncate(2);
+                McItem {
+                    context: format!("people use the {} to", o.name),
+                    choices,
+                    answer,
+                }
+            }
+            TaskKind::Winogrande => {
+                // which animal has the named ability?
+                let ai = rng.below(world.animals.len());
+                let a = world.animal(ai);
+                let other = loop {
+                    let b = world.animal(rng.below(world.animals.len()));
+                    if b.ability != a.ability {
+                        break b;
+                    }
+                };
+                let answer = rng.below(2);
+                let mut choices = vec![other.name.to_string()];
+                choices.insert(answer, a.name.to_string());
+                choices.truncate(2);
+                McItem {
+                    context: format!("the animal that can {} is the", a.ability),
+                    choices,
+                    answer,
+                }
+            }
+            TaskKind::HellaSwag => {
+                let ai = rng.below(world.animals.len());
+                let a = world.animal(ai);
+                let truth = format!("lives in the {}", a.place);
+                let mut choices = Vec::new();
+                while choices.len() < 3 {
+                    let p = PLACES[rng.below(PLACES.len())];
+                    let cand = format!("lives in the {p}");
+                    if p != a.place && !choices.contains(&cand) {
+                        choices.push(cand);
+                    }
+                }
+                let answer = rng.below(4);
+                choices.insert(answer, truth);
+                choices.truncate(4);
+                McItem {
+                    context: format!("the {} is a {} animal that", a.name, a.size),
+                    choices,
+                    answer,
+                }
+            }
+        }
+    }
+}
+
+/// `count-1` distinct distractors ≠ answer, as owned strings.
+fn distractors(pool: &[&str], answer: &str, count: usize, rng: &mut Rng) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    let mut guard = 0;
+    while out.len() < count - 1 {
+        let c = pool[rng.below(pool.len())];
+        if c != answer && !out.iter().any(|x| x == c) {
+            out.push(c.to_string());
+        }
+        guard += 1;
+        if guard > 1000 {
+            // degenerate pool: fill with attribute words from other lists
+            for fallback in SIZES.iter().chain(ABILITIES) {
+                if out.len() >= count - 1 {
+                    break;
+                }
+                if *fallback != answer && !out.iter().any(|x| x == fallback) {
+                    out.push(fallback.to_string());
+                }
+            }
+            break;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::world::MATERIALS;
+
+    #[test]
+    fn all_tasks_generate_valid_items() {
+        let w = World::new(5);
+        for task in ALL_TASKS {
+            let items = task.generate(&w, 50, 11);
+            assert_eq!(items.len(), 50);
+            for it in &items {
+                assert_eq!(it.choices.len(), task.n_choices(), "{task:?}");
+                assert!(it.answer < it.choices.len());
+                // answer string must be unique among choices
+                let ans = &it.choices[it.answer];
+                assert_eq!(it.choices.iter().filter(|c| c == &ans).count(), 1);
+                assert!(!it.context.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let w = World::new(5);
+        let a = TaskKind::ArcEasy.generate(&w, 10, 3);
+        let b = TaskKind::ArcEasy.generate(&w, 10, 3);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.choices, y.choices);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+
+    #[test]
+    fn answers_are_world_consistent() {
+        let w = World::new(5);
+        for it in TaskKind::ArcEasy.generate(&w, 30, 7) {
+            // context "the X is" — the answer must be X's true color
+            let name = it.context.split_whitespace().nth(1).unwrap();
+            let obj = w.objects.iter().find(|o| o.name == name).unwrap();
+            assert_eq!(it.choices[it.answer], obj.color);
+        }
+    }
+
+    #[test]
+    fn answer_position_unbiased() {
+        let w = World::new(5);
+        let items = TaskKind::HellaSwag.generate(&w, 400, 13);
+        let mut counts = [0usize; 4];
+        for it in &items {
+            counts[it.answer] += 1;
+        }
+        for c in counts {
+            assert!(c > 50, "positions should be roughly uniform: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn distractor_materials_differ_from_answer() {
+        let w = World::new(5);
+        for it in TaskKind::ArcChallenge.generate(&w, 50, 17) {
+            for (i, c) in it.choices.iter().enumerate() {
+                if i != it.answer {
+                    assert_ne!(c, &it.choices[it.answer]);
+                    assert!(MATERIALS.contains(&c.as_str()));
+                }
+            }
+        }
+    }
+}

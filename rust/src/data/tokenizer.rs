@@ -1,0 +1,147 @@
+//! Word-level tokenizer with a frequency-built vocabulary.
+//!
+//! The synthetic corpora have a closed vocabulary of a few hundred words,
+//! so word-level tokenization (ids assigned by frequency rank, OOV → UNK)
+//! is faithful to how the paper's models see text while staying exactly
+//! reproducible. Special ids: 0 PAD, 1 UNK, 2 BOS, 3 EOS, 4 ".".
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const UNK: i32 = 1;
+pub const BOS: i32 = 2;
+pub const EOS: i32 = 3;
+pub const DOT: i32 = 4;
+const N_SPECIAL: usize = 5;
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab: HashMap<String, i32>,
+    words: Vec<String>,
+    pub vocab_size: usize,
+}
+
+impl Tokenizer {
+    /// Build from text: most frequent words get the smallest ids, capped
+    /// at `vocab_size` total entries (including specials).
+    pub fn fit(text: &str, vocab_size: usize) -> Tokenizer {
+        assert!(vocab_size > N_SPECIAL);
+        let mut freq: HashMap<&str, u64> = HashMap::new();
+        for w in text.split_whitespace() {
+            if w != "." {
+                *freq.entry(w).or_insert(0) += 1;
+            }
+        }
+        let mut by_freq: Vec<(&str, u64)> = freq.into_iter().collect();
+        // frequency desc, then lexicographic for determinism
+        by_freq.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(b.0)));
+        let mut vocab = HashMap::new();
+        let mut words = vec![
+            "<pad>".to_string(),
+            "<unk>".to_string(),
+            "<bos>".to_string(),
+            "<eos>".to_string(),
+            ".".to_string(),
+        ];
+        for (w, _) in by_freq.into_iter().take(vocab_size - N_SPECIAL) {
+            vocab.insert(w.to_string(), words.len() as i32);
+            words.push(w.to_string());
+        }
+        vocab.insert(".".to_string(), DOT);
+        Tokenizer {
+            vocab,
+            words,
+            vocab_size,
+        }
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace()
+            .map(|w| *self.vocab.get(w).unwrap_or(&UNK))
+            .collect()
+    }
+
+    /// Encode with BOS prefix and EOS suffix.
+    pub fn encode_sentence(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![BOS];
+        out.extend(self.encode(text));
+        out.push(EOS);
+        out
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        ids.iter()
+            .map(|&i| {
+                self.words
+                    .get(i as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("<bad>")
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.words.len()
+    }
+
+    /// Fraction of tokens in `text` that map to UNK.
+    pub fn oov_rate(&self, text: &str) -> f64 {
+        let ids = self.encode(text);
+        if ids.is_empty() {
+            return 0.0;
+        }
+        ids.iter().filter(|&&i| i == UNK).count() as f64 / ids.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fit_assigns_frequent_words_small_ids() {
+        let t = Tokenizer::fit("cat cat cat dog dog bird", 100);
+        let cat = t.encode("cat")[0];
+        let dog = t.encode("dog")[0];
+        let bird = t.encode("bird")[0];
+        assert!(cat < dog && dog < bird);
+        assert!(cat as usize >= 5);
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = Tokenizer::fit("the lynx lives in the cave . the ruby is red", 64);
+        let ids = t.encode("the ruby is red");
+        assert_eq!(t.decode(&ids), "the ruby is red");
+    }
+
+    #[test]
+    fn oov_maps_to_unk() {
+        let t = Tokenizer::fit("a b c", 32);
+        assert_eq!(t.encode("zzz"), vec![UNK]);
+        assert!(t.oov_rate("a zzz") == 0.5);
+    }
+
+    #[test]
+    fn vocab_cap_respected() {
+        let text: String = (0..100).map(|i| format!("w{i} ")).collect();
+        let t = Tokenizer::fit(&text, 20);
+        assert!(t.n_words() <= 20);
+    }
+
+    #[test]
+    fn sentence_wrapping() {
+        let t = Tokenizer::fit("x y", 32);
+        let ids = t.encode_sentence("x y");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), EOS);
+    }
+
+    #[test]
+    fn deterministic_ties() {
+        let a = Tokenizer::fit("b a c b a c", 32);
+        let b = Tokenizer::fit("b a c b a c", 32);
+        assert_eq!(a.encode("a b c"), b.encode("a b c"));
+    }
+}

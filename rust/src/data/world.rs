@@ -1,0 +1,190 @@
+//! The deterministic "world model" behind the synthetic corpora and
+//! evaluation tasks: a small knowledge base of entities with attributes.
+//!
+//! Corpora verbalize these facts (with Zipfian filler prose); the
+//! zero-shot tasks query the *same* facts, so a language model only scores
+//! above chance by actually learning the associations during training —
+//! giving the monotone quality signal the paper's accuracy tables need.
+
+use crate::util::Rng;
+
+pub const COLORS: &[&str] = &[
+    "red", "blue", "green", "yellow", "black", "white", "purple", "orange",
+];
+pub const MATERIALS: &[&str] = &[
+    "wood", "metal", "stone", "glass", "cloth", "clay", "bone", "leather",
+];
+pub const PLACES: &[&str] = &[
+    "forest", "river", "mountain", "desert", "valley", "cave", "meadow",
+    "island", "swamp", "canyon",
+];
+pub const ABILITIES: &[&str] = &["fly", "swim", "run", "climb", "dig", "jump"];
+pub const USES: &[&str] = &["cut", "carry", "build", "cook", "hunt", "write"];
+pub const SIZES: &[&str] = &["small", "large", "tiny", "huge"];
+
+pub const OBJECTS: &[&str] = &[
+    "ruby", "lantern", "hammer", "basket", "dagger", "kettle", "mirror",
+    "saddle", "anchor", "bell", "candle", "drum", "flute", "goblet",
+    "ladder", "needle",
+];
+pub const ANIMALS: &[&str] = &[
+    "falcon", "otter", "badger", "heron", "lynx", "viper", "marmot",
+    "ibex", "crane", "salmon", "beetle", "hare",
+];
+
+/// Attributes assigned to one object.
+#[derive(Clone, Debug)]
+pub struct ObjectFacts {
+    pub name: &'static str,
+    pub color: &'static str,
+    pub material: &'static str,
+    pub place: &'static str,
+    pub use_verb: &'static str,
+}
+
+/// Attributes assigned to one animal.
+#[derive(Clone, Debug)]
+pub struct AnimalFacts {
+    pub name: &'static str,
+    pub ability: &'static str,
+    pub place: &'static str,
+    pub size: &'static str,
+}
+
+/// The complete deterministic knowledge base.
+#[derive(Clone, Debug)]
+pub struct World {
+    pub objects: Vec<ObjectFacts>,
+    pub animals: Vec<AnimalFacts>,
+    pub seed: u64,
+}
+
+impl World {
+    /// Build a world from a seed. Attribute assignment is a deterministic
+    /// function of the seed, so corpora and tasks built from the same seed
+    /// agree on every fact.
+    pub fn new(seed: u64) -> World {
+        let mut rng = Rng::new(seed ^ 0x57_4F_52_4C_44); // "WORLD"
+        let objects = OBJECTS
+            .iter()
+            .map(|&name| ObjectFacts {
+                name,
+                color: COLORS[rng.below(COLORS.len())],
+                material: MATERIALS[rng.below(MATERIALS.len())],
+                place: PLACES[rng.below(PLACES.len())],
+                use_verb: USES[rng.below(USES.len())],
+            })
+            .collect();
+        let animals = ANIMALS
+            .iter()
+            .map(|&name| AnimalFacts {
+                name,
+                ability: ABILITIES[rng.below(ABILITIES.len())],
+                place: PLACES[rng.below(PLACES.len())],
+                size: SIZES[rng.below(SIZES.len())],
+            })
+            .collect();
+        World {
+            objects,
+            animals,
+            seed,
+        }
+    }
+
+    pub fn object(&self, i: usize) -> &ObjectFacts {
+        &self.objects[i % self.objects.len()]
+    }
+
+    pub fn animal(&self, i: usize) -> &AnimalFacts {
+        &self.animals[i % self.animals.len()]
+    }
+
+    /// All fact sentences, one per (entity, attribute) pair — the fact
+    /// vocabulary the corpora sample from.
+    pub fn fact_sentences(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for o in &self.objects {
+            out.push(format!("the {} is {}", o.name, o.color));
+            out.push(format!("the {} is made of {}", o.name, o.material));
+            out.push(format!("the {} was found in the {}", o.name, o.place));
+            out.push(format!("people use the {} to {}", o.name, o.use_verb));
+        }
+        for a in &self.animals {
+            out.push(format!("the {} can {}", a.name, a.ability));
+            out.push(format!("the {} lives in the {}", a.name, a.place));
+            out.push(format!("the {} is a {} animal", a.name, a.size));
+        }
+        out
+    }
+
+    /// Filler vocabulary (Zipf-weighted prose words).
+    pub fn filler_words() -> Vec<&'static str> {
+        let mut words = vec![
+            "the", "a", "and", "of", "in", "was", "is", "it", "that", "with",
+            "for", "as", "on", "by", "at", "from", "old", "long", "deep",
+            "bright", "quiet", "early", "people", "traveler", "story",
+            "village", "road", "winter", "summer", "morning", "evening",
+            "light", "shadow", "water", "wind", "fire", "earth", "walked",
+            "found", "carried", "made", "kept", "lost", "gave", "took",
+            "saw", "heard", "knew", "came", "went", "stood", "fell",
+        ];
+        words.extend(COLORS);
+        words.extend(PLACES);
+        words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = World::new(42);
+        let b = World::new(42);
+        for (x, y) in a.objects.iter().zip(&b.objects) {
+            assert_eq!(x.color, y.color);
+            assert_eq!(x.material, y.material);
+        }
+        let c = World::new(43);
+        let diff = a
+            .objects
+            .iter()
+            .zip(&c.objects)
+            .filter(|(x, y)| x.color != y.color)
+            .count();
+        assert!(diff > 0, "different seeds should differ");
+    }
+
+    #[test]
+    fn fact_count() {
+        let w = World::new(1);
+        assert_eq!(
+            w.fact_sentences().len(),
+            OBJECTS.len() * 4 + ANIMALS.len() * 3
+        );
+    }
+
+    #[test]
+    fn entity_names_unique() {
+        let mut names: Vec<&str> = OBJECTS.iter().chain(ANIMALS.iter()).copied().collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n);
+    }
+
+    #[test]
+    fn facts_reference_valid_attributes() {
+        let w = World::new(7);
+        for o in &w.objects {
+            assert!(COLORS.contains(&o.color));
+            assert!(MATERIALS.contains(&o.material));
+            assert!(PLACES.contains(&o.place));
+        }
+        for a in &w.animals {
+            assert!(ABILITIES.contains(&a.ability));
+            assert!(SIZES.contains(&a.size));
+        }
+    }
+}

@@ -1,0 +1,8 @@
+//! Evaluation harnesses: perplexity and zero-shot multiple-choice
+//! accuracy — the two metrics every table of the paper reports.
+
+mod ppl;
+mod zeroshot;
+
+pub use ppl::{perplexity, PplReport};
+pub use zeroshot::{zero_shot_accuracy, TaskReport, ZeroShotReport};

@@ -1,0 +1,40 @@
+//! Perplexity: exp(mean per-token NLL) over deterministic
+//! non-overlapping windows of a held-out stream — the WikiText-2/C4
+//! protocol of the paper's Tables 1/4/5/6.
+
+use crate::coordinator::{ModelExec, ParamLiterals};
+use crate::data::TokenStream;
+
+#[derive(Clone, Debug)]
+pub struct PplReport {
+    pub ppl: f64,
+    pub mean_nll: f64,
+    pub tokens: usize,
+    pub batches: usize,
+}
+
+/// Evaluate perplexity of `params` on up to `max_batches` windows.
+pub fn perplexity(
+    exec: &ModelExec,
+    params: &ParamLiterals,
+    stream: &TokenStream,
+    max_batches: usize,
+) -> crate::Result<PplReport> {
+    let cfg = &exec.config;
+    let batches = stream.eval_batches(cfg.batch, cfg.seq, max_batches);
+    anyhow::ensure!(!batches.is_empty(), "stream too short for evaluation");
+    let mut total_nll = 0.0f64;
+    let mut total_tokens = 0usize;
+    for batch in &batches {
+        let nll = exec.lm_nll(params, batch)?;
+        total_nll += nll.sum();
+        total_tokens += nll.len();
+    }
+    let mean = total_nll / total_tokens as f64;
+    Ok(PplReport {
+        ppl: mean.exp(),
+        mean_nll: mean,
+        tokens: total_tokens,
+        batches: batches.len(),
+    })
+}

@@ -1,0 +1,122 @@
+//! Zero-shot multiple-choice accuracy with LM log-likelihood scoring —
+//! the lm-eval-harness protocol used for the paper's ARC-e/ARC-c/PIQA/
+//! Winogrande/HellaSwag numbers (Tables 2/3/8).
+//!
+//! Each candidate completion is appended to the context; the candidate
+//! with the lowest *length-normalized* NLL over its completion tokens
+//! wins.  Items are packed into fixed-shape (B, S+1) batches (the aot
+//! graphs have static shapes), several choices per batch row.
+
+use crate::coordinator::{ModelExec, ParamLiterals};
+use crate::data::batch::pack_windows;
+use crate::data::tasks::{McItem, TaskKind, ALL_TASKS};
+use crate::data::{Tokenizer, World};
+
+#[derive(Clone, Debug)]
+pub struct TaskReport {
+    pub task: &'static str,
+    pub accuracy: f64,
+    pub n_items: usize,
+    pub chance: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct ZeroShotReport {
+    pub tasks: Vec<TaskReport>,
+}
+
+impl ZeroShotReport {
+    /// Mean accuracy across tasks — the headline number of Tables 2/3/8.
+    pub fn mean_accuracy(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        self.tasks.iter().map(|t| t.accuracy).sum::<f64>() / self.tasks.len() as f64
+    }
+}
+
+/// Score one item: per-choice length-normalized NLL.
+fn score_item(
+    exec: &ModelExec,
+    params: &ParamLiterals,
+    tok: &Tokenizer,
+    item: &McItem,
+) -> crate::Result<usize> {
+    let cfg = &exec.config;
+    let (b, s) = (cfg.batch, cfg.seq);
+    // encode every choice as (ids, scored_from)
+    let mut encoded: Vec<(Vec<i32>, usize)> = Vec::with_capacity(item.choices.len());
+    for choice in &item.choices {
+        let ctx = tok.encode(&item.context);
+        let full = format!("{} {}", item.context, choice);
+        let mut ids = vec![crate::data::tokenizer::BOS];
+        ids.extend(tok.encode(&full));
+        let scored_from = 1 + ctx.len();
+        encoded.push((ids, scored_from));
+    }
+    // pack into as few (B, S+1) executions as needed
+    let mut nlls = Vec::with_capacity(encoded.len());
+    for chunk in encoded.chunks(b) {
+        let (ids, mask) = pack_windows(chunk, b, s);
+        let nll = exec.lm_nll(params, &ids)?;
+        for (r, _) in chunk.iter().enumerate() {
+            let row = &nll.data()[r * s..(r + 1) * s];
+            let mrow = &mask[r * s..(r + 1) * s];
+            let total: f64 = row
+                .iter()
+                .zip(mrow)
+                .map(|(&n, &m)| n as f64 * m as f64)
+                .sum();
+            let count: f64 = mrow.iter().map(|&m| m as f64).sum();
+            nlls.push(if count > 0.0 { total / count } else { f64::INFINITY });
+        }
+    }
+    let best = nlls
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok(best)
+}
+
+/// Run one task suite.
+pub fn eval_task(
+    exec: &ModelExec,
+    params: &ParamLiterals,
+    tok: &Tokenizer,
+    world: &World,
+    task: TaskKind,
+    n_items: usize,
+    seed: u64,
+) -> crate::Result<TaskReport> {
+    let items = task.generate(world, n_items, seed);
+    let mut correct = 0usize;
+    for item in &items {
+        if score_item(exec, params, tok, item)? == item.answer {
+            correct += 1;
+        }
+    }
+    Ok(TaskReport {
+        task: task.label(),
+        accuracy: correct as f64 / n_items.max(1) as f64,
+        n_items,
+        chance: 1.0 / task.n_choices() as f64,
+    })
+}
+
+/// All five suites; `n_items` each.
+pub fn zero_shot_accuracy(
+    exec: &ModelExec,
+    params: &ParamLiterals,
+    tok: &Tokenizer,
+    world: &World,
+    n_items: usize,
+    seed: u64,
+) -> crate::Result<ZeroShotReport> {
+    let mut tasks = Vec::new();
+    for task in ALL_TASKS {
+        tasks.push(eval_task(exec, params, tok, world, task, n_items, seed)?);
+    }
+    Ok(ZeroShotReport { tasks })
+}

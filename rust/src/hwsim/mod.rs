@@ -1,0 +1,19 @@
+//! Hardware simulator: an analytic memory-traffic + compute-occupancy
+//! model for sparse GEMM, reproducing the paper's §2 hardware discussion
+//! (Table 1 bits/element, the 2× bandwidth argument, and the projected
+//! "~1.5–2× acceleration scaling with matrix size" for 2:4 — extended to
+//! 8:16).
+//!
+//! No silicon implements 8:16 (paper Limitations §8), so — per the
+//! substitution rule — speedups are *modeled*, not measured: a roofline
+//! over bytes moved (weights + pattern metadata + activations) and MACs,
+//! with a fixed per-kernel launch overhead. The model reproduces the
+//! qualitative shape the paper cites: bandwidth-bound large GEMMs
+//! approach 2×, small GEMMs are overhead-bound, and 8:16's extra metadata
+//! (0.875 vs 0.75 bits/elt) costs only ~1% of the dense traffic.
+
+mod speedup;
+mod traffic;
+
+pub use speedup::{speedup_curve, SpeedupPoint};
+pub use traffic::{GemmShape, HwModel, TrafficReport};

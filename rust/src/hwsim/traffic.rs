@@ -1,0 +1,194 @@
+//! Byte-exact traffic accounting and a roofline latency model for dense
+//! vs N:M-sparse GEMM.
+
+use crate::sparse::PatternInfo;
+
+/// `y (b, n) = x (b, k) @ W^T (n, k)` — the linear-layer GEMM.
+#[derive(Clone, Copy, Debug)]
+pub struct GemmShape {
+    pub b: usize,
+    pub n: usize,
+    pub k: usize,
+}
+
+impl GemmShape {
+    pub fn new(b: usize, n: usize, k: usize) -> Self {
+        GemmShape { b, n, k }
+    }
+
+    pub fn macs(&self) -> u64 {
+        (self.b * self.n * self.k) as u64
+    }
+}
+
+/// Device parameters (defaults approximate an A100-class accelerator; the
+/// *ratios* the paper argues about are device-independent).
+#[derive(Clone, Copy, Debug)]
+pub struct HwModel {
+    /// HBM bandwidth, bytes/s
+    pub bandwidth: f64,
+    /// dense MAC throughput, MAC/s (bf16)
+    pub compute: f64,
+    /// per-kernel launch overhead, s
+    pub overhead: f64,
+    /// can the MAC array skip zeros (sparse tensor cores)?
+    pub sparse_compute: bool,
+    /// weight element size in bytes (bf16)
+    pub elem_bytes: f64,
+}
+
+impl Default for HwModel {
+    fn default() -> Self {
+        HwModel {
+            bandwidth: 2.0e12,
+            compute: 156e12,
+            overhead: 5e-6,
+            sparse_compute: true,
+            elem_bytes: 2.0,
+        }
+    }
+}
+
+/// Traffic + latency for one GEMM under one storage format.
+#[derive(Clone, Debug)]
+pub struct TrafficReport {
+    pub weight_bytes: f64,
+    pub meta_bytes: f64,
+    pub act_bytes: f64,
+    pub macs: f64,
+    pub mem_time: f64,
+    pub compute_time: f64,
+    pub latency: f64,
+}
+
+impl HwModel {
+    /// Dense GEMM.
+    pub fn dense(&self, g: GemmShape) -> TrafficReport {
+        let weight_bytes = (g.n * g.k) as f64 * self.elem_bytes;
+        let act_bytes = ((g.b * g.k) + (g.b * g.n)) as f64 * self.elem_bytes;
+        let macs = g.macs() as f64;
+        self.finish(weight_bytes, 0.0, act_bytes, macs)
+    }
+
+    /// N:M sparse GEMM with codebook metadata (the paper's format).
+    pub fn sparse_nm(&self, g: GemmShape, n: usize, m: usize) -> TrafficReport {
+        let p = PatternInfo::new(n, m);
+        let kept = (g.n * g.k) as f64 * p.density();
+        let weight_bytes = kept * self.elem_bytes;
+        let meta_bytes = (g.n * g.k) as f64 * p.bits_per_element_codebook() / 8.0;
+        let act_bytes = ((g.b * g.k) + (g.b * g.n)) as f64 * self.elem_bytes;
+        let macs = if self.sparse_compute {
+            g.macs() as f64 * p.density()
+        } else {
+            g.macs() as f64
+        };
+        self.finish(weight_bytes, meta_bytes, act_bytes, macs)
+    }
+
+    /// Structured k:256 outlier side-stream (added to a sparse GEMM when
+    /// salient weights are recovered).
+    pub fn outlier_overhead(&self, g: GemmShape, k: usize) -> f64 {
+        // k values (bf16) + k byte indices per 256 elements
+        (g.n * g.k) as f64 * (k as f64 / 256.0) * (self.elem_bytes + 1.0)
+    }
+
+    /// CSR unstructured side-stream at the same salient budget.
+    pub fn csr_overhead(&self, g: GemmShape, k: usize) -> f64 {
+        // value (bf16) + u32 column index per nonzero + row pointers,
+        // plus irregular-access inefficiency (each nonzero pulls a
+        // partial cache line; model 2× amplification, Schulte et al. '23)
+        let nnz = (g.n * g.k) as f64 * (k as f64 / 256.0);
+        let raw = nnz * (self.elem_bytes + 4.0) + (g.n as f64 + 1.0) * 4.0;
+        raw * 2.0
+    }
+
+    fn finish(&self, weight_bytes: f64, meta_bytes: f64, act_bytes: f64, macs: f64) -> TrafficReport {
+        let bytes = weight_bytes + meta_bytes + act_bytes;
+        let mem_time = bytes / self.bandwidth;
+        let compute_time = macs / self.compute;
+        TrafficReport {
+            weight_bytes,
+            meta_bytes,
+            act_bytes,
+            macs,
+            mem_time,
+            compute_time,
+            latency: self.overhead + mem_time.max(compute_time),
+        }
+    }
+
+    /// End-to-end speedup of N:M sparse over dense for one GEMM.
+    pub fn speedup(&self, g: GemmShape, n: usize, m: usize) -> f64 {
+        self.dense(g).latency / self.sparse_nm(g, n, m).latency
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn large_gemm_speedup_approaches_2x() {
+        let hw = HwModel::default();
+        // decode-style batch=16: weight-bandwidth-bound
+        let g = GemmShape::new(16, 8192, 8192);
+        let s24 = hw.speedup(g, 2, 4);
+        let s816 = hw.speedup(g, 8, 16);
+        assert!(s24 > 1.7 && s24 < 2.0, "2:4 speedup {s24}");
+        assert!(s816 > 1.7 && s816 < 2.0, "8:16 speedup {s816}");
+        // 8:16 pays slightly more metadata than 2:4
+        assert!(s816 <= s24);
+    }
+
+    #[test]
+    fn small_gemm_overhead_bound() {
+        let hw = HwModel::default();
+        let g = GemmShape::new(1, 256, 256);
+        let s = hw.speedup(g, 2, 4);
+        assert!(s < 1.2, "small GEMM should see little speedup, got {s}");
+    }
+
+    #[test]
+    fn speedup_scales_with_size() {
+        // the paper's "~1.5-2x scaling with matrix size" claim
+        let hw = HwModel::default();
+        let sizes = [512usize, 1024, 2048, 4096, 8192];
+        let mut prev = 0.0;
+        for &d in &sizes {
+            let s = hw.speedup(GemmShape::new(8, d, d), 8, 16);
+            assert!(s >= prev - 1e-9, "monotone in size: {s} < {prev}");
+            prev = s;
+        }
+        assert!(prev > 1.5);
+    }
+
+    #[test]
+    fn metadata_bytes_match_table1() {
+        let hw = HwModel::default();
+        let g = GemmShape::new(1, 1024, 1024);
+        let r24 = hw.sparse_nm(g, 2, 4);
+        let r816 = hw.sparse_nm(g, 8, 16);
+        let bits24 = r24.meta_bytes * 8.0 / (1024.0 * 1024.0);
+        let bits816 = r816.meta_bytes * 8.0 / (1024.0 * 1024.0);
+        assert!((bits24 - 0.75).abs() < 1e-9);
+        assert!((bits816 - 0.875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn structured_outliers_cheaper_than_csr() {
+        let hw = HwModel::default();
+        let g = GemmShape::new(8, 4096, 4096);
+        for k in [4usize, 8, 16] {
+            assert!(hw.outlier_overhead(g, k) < hw.csr_overhead(g, k));
+        }
+    }
+
+    #[test]
+    fn flops_halved_with_sparse_compute() {
+        let hw = HwModel::default();
+        let g = GemmShape::new(64, 1024, 1024);
+        let d = hw.dense(g);
+        let s = hw.sparse_nm(g, 8, 16);
+        assert!((s.macs - d.macs * 0.5).abs() < 1.0);
+    }
+}

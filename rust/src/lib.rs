@@ -1,0 +1,39 @@
+//! # sparselm
+//!
+//! Reproduction of *"From 2:4 to 8:16 sparsity patterns in LLMs for Outliers
+//! and Weights with Variance Correction"* as a three-layer Rust + JAX +
+//! Pallas compression framework.
+//!
+//! * **Layer 1** (build-time Python): Pallas kernels for N:M mask selection,
+//!   RIA scoring, masked GEMM, outlier extraction and variance correction.
+//! * **Layer 2** (build-time Python): a LLaMA-style LM, its training step,
+//!   the per-layer pruning graphs and the EBFT block fine-tuning step — all
+//!   AOT-lowered to HLO text in `artifacts/`.
+//! * **Layer 3** (this crate): the production coordinator. It owns the
+//!   event loop, the sparse storage formats, calibration, the per-layer
+//!   pruning scheduler, EBFT orchestration, evaluation harnesses, the
+//!   hardware memory-traffic simulator and the CLI. Python never runs on
+//!   the request path: everything executes through PJRT
+//!   ([`runtime::Engine`]).
+//!
+//! Start with [`coordinator::CompressionPipeline`] for the paper's §4
+//! pipeline, [`sparse`] for the storage formats, and `examples/` for
+//! runnable entry points.
+
+pub mod bench;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod hwsim;
+pub mod model;
+pub mod pruning;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod sparse;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

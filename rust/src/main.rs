@@ -1,0 +1,8 @@
+//! `sparselm` binary — see `sparselm help`.
+
+fn main() {
+    if let Err(e) = sparselm::cli::main_entry() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

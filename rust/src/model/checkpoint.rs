@@ -1,0 +1,208 @@
+//! Binary checkpoint format (no serde offline): a small self-describing
+//! container for a [`ParamSet`].
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic  b"SPLM"  | version u32 | json_len u32 | json bytes (config+names)
+//! per tensor: rank u32, dims u64×rank, f32 data
+//! trailer: crc32-like checksum u64 over all tensor bytes
+//! ```
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::Context;
+
+use super::config::ModelConfig;
+use super::params::ParamSet;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 4] = b"SPLM";
+const VERSION: u32 = 1;
+
+fn config_json(cfg: &ModelConfig) -> Json {
+    Json::obj(vec![
+        ("name", Json::str(cfg.name.clone())),
+        ("dim", Json::num(cfg.dim as f64)),
+        ("n_layers", Json::num(cfg.n_layers as f64)),
+        ("n_heads", Json::num(cfg.n_heads as f64)),
+        ("n_kv_heads", Json::num(cfg.n_kv_heads as f64)),
+        ("hidden", Json::num(cfg.hidden as f64)),
+        ("vocab", Json::num(cfg.vocab as f64)),
+        ("seq", Json::num(cfg.seq as f64)),
+        ("batch", Json::num(cfg.batch as f64)),
+        ("rope_theta", Json::num(cfg.rope_theta)),
+        ("adam_b1", Json::num(cfg.adam_b1)),
+        ("adam_b2", Json::num(cfg.adam_b2)),
+        ("adam_eps", Json::num(cfg.adam_eps)),
+        ("weight_decay", Json::num(cfg.weight_decay)),
+    ])
+}
+
+fn config_from_json(j: &Json) -> ModelConfig {
+    let wrapped = Json::obj(vec![("config", j.clone())]);
+    ModelConfig::from_manifest(&wrapped)
+}
+
+/// FNV-1a over bytes — cheap integrity check for the weight payload.
+fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+pub fn save_checkpoint(path: &Path, params: &ParamSet) -> crate::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    let header = config_json(&params.config).to_string();
+    w.write_all(&(header.len() as u32).to_le_bytes())?;
+    w.write_all(header.as_bytes())?;
+
+    let mut checksum = 0xcbf29ce484222325u64;
+    for t in &params.tensors {
+        w.write_all(&(t.rank() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let bytes: &[u8] = unsafe {
+            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+        };
+        checksum = fnv1a(bytes, checksum);
+        w.write_all(bytes)?;
+    }
+    w.write_all(&checksum.to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_checkpoint(path: &Path) -> crate::Result<ParamSet> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut r = BufReader::new(f);
+
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic {magic:?}");
+    let mut u32b = [0u8; 4];
+    r.read_exact(&mut u32b)?;
+    let version = u32::from_le_bytes(u32b);
+    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    r.read_exact(&mut u32b)?;
+    let hlen = u32::from_le_bytes(u32b) as usize;
+    let mut hbytes = vec![0u8; hlen];
+    r.read_exact(&mut hbytes)?;
+    let header = Json::parse(std::str::from_utf8(&hbytes)?)
+        .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
+    let config = config_from_json(&header);
+
+    let names = config.param_names();
+    let mut tensors = Vec::with_capacity(names.len());
+    let mut checksum = 0xcbf29ce484222325u64;
+    let mut u64b = [0u8; 8];
+    for name in &names {
+        r.read_exact(&mut u32b)?;
+        let rank = u32::from_le_bytes(u32b) as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            r.read_exact(&mut u64b)?;
+            dims.push(u64::from_le_bytes(u64b) as usize);
+        }
+        anyhow::ensure!(
+            dims == config.param_shape(name),
+            "param {name}: checkpoint shape {dims:?} vs config {:?}",
+            config.param_shape(name)
+        );
+        let n: usize = dims.iter().product();
+        let mut bytes = vec![0u8; n * 4];
+        r.read_exact(&mut bytes)?;
+        checksum = fnv1a(&bytes, checksum);
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        tensors.push(Tensor::new(dims, data));
+    }
+    r.read_exact(&mut u64b)?;
+    let want = u64::from_le_bytes(u64b);
+    anyhow::ensure!(
+        want == checksum,
+        "checkpoint payload checksum mismatch (corrupt file?)"
+    );
+    Ok(ParamSet {
+        config,
+        names,
+        tensors,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "ckpt-test".into(),
+            dim: 64,
+            n_layers: 1,
+            n_heads: 2,
+            n_kv_heads: 2,
+            hidden: 128,
+            vocab: 128,
+            seq: 16,
+            batch: 2,
+            rope_theta: 1e4,
+            adam_b1: 0.9,
+            adam_b2: 0.95,
+            adam_eps: 1e-8,
+            weight_decay: 0.01,
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(7);
+        let ps = ParamSet::init(&cfg(), &mut rng);
+        let dir = std::env::temp_dir().join("sparselm-test-ckpt");
+        let path = dir.join("roundtrip.bin");
+        save_checkpoint(&path, &ps).unwrap();
+        let back = load_checkpoint(&path).unwrap();
+        assert_eq!(back.config, ps.config);
+        assert_eq!(back.names, ps.names);
+        for (a, b) in back.tensors.iter().zip(&ps.tensors) {
+            assert_eq!(a, b);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let mut rng = Rng::new(9);
+        let ps = ParamSet::init(&cfg(), &mut rng);
+        let dir = std::env::temp_dir().join("sparselm-test-ckpt");
+        let path = dir.join("corrupt.bin");
+        save_checkpoint(&path, &ps).unwrap();
+        // flip one payload byte
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(load_checkpoint(Path::new("/nonexistent/x.bin")).is_err());
+    }
+}

@@ -1,0 +1,184 @@
+//! Model configuration — mirrors `python/compile/configs.py` and is
+//! normally *read from the artifact manifest* so the two sides can never
+//! drift.
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub dim: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub hidden: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub rope_theta: f64,
+    pub adam_b1: f64,
+    pub adam_b2: f64,
+    pub adam_eps: f64,
+    pub weight_decay: f64,
+}
+
+impl ModelConfig {
+    /// Parse the `config` object of a model manifest.
+    pub fn from_manifest(raw: &Json) -> ModelConfig {
+        let c = raw.at("config");
+        let u = |k: &str| c.at(k).as_usize().unwrap();
+        let f = |k: &str| c.at(k).as_f64().unwrap();
+        ModelConfig {
+            name: c.at("name").as_str().unwrap().to_string(),
+            dim: u("dim"),
+            n_layers: u("n_layers"),
+            n_heads: u("n_heads"),
+            n_kv_heads: u("n_kv_heads"),
+            hidden: u("hidden"),
+            vocab: u("vocab"),
+            seq: u("seq"),
+            batch: u("batch"),
+            rope_theta: f("rope_theta"),
+            adam_b1: f("adam_b1"),
+            adam_b2: f("adam_b2"),
+            adam_eps: f("adam_eps"),
+            weight_decay: f("weight_decay"),
+        }
+    }
+
+    pub fn head_dim(&self) -> usize {
+        self.dim / self.n_heads
+    }
+
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim()
+    }
+
+    /// Flat parameter names in artifact order (contract with aot.py).
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = vec!["tok_emb".to_string()];
+        for i in 0..self.n_layers {
+            for p in super::params::BLOCK_PARAMS {
+                names.push(format!("blk{i}.{p}"));
+            }
+        }
+        names.push("ln_f".to_string());
+        names
+    }
+
+    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+        let (d, h, kv, v) = (self.dim, self.hidden, self.kv_dim(), self.vocab);
+        if name == "tok_emb" {
+            return vec![v, d];
+        }
+        if name == "ln_f" {
+            return vec![d];
+        }
+        let base = name.rsplit('.').next().unwrap();
+        match base {
+            "ln1" | "ln2" => vec![d],
+            "wq" | "wo" => vec![d, d],
+            "wk" | "wv" => vec![kv, d],
+            "wg" | "wu" => vec![h, d],
+            "wd" => vec![d, h],
+            _ => panic!("unknown param {name}"),
+        }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.param_names()
+            .iter()
+            .map(|n| self.param_shape(n).iter().product::<usize>())
+            .sum()
+    }
+
+    /// Distinct prunable linear shapes (rows, cols).
+    pub fn linear_shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes = vec![
+            (self.dim, self.dim),
+            (self.kv_dim(), self.dim),
+            (self.hidden, self.dim),
+            (self.dim, self.hidden),
+        ];
+        shapes.sort_unstable();
+        shapes.dedup();
+        shapes
+    }
+
+    /// Tokens per forward batch.
+    pub fn tokens_per_batch(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    pub fn test_config() -> ModelConfig {
+        ModelConfig {
+            name: "testcfg".into(),
+            dim: 256,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 2,
+            hidden: 512,
+            vocab: 1024,
+            seq: 64,
+            batch: 2,
+            rope_theta: 10000.0,
+            adam_b1: 0.9,
+            adam_b2: 0.95,
+            adam_eps: 1e-8,
+            weight_decay: 0.01,
+        }
+    }
+
+    #[test]
+    fn param_names_ordering() {
+        let cfg = test_config();
+        let names = cfg.param_names();
+        assert_eq!(names[0], "tok_emb");
+        assert_eq!(names[1], "blk0.ln1");
+        assert_eq!(names[9], "blk0.wd");
+        assert_eq!(names[10], "blk1.ln1");
+        assert_eq!(names.last().unwrap(), "ln_f");
+        assert_eq!(names.len(), 1 + 2 * 9 + 1);
+    }
+
+    #[test]
+    fn shapes_gqa() {
+        let cfg = test_config();
+        assert_eq!(cfg.head_dim(), 64);
+        assert_eq!(cfg.kv_dim(), 128);
+        assert_eq!(cfg.param_shape("blk0.wk"), vec![128, 256]);
+        assert_eq!(cfg.param_shape("blk1.wd"), vec![256, 512]);
+        assert_eq!(cfg.param_shape("tok_emb"), vec![1024, 256]);
+    }
+
+    #[test]
+    fn linear_shapes_deduped() {
+        let cfg = test_config();
+        let shapes = cfg.linear_shapes();
+        assert_eq!(
+            shapes,
+            vec![(128, 256), (256, 256), (256, 512), (512, 256)]
+        );
+    }
+
+    #[test]
+    fn from_manifest_roundtrip() {
+        let j = Json::parse(
+            r#"{"config": {"name": "x", "dim": 256, "n_layers": 4,
+                "n_heads": 4, "n_kv_heads": 4, "hidden": 512, "vocab": 2048,
+                "seq": 128, "batch": 4, "rope_theta": 10000.0,
+                "adam_b1": 0.9, "adam_b2": 0.95, "adam_eps": 1e-8,
+                "weight_decay": 0.01}}"#,
+        )
+        .unwrap();
+        let cfg = ModelConfig::from_manifest(&j);
+        assert_eq!(cfg.dim, 256);
+        assert_eq!(cfg.n_params(), cfg.param_names().iter()
+            .map(|n| cfg.param_shape(n).iter().product::<usize>()).sum::<usize>());
+    }
+}

@@ -1,0 +1,15 @@
+//! Model substrate: configuration, parameter registry, checkpoint IO.
+//!
+//! The architecture itself (fwd/bwd) lives in the L2 JAX graphs; this
+//! module owns the *weights* on the Rust side — naming, shapes, block
+//! structure, initialization mirroring `model.init_params`, and a binary
+//! checkpoint format so trained/compressed models round-trip without
+//! Python.
+
+mod checkpoint;
+mod config;
+mod params;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub use config::ModelConfig;
+pub use params::{ParamSet, BLOCK_LINEAR, BLOCK_PARAMS};

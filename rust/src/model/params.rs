@@ -1,0 +1,178 @@
+//! Parameter registry: the flat, named, artifact-ordered set of model
+//! tensors the coordinator owns and feeds to PJRT.
+
+use super::config::ModelConfig;
+use crate::tensor::Tensor;
+use crate::util::Rng;
+
+/// Per-block parameter order — the contract with `aot.py` / `configs.py`.
+pub const BLOCK_PARAMS: [&str; 9] =
+    ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "wu", "wd"];
+
+/// The maskable (prunable) linears within a block, in BLOCK_PARAMS order.
+pub const BLOCK_LINEAR: [&str; 7] = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+/// A model's parameters in flat artifact order.
+#[derive(Clone, Debug)]
+pub struct ParamSet {
+    pub config: ModelConfig,
+    pub names: Vec<String>,
+    pub tensors: Vec<Tensor>,
+}
+
+impl ParamSet {
+    /// Initialize like `model.init_params`: N(0, 1/fan_in) linears,
+    /// unit norm gains.
+    pub fn init(config: &ModelConfig, rng: &mut Rng) -> ParamSet {
+        let names = config.param_names();
+        let tensors = names
+            .iter()
+            .map(|n| {
+                let shape = config.param_shape(n);
+                if shape.len() == 1 {
+                    Tensor::ones(shape)
+                } else {
+                    let std = (shape[1] as f32).powf(-0.5);
+                    Tensor::randn(shape, std, rng)
+                }
+            })
+            .collect();
+        ParamSet {
+            config: config.clone(),
+            names,
+            tensors,
+        }
+    }
+
+    /// Heavy-tailed init used by pruning benches when no trained
+    /// checkpoint is required: realistic outlier structure without a
+    /// training run.
+    pub fn init_outliers(config: &ModelConfig, rng: &mut Rng) -> ParamSet {
+        let mut ps = ParamSet::init(config, rng);
+        for (name, t) in ps.names.clone().iter().zip(ps.tensors.iter_mut()) {
+            let shape = config.param_shape(name);
+            if shape.len() == 2 && name != "tok_emb" {
+                let std = (shape[1] as f32).powf(-0.5);
+                *t = Tensor::randn_outliers(shape, std, 0.005, 8.0, rng);
+            }
+        }
+        ps
+    }
+
+    pub fn index_of(&self, name: &str) -> usize {
+        self.names
+            .iter()
+            .position(|n| n == name)
+            .unwrap_or_else(|| panic!("unknown param {name}"))
+    }
+
+    pub fn get(&self, name: &str) -> &Tensor {
+        &self.tensors[self.index_of(name)]
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> &mut Tensor {
+        let i = self.index_of(name);
+        &mut self.tensors[i]
+    }
+
+    /// Parameter indices of block `b` in BLOCK_PARAMS order.
+    pub fn block_indices(&self, b: usize) -> Vec<usize> {
+        let base = 1 + b * BLOCK_PARAMS.len();
+        (base..base + BLOCK_PARAMS.len()).collect()
+    }
+
+    /// (name, index) of every prunable linear weight, block-major.
+    pub fn linear_indices(&self) -> Vec<(String, usize)> {
+        let mut out = Vec::new();
+        for b in 0..self.config.n_layers {
+            for p in BLOCK_LINEAR {
+                let name = format!("blk{b}.{p}");
+                let idx = self.index_of(&name);
+                out.push((name, idx));
+            }
+        }
+        out
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+
+    /// Zero-filled clone (optimizer state).
+    pub fn zeros_like(&self) -> ParamSet {
+        ParamSet {
+            config: self.config.clone(),
+            names: self.names.clone(),
+            tensors: self
+                .tensors
+                .iter()
+                .map(|t| Tensor::zeros(t.shape().to_vec()))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            dim: 256,
+            n_layers: 2,
+            n_heads: 4,
+            n_kv_heads: 4,
+            hidden: 512,
+            vocab: 512,
+            seq: 32,
+            batch: 2,
+            rope_theta: 1e4,
+            adam_b1: 0.9,
+            adam_b2: 0.95,
+            adam_eps: 1e-8,
+            weight_decay: 0.01,
+        }
+    }
+
+    #[test]
+    fn init_shapes_and_scales() {
+        let mut rng = Rng::new(1);
+        let ps = ParamSet::init(&cfg(), &mut rng);
+        assert_eq!(ps.names.len(), ps.tensors.len());
+        assert_eq!(ps.get("ln_f").data(), &vec![1.0f32; 256][..]);
+        let wq = ps.get("blk0.wq");
+        assert_eq!(wq.shape(), &[256, 256]);
+        // std ≈ 1/16
+        assert!((wq.var().sqrt() - 1.0 / 16.0).abs() < 0.005);
+        assert_eq!(ps.n_params(), cfg().n_params());
+    }
+
+    #[test]
+    fn block_indices_align_with_names() {
+        let mut rng = Rng::new(2);
+        let ps = ParamSet::init(&cfg(), &mut rng);
+        let idx = ps.block_indices(1);
+        assert_eq!(ps.names[idx[0]], "blk1.ln1");
+        assert_eq!(ps.names[idx[8]], "blk1.wd");
+    }
+
+    #[test]
+    fn linear_indices_cover_all_blocks() {
+        let mut rng = Rng::new(3);
+        let ps = ParamSet::init(&cfg(), &mut rng);
+        let lins = ps.linear_indices();
+        assert_eq!(lins.len(), 2 * 7);
+        assert!(lins.iter().all(|(n, i)| &ps.names[*i] == n));
+    }
+
+    #[test]
+    fn outlier_init_has_heavier_tails() {
+        let mut rng = Rng::new(4);
+        let a = ParamSet::init(&cfg(), &mut rng);
+        let b = ParamSet::init_outliers(&cfg(), &mut rng);
+        let am = a.get("blk0.wq").abs_max();
+        let bm = b.get("blk0.wq").abs_max();
+        assert!(bm > am * 2.0, "{bm} !> {am}*2");
+    }
+}

@@ -1,0 +1,154 @@
+//! Exact top-N per (1, M) block mask selection — host mirror of the
+//! `nm_prune` Pallas kernel, including its tie semantics (stable
+//! descending order: the earlier index wins ties).
+
+use crate::tensor::Tensor;
+
+/// Keep the `n` highest-scoring entries of every `(1, m)` block.
+pub fn mask_topn_per_block(score: &Tensor, n: usize, m: usize) -> Tensor {
+    let (rows, cols) = score.dims2();
+    assert!(cols % m == 0, "cols {cols} not divisible by m {m}");
+    assert!(n <= m);
+    let mut out = vec![0.0f32; rows * cols];
+    // (perf) selection instead of a full stable sort: keep the running
+    // top-n in a tiny insertion buffer — blocks are small (m ≤ 256, and
+    // n ≤ m), and the stable-descending tie rule ("earlier index wins",
+    // matching jnp.argsort(-s, stable=True)) falls out of strict `>`
+    // comparisons during insertion. ~3× faster than sort_by on the
+    // per-layer prune hot path (EXPERIMENTS.md §Perf).
+    let mut top: Vec<usize> = Vec::with_capacity(n);
+    for r in 0..rows {
+        let srow = score.row(r);
+        for b in 0..cols / m {
+            let blk = &srow[b * m..(b + 1) * m];
+            top.clear();
+            for j in 0..m {
+                let s = blk[j];
+                if top.len() == n {
+                    // full: compare against the current minimum (last)
+                    if !(s > blk[top[n - 1]]) {
+                        continue;
+                    }
+                    top.pop();
+                }
+                // insert j before the first strictly-smaller entry,
+                // after any equal entry (stable: earlier index first)
+                let pos = top.partition_point(|&k| blk[k] >= s);
+                top.insert(pos, j);
+            }
+            for &i in &top {
+                out[r * cols + b * m + i] = 1.0;
+            }
+        }
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+/// N:M selection with already-salient positions excluded from the budget:
+/// their score is treated as -inf, and they are never kept (mirrors
+/// `mask_excluding_graph`).
+pub fn mask_excluding(score: &Tensor, excl: &Tensor, n: usize, m: usize) -> Tensor {
+    assert_eq!(score.shape(), excl.shape());
+    let masked = score.zip(excl, |s, e| if e > 0.0 { f32::NEG_INFINITY } else { s });
+    let keep = mask_topn_per_block(&masked, n, m);
+    keep.zip(excl, |k, e| k * (1.0 - e))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::propcheck::{check, Gen};
+    use crate::util::Rng;
+
+    #[test]
+    fn exact_budget() {
+        let mut rng = Rng::new(1);
+        let s = Tensor::randn(vec![16, 128], 1.0, &mut rng);
+        for (n, m) in [(2usize, 4usize), (4, 8), (8, 16), (16, 32)] {
+            let mask = mask_topn_per_block(&s, n, m);
+            for r in 0..16 {
+                for b in 0..128 / m {
+                    let cnt = mask.row(r)[b * m..(b + 1) * m]
+                        .iter()
+                        .filter(|&&x| x != 0.0)
+                        .count();
+                    assert_eq!(cnt, n);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn keeps_largest() {
+        let s = Tensor::new(vec![1, 4], vec![0.1, 0.9, 0.5, 0.2]);
+        let mask = mask_topn_per_block(&s, 2, 4);
+        assert_eq!(mask.data(), &[0., 1., 1., 0.]);
+    }
+
+    #[test]
+    fn tie_break_prefers_earlier_index() {
+        let s = Tensor::ones(vec![1, 16]);
+        let mask = mask_topn_per_block(&s, 8, 16);
+        let want: Vec<f32> = (0..16).map(|i| if i < 8 { 1.0 } else { 0.0 }).collect();
+        assert_eq!(mask.data(), &want[..]);
+    }
+
+    #[test]
+    fn excluding_never_keeps_salient() {
+        let mut rng = Rng::new(3);
+        let s = Tensor::randn(vec![8, 256], 1.0, &mut rng).map(f32::abs);
+        let excl = mask_topn_per_block(&s, 16, 256);
+        let keep = mask_excluding(&s, &excl, 8, 16);
+        for (k, e) in keep.data().iter().zip(excl.data()) {
+            assert!(!(*k != 0.0 && *e != 0.0));
+        }
+    }
+
+    #[test]
+    fn excluding_budget_adapts() {
+        // if a 16-block is fully salient, nothing else is kept there
+        let s = Tensor::ones(vec![1, 32]);
+        let mut e = vec![0.0f32; 32];
+        for j in 0..16 {
+            e[j] = 1.0;
+        }
+        let excl = Tensor::new(vec![1, 32], e);
+        let keep = mask_excluding(&s, &excl, 8, 16);
+        let first: f32 = keep.data()[..16].iter().sum();
+        let second: f32 = keep.data()[16..].iter().sum();
+        assert_eq!(first, 0.0);
+        assert_eq!(second, 8.0);
+    }
+
+    #[test]
+    fn property_mask_matches_sort_definition() {
+        check("mask keeps exactly the top-n", 30, |g: &mut Gen| {
+            let (n, m) = *g.choose(&[(2usize, 4usize), (4, 8), (8, 16)]);
+            let rows = g.int(1, 8);
+            let blocks = g.int(1, 6);
+            let cols = blocks * m;
+            let s = Tensor::new(vec![rows, cols], g.vec_normal(rows * cols));
+            let mask = mask_topn_per_block(&s, n, m);
+            for r in 0..rows {
+                for b in 0..blocks {
+                    let blk = &s.row(r)[b * m..(b + 1) * m];
+                    let mblk = &mask.row(r)[b * m..(b + 1) * m];
+                    let kept_min = blk
+                        .iter()
+                        .zip(mblk)
+                        .filter(|(_, &k)| k != 0.0)
+                        .fold(f32::INFINITY, |a, (&x, _)| a.min(x));
+                    let drop_max = blk
+                        .iter()
+                        .zip(mblk)
+                        .filter(|(_, &k)| k == 0.0)
+                        .fold(f32::NEG_INFINITY, |a, (&x, _)| a.max(x));
+                    if kept_min < drop_max {
+                        return Err(format!("block ({r},{b}): kept {kept_min} < dropped {drop_max}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

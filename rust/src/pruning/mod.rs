@@ -1,0 +1,256 @@
+//! Rust mirrors of the pruning math (L1 kernels have the same semantics).
+//!
+//! The coordinator normally runs scoring/masking through the Pallas HLO
+//! artifacts; these host implementations serve three purposes: (1) they
+//! cross-validate the artifacts in integration tests (same numbers from
+//! two independent implementations), (2) they let unit tests and benches
+//! run without PJRT, and (3) they prune matrices whose shapes have no
+//! exported artifact.
+//!
+//! Semantics are locked to `python/compile/kernels/ref.py` — including tie
+//! handling (stable descending order, earlier index wins).
+
+mod mask;
+pub mod owl;
+mod score;
+pub mod sparsegpt;
+mod sq;
+mod vc;
+
+pub use mask::{mask_excluding, mask_topn_per_block};
+pub use owl::{layer_outlier_distribution, owl_allocate, LayerOutlierStats, OwlAllocation};
+pub use score::{magnitude_score, ria_score, wanda_score, PruneMethod};
+pub use sparsegpt::{sparsegpt_prune, Hessian, SparseGptConfig, SparseGptResult};
+pub use sq::{equalize, sq_scales};
+pub use vc::{variance_correct, VcMode, VC_EPS};
+
+use crate::tensor::Tensor;
+
+pub const DEFAULT_ALPHA: f32 = 0.5;
+
+/// Everything the scoring path needs to know about a layer's input
+/// activations, accumulated over the calibration set.
+#[derive(Clone, Debug)]
+pub struct ActStats {
+    /// per-channel max |x| (SmoothQuant statistic)
+    pub colmax: Vec<f32>,
+    /// per-channel L2 norm (RIA/Wanda statistic)
+    pub l2: Vec<f32>,
+}
+
+impl ActStats {
+    pub fn new(cols: usize) -> Self {
+        ActStats {
+            colmax: vec![0.0; cols],
+            l2: vec![0.0; cols],
+        }
+    }
+
+    /// Fold another batch's statistics in (max for colmax, RMS-combine
+    /// for l2: norms over concatenated batches compose as sqrt(a²+b²)).
+    pub fn merge(&mut self, colmax: &[f32], l2: &[f32]) {
+        assert_eq!(self.colmax.len(), colmax.len());
+        for (a, &b) in self.colmax.iter_mut().zip(colmax) {
+            *a = a.max(b);
+        }
+        for (a, &b) in self.l2.iter_mut().zip(l2) {
+            *a = (*a * *a + b * b).sqrt();
+        }
+    }
+
+    /// Uniform statistics (used when calibration is disabled).
+    pub fn uniform(cols: usize) -> Self {
+        ActStats {
+            colmax: vec![1.0; cols],
+            l2: vec![1.0; cols],
+        }
+    }
+}
+
+/// Configuration of one prune pass over one weight matrix (§4 pipeline).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PruneSpec {
+    pub method: PruneMethod,
+    /// N:M pattern for non-salient weights
+    pub n: usize,
+    pub m: usize,
+    /// structured outlier pattern (k per 256); 0 disables outlier recovery
+    pub k_outlier: usize,
+    pub m_outlier: usize,
+    pub use_sq: bool,
+    pub use_vc: bool,
+    pub alpha: f32,
+}
+
+impl PruneSpec {
+    pub fn new(n: usize, m: usize) -> Self {
+        PruneSpec {
+            method: PruneMethod::Ria,
+            n,
+            m,
+            k_outlier: 0,
+            m_outlier: 256,
+            use_sq: true,
+            use_vc: true,
+            alpha: DEFAULT_ALPHA,
+        }
+    }
+
+    pub fn method(mut self, method: PruneMethod) -> Self {
+        self.method = method;
+        self
+    }
+
+    pub fn outliers(mut self, k: usize) -> Self {
+        self.k_outlier = k;
+        self
+    }
+
+    pub fn sq(mut self, on: bool) -> Self {
+        self.use_sq = on;
+        self
+    }
+
+    pub fn vc(mut self, on: bool) -> Self {
+        self.use_vc = on;
+        self
+    }
+
+    pub fn label(&self) -> String {
+        let mut s = format!("{:?}", self.method).to_lowercase();
+        if self.use_sq {
+            s.push_str("+sq");
+        }
+        if self.use_vc {
+            s.push_str("+vc");
+        }
+        s.push_str(&format!(" {}:{}", self.n, self.m));
+        if self.k_outlier > 0 {
+            s.push_str(&format!(" o{}:{}", self.k_outlier, self.m_outlier));
+        }
+        s
+    }
+}
+
+/// Output of a per-layer prune: the corrected non-salient weights, the
+/// keep mask, and the salient mask (`w_eff = w_ns + w * omask`).
+pub struct PruneResult {
+    pub w_ns: Tensor,
+    pub keep: Tensor,
+    pub omask: Tensor,
+}
+
+/// Host-side reference implementation of the full §4 per-layer pipeline —
+/// mirrors `prune_layer_ref` in the Python oracle exactly.
+pub fn prune_layer(w: &Tensor, stats: &ActStats, spec: &PruneSpec) -> PruneResult {
+    let w_metric = if spec.use_sq {
+        equalize(w, &stats.colmax)
+    } else {
+        w.clone()
+    };
+    let score = match spec.method {
+        PruneMethod::Ria => ria_score(&w_metric, &stats.l2, spec.alpha),
+        PruneMethod::Magnitude => magnitude_score(&w_metric),
+        PruneMethod::Wanda => wanda_score(&w_metric, &stats.l2),
+    };
+
+    let (rows, cols) = w.dims2();
+    let omask = if spec.k_outlier > 0 {
+        mask_topn_per_block(&score, spec.k_outlier, spec.m_outlier)
+    } else {
+        Tensor::zeros(vec![rows, cols])
+    };
+
+    let keep = mask_excluding(&score, &omask, spec.n, spec.m);
+    let mut w_ns = w.mul(&keep);
+    if spec.use_vc {
+        let dense_ref = w.zip(&omask, |x, o| x * (1.0 - o));
+        w_ns = variance_correct(&w_ns, &dense_ref, VcMode::Global);
+    }
+    PruneResult { w_ns, keep, omask }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn setup(rows: usize, cols: usize) -> (Tensor, ActStats) {
+        let mut rng = Rng::new(77);
+        let w = Tensor::randn_outliers(vec![rows, cols], 0.05, 0.01, 8.0, &mut rng);
+        let mut stats = ActStats::new(cols);
+        let colmax: Vec<f32> = (0..cols).map(|_| rng.f32() * 3.0 + 0.1).collect();
+        let l2: Vec<f32> = (0..cols).map(|_| rng.f32() * 5.0 + 0.1).collect();
+        stats.merge(&colmax, &l2);
+        (w, stats)
+    }
+
+    #[test]
+    fn budget_no_outliers() {
+        let (w, stats) = setup(32, 512);
+        let spec = PruneSpec::new(8, 16);
+        let r = prune_layer(&w, &stats, &spec);
+        let kept = r.keep.data().iter().filter(|&&x| x != 0.0).count();
+        assert_eq!(kept, 32 * 512 / 2);
+        assert_eq!(r.omask.count_nonzero(), 0);
+    }
+
+    #[test]
+    fn budget_with_outliers_disjoint() {
+        let (w, stats) = setup(32, 512);
+        let spec = PruneSpec::new(2, 4).outliers(8);
+        let r = prune_layer(&w, &stats, &spec);
+        // salient and kept never overlap
+        let overlap = r
+            .keep
+            .data()
+            .iter()
+            .zip(r.omask.data())
+            .filter(|(&k, &o)| k != 0.0 && o != 0.0)
+            .count();
+        assert_eq!(overlap, 0);
+        assert_eq!(r.omask.count_nonzero(), 32 * 2 * 8);
+    }
+
+    #[test]
+    fn vc_restores_variance_scale() {
+        let (w, stats) = setup(64, 512);
+        let with = prune_layer(&w, &stats, &PruneSpec::new(2, 4).vc(true));
+        let without = prune_layer(&w, &stats, &PruneSpec::new(2, 4).vc(false));
+        let var_d = w.var();
+        let dv_with = (with.w_ns.var() - var_d).abs();
+        let dv_without = (without.w_ns.var() - var_d).abs();
+        assert!(dv_with < dv_without, "{dv_with} !< {dv_without}");
+    }
+
+    #[test]
+    fn methods_give_different_masks() {
+        let (w, stats) = setup(32, 512);
+        let a = prune_layer(&w, &stats, &PruneSpec::new(8, 16).method(PruneMethod::Ria));
+        let b = prune_layer(
+            &w,
+            &stats,
+            &PruneSpec::new(8, 16).method(PruneMethod::Magnitude).sq(false),
+        );
+        assert_ne!(a.keep, b.keep);
+    }
+
+    #[test]
+    fn act_stats_merge_semantics() {
+        let mut s = ActStats::new(2);
+        s.merge(&[1.0, 5.0], &[3.0, 4.0]);
+        s.merge(&[2.0, 1.0], &[4.0, 3.0]);
+        assert_eq!(s.colmax, vec![2.0, 5.0]);
+        assert!((s.l2[0] - 5.0).abs() < 1e-6);
+        assert!((s.l2[1] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spec_labels() {
+        assert_eq!(PruneSpec::new(8, 16).label(), "ria+sq+vc 8:16");
+        assert_eq!(
+            PruneSpec::new(2, 4).sq(false).vc(false).outliers(4).label(),
+            "ria 2:4 o4:256"
+        );
+    }
+}

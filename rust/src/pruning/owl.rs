@@ -1,0 +1,246 @@
+//! OWL — Outlier-Weighed Layerwise sparsity (Yin et al. 2023).
+//!
+//! The paper's related work observes that uniform per-layer sparsity is
+//! suboptimal: layers whose weight distributions carry more outliers are
+//! more damaged by pruning. OWL measures a per-layer **Layer Outlier
+//! Distribution** (the fraction of entries whose magnitude exceeds
+//! `theta ×` the layer mean |W|) and assigns *lower* sparsity to
+//! outlier-heavy layers while holding the global budget fixed.
+//!
+//! In the N:M world of this paper the allocation is over patterns with a
+//! shared `M`: each layer gets `n_l : M` where `Σ n_l·size_l / (M·Σ size_l)`
+//! equals the target keep fraction. [`owl_allocate`] performs the
+//! water-filling; the ablation bench `a1_owl` contrasts it with uniform
+//! N:M.
+
+use crate::tensor::Tensor;
+
+/// Per-layer outlier statistics driving the allocation.
+#[derive(Clone, Debug)]
+pub struct LayerOutlierStats {
+    /// layer label (diagnostics only)
+    pub name: String,
+    /// number of weight entries
+    pub size: usize,
+    /// fraction of entries with |w| > theta * mean|w|
+    pub lod: f64,
+}
+
+/// Compute the Layer Outlier Distribution of one weight matrix:
+/// `mean(|w| > theta * mean(|w|))` — OWL's D_i statistic.
+pub fn layer_outlier_distribution(w: &Tensor, theta: f32) -> f64 {
+    assert!(theta > 0.0, "theta must be positive");
+    let mean_abs = w.data().iter().map(|x| x.abs() as f64).sum::<f64>()
+        / w.len().max(1) as f64;
+    let thr = theta as f64 * mean_abs;
+    if w.is_empty() {
+        return 0.0;
+    }
+    w.data().iter().filter(|x| (x.abs() as f64) > thr).count() as f64 / w.len() as f64
+}
+
+/// One layer's allocation result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OwlAllocation {
+    pub name: String,
+    /// kept values per M-block for this layer
+    pub n: usize,
+    pub m: usize,
+}
+
+/// Allocate per-layer `n_l : m` patterns from outlier statistics.
+///
+/// Layers are granted keep-slots proportional to
+/// `target_keep + lambda * (lod_l - mean_lod)` (OWL's shifted allocation),
+/// clamped to `[n_min, m]`, then greedily adjusted ±1 slot at a time —
+/// moving the layer with the largest rounding slack — until the exact
+/// global weight budget `round(target_keep * Σ size)` is met.
+pub fn owl_allocate(
+    stats: &[LayerOutlierStats],
+    m: usize,
+    target_keep: f64,
+    lambda: f64,
+    n_min: usize,
+) -> Vec<OwlAllocation> {
+    assert!(m > 0 && n_min <= m);
+    assert!(
+        (0.0..=1.0).contains(&target_keep),
+        "target_keep {target_keep} out of range"
+    );
+    if stats.is_empty() {
+        return Vec::new();
+    }
+    let mean_lod = stats.iter().map(|s| s.lod).sum::<f64>() / stats.len() as f64;
+    let total: usize = stats.iter().map(|s| s.size).sum();
+    let budget_slots = (target_keep * total as f64).round() as i64;
+
+    // ideal fractional keep per layer, clamped
+    let ideal: Vec<f64> = stats
+        .iter()
+        .map(|s| {
+            let k = target_keep + lambda * (s.lod - mean_lod);
+            k.clamp(n_min as f64 / m as f64, 1.0)
+        })
+        .collect();
+    // integer n per layer by rounding
+    let mut ns: Vec<i64> = ideal
+        .iter()
+        .map(|&k| ((k * m as f64).round() as i64).clamp(n_min as i64, m as i64))
+        .collect();
+
+    let slots = |ns: &[i64]| -> i64 {
+        ns.iter()
+            .zip(stats)
+            .map(|(&n, s)| n * (s.size / m) as i64)
+            .sum()
+    };
+
+    // greedy repair toward the exact global budget: each step applies the
+    // single ±1 move that most reduces the absolute slot residual (ties
+    // broken toward the layer whose fractional ideal most wants the
+    // move). Residual strictly decreases, so this terminates.
+    loop {
+        let res = slots(&ns) - budget_slots;
+        if res == 0 {
+            break;
+        }
+        let mut best: Option<(i64, f64, usize, i64)> = None; // (|new res|, want, layer, dir)
+        for (i, &n) in ns.iter().enumerate() {
+            let blocks = (stats[i].size / m) as i64;
+            for dir in [-1i64, 1] {
+                let nn = n + dir;
+                if nn < n_min as i64 || nn > m as i64 {
+                    continue;
+                }
+                let new_res = (res + dir * blocks).abs();
+                if new_res >= res.abs() {
+                    continue; // only strictly-improving moves
+                }
+                let want = (ideal[i] * m as f64 - n as f64) * dir as f64;
+                let better = match best {
+                    None => true,
+                    Some((br, bw, _, _)) => new_res < br || (new_res == br && want > bw),
+                };
+                if better {
+                    best = Some((new_res, want, i, dir));
+                }
+            }
+        }
+        match best {
+            Some((_, _, i, dir)) => ns[i] += dir,
+            None => break, // no improving move: budget unreachable exactly
+        }
+    }
+
+    stats
+        .iter()
+        .zip(ns)
+        .map(|(s, n)| OwlAllocation {
+            name: s.name.clone(),
+            n: n as usize,
+            m,
+        })
+        .collect()
+}
+
+/// Realized global keep fraction of an allocation.
+pub fn realized_keep(allocs: &[OwlAllocation], stats: &[LayerOutlierStats]) -> f64 {
+    let total: usize = stats.iter().map(|s| s.size).sum();
+    if total == 0 {
+        return 0.0;
+    }
+    let kept: f64 = allocs
+        .iter()
+        .zip(stats)
+        .map(|(a, s)| (a.n as f64 / a.m as f64) * s.size as f64)
+        .sum();
+    kept / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn mk_stats(lods: &[f64]) -> Vec<LayerOutlierStats> {
+        lods.iter()
+            .enumerate()
+            .map(|(i, &lod)| LayerOutlierStats {
+                name: format!("layer{i}"),
+                size: 16 * 256,
+                lod,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lod_of_gaussian_matches_tail_mass() {
+        let mut rng = Rng::new(31);
+        let w = Tensor::randn(vec![200, 500], 1.0, &mut rng);
+        // mean|N(0,1)| = sqrt(2/pi) ≈ 0.7979; P(|x| > 3*0.798) ≈ 0.0167
+        let lod = layer_outlier_distribution(&w, 3.0);
+        assert!((lod - 0.0167).abs() < 0.005, "{lod}");
+    }
+
+    #[test]
+    fn lod_heavier_tail_is_larger() {
+        let mut rng = Rng::new(32);
+        let plain = Tensor::randn(vec![100, 256], 0.05, &mut rng);
+        let heavy = Tensor::randn_outliers(vec![100, 256], 0.05, 0.02, 10.0, &mut rng);
+        assert!(
+            layer_outlier_distribution(&heavy, 5.0)
+                > layer_outlier_distribution(&plain, 5.0)
+        );
+    }
+
+    #[test]
+    fn uniform_lod_gives_uniform_pattern() {
+        let stats = mk_stats(&[0.02, 0.02, 0.02, 0.02]);
+        let a = owl_allocate(&stats, 16, 0.5, 5.0, 1);
+        assert!(a.iter().all(|x| x.n == 8), "{a:?}");
+    }
+
+    #[test]
+    fn outlier_heavy_layers_keep_more() {
+        let stats = mk_stats(&[0.08, 0.02, 0.02, 0.08]);
+        let a = owl_allocate(&stats, 16, 0.5, 5.0, 1);
+        assert!(a[0].n > a[1].n, "{a:?}");
+        assert!(a[3].n > a[2].n, "{a:?}");
+        // budget preserved exactly
+        let keep = realized_keep(&a, &stats);
+        assert!((keep - 0.5).abs() < 1e-9, "{keep}");
+    }
+
+    #[test]
+    fn budget_met_with_uneven_layer_sizes() {
+        let mut stats = mk_stats(&[0.10, 0.01, 0.05]);
+        stats[0].size = 4 * 256; // small outlier-heavy layer
+        stats[1].size = 64 * 256;
+        let a = owl_allocate(&stats, 16, 0.5, 8.0, 2);
+        let keep = realized_keep(&a, &stats);
+        assert!((keep - 0.5).abs() < 0.02, "{keep}");
+        assert!(a.iter().all(|x| x.n >= 2 && x.n <= 16));
+    }
+
+    #[test]
+    fn lambda_zero_is_uniform() {
+        let stats = mk_stats(&[0.2, 0.0, 0.1, 0.05]);
+        let a = owl_allocate(&stats, 16, 0.5, 0.0, 1);
+        assert!(a.iter().all(|x| x.n == 8), "{a:?}");
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        assert!(owl_allocate(&[], 16, 0.5, 5.0, 1).is_empty());
+    }
+
+    #[test]
+    fn clamps_respected_under_extreme_lambda() {
+        let stats = mk_stats(&[0.5, 0.0]);
+        let a = owl_allocate(&stats, 4, 0.5, 100.0, 1);
+        assert!(a.iter().all(|x| (1..=4).contains(&x.n)), "{a:?}");
+        // budget still met (4:4 + 0:4 clamped to 1:4 → repair balances)
+        let keep = realized_keep(&a, &stats);
+        assert!((keep - 0.5).abs() < 0.26, "{keep}");
+    }
+}

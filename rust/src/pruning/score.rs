@@ -1,0 +1,124 @@
+//! Importance scoring: magnitude, Wanda, and RIA — semantics locked to
+//! `python/compile/kernels/ref.py`.
+
+use crate::tensor::{col_abssum, col_l2 as _col_l2, row_abssum, Tensor};
+
+// re-export guard so the unused import lint stays quiet if col_l2 usage moves
+#[allow(unused_imports)]
+use _col_l2 as col_l2_stat;
+
+/// Pruning importance metric (paper baselines + RIA).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PruneMethod {
+    Magnitude,
+    Wanda,
+    Ria,
+}
+
+impl PruneMethod {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "magnitude" | "mag" => Some(PruneMethod::Magnitude),
+            "wanda" => Some(PruneMethod::Wanda),
+            "ria" => Some(PruneMethod::Ria),
+            _ => None,
+        }
+    }
+}
+
+/// `|W|` — magnitude baseline (Table 4/5).
+pub fn magnitude_score(w: &Tensor) -> Tensor {
+    w.map(f32::abs)
+}
+
+/// `|W| * ||x_j||_2` — Wanda (Sun et al., 2023).
+pub fn wanda_score(w: &Tensor, act_l2: &[f32]) -> Tensor {
+    let (rows, cols) = w.dims2();
+    assert_eq!(cols, act_l2.len());
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = w.row(r);
+        for c in 0..cols {
+            out[r * cols + c] = row[c].abs() * act_l2[c];
+        }
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+/// RIA (Zhang et al., 2024):
+/// `(|W_ij|/rowsum_i + |W_ij|/colsum_j) * act_l2_j^alpha`.
+pub fn ria_score(w: &Tensor, act_l2: &[f32], alpha: f32) -> Tensor {
+    let (rows, cols) = w.dims2();
+    assert_eq!(cols, act_l2.len());
+    let rowsum = row_abssum(w);
+    let colsum = col_abssum(w);
+    let act: Vec<f32> = act_l2.iter().map(|&a| a.max(0.0).powf(alpha)).collect();
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let row = w.row(r);
+        let rs = if rowsum[r] > 0.0 { rowsum[r] } else { 1.0 };
+        for c in 0..cols {
+            let cs = if colsum[c] > 0.0 { colsum[c] } else { 1.0 };
+            let aw = row[c].abs();
+            out[r * cols + c] = (aw / rs + aw / cs) * act[c];
+        }
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn magnitude_is_abs() {
+        let w = Tensor::new(vec![1, 4], vec![-3., 1., -2., 0.]);
+        assert_eq!(magnitude_score(&w).data(), &[3., 1., 2., 0.]);
+    }
+
+    #[test]
+    fn wanda_scales_by_activation() {
+        let w = Tensor::new(vec![1, 2], vec![2., 2.]);
+        let s = wanda_score(&w, &[1.0, 3.0]);
+        assert_eq!(s.data(), &[2., 6.]);
+    }
+
+    #[test]
+    fn ria_relative_importance() {
+        // row [3, 1]: rowsum 4; cols sums 3 and 1 => both elems score
+        // 3/4 + 3/3 = 1.75 and 1/4 + 1/1 = 1.25 with unit activations
+        let w = Tensor::new(vec![1, 2], vec![3., 1.]);
+        let s = ria_score(&w, &[1.0, 1.0], 0.5);
+        assert!((s.data()[0] - 1.75).abs() < 1e-6);
+        assert!((s.data()[1] - 1.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn ria_zero_row_guard() {
+        let w = Tensor::new(vec![2, 2], vec![0., 0., 1., 1.]);
+        let s = ria_score(&w, &[1.0, 1.0], 0.5);
+        assert!(s.data().iter().all(|x| x.is_finite()));
+        assert_eq!(s.data()[0], 0.0);
+    }
+
+    #[test]
+    fn ria_alpha_zero_ignores_activations() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(vec![8, 16], 1.0, &mut rng);
+        let a = ria_score(&w, &[1.0; 16], 0.0);
+        let big: Vec<f32> = (0..16).map(|i| (i + 1) as f32).collect();
+        let b = ria_score(&w, &big, 0.0);
+        for (x, y) in a.data().iter().zip(b.data()) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn method_parse() {
+        assert_eq!(PruneMethod::parse("RIA"), Some(PruneMethod::Ria));
+        assert_eq!(PruneMethod::parse("mag"), Some(PruneMethod::Magnitude));
+        assert_eq!(PruneMethod::parse("wanda"), Some(PruneMethod::Wanda));
+        assert_eq!(PruneMethod::parse("x"), None);
+    }
+}

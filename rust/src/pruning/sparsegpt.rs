@@ -1,0 +1,393 @@
+//! SparseGPT-style OBS pruner (Frantar & Alistarh 2023) — the strongest
+//! one-shot baseline the paper's related-work section positions RIA
+//! against.
+//!
+//! Unlike the scoring-only methods ([`super::magnitude_score`],
+//! [`super::wanda_score`], [`super::ria_score`]) which pick a mask and
+//! zero weights, OBS *updates the surviving weights* to compensate for
+//! each removal, using the inverse Hessian of the layer's least-squares
+//! reconstruction problem `H = Σ xᵀx + λI`.
+//!
+//! The implementation follows the blocked algorithm of the paper:
+//! columns are processed left to right; at the start of every `m`-column
+//! group the N:M mask for the group is chosen from the OBS saliency
+//! `w² / diag(H⁻¹)²`; pruning a weight adds the rank-1 correction
+//! `w_ij / [H⁻¹]_jj · [H⁻¹]_{j,j+1:}` to the unprocessed tail of the row.
+//! The inverse Hessian is consumed through its upper Cholesky factor, so
+//! the correction only ever touches columns to the right.
+
+use crate::tensor::{cholesky_upper, spd_inverse, Tensor};
+
+/// Tuning knobs for the OBS pruner.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseGptConfig {
+    /// N:M pattern applied to non-salient weights.
+    pub n: usize,
+    pub m: usize,
+    /// Hessian dampening as a fraction of mean diagonal (paper uses 1%).
+    pub percdamp: f64,
+    /// Lazy-update block width (columns processed before the global
+    /// trailing update). Must be a multiple of `m`.
+    pub block: usize,
+}
+
+impl SparseGptConfig {
+    pub fn new(n: usize, m: usize) -> Self {
+        SparseGptConfig {
+            n,
+            m,
+            percdamp: 0.01,
+            block: 128,
+        }
+    }
+}
+
+/// Accumulated Hessian for one linear layer (`cin × cin`).
+///
+/// Feed calibration activation batches with [`Self::update`]; the
+/// coordinator keeps one per layer during the calibration pass, exactly
+/// like it keeps [`super::ActStats`] for the scoring methods.
+#[derive(Clone, Debug)]
+pub struct Hessian {
+    h: Tensor,
+    pub samples: usize,
+}
+
+impl Hessian {
+    pub fn new(cin: usize) -> Self {
+        Hessian {
+            h: Tensor::zeros(vec![cin, cin]),
+            samples: 0,
+        }
+    }
+
+    /// Fold a `(batch, cin)` activation matrix into `H += 2 xᵀx`.
+    pub fn update(&mut self, x: &Tensor) {
+        let (b, cin) = x.dims2();
+        let (hc, _) = self.h.dims2();
+        assert_eq!(cin, hc, "activation width {cin} vs Hessian {hc}");
+        let g = crate::tensor::gram(x);
+        self.h = self.h.zip(&g, |a, b| a + 2.0 * b);
+        self.samples += b;
+    }
+
+    /// Uniform Hessian (identity): degrades OBS to magnitude-with-update;
+    /// used when calibration is disabled and by tests.
+    pub fn identity(cin: usize) -> Self {
+        let mut h = Tensor::zeros(vec![cin, cin]);
+        for i in 0..cin {
+            h.set2(i, i, 1.0);
+        }
+        Hessian { h, samples: 1 }
+    }
+
+    pub fn dims(&self) -> usize {
+        self.h.dims2().0
+    }
+}
+
+/// Output of an OBS prune: compensated weights and the keep mask.
+pub struct SparseGptResult {
+    /// pruned **and compensated** weight matrix (`w * mask` plus OBS
+    /// corrections folded into surviving entries)
+    pub w: Tensor,
+    pub mask: Tensor,
+    /// Σ (w_ij/[H⁻¹]_jj)² — the OBS estimate of the layer reconstruction
+    /// error introduced by pruning
+    pub obs_error: f64,
+}
+
+/// Prune `w (cout, cin)` to the config's N:M pattern with OBS weight
+/// updates. `excl` marks entries excluded from pruning (structured salient
+/// weights, `1.0` = salient); they are never pruned and never updated,
+/// mirroring how [`super::prune_layer`] treats the outlier matrix.
+pub fn sparsegpt_prune(
+    w: &Tensor,
+    hess: &Hessian,
+    excl: Option<&Tensor>,
+    cfg: &SparseGptConfig,
+) -> crate::Result<SparseGptResult> {
+    let (rows, cols) = w.dims2();
+    assert_eq!(hess.dims(), cols, "Hessian dim {} vs cin {cols}", hess.dims());
+    assert_eq!(cols % cfg.m, 0, "cin {cols} not divisible by m {}", cfg.m);
+    assert!(cfg.n <= cfg.m && cfg.n > 0);
+    let block = cfg.block.max(cfg.m) / cfg.m * cfg.m;
+    if let Some(e) = excl {
+        assert_eq!(e.shape(), w.shape(), "exclusion mask shape");
+    }
+
+    // ---- dampen H, drop dead columns, invert, upper-Cholesky ----------
+    let mut h = hess.h.clone();
+    let mut mean_diag = 0.0f64;
+    for i in 0..cols {
+        mean_diag += h.at2(i, i) as f64;
+    }
+    mean_diag /= cols as f64;
+    let damp = (cfg.percdamp * mean_diag).max(1e-8) as f32;
+    let mut dead = vec![false; cols];
+    for i in 0..cols {
+        if h.at2(i, i) == 0.0 {
+            dead[i] = true;
+            h.set2(i, i, 1.0);
+        } else {
+            let v = h.at2(i, i) + damp;
+            h.set2(i, i, v);
+        }
+    }
+    let hinv = spd_inverse(&h).map_err(|e| anyhow::anyhow!("sparsegpt: {e}"))?;
+    // upper Cholesky factor U of H^{-1}: U[j, k>=j] drives the updates
+    let u = cholesky_upper(&hinv).map_err(|e| anyhow::anyhow!("sparsegpt: {e}"))?;
+
+    let mut wk = w.clone(); // working copy; corrections land here
+    let mut mask = Tensor::zeros(vec![rows, cols]);
+    let mut obs_error = 0.0f64;
+
+    // dead columns carry no signal: prune them outright (they cost 0)
+    for r in 0..rows {
+        for (j, &d) in dead.iter().enumerate() {
+            if d {
+                wk.set2(r, j, 0.0);
+            }
+        }
+    }
+
+    let ud = u.data();
+    for b0 in (0..cols).step_by(block) {
+        let b1 = (b0 + block).min(cols);
+        // per-row error accumulator for the lazy trailing update:
+        // err[r][j-b0] = w_rj / U_jj for pruned (r,j) in this block
+        let mut err = vec![0.0f32; rows * (b1 - b0)];
+        for r in 0..rows {
+            let wrow = wk.row_mut(r);
+            let erow = &mut err[r * (b1 - b0)..(r + 1) * (b1 - b0)];
+            for g0 in (b0..b1).step_by(cfg.m) {
+                // ---- choose the group's keep set by OBS saliency ----
+                // saliency of pruning j: (w_rj / U_jj)^2
+                let mut sal: Vec<(f32, usize)> = (g0..g0 + cfg.m)
+                    .map(|j| {
+                        let ujj = ud[j * cols + j];
+                        let s = wrow[j] / ujj;
+                        (s * s, j)
+                    })
+                    .collect();
+                // salient (excluded) entries never consume keep slots —
+                // they move to the outlier matrix (mirrors mask_excluding)
+                if let Some(e) = excl {
+                    for (s, j) in sal.iter_mut() {
+                        if e.at2(r, *j) != 0.0 {
+                            *s = f32::NEG_INFINITY;
+                        }
+                    }
+                }
+                // keep the n highest-cost-to-prune, stable ties
+                sal.sort_by(|a, b| {
+                    b.0.partial_cmp(&a.0)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.1.cmp(&b.1))
+                });
+                let keep: Vec<usize> = sal[..cfg.n]
+                    .iter()
+                    .filter(|&&(s, _)| s > f32::NEG_INFINITY)
+                    .map(|&(_, j)| j)
+                    .collect();
+                // ---- prune + sequential in-block compensation ----
+                for j in g0..g0 + cfg.m {
+                    if excl.map_or(false, |e| e.at2(r, j) != 0.0) {
+                        // salient: value preserved exactly in the outlier
+                        // matrix — removal is lossless, no compensation
+                        wrow[j] = 0.0;
+                        continue;
+                    }
+                    if keep.contains(&j) {
+                        mask.set2(r, j, 1.0);
+                        continue;
+                    }
+                    let ujj = ud[j * cols + j];
+                    let e = wrow[j] / ujj;
+                    obs_error += (e * e) as f64;
+                    erow[j - b0] = e;
+                    // correct the rest of this block's row (k in (j, b1))
+                    let urow = &ud[j * cols..(j + 1) * cols];
+                    for k in j + 1..b1 {
+                        wrow[k] -= e * urow[k];
+                    }
+                    wrow[j] = 0.0;
+                }
+            }
+        }
+        // ---- lazy trailing update: w[:, b1:] -= err @ U[b0:b1, b1:] ----
+        if b1 < cols {
+            for r in 0..rows {
+                let erow = &err[r * (b1 - b0)..(r + 1) * (b1 - b0)];
+                let wrow = wk.row_mut(r);
+                for (dj, &e) in erow.iter().enumerate() {
+                    if e == 0.0 {
+                        continue;
+                    }
+                    let j = b0 + dj;
+                    let urow = &ud[j * cols..(j + 1) * cols];
+                    for k in b1..cols {
+                        wrow[k] -= e * urow[k];
+                    }
+                }
+            }
+        }
+    }
+
+    // salient entries keep their original (uncompensated) values; they
+    // live in the outlier matrix, not in the N:M tensor
+    if let Some(e) = excl {
+        for r in 0..rows {
+            for j in 0..cols {
+                if e.at2(r, j) != 0.0 {
+                    wk.set2(r, j, 0.0);
+                }
+            }
+        }
+    }
+
+    Ok(SparseGptResult {
+        w: wk,
+        mask,
+        obs_error,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul_wt, rel_error};
+    use crate::util::Rng;
+
+    fn calib(rows: usize, cin: usize, seed: u64) -> (Tensor, Tensor, Hessian) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn_outliers(vec![rows, cin], 0.05, 0.01, 8.0, &mut rng);
+        let x = Tensor::randn(vec![4 * cin, cin], 1.0, &mut rng);
+        let mut h = Hessian::new(cin);
+        h.update(&x);
+        (w, x, h)
+    }
+
+    #[test]
+    fn mask_budget_exact() {
+        let (w, _x, h) = calib(16, 64, 1);
+        let r = sparsegpt_prune(&w, &h, None, &SparseGptConfig::new(8, 16)).unwrap();
+        assert_eq!(r.mask.count_nonzero(), 16 * 64 / 2);
+        // every pruned entry is exactly zero, every kept entry nonzero-ish
+        for i in 0..w.len() {
+            if r.mask.data()[i] == 0.0 {
+                assert_eq!(r.w.data()[i], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn per_group_cardinality() {
+        let (w, _x, h) = calib(8, 64, 2);
+        let cfg = SparseGptConfig::new(2, 4);
+        let r = sparsegpt_prune(&w, &h, None, &cfg).unwrap();
+        for row in 0..8 {
+            for g in 0..64 / 4 {
+                let kept = (0..4)
+                    .filter(|&j| r.mask.at2(row, g * 4 + j) != 0.0)
+                    .count();
+                assert_eq!(kept, 2, "row {row} group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn compensation_beats_plain_masking() {
+        // OBS's whole point: ||x(w - w')ᵀ|| is lower with weight updates
+        // than with the same-scoring mask alone.
+        let (w, x, h) = calib(24, 128, 3);
+        let cfg = SparseGptConfig::new(2, 4);
+        let obs = sparsegpt_prune(&w, &h, None, &cfg).unwrap();
+        let plain = w.mul(&obs.mask); // same mask, no compensation
+        let y = matmul_wt(&x, &w);
+        let e_obs = rel_error(&matmul_wt(&x, &obs.w), &y);
+        let e_plain = rel_error(&matmul_wt(&x, &plain), &y);
+        assert!(
+            e_obs < e_plain,
+            "obs {e_obs:.4} should beat plain {e_plain:.4}"
+        );
+    }
+
+    #[test]
+    fn excluded_outliers_untouched_and_unpruned() {
+        let (w, _x, h) = calib(8, 64, 4);
+        let mut excl = Tensor::zeros(vec![8, 64]);
+        excl.set2(0, 3, 1.0);
+        excl.set2(5, 60, 1.0);
+        let r = sparsegpt_prune(&w, &h, Some(&excl), &SparseGptConfig::new(2, 4)).unwrap();
+        // salient entries are carved out of the N:M tensor entirely
+        assert_eq!(r.w.at2(0, 3), 0.0);
+        assert_eq!(r.w.at2(5, 60), 0.0);
+        assert_eq!(r.mask.at2(0, 3), 0.0);
+        // effective weight = w_ns + w*excl reconstructs the original there
+        let eff = r.w.add(&w.mul(&excl));
+        assert_eq!(eff.at2(0, 3), w.at2(0, 3));
+        assert_eq!(eff.at2(5, 60), w.at2(5, 60));
+    }
+
+    #[test]
+    fn identity_hessian_matches_magnitude_selection() {
+        // With H = I there is no cross-correlation: OBS saliency reduces
+        // to w² and no compensation should change kept weights.
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(vec![4, 32], 1.0, &mut rng);
+        let h = Hessian::identity(32);
+        let r = sparsegpt_prune(&w, &h, None, &SparseGptConfig::new(2, 4)).unwrap();
+        let want_mask = crate::pruning::mask_topn_per_block(&w.map(|x| x * x), 2, 4);
+        assert_eq!(r.mask, want_mask);
+        for i in 0..w.len() {
+            if r.mask.data()[i] != 0.0 {
+                assert!((r.w.data()[i] - w.data()[i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn dead_columns_pruned_for_free() {
+        let mut rng = Rng::new(6);
+        let w = Tensor::randn(vec![4, 16], 1.0, &mut rng);
+        let mut x = Tensor::randn(vec![64, 16], 1.0, &mut rng);
+        for r in 0..64 {
+            x.set2(r, 7, 0.0); // channel 7 never fires
+        }
+        let mut h = Hessian::new(16);
+        h.update(&x);
+        let r = sparsegpt_prune(&w, &h, None, &SparseGptConfig::new(8, 16)).unwrap();
+        for row in 0..4 {
+            assert_eq!(r.w.at2(row, 7), 0.0, "dead channel should be pruned");
+        }
+    }
+
+    #[test]
+    fn blocked_equals_unblocked() {
+        let (w, _x, h) = calib(8, 128, 7);
+        let mut small = SparseGptConfig::new(4, 8);
+        small.block = 8;
+        let mut big = SparseGptConfig::new(4, 8);
+        big.block = 128;
+        let a = sparsegpt_prune(&w, &h, None, &small).unwrap();
+        let b = sparsegpt_prune(&w, &h, None, &big).unwrap();
+        assert_eq!(a.mask, b.mask);
+        assert!(rel_error(&a.w, &b.w) < 1e-3, "{}", rel_error(&a.w, &b.w));
+    }
+
+    #[test]
+    fn obs_error_reported() {
+        let (w, _x, h) = calib(8, 64, 8);
+        let r24 = sparsegpt_prune(&w, &h, None, &SparseGptConfig::new(2, 4)).unwrap();
+        let r816 = sparsegpt_prune(&w, &h, None, &SparseGptConfig::new(8, 16)).unwrap();
+        assert!(r24.obs_error > 0.0);
+        // 8:16 is a strict superset of feasible 2:4 masks → lower OBS error
+        assert!(
+            r816.obs_error < r24.obs_error,
+            "8:16 {:.4} !< 2:4 {:.4}",
+            r816.obs_error,
+            r24.obs_error
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! SmoothQuant-style weight equalization (paper §4.1, Eq. 1) — host
+//! mirror of the `sq` fold inside the `ria_score` Pallas kernel.
+//!
+//! `s_j = max|x_j| / max|W_:,j|`; the importance metric is computed on
+//! `W_ec = W / s_j`. Only the metric sees equalized weights; the model's
+//! actual weights and activations never change (§4.1 Implementation Note).
+
+use crate::tensor::{col_absmax, Tensor};
+
+/// Channel scales with dead-channel guards (zero column or activation → 1).
+pub fn sq_scales(w: &Tensor, colmax_x: &[f32]) -> Vec<f32> {
+    let wmax = col_absmax(w);
+    assert_eq!(wmax.len(), colmax_x.len());
+    wmax.iter()
+        .zip(colmax_x)
+        .map(|(&wm, &xm)| {
+            if wm > 0.0 && xm.abs() > 0.0 {
+                xm.abs() / wm
+            } else {
+                1.0
+            }
+        })
+        .collect()
+}
+
+/// `W_ec = W / s_j` column-wise.
+pub fn equalize(w: &Tensor, colmax_x: &[f32]) -> Tensor {
+    let s = sq_scales(w, colmax_x);
+    let (rows, cols) = w.dims2();
+    let mut out = Vec::with_capacity(rows * cols);
+    for r in 0..rows {
+        let row = w.row(r);
+        for c in 0..cols {
+            out.push(row[c] / s[c]);
+        }
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn scales_formula() {
+        let w = Tensor::new(vec![2, 2], vec![1., -4., 2., 2.]);
+        // col maxes: 2, 4
+        let s = sq_scales(&w, &[6.0, 2.0]);
+        assert_eq!(s, vec![3.0, 0.5]);
+    }
+
+    #[test]
+    fn dead_channel_guard() {
+        let w = Tensor::new(vec![2, 2], vec![0., 1., 0., 2.]);
+        let s = sq_scales(&w, &[5.0, 0.0]);
+        assert_eq!(s, vec![1.0, 1.0]);
+    }
+
+    #[test]
+    fn equalize_balances_columns() {
+        // after equalization every column's max equals its activation max /
+        // scale consistency: max|W_ec[:,j]| == max|W[:,j]| / s_j
+        let mut rng = Rng::new(9);
+        let w = Tensor::randn(vec![16, 8], 1.0, &mut rng);
+        let colmax_x: Vec<f32> = (0..8).map(|i| (i + 1) as f32).collect();
+        let ec = equalize(&w, &colmax_x);
+        let s = sq_scales(&w, &colmax_x);
+        let wmax = col_absmax(&w);
+        let ecmax = col_absmax(&ec);
+        for j in 0..8 {
+            assert!((ecmax[j] - wmax[j] / s[j]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn equalize_identity_when_balanced() {
+        // if max|x_j| == max|W_:,j| the scale is 1 and W_ec == W
+        let w = Tensor::new(vec![1, 3], vec![2., -3., 4.]);
+        let ec = equalize(&w, &[2., 3., 4.]);
+        assert_eq!(ec, w);
+    }
+}

@@ -1,0 +1,106 @@
+//! Variance Correction (paper §4.2, Eq. 2) — host mirror of the
+//! `variance_correct` Pallas kernel.
+//!
+//! `W_ns_corrected = W_ns * sqrt(Var(W_dense) / (Var(W_ns) + eps))`
+//! restores the dense weight variance after pruning, stabilizing the layer
+//! output scale without learnable bias terms.
+
+use crate::tensor::Tensor;
+
+pub const VC_EPS: f64 = 1e-8;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VcMode {
+    /// one scalar per matrix (the paper's Eq. 2)
+    Global,
+    /// per output row (local ablation variant)
+    Row,
+}
+
+pub fn variance_correct(w_pruned: &Tensor, w_dense: &Tensor, mode: VcMode) -> Tensor {
+    assert_eq!(w_pruned.shape(), w_dense.shape());
+    match mode {
+        VcMode::Global => {
+            let scale = (w_dense.var() / (w_pruned.var() + VC_EPS)).sqrt() as f32;
+            w_pruned.scale(scale)
+        }
+        VcMode::Row => {
+            let (rows, cols) = w_pruned.dims2();
+            let mut out = Vec::with_capacity(rows * cols);
+            for r in 0..rows {
+                let pr = w_pruned.row(r);
+                let dr = w_dense.row(r);
+                let scale = (row_var(dr) / (row_var(pr) + VC_EPS)).sqrt() as f32;
+                out.extend(pr.iter().map(|&x| x * scale));
+            }
+            Tensor::new(vec![rows, cols], out)
+        }
+    }
+}
+
+fn row_var(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mu = xs.iter().map(|&x| x as f64).sum::<f64>() / xs.len() as f64;
+    xs.iter()
+        .map(|&x| {
+            let d = x as f64 - mu;
+            d * d
+        })
+        .sum::<f64>()
+        / xs.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask_topn_per_block;
+    use crate::util::Rng;
+
+    #[test]
+    fn global_restores_variance() {
+        let mut rng = Rng::new(21);
+        let w = Tensor::randn(vec![64, 256], 0.1, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 2, 4);
+        let pruned = w.mul(&mask);
+        let fixed = variance_correct(&pruned, &w, VcMode::Global);
+        let rel = (fixed.var() - w.var()).abs() / w.var();
+        assert!(rel < 0.01, "rel var error {rel}");
+    }
+
+    #[test]
+    fn row_mode_fixes_each_row() {
+        let mut rng = Rng::new(23);
+        let w = Tensor::randn(vec![8, 512], 0.1, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let fixed = variance_correct(&w.mul(&mask), &w, VcMode::Row);
+        for r in 0..8 {
+            let rel = (row_var(fixed.row(r)) - row_var(w.row(r))).abs() / row_var(w.row(r));
+            assert!(rel < 0.05, "row {r} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn zeros_stay_zero() {
+        let mut rng = Rng::new(25);
+        let w = Tensor::randn(vec![8, 64], 1.0, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 2, 4);
+        let fixed = variance_correct(&w.mul(&mask), &w, VcMode::Global);
+        for (f, m) in fixed.data().iter().zip(mask.data()) {
+            if *m == 0.0 {
+                assert_eq!(*f, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn identity_on_unpruned() {
+        let mut rng = Rng::new(27);
+        let w = Tensor::randn(vec![4, 64], 1.0, &mut rng);
+        let fixed = variance_correct(&w, &w, VcMode::Global);
+        for (a, b) in fixed.data().iter().zip(w.data()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,251 @@
+//! Symmetric per-group integer quantization (GPTQ/RTN-style storage).
+//!
+//! Values are stored as signed `bits`-wide integers packed 8-per-u32 (for
+//! int4) with one bf16 scale per `group` contiguous row elements —
+//! the layout every int4 LLM runtime uses. Dequantization is
+//! `w ≈ q * scale`, `q ∈ [-(2^{b-1}-1), 2^{b-1}-1]` (symmetric, no zero
+//! point; -2^{b-1} is unused so the grid is sign-balanced).
+
+use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
+
+/// Quantization parameters.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantSpec {
+    /// value width in bits (2..=8)
+    pub bits: u32,
+    /// elements sharing one scale (must divide cols)
+    pub group: usize,
+}
+
+impl QuantSpec {
+    pub fn new(bits: u32, group: usize) -> Self {
+        assert!((2..=8).contains(&bits), "bits {bits} out of range");
+        assert!(group > 0);
+        QuantSpec { bits, group }
+    }
+
+    pub fn int4_g128() -> Self {
+        QuantSpec::new(4, 128)
+    }
+
+    pub fn int8_g128() -> Self {
+        QuantSpec::new(8, 128)
+    }
+
+    /// largest representable magnitude on the integer grid
+    pub fn qmax(&self) -> i32 {
+        (1 << (self.bits - 1)) - 1
+    }
+
+    pub fn bits_per_param(&self) -> f64 {
+        super::quant_bits_per_param(self.bits, self.group)
+    }
+}
+
+/// A rank-2 tensor stored group-quantized.
+#[derive(Clone, Debug)]
+pub struct GroupQuant {
+    pub spec: QuantSpec,
+    pub rows: usize,
+    pub cols: usize,
+    /// packed signed values, `bits` each, row-major, LSB-first in words
+    codes: Vec<u32>,
+    /// bf16 per-group scales, row-major over (rows, cols/group)
+    scales: Vec<u16>,
+}
+
+impl GroupQuant {
+    /// Quantize `w (rows, cols)` — round-to-nearest onto the symmetric
+    /// grid, per-group absmax scaling. An all-zero group gets scale 0.
+    pub fn quantize(w: &Tensor, spec: QuantSpec) -> Self {
+        let (rows, cols) = w.dims2();
+        assert_eq!(
+            cols % spec.group,
+            0,
+            "cols {cols} not divisible by group {}",
+            spec.group
+        );
+        let groups_per_row = cols / spec.group;
+        let qmax = spec.qmax() as f32;
+        let total_bits = rows * cols * spec.bits as usize;
+        let mut codes = vec![0u32; (total_bits + 31) / 32];
+        let mut scales = Vec::with_capacity(rows * groups_per_row);
+        let mut bitpos = 0usize;
+        let mask = (1u32 << spec.bits) - 1;
+        for r in 0..rows {
+            let row = w.row(r);
+            for g in 0..groups_per_row {
+                let blk = &row[g * spec.group..(g + 1) * spec.group];
+                let absmax = blk.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let scale = if absmax > 0.0 { absmax / qmax } else { 0.0 };
+                let scale = bf16_to_f32(f32_to_bf16(scale)); // store-rounded
+                scales.push(f32_to_bf16(scale));
+                let inv = if scale > 0.0 { 1.0 / scale } else { 0.0 };
+                for &x in blk {
+                    let q = (x * inv).round().clamp(-qmax, qmax) as i32;
+                    let u = (q as u32) & mask; // two's complement, bits wide
+                    let word = bitpos / 32;
+                    let off = bitpos % 32;
+                    codes[word] |= u << off;
+                    if off + spec.bits as usize > 32 {
+                        codes[word + 1] |= u >> (32 - off);
+                    }
+                    bitpos += spec.bits as usize;
+                }
+            }
+        }
+        GroupQuant {
+            spec,
+            rows,
+            cols,
+            codes,
+            scales,
+        }
+    }
+
+    /// Dequantize back to dense f32.
+    pub fn dequantize(&self) -> Tensor {
+        let spec = self.spec;
+        let groups_per_row = self.cols / spec.group;
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let mask = (1u32 << spec.bits) - 1;
+        let sign = 1u32 << (spec.bits - 1);
+        let mut bitpos = 0usize;
+        for r in 0..self.rows {
+            for g in 0..groups_per_row {
+                let scale = bf16_to_f32(self.scales[r * groups_per_row + g]);
+                for j in 0..spec.group {
+                    let word = bitpos / 32;
+                    let off = bitpos % 32;
+                    let mut u = self.codes[word] >> off;
+                    if off + spec.bits as usize > 32 {
+                        u |= self.codes[word + 1] << (32 - off);
+                    }
+                    u &= mask;
+                    // sign-extend
+                    let q = if u & sign != 0 {
+                        (u | !mask) as i32
+                    } else {
+                        u as i32
+                    };
+                    out[r * self.cols + g * spec.group + j] = q as f32 * scale;
+                    bitpos += spec.bits as usize;
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// Storage in bytes: packed codes + bf16 scales.
+    pub fn bytes(&self) -> usize {
+        (self.rows * self.cols * self.spec.bits as usize + 7) / 8 + self.scales.len() * 2
+    }
+
+    /// Compression ratio vs dense bf16.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.rows * self.cols * 2) as f64 / self.bytes() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rel_error;
+    use crate::util::propcheck::{check, Gen};
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_step() {
+        let mut rng = Rng::new(41);
+        let w = Tensor::randn(vec![16, 256], 0.05, &mut rng);
+        for bits in [3u32, 4, 8] {
+            let q = GroupQuant::quantize(&w, QuantSpec::new(bits, 64));
+            let d = q.dequantize();
+            let qmax = q.spec.qmax() as f32;
+            for r in 0..16 {
+                let row = w.row(r);
+                for g in 0..256 / 64 {
+                    let blk = &row[g * 64..(g + 1) * 64];
+                    let absmax = blk.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                    // bf16 scale rounding adds ≤0.4% on top of half-step
+                    let step = absmax / qmax * 1.01 + 1e-8;
+                    for j in 0..64 {
+                        let err = (d.at2(r, g * 64 + j) - blk[j]).abs();
+                        assert!(err <= 0.5 * step + absmax * 0.005, "bits={bits} err={err} step={step}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(42);
+        let w = Tensor::randn_outliers(vec![32, 512], 0.05, 0.01, 8.0, &mut rng);
+        let errs: Vec<f64> = [2u32, 3, 4, 8]
+            .iter()
+            .map(|&b| {
+                let q = GroupQuant::quantize(&w, QuantSpec::new(b, 128));
+                rel_error(&q.dequantize(), &w)
+            })
+            .collect();
+        for pair in errs.windows(2) {
+            assert!(pair[1] < pair[0], "{errs:?}");
+        }
+    }
+
+    #[test]
+    fn smaller_groups_less_error_with_outliers() {
+        // group-size sensitivity is outlier-driven — the SPQR motivation
+        let mut rng = Rng::new(43);
+        let w = Tensor::randn_outliers(vec![32, 512], 0.05, 0.02, 20.0, &mut rng);
+        let e_small = rel_error(
+            &GroupQuant::quantize(&w, QuantSpec::new(4, 32)).dequantize(),
+            &w,
+        );
+        let e_big = rel_error(
+            &GroupQuant::quantize(&w, QuantSpec::new(4, 256)).dequantize(),
+            &w,
+        );
+        assert!(e_small < e_big, "{e_small} !< {e_big}");
+    }
+
+    #[test]
+    fn zero_group_roundtrips_to_zero() {
+        let mut w = Tensor::zeros(vec![2, 128]);
+        w.set2(1, 64, 3.0); // second group of row 1 nonzero
+        let q = GroupQuant::quantize(&w, QuantSpec::new(4, 64));
+        let d = q.dequantize();
+        for j in 0..64 {
+            assert_eq!(d.at2(0, j), 0.0);
+        }
+        assert!((d.at2(1, 64) - 3.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn storage_accounting_int4() {
+        let w = Tensor::ones(vec![64, 512]);
+        let q = GroupQuant::quantize(&w, QuantSpec::int4_g128());
+        // 4 bits/value + 2 bytes per 128-group
+        assert_eq!(q.bytes(), 64 * 512 / 2 + 64 * 4 * 2);
+        assert!(q.compression_ratio() > 3.8);
+    }
+
+    #[test]
+    fn property_roundtrip_idempotent() {
+        // quantizing an already-dequantized tensor is exact (fixed point)
+        check("groupq fixed point", 20, |g: &mut Gen| {
+            let rows = g.int(1, 8);
+            let groups = g.int(1, 4);
+            let spec = QuantSpec::new(*g.choose(&[3u32, 4, 8]), 32);
+            let cols = groups * spec.group;
+            let w = Tensor::new(vec![rows, cols], g.vec_normal(rows * cols));
+            let d1 = GroupQuant::quantize(&w, spec).dequantize();
+            let d2 = GroupQuant::quantize(&d1, spec).dequantize();
+            if rel_error(&d2, &d1) > 1e-6 {
+                return Err(format!("not idempotent: {}", rel_error(&d2, &d1)));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,52 @@
+//! Quantization substrate — the comparison axis of the paper's
+//! *Performance Threshold* framing.
+//!
+//! The introduction defines the threshold as "a compressed model matches
+//! the accuracy of its uncompressed or smaller counterpart under
+//! equivalent memory constraints" and observes that **quantized** models
+//! routinely pass it while sparse models struggle. To actually measure
+//! that comparison we need a quantizer: this module implements symmetric
+//! per-group integer quantization ([`GroupQuant`]), the SPQR-style
+//! compose (quantized base + salient weights carved into the structured
+//! outlier format, [`spqr`]), and the bits-per-parameter accounting used
+//! by the `a2_threshold` ablation bench.
+
+mod groupq;
+mod spqr;
+
+pub use groupq::{GroupQuant, QuantSpec};
+pub use spqr::{OutlierStore, SpqrLayer, SpqrSpec};
+
+/// Bits per parameter of a plain group-quantized tensor: `b` value bits
+/// plus one bf16 scale per group.
+pub fn quant_bits_per_param(bits: u32, group: usize) -> f64 {
+    bits as f64 + 16.0 / group as f64
+}
+
+/// Bits per parameter of an N:M sparse tensor stored packed (bf16 values
+/// + codebook metadata), relative to the *dense* element count.
+pub fn nm_bits_per_param(n: usize, m: usize) -> f64 {
+    let info = crate::sparse::PatternInfo::new(n, m);
+    16.0 * n as f64 / m as f64 + info.bits_per_element_codebook()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_matches_paper_table1() {
+        // Table 1 metadata overheads (codebook encoding)
+        assert!((nm_bits_per_param(2, 4) - (8.0 + 0.75)).abs() < 1e-9);
+        assert!((nm_bits_per_param(8, 16) - (8.0 + 0.875)).abs() < 1e-9);
+        // int4 g128 ≈ 4.125 bits/param
+        assert!((quant_bits_per_param(4, 128) - 4.125).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sparse_8_16_sits_between_int8_and_bf16() {
+        let s = nm_bits_per_param(8, 16); // 8.875
+        assert!(s > quant_bits_per_param(8, 128));
+        assert!(s < 16.0);
+    }
+}

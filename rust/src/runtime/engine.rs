@@ -1,0 +1,263 @@
+//! The PJRT execution engine: one CPU client, a compiled-executable cache,
+//! and typed execute helpers.
+//!
+//! `Engine` is `Sync`-shared across coordinator workers behind `Arc`; the
+//! compile cache is a mutexed map keyed by artifact path (compilation
+//! happens once per artifact per process, execution is lock-free after a
+//! handle is cloned out... the `xla` crate's `PjRtLoadedExecutable` is a
+//! ref-counted wrapper, cheap to clone).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Context;
+
+use super::manifest::Manifest;
+use crate::util::timer::Stopwatch;
+
+/// Shared PJRT engine with artifact compile caching.
+pub struct Engine {
+    client: xla::PjRtClient,
+    root: PathBuf,
+    cache: Mutex<HashMap<PathBuf, Arc<xla::PjRtLoadedExecutable>>>,
+    /// cumulative (compiles, executes) counters for metrics
+    stats: Mutex<EngineStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: usize,
+    pub executions: usize,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+}
+
+impl Engine {
+    /// Create a CPU engine rooted at the artifacts directory.
+    pub fn new(artifacts_root: impl AsRef<Path>) -> crate::Result<Engine> {
+        let root = artifacts_root.as_ref().to_path_buf();
+        anyhow::ensure!(
+            root.exists(),
+            "artifacts root {} missing — run `make artifacts` first",
+            root.display()
+        );
+        let client = xla::PjRtClient::cpu()?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine {
+            client,
+            root,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(EngineStats::default()),
+        })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Load the manifest of a model config directory (e.g. "tiny").
+    pub fn model_manifest(&self, config: &str) -> crate::Result<Manifest> {
+        Manifest::load(&self.root.join(config))
+    }
+
+    /// Load the manifest of a kernel shape directory (e.g. 512x256).
+    pub fn kernel_manifest(&self, rows: usize, cols: usize) -> crate::Result<Manifest> {
+        Manifest::load(&self.root.join("kernels").join(format!("{rows}x{cols}")))
+    }
+
+    /// Compile (or fetch from cache) an artifact by absolute file path.
+    pub fn compile(&self, file: &Path) -> crate::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(file) {
+            return Ok(Arc::clone(exe));
+        }
+        let sw = Stopwatch::start();
+        let proto = xla::HloModuleProto::from_text_file(file)
+            .with_context(|| format!("loading HLO text {}", file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", file.display()))?,
+        );
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.compiles += 1;
+            st.compile_secs += sw.secs();
+        }
+        log::debug!("compiled {} in {:.2}s", file.display(), sw.secs());
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(file.to_path_buf(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Upload a host literal to a device-resident buffer, keeping the
+    /// literal alive alongside it.
+    ///
+    /// `BufferFromHostLiteral` copies **asynchronously** on the TFRT CPU
+    /// client and the C shim exposes no readiness hook, so the source
+    /// literal must outlive the transfer; [`DeviceBuffer`] ties the two
+    /// lifetimes together. Callers that execute the same inputs
+    /// repeatedly (model parameters under eval/serve) should upload once
+    /// and pass the buffers to [`Self::run_buffers`] — host→device
+    /// copies then leave the hot path.
+    pub fn upload(&self, lit: xla::Literal) -> crate::Result<DeviceBuffer> {
+        let buf = self.client.buffer_from_host_literal(None, &lit)?;
+        Ok(DeviceBuffer { buf, _host: lit })
+    }
+
+    /// Execute an artifact: literals in, decomposed tuple of literals out.
+    ///
+    /// All aot.py graphs lower with `return_tuple=True`, so the single
+    /// output buffer is a tuple literal that we decompose into the
+    /// manifest-ordered outputs.
+    ///
+    /// NOTE: inputs are uploaded to device buffers here and freed after
+    /// the call. The vendored `xla` crate's `execute::<Literal>` path is
+    /// **not** used — its C shim leaks every input buffer
+    /// (`BufferFromHostLiteral(..).release()` with no matching free),
+    /// which OOM-killed long pipeline runs before this wrapper existed.
+    /// Upload without retaining the literal — ONLY safe when the literal
+    /// outlives the synchronous execute that consumes the buffer (the
+    /// transfer is async; execution awaits it, so a literal that lives
+    /// until the run's outputs materialize is sufficient).
+    pub(crate) fn upload_borrowed(
+        &self,
+        lit: &xla::Literal,
+    ) -> crate::Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    pub fn run(
+        &self,
+        file: &Path,
+        inputs: &[xla::Literal],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        // borrowed uploads are safe here: the input literals outlive the
+        // synchronous run_buffers call, which awaits the output chain
+        let bufs = inputs
+            .iter()
+            .map(|l| self.upload_borrowed(l))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers(file, &refs)
+    }
+
+    /// Execute an artifact over device-resident input buffers (borrowed —
+    /// the caller keeps ownership and can reuse them across calls).
+    pub fn run_buffers(
+        &self,
+        file: &Path,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let exe = self.compile(file)?;
+        let sw = Stopwatch::start();
+        let result = exe.execute_b::<&xla::PjRtBuffer>(inputs)?;
+        let mut tuple = result[0][0].to_literal_sync()?;
+        let outs = tuple.decompose_tuple()?;
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.executions += 1;
+            st.execute_secs += sw.secs();
+        }
+        Ok(outs)
+    }
+
+    /// Execute by (manifest, artifact-name) with input arity checking.
+    pub fn run_artifact(
+        &self,
+        manifest: &Manifest,
+        name: &str,
+        inputs: &[xla::Literal],
+    ) -> crate::Result<Vec<xla::Literal>> {
+        let sig = manifest.artifact(name)?;
+        anyhow::ensure!(
+            sig.inputs.len() == inputs.len(),
+            "artifact {name}: expected {} inputs, got {}",
+            sig.inputs.len(),
+            inputs.len()
+        );
+        let outs = self
+            .run(&sig.file, inputs)
+            .with_context(|| format!("executing artifact {name}"))?;
+        anyhow::ensure!(
+            outs.len() == sig.outputs.len(),
+            "artifact {name}: expected {} outputs, got {}",
+            sig.outputs.len(),
+            outs.len()
+        );
+        Ok(outs)
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Number of distinct artifacts compiled so far.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// A device-resident input buffer paired with the host literal it was
+/// uploaded from (the async `BufferFromHostLiteral` transfer reads the
+/// literal after `upload` returns — see [`Engine::upload`]).
+pub struct DeviceBuffer {
+    buf: xla::PjRtBuffer,
+    _host: xla::Literal,
+}
+
+impl std::ops::Deref for DeviceBuffer {
+    type Target = xla::PjRtBuffer;
+    fn deref(&self) -> &xla::PjRtBuffer {
+        &self.buf
+    }
+}
+
+/// Pre-resolved kernel manifest handles for one linear-layer shape — the
+/// per-layer prune path asks for these once and then stays allocation-free
+/// on the artifact-lookup side.
+pub struct KernelSet {
+    pub manifest: Manifest,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl KernelSet {
+    pub fn load(engine: &Engine, rows: usize, cols: usize) -> crate::Result<KernelSet> {
+        Ok(KernelSet {
+            manifest: engine.kernel_manifest(rows, cols)?,
+            rows,
+            cols,
+        })
+    }
+
+    /// `score_sq0` / `score_sq1` artifact name for an SQ setting.
+    pub fn score_name(sq: bool) -> &'static str {
+        if sq {
+            "score_sq1"
+        } else {
+            "score_sq0"
+        }
+    }
+
+    /// `mask_{n}_{m}` artifact name.
+    pub fn mask_name(n: usize, m: usize) -> String {
+        format!("mask_{n}_{m}")
+    }
+
+    /// `finalize_vc{0,1}` artifact name.
+    pub fn finalize_name(vc: bool) -> &'static str {
+        if vc {
+            "finalize_vc1"
+        } else {
+            "finalize_vc0"
+        }
+    }
+}

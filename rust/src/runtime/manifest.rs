@@ -1,0 +1,123 @@
+//! Artifact manifest parsing (the JSON contract written by `aot.py`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::json::Json;
+
+/// Shape + dtype of one artifact input/output.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSig {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn parse(j: &Json) -> Option<TensorSig> {
+        Some(TensorSig {
+            shape: j.at("shape").usize_arr()?,
+            dtype: j.at("dtype").as_str()?.to_string(),
+        })
+    }
+}
+
+/// One HLO artifact: file plus its I/O signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// A parsed `manifest.json` (model dir or kernel-shape dir).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSig>,
+    pub raw: Json,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> crate::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let raw = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let mut artifacts = BTreeMap::new();
+        let arts = raw
+            .at("artifacts")
+            .as_obj()
+            .context("manifest: artifacts must be an object")?;
+        for (name, a) in arts {
+            let parse_sigs = |key: &str| -> crate::Result<Vec<TensorSig>> {
+                a.at(key)
+                    .as_arr()
+                    .context("sigs must be an array")?
+                    .iter()
+                    .map(|j| TensorSig::parse(j).context("bad tensor sig"))
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSig {
+                    name: name.clone(),
+                    file: dir.join(a.at("file").as_str().context("file")?),
+                    inputs: parse_sigs("inputs")?,
+                    outputs: parse_sigs("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            artifacts,
+            raw,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> crate::Result<&ArtifactSig> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in {}", self.dir.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_generated_manifest() {
+        // written by `make artifacts`; skip silently when absent so unit
+        // tests can run before the artifacts exist
+        let dir = Path::new("artifacts/tiny");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        let bf = m.artifact("block_fwd").unwrap();
+        assert_eq!(bf.inputs.len(), 10);
+        assert_eq!(bf.outputs.len(), 9);
+        assert!(bf.file.exists());
+        let cfg = m.raw.at("config");
+        assert_eq!(cfg.at("name").as_str(), Some("tiny"));
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let dir = Path::new("artifacts/tiny");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.artifact("nope").is_err());
+    }
+}

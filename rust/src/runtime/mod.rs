@@ -1,0 +1,63 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client.
+//!
+//! This is the only boundary between the Rust coordinator and the XLA
+//! world. Python never runs here — artifacts are self-contained HLO
+//! modules compiled once per process and cached ([`Engine`]).
+
+mod engine;
+mod manifest;
+
+pub use engine::{DeviceBuffer, Engine, KernelSet};
+pub use manifest::{ArtifactSig, Manifest, TensorSig};
+
+use crate::tensor::Tensor;
+
+/// Convert a host tensor to an f32 PJRT literal.
+pub fn literal_f32(t: &Tensor) -> crate::Result<xla::Literal> {
+    literal_f32_slice(t.data(), t.shape())
+}
+
+/// f32 literal directly from a slice + shape.
+pub fn literal_f32_slice(data: &[f32], shape: &[usize]) -> crate::Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape {shape:?} vs len {}", data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// i32 literal from a slice + shape (token ids).
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> crate::Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(n == data.len(), "literal shape {shape:?} vs len {}", data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        shape,
+        bytes,
+    )?)
+}
+
+/// Scalar f32 literal.
+pub fn literal_scalar(x: f32) -> xla::Literal {
+    xla::Literal::scalar(x)
+}
+
+/// Read an f32 literal back into a host tensor.
+pub fn tensor_from_literal(lit: &xla::Literal) -> crate::Result<Tensor> {
+    let shape = lit.array_shape()?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>()?;
+    Ok(Tensor::new(dims, data))
+}
+
+/// Read an f32 literal as a flat vec.
+pub fn vec_from_literal(lit: &xla::Literal) -> crate::Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

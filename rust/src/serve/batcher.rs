@@ -1,0 +1,398 @@
+//! Dynamic batching core.
+//!
+//! Requests carry a tokenized sequence; the batcher coalesces up to
+//! `max_batch` of them (the model's PJRT batch dimension) and flushes
+//! when the batch is full **or** the oldest queued request has waited
+//! `max_wait` — the classic latency/throughput knob. Scoring happens in
+//! the caller-supplied `score_batch` closure so the queueing logic stays
+//! independent of PJRT and can be property-tested directly.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One scoring request: a token sequence (already encoded) plus the
+/// index of the first *scored* token (the `pack_windows` convention —
+/// context tokens before `scored_from` condition but are not scored).
+#[derive(Clone, Debug)]
+pub struct ScoreRequest {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub scored_from: usize,
+}
+
+/// Per-request result: summed and per-token NLL over the scored span.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScoreResponse {
+    pub id: u64,
+    pub sum_nll: f64,
+    pub tokens: usize,
+    /// wall time spent queued + scored
+    pub latency: Duration,
+    /// how many requests shared the PJRT call that served this one
+    pub batch_fill: usize,
+}
+
+/// Batching policy.
+#[derive(Clone, Copy, Debug)]
+pub struct BatcherConfig {
+    /// PJRT batch rows available per call (model config `batch`)
+    pub max_batch: usize,
+    /// flush deadline counted from the oldest queued request
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(20),
+        }
+    }
+}
+
+struct Pending {
+    req: ScoreRequest,
+    enqueued: Instant,
+    reply: Sender<ScoreResponse>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    q: VecDeque<Pending>,
+    closed: bool,
+}
+
+/// Aggregate batcher metrics (monotone counters; read with [`Batcher::stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct BatcherStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub rows_scored: u64,
+    /// flushes triggered by the deadline rather than a full batch
+    pub timeout_flushes: u64,
+}
+
+/// The queue half of the batcher: clone-able submitter + a drain loop.
+pub struct Batcher {
+    cfg: BatcherConfig,
+    state: Arc<(Mutex<QueueState>, Condvar)>,
+    stats: Arc<Mutex<BatcherStats>>,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Self {
+        assert!(cfg.max_batch > 0);
+        Batcher {
+            cfg,
+            state: Arc::new((Mutex::new(QueueState::default()), Condvar::new())),
+            stats: Arc::new(Mutex::new(BatcherStats::default())),
+        }
+    }
+
+    pub fn config(&self) -> BatcherConfig {
+        self.cfg
+    }
+
+    /// Enqueue a request; the returned receiver yields exactly one
+    /// response (or disconnects if the batcher shuts down first).
+    pub fn submit(&self, req: ScoreRequest) -> Receiver<ScoreResponse> {
+        let (tx, rx) = channel();
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        if !st.closed {
+            st.q.push_back(Pending {
+                req,
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+            self.stats.lock().unwrap().requests += 1;
+            cv.notify_all();
+        } // closed: drop tx → receiver disconnects
+        rx
+    }
+
+    /// Stop accepting work and wake the drain loop so it exits once the
+    /// queue empties.
+    pub fn close(&self) {
+        let (lock, cv) = &*self.state;
+        lock.lock().unwrap().closed = true;
+        cv.notify_all();
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        *self.stats.lock().unwrap()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.state.0.lock().unwrap().q.len()
+    }
+
+    /// Collect the next batch according to the policy. Blocks until a
+    /// batch is ready or `None` once closed **and** drained.
+    fn next_batch(&self) -> Option<Vec<Pending>> {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        loop {
+            if st.q.len() >= self.cfg.max_batch {
+                break;
+            }
+            if !st.q.is_empty() {
+                let oldest = st.q.front().unwrap().enqueued;
+                let age = oldest.elapsed();
+                if age >= self.cfg.max_wait {
+                    self.stats.lock().unwrap().timeout_flushes += 1;
+                    break;
+                }
+                // wait out the remaining deadline (or a new arrival)
+                let (s, _t) = cv
+                    .wait_timeout(st, self.cfg.max_wait - age)
+                    .unwrap();
+                st = s;
+                continue;
+            }
+            if st.closed {
+                return None;
+            }
+            st = cv.wait(st).unwrap();
+        }
+        let take = st.q.len().min(self.cfg.max_batch);
+        Some(st.q.drain(..take).collect())
+    }
+
+    /// Drain loop: repeatedly collect a batch and score it with
+    /// `score_batch(rows) -> per-row (sum_nll, tokens)`. Rows are the
+    /// requests' token vectors in arrival order; the callback sees at
+    /// most `max_batch` rows. Returns when closed and drained.
+    pub fn run(
+        &self,
+        mut score_batch: impl FnMut(&[ScoreRequest]) -> crate::Result<Vec<(f64, usize)>>,
+    ) -> crate::Result<()> {
+        while let Some(batch) = self.next_batch() {
+            let reqs: Vec<ScoreRequest> = batch.iter().map(|p| p.req.clone()).collect();
+            let fill = reqs.len();
+            let scored = score_batch(&reqs)?;
+            anyhow::ensure!(
+                scored.len() == fill,
+                "score_batch returned {} rows for {fill} requests",
+                scored.len()
+            );
+            {
+                let mut s = self.stats.lock().unwrap();
+                s.batches += 1;
+                s.rows_scored += fill as u64;
+            }
+            for (p, (sum_nll, tokens)) in batch.into_iter().zip(scored) {
+                // receiver may have hung up (client timeout) — fine
+                let _ = p.reply.send(ScoreResponse {
+                    id: p.req.id,
+                    sum_nll,
+                    tokens,
+                    latency: p.enqueued.elapsed(),
+                    batch_fill: fill,
+                });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::thread;
+
+    fn req(id: u64, len: usize) -> ScoreRequest {
+        ScoreRequest {
+            id,
+            tokens: vec![1; len + 1],
+            scored_from: len,
+        }
+    }
+
+    /// score every row as (id as f64, token count) for traceability
+    fn echo_scorer(reqs: &[ScoreRequest]) -> crate::Result<Vec<(f64, usize)>> {
+        Ok(reqs
+            .iter()
+            .map(|r| (r.id as f64, r.scored_from))
+            .collect())
+    }
+
+    fn with_running<T>(
+        cfg: BatcherConfig,
+        body: impl FnOnce(&Batcher) -> T,
+    ) -> (T, BatcherStats) {
+        let b = Arc::new(Batcher::new(cfg));
+        let b2 = Arc::clone(&b);
+        let h = thread::spawn(move || b2.run(echo_scorer).unwrap());
+        let out = body(&b);
+        b.close();
+        h.join().unwrap();
+        (out, b.stats())
+    }
+
+    #[test]
+    fn every_request_answered_exactly_once() {
+        let ((), stats) = with_running(BatcherConfig::default(), |b| {
+            let rxs: Vec<_> = (0..17).map(|i| b.submit(req(i, 8))).collect();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().unwrap();
+                assert_eq!(resp.id, i as u64);
+                assert_eq!(resp.sum_nll, i as f64);
+                // exactly once: second recv must disconnect, not yield
+                assert!(rx.recv().is_err());
+            }
+        });
+        assert_eq!(stats.requests, 17);
+        assert_eq!(stats.rows_scored, 17);
+    }
+
+    #[test]
+    fn full_batch_flushes_without_deadline() {
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(60), // deadline effectively off
+        };
+        let ((), stats) = with_running(cfg, |b| {
+            let rxs: Vec<_> = (0..8).map(|i| b.submit(req(i, 4))).collect();
+            for rx in rxs {
+                let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                assert_eq!(r.batch_fill, 4);
+            }
+        });
+        assert_eq!(stats.batches, 2);
+        assert_eq!(stats.timeout_flushes, 0);
+    }
+
+    #[test]
+    fn lone_request_flushed_by_deadline() {
+        let cfg = BatcherConfig {
+            max_batch: 64,
+            max_wait: Duration::from_millis(10),
+        };
+        let ((), stats) = with_running(cfg, |b| {
+            let t = Instant::now();
+            let rx = b.submit(req(1, 4));
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.batch_fill, 1);
+            assert!(t.elapsed() >= Duration::from_millis(9), "{:?}", t.elapsed());
+        });
+        assert_eq!(stats.timeout_flushes, 1);
+    }
+
+    #[test]
+    fn batch_never_exceeds_max() {
+        let cfg = BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_millis(5),
+        };
+        let max_seen = Arc::new(AtomicUsize::new(0));
+        let ms = Arc::clone(&max_seen);
+        let b = Arc::new(Batcher::new(cfg));
+        let b2 = Arc::clone(&b);
+        let h = thread::spawn(move || {
+            b2.run(|reqs| {
+                ms.fetch_max(reqs.len(), Ordering::SeqCst);
+                echo_scorer(reqs)
+            })
+            .unwrap()
+        });
+        let rxs: Vec<_> = (0..20).map(|i| b.submit(req(i, 2))).collect();
+        for rx in rxs {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        }
+        b.close();
+        h.join().unwrap();
+        assert!(max_seen.load(Ordering::SeqCst) <= 3);
+        assert!(b.stats().batches >= 7); // ceil(20/3)
+    }
+
+    #[test]
+    fn fifo_order_within_stream() {
+        let ((), _) = with_running(BatcherConfig::default(), |b| {
+            let rxs: Vec<_> = (0..9).map(|i| b.submit(req(i, 2))).collect();
+            let mut fills = Vec::new();
+            for (i, rx) in rxs.into_iter().enumerate() {
+                let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+                assert_eq!(r.id, i as u64, "response routed to wrong request");
+                fills.push(r.batch_fill);
+            }
+            assert!(fills.iter().all(|&f| f >= 1 && f <= 4));
+        });
+    }
+
+    #[test]
+    fn submit_after_close_disconnects() {
+        let b = Batcher::new(BatcherConfig::default());
+        b.close();
+        let rx = b.submit(req(1, 2));
+        assert!(rx.recv().is_err());
+        // run() on a closed empty batcher returns immediately
+        b.run(echo_scorer).unwrap();
+    }
+
+    #[test]
+    fn concurrent_submitters_all_served() {
+        let cfg = BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+        };
+        let b = Arc::new(Batcher::new(cfg));
+        let b2 = Arc::clone(&b);
+        let worker = thread::spawn(move || b2.run(echo_scorer).unwrap());
+        let mut clients = Vec::new();
+        for t in 0..6 {
+            let b3 = Arc::clone(&b);
+            clients.push(thread::spawn(move || {
+                for i in 0..10u64 {
+                    let id = t * 100 + i;
+                    let r = b3
+                        .submit(req(id, 3))
+                        .recv_timeout(Duration::from_secs(10))
+                        .unwrap();
+                    assert_eq!(r.id, id);
+                }
+            }));
+        }
+        for c in clients {
+            c.join().unwrap();
+        }
+        b.close();
+        worker.join().unwrap();
+        assert_eq!(b.stats().rows_scored, 60);
+    }
+
+    #[test]
+    fn property_random_traffic_conservation() {
+        use crate::util::propcheck::{check, Gen};
+        check("batcher conserves requests", 8, |g: &mut Gen| {
+            let cfg = BatcherConfig {
+                max_batch: g.int(1, 6),
+                max_wait: Duration::from_millis(g.int(0, 8) as u64),
+            };
+            let n = g.int(1, 40) as u64;
+            let b = Arc::new(Batcher::new(cfg));
+            let b2 = Arc::clone(&b);
+            let h = thread::spawn(move || b2.run(echo_scorer).unwrap());
+            let rxs: Vec<_> = (0..n).map(|i| b.submit(req(i, 1 + (i as usize % 7)))).collect();
+            let mut seen = std::collections::HashSet::new();
+            for rx in rxs {
+                let r = rx
+                    .recv_timeout(Duration::from_secs(10))
+                    .map_err(|e| format!("lost response: {e}"))?;
+                if !seen.insert(r.id) {
+                    return Err(format!("duplicate response id {}", r.id));
+                }
+            }
+            b.close();
+            h.join().unwrap();
+            let s = b.stats();
+            if s.rows_scored != n || s.requests != n {
+                return Err(format!("stats {s:?} vs n={n}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,93 @@
+//! Blocking client for the scoring server — used by the integration
+//! tests, the `serve_demo` example and the `serve-bench` CLI load
+//! generator.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::protocol::{Request, Response};
+
+/// One TCP connection speaking the line protocol.
+pub struct ServeClient {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl ServeClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> crate::Result<ServeClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(ServeClient { stream, reader })
+    }
+
+    pub fn set_timeout(&self, d: Duration) -> crate::Result<()> {
+        self.stream.set_read_timeout(Some(d))?;
+        Ok(())
+    }
+
+    /// Send one request, await its response line.
+    pub fn call(&mut self, req: &Request) -> crate::Result<Response> {
+        let mut line = req.to_json().to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        Response::parse(buf.trim_end()).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Send a raw line (protocol fuzzing / tests) and parse the reply.
+    pub fn call_raw(&mut self, raw: &str) -> crate::Result<Response> {
+        self.stream.write_all(raw.as_bytes())?;
+        self.stream.write_all(b"\n")?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        Response::parse(buf.trim_end()).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    pub fn ping(&mut self) -> crate::Result<bool> {
+        Ok(matches!(self.call(&Request::Ping)?, Response::Pong))
+    }
+
+    /// Mean NLL of `text` under the served model.
+    pub fn nll(&mut self, text: &str) -> crate::Result<(f64, usize)> {
+        match self.call(&Request::Nll { text: text.into() })? {
+            Response::Nll {
+                mean_nll, tokens, ..
+            } => Ok((mean_nll, tokens)),
+            Response::Error(e) => anyhow::bail!("server error: {e}"),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Index of the best (lowest length-normalized NLL) continuation.
+    pub fn choice(&mut self, context: &str, choices: &[&str]) -> crate::Result<(usize, Vec<f64>)> {
+        let req = Request::Choice {
+            context: context.into(),
+            choices: choices.iter().map(|s| s.to_string()).collect(),
+        };
+        match self.call(&req)? {
+            Response::Choice { best, scores, .. } => Ok((best, scores)),
+            Response::Error(e) => anyhow::bail!("server error: {e}"),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    /// Raw stats object.
+    pub fn stats(&mut self) -> crate::Result<crate::util::json::Json> {
+        match self.call(&Request::Stats)? {
+            Response::Stats(j) => Ok(j),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
+    pub fn shutdown(&mut self) -> crate::Result<()> {
+        match self.call(&Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+}

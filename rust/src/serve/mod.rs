@@ -1,0 +1,26 @@
+//! Scoring service — the compressed model behind a socket.
+//!
+//! The paper motivates 8:16 sparsity with deployment efficiency; this
+//! module is the deployment: a Rust-only eval server that loads a
+//! (compressed) checkpoint plus the AOT artifacts and serves
+//! log-likelihood scoring over TCP with **dynamic batching** — requests
+//! are coalesced into the model's fixed PJRT batch shape, vLLM-router
+//! style, so single-request clients still get full-batch throughput.
+//! Python is never involved: the request path is socket → batcher →
+//! PJRT executable.
+//!
+//! * [`batcher`] — the queueing/coalescing core (pure, fully unit- and
+//!   property-tested without sockets);
+//! * [`server`] — TCP front end speaking newline-delimited JSON;
+//! * [`client`] — a small blocking client used by tests, examples and
+//!   the `serve-bench` CLI.
+
+pub mod batcher;
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use batcher::{Batcher, BatcherConfig, ScoreRequest, ScoreResponse};
+pub use client::ServeClient;
+pub use protocol::{Request, Response};
+pub use server::{pjrt_scorer, serve, Scorer, ServerConfig, ServerHandle, ServerStats};

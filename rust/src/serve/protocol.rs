@@ -1,0 +1,278 @@
+//! Wire protocol: newline-delimited JSON over TCP.
+//!
+//! Requests (one JSON object per line):
+//!
+//! * `{"op":"ping"}` → `{"ok":true,"pong":true}`
+//! * `{"op":"nll","text":"..."}` → mean/sum NLL of the text under the
+//!   served model
+//! * `{"op":"choice","context":"...","choices":["a","b",...]}` → the
+//!   lm-eval-harness zero-shot protocol: rank continuations by summed
+//!   log-likelihood, report the argmin-NLL choice
+//! * `{"op":"stats"}` → server + batcher counters
+//! * `{"op":"shutdown"}` → drain and stop (admin)
+//!
+//! Responses always carry `"ok"`; failures put a message in `"error"`
+//! and never kill the connection.
+
+use crate::util::json::Json;
+
+/// Parsed client request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    Ping,
+    Nll { text: String },
+    Choice { context: String, choices: Vec<String> },
+    Stats,
+    Shutdown,
+}
+
+impl Request {
+    pub fn parse(line: &str) -> Result<Request, String> {
+        let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+        let op = v
+            .get("op")
+            .and_then(|o| o.as_str())
+            .ok_or_else(|| "missing \"op\"".to_string())?;
+        match op {
+            "ping" => Ok(Request::Ping),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            "nll" => {
+                let text = v
+                    .get("text")
+                    .and_then(|t| t.as_str())
+                    .ok_or_else(|| "nll needs \"text\"".to_string())?;
+                if text.is_empty() {
+                    return Err("empty text".into());
+                }
+                Ok(Request::Nll { text: text.to_string() })
+            }
+            "choice" => {
+                let context = v
+                    .get("context")
+                    .and_then(|t| t.as_str())
+                    .ok_or_else(|| "choice needs \"context\"".to_string())?
+                    .to_string();
+                let choices: Vec<String> = v
+                    .get("choices")
+                    .and_then(|c| c.as_arr())
+                    .ok_or_else(|| "choice needs \"choices\"".to_string())?
+                    .iter()
+                    .filter_map(|c| c.as_str().map(str::to_string))
+                    .collect();
+                if choices.len() < 2 {
+                    return Err("need at least 2 choices".into());
+                }
+                Ok(Request::Choice { context, choices })
+            }
+            other => Err(format!("unknown op {other:?}")),
+        }
+    }
+
+    /// Serialize (client side).
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Ping => Json::obj(vec![("op", Json::str("ping"))]),
+            Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
+            Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
+            Request::Nll { text } => Json::obj(vec![
+                ("op", Json::str("nll")),
+                ("text", Json::str(text.clone())),
+            ]),
+            Request::Choice { context, choices } => Json::obj(vec![
+                ("op", Json::str("choice")),
+                ("context", Json::str(context.clone())),
+                (
+                    "choices",
+                    Json::Arr(choices.iter().map(|c| Json::str(c.clone())).collect()),
+                ),
+            ]),
+        }
+    }
+}
+
+/// Server responses, serialized with [`Response::to_json`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Pong,
+    Nll {
+        mean_nll: f64,
+        sum_nll: f64,
+        tokens: usize,
+        latency_ms: f64,
+        batch_fill: usize,
+    },
+    Choice {
+        best: usize,
+        scores: Vec<f64>,
+        latency_ms: f64,
+    },
+    Stats(Json),
+    ShuttingDown,
+    Error(String),
+}
+
+impl Response {
+    pub fn to_json(&self) -> Json {
+        match self {
+            Response::Pong => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("pong", Json::Bool(true)),
+            ]),
+            Response::Nll {
+                mean_nll,
+                sum_nll,
+                tokens,
+                latency_ms,
+                batch_fill,
+            } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("mean_nll", Json::num(*mean_nll)),
+                ("sum_nll", Json::num(*sum_nll)),
+                ("tokens", Json::num(*tokens as f64)),
+                ("latency_ms", Json::num(*latency_ms)),
+                ("batch_fill", Json::num(*batch_fill as f64)),
+            ]),
+            Response::Choice {
+                best,
+                scores,
+                latency_ms,
+            } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("best", Json::num(*best as f64)),
+                (
+                    "scores",
+                    Json::Arr(scores.iter().map(|&s| Json::num(s)).collect()),
+                ),
+                ("latency_ms", Json::num(*latency_ms)),
+            ]),
+            Response::Stats(j) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("stats", j.clone()),
+            ]),
+            Response::ShuttingDown => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("shutdown", Json::Bool(true)),
+            ]),
+            Response::Error(msg) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(msg.clone())),
+            ]),
+        }
+    }
+
+    /// Parse a server line (client side).
+    pub fn parse(line: &str) -> Result<Response, String> {
+        let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+        let ok = v.get("ok").and_then(|o| o.as_bool()).unwrap_or(false);
+        if !ok {
+            let msg = v
+                .get("error")
+                .and_then(|e| e.as_str())
+                .unwrap_or("unknown error");
+            return Ok(Response::Error(msg.to_string()));
+        }
+        if v.get("pong").is_some() {
+            return Ok(Response::Pong);
+        }
+        if v.get("shutdown").is_some() {
+            return Ok(Response::ShuttingDown);
+        }
+        if let Some(s) = v.get("stats") {
+            return Ok(Response::Stats(s.clone()));
+        }
+        if let Some(best) = v.get("best").and_then(|b| b.as_f64()) {
+            let scores = v
+                .get("scores")
+                .and_then(|s| s.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
+                .unwrap_or_default();
+            let latency_ms = v.get("latency_ms").and_then(|l| l.as_f64()).unwrap_or(0.0);
+            return Ok(Response::Choice {
+                best: best as usize,
+                scores,
+                latency_ms,
+            });
+        }
+        if let Some(mean) = v.get("mean_nll").and_then(|m| m.as_f64()) {
+            return Ok(Response::Nll {
+                mean_nll: mean,
+                sum_nll: v.get("sum_nll").and_then(|s| s.as_f64()).unwrap_or(0.0),
+                tokens: v
+                    .get("tokens")
+                    .and_then(|t| t.as_usize())
+                    .unwrap_or(0),
+                latency_ms: v.get("latency_ms").and_then(|l| l.as_f64()).unwrap_or(0.0),
+                batch_fill: v
+                    .get("batch_fill")
+                    .and_then(|b| b.as_usize())
+                    .unwrap_or(0),
+            });
+        }
+        Err(format!("unrecognized response {line:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_roundtrip() {
+        for r in [
+            Request::Ping,
+            Request::Stats,
+            Request::Shutdown,
+            Request::Nll {
+                text: "the quick brown fox".into(),
+            },
+            Request::Choice {
+                context: "2+2 =".into(),
+                choices: vec!["4".into(), "5".into()],
+            },
+        ] {
+            let line = r.to_json().to_string();
+            assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
+        }
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        for r in [
+            Response::Pong,
+            Response::ShuttingDown,
+            Response::Error("boom".into()),
+            Response::Nll {
+                mean_nll: 2.5,
+                sum_nll: 10.0,
+                tokens: 4,
+                latency_ms: 1.25,
+                batch_fill: 3,
+            },
+            Response::Choice {
+                best: 1,
+                scores: vec![3.0, 2.0, 4.5],
+                latency_ms: 0.5,
+            },
+        ] {
+            let line = r.to_json().to_string();
+            assert_eq!(Response::parse(&line).unwrap(), r, "{line}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(Request::parse("not json").is_err());
+        assert!(Request::parse("{}").is_err());
+        assert!(Request::parse("{\"op\":\"frobnicate\"}").is_err());
+        assert!(Request::parse("{\"op\":\"nll\"}").is_err());
+        assert!(Request::parse("{\"op\":\"nll\",\"text\":\"\"}").is_err());
+        assert!(Request::parse("{\"op\":\"choice\",\"context\":\"c\",\"choices\":[\"x\"]}").is_err());
+    }
+
+    #[test]
+    fn error_response_is_not_fatal_to_parse() {
+        let r = Response::parse("{\"ok\":false,\"error\":\"bad\"}").unwrap();
+        assert_eq!(r, Response::Error("bad".into()));
+    }
+}

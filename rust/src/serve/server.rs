@@ -1,0 +1,518 @@
+//! TCP front end: newline-delimited JSON requests, dynamically batched
+//! PJRT scoring behind them.
+//!
+//! Layout: one acceptor thread, one OS thread per connection (bounded by
+//! `max_conns`), one scoring thread owning the PJRT state and draining
+//! the [`Batcher`]. PJRT handles are `!Send` (the `xla` crate wraps
+//! `Rc`s over C pointers), so the server takes a **scorer factory**: a
+//! `Send` closure invoked *on* the scoring thread to build the scorer —
+//! [`pjrt_scorer`] is the production factory; tests pass fakes. Shutdown
+//! is cooperative: `{"op":"shutdown"}` (or [`ServerHandle::shutdown`])
+//! closes the batcher, unblocks the acceptor and joins every thread.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batcher, BatcherConfig, ScoreRequest};
+use super::protocol::{Request, Response};
+use crate::data::batch::pack_windows;
+use crate::data::tokenizer::BOS;
+use crate::data::Tokenizer;
+use crate::util::json::Json;
+
+/// Server tuning.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// bind address; use port 0 to let the OS pick (tests)
+    pub addr: String,
+    /// max simultaneous connections
+    pub max_conns: usize,
+    /// PJRT batch rows coalesced per scoring call (the model's batch dim)
+    pub max_batch: usize,
+    /// batching deadline (see [`BatcherConfig::max_wait`])
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7433".into(),
+            max_conns: 32,
+            max_batch: 4,
+            max_wait: Duration::from_millis(15),
+        }
+    }
+}
+
+/// Live server counters (exposed by `{"op":"stats"}`).
+#[derive(Debug, Default)]
+pub struct ServerStats {
+    pub connections: AtomicU64,
+    pub requests: AtomicU64,
+    pub errors: AtomicU64,
+    pub nll_ops: AtomicU64,
+    pub choice_ops: AtomicU64,
+}
+
+/// Handle returned by [`serve`]: join or stop the server.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    batcher: Arc<Batcher>,
+    threads: Vec<JoinHandle<()>>,
+    scorer: Option<JoinHandle<crate::Result<()>>>,
+    pub stats: Arc<ServerStats>,
+}
+
+impl ServerHandle {
+    /// Signal shutdown and join all threads.
+    pub fn shutdown(mut self) -> crate::Result<()> {
+        self.stop.store(true, Ordering::SeqCst);
+        self.batcher.close();
+        // poke the acceptor out of accept()
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        if let Some(s) = self.scorer.take() {
+            s.join().map_err(|_| anyhow::anyhow!("scorer panicked"))??;
+        }
+        Ok(())
+    }
+
+    /// Block until the scoring thread exits (e.g. after a client sent
+    /// `shutdown`), then join the rest.
+    pub fn join(mut self) -> crate::Result<()> {
+        if let Some(s) = self.scorer.take() {
+            s.join().map_err(|_| anyhow::anyhow!("scorer panicked"))??;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        let _ = TcpStream::connect(self.addr);
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        Ok(())
+    }
+
+    pub fn batcher_stats(&self) -> super::batcher::BatcherStats {
+        self.batcher.stats()
+    }
+}
+
+/// A batch scorer: rows in arrival order → per-row `(sum_nll, tokens)`.
+pub type Scorer = Box<dyn FnMut(&[ScoreRequest]) -> crate::Result<Vec<(f64, usize)>>>;
+
+/// Production scorer factory: builds the PJRT engine, loads `config_name`
+/// artifacts, uploads `params`, and scores via the `lm_nll` executable.
+/// Invoke *inside* the scoring thread (PJRT is thread-bound).
+pub fn pjrt_scorer(
+    artifacts: String,
+    config_name: String,
+    params: crate::model::ParamSet,
+) -> impl FnOnce() -> crate::Result<Scorer> + Send {
+    move || {
+        let engine = Arc::new(crate::runtime::Engine::new(&artifacts)?);
+        let exec = crate::coordinator::ModelExec::new(engine, &config_name)?;
+        let lits = exec.upload(&params)?;
+        let (b, s) = (exec.config.batch, exec.config.seq);
+        Ok(Box::new(move |reqs: &[ScoreRequest]| {
+            let items: Vec<(Vec<i32>, usize)> = reqs
+                .iter()
+                .map(|r| (r.tokens.clone(), r.scored_from))
+                .collect();
+            let (ids, mask) = pack_windows(&items, b, s);
+            let nll = exec.lm_nll(&lits, &ids)?;
+            Ok((0..reqs.len())
+                .map(|r| {
+                    let row = &nll.data()[r * s..(r + 1) * s];
+                    let mrow = &mask[r * s..(r + 1) * s];
+                    let sum: f64 = row
+                        .iter()
+                        .zip(mrow)
+                        .map(|(&n, &m)| n as f64 * m as f64)
+                        .sum();
+                    let count = mrow.iter().filter(|&&m| m != 0.0).count();
+                    (sum, count)
+                })
+                .collect())
+        }) as Scorer)
+    }
+}
+
+/// Start the server. `factory` runs on the scoring thread; [`serve`]
+/// returns after the socket is bound **and** the factory succeeded (its
+/// error is propagated here otherwise).
+pub fn serve(
+    factory: impl FnOnce() -> crate::Result<Scorer> + Send + 'static,
+    tokenizer: Arc<Tokenizer>,
+    cfg: ServerConfig,
+) -> crate::Result<ServerHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stats = Arc::new(ServerStats::default());
+    let batcher = Arc::new(Batcher::new(BatcherConfig {
+        max_batch: cfg.max_batch,
+        max_wait: cfg.max_wait,
+    }));
+
+    // ---- scoring thread: builds PJRT state, drains the batcher --------
+    let (ready_tx, ready_rx) = sync_channel::<crate::Result<()>>(1);
+    let scorer_thread = {
+        let batcher = Arc::clone(&batcher);
+        std::thread::spawn(move || -> crate::Result<()> {
+            let mut scorer = match factory() {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                    return Err(e);
+                }
+            };
+            batcher.run(move |reqs| scorer(reqs))
+        })
+    };
+    if let Err(e) = ready_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("scorer thread died during startup"))?
+    {
+        let _ = scorer_thread.join();
+        return Err(e);
+    }
+
+    // ---- acceptor + per-connection threads ----------------------------
+    let acceptor = {
+        let stop = Arc::clone(&stop);
+        let stats = Arc::clone(&stats);
+        let batcher = Arc::clone(&batcher);
+        let tokenizer = Arc::clone(&tokenizer);
+        let max_conns = cfg.max_conns;
+        std::thread::spawn(move || {
+            let live = Arc::new(Mutex::new(Vec::<JoinHandle<()>>::new()));
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                // reap finished handlers; enforce the connection cap
+                {
+                    let mut v = live.lock().unwrap();
+                    v.retain(|h| !h.is_finished());
+                    if v.len() >= max_conns {
+                        let _ = respond(
+                            &stream,
+                            &Response::Error("server at connection capacity".into()),
+                        );
+                        continue;
+                    }
+                }
+                stats.connections.fetch_add(1, Ordering::Relaxed);
+                let stop2 = Arc::clone(&stop);
+                let stats2 = Arc::clone(&stats);
+                let batcher2 = Arc::clone(&batcher);
+                let tok2 = Arc::clone(&tokenizer);
+                let h = std::thread::spawn(move || {
+                    handle_conn(stream, &stop2, &stats2, &batcher2, &tok2)
+                });
+                live.lock().unwrap().push(h);
+            }
+            for h in live.lock().unwrap().drain(..) {
+                let _ = h.join();
+            }
+        })
+    };
+
+    Ok(ServerHandle {
+        addr,
+        stop,
+        batcher,
+        threads: vec![acceptor],
+        scorer: Some(scorer_thread),
+        stats,
+    })
+}
+
+fn respond(mut stream: &TcpStream, resp: &Response) -> std::io::Result<()> {
+    let mut line = resp.to_json().to_string();
+    line.push('\n');
+    stream.write_all(line.as_bytes())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    stop: &AtomicBool,
+    stats: &ServerStats,
+    batcher: &Batcher,
+    tok: &Tokenizer,
+) {
+    // read with a timeout so the handler notices `stop` even while the
+    // client keeps the connection open — shutdown() joins these threads
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .is_err()
+    {
+        return;
+    }
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let next_id = AtomicU64::new(1);
+    let mut buf = String::new();
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        // read_line appends: a timeout mid-line keeps the partial prefix
+        // in `buf` and the next pass completes it
+        match reader.read_line(&mut buf) {
+            Ok(0) => break, // EOF
+            Ok(_) if buf.ends_with('\n') => {}
+            Ok(_) => continue, // partial line before EOF-less timeout
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+        let line = std::mem::take(&mut buf);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        stats.requests.fetch_add(1, Ordering::Relaxed);
+        let resp = match Request::parse(&line) {
+            Err(e) => {
+                stats.errors.fetch_add(1, Ordering::Relaxed);
+                Response::Error(e)
+            }
+            Ok(Request::Ping) => Response::Pong,
+            Ok(Request::Shutdown) => {
+                let _ = respond(&stream, &Response::ShuttingDown);
+                stop.store(true, Ordering::SeqCst);
+                batcher.close();
+                return;
+            }
+            Ok(Request::Stats) => {
+                let b = batcher.stats();
+                Response::Stats(Json::obj(vec![
+                    (
+                        "connections",
+                        Json::num(stats.connections.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "requests",
+                        Json::num(stats.requests.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "errors",
+                        Json::num(stats.errors.load(Ordering::Relaxed) as f64),
+                    ),
+                    ("batches", Json::num(b.batches as f64)),
+                    ("rows_scored", Json::num(b.rows_scored as f64)),
+                    ("timeout_flushes", Json::num(b.timeout_flushes as f64)),
+                    ("queue_depth", Json::num(batcher.queue_depth() as f64)),
+                ]))
+            }
+            Ok(Request::Nll { text }) => {
+                stats.nll_ops.fetch_add(1, Ordering::Relaxed);
+                let t0 = Instant::now();
+                let mut ids = vec![BOS];
+                ids.extend(tok.encode(&text));
+                let rx = batcher.submit(ScoreRequest {
+                    id: next_id.fetch_add(1, Ordering::Relaxed),
+                    tokens: ids,
+                    scored_from: 1,
+                });
+                match rx.recv() {
+                    Ok(r) if r.tokens > 0 => Response::Nll {
+                        mean_nll: r.sum_nll / r.tokens as f64,
+                        sum_nll: r.sum_nll,
+                        tokens: r.tokens,
+                        latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                        batch_fill: r.batch_fill,
+                    },
+                    Ok(_) => Response::Error("text tokenized to nothing scorable".into()),
+                    Err(_) => Response::Error("server shutting down".into()),
+                }
+            }
+            Ok(Request::Choice { context, choices }) => {
+                stats.choice_ops.fetch_add(1, Ordering::Relaxed);
+                let t0 = Instant::now();
+                // submit all candidates, then await — they share batches
+                let ctx_len = tok.encode(&context).len();
+                let rxs: Vec<_> = choices
+                    .iter()
+                    .map(|c| {
+                        let full = format!("{context} {c}");
+                        let mut ids = vec![BOS];
+                        ids.extend(tok.encode(&full));
+                        batcher.submit(ScoreRequest {
+                            id: next_id.fetch_add(1, Ordering::Relaxed),
+                            tokens: ids,
+                            scored_from: 1 + ctx_len,
+                        })
+                    })
+                    .collect();
+                let mut scores = Vec::with_capacity(rxs.len());
+                let mut failed = false;
+                for rx in rxs {
+                    match rx.recv() {
+                        Ok(r) if r.tokens > 0 => scores.push(r.sum_nll / r.tokens as f64),
+                        Ok(_) => scores.push(f64::INFINITY),
+                        Err(_) => {
+                            failed = true;
+                            break;
+                        }
+                    }
+                }
+                if failed {
+                    Response::Error("server shutting down".into())
+                } else {
+                    let best = scores
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap_or(0);
+                    Response::Choice {
+                        best,
+                        scores,
+                        latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                    }
+                }
+            }
+        };
+        if respond(&stream, &resp).is_err() {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::ServeClient;
+
+    /// fake scorer: sum_nll = number of scored positions (so mean = 1)
+    fn fake_factory() -> crate::Result<Scorer> {
+        Ok(Box::new(|reqs: &[ScoreRequest]| {
+            Ok(reqs
+                .iter()
+                .map(|r| {
+                    let scored = r.tokens.len().saturating_sub(r.scored_from.max(1));
+                    (scored as f64, scored)
+                })
+                .collect())
+        }))
+    }
+
+    fn test_tokenizer() -> Arc<Tokenizer> {
+        let text = "the quick brown fox jumps over the lazy dog . \
+                    a stitch in time saves nine . all that glitters is not gold .";
+        Arc::new(Tokenizer::fit(text, 256))
+    }
+
+    fn test_server() -> ServerHandle {
+        serve(
+            fake_factory,
+            test_tokenizer(),
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                max_conns: 8,
+                max_batch: 3,
+                max_wait: Duration::from_millis(3),
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn ping_nll_choice_stats_roundtrip() {
+        let h = test_server();
+        let mut c = ServeClient::connect(h.addr).unwrap();
+        assert!(c.ping().unwrap());
+        let (mean, tokens) = c.nll("the quick brown fox").unwrap();
+        assert!(tokens > 0);
+        assert!((mean - 1.0).abs() < 1e-9, "fake scorer yields mean 1");
+        let (_best, scores) = c
+            .choice("the quick", &["brown fox", "lazy dog jumps"])
+            .unwrap();
+        assert_eq!(scores.len(), 2);
+        let stats = c.stats().unwrap();
+        assert!(stats.at("requests").as_f64().unwrap() >= 3.0);
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn malformed_requests_keep_connection_alive() {
+        let h = test_server();
+        let mut c = ServeClient::connect(h.addr).unwrap();
+        for bad in ["garbage", "{}", "{\"op\":\"nope\"}"] {
+            // a valid call works...
+            let resp = c.call(&Request::Nll { text: "x".into() }).unwrap();
+            assert!(!matches!(resp, Response::Error(_)), "{resp:?}");
+            // ...and raw garbage yields an error, not a hangup
+            let r = c.call_raw(bad).unwrap();
+            assert!(matches!(r, Response::Error(_)), "{bad}");
+        }
+        assert!(c.ping().unwrap(), "connection survived the garbage");
+        assert_eq!(h.stats.errors.load(Ordering::Relaxed), 3);
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients_share_batches() {
+        let h = test_server();
+        let addr = h.addr;
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            handles.push(std::thread::spawn(move || {
+                let mut c = ServeClient::connect(addr).unwrap();
+                for _ in 0..5 {
+                    let (mean, _) = c.nll("the quick brown fox jumps").unwrap();
+                    assert!((mean - 1.0).abs() < 1e-9);
+                }
+            }));
+        }
+        for t in handles {
+            t.join().unwrap();
+        }
+        let bs = h.batcher_stats();
+        assert_eq!(bs.rows_scored, 20);
+        // dynamic batching actually coalesced concurrent traffic
+        assert!(bs.batches < 20, "no batching happened: {bs:?}");
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn client_shutdown_op_stops_server() {
+        let h = test_server();
+        let mut c = ServeClient::connect(h.addr).unwrap();
+        c.shutdown().unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn factory_failure_propagates() {
+        let r = serve(
+            || anyhow::bail!("no checkpoint"),
+            test_tokenizer(),
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                ..Default::default()
+            },
+        );
+        assert!(r.is_err());
+        assert!(format!("{:#}", r.err().unwrap()).contains("no checkpoint"));
+    }
+}

@@ -1,0 +1,172 @@
+//! CSR storage — the *unstructured* salient-weight baseline (SPQR-style,
+//! Dettmers et al. 2023b) that Table 7 contrasts with the structured
+//! k:256 format.
+//!
+//! Per nonzero: bf16 value + u32 column index; per row: one u32 row
+//! pointer. Metadata grows linearly with nonzeros and access is irregular
+//! — exactly the inefficiency §1 motivates structured outliers with.
+
+use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
+
+#[derive(Clone, Debug)]
+pub struct Csr {
+    pub rows: usize,
+    pub cols: usize,
+    row_ptr: Vec<u32>,
+    col_idx: Vec<u32>,
+    values: Vec<u16>,
+}
+
+impl Csr {
+    /// Compress the nonzeros of `dense * mask`.
+    pub fn from_dense_mask(dense: &Tensor, mask: &Tensor) -> Self {
+        let (rows, cols) = dense.dims2();
+        assert_eq!(dense.shape(), mask.shape());
+        let mut row_ptr = Vec::with_capacity(rows + 1);
+        let mut col_idx = Vec::new();
+        let mut values = Vec::new();
+        row_ptr.push(0u32);
+        for r in 0..rows {
+            let drow = dense.row(r);
+            let mrow = mask.row(r);
+            for c in 0..cols {
+                if mrow[c] != 0.0 {
+                    col_idx.push(c as u32);
+                    values.push(f32_to_bf16(drow[c]));
+                }
+            }
+            row_ptr.push(col_idx.len() as u32);
+        }
+        Csr {
+            rows,
+            cols,
+            row_ptr,
+            col_idx,
+            values,
+        }
+    }
+
+    /// Keep the top-`count` entries of `score` with no structural
+    /// constraint — the unstructured selection used for the Table 7
+    /// baseline at a matched salient budget.
+    pub fn from_topk_global(dense: &Tensor, score: &Tensor, count: usize) -> Self {
+        let (rows, cols) = dense.dims2();
+        assert_eq!(dense.shape(), score.shape());
+        let mut idx: Vec<usize> = (0..rows * cols).collect();
+        idx.sort_unstable_by(|&a, &b| {
+            score.data()[b]
+                .partial_cmp(&score.data()[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut keep = vec![false; rows * cols];
+        for &i in idx.iter().take(count) {
+            keep[i] = true;
+        }
+        let mask = Tensor::new(
+            vec![rows, cols],
+            keep.iter().map(|&b| if b { 1.0 } else { 0.0 }).collect(),
+        );
+        Csr::from_dense_mask(dense, &mask)
+    }
+
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for i in lo..hi {
+                out[r * self.cols + self.col_idx[i] as usize] = bf16_to_f32(self.values[i]);
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// Add the stored values onto `dst` in place.
+    pub fn add_into(&self, dst: &mut Tensor) {
+        assert_eq!(dst.shape(), [self.rows, self.cols]);
+        let cols = self.cols;
+        let data = dst.data_mut();
+        for r in 0..self.rows {
+            let (lo, hi) = (self.row_ptr[r] as usize, self.row_ptr[r + 1] as usize);
+            for i in lo..hi {
+                data[r * cols + self.col_idx[i] as usize] += bf16_to_f32(self.values[i]);
+            }
+        }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Storage bytes: values (2) + column indices (4) + row pointers (4).
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 2 + self.col_idx.len() * 4 + self.row_ptr.len() * 4
+    }
+
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask_topn_per_block;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(13);
+        let w = Tensor::randn(vec![16, 64], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 2, 4);
+        let csr = Csr::from_dense_mask(&w, &mask);
+        assert_eq!(csr.nnz(), 16 * 64 / 2);
+        let d = csr.to_dense();
+        for i in 0..w.len() {
+            let want = w.data()[i] * mask.data()[i];
+            assert!((d.data()[i] - want).abs() <= want.abs() * 0.01 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn topk_global_exact_budget() {
+        let mut rng = Rng::new(17);
+        let w = Tensor::randn(vec![8, 128], 0.05, &mut rng);
+        let csr = Csr::from_topk_global(&w, &w.map(f32::abs), 37);
+        assert_eq!(csr.nnz(), 37);
+        // every kept |value| >= every dropped |value| (bf16-rounded check)
+        let dense = csr.to_dense();
+        let kept_min = dense
+            .data()
+            .iter()
+            .filter(|x| **x != 0.0)
+            .fold(f32::INFINITY, |a, &x| a.min(x.abs()));
+        let mut alldrop: Vec<f32> = w
+            .data()
+            .iter()
+            .zip(dense.data())
+            .filter(|(_, &d)| d == 0.0)
+            .map(|(&x, _)| x.abs())
+            .collect();
+        alldrop.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        assert!(kept_min * 1.01 >= alldrop[0]);
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let w = Tensor::zeros(vec![4, 16]);
+        let csr = Csr::from_dense_mask(&w, &Tensor::zeros(vec![4, 16]));
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_dense(), Tensor::zeros(vec![4, 16]));
+    }
+
+    #[test]
+    fn add_into_accumulates() {
+        let w = Tensor::new(vec![1, 4], vec![1., 2., 3., 4.]);
+        let mask = Tensor::new(vec![1, 4], vec![0., 1., 0., 1.]);
+        let csr = Csr::from_dense_mask(&w, &mask);
+        let mut dst = Tensor::ones(vec![1, 4]);
+        csr.add_into(&mut dst);
+        assert_eq!(dst.data(), &[1., 3., 1., 5.]);
+    }
+}

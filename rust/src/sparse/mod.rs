@@ -1,0 +1,20 @@
+//! Sparse storage substrates: the N:M pattern codebook, packed N:M weight
+//! storage, the structured k:256 outlier format, and CSR for the
+//! unstructured baseline.
+//!
+//! These implement the storage-accounting side of the paper's §2 (Table 1
+//! bits/element, configuration counts) and the formats contrasted in
+//! Table 7 (structured vs unstructured salient weights). Packing runs on
+//! the Rust hot path after each per-layer prune job.
+
+pub mod csr;
+pub mod nm;
+pub mod outliers;
+pub mod patterns;
+pub mod vnm;
+
+pub use csr::Csr;
+pub use nm::PackedNm;
+pub use outliers::StructuredOutliers;
+pub use patterns::PatternInfo;
+pub use vnm::{vnm_select, PackedVnm};

@@ -1,0 +1,287 @@
+//! Packed N:M weight storage.
+//!
+//! For every contiguous `(1, M)` block along the input-channel axis the
+//! format stores the `N` kept values (bf16) plus the block's keep-pattern
+//! as a combinadic rank in `ceil(log2 C(M,N))` bits (the codebook encoding
+//! of Table 1 — 0.75 bits/elt for 2:4, 0.875 for 8:16).  Pattern ids are
+//! bit-packed contiguously; values are laid out block-major so a hardware
+//! decoder (or [`Self::to_dense`]) streams both arrays linearly.
+
+use super::patterns::{rank_combination, unrank_combination, PatternInfo};
+use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
+
+/// A rank-2 weight matrix stored in packed N:M form.
+#[derive(Clone, Debug)]
+pub struct PackedNm {
+    pub pattern: PatternInfo,
+    pub rows: usize,
+    pub cols: usize,
+    /// kept values, bf16, block-major: `rows * cols / m * n` entries
+    values: Vec<u16>,
+    /// bit-packed combinadic pattern ids, `codebook_bits` per block
+    meta: Vec<u64>,
+}
+
+/// Append `bits` low bits of `v` at bit offset `*pos` in `buf`.
+fn push_bits(buf: &mut Vec<u64>, pos: &mut usize, v: u64, bits: u32) {
+    if bits == 0 {
+        return;
+    }
+    let word = *pos / 64;
+    let off = (*pos % 64) as u32;
+    while buf.len() <= word + 1 {
+        buf.push(0);
+    }
+    buf[word] |= v << off;
+    if off + bits > 64 {
+        buf[word + 1] |= v >> (64 - off);
+    }
+    *pos += bits as usize;
+}
+
+/// Read `bits` bits at offset `pos`.
+fn read_bits(buf: &[u64], pos: usize, bits: u32) -> u64 {
+    if bits == 0 {
+        return 0;
+    }
+    let word = pos / 64;
+    let off = (pos % 64) as u32;
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mut v = buf[word] >> off;
+    if off + bits > 64 {
+        v |= buf[word + 1] << (64 - off);
+    }
+    v & mask
+}
+
+impl PackedNm {
+    /// Pack `dense * mask`.
+    ///
+    /// Each block must hold **at most** N kept entries. Blocks with fewer
+    /// (possible when structured outliers consumed positions of the block
+    /// — they live in their own matrix) are padded with zero-valued slots
+    /// at the lowest free indices, exactly like fixed-slot hardware
+    /// formats: the pattern id always encodes an N-subset.
+    pub fn from_dense_mask(dense: &Tensor, mask: &Tensor, n: usize, m: usize) -> Self {
+        assert!(m <= 64, "PackedNm stores u64 combinadic ranks (m <= 64), got m={m}");
+        let pattern = PatternInfo::new(n, m);
+        let (rows, cols) = dense.dims2();
+        assert_eq!(dense.shape(), mask.shape(), "mask shape mismatch");
+        assert_eq!(cols % m, 0, "cols {cols} not divisible by m {m}");
+        let bits = pattern.codebook_bits();
+        let blocks = rows * cols / m;
+        let mut values = Vec::with_capacity(blocks * n);
+        let mut meta = Vec::with_capacity((blocks * bits as usize + 63) / 64 + 1);
+        let mut pos = 0usize;
+        let mut idx_buf = Vec::with_capacity(n);
+        for r in 0..rows {
+            let drow = dense.row(r);
+            let mrow = mask.row(r);
+            for b in 0..cols / m {
+                idx_buf.clear();
+                for j in 0..m {
+                    if mrow[b * m + j] != 0.0 {
+                        idx_buf.push(j);
+                    }
+                }
+                assert!(
+                    idx_buf.len() <= n,
+                    "block ({r},{b}) holds {} kept values, pattern allows {n}",
+                    idx_buf.len()
+                );
+                // pad deficient blocks with zero-valued slots (lowest free
+                // indices) so the pattern id is always an N-subset
+                let mut j = 0;
+                while idx_buf.len() < n {
+                    if mrow[b * m + j] == 0.0 && !idx_buf.contains(&j) {
+                        idx_buf.push(j);
+                    }
+                    j += 1;
+                }
+                idx_buf.sort_unstable();
+                for &j in &idx_buf {
+                    // padded slots carry a zero value
+                    let v = if mrow[b * m + j] != 0.0 { drow[b * m + j] } else { 0.0 };
+                    values.push(f32_to_bf16(v));
+                }
+                push_bits(&mut meta, &mut pos, rank_combination(&idx_buf, m), bits);
+            }
+        }
+        PackedNm {
+            pattern,
+            rows,
+            cols,
+            values,
+            meta,
+        }
+    }
+
+    /// Expand back to a dense tensor (bf16-rounded values).
+    pub fn to_dense(&self) -> Tensor {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let mut pos = 0usize;
+        let mut vi = 0usize;
+        for r in 0..self.rows {
+            for b in 0..self.cols / m {
+                let rank = read_bits(&self.meta, pos, bits);
+                pos += bits as usize;
+                let idx = unrank_combination(rank, m, n);
+                for &j in &idx {
+                    out[r * self.cols + b * m + j] = bf16_to_f32(self.values[vi]);
+                    vi += 1;
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// The dense 0/1 keep mask encoded by the metadata.
+    pub fn mask(&self) -> Tensor {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let mut pos = 0usize;
+        for r in 0..self.rows {
+            for b in 0..self.cols / m {
+                let rank = read_bits(&self.meta, pos, bits);
+                pos += bits as usize;
+                for &j in &unrank_combination(rank, m, n) {
+                    out[r * self.cols + b * m + j] = 1.0;
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// Storage in bytes: bf16 values + packed metadata.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 2 + (self.meta.len() * 8).min(self.meta_bits() / 8 + 8)
+    }
+
+    /// Exact metadata footprint in bits.
+    pub fn meta_bits(&self) -> usize {
+        (self.rows * self.cols / self.pattern.m) * self.pattern.codebook_bits() as usize
+    }
+
+    /// Dense bf16 storage this replaces, in bytes.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 2
+    }
+
+    /// Compression ratio vs dense bf16 (>1 means smaller).
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bytes() as f64 / self.bytes() as f64
+    }
+
+    pub fn n_values(&self) -> usize {
+        self.values.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask_topn_per_block;
+    use crate::util::Rng;
+
+    fn pack_roundtrip(n: usize, m: usize, rows: usize, cols: usize, seed: u64) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+        let packed = PackedNm::from_dense_mask(&w, &mask, n, m);
+        let dense = packed.to_dense();
+        // bf16 rounding is the only loss
+        for r in 0..rows {
+            for c in 0..cols {
+                let want = w.at2(r, c) * mask.at2(r, c);
+                let got = dense.at2(r, c);
+                assert!(
+                    (want - got).abs() <= want.abs() * 0.01 + 1e-6,
+                    "({r},{c}): {want} vs {got}"
+                );
+            }
+        }
+        assert_eq!(packed.mask(), mask);
+    }
+
+    #[test]
+    fn roundtrip_all_patterns() {
+        for (i, (n, m)) in [(2usize, 4usize), (4, 8), (8, 16), (16, 32)]
+            .into_iter()
+            .enumerate()
+        {
+            pack_roundtrip(n, m, 32, 256, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn bitpacking_boundary_crossing() {
+        // 8:16 uses 14-bit ids: not a divisor of 64, so ids straddle words
+        pack_roundtrip(8, 16, 3, 1024, 99);
+    }
+
+    #[test]
+    fn storage_accounting_8_16() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(vec![256, 256], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let p = PackedNm::from_dense_mask(&w, &mask, 8, 16);
+        // values: half the elements at 2 bytes
+        assert_eq!(p.n_values(), 256 * 256 / 2);
+        // metadata: 14 bits per 16-block = 0.875 bits/element
+        assert_eq!(p.meta_bits(), 256 * 256 / 16 * 14);
+        let bits_per_elt = p.meta_bits() as f64 / (256.0 * 256.0);
+        assert!((bits_per_elt - 0.875).abs() < 1e-9);
+        // ~2x compression minus metadata
+        assert!(p.compression_ratio() > 1.8 && p.compression_ratio() < 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "pattern allows")]
+    fn rejects_wrong_mask_cardinality() {
+        let w = Tensor::ones(vec![1, 16]);
+        let mask = Tensor::ones(vec![1, 16]); // 16 kept, pattern wants 8
+        PackedNm::from_dense_mask(&w, &mask, 8, 16);
+    }
+
+    #[test]
+    fn deficient_blocks_padded_with_zero_slots() {
+        // 2:4 block where outlier exclusion left only 1 survivor
+        let w = Tensor::new(vec![1, 8], vec![5., 6., 7., 8., 1., 2., 3., 4.]);
+        let mask = Tensor::new(vec![1, 8], vec![0., 1., 0., 0., 0., 0., 1., 1.]);
+        let p = PackedNm::from_dense_mask(&w, &mask, 2, 4);
+        let d = p.to_dense();
+        assert_eq!(d.data(), &[0., 6., 0., 0., 0., 0., 3., 4.]);
+        // the stored pattern still names exactly 2 slots per block
+        let pm = p.mask();
+        assert_eq!(pm.data().iter().filter(|&&x| x != 0.0).count(), 4);
+    }
+
+    #[test]
+    fn property_pack_preserves_masked_values() {
+        use crate::util::propcheck::{check, Gen};
+        check("packed nm roundtrip", 20, |g: &mut Gen| {
+            let (n, m) = *g.choose(&[(2usize, 4usize), (4, 8), (8, 16)]);
+            let rows = g.int(1, 16);
+            let blocks = g.int(1, 8);
+            let cols = blocks * m;
+            let w = Tensor::new(
+                vec![rows, cols],
+                g.vec_normal(rows * cols),
+            );
+            let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+            let p = PackedNm::from_dense_mask(&w, &mask, n, m);
+            let d = p.to_dense();
+            for i in 0..rows * cols {
+                let want = w.data()[i] * mask.data()[i];
+                let got = d.data()[i];
+                if (want - got).abs() > want.abs() * 0.01 + 1e-6 {
+                    return Err(format!("elem {i}: {want} vs {got}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,195 @@
+//! Structured k:256 salient-weight (outlier) storage — the paper's
+//! "SSP for SW" contribution (§1 contribution 2, Tables 2/3/5/7).
+//!
+//! Per `(1, 256)` block: `k` bf16 values + `k` one-byte in-block indices,
+//! ascending.  Fixed stride per block ⇒ predictable memory access and
+//! O(k/256) metadata, versus CSR's per-nonzero 4-byte column index and
+//! irregular row lengths ([`crate::sparse::Csr`], contrasted in Table 7
+//! and `hwsim`).
+
+use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
+
+pub const OUTLIER_M: usize = 256;
+
+/// Salient weights of one matrix in structured k:256 form.
+#[derive(Clone, Debug)]
+pub struct StructuredOutliers {
+    pub k: usize,
+    pub m: usize,
+    pub rows: usize,
+    pub cols: usize,
+    /// bf16 values, block-major, `k` per block
+    values: Vec<u16>,
+    /// in-block indices, `k` per block, strictly ascending
+    indices: Vec<u8>,
+}
+
+impl StructuredOutliers {
+    /// Extract `dense * mask` where `mask` holds exactly `k` entries per
+    /// `(1, m)` block (selection-kernel invariant).
+    pub fn from_dense_mask(dense: &Tensor, mask: &Tensor, k: usize, m: usize) -> Self {
+        assert!(m <= 256, "in-block index is one byte");
+        let (rows, cols) = dense.dims2();
+        assert_eq!(cols % m, 0, "cols {cols} not divisible by m {m}");
+        let blocks = rows * cols / m;
+        let mut values = Vec::with_capacity(blocks * k);
+        let mut indices = Vec::with_capacity(blocks * k);
+        for r in 0..rows {
+            let drow = dense.row(r);
+            let mrow = mask.row(r);
+            for b in 0..cols / m {
+                let mut cnt = 0;
+                for j in 0..m {
+                    if mrow[b * m + j] != 0.0 {
+                        values.push(f32_to_bf16(drow[b * m + j]));
+                        indices.push(j as u8);
+                        cnt += 1;
+                    }
+                }
+                assert_eq!(cnt, k, "block ({r},{b}) holds {cnt} salient values, expected {k}");
+            }
+        }
+        StructuredOutliers {
+            k,
+            m,
+            rows,
+            cols,
+            values,
+            indices,
+        }
+    }
+
+    /// Zero-outlier placeholder (the "0%" rows of Table 5).
+    pub fn empty(rows: usize, cols: usize) -> Self {
+        StructuredOutliers {
+            k: 0,
+            m: OUTLIER_M,
+            rows,
+            cols,
+            values: Vec::new(),
+            indices: Vec::new(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k == 0
+    }
+
+    /// Scatter back to a dense matrix.
+    pub fn to_dense(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        if self.k > 0 {
+            let bpr = self.cols / self.m;
+            for (bi, chunk) in self.values.chunks(self.k).enumerate() {
+                let r = bi / bpr;
+                let b = bi % bpr;
+                for (t, &v) in chunk.iter().enumerate() {
+                    let j = self.indices[bi * self.k + t] as usize;
+                    out[r * self.cols + b * self.m + j] = bf16_to_f32(v);
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// Add the salient values onto `dst` in place (building the effective
+    /// compressed weight `W_ns + W_salient`).
+    pub fn add_into(&self, dst: &mut Tensor) {
+        assert_eq!(dst.shape(), [self.rows, self.cols]);
+        if self.k == 0 {
+            return;
+        }
+        let bpr = self.cols / self.m;
+        let cols = self.cols;
+        let data = dst.data_mut();
+        for (bi, chunk) in self.values.chunks(self.k).enumerate() {
+            let r = bi / bpr;
+            let b = bi % bpr;
+            for (t, &v) in chunk.iter().enumerate() {
+                let j = self.indices[bi * self.k + t] as usize;
+                data[r * cols + b * self.m + j] += bf16_to_f32(v);
+            }
+        }
+    }
+
+    /// Storage bytes: bf16 value + 1-byte index per salient entry.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 2 + self.indices.len()
+    }
+
+    pub fn n_salient(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Salient fraction of the full matrix.
+    pub fn density(&self) -> f64 {
+        self.n_salient() as f64 / (self.rows * self.cols) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask_topn_per_block;
+    use crate::util::Rng;
+
+    #[test]
+    fn roundtrip_all_outlier_patterns() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(vec![16, 512], 0.05, &mut rng);
+        for k in [4usize, 8, 16] {
+            let mask = mask_topn_per_block(&w.map(f32::abs), k, 256);
+            let so = StructuredOutliers::from_dense_mask(&w, &mask, k, 256);
+            assert_eq!(so.n_salient(), 16 * 2 * k);
+            let dense = so.to_dense();
+            for i in 0..w.len() {
+                let want = w.data()[i] * mask.data()[i];
+                assert!((dense.data()[i] - want).abs() <= want.abs() * 0.01 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn density_matches_pattern() {
+        let mut rng = Rng::new(5);
+        let w = Tensor::randn(vec![32, 1024], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 4, 256);
+        let so = StructuredOutliers::from_dense_mask(&w, &mask, 4, 256);
+        assert!((so.density() - 4.0 / 256.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_into_composes_effective_weight() {
+        let mut rng = Rng::new(7);
+        let w = Tensor::randn(vec![8, 256], 0.05, &mut rng);
+        let omask = mask_topn_per_block(&w.map(f32::abs), 8, 256);
+        let so = StructuredOutliers::from_dense_mask(&w, &omask, 8, 256);
+        let mut acc = Tensor::zeros(vec![8, 256]);
+        so.add_into(&mut acc);
+        for i in 0..w.len() {
+            let want = w.data()[i] * omask.data()[i];
+            assert!((acc.data()[i] - want).abs() <= want.abs() * 0.01 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        let so = StructuredOutliers::empty(4, 256);
+        assert!(so.is_empty());
+        assert_eq!(so.bytes(), 0);
+        let mut t = Tensor::ones(vec![4, 256]);
+        so.add_into(&mut t);
+        assert_eq!(t, Tensor::ones(vec![4, 256]));
+    }
+
+    #[test]
+    fn bytes_smaller_than_csr_for_same_content() {
+        // the Table 7 / hwsim storage argument: 3 bytes/entry vs CSR's ~6
+        let mut rng = Rng::new(11);
+        let w = Tensor::randn(vec![64, 512], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 16, 256);
+        let so = StructuredOutliers::from_dense_mask(&w, &mask, 16, 256);
+        let csr = crate::sparse::Csr::from_dense_mask(&w, &mask);
+        assert!(so.bytes() < csr.bytes(), "{} vs {}", so.bytes(), csr.bytes());
+    }
+}

@@ -1,0 +1,279 @@
+//! V:N:M two-level sparsity (Zhao et al. 2024, "Beyond 2:4").
+//!
+//! The paper's related-work section positions V:N:M as the other road
+//! past 2:4: instead of finer selection *within* a block (this paper's
+//! 8:16), V:N:M shares one N-of-M column pattern across a **vector of V
+//! consecutive rows**, amortizing the metadata V× and letting hardware
+//! fetch V×N dense panels. This module implements selection, packed
+//! storage and accounting so the `a3_vnm` ablation can place both
+//! generalizations on the same flexibility/overhead axis:
+//!
+//! * metadata: `ceil(log2 C(M,N)) / (V·M)` bits/element — 8:16 costs
+//!   0.875, V=4:2:4 costs 0.1875;
+//! * flexibility: one pattern per V rows — strictly fewer masks than
+//!   per-row N:M, so reconstruction error is never lower at equal N:M.
+
+use super::patterns::{rank_combination, unrank_combination, PatternInfo};
+use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
+
+/// A rank-2 matrix stored V:N:M packed: for every `(V, M)` tile one
+/// N-subset of columns is kept.
+#[derive(Clone, Debug)]
+pub struct PackedVnm {
+    pub v: usize,
+    pub pattern: PatternInfo,
+    pub rows: usize,
+    pub cols: usize,
+    /// kept values bf16, tile-major then row-major inside the tile
+    values: Vec<u16>,
+    /// one combinadic rank per (V, M) tile, bit-packed
+    meta: Vec<u64>,
+    meta_bits_used: usize,
+}
+
+/// Choose the kept columns of each `(V, M)` tile by **group saliency** —
+/// the sum of scores down the V rows of each candidate column (the
+/// vector-granular analogue of per-row top-N).
+pub fn vnm_select(score: &Tensor, v: usize, n: usize, m: usize) -> Tensor {
+    let (rows, cols) = score.dims2();
+    assert!(rows % v == 0, "rows {rows} not divisible by v {v}");
+    assert!(cols % m == 0, "cols {cols} not divisible by m {m}");
+    let mut mask = vec![0.0f32; rows * cols];
+    let mut col_sal = vec![0.0f32; m];
+    for t0 in (0..rows).step_by(v) {
+        for b in 0..cols / m {
+            col_sal.iter_mut().for_each(|x| *x = 0.0);
+            for r in t0..t0 + v {
+                let row = score.row(r);
+                for (j, cs) in col_sal.iter_mut().enumerate() {
+                    *cs += row[b * m + j];
+                }
+            }
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&i, &j| {
+                col_sal[j]
+                    .partial_cmp(&col_sal[i])
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for &j in order.iter().take(n) {
+                for r in t0..t0 + v {
+                    mask[r * cols + b * m + j] = 1.0;
+                }
+            }
+        }
+    }
+    Tensor::new(vec![rows, cols], mask)
+}
+
+impl PackedVnm {
+    /// Pack `dense * mask` where `mask` keeps the same N columns across
+    /// every V-row group (as produced by [`vnm_select`]).
+    pub fn from_dense_mask(dense: &Tensor, mask: &Tensor, v: usize, n: usize, m: usize) -> Self {
+        assert!(m <= 64, "combinadic ranks stored in u64 (m <= 64)");
+        let pattern = PatternInfo::new(n, m);
+        let (rows, cols) = dense.dims2();
+        assert_eq!(dense.shape(), mask.shape());
+        assert!(rows % v == 0 && cols % m == 0);
+        let bits = pattern.codebook_bits();
+        let tiles = (rows / v) * (cols / m);
+        let mut values = Vec::with_capacity(tiles * v * n);
+        let mut meta = Vec::with_capacity((tiles * bits as usize + 63) / 64 + 1);
+        let mut pos = 0usize;
+        for t0 in (0..rows).step_by(v) {
+            for b in 0..cols / m {
+                // the tile's column subset comes from its first row; all
+                // rows must agree (that is the format)
+                let mut idx = Vec::with_capacity(n);
+                for j in 0..m {
+                    if mask.at2(t0, b * m + j) != 0.0 {
+                        idx.push(j);
+                    }
+                }
+                assert_eq!(
+                    idx.len(),
+                    n,
+                    "tile ({t0},{b}): {} kept columns, want {n}",
+                    idx.len()
+                );
+                for r in t0..t0 + v {
+                    for &j in &idx {
+                        assert!(
+                            mask.at2(r, b * m + j) != 0.0,
+                            "tile ({t0},{b}) row {r} disagrees with tile pattern"
+                        );
+                        values.push(f32_to_bf16(dense.at2(r, b * m + j)));
+                    }
+                }
+                push_bits(&mut meta, &mut pos, rank_combination(&idx, m), bits);
+            }
+        }
+        PackedVnm {
+            v,
+            pattern,
+            rows,
+            cols,
+            values,
+            meta,
+            meta_bits_used: pos,
+        }
+    }
+
+    /// Expand back to dense (bf16-rounded values).
+    pub fn to_dense(&self) -> Tensor {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let mut pos = 0usize;
+        let mut vi = 0usize;
+        for t0 in (0..self.rows).step_by(self.v) {
+            for b in 0..self.cols / m {
+                let rank = read_bits(&self.meta, pos, bits);
+                pos += bits as usize;
+                let idx = unrank_combination(rank, m, n);
+                for r in t0..t0 + self.v {
+                    for &j in &idx {
+                        out[r * self.cols + b * m + j] = bf16_to_f32(self.values[vi]);
+                        vi += 1;
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// Exact metadata footprint in bits.
+    pub fn meta_bits(&self) -> usize {
+        self.meta_bits_used
+    }
+
+    /// Metadata bits per dense element — the V× amortization.
+    pub fn bits_per_element(&self) -> f64 {
+        self.meta_bits() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Storage in bytes: bf16 values + packed metadata.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 2 + (self.meta_bits() + 7) / 8
+    }
+
+    pub fn compression_ratio(&self) -> f64 {
+        (self.rows * self.cols * 2) as f64 / self.bytes() as f64
+    }
+}
+
+// same bit-packing helpers as nm.rs (kept local: the two formats evolve
+// independently and the functions are 10 lines)
+fn push_bits(buf: &mut Vec<u64>, pos: &mut usize, v: u64, bits: u32) {
+    if bits == 0 {
+        return;
+    }
+    let word = *pos / 64;
+    let off = (*pos % 64) as u32;
+    while buf.len() <= word + 1 {
+        buf.push(0);
+    }
+    buf[word] |= v << off;
+    if off + bits > 64 {
+        buf[word + 1] |= v >> (64 - off);
+    }
+    *pos += bits as usize;
+}
+
+fn read_bits(buf: &[u64], pos: usize, bits: u32) -> u64 {
+    if bits == 0 {
+        return 0;
+    }
+    let word = pos / 64;
+    let off = (pos % 64) as u32;
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mut v = buf[word] >> off;
+    if off + bits > 64 {
+        v |= buf[word + 1] << (64 - off);
+    }
+    v & mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::rel_error;
+    use crate::util::Rng;
+
+    #[test]
+    fn select_budget_and_row_agreement() {
+        let mut rng = Rng::new(61);
+        let s = Tensor::randn(vec![16, 64], 1.0, &mut rng).map(f32::abs);
+        let mask = vnm_select(&s, 4, 2, 4);
+        for t0 in (0..16).step_by(4) {
+            for b in 0..64 / 4 {
+                let cols: Vec<usize> = (0..4)
+                    .filter(|&j| mask.at2(t0, b * 4 + j) != 0.0)
+                    .collect();
+                assert_eq!(cols.len(), 2);
+                for r in t0..t0 + 4 {
+                    for j in 0..4 {
+                        let want = cols.contains(&j);
+                        assert_eq!(mask.at2(r, b * 4 + j) != 0.0, want);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Rng::new(62);
+        let w = Tensor::randn(vec![8, 128], 0.05, &mut rng);
+        let mask = vnm_select(&w.map(f32::abs), 4, 8, 16);
+        let p = PackedVnm::from_dense_mask(&w, &mask, 4, 8, 16);
+        let d = p.to_dense();
+        let want = w.mul(&mask);
+        assert!(rel_error(&d, &want) < 0.01, "{}", rel_error(&d, &want));
+    }
+
+    #[test]
+    fn metadata_amortized_v_times() {
+        let mut rng = Rng::new(63);
+        let w = Tensor::randn(vec![64, 256], 0.05, &mut rng);
+        let mask = vnm_select(&w.map(f32::abs), 4, 8, 16);
+        let p = PackedVnm::from_dense_mask(&w, &mask, 4, 8, 16);
+        // 14 bits per (4,16) tile = 0.875/4 bits per element
+        assert!((p.bits_per_element() - 0.875 / 4.0).abs() < 1e-9);
+        let nm = crate::sparse::PackedNm::from_dense_mask(&w, &crate::pruning::mask_topn_per_block(&w.map(f32::abs), 8, 16), 8, 16);
+        assert!(p.bytes() < nm.bytes());
+    }
+
+    #[test]
+    fn per_row_nm_never_worse_than_vnm() {
+        // V:N:M is a restriction of N:M → reconstruction error >= N:M's
+        let mut rng = Rng::new(64);
+        let w = Tensor::randn_outliers(vec![32, 256], 0.05, 0.01, 8.0, &mut rng);
+        let score = w.map(f32::abs);
+        let nm_mask = crate::pruning::mask_topn_per_block(&score, 8, 16);
+        let vnm_mask = vnm_select(&score, 8, 8, 16);
+        let e_nm = rel_error(&w.mul(&nm_mask), &w);
+        let e_vnm = rel_error(&w.mul(&vnm_mask), &w);
+        assert!(e_nm <= e_vnm + 1e-9, "{e_nm} !<= {e_vnm}");
+        // both keep the same element count
+        assert_eq!(nm_mask.count_nonzero(), vnm_mask.count_nonzero());
+    }
+
+    #[test]
+    fn v1_equals_per_row_nm() {
+        let mut rng = Rng::new(65);
+        let w = Tensor::randn(vec![8, 64], 1.0, &mut rng);
+        let score = w.map(f32::abs);
+        let a = vnm_select(&score, 1, 2, 4);
+        let b = crate::pruning::mask_topn_per_block(&score, 2, 4);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    #[should_panic(expected = "disagrees")]
+    fn rejects_rowwise_mask() {
+        let w = Tensor::ones(vec![2, 4]);
+        // row 0 keeps cols {0,1}, row 1 keeps {2,3} — not a V:N:M mask
+        let mask = Tensor::new(vec![2, 4], vec![1., 1., 0., 0., 0., 0., 1., 1.]);
+        PackedVnm::from_dense_mask(&w, &mask, 2, 2, 4);
+    }
+}

@@ -1,0 +1,313 @@
+//! Host tensor substrate: a small dense row-major f32 tensor used by the
+//! coordinator for weight management, packing, scoring mirrors, and the
+//! reference math the HLO artifacts are cross-checked against.
+//!
+//! Heavy compute (model fwd/bwd, the pruning kernels) runs through PJRT;
+//! this type exists so the Rust side can *own* parameters, masks and
+//! sparse formats without round-tripping through Python.
+
+mod ops;
+
+pub use ops::*;
+
+use crate::util::Rng;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match data length {}",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn ones(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![1.0; n],
+        }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![v; n],
+        }
+    }
+
+    /// i.i.d. N(0, std²).
+    pub fn randn(shape: Vec<usize>, std: f32, rng: &mut Rng) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: (0..n).map(|_| rng.normal_f32() * std).collect(),
+        }
+    }
+
+    /// Heavy-tailed init mirroring trained-LLM weight distributions:
+    /// Gaussian body with a fraction `p_out` of `scale`× outliers.
+    pub fn randn_outliers(
+        shape: Vec<usize>,
+        std: f32,
+        p_out: f64,
+        scale: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: (0..n)
+                .map(|_| (rng.outlier_normal(p_out, scale) as f32) * std)
+                .collect(),
+        }
+    }
+
+    // ------------------------------------------------------------ accessors
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// (rows, cols) of a rank-2 tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.rank(), 2, "expected rank-2, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        let (_, cols) = (self.shape[0], self.shape[1]);
+        self.data[r * cols + c]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        let cols = self.shape[1];
+        self.data[r * cols + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let cols = self.shape[1];
+        &self.data[r * cols..(r + 1) * cols]
+    }
+
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        let cols = self.shape[1];
+        &mut self.data[r * cols..(r + 1) * cols]
+    }
+
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {shape:?}",
+            self.shape
+        );
+        self.shape = shape;
+        self
+    }
+
+    // ----------------------------------------------------------- reductions
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    /// Population variance over all elements.
+    pub fn var(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let mu = self.mean();
+        self.data
+            .iter()
+            .map(|&x| {
+                let d = x as f64 - mu;
+                d * d
+            })
+            .sum::<f64>()
+            / self.data.len() as f64
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |a, &x| a.max(x.abs()))
+    }
+
+    pub fn count_nonzero(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    /// Fraction of zero entries.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        1.0 - self.count_nonzero() as f64 / self.data.len() as f64
+    }
+
+    // ------------------------------------------------------------- mapping
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(other.data.iter())
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+
+    pub fn mul(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a * b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+}
+
+/// bf16 round-trip helpers — the packed sparse formats store values in
+/// bf16 (like the paper's storage accounting assumes 16-bit weights).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    // round-to-nearest-even on the truncated mantissa
+    let round = ((bits >> 16) & 1) + 0x7FFF;
+    ((bits + round) >> 16) as u16
+}
+
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.dims2(), (2, 3));
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn bad_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn reductions() {
+        let t = Tensor::new(vec![4], vec![1., 2., 3., 4.]);
+        assert_eq!(t.sum(), 10.0);
+        assert_eq!(t.mean(), 2.5);
+        assert!((t.var() - 1.25).abs() < 1e-12);
+        assert_eq!(t.abs_max(), 4.0);
+    }
+
+    #[test]
+    fn sparsity_accounting() {
+        let t = Tensor::new(vec![4], vec![0., 2., 0., 4.]);
+        assert_eq!(t.count_nonzero(), 2);
+        assert_eq!(t.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn randn_moments() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::randn(vec![100, 100], 0.1, &mut rng);
+        assert!(t.mean().abs() < 0.01);
+        assert!((t.var().sqrt() - 0.1).abs() < 0.01);
+    }
+
+    #[test]
+    fn map_zip() {
+        let a = Tensor::new(vec![2], vec![1., 2.]);
+        let b = Tensor::new(vec![2], vec![10., 20.]);
+        assert_eq!(a.add(&b).data(), &[11., 22.]);
+        assert_eq!(a.mul(&b).data(), &[10., 40.]);
+        assert_eq!(a.scale(3.0).data(), &[3., 6.]);
+    }
+
+    #[test]
+    fn bf16_roundtrip_monotone() {
+        for &x in &[0.0f32, 1.0, -1.5, 3.14159, 1e-3, 65504.0] {
+            let y = bf16_to_f32(f32_to_bf16(x));
+            assert!((x - y).abs() <= x.abs() * 0.01 + 1e-6, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn randn_outliers_heavier_tail() {
+        let mut rng = Rng::new(7);
+        let plain = Tensor::randn(vec![50_000], 1.0, &mut rng);
+        let heavy = Tensor::randn_outliers(vec![50_000], 1.0, 0.01, 10.0, &mut rng);
+        assert!(heavy.abs_max() > plain.abs_max());
+    }
+}

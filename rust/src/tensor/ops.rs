@@ -1,0 +1,364 @@
+//! Dense linear-algebra ops for the host tensor.
+//!
+//! The coordinator needs matmul/transpose/softmax-scale math for the Rust
+//! mirrors of the scoring path and for packing throughput; it is written
+//! cache-blocked (the hot loops feed `perf_hotpath` in the perf pass) but
+//! model-scale GEMMs always run through PJRT, not here.
+
+use super::Tensor;
+
+/// Blocked matrix multiply `a (m,k) @ b (k,n) -> (m,n)`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = a.dims2();
+    let (k2, n) = b.dims2();
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    const BK: usize = 64;
+    const BN: usize = 256;
+    let ad = a.data();
+    let bd = b.data();
+    for k0 in (0..k).step_by(BK) {
+        let k1 = (k0 + BK).min(k);
+        for n0 in (0..n).step_by(BN) {
+            let n1 = (n0 + BN).min(n);
+            for i in 0..m {
+                let arow = &ad[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let av = arow[kk];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    let brow = &bd[kk * n..kk * n + n1];
+                    for nn in n0..n1 {
+                        orow[nn] += av * brow[nn];
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// `x (b, cin) @ w^T (cout, cin) -> (b, cout)` — the linear-layer shape.
+pub fn matmul_wt(x: &Tensor, w: &Tensor) -> Tensor {
+    let (b, cin) = x.dims2();
+    let (cout, cin2) = w.dims2();
+    assert_eq!(cin, cin2, "matmul_wt inner dims {cin} vs {cin2}");
+    let mut out = vec![0.0f32; b * cout];
+    let xd = x.data();
+    let wd = w.data();
+    for i in 0..b {
+        let xrow = &xd[i * cin..(i + 1) * cin];
+        let orow = &mut out[i * cout..(i + 1) * cout];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let wrow = &wd[j * cin..(j + 1) * cin];
+            *o = dot(xrow, wrow);
+        }
+    }
+    Tensor::new(vec![b, cout], out)
+}
+
+/// Unrolled dot product (the packing/eval hot loop).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Transpose a rank-2 tensor.
+pub fn transpose(t: &Tensor) -> Tensor {
+    let (r, c) = t.dims2();
+    let mut out = vec![0.0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            out[j * r + i] = t.data()[i * c + j];
+        }
+    }
+    Tensor::new(vec![c, r], out)
+}
+
+/// Per-column max of |x| over rows — SmoothQuant's activation statistic.
+pub fn col_absmax(t: &Tensor) -> Vec<f32> {
+    let (r, c) = t.dims2();
+    let mut out = vec![0.0f32; c];
+    for i in 0..r {
+        let row = t.row(i);
+        for j in 0..c {
+            out[j] = out[j].max(row[j].abs());
+        }
+    }
+    out
+}
+
+/// Per-column L2 norm over rows — RIA/Wanda's activation statistic.
+pub fn col_l2(t: &Tensor) -> Vec<f32> {
+    let (r, c) = t.dims2();
+    let mut out = vec![0.0f32; c];
+    for i in 0..r {
+        let row = t.row(i);
+        for j in 0..c {
+            out[j] += row[j] * row[j];
+        }
+    }
+    for v in &mut out {
+        *v = v.sqrt();
+    }
+    out
+}
+
+/// Per-column sum of |w| over rows.
+pub fn col_abssum(t: &Tensor) -> Vec<f32> {
+    let (r, c) = t.dims2();
+    let mut out = vec![0.0f32; c];
+    for i in 0..r {
+        let row = t.row(i);
+        for j in 0..c {
+            out[j] += row[j].abs();
+        }
+    }
+    out
+}
+
+/// Per-row sum of |w|.
+pub fn row_abssum(t: &Tensor) -> Vec<f32> {
+    let (r, _) = t.dims2();
+    (0..r)
+        .map(|i| t.row(i).iter().map(|x| x.abs()).sum())
+        .collect()
+}
+
+/// Cholesky factorization of a symmetric positive-definite matrix:
+/// returns lower-triangular `L` with `A = L Lᵀ`. Errors if `A` is not
+/// numerically positive definite (non-positive pivot).
+pub fn cholesky(a: &Tensor) -> Result<Tensor, String> {
+    let (n, n2) = a.dims2();
+    assert_eq!(n, n2, "cholesky needs a square matrix, got {n}x{n2}");
+    let ad = a.data();
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = ad[i * n + j] as f64;
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 {
+                    return Err(format!("cholesky: non-PD pivot {s:.3e} at row {i}"));
+                }
+                l[i * n + j] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(Tensor::new(
+        vec![n, n],
+        l.into_iter().map(|x| x as f32).collect(),
+    ))
+}
+
+/// Invert a symmetric positive-definite matrix via its Cholesky factor.
+pub fn spd_inverse(a: &Tensor) -> Result<Tensor, String> {
+    let l = cholesky(a)?;
+    let (n, _) = l.dims2();
+    let ld = l.data();
+    // invert L by forward substitution (column by column)
+    let mut linv = vec![0.0f64; n * n];
+    for j in 0..n {
+        linv[j * n + j] = 1.0 / ld[j * n + j] as f64;
+        for i in j + 1..n {
+            let mut s = 0.0f64;
+            for k in j..i {
+                s += ld[i * n + k] as f64 * linv[k * n + j];
+            }
+            linv[i * n + j] = -s / ld[i * n + i] as f64;
+        }
+    }
+    // A^{-1} = L^{-T} L^{-1}
+    let mut out = vec![0.0f32; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = 0.0f64;
+            // sum over k >= max(i,j): linv[k,i] * linv[k,j]
+            for k in i.max(j)..n {
+                s += linv[k * n + i] * linv[k * n + j];
+            }
+            out[i * n + j] = s as f32;
+            out[j * n + i] = s as f32;
+        }
+    }
+    Ok(Tensor::new(vec![n, n], out))
+}
+
+/// Upper-triangular Cholesky factor `U` of a SPD matrix (`A = Uᵀ U`),
+/// i.e. the transpose of [`cholesky`]'s output. SparseGPT consumes the
+/// upper Cholesky factor of the *inverse* Hessian.
+pub fn cholesky_upper(a: &Tensor) -> Result<Tensor, String> {
+    Ok(transpose(&cholesky(a)?))
+}
+
+/// `aᵀ a` (Gram matrix) of a rank-2 tensor — the Hessian accumulator
+/// `H = Σ xᵀx` used by the OBS/SparseGPT scorer.
+pub fn gram(x: &Tensor) -> Tensor {
+    let (r, c) = x.dims2();
+    let mut out = vec![0.0f32; c * c];
+    let xd = x.data();
+    for i in 0..r {
+        let row = &xd[i * c..(i + 1) * c];
+        for a in 0..c {
+            let va = row[a];
+            if va == 0.0 {
+                continue;
+            }
+            let orow = &mut out[a * c..(a + 1) * c];
+            for (o, &vb) in orow.iter_mut().zip(row.iter()) {
+                *o += va * vb;
+            }
+        }
+    }
+    Tensor::new(vec![c, c], out)
+}
+
+/// Relative Frobenius error ||a-b|| / ||b||.
+pub fn rel_error(a: &Tensor, b: &Tensor) -> f64 {
+    assert_eq!(a.shape(), b.shape());
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for (&x, &y) in a.data().iter().zip(b.data().iter()) {
+        num += ((x - y) as f64).powi(2);
+        den += (y as f64).powi(2);
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![1., 1., 1., 1.]);
+        assert_eq!(matmul(&a, &b).data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_wt_matches_matmul() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(vec![7, 33], 1.0, &mut rng);
+        let w = Tensor::randn(vec![13, 33], 1.0, &mut rng);
+        let got = matmul_wt(&x, &w);
+        let want = matmul(&x, &transpose(&w));
+        for (g, w_) in got.data().iter().zip(want.data().iter()) {
+            assert!((g - w_).abs() < 1e-4, "{g} vs {w_}");
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(5);
+        let t = Tensor::randn(vec![5, 9], 1.0, &mut rng);
+        assert_eq!(transpose(&transpose(&t)), t);
+    }
+
+    #[test]
+    fn col_stats() {
+        let t = Tensor::new(vec![2, 3], vec![1., -4., 0., -3., 2., 0.]);
+        assert_eq!(col_absmax(&t), vec![3., 4., 0.]);
+        assert_eq!(col_abssum(&t), vec![4., 6., 0.]);
+        let l2 = col_l2(&t);
+        assert!((l2[0] - 10f32.sqrt()).abs() < 1e-6);
+        assert_eq!(row_abssum(&t), vec![5., 5.]);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Rng::new(9);
+        for n in [0usize, 1, 3, 4, 17, 256] {
+            let a: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let b: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(21);
+        let x = Tensor::randn(vec![24, 12], 1.0, &mut rng);
+        let mut a = gram(&x);
+        for i in 0..12 {
+            let v = a.at2(i, i) + 0.5;
+            a.set2(i, i, v); // damp for PD
+        }
+        let l = cholesky(&a).unwrap();
+        let rec = matmul(&l, &transpose(&l));
+        assert!(rel_error(&rec, &a) < 1e-4, "{}", rel_error(&rec, &a));
+        // lower triangular: everything above diagonal is exactly 0
+        for i in 0..12 {
+            for j in i + 1..12 {
+                assert_eq!(l.at2(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_non_pd() {
+        let a = Tensor::new(vec![2, 2], vec![1.0, 2.0, 2.0, 1.0]); // eigenvalue -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_inverse_identity() {
+        let mut rng = Rng::new(22);
+        let x = Tensor::randn(vec![40, 16], 1.0, &mut rng);
+        let mut a = gram(&x);
+        for i in 0..16 {
+            let v = a.at2(i, i) + 1.0;
+            a.set2(i, i, v);
+        }
+        let ainv = spd_inverse(&a).unwrap();
+        let prod = matmul(&a, &ainv);
+        for i in 0..16 {
+            for j in 0..16 {
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (prod.at2(i, j) - want).abs() < 1e-3,
+                    "({i},{j}) {}",
+                    prod.at2(i, j)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gram_matches_naive() {
+        let mut rng = Rng::new(23);
+        let x = Tensor::randn(vec![9, 7], 1.0, &mut rng);
+        let want = matmul(&transpose(&x), &x);
+        let got = gram(&x);
+        assert!(rel_error(&got, &want) < 1e-5);
+    }
+
+    #[test]
+    fn rel_error_zero_for_identical() {
+        let mut rng = Rng::new(11);
+        let t = Tensor::randn(vec![8, 8], 1.0, &mut rng);
+        assert!(rel_error(&t, &t) < 1e-12);
+    }
+}

@@ -1,0 +1,134 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, positional
+//! arguments, and typed accessors with defaults. Subcommand dispatch lives
+//! in [`crate::cli`].
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+    /// declared options, for --help rendering
+    help: Vec<(String, String, String)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut a = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.flags.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    /// Declare an option (records help text, returns value or default).
+    pub fn opt(&mut self, key: &str, default: &str, help: &str) -> String {
+        self.help
+            .push((key.to_string(), default.to_string(), help.to_string()));
+        self.flags
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn wants_help(&self) -> bool {
+        self.get_bool("help")
+    }
+
+    pub fn render_help(&self, prog: &str) -> String {
+        let mut s = format!("usage: {prog} [options]\n\noptions:\n");
+        for (k, d, h) in &self.help {
+            s.push_str(&format!("  --{k:<24} {h} (default: {d})\n"));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = Args::parse(&sv(&["--model", "tiny", "--steps=100", "--fast"]));
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.get_usize("steps", 0), 100);
+        assert!(a.get_bool("fast"));
+        assert!(!a.get_bool("slow"));
+    }
+
+    #[test]
+    fn positional_and_flags_mix() {
+        let a = Args::parse(&sv(&["compress", "--model", "tiny", "ckpt.bin"]));
+        assert_eq!(a.positional, vec!["compress", "ckpt.bin"]);
+        assert_eq!(a.get("model"), Some("tiny"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&[]));
+        assert_eq!(a.get_f64("lr", 1e-3), 1e-3);
+        assert_eq!(a.get_str("out", "x"), "x");
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = Args::parse(&sv(&["--bias", "-0.5"]));
+        assert_eq!(a.get_f64("bias", 0.0), -0.5);
+    }
+}

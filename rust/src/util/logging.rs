@@ -1,0 +1,64 @@
+//! Minimal `log` backend: timestamped stderr logging, level from
+//! `SPARSELM_LOG` (error|warn|info|debug|trace; default info).
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Log, Metadata, Record};
+use std::sync::OnceLock;
+
+static START: OnceLock<Instant> = OnceLock::new();
+
+struct StderrLogger;
+
+impl Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+static INIT: Once = Once::new();
+
+/// Install the logger (idempotent).
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("SPARSELM_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(level);
+        START.get_or_init(Instant::now);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke test");
+    }
+}

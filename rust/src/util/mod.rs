@@ -1,0 +1,16 @@
+//! Support substrates built in-repo.
+//!
+//! The offline registry only carries the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (rand, serde, clap, criterion, proptest,
+//! tokio) are unavailable; each submodule implements the subset of that
+//! functionality the framework needs (see DESIGN.md §Substitutions).
+
+pub mod args;
+pub mod json;
+pub mod logging;
+pub mod pool;
+pub mod propcheck;
+pub mod rng;
+pub mod timer;
+
+pub use rng::Rng;

@@ -1,0 +1,179 @@
+//! Miniature property-based testing harness (proptest is unavailable
+//! offline).
+//!
+//! `check(name, cases, |g| ...)` runs a property over `cases` randomized
+//! inputs drawn through the [`Gen`] handle. On failure it re-runs a simple
+//! shrinking loop over the *seed space* (halving strategy on generated
+//! sizes) and reports the failing seed so the case can be replayed with
+//! `check_seeded`.
+
+use super::rng::Rng;
+
+/// Generation handle passed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    /// size hint in [0.0, 1.0]: shrinking reduces this so generators
+    /// produce smaller structures
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: f64) -> Self {
+        Gen {
+            rng: Rng::new(seed),
+            size,
+        }
+    }
+
+    /// Integer in [lo, hi], biased smaller as `size` shrinks.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size).round() as usize;
+        lo + self.rng.below(span.max(0) + 1)
+    }
+
+    /// One of the provided choices.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn f32_normal(&mut self) -> f32 {
+        self.rng.normal_f32()
+    }
+
+    pub fn vec_normal(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal_f32()).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Result of a property run.
+pub enum PropResult {
+    Pass,
+    Fail(String),
+}
+
+impl From<()> for PropResult {
+    fn from(_: ()) -> Self {
+        PropResult::Pass
+    }
+}
+
+impl From<Result<(), String>> for PropResult {
+    fn from(r: Result<(), String>) -> Self {
+        match r {
+            Ok(()) => PropResult::Pass,
+            Err(e) => PropResult::Fail(e),
+        }
+    }
+}
+
+/// Run `prop` over `cases` seeds; panics with the failing seed on error.
+pub fn check<R: Into<PropResult>>(
+    name: &str,
+    cases: u64,
+    prop: impl Fn(&mut Gen) -> R,
+) {
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ case.wrapping_mul(0x9E3779B97F4A7C15);
+        if let PropResult::Fail(msg) = run_one(seed, 1.0, &prop) {
+            // shrink: retry with smaller size hints, report smallest failure
+            let mut best = (1.0, msg);
+            let mut size = 0.5;
+            while size > 0.02 {
+                if let PropResult::Fail(m) = run_one(seed, size, &prop) {
+                    best = (size, m);
+                }
+                size *= 0.5;
+            }
+            panic!(
+                "property {name:?} failed (seed={seed:#x}, size={:.3}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Replay a single seed (used to debug a reported failure).
+pub fn check_seeded<R: Into<PropResult>>(
+    name: &str,
+    seed: u64,
+    prop: impl Fn(&mut Gen) -> R,
+) {
+    if let PropResult::Fail(msg) = run_one(seed, 1.0, &prop) {
+        panic!("property {name:?} failed at seed {seed:#x}: {msg}");
+    }
+}
+
+fn run_one<R: Into<PropResult>>(
+    seed: u64,
+    size: f64,
+    prop: &impl Fn(&mut Gen) -> R,
+) -> PropResult {
+    let mut g = Gen::new(seed, size);
+    prop(&mut g).into()
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("length mismatch: {} vs {}", a.len(), b.len()));
+    }
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs().max(x.abs());
+        if (x - y).abs() > tol && !(x.is_nan() && y.is_nan()) {
+            return Err(format!("elem {i}: {x} vs {y} (tol {tol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add commutes", 50, |g| {
+            let a = g.int(0, 100) as i64;
+            let b = g.int(0, 100) as i64;
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".to_string())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_seed() {
+        check("always fails above 5", 50, |g| {
+            let n = g.int(0, 100);
+            if n <= 5 {
+                Ok(())
+            } else {
+                Err(format!("n={n}"))
+            }
+        });
+    }
+
+    #[test]
+    fn allclose_catches_mismatch() {
+        assert!(assert_allclose(&[1.0, 2.0], &[1.0, 2.0], 1e-6, 1e-6).is_ok());
+        assert!(assert_allclose(&[1.0], &[1.1], 1e-6, 1e-6).is_err());
+        assert!(assert_allclose(&[1.0], &[1.0, 2.0], 1e-6, 1e-6).is_err());
+    }
+
+    #[test]
+    fn gen_int_respects_bounds() {
+        let mut g = Gen::new(1, 1.0);
+        for _ in 0..1000 {
+            let x = g.int(3, 17);
+            assert!((3..=17).contains(&x));
+        }
+    }
+}

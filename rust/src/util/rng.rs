@@ -1,0 +1,344 @@
+//! Deterministic PRNG (xoshiro256++) with the sampling helpers the
+//! framework needs: uniforms, Gaussians, Zipf, categorical, shuffling.
+//!
+//! Every stochastic component in the crate (corpus generation, weight
+//! init, calibration sampling, property tests) threads one of these
+//! through explicitly, so whole experiment tables are reproducible from a
+//! single seed.
+
+/// xoshiro256++ by Blackman & Vigna — fast, 256-bit state, passes BigCrush.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// cached second Box-Muller Gaussian
+    spare: Option<f64>,
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare: None }
+    }
+
+    /// Derive an independent stream (for per-worker / per-layer RNGs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        self.f64() as f32
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        // Lemire's multiply-shift rejection-free-enough variant
+        ((self.next_u64() as u128 * n as u128) >> 64) as usize
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range_f64(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.f64() * (hi - lo)
+    }
+
+    /// Standard normal (Box-Muller with caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.spare.take() {
+            return z;
+        }
+        loop {
+            let u = 2.0 * self.f64() - 1.0;
+            let v = 2.0 * self.f64() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                let k = (-2.0 * s.ln() / s).sqrt();
+                self.spare = Some(v * k);
+                return u * k;
+            }
+        }
+    }
+
+    pub fn normal_f32(&mut self) -> f32 {
+        self.normal() as f32
+    }
+
+    /// Heavy-tailed sample: Gaussian body with probability `1 - p_out`,
+    /// scaled Gaussian tail with probability `p_out`. Mirrors the outlier
+    /// structure of trained LLM weights (Dettmers et al., 2022).
+    pub fn outlier_normal(&mut self, p_out: f64, scale: f64) -> f64 {
+        let z = self.normal();
+        if self.f64() < p_out {
+            z * scale
+        } else {
+            z
+        }
+    }
+
+    /// Zipf-distributed rank in [0, n) with exponent `s` — exact inverse
+    /// CDF (O(n) walk; the corpus generator uses [`ZipfSampler`] for the
+    /// hot path).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        let total: f64 = (1..=n).map(|k| (k as f64).powf(-s)).sum();
+        let mut r = self.f64() * total;
+        for k in 1..=n {
+            r -= (k as f64).powf(-s);
+            if r <= 0.0 {
+                return k - 1;
+            }
+        }
+        n - 1
+    }
+
+    /// Sample an index from unnormalized weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut r = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            r -= w;
+            if r <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// k distinct indices from [0, n), in random order.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n);
+        // Floyd's algorithm
+        let mut chosen = std::collections::HashSet::with_capacity(k);
+        let mut out = Vec::with_capacity(k);
+        for j in (n - k)..n {
+            let t = self.below(j + 1);
+            let pick = if chosen.contains(&t) { j } else { t };
+            chosen.insert(pick);
+            out.push(pick);
+        }
+        self.shuffle(&mut out);
+        out
+    }
+}
+
+/// O(1) sampling from a fixed discrete distribution (Walker's alias
+/// method) — the corpus generator's per-token hot path.
+#[derive(Clone, Debug)]
+pub struct ZipfSampler {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl ZipfSampler {
+    /// Zipf over ranks [0, n) with exponent `s`.
+    pub fn new(n: usize, s: f64) -> Self {
+        let w: Vec<f64> = (1..=n).map(|k| (k as f64).powf(-s)).collect();
+        Self::from_weights(&w)
+    }
+
+    /// Alias table from arbitrary non-negative weights.
+    pub fn from_weights(w: &[f64]) -> Self {
+        let n = w.len();
+        assert!(n > 0);
+        let total: f64 = w.iter().sum();
+        let mut prob: Vec<f64> = w.iter().map(|&x| x * n as f64 / total).collect();
+        let mut alias = vec![0usize; n];
+        let mut small: Vec<usize> = (0..n).filter(|&i| prob[i] < 1.0).collect();
+        let mut large: Vec<usize> = (0..n).filter(|&i| prob[i] >= 1.0).collect();
+        while let (Some(s_i), Some(l_i)) = (small.pop(), large.pop()) {
+            alias[s_i] = l_i;
+            prob[l_i] = (prob[l_i] + prob[s_i]) - 1.0;
+            if prob[l_i] < 1.0 {
+                small.push(l_i);
+            } else {
+                large.push(l_i);
+            }
+        }
+        for i in large.into_iter().chain(small) {
+            prob[i] = 1.0;
+        }
+        ZipfSampler { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Rng::new(1);
+        let mut b = Rng::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_bounds() {
+        let mut r = Rng::new(9);
+        for n in [1usize, 2, 3, 17, 1000] {
+            for _ in 0..1000 {
+                assert!(r.below(n) < n);
+            }
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(11);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn zipf_is_skewed() {
+        let mut r = Rng::new(13);
+        let mut counts = [0usize; 10];
+        for _ in 0..20_000 {
+            counts[r.zipf(10, 1.1)] += 1;
+        }
+        assert!(counts[0] > counts[4]);
+        assert!(counts[4] > counts[9].saturating_sub(50));
+        assert!(counts.iter().all(|&c| c > 0));
+    }
+
+    #[test]
+    fn alias_sampler_matches_zipf_cdf() {
+        let mut r = Rng::new(99);
+        let zs = ZipfSampler::new(50, 1.2);
+        let mut counts = vec![0usize; 50];
+        let draws = 100_000;
+        for _ in 0..draws {
+            counts[zs.sample(&mut r)] += 1;
+        }
+        let total: f64 = (1..=50).map(|k| (k as f64).powf(-1.2)).sum();
+        for k in [0usize, 1, 4, 20] {
+            let want = ((k + 1) as f64).powf(-1.2) / total;
+            let got = counts[k] as f64 / draws as f64;
+            assert!((got - want).abs() < 0.01, "rank {k}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn alias_sampler_degenerate_single() {
+        let mut r = Rng::new(1);
+        let zs = ZipfSampler::from_weights(&[3.0]);
+        for _ in 0..10 {
+            assert_eq!(zs.sample(&mut r), 0);
+        }
+    }
+
+    #[test]
+    fn shuffle_permutes() {
+        let mut r = Rng::new(17);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut r = Rng::new(19);
+        let idx = r.sample_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let set: std::collections::HashSet<_> = idx.iter().collect();
+        assert_eq!(set.len(), 20);
+        assert!(idx.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn outlier_normal_has_heavy_tail() {
+        let mut r = Rng::new(23);
+        let xs: Vec<f64> = (0..50_000).map(|_| r.outlier_normal(0.01, 10.0)).collect();
+        let big = xs.iter().filter(|x| x.abs() > 5.0).count();
+        assert!(big > 50, "expected heavy tail, got {big}");
+    }
+
+    #[test]
+    fn fork_streams_independent() {
+        let mut base = Rng::new(31);
+        let mut a = base.fork(1);
+        let mut b = base.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Timing utilities: scoped stopwatches and latency statistics.
+//!
+//! Used by the coordinator's metrics registry and the bench harness
+//! (criterion is unavailable offline — `crate::bench` builds on these).
+
+use std::time::{Duration, Instant};
+
+/// A simple stopwatch.
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Streaming latency statistics (keeps raw samples for percentiles).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    samples: Vec<f64>, // seconds
+}
+
+impl LatencyStats {
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        self.samples.push(s);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn total(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            0.0
+        } else {
+            self.total() / self.samples.len() as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// p in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+        s[idx.min(s.len() - 1)]
+    }
+
+    pub fn summary(&self, unit_scale: f64, unit: &str) -> String {
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p99={:.3}{u} max={:.3}{u}",
+            self.count(),
+            self.mean() * unit_scale,
+            self.percentile(50.0) * unit_scale,
+            self.percentile(99.0) * unit_scale,
+            self.max() * unit_scale,
+            u = unit,
+        )
+    }
+}
+
+/// Time a closure, returning (result, duration).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_percentiles() {
+        let mut s = LatencyStats::default();
+        for i in 1..=100 {
+            s.record_secs(i as f64);
+        }
+        assert_eq!(s.count(), 100);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert!((s.percentile(50.0) - 50.0).abs() <= 1.0);
+        assert!((s.percentile(99.0) - 99.0).abs() <= 1.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn timed_returns_result() {
+        let (v, d) = timed(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_secs() < 1);
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = LatencyStats::default();
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.percentile(99.0), 0.0);
+    }
+}

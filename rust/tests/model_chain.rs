@@ -1,0 +1,117 @@
+//! Integration: model-level artifacts compose correctly.
+//!
+//! * the layered chain (embed → blocks → head) must reproduce the fused
+//!   `lm_nll` graph exactly — two independent lowerings of the same model;
+//! * the train-step artifact must actually learn (loss decreases);
+//! * checkpoint round-trips preserve evaluation results.
+
+use std::sync::Arc;
+
+use sparselm::coordinator::{ModelExec, TrainConfig, Trainer};
+use sparselm::data::{CorpusKind, CorpusSpec, TokenStream, Tokenizer, World};
+use sparselm::model::{load_checkpoint, save_checkpoint, ParamSet};
+use sparselm::runtime::Engine;
+use sparselm::util::propcheck::assert_allclose;
+use sparselm::util::Rng;
+
+fn setup() -> Option<(ModelExec, ParamSet, TokenStream)> {
+    if !std::path::Path::new("artifacts/tiny").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    let engine = Arc::new(Engine::new("artifacts").unwrap());
+    let exec = ModelExec::new(engine, "tiny").unwrap();
+    let mut rng = Rng::new(42);
+    let params = ParamSet::init(&exec.config, &mut rng);
+    let world = World::new(1);
+    let text = CorpusSpec::new(CorpusKind::Wiki, 12_000, 2).generate(&world);
+    let tok = Tokenizer::fit(&text, exec.config.vocab);
+    let stream = TokenStream::new(tok.encode(&text));
+    Some((exec, params, stream))
+}
+
+#[test]
+fn layered_chain_matches_fused_nll() {
+    let Some((exec, params, stream)) = setup() else { return };
+    let cfg = exec.config.clone();
+    let (b, s) = (cfg.batch, cfg.seq);
+    let mut rng = Rng::new(7);
+    let window = stream.sample_batch(b, s, &mut rng);
+    let lits = exec.upload(&params).unwrap();
+
+    // fused graph
+    let fused = exec.lm_nll(&lits, &window).unwrap();
+
+    // layered chain
+    let mut ids = Vec::with_capacity(b * s);
+    let mut tgts = Vec::with_capacity(b * s);
+    for r in 0..b {
+        let row = &window[r * (s + 1)..(r + 1) * (s + 1)];
+        ids.extend_from_slice(&row[..s]);
+        tgts.extend_from_slice(&row[1..]);
+    }
+    let mut h = exec.embed(&lits.lits[0], &ids).unwrap();
+    let nb = sparselm::model::BLOCK_PARAMS.len();
+    for l in 0..cfg.n_layers {
+        let base = 1 + l * nb;
+        let blk: Vec<&xla::PjRtBuffer> = lits.lits[base..base + nb].iter().map(|d| &**d).collect();
+        let (h2, _stats) = exec.block_fwd(&blk, &h).unwrap();
+        h = h2;
+    }
+    let ln_f = &lits.lits[1 + cfg.n_layers * nb];
+    let chained = exec.head_nll(ln_f, &lits.lits[0], &h, &tgts).unwrap();
+
+    assert_allclose(chained.data(), fused.data(), 1e-3, 1e-4).unwrap();
+}
+
+#[test]
+fn untrained_nll_near_uniform() {
+    let Some((exec, params, stream)) = setup() else { return };
+    let cfg = exec.config.clone();
+    let mut rng = Rng::new(9);
+    let window = stream.sample_batch(cfg.batch, cfg.seq, &mut rng);
+    let lits = exec.upload(&params).unwrap();
+    let nll = exec.lm_nll(&lits, &window).unwrap();
+    let mean = nll.mean();
+    let uniform = (cfg.vocab as f64).ln();
+    assert!(
+        (mean - uniform).abs() < 1.5,
+        "untrained mean nll {mean} should be near ln(V) = {uniform}"
+    );
+}
+
+#[test]
+fn training_reduces_loss_and_checkpoints_roundtrip() {
+    let Some((exec, mut params, stream)) = setup() else { return };
+    let trainer = Trainer {
+        exec: &exec,
+        config: TrainConfig {
+            steps: 30,
+            lr: 3e-3,
+            warmup: 3,
+            log_every: 10,
+            seed: 5,
+        },
+    };
+    let losses = trainer.run(&mut params, &stream).unwrap();
+    let first: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let last: f32 = losses[losses.len() - 5..].iter().sum::<f32>() / 5.0;
+    assert!(
+        last < first - 0.5,
+        "training should reduce loss: {first} -> {last}"
+    );
+
+    // checkpoint roundtrip preserves eval
+    let lits = exec.upload(&params).unwrap();
+    let mut rng = Rng::new(11);
+    let window = stream.sample_batch(exec.config.batch, exec.config.seq, &mut rng);
+    let before = exec.lm_nll(&lits, &window).unwrap();
+
+    let path = std::env::temp_dir().join("sparselm-chain-test.ckpt");
+    save_checkpoint(&path, &params).unwrap();
+    let reloaded = load_checkpoint(&path).unwrap();
+    let lits2 = exec.upload(&reloaded).unwrap();
+    let after = exec.lm_nll(&lits2, &window).unwrap();
+    assert_allclose(after.data(), before.data(), 1e-6, 1e-7).unwrap();
+    std::fs::remove_file(&path).ok();
+}

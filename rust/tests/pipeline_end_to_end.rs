@@ -1,0 +1,148 @@
+//! Integration: the full §4 pipeline on a briefly-trained tiny model.
+//!
+//! Checks the *orderings* the paper's tables rest on (not absolute
+//! numbers): dense < sparse PPL, 8:16 ≤ 2:4, outlier recovery helps,
+//! EBFT helps, and the compressed weights actually carry N:M structure.
+
+use std::sync::Arc;
+
+use sparselm::bench::ExperimentCtx;
+use sparselm::coordinator::{CompressionPipeline, PipelineSpec};
+use sparselm::eval::perplexity;
+use sparselm::model::ParamSet;
+use sparselm::pruning::PruneSpec;
+
+struct Ctx {
+    ctx: ExperimentCtx,
+    dense: ParamSet,
+}
+
+fn setup() -> Option<Ctx> {
+    if !std::path::Path::new("artifacts/tiny").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    std::env::set_var("SPARSELM_FAST", "1");
+    let ctx = ExperimentCtx::new("artifacts").unwrap();
+    let (_, dense) = ctx.ensure_trained("tiny", 40).unwrap();
+    Some(Ctx { ctx, dense })
+}
+
+fn ppl_of(c: &Ctx, params: &ParamSet) -> f64 {
+    let exec = sparselm::coordinator::ModelExec::new(Arc::clone(&c.ctx.engine), "tiny").unwrap();
+    let lits = exec.upload(params).unwrap();
+    perplexity(&exec, &lits, &c.ctx.wiki_eval, 4).unwrap().ppl
+}
+
+#[test]
+fn pipeline_orderings_hold() {
+    let Some(c) = setup() else { return };
+    let pipeline = CompressionPipeline::new(Arc::clone(&c.ctx.engine), "tiny").unwrap();
+
+    let dense_ppl = ppl_of(&c, &c.dense);
+    assert!(dense_ppl.is_finite() && dense_ppl > 1.0);
+
+    // 2:4 vs 8:16, same method
+    let (m24, _) = pipeline
+        .run(&c.dense, &c.ctx.wiki_train, &PipelineSpec::new(PruneSpec::new(2, 4)))
+        .unwrap();
+    let (m816, _) = pipeline
+        .run(&c.dense, &c.ctx.wiki_train, &PipelineSpec::new(PruneSpec::new(8, 16)))
+        .unwrap();
+    let ppl24 = ppl_of(&c, &m24);
+    let ppl816 = ppl_of(&c, &m816);
+    assert!(ppl24 > dense_ppl, "sparse ({ppl24}) worse than dense ({dense_ppl})");
+    assert!(
+        ppl816 <= ppl24 * 1.02,
+        "8:16 ({ppl816}) should beat 2:4 ({ppl24})"
+    );
+
+    // outlier recovery helps 2:4
+    let (m24o, report) = pipeline
+        .run(
+            &c.dense,
+            &c.ctx.wiki_train,
+            &PipelineSpec::new(PruneSpec::new(2, 4).outliers(16)),
+        )
+        .unwrap();
+    let ppl24o = ppl_of(&c, &m24o);
+    assert!(
+        ppl24o < ppl24,
+        "16:256 outliers ({ppl24o}) should improve 2:4 ({ppl24})"
+    );
+    assert!(report.total_outlier_bytes() > 0);
+    assert!(report.compression_ratio() > 1.5);
+}
+
+#[test]
+fn weights_have_nm_structure_and_vc_scale() {
+    let Some(c) = setup() else { return };
+    let pipeline = CompressionPipeline::new(Arc::clone(&c.ctx.engine), "tiny").unwrap();
+    let spec = PipelineSpec::new(PruneSpec::new(8, 16).vc(true));
+    let (sparse, report) = pipeline.run(&c.dense, &c.ctx.wiki_train, &spec).unwrap();
+
+    // every pruned linear is ~50% sparse with <= 8 nonzeros per 16-block
+    for lr in &report.layers {
+        assert!(
+            (lr.sparsity - 0.5).abs() < 0.02,
+            "{}: sparsity {}",
+            lr.name,
+            lr.sparsity
+        );
+    }
+    let w = sparse.get("blk0.wq");
+    let (rows, cols) = w.dims2();
+    for r in 0..rows {
+        for b in 0..cols / 16 {
+            let nz = w.row(r)[b * 16..(b + 1) * 16]
+                .iter()
+                .filter(|&&x| x != 0.0)
+                .count();
+            assert!(nz <= 8, "block ({r},{b}) has {nz} nonzeros");
+        }
+    }
+
+    // VC restored the dense variance scale (within bf16-ish tolerance)
+    let dense_var = c.dense.get("blk0.wq").var();
+    let rel = (w.var() - dense_var).abs() / dense_var;
+    assert!(rel < 0.15, "variance correction off by {rel}");
+}
+
+#[test]
+fn ebft_improves_reconstruction() {
+    let Some(c) = setup() else { return };
+    let pipeline = CompressionPipeline::new(Arc::clone(&c.ctx.engine), "tiny").unwrap();
+
+    let base = PipelineSpec::new(PruneSpec::new(2, 4));
+    let (plain, _) = pipeline.run(&c.dense, &c.ctx.wiki_train, &base).unwrap();
+    let mut tuned_spec = PipelineSpec::new(PruneSpec::new(2, 4));
+    tuned_spec.ebft_steps = 12;
+    let (tuned, rep) = pipeline.run(&c.dense, &c.ctx.wiki_train, &tuned_spec).unwrap();
+
+    assert_eq!(rep.ebft_losses.len(), 4, "one loss per tiny block");
+    assert!(rep.ebft_losses.iter().all(|l| l.is_finite()));
+
+    let ppl_plain = ppl_of(&c, &plain);
+    let ppl_tuned = ppl_of(&c, &tuned);
+    assert!(
+        ppl_tuned < ppl_plain * 1.05,
+        "EBFT should not hurt: {ppl_tuned} vs {ppl_plain}"
+    );
+}
+
+#[test]
+fn unstructured_vs_structured_storage() {
+    let Some(c) = setup() else { return };
+    let pipeline = CompressionPipeline::new(Arc::clone(&c.ctx.engine), "tiny").unwrap();
+    let spec = PipelineSpec::new(PruneSpec::new(8, 16).outliers(8));
+    let (_, rep) = pipeline.run(&c.dense, &c.ctx.wiki_train, &spec).unwrap();
+    for lr in &rep.layers {
+        assert!(
+            lr.outlier_bytes < lr.outlier_csr_bytes,
+            "{}: structured {} !< csr {}",
+            lr.name,
+            lr.outlier_bytes,
+            lr.outlier_csr_bytes
+        );
+    }
+}

@@ -1,0 +1,237 @@
+//! Integration: the Pallas/JAX HLO artifacts executed through PJRT must
+//! agree with the independent Rust mirrors in `pruning::*`.
+//!
+//! Requires `make artifacts` (tests no-op with a notice otherwise, so
+//! `cargo test` stays runnable on a fresh checkout).
+
+use sparselm::pruning::{
+    equalize, magnitude_score, mask_excluding, mask_topn_per_block, ria_score,
+    variance_correct, VcMode,
+};
+use sparselm::runtime::{literal_f32, literal_f32_slice, tensor_from_literal, Engine};
+use sparselm::tensor::Tensor;
+use sparselm::util::propcheck::assert_allclose;
+use sparselm::util::Rng;
+
+const SHAPE: (usize, usize) = (256, 256);
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/kernels").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::new("artifacts").unwrap())
+}
+
+fn setup() -> (Tensor, Vec<f32>, Vec<f32>) {
+    let mut rng = Rng::new(2024);
+    let (r, c) = SHAPE;
+    let w = Tensor::randn_outliers(vec![r, c], 0.05, 0.01, 8.0, &mut rng);
+    let colmax: Vec<f32> = (0..c).map(|_| rng.f32() * 3.0 + 0.05).collect();
+    let l2: Vec<f32> = (0..c).map(|_| rng.f32() * 5.0 + 0.05).collect();
+    (w, colmax, l2)
+}
+
+#[test]
+fn score_artifact_matches_rust_ria() {
+    let Some(engine) = engine() else { return };
+    let (w, colmax, l2) = setup();
+    let (r, c) = SHAPE;
+    let km = engine.kernel_manifest(r, c).unwrap();
+
+    for sq in [false, true] {
+        let name = if sq { "score_sq1" } else { "score_sq0" };
+        let outs = engine
+            .run_artifact(
+                &km,
+                name,
+                &[
+                    literal_f32(&w).unwrap(),
+                    literal_f32_slice(&colmax, &[c]).unwrap(),
+                    literal_f32_slice(&l2, &[c]).unwrap(),
+                ],
+            )
+            .unwrap();
+        let got = tensor_from_literal(&outs[0]).unwrap();
+        let w_metric = if sq { equalize(&w, &colmax) } else { w.clone() };
+        let want = ria_score(&w_metric, &l2, 0.5);
+        assert_allclose(got.data(), want.data(), 1e-4, 1e-6).unwrap();
+    }
+}
+
+#[test]
+fn mask_artifacts_match_rust_masks() {
+    let Some(engine) = engine() else { return };
+    let (w, _, l2) = setup();
+    let (r, c) = SHAPE;
+    let km = engine.kernel_manifest(r, c).unwrap();
+    let score = ria_score(&w, &l2, 0.5);
+    let zeros = Tensor::zeros(vec![r, c]);
+
+    for (n, m) in [(2usize, 4usize), (4, 8), (8, 16), (16, 32), (8, 256)] {
+        let outs = engine
+            .run_artifact(
+                &km,
+                &format!("mask_{n}_{m}"),
+                &[literal_f32(&score).unwrap(), literal_f32(&zeros).unwrap()],
+            )
+            .unwrap();
+        let got = tensor_from_literal(&outs[0]).unwrap();
+        let want = mask_topn_per_block(&score, n, m);
+        assert_eq!(got.data(), want.data(), "pattern {n}:{m}");
+    }
+}
+
+#[test]
+fn mask_artifact_respects_exclusion() {
+    let Some(engine) = engine() else { return };
+    let (w, _, l2) = setup();
+    let (r, c) = SHAPE;
+    let km = engine.kernel_manifest(r, c).unwrap();
+    let score = ria_score(&w, &l2, 0.5);
+    let excl = mask_topn_per_block(&score, 16, 256);
+
+    let outs = engine
+        .run_artifact(
+            &km,
+            "mask_8_16",
+            &[literal_f32(&score).unwrap(), literal_f32(&excl).unwrap()],
+        )
+        .unwrap();
+    let got = tensor_from_literal(&outs[0]).unwrap();
+    let want = mask_excluding(&score, &excl, 8, 16);
+    assert_eq!(got.data(), want.data());
+}
+
+#[test]
+fn finalize_artifact_matches_rust_vc() {
+    let Some(engine) = engine() else { return };
+    let (w, _, l2) = setup();
+    let (r, c) = SHAPE;
+    let km = engine.kernel_manifest(r, c).unwrap();
+    let score = ria_score(&w, &l2, 0.5);
+    let omask = mask_topn_per_block(&score, 8, 256);
+    let keep = mask_excluding(&score, &omask, 8, 16);
+
+    for vc in [false, true] {
+        let name = if vc { "finalize_vc1" } else { "finalize_vc0" };
+        let outs = engine
+            .run_artifact(
+                &km,
+                name,
+                &[
+                    literal_f32(&w).unwrap(),
+                    literal_f32(&keep).unwrap(),
+                    literal_f32(&omask).unwrap(),
+                ],
+            )
+            .unwrap();
+        let got = tensor_from_literal(&outs[0]).unwrap();
+        let mut want = w.mul(&keep);
+        if vc {
+            let dense_ref = w.zip(&omask, |x, o| x * (1.0 - o));
+            want = variance_correct(&want, &dense_ref, VcMode::Global);
+        }
+        assert_allclose(got.data(), want.data(), 1e-4, 1e-6).unwrap();
+    }
+}
+
+#[test]
+fn spmm_artifact_matches_dense_reference() {
+    let Some(engine) = engine() else { return };
+    let (w, _, l2) = setup();
+    let (r, c) = SHAPE;
+    let km = engine.kernel_manifest(r, c).unwrap();
+    let score = ria_score(&w, &l2, 0.5);
+    let mask = mask_topn_per_block(&score, 8, 16);
+
+    let sig = km.artifact("spmm").unwrap();
+    let b = sig.inputs[0].shape[0];
+    let mut rng = Rng::new(7);
+    let x = Tensor::randn(vec![b, c], 1.0, &mut rng);
+    let outs = engine
+        .run_artifact(
+            &km,
+            "spmm",
+            &[
+                literal_f32(&x).unwrap(),
+                literal_f32(&w).unwrap(),
+                literal_f32(&mask).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = tensor_from_literal(&outs[0]).unwrap();
+    let want = sparselm::tensor::matmul_wt(&x, &w.mul(&mask));
+    assert_allclose(got.data(), want.data(), 1e-3, 1e-3).unwrap();
+}
+
+#[test]
+fn magnitude_score_artifact() {
+    let Some(engine) = engine() else { return };
+    let (w, _, _) = setup();
+    let (r, c) = SHAPE;
+    let km = engine.kernel_manifest(r, c).unwrap();
+    let outs = engine
+        .run_artifact(&km, "magnitude", &[literal_f32(&w).unwrap()])
+        .unwrap();
+    let got = tensor_from_literal(&outs[0]).unwrap();
+    assert_eq!(got.data(), magnitude_score(&w).data());
+}
+
+#[test]
+fn quant_artifact_matches_rust_groupquant() {
+    let Some(engine) = engine() else { return };
+    let (r, c) = SHAPE;
+    let km = engine.kernel_manifest(r, c).unwrap();
+    let mut rng = Rng::new(4096);
+    let w = Tensor::randn_outliers(vec![r, c], 0.05, 0.01, 12.0, &mut rng);
+    for (bits, group) in [(4u32, 128usize), (8, 128)] {
+        let name = format!("quant_{bits}_{group}");
+        if km.artifact(&name).is_err() {
+            eprintln!("skipping {name}: artifact not exported yet (rerun `make artifacts`)");
+            continue;
+        }
+        let outs = engine
+            .run_artifact(&km, &name, &[literal_f32(&w).unwrap()])
+            .unwrap();
+        let got = tensor_from_literal(&outs[0]).unwrap();
+        let q = sparselm::quant::GroupQuant::quantize(
+            &w,
+            sparselm::quant::QuantSpec::new(bits, group),
+        );
+        let want = q.dequantize();
+        // the Rust packer stores scales in bf16; the kernel keeps f32.
+        // Near a rounding boundary the two grids can disagree by one
+        // quantum, so compare with a per-group step tolerance and bound
+        // how often even that happens.
+        let qmax = ((1i32 << (bits - 1)) - 1) as f32;
+        let mut flips = 0usize;
+        for row in 0..r {
+            for g0 in (0..c).step_by(group) {
+                let blk: Vec<f32> = (0..group).map(|j| w.at2(row, g0 + j)).collect();
+                let absmax = blk.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+                let step = absmax / qmax;
+                for j in 0..group {
+                    let gv = got.at2(row, g0 + j);
+                    let wv = want.at2(row, g0 + j);
+                    let d = (gv - wv).abs();
+                    // a boundary flip shifts the code by 1 → one full step
+                    assert!(
+                        d <= 1.02 * step + absmax * 0.005 + 1e-6,
+                        "{name} ({row},{}): {gv} vs {wv} (step {step})",
+                        g0 + j
+                    );
+                    if d > 0.5 * step {
+                        flips += 1;
+                    }
+                }
+            }
+        }
+        // bf16 scale rounding (rel err ≤ 2^-9) shifts codes by up to
+        // qmax*2^-9 buckets, so the expected flip fraction grows with
+        // the grid resolution
+        let frac = flips as f64 / (r * c) as f64;
+        let bound = 0.005 * qmax as f64 + 0.01;
+        assert!(frac < bound, "{name}: {frac:.4} boundary flips (bound {bound:.4})");
+    }
+}
