@@ -4,8 +4,10 @@
 //! Hot paths measured:
 //!   * score+mask+vc host mirror (per-layer prune fallback)
 //!   * PackedNm pack/unpack throughput (runs after every prune job)
+//!   * decode-free spmm vs dense GEMM vs the old unpack+matmul round-trip
 //!   * k:256 outlier extraction + packing
-//!   * PJRT prune chain (score -> mask -> finalize artifacts)
+//!   * PJRT prune chain (score -> mask -> finalize artifacts; needs the
+//!     real xla backend, `--features xla`)
 //!   * lm_nll eval batch latency (the eval loop's unit of work)
 
 use std::sync::Arc;
@@ -56,6 +58,38 @@ fn main() -> sparselm::Result<()> {
         fmt_rate(bytes / dt),
     ]);
 
+    // the serving GEMM: dense vs the removed unpack round-trip vs
+    // decode-free spmm (serial + row-block parallel)
+    let x = Tensor::randn(vec![8, c], 1.0, &mut rng);
+    let dt = time_it(2, 20, || sparselm::tensor::matmul_wt(&x, &w));
+    t.row(&[
+        "GEMM dense matmul_wt (b=8)".into(),
+        format!("{:.2} ms", dt * 1e3),
+        fmt_rate(bytes / dt),
+    ]);
+    let dt = time_it(2, 20, || {
+        sparselm::tensor::matmul_wt(&x, &packed.to_dense())
+    });
+    t.row(&[
+        "GEMM unpack+matmul (old path)".into(),
+        format!("{:.2} ms", dt * 1e3),
+        fmt_rate(bytes / dt),
+    ]);
+    let pk_bytes = sparselm::sparse::Kernel::operand_bytes(&packed) as f64;
+    let dt = time_it(2, 20, || sparselm::sparse::spmm(&x, &packed));
+    t.row(&[
+        "GEMM spmm 8:16 decode-free".into(),
+        format!("{:.2} ms", dt * 1e3),
+        fmt_rate(pk_bytes / dt),
+    ]);
+    let threads = sparselm::util::pool::default_parallelism();
+    let dt = time_it(2, 20, || sparselm::sparse::spmm_parallel(&x, &packed, threads));
+    t.row(&[
+        format!("GEMM spmm 8:16 parallel x{threads}"),
+        format!("{:.2} ms", dt * 1e3),
+        fmt_rate(pk_bytes / dt),
+    ]);
+
     let dt = time_it(2, 20, || {
         StructuredOutliers::from_dense_mask(&w, &res.omask, 16, 256)
     });
@@ -72,8 +106,8 @@ fn main() -> sparselm::Result<()> {
         fmt_rate(bytes / dt),
     ]);
 
-    // PJRT paths (need artifacts)
-    if std::path::Path::new("artifacts/kernels").exists() {
+    // PJRT paths (need artifacts + the real xla backend)
+    if sparselm::runtime::pjrt_available() && std::path::Path::new("artifacts/kernels").exists() {
         println!("\n# perf_hotpath — PJRT kernel chain ({r}x{c})\n");
         let t = TablePrinter::new(
             &["artifact", "upload-per-call", "device-resident"],

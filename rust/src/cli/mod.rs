@@ -65,7 +65,9 @@ subcommands:
   info      model/artifact inventory
   quant     group-quantize a checkpoint (SPQR-style outliers optional)
   owl       OWL per-layer N:M allocation report
-  serve     scoring server (dynamic batching over the PJRT executable)
+  serve     scoring server (dynamic batching; --backend spmm packs + serves
+            decode-free, dense serves exact weights via the host forward,
+            pjrt uses the AOT artifacts)
   serve-bench  closed-loop load generator against a running server
 
 common flags: --model <tiny|small|gqa|wide|e2e> --artifacts <dir>

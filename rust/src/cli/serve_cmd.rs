@@ -9,8 +9,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::data::{CorpusKind, CorpusSpec, Tokenizer, World};
-use crate::model::load_checkpoint;
-use crate::serve::{pjrt_scorer, serve, ServeClient, ServerConfig};
+use crate::model::{load_checkpoint, SparseLm};
+use crate::serve::{pjrt_scorer, serve, spmm_scorer, ServeClient, ServerConfig};
 use crate::util::args::Args;
 
 /// Rebuild the deterministic tokenizer every component shares (the same
@@ -30,18 +30,52 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
     let params = load_checkpoint(std::path::Path::new(&ckpt))?;
     let batch = params.config.batch;
     let tokenizer = Arc::new(standard_tokenizer(crate::bench::fast_mode()));
-    let handle = serve(
-        pjrt_scorer(artifacts, model.clone(), params),
-        tokenizer,
-        ServerConfig {
-            addr,
-            max_conns: args.get_usize("max-conns", 32),
-            max_batch: batch,
-            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 15)),
-        },
-    )?;
+    let server_cfg = ServerConfig {
+        addr,
+        max_conns: args.get_usize("max-conns", 32),
+        max_batch: batch,
+        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 15)),
+    };
+    // default: serve the checkpoint decode-free (packed spmm host
+    // forward); `--backend dense` serves the exact weights through the
+    // host forward; `--backend pjrt` keeps the artifact path (needs
+    // `--features xla`)
+    let default_backend = if crate::runtime::pjrt_available() {
+        "pjrt"
+    } else {
+        "spmm"
+    };
+    let backend = args.get_str("backend", default_backend);
+    let threads = args.get_usize("threads", crate::util::pool::default_parallelism());
+    let handle = match backend.as_str() {
+        "pjrt" => serve(
+            pjrt_scorer(artifacts, model.clone(), params),
+            tokenizer,
+            server_cfg,
+        )?,
+        "dense" => {
+            let lm = SparseLm::from_params(&params).with_threads(threads);
+            serve(spmm_scorer(lm), tokenizer, server_cfg)?
+        }
+        "spmm" => {
+            let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
+            let k = args.get_usize("outliers", 16);
+            let lm = SparseLm::compress(&params, n, m, k).with_threads(threads);
+            println!(
+                "packing checkpoint to {n}:{m} + {k}:256 (magnitude selection) — \
+                 lossy for dense checkpoints; use --backend dense to serve exact weights"
+            );
+            println!(
+                "packed linear traffic {} KiB (dense {} KiB)",
+                lm.linear_operand_bytes() / 1024,
+                lm.dense_linear_bytes() / 1024
+            );
+            serve(spmm_scorer(lm), tokenizer, server_cfg)?
+        }
+        other => anyhow::bail!("unknown --backend {other} (expected spmm|dense|pjrt)"),
+    };
     println!(
-        "serving {model} ({ckpt}) on {} — newline-JSON ops: ping/nll/choice/stats/shutdown",
+        "serving {model} ({ckpt}, {backend}) on {} — newline-JSON ops: ping/nll/choice/stats/shutdown",
         handle.addr
     );
     handle.join()?;

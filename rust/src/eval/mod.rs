@@ -1,8 +1,68 @@
 //! Evaluation harnesses: perplexity and zero-shot multiple-choice
 //! accuracy — the two metrics every table of the paper reports.
+//!
+//! Both harnesses are generic over [`NllModel`], the one-method contract
+//! "score a `(B, S+1)` token window": the PJRT artifact path
+//! ([`PjrtModel`]) and the offline decode-free packed path
+//! ([`crate::model::SparseLm`]) plug in interchangeably, so eval results
+//! can be produced with packed weights staying packed end-to-end.
 
 mod ppl;
 mod zeroshot;
 
-pub use ppl::{perplexity, PplReport};
-pub use zeroshot::{zero_shot_accuracy, TaskReport, ZeroShotReport};
+pub use ppl::{perplexity, perplexity_model, PplReport};
+pub use zeroshot::{
+    eval_task, eval_task_model, zero_shot_accuracy, zero_shot_accuracy_model, TaskReport,
+    ZeroShotReport,
+};
+
+use crate::coordinator::{ModelExec, ParamLiterals};
+use crate::model::SparseLm;
+use crate::tensor::Tensor;
+
+/// A language model that can score token windows — the only capability
+/// the eval harnesses (and the serve scorer) need.
+pub trait NllModel {
+    /// Batch rows per scoring call (the window's B).
+    fn batch(&self) -> usize;
+    /// Scored positions per row (the window's S; windows are S+1 ids).
+    fn seq(&self) -> usize;
+    /// Per-token negative log-likelihood of a flat `(B, S+1)` window,
+    /// returned as a `(B, S)` tensor.
+    fn lm_nll(&self, tokens: &[i32]) -> crate::Result<Tensor>;
+}
+
+/// The artifact-backed scorer: `lm_nll` HLO over device-resident params.
+pub struct PjrtModel<'a> {
+    pub exec: &'a ModelExec,
+    pub params: &'a ParamLiterals,
+}
+
+impl NllModel for PjrtModel<'_> {
+    fn batch(&self) -> usize {
+        self.exec.config.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.exec.config.seq
+    }
+
+    fn lm_nll(&self, tokens: &[i32]) -> crate::Result<Tensor> {
+        self.exec.lm_nll(self.params, tokens)
+    }
+}
+
+impl NllModel for SparseLm {
+    fn batch(&self) -> usize {
+        self.config.batch
+    }
+
+    fn seq(&self) -> usize {
+        self.config.seq
+    }
+
+    fn lm_nll(&self, tokens: &[i32]) -> crate::Result<Tensor> {
+        // inherent method — the host forward over kernel-backed linears
+        SparseLm::lm_nll(self, tokens)
+    }
+}

@@ -1,7 +1,12 @@
 //! Perplexity: exp(mean per-token NLL) over deterministic
 //! non-overlapping windows of a held-out stream — the WikiText-2/C4
 //! protocol of the paper's Tables 1/4/5/6.
+//!
+//! Backend-agnostic: [`perplexity_model`] drives any [`NllModel`]
+//! (PJRT artifacts or the decode-free packed host forward);
+//! [`perplexity`] is the artifact-path convenience wrapper.
 
+use super::{NllModel, PjrtModel};
 use crate::coordinator::{ModelExec, ParamLiterals};
 use crate::data::TokenStream;
 
@@ -13,20 +18,19 @@ pub struct PplReport {
     pub batches: usize,
 }
 
-/// Evaluate perplexity of `params` on up to `max_batches` windows.
-pub fn perplexity(
-    exec: &ModelExec,
-    params: &ParamLiterals,
+/// Evaluate perplexity of any scorer on up to `max_batches` windows.
+pub fn perplexity_model(
+    model: &dyn NllModel,
     stream: &TokenStream,
     max_batches: usize,
 ) -> crate::Result<PplReport> {
-    let cfg = &exec.config;
-    let batches = stream.eval_batches(cfg.batch, cfg.seq, max_batches);
+    let (b, s) = (model.batch(), model.seq());
+    let batches = stream.eval_batches(b, s, max_batches);
     anyhow::ensure!(!batches.is_empty(), "stream too short for evaluation");
     let mut total_nll = 0.0f64;
     let mut total_tokens = 0usize;
     for batch in &batches {
-        let nll = exec.lm_nll(params, batch)?;
+        let nll = model.lm_nll(batch)?;
         total_nll += nll.sum();
         total_tokens += nll.len();
     }
@@ -37,4 +41,14 @@ pub fn perplexity(
         tokens: total_tokens,
         batches: batches.len(),
     })
+}
+
+/// Evaluate perplexity of `params` through the PJRT artifact path.
+pub fn perplexity(
+    exec: &ModelExec,
+    params: &ParamLiterals,
+    stream: &TokenStream,
+    max_batches: usize,
+) -> crate::Result<PplReport> {
+    perplexity_model(&PjrtModel { exec, params }, stream, max_batches)
 }

@@ -5,8 +5,11 @@
 //! Each candidate completion is appended to the context; the candidate
 //! with the lowest *length-normalized* NLL over its completion tokens
 //! wins.  Items are packed into fixed-shape (B, S+1) batches (the aot
-//! graphs have static shapes), several choices per batch row.
+//! graphs have static shapes), several choices per batch row. Scoring is
+//! generic over [`NllModel`], so the same harness runs against PJRT
+//! artifacts or the decode-free packed host forward.
 
+use super::{NllModel, PjrtModel};
 use crate::coordinator::{ModelExec, ParamLiterals};
 use crate::data::batch::pack_windows;
 use crate::data::tasks::{McItem, TaskKind, ALL_TASKS};
@@ -36,14 +39,8 @@ impl ZeroShotReport {
 }
 
 /// Score one item: per-choice length-normalized NLL.
-fn score_item(
-    exec: &ModelExec,
-    params: &ParamLiterals,
-    tok: &Tokenizer,
-    item: &McItem,
-) -> crate::Result<usize> {
-    let cfg = &exec.config;
-    let (b, s) = (cfg.batch, cfg.seq);
+fn score_item(model: &dyn NllModel, tok: &Tokenizer, item: &McItem) -> crate::Result<usize> {
+    let (b, s) = (model.batch(), model.seq());
     // encode every choice as (ids, scored_from)
     let mut encoded: Vec<(Vec<i32>, usize)> = Vec::with_capacity(item.choices.len());
     for choice in &item.choices {
@@ -58,7 +55,7 @@ fn score_item(
     let mut nlls = Vec::with_capacity(encoded.len());
     for chunk in encoded.chunks(b) {
         let (ids, mask) = pack_windows(chunk, b, s);
-        let nll = exec.lm_nll(params, &ids)?;
+        let nll = model.lm_nll(&ids)?;
         for (r, _) in chunk.iter().enumerate() {
             let row = &nll.data()[r * s..(r + 1) * s];
             let mrow = &mask[r * s..(r + 1) * s];
@@ -80,10 +77,9 @@ fn score_item(
     Ok(best)
 }
 
-/// Run one task suite.
-pub fn eval_task(
-    exec: &ModelExec,
-    params: &ParamLiterals,
+/// Run one task suite against any scorer.
+pub fn eval_task_model(
+    model: &dyn NllModel,
     tok: &Tokenizer,
     world: &World,
     task: TaskKind,
@@ -93,7 +89,7 @@ pub fn eval_task(
     let items = task.generate(world, n_items, seed);
     let mut correct = 0usize;
     for item in &items {
-        if score_item(exec, params, tok, item)? == item.answer {
+        if score_item(model, tok, item)? == item.answer {
             correct += 1;
         }
     }
@@ -105,7 +101,35 @@ pub fn eval_task(
     })
 }
 
-/// All five suites; `n_items` each.
+/// Run one task suite through the PJRT artifact path.
+pub fn eval_task(
+    exec: &ModelExec,
+    params: &ParamLiterals,
+    tok: &Tokenizer,
+    world: &World,
+    task: TaskKind,
+    n_items: usize,
+    seed: u64,
+) -> crate::Result<TaskReport> {
+    eval_task_model(&PjrtModel { exec, params }, tok, world, task, n_items, seed)
+}
+
+/// All five suites against any scorer; `n_items` each.
+pub fn zero_shot_accuracy_model(
+    model: &dyn NllModel,
+    tok: &Tokenizer,
+    world: &World,
+    n_items: usize,
+    seed: u64,
+) -> crate::Result<ZeroShotReport> {
+    let mut tasks = Vec::new();
+    for task in ALL_TASKS {
+        tasks.push(eval_task_model(model, tok, world, task, n_items, seed)?);
+    }
+    Ok(ZeroShotReport { tasks })
+}
+
+/// All five suites through the PJRT artifact path; `n_items` each.
 pub fn zero_shot_accuracy(
     exec: &ModelExec,
     params: &ParamLiterals,
@@ -114,9 +138,5 @@ pub fn zero_shot_accuracy(
     n_items: usize,
     seed: u64,
 ) -> crate::Result<ZeroShotReport> {
-    let mut tasks = Vec::new();
-    for task in ALL_TASKS {
-        tasks.push(eval_task(exec, params, tok, world, task, n_items, seed)?);
-    }
-    Ok(ZeroShotReport { tasks })
+    zero_shot_accuracy_model(&PjrtModel { exec, params }, tok, world, n_items, seed)
 }

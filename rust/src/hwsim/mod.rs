@@ -5,15 +5,22 @@
 //! 8:16).
 //!
 //! No silicon implements 8:16 (paper Limitations §8), so — per the
-//! substitution rule — speedups are *modeled*, not measured: a roofline
+//! substitution rule — *latencies* are modeled, not measured: a roofline
 //! over bytes moved (weights + pattern metadata + activations) and MACs,
 //! with a fixed per-kernel launch overhead. The model reproduces the
 //! qualitative shape the paper cites: bandwidth-bound large GEMMs
 //! approach 2×, small GEMMs are overhead-bound, and 8:16's extra metadata
 //! (0.875 vs 0.75 bits/elt) costs only ~1% of the dense traffic.
+//!
+//! The *bytes* side, however, is now measured: the decode-free spmm
+//! kernels report the operand bytes they actually stream
+//! ([`crate::sparse::Kernel::operand_bytes`]), and [`ModelCheck`] ties
+//! that measurement back to this model's prediction — `cargo bench
+//! --bench f2_spmm` walks the paper's layer shapes and asserts
+//! measured ≈ modeled and packed ≤ 0.60× dense at 8:16.
 
 mod speedup;
 mod traffic;
 
 pub use speedup::{speedup_curve, SpeedupPoint};
-pub use traffic::{GemmShape, HwModel, TrafficReport};
+pub use traffic::{GemmShape, HwModel, ModelCheck, TrafficReport};

@@ -121,6 +121,52 @@ impl HwModel {
     pub fn speedup(&self, g: GemmShape, n: usize, m: usize) -> f64 {
         self.dense(g).latency / self.sparse_nm(g, n, m).latency
     }
+
+    /// Modeled weight-operand traffic (values + pattern metadata bytes)
+    /// of one packed N:M GEMM — the prediction side of the
+    /// measured-vs-modeled comparison.
+    pub fn nm_operand_bytes(&self, g: GemmShape, n: usize, m: usize) -> f64 {
+        let r = self.sparse_nm(g, n, m);
+        r.weight_bytes + r.meta_bytes
+    }
+
+    /// Compare the bytes a real kernel streams
+    /// ([`crate::sparse::Kernel::operand_bytes`]) against this model's
+    /// prediction for the same GEMM. Driven by `cargo bench --bench
+    /// f2_spmm`, which walks the paper's layer shapes.
+    pub fn check_nm_operand(
+        &self,
+        g: GemmShape,
+        n: usize,
+        m: usize,
+        measured_bytes: usize,
+    ) -> ModelCheck {
+        ModelCheck {
+            measured_bytes: measured_bytes as f64,
+            modeled_bytes: self.nm_operand_bytes(g, n, m),
+        }
+    }
+}
+
+/// Measured-vs-modeled weight traffic for one packed operand.
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCheck {
+    pub measured_bytes: f64,
+    pub modeled_bytes: f64,
+}
+
+impl ModelCheck {
+    /// measured / modeled — 1.0 when the implementation streams exactly
+    /// the bytes the roofline assumes (u64 word padding of the pattern
+    /// stream adds a sliver above 1 on small matrices).
+    pub fn ratio(&self) -> f64 {
+        self.measured_bytes / self.modeled_bytes
+    }
+
+    /// |ratio - 1| ≤ tol.
+    pub fn within(&self, tol: f64) -> bool {
+        (self.ratio() - 1.0).abs() <= tol
+    }
 }
 
 #[cfg(test)]
@@ -181,6 +227,34 @@ mod tests {
         for k in [4usize, 8, 16] {
             assert!(hw.outlier_overhead(g, k) < hw.csr_overhead(g, k));
         }
+    }
+
+    #[test]
+    fn measured_packed_bytes_match_model() {
+        use crate::pruning::mask_topn_per_block;
+        use crate::sparse::{Kernel, PackedNm};
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+        let hw = HwModel::default();
+        let mut rng = Rng::new(9);
+        for (n, m) in [(2usize, 4usize), (8, 16)] {
+            let (rows, cols) = (256usize, 512usize);
+            let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+            let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+            let packed = PackedNm::from_dense_mask(&w, &mask, n, m);
+            let g = GemmShape::new(8, rows, cols);
+            let chk = hw.check_nm_operand(g, n, m, packed.operand_bytes());
+            assert!(chk.within(0.01), "{n}:{m}: ratio {}", chk.ratio());
+        }
+    }
+
+    #[test]
+    fn packed_operand_leq_060_dense_at_8_16() {
+        // the bench acceptance bar, verified at model level too
+        let hw = HwModel::default();
+        let g = GemmShape::new(8, 4096, 4096);
+        let dense = hw.dense(g).weight_bytes;
+        assert!(hw.nm_operand_bytes(g, 8, 16) <= 0.60 * dense);
     }
 
     #[test]

@@ -10,15 +10,25 @@
 //!   the per-layer pruning graphs and the EBFT block fine-tuning step — all
 //!   AOT-lowered to HLO text in `artifacts/`.
 //! * **Layer 3** (this crate): the production coordinator. It owns the
-//!   event loop, the sparse storage formats, calibration, the per-layer
+//!   event loop, the sparse storage formats **and the decode-free packed
+//!   GEMM that serves them** ([`sparse::Kernel`] / [`sparse::spmm()`]),
+//!   the host forward ([`model::SparseLm`]), calibration, the per-layer
 //!   pruning scheduler, EBFT orchestration, evaluation harnesses, the
-//!   hardware memory-traffic simulator and the CLI. Python never runs on
-//!   the request path: everything executes through PJRT
-//!   ([`runtime::Engine`]).
+//!   hardware memory-traffic simulator, the scoring server and the CLI.
+//!   Python never runs on the request path.
+//!
+//! Two execution backends share the eval/serve surfaces: the offline
+//! default applies packed N:M weights straight from their bit-packed
+//! storage (tokens → batcher → packed spmm → logits; weights never
+//! expand to dense), and the artifact path executes the AOT HLO graphs
+//! through PJRT ([`runtime::Engine`], `--features xla`). The request
+//! path is walked through in `docs/ARCHITECTURE.md`; the packed on-disk
+//! layout is specified in `docs/FORMAT.md`.
 //!
 //! Start with [`coordinator::CompressionPipeline`] for the paper's §4
-//! pipeline, [`sparse`] for the storage formats, and `examples/` for
-//! runnable entry points.
+//! pipeline, [`sparse`] for the storage formats and spmm kernels, and
+//! `examples/` for runnable entry points (`packed_serve` is the
+//! offline end-to-end demo).
 
 pub mod bench;
 pub mod cli;

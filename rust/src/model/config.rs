@@ -46,6 +46,36 @@ impl ModelConfig {
         }
     }
 
+    /// Built-in config family, mirroring `python/compile/configs.py`
+    /// (`CONFIGS`). Artifact-backed runs still read the manifest — this
+    /// exists for the offline host-forward path, which has no manifest.
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        let mk = |name: &str, dim, n_layers, n_heads, n_kv_heads, hidden, vocab| ModelConfig {
+            name: name.to_string(),
+            dim,
+            n_layers,
+            n_heads,
+            n_kv_heads,
+            hidden,
+            vocab,
+            seq: 128,
+            batch: 4,
+            rope_theta: 10000.0,
+            adam_b1: 0.9,
+            adam_b2: 0.95,
+            adam_eps: 1e-8,
+            weight_decay: 0.01,
+        };
+        match name {
+            "tiny" => Some(mk("tiny", 256, 4, 4, 4, 512, 2048)),
+            "small" => Some(mk("small", 256, 8, 8, 8, 768, 2048)),
+            "gqa" => Some(mk("gqa", 256, 6, 8, 2, 768, 4096)),
+            "wide" => Some(mk("wide", 256, 6, 4, 4, 1024, 2048)),
+            "e2e" => Some(mk("e2e", 512, 8, 8, 8, 1536, 4096)),
+            _ => None,
+        }
+    }
+
     pub fn head_dim(&self) -> usize {
         self.dim / self.n_heads
     }
@@ -131,6 +161,22 @@ mod tests {
             adam_b2: 0.95,
             adam_eps: 1e-8,
             weight_decay: 0.01,
+        }
+    }
+
+    #[test]
+    fn presets_mirror_configs_py() {
+        let tiny = ModelConfig::preset("tiny").unwrap();
+        assert_eq!((tiny.dim, tiny.n_layers, tiny.vocab), (256, 4, 2048));
+        let gqa = ModelConfig::preset("gqa").unwrap();
+        assert_eq!((gqa.n_heads, gqa.n_kv_heads), (8, 2));
+        assert_eq!(gqa.kv_dim(), 64);
+        assert!(ModelConfig::preset("nope").is_none());
+        // every preset keeps linear inputs 256-aligned for k:256 outliers
+        for name in ["tiny", "small", "gqa", "wide", "e2e"] {
+            let c = ModelConfig::preset(name).unwrap();
+            assert_eq!(c.dim % 256, 0, "{name}");
+            assert_eq!(c.hidden % 256, 0, "{name}");
         }
     }
 

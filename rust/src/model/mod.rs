@@ -1,15 +1,20 @@
-//! Model substrate: configuration, parameter registry, checkpoint IO.
+//! Model substrate: configuration, parameter registry, checkpoint IO,
+//! and the host forward pass.
 //!
-//! The architecture itself (fwd/bwd) lives in the L2 JAX graphs; this
-//! module owns the *weights* on the Rust side — naming, shapes, block
-//! structure, initialization mirroring `model.init_params`, and a binary
-//! checkpoint format so trained/compressed models round-trip without
-//! Python.
+//! The artifact path (fwd/bwd through PJRT) lives in the L2 JAX graphs;
+//! this module owns the *weights* on the Rust side — naming, shapes,
+//! block structure, initialization mirroring `model.init_params`, a
+//! binary checkpoint format so trained/compressed models round-trip
+//! without Python — **and** [`SparseLm`], a host-resident forward whose
+//! linear layers run through [`crate::sparse::Kernel`], so packed N:M
+//! weights are served decode-free (see `docs/ARCHITECTURE.md`).
 
 mod checkpoint;
 mod config;
+mod forward;
 mod params;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint};
 pub use config::ModelConfig;
+pub use forward::{BlockWeights, SparseLm, RMS_EPS};
 pub use params::{ParamSet, BLOCK_LINEAR, BLOCK_PARAMS};

@@ -4,6 +4,14 @@
 //! This is the only boundary between the Rust coordinator and the XLA
 //! world. Python never runs here — artifacts are self-contained HLO
 //! modules compiled once per process and cached ([`Engine`]).
+//!
+//! The `xla` dependency is feature-gated: the default (offline) build
+//! links the CPU stub in `vendor/xla`, under which every literal/upload
+//! path here works but artifact compilation/execution returns a typed
+//! error ([`pjrt_available`] reports which backend is linked). The
+//! decode-free packed hot path ([`crate::sparse::spmm()`] +
+//! [`crate::model::SparseLm`]) needs none of this and serves fully
+//! offline.
 
 mod engine;
 mod manifest;
@@ -12,6 +20,12 @@ pub use engine::{DeviceBuffer, Engine, KernelSet};
 pub use manifest::{ArtifactSig, Manifest, TensorSig};
 
 use crate::tensor::Tensor;
+
+/// True when the crate was built with the real PJRT backend
+/// (`--features xla`); false under the offline `vendor/xla` CPU stub.
+pub fn pjrt_available() -> bool {
+    cfg!(feature = "xla")
+}
 
 /// Convert a host tensor to an f32 PJRT literal.
 pub fn literal_f32(t: &Tensor) -> crate::Result<xla::Literal> {

@@ -1,13 +1,21 @@
 //! Scoring service — the compressed model behind a socket.
 //!
 //! The paper motivates 8:16 sparsity with deployment efficiency; this
-//! module is the deployment: a Rust-only eval server that loads a
-//! (compressed) checkpoint plus the AOT artifacts and serves
+//! module is the deployment: a Rust-only eval server that serves
 //! log-likelihood scoring over TCP with **dynamic batching** — requests
-//! are coalesced into the model's fixed PJRT batch shape, vLLM-router
-//! style, so single-request clients still get full-batch throughput.
-//! Python is never involved: the request path is socket → batcher →
-//! PJRT executable.
+//! are coalesced into the model's fixed batch shape, vLLM-router style,
+//! so single-request clients still get full-batch throughput.
+//!
+//! The request path is socket → [`Batcher`] → scorer, where the default
+//! scorer ([`spmm_scorer`]) runs the decode-free packed hot path: every
+//! linear layer applies bit-packed N:M weights (+ structured outliers)
+//! straight from storage via [`crate::sparse::spmm_parallel()`] — the
+//! weights are never expanded to dense, so serving traffic matches the
+//! packed footprint the paper's Table 1 accounts for. The PJRT-backed
+//! [`pjrt_scorer`] (AOT artifacts, `--features xla`) is the
+//! artifact-path alternative. Python is never involved. The full hot
+//! path (tokens → batcher → packed spmm → logits) is walked through in
+//! `docs/ARCHITECTURE.md`.
 //!
 //! * [`batcher`] — the queueing/coalescing core (pure, fully unit- and
 //!   property-tested without sockets);
@@ -23,4 +31,6 @@ pub mod server;
 pub use batcher::{Batcher, BatcherConfig, ScoreRequest, ScoreResponse};
 pub use client::ServeClient;
 pub use protocol::{Request, Response};
-pub use server::{pjrt_scorer, serve, Scorer, ServerConfig, ServerHandle, ServerStats};
+pub use server::{
+    pjrt_scorer, serve, spmm_scorer, Scorer, ServerConfig, ServerHandle, ServerStats,
+};

@@ -1,14 +1,18 @@
 //! TCP front end: newline-delimited JSON requests, dynamically batched
-//! PJRT scoring behind them.
+//! model scoring behind them.
 //!
 //! Layout: one acceptor thread, one OS thread per connection (bounded by
-//! `max_conns`), one scoring thread owning the PJRT state and draining
-//! the [`Batcher`]. PJRT handles are `!Send` (the `xla` crate wraps
-//! `Rc`s over C pointers), so the server takes a **scorer factory**: a
-//! `Send` closure invoked *on* the scoring thread to build the scorer —
-//! [`pjrt_scorer`] is the production factory; tests pass fakes. Shutdown
-//! is cooperative: `{"op":"shutdown"}` (or [`ServerHandle::shutdown`])
-//! closes the batcher, unblocks the acceptor and joins every thread.
+//! `max_conns`), one scoring thread owning the model state and draining
+//! the [`Batcher`]. The server takes a **scorer factory**: a `Send`
+//! closure invoked *on* the scoring thread to build the scorer (PJRT
+//! handles are `!Send` — the `xla` crate wraps `Rc`s over C pointers —
+//! and the factory pattern also lets tests pass fakes). Two production
+//! factories exist: [`spmm_scorer`] serves packed N:M weights through
+//! the decode-free host forward (offline, the default deployment), and
+//! [`pjrt_scorer`] serves HLO artifacts through PJRT (`--features xla`).
+//! Shutdown is cooperative: `{"op":"shutdown"}` (or
+//! [`ServerHandle::shutdown`]) closes the batcher, unblocks the acceptor
+//! and joins every thread.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -107,9 +111,29 @@ impl ServerHandle {
 /// A batch scorer: rows in arrival order → per-row `(sum_nll, tokens)`.
 pub type Scorer = Box<dyn FnMut(&[ScoreRequest]) -> crate::Result<Vec<(f64, usize)>>>;
 
-/// Production scorer factory: builds the PJRT engine, loads `config_name`
-/// artifacts, uploads `params`, and scores via the `lm_nll` executable.
-/// Invoke *inside* the scoring thread (PJRT is thread-bound).
+/// Reduce a `(B, S)` NLL tensor + scored-position mask back to per-row
+/// `(sum_nll, scored_tokens)` for the first `n` rows.
+fn rows_from_nll(nll: &crate::tensor::Tensor, mask: &[f32], n: usize, s: usize) -> Vec<(f64, usize)> {
+    (0..n)
+        .map(|r| {
+            let row = &nll.data()[r * s..(r + 1) * s];
+            let mrow = &mask[r * s..(r + 1) * s];
+            let sum: f64 = row
+                .iter()
+                .zip(mrow)
+                .map(|(&n_, &m)| n_ as f64 * m as f64)
+                .sum();
+            let count = mrow.iter().filter(|&&m| m != 0.0).count();
+            (sum, count)
+        })
+        .collect()
+}
+
+/// PJRT scorer factory: builds the engine, loads `config_name` artifacts,
+/// uploads `params`, and scores via the `lm_nll` executable. Invoke
+/// *inside* the scoring thread (PJRT is thread-bound). Requires the real
+/// xla backend (`--features xla`); under the offline stub every scoring
+/// call reports the stub's execution error.
 pub fn pjrt_scorer(
     artifacts: String,
     config_name: String,
@@ -127,19 +151,30 @@ pub fn pjrt_scorer(
                 .collect();
             let (ids, mask) = pack_windows(&items, b, s);
             let nll = exec.lm_nll(&lits, &ids)?;
-            Ok((0..reqs.len())
-                .map(|r| {
-                    let row = &nll.data()[r * s..(r + 1) * s];
-                    let mrow = &mask[r * s..(r + 1) * s];
-                    let sum: f64 = row
-                        .iter()
-                        .zip(mrow)
-                        .map(|(&n, &m)| n as f64 * m as f64)
-                        .sum();
-                    let count = mrow.iter().filter(|&&m| m != 0.0).count();
-                    (sum, count)
-                })
-                .collect())
+            Ok(rows_from_nll(&nll, &mask, reqs.len(), s))
+        }) as Scorer)
+    }
+}
+
+/// Decode-free packed scorer factory: every request is scored by the
+/// host forward ([`crate::model::SparseLm`]), whose linear layers apply
+/// packed N:M + structured-outlier weights directly via
+/// [`crate::sparse::spmm_parallel()`] — weights stay packed end-to-end
+/// (tokens → batcher → packed spmm → logits → NLL), no PJRT, no
+/// artifacts, fully offline.
+pub fn spmm_scorer(
+    model: crate::model::SparseLm,
+) -> impl FnOnce() -> crate::Result<Scorer> + Send {
+    move || {
+        let (b, s) = (model.config.batch, model.config.seq);
+        Ok(Box::new(move |reqs: &[ScoreRequest]| {
+            let items: Vec<(Vec<i32>, usize)> = reqs
+                .iter()
+                .map(|r| (r.tokens.clone(), r.scored_from))
+                .collect();
+            let (ids, mask) = pack_windows(&items, b, s);
+            let nll = model.lm_nll(&ids)?;
+            Ok(rows_from_nll(&nll, &mask, reqs.len(), s))
         }) as Scorer)
     }
 }

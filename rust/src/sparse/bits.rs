@@ -1,0 +1,84 @@
+//! Bit-packing primitives shared by the packed sparse formats.
+//!
+//! Pattern ids are `ceil(log2 C(M,N))` bits each and packed contiguously
+//! into little-endian `u64` words; ids freely straddle word boundaries
+//! (8:16 uses 14-bit ids — not a divisor of 64). Previously `nm.rs` and
+//! `vnm.rs` carried private copies of these helpers; the decode-free
+//! spmm path reads the same streams, so the codec now lives here once.
+
+/// Append the `bits` low bits of `v` at bit offset `*pos`, growing `buf`
+/// as needed and advancing `*pos`.
+pub(crate) fn push_bits(buf: &mut Vec<u64>, pos: &mut usize, v: u64, bits: u32) {
+    if bits == 0 {
+        return;
+    }
+    let word = *pos / 64;
+    let off = (*pos % 64) as u32;
+    while buf.len() <= word + 1 {
+        buf.push(0);
+    }
+    buf[word] |= v << off;
+    if off + bits > 64 {
+        buf[word + 1] |= v >> (64 - off);
+    }
+    *pos += bits as usize;
+}
+
+/// Read `bits` bits at bit offset `pos`.
+#[inline]
+pub(crate) fn read_bits(buf: &[u64], pos: usize, bits: u32) -> u64 {
+    if bits == 0 {
+        return 0;
+    }
+    let word = pos / 64;
+    let off = (pos % 64) as u32;
+    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
+    let mut v = buf[word] >> off;
+    if off + bits > 64 {
+        v |= buf[word + 1] << (64 - off);
+    }
+    v & mask
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_across_word_boundaries() {
+        // 14-bit ids (the 8:16 width) exercise every straddle offset
+        let ids: Vec<u64> = (0..200).map(|i| (i * 37) % (1 << 14)).collect();
+        let mut buf = Vec::new();
+        let mut pos = 0;
+        for &id in &ids {
+            push_bits(&mut buf, &mut pos, id, 14);
+        }
+        for (i, &id) in ids.iter().enumerate() {
+            assert_eq!(read_bits(&buf, i * 14, 14), id, "id {i}");
+        }
+    }
+
+    #[test]
+    fn zero_width_is_noop() {
+        let mut buf = Vec::new();
+        let mut pos = 0;
+        push_bits(&mut buf, &mut pos, 123, 0);
+        assert_eq!(pos, 0);
+        assert_eq!(read_bits(&buf, 0, 0), 0);
+    }
+
+    #[test]
+    fn mixed_widths() {
+        let mut buf = Vec::new();
+        let mut pos = 0;
+        let items = [(5u64, 3u32), (16_000, 14), (1, 1), (0x3FFF_FFFF, 30), (7, 3)];
+        for &(v, b) in &items {
+            push_bits(&mut buf, &mut pos, v, b);
+        }
+        let mut p = 0;
+        for &(v, b) in &items {
+            assert_eq!(read_bits(&buf, p, b), v);
+            p += b as usize;
+        }
+    }
+}

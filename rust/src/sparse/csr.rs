@@ -106,6 +106,12 @@ impl Csr {
     pub fn density(&self) -> f64 {
         self.nnz() as f64 / (self.rows * self.cols) as f64
     }
+
+    /// Decoder-side views: `(row_ptr, col_idx, values)` in the classic
+    /// CSR layout (bf16 value words).
+    pub fn raw_parts(&self) -> (&[u32], &[u32], &[u16]) {
+        (&self.row_ptr, &self.col_idx, &self.values)
+    }
 }
 
 #[cfg(test)]

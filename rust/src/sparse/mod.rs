@@ -1,20 +1,68 @@
-//! Sparse storage substrates: the N:M pattern codebook, packed N:M weight
-//! storage, the structured k:256 outlier format, and CSR for the
-//! unstructured baseline.
+//! Sparse storage substrates **and the decode-free GEMM that consumes
+//! them**: the N:M pattern codebook, packed N:M weight storage, V:N:M
+//! tiles, the structured k:256 outlier format, CSR for the unstructured
+//! baseline, and the [`Kernel`] trait + [`spmm()`]/[`spmm_parallel()`]
+//! hot path that computes `y = x @ Wᵀ` straight from packed bits.
 //!
-//! These implement the storage-accounting side of the paper's §2 (Table 1
-//! bits/element, configuration counts) and the formats contrasted in
-//! Table 7 (structured vs unstructured salient weights). Packing runs on
-//! the Rust hot path after each per-layer prune job.
+//! The formats implement the storage-accounting side of the paper's §2
+//! (Table 1 bits/element, configuration counts) and the formats
+//! contrasted in Table 7 (structured vs unstructured salient weights);
+//! [`spmm()`] is what makes the accounting real at run time — packed
+//! weights are never expanded on the request path, so the bytes a GEMM
+//! streams are exactly the bytes the format stores (cross-checked against
+//! the [`crate::hwsim`] roofline model by `cargo bench --bench f2_spmm`).
+//! Layout spec: `docs/FORMAT.md`; hot-path walkthrough:
+//! `docs/ARCHITECTURE.md`.
 
+mod bits;
 pub mod csr;
 pub mod nm;
 pub mod outliers;
 pub mod patterns;
+pub mod spmm;
 pub mod vnm;
 
 pub use csr::Csr;
 pub use nm::PackedNm;
 pub use outliers::StructuredOutliers;
 pub use patterns::PatternInfo;
+pub use spmm::{spmm, spmm_parallel, PackedLinear};
 pub use vnm::{vnm_select, PackedVnm};
+
+use crate::tensor::Tensor;
+
+/// A linear-layer weight operand `W (out_features, in_features)` that can
+/// apply itself to activations as `y = x @ Wᵀ` **directly from its
+/// storage format** — no dense materialization.
+///
+/// Implementations accumulate (`+=`) into the output, so side streams
+/// compose: a [`PackedNm`] base and a [`StructuredOutliers`] salient
+/// matrix run over the same output buffer and the sum is the effective
+/// compressed weight (`W_ns + W_salient`). [`spmm()`] drives a kernel
+/// serially, [`spmm_parallel()`] row-blocks it across the worker pool.
+///
+/// The dense reference implementation lives on [`Tensor`] itself, so any
+/// call site can swap a packed kernel for its dense equivalent in tests.
+pub trait Kernel: Send + Sync {
+    /// `(out_features, in_features)` — the dense shape of `W`.
+    fn dims(&self) -> (usize, usize);
+
+    /// Accumulate `x (b, in) @ W[r0..r1, :]ᵀ` into `out`, a row-major
+    /// `(b, r1 - r0)` block: `out[i * (r1-r0) + (r - r0)] += Σ_c x[i,c] * W[r,c]`.
+    ///
+    /// `out` is *added to*, never overwritten — callers zero it (or chain
+    /// kernels over it).
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]);
+
+    /// Bytes a decoder streams for this weight operand (values +
+    /// metadata) — the *measured* side of the [`crate::hwsim::HwModel`]
+    /// traffic model. Dense kernels report their bf16 deployment
+    /// footprint so ratios match the paper's accounting.
+    fn operand_bytes(&self) -> usize;
+
+    /// Output-row partition granularity for parallel row-blocking
+    /// ([`PackedVnm`] tiles span `v` consecutive rows).
+    fn row_align(&self) -> usize {
+        1
+    }
+}

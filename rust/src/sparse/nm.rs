@@ -4,9 +4,18 @@
 //! format stores the `N` kept values (bf16) plus the block's keep-pattern
 //! as a combinadic rank in `ceil(log2 C(M,N))` bits (the codebook encoding
 //! of Table 1 — 0.75 bits/elt for 2:4, 0.875 for 8:16).  Pattern ids are
-//! bit-packed contiguously; values are laid out block-major so a hardware
-//! decoder (or [`Self::to_dense`]) streams both arrays linearly.
+//! bit-packed contiguously; values are laid out block-major so a decoder
+//! streams both arrays linearly.
+//!
+//! The production consumer is the **decode-free GEMM** in
+//! [`mod@super::spmm`]: `PackedNm` implements [`super::Kernel`], unranking
+//! each block's keep-pattern on the fly and accumulating into f32 —
+//! [`Self::to_dense`] exists for reconstruction-error reporting and
+//! tests, not the request path. The byte-exact layout (with a worked
+//! 8:16 block) is specified in `docs/FORMAT.md`; where the format sits in
+//! the serving hot path is covered by `docs/ARCHITECTURE.md`.
 
+use super::bits::{push_bits, read_bits};
 use super::patterns::{rank_combination, unrank_combination, PatternInfo};
 use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
 
@@ -20,38 +29,6 @@ pub struct PackedNm {
     values: Vec<u16>,
     /// bit-packed combinadic pattern ids, `codebook_bits` per block
     meta: Vec<u64>,
-}
-
-/// Append `bits` low bits of `v` at bit offset `*pos` in `buf`.
-fn push_bits(buf: &mut Vec<u64>, pos: &mut usize, v: u64, bits: u32) {
-    if bits == 0 {
-        return;
-    }
-    let word = *pos / 64;
-    let off = (*pos % 64) as u32;
-    while buf.len() <= word + 1 {
-        buf.push(0);
-    }
-    buf[word] |= v << off;
-    if off + bits > 64 {
-        buf[word + 1] |= v >> (64 - off);
-    }
-    *pos += bits as usize;
-}
-
-/// Read `bits` bits at offset `pos`.
-fn read_bits(buf: &[u64], pos: usize, bits: u32) -> u64 {
-    if bits == 0 {
-        return 0;
-    }
-    let word = pos / 64;
-    let off = (pos % 64) as u32;
-    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
-    let mut v = buf[word] >> off;
-    if off + bits > 64 {
-        v |= buf[word + 1] << (64 - off);
-    }
-    v & mask
 }
 
 impl PackedNm {
@@ -177,6 +154,19 @@ impl PackedNm {
 
     pub fn n_values(&self) -> usize {
         self.values.len()
+    }
+
+    /// Decoder-side view of the kept values: raw bf16 words, block-major
+    /// (`n` per block, `rows * cols / m` blocks row-major).
+    pub fn values_raw(&self) -> &[u16] {
+        &self.values
+    }
+
+    /// Decoder-side view of the pattern stream: bit-packed combinadic
+    /// ranks, [`PatternInfo::codebook_bits`] bits per block, in the same
+    /// block order as [`Self::values_raw`].
+    pub fn meta_words(&self) -> &[u64] {
+        &self.meta
     }
 }
 

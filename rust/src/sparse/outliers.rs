@@ -125,6 +125,18 @@ impl StructuredOutliers {
     pub fn density(&self) -> f64 {
         self.n_salient() as f64 / (self.rows * self.cols) as f64
     }
+
+    /// Decoder-side view of the salient values: bf16 words, block-major,
+    /// `k` per `(1, m)` block.
+    pub fn values_raw(&self) -> &[u16] {
+        &self.values
+    }
+
+    /// Decoder-side view of the in-block indices (ascending, `k` per
+    /// block, same block order as [`Self::values_raw`]).
+    pub fn indices_raw(&self) -> &[u8] {
+        &self.indices
+    }
 }
 
 #[cfg(test)]

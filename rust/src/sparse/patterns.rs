@@ -111,6 +111,67 @@ pub fn rank_combination(indices: &[usize], m: usize) -> u64 {
     rank as u64
 }
 
+/// Table-driven combinadic decoder for one `(m, k)` pattern.
+///
+/// [`unrank_combination`] recomputes binomial coefficients with a
+/// multiply/divide chain on every step — fine for packing, too slow for
+/// the decode-free spmm hot loop, which unranks **every block of every
+/// weight row on every GEMM**. `Unranker` precomputes the Pascal triangle
+/// once per kernel invocation so a block decode is `k` table walks with
+/// one lookup and one subtraction each.
+pub struct Unranker {
+    m: usize,
+    k: usize,
+    /// `binom[j * (k + 1) + r] = C(j, r)`, j ≤ m, r ≤ k
+    binom: Vec<u64>,
+}
+
+impl Unranker {
+    pub fn new(m: usize, k: usize) -> Self {
+        assert!(k <= m && m <= 64, "unranker patterns are (k <= m <= 64)");
+        let kw = k + 1;
+        let mut binom = vec![0u64; (m + 1) * kw];
+        for j in 0..=m {
+            binom[j * kw] = 1;
+            for r in 1..=k.min(j) {
+                let below = binom[(j - 1) * kw + r - 1];
+                let carry = binom[(j - 1) * kw + r];
+                binom[j * kw + r] = below + carry;
+            }
+        }
+        Unranker { m, k, binom }
+    }
+
+    #[inline]
+    fn c(&self, n: usize, r: usize) -> u64 {
+        self.binom[n * (self.k + 1) + r]
+    }
+
+    /// Decode `rank` into the ascending index set it names, writing into
+    /// `out` (length `k`). Matches [`unrank_combination`] exactly.
+    #[inline]
+    pub fn unrank_into(&self, rank: u64, out: &mut [usize]) {
+        debug_assert_eq!(out.len(), self.k);
+        let mut r = rank;
+        let mut start = 0usize;
+        let mut remaining = self.k;
+        let mut oi = 0usize;
+        while remaining > 0 {
+            for j in start..self.m {
+                let c = self.c(self.m - j - 1, remaining - 1);
+                if r < c {
+                    out[oi] = j;
+                    oi += 1;
+                    start = j + 1;
+                    remaining -= 1;
+                    break;
+                }
+                r -= c;
+            }
+        }
+    }
+}
+
 /// Inverse of [`rank_combination`].
 pub fn unrank_combination(rank: u64, m: usize, k: usize) -> Vec<usize> {
     let mut out = Vec::with_capacity(k);
@@ -221,6 +282,23 @@ mod tests {
         assert!((PatternInfo::new(2, 4).bits_per_element_index() - 1.0).abs() < 1e-9);
         // 8:16: 8 × 4 / 16 = 2.0 — why the codebook encoding wins at 8:16
         assert!((PatternInfo::new(8, 16).bits_per_element_index() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unranker_matches_unrank_combination() {
+        use crate::util::Rng;
+        let mut rng = Rng::new(77);
+        for (n, m) in [(2usize, 4usize), (4, 8), (8, 16), (16, 32)] {
+            let unr = Unranker::new(m, n);
+            let total = PatternInfo::new(n, m).configurations() as u64;
+            let mut buf = vec![0usize; n];
+            for _ in 0..200 {
+                let rank = rng.below(total.min(1 << 30) as usize) as u64;
+                unr.unrank_into(rank, &mut buf);
+                assert_eq!(buf, unrank_combination(rank, m, n), "{n}:{m} rank {rank}");
+                assert_eq!(rank_combination(&buf, m), rank);
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,558 @@
+//! Decode-free packed sparse GEMM — the serving hot path.
+//!
+//! Every consumer of the packed formats used to round-trip through
+//! `to_dense()` + a dense matmul, which re-materializes exactly the bytes
+//! the format saved. The kernels here compute `y = x @ Wᵀ` **from the
+//! packed representation**: combinadic pattern ranks are unranked
+//! per-block on the fly ([`Unranker`]), bf16 values are widened once per
+//! block, and products accumulate into f32 — so the weight-side memory
+//! traffic of a GEMM is the packed footprint ([`Kernel::operand_bytes`]),
+//! not the dense one. `cargo bench --bench f2_spmm` ties the measured
+//! bytes to the [`crate::hwsim`] roofline prediction.
+//!
+//! Topology:
+//!
+//! * [`Kernel`] impls for [`PackedNm`] (per-row N:M), [`PackedVnm`]
+//!   (V-row tiles), [`StructuredOutliers`] and [`Csr`] (salient side
+//!   streams), dense [`Tensor`] (reference), and [`PackedLinear`]
+//!   (N:M base + structured outliers — the paper's full format);
+//! * [`spmm()`] — single-thread driver;
+//! * [`spmm_parallel()`] — row-blocked fork-join on scoped threads
+//!   ([`crate::util::pool::scoped_map`]; no rayon/tokio, offline-safe),
+//!   with a serial fallback below [`PARALLEL_MIN_MACS`].
+//!
+//! Loop order matters: patterns and values decode **once per weight
+//! block** and are reused across every activation row, so decode cost
+//! amortizes with batch size while the dense path's traffic does not.
+
+use super::bits::read_bits;
+use super::csr::Csr;
+use super::nm::PackedNm;
+use super::outliers::StructuredOutliers;
+use super::patterns::Unranker;
+use super::vnm::PackedVnm;
+use super::Kernel;
+use crate::pruning::{mask_excluding, mask_topn_per_block};
+use crate::tensor::{bf16_to_f32, dot, Tensor};
+use crate::util::pool::scoped_map;
+
+/// `y (b, out) = x (b, in) @ Wᵀ`, single-threaded.
+pub fn spmm(x: &Tensor, w: &dyn Kernel) -> Tensor {
+    let (rows, cols) = w.dims();
+    let (b, cin) = x.dims2();
+    assert_eq!(cin, cols, "spmm: x has {cin} features, W expects {cols}");
+    let mut out = vec![0.0f32; b * rows];
+    w.accumulate_rows(x, 0, rows, &mut out);
+    Tensor::new(vec![b, rows], out)
+}
+
+/// Work-size floor below which `spmm_parallel` stays serial: scoped
+/// fork-join spawns OS threads per call, and for the small per-layer
+/// GEMMs of the stand-in configs that overhead can exceed the kernel
+/// itself. ~64k MACs ≈ the break-even point observed on laptop-class
+/// CPUs.
+pub const PARALLEL_MIN_MACS: usize = 1 << 16;
+
+/// [`spmm()`] with the output rows split into aligned blocks run
+/// fork-join on up to `threads` scoped threads
+/// ([`crate::util::pool::scoped_map`] — the borrow-safe half of the
+/// pool module; the FIFO [`crate::util::pool::ThreadPool`] queue takes
+/// boxed `'static` jobs and cannot borrow `x`/`w`). Threads are spawned
+/// per call, so small GEMMs (below [`PARALLEL_MIN_MACS`]) run serial;
+/// results are stitched in input order, making the output bitwise
+/// identical to the serial path.
+pub fn spmm_parallel(x: &Tensor, w: &dyn Kernel, threads: usize) -> Tensor {
+    let (rows, cols) = w.dims();
+    let (b, cin) = x.dims2();
+    assert_eq!(cin, cols, "spmm: x has {cin} features, W expects {cols}");
+    let threads = threads.max(1);
+    let align = w.row_align().max(1);
+    if threads == 1 || rows <= align || b * rows * cols < PARALLEL_MIN_MACS {
+        return spmm(x, w);
+    }
+    // block size: ceil(rows / threads), rounded up to the row alignment
+    let per = (rows + threads - 1) / threads;
+    let per = ((per + align - 1) / align * align).max(align);
+    let mut ranges = Vec::new();
+    let mut r0 = 0usize;
+    while r0 < rows {
+        let r1 = (r0 + per).min(rows);
+        ranges.push((r0, r1));
+        r0 = r1;
+    }
+    let parts = scoped_map(threads, ranges.clone(), |(a, z)| {
+        let mut buf = vec![0.0f32; b * (z - a)];
+        w.accumulate_rows(x, a, z, &mut buf);
+        buf
+    });
+    let mut out = vec![0.0f32; b * rows];
+    for ((a, z), part) in ranges.into_iter().zip(parts) {
+        let width = z - a;
+        for i in 0..b {
+            out[i * rows + a..i * rows + z]
+                .copy_from_slice(&part[i * width..(i + 1) * width]);
+        }
+    }
+    Tensor::new(vec![b, rows], out)
+}
+
+// ------------------------------------------------------------- PackedNm
+
+impl Kernel for PackedNm {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let (bsz, cin) = x.dims2();
+        debug_assert_eq!(cin, self.cols);
+        debug_assert!(r1 <= self.rows && r0 <= r1);
+        debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        let bpr = self.cols / m;
+        let unranker = Unranker::new(m, n);
+        let width = r1 - r0;
+        let xd = x.data();
+        let values = self.values_raw();
+        let meta = self.meta_words();
+        let mut idx = vec![0usize; n];
+        let mut vals = vec![0.0f32; n];
+        for r in r0..r1 {
+            let mut pos = r * bpr * bits as usize;
+            let mut vi = r * bpr * n;
+            for bblk in 0..bpr {
+                let rank = read_bits(meta, pos, bits);
+                pos += bits as usize;
+                unranker.unrank_into(rank, &mut idx);
+                for t in 0..n {
+                    vals[t] = bf16_to_f32(values[vi + t]);
+                }
+                vi += n;
+                let base = bblk * m;
+                for i in 0..bsz {
+                    let xrow = &xd[i * cin + base..i * cin + base + m];
+                    let mut acc = 0.0f32;
+                    for t in 0..n {
+                        acc += vals[t] * xrow[idx[t]];
+                    }
+                    out[i * width + (r - r0)] += acc;
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ PackedVnm
+
+impl Kernel for PackedVnm {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    fn row_align(&self) -> usize {
+        self.v
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let (bsz, cin) = x.dims2();
+        debug_assert_eq!(cin, self.cols);
+        debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        let bpr = self.cols / m;
+        let unranker = Unranker::new(m, n);
+        let width = r1 - r0;
+        let xd = x.data();
+        let values = self.values_raw();
+        let meta = self.meta_words();
+        let mut idx = vec![0usize; n];
+        let mut vals = vec![0.0f32; n];
+        // first tile covering r0 (ranges from spmm_parallel are v-aligned;
+        // arbitrary ranges still work, decoding the partial tile)
+        let mut t0 = r0 - r0 % self.v;
+        while t0 < r1 {
+            let tile_row = t0 / self.v;
+            let lo = t0.max(r0);
+            let hi = (t0 + self.v).min(r1);
+            for bblk in 0..bpr {
+                let ti = tile_row * bpr + bblk;
+                let rank = read_bits(meta, ti * bits as usize, bits);
+                unranker.unrank_into(rank, &mut idx);
+                let base = bblk * m;
+                for r in lo..hi {
+                    let vi = ti * self.v * n + (r - t0) * n;
+                    for t in 0..n {
+                        vals[t] = bf16_to_f32(values[vi + t]);
+                    }
+                    for i in 0..bsz {
+                        let xrow = &xd[i * cin + base..i * cin + base + m];
+                        let mut acc = 0.0f32;
+                        for t in 0..n {
+                            acc += vals[t] * xrow[idx[t]];
+                        }
+                        out[i * width + (r - r0)] += acc;
+                    }
+                }
+            }
+            t0 += self.v;
+        }
+    }
+}
+
+// --------------------------------------------------- StructuredOutliers
+
+impl Kernel for StructuredOutliers {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        if self.k == 0 {
+            return;
+        }
+        let (bsz, cin) = x.dims2();
+        debug_assert_eq!(cin, self.cols);
+        debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        let bpr = self.cols / self.m;
+        let width = r1 - r0;
+        let xd = x.data();
+        let values = self.values_raw();
+        let indices = self.indices_raw();
+        let mut vals = vec![0.0f32; self.k];
+        for r in r0..r1 {
+            for bblk in 0..bpr {
+                let bi = r * bpr + bblk;
+                let vs = &values[bi * self.k..(bi + 1) * self.k];
+                let is = &indices[bi * self.k..(bi + 1) * self.k];
+                for t in 0..self.k {
+                    vals[t] = bf16_to_f32(vs[t]);
+                }
+                let base = bblk * self.m;
+                for i in 0..bsz {
+                    let xrow = &xd[i * cin + base..i * cin + base + self.m];
+                    let mut acc = 0.0f32;
+                    for t in 0..self.k {
+                        acc += vals[t] * xrow[is[t] as usize];
+                    }
+                    out[i * width + (r - r0)] += acc;
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ Csr
+
+impl Kernel for Csr {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        let (bsz, cin) = x.dims2();
+        debug_assert_eq!(cin, self.cols);
+        debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        let (row_ptr, col_idx, values) = self.raw_parts();
+        let width = r1 - r0;
+        let xd = x.data();
+        for r in r0..r1 {
+            let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+            if lo == hi {
+                continue;
+            }
+            for i in 0..bsz {
+                let xrow = &xd[i * cin..(i + 1) * cin];
+                let mut acc = 0.0f32;
+                for t in lo..hi {
+                    acc += bf16_to_f32(values[t]) * xrow[col_idx[t] as usize];
+                }
+                out[i * width + (r - r0)] += acc;
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- dense Tensor
+
+/// Dense reference kernel: the same contract over an unpacked weight
+/// matrix. `operand_bytes` reports the bf16 deployment footprint (2
+/// bytes/element) so packed-vs-dense ratios follow the paper's
+/// accounting, not the host f32 mirror.
+impl Kernel for Tensor {
+    fn dims(&self) -> (usize, usize) {
+        self.dims2()
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.len() * 2
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        let (bsz, cin) = x.dims2();
+        let (_, cols) = self.dims2();
+        debug_assert_eq!(cin, cols);
+        debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        let width = r1 - r0;
+        let xd = x.data();
+        for r in r0..r1 {
+            let wrow = self.row(r);
+            for i in 0..bsz {
+                out[i * width + (r - r0)] += dot(&xd[i * cin..(i + 1) * cin], wrow);
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- PackedLinear
+
+/// The paper's full per-layer format: a [`PackedNm`] non-salient base
+/// plus an optional [`StructuredOutliers`] salient side stream, applied
+/// as one fused kernel (`W_eff = W_ns + W_salient`).
+#[derive(Clone, Debug)]
+pub struct PackedLinear {
+    pub weights: PackedNm,
+    pub outliers: Option<StructuredOutliers>,
+}
+
+impl PackedLinear {
+    pub fn new(weights: PackedNm, outliers: Option<StructuredOutliers>) -> Self {
+        if let Some(o) = &outliers {
+            assert_eq!((o.rows, o.cols), (weights.rows, weights.cols));
+        }
+        PackedLinear { weights, outliers }
+    }
+
+    /// Prune + pack a dense weight under `score`: top-`k_out` per 256
+    /// block structured outliers first (when `k_out > 0`), then N:M
+    /// top-n on the remaining positions — the §4 selection order.
+    pub fn compress(w: &Tensor, score: &Tensor, n: usize, m: usize, k_out: usize) -> Self {
+        let (omask, outliers) = if k_out > 0 {
+            let om = mask_topn_per_block(score, k_out, super::outliers::OUTLIER_M);
+            let so = StructuredOutliers::from_dense_mask(w, &om, k_out, super::outliers::OUTLIER_M);
+            (Some(om), Some(so))
+        } else {
+            (None, None)
+        };
+        let keep = match &omask {
+            Some(om) => mask_excluding(score, om, n, m),
+            None => mask_topn_per_block(score, n, m),
+        };
+        PackedLinear {
+            weights: PackedNm::from_dense_mask(w, &keep, n, m),
+            outliers,
+        }
+    }
+
+    /// Effective dense weight (reconstruction-error reporting only).
+    pub fn to_dense(&self) -> Tensor {
+        let mut d = self.weights.to_dense();
+        if let Some(o) = &self.outliers {
+            o.add_into(&mut d);
+        }
+        d
+    }
+}
+
+impl Kernel for PackedLinear {
+    fn dims(&self) -> (usize, usize) {
+        (self.weights.rows, self.weights.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.weights.bytes() + self.outliers.as_ref().map_or(0, |o| o.bytes())
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        self.weights.accumulate_rows(x, r0, r1, out);
+        if let Some(o) = &self.outliers {
+            o.accumulate_rows(x, r0, r1, out);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{matmul_wt, rel_error};
+    use crate::util::propcheck::{assert_allclose, check, Gen};
+    use crate::util::Rng;
+
+    fn dense_ref(x: &Tensor, w_dense: &Tensor) -> Tensor {
+        matmul_wt(x, w_dense)
+    }
+
+    #[test]
+    fn packed_nm_matches_dense_reference_all_patterns() {
+        let mut rng = Rng::new(101);
+        for (n, m) in [(2usize, 4usize), (4, 8), (8, 16), (16, 32)] {
+            let w = Tensor::randn_outliers(vec![48, 256], 0.05, 0.01, 8.0, &mut rng);
+            let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+            let packed = PackedNm::from_dense_mask(&w, &mask, n, m);
+            let x = Tensor::randn(vec![5, 256], 1.0, &mut rng);
+            let got = spmm(&x, &packed);
+            let want = dense_ref(&x, &packed.to_dense());
+            assert!(
+                rel_error(&got, &want) < 1e-5,
+                "{n}:{m} rel {}",
+                rel_error(&got, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn property_spmm_matches_dense_with_and_without_outliers() {
+        check("spmm == x @ to_dense^T", 25, |g: &mut Gen| {
+            let (n, m) = *g.choose(&[(2usize, 4usize), (4, 8), (8, 16)]);
+            let rows = g.int(1, 12).max(1);
+            // in-features must fit a 256-block when outliers are on
+            let with_outliers = g.bool();
+            let cols = if with_outliers { 256 * g.int(1, 2).max(1) } else { m * g.int(1, 12).max(1) };
+            let bsz = g.int(1, 6).max(1);
+            let w = Tensor::new(vec![rows, cols], g.vec_normal(rows * cols));
+            let score = w.map(f32::abs);
+            let k_out = if with_outliers { *g.choose(&[4usize, 8, 16]) } else { 0 };
+            let layer = PackedLinear::compress(&w, &score, n, m, k_out);
+            let x = Tensor::new(vec![bsz, cols], g.vec_normal(bsz * cols));
+            let got = spmm(&x, &layer);
+            let want = dense_ref(&x, &layer.to_dense());
+            assert_allclose(got.data(), want.data(), 1e-4, 1e-4)
+        });
+    }
+
+    #[test]
+    fn deficient_blocks_fewer_than_n_survivors() {
+        // outlier exclusion ate 3 of the 4 keep slots in block 1: the
+        // packed block holds zero-padded slots, and spmm must reproduce
+        // the dense product exactly
+        let w = Tensor::new(vec![1, 8], vec![5., 6., 7., 8., 1., 2., 3., 4.]);
+        let mask = Tensor::new(vec![1, 8], vec![0., 1., 0., 0., 0., 0., 1., 1.]);
+        let p = PackedNm::from_dense_mask(&w, &mask, 2, 4);
+        let x = Tensor::new(vec![2, 8], vec![1., 1., 1., 1., 1., 1., 1., 1.,
+                                             0.5, -1., 2., 0., 1., 3., -2., 1.]);
+        let got = spmm(&x, &p);
+        let want = dense_ref(&x, &p.to_dense());
+        assert_allclose(got.data(), want.data(), 1e-6, 1e-6).unwrap();
+        assert_eq!(got.at2(0, 0), 6. + 3. + 4.);
+    }
+
+    #[test]
+    fn vnm_matches_dense_reference() {
+        let mut rng = Rng::new(103);
+        let w = Tensor::randn(vec![16, 128], 0.05, &mut rng);
+        let mask = vnm_mask(&w, 4, 8, 16);
+        let p = PackedVnm::from_dense_mask(&w, &mask, 4, 8, 16);
+        let x = Tensor::randn(vec![3, 128], 1.0, &mut rng);
+        let got = spmm(&x, &p);
+        let want = dense_ref(&x, &p.to_dense());
+        assert!(rel_error(&got, &want) < 1e-5, "{}", rel_error(&got, &want));
+    }
+
+    fn vnm_mask(w: &Tensor, v: usize, n: usize, m: usize) -> Tensor {
+        super::super::vnm::vnm_select(&w.map(f32::abs), v, n, m)
+    }
+
+    #[test]
+    fn csr_matches_dense_reference() {
+        let mut rng = Rng::new(104);
+        let w = Tensor::randn(vec![24, 96], 0.05, &mut rng);
+        let csr = Csr::from_topk_global(&w, &w.map(f32::abs), 150);
+        let x = Tensor::randn(vec![4, 96], 1.0, &mut rng);
+        let got = spmm(&x, &csr);
+        let want = dense_ref(&x, &csr.to_dense());
+        assert_allclose(got.data(), want.data(), 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn parallel_matches_serial_bitwise() {
+        let mut rng = Rng::new(105);
+        let w = Tensor::randn_outliers(vec![67, 512], 0.05, 0.01, 8.0, &mut rng);
+        let layer = PackedLinear::compress(&w, &w.map(f32::abs), 8, 16, 16);
+        let x = Tensor::randn(vec![7, 512], 1.0, &mut rng);
+        let serial = spmm(&x, &layer);
+        for threads in [2usize, 3, 8] {
+            let par = spmm_parallel(&x, &layer, threads);
+            assert_eq!(par, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_respects_vnm_tile_alignment() {
+        let mut rng = Rng::new(106);
+        // large enough to clear PARALLEL_MIN_MACS so the fork-join path
+        // actually runs, with rows not divisible by most thread counts
+        let w = Tensor::randn(vec![132, 256], 0.05, &mut rng);
+        let mask = vnm_mask(&w, 4, 2, 4);
+        let p = PackedVnm::from_dense_mask(&w, &mask, 4, 2, 4);
+        let x = Tensor::randn(vec![4, 256], 1.0, &mut rng);
+        assert!(4 * 132 * 256 >= PARALLEL_MIN_MACS);
+        let serial = spmm(&x, &p);
+        for threads in [2usize, 5, 24] {
+            assert_eq!(spmm_parallel(&x, &p, threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn outlier_side_stream_composes() {
+        let mut rng = Rng::new(107);
+        let w = Tensor::randn_outliers(vec![16, 512], 0.05, 0.02, 10.0, &mut rng);
+        let layer = PackedLinear::compress(&w, &w.map(f32::abs), 8, 16, 16);
+        let x = Tensor::randn(vec![3, 512], 1.0, &mut rng);
+        // base alone + outliers alone == fused
+        let base = spmm(&x, &layer.weights);
+        let side = spmm(&x, layer.outliers.as_ref().unwrap());
+        let fused = spmm(&x, &layer);
+        assert_allclose(fused.data(), base.add(&side).data(), 1e-5, 1e-6).unwrap();
+    }
+
+    #[test]
+    fn operand_bytes_beats_dense_at_8_16() {
+        let mut rng = Rng::new(108);
+        let w = Tensor::randn(vec![256, 512], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let packed = PackedNm::from_dense_mask(&w, &mask, 8, 16);
+        let dense_bytes = Kernel::operand_bytes(&w);
+        // acceptance: packed weight+metadata ≤ 0.60× dense bf16 traffic
+        assert!(
+            (packed.operand_bytes() as f64) <= 0.60 * dense_bytes as f64,
+            "{} vs dense {}",
+            packed.operand_bytes(),
+            dense_bytes
+        );
+    }
+
+    #[test]
+    fn dense_kernel_matches_matmul_wt() {
+        let mut rng = Rng::new(109);
+        let w = Tensor::randn(vec![33, 70], 1.0, &mut rng);
+        let x = Tensor::randn(vec![4, 70], 1.0, &mut rng);
+        let got = spmm(&x, &w);
+        assert_allclose(got.data(), matmul_wt(&x, &w).data(), 1e-6, 1e-6).unwrap();
+    }
+
+    #[test]
+    #[should_panic(expected = "features")]
+    fn shape_mismatch_panics() {
+        let w = Tensor::ones(vec![4, 16]);
+        let mask = mask_topn_per_block(&w, 2, 4);
+        let p = PackedNm::from_dense_mask(&w, &mask, 2, 4);
+        let x = Tensor::ones(vec![2, 8]);
+        spmm(&x, &p);
+    }
+}

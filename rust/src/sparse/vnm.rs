@@ -13,6 +13,7 @@
 //! * flexibility: one pattern per V rows — strictly fewer masks than
 //!   per-row N:M, so reconstruction error is never lower at equal N:M.
 
+use super::bits::{push_bits, read_bits};
 use super::patterns::{rank_combination, unrank_combination, PatternInfo};
 use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
 
@@ -159,38 +160,18 @@ impl PackedVnm {
     pub fn compression_ratio(&self) -> f64 {
         (self.rows * self.cols * 2) as f64 / self.bytes() as f64
     }
-}
 
-// same bit-packing helpers as nm.rs (kept local: the two formats evolve
-// independently and the functions are 10 lines)
-fn push_bits(buf: &mut Vec<u64>, pos: &mut usize, v: u64, bits: u32) {
-    if bits == 0 {
-        return;
+    /// Decoder-side view of the kept values: bf16 words, tile-major, then
+    /// row-major inside each `(V, M)` tile (`v * n` per tile).
+    pub fn values_raw(&self) -> &[u16] {
+        &self.values
     }
-    let word = *pos / 64;
-    let off = (*pos % 64) as u32;
-    while buf.len() <= word + 1 {
-        buf.push(0);
-    }
-    buf[word] |= v << off;
-    if off + bits > 64 {
-        buf[word + 1] |= v >> (64 - off);
-    }
-    *pos += bits as usize;
-}
 
-fn read_bits(buf: &[u64], pos: usize, bits: u32) -> u64 {
-    if bits == 0 {
-        return 0;
+    /// Decoder-side view of the pattern stream: one bit-packed combinadic
+    /// rank per tile, in tile order.
+    pub fn meta_words(&self) -> &[u64] {
+        &self.meta
     }
-    let word = pos / 64;
-    let off = (pos % 64) as u32;
-    let mask = if bits == 64 { u64::MAX } else { (1u64 << bits) - 1 };
-    let mut v = buf[word] >> off;
-    if off + bits > 64 {
-        v |= buf[word + 1] << (64 - off);
-    }
-    v & mask
 }
 
 #[cfg(test)]

@@ -75,6 +75,12 @@ impl ThreadPool {
             thread::yield_now();
         }
     }
+
+}
+
+/// Threads worth using for compute-bound fork-join work on this host.
+pub fn default_parallelism() -> usize {
+    thread::available_parallelism().map_or(1, |n| n.get())
 }
 
 impl Drop for ThreadPool {
@@ -172,5 +178,10 @@ mod tests {
     fn scoped_map_empty() {
         let out: Vec<i32> = scoped_map(4, Vec::<i32>::new(), |x| x);
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn default_parallelism_positive() {
+        assert!(default_parallelism() >= 1);
     }
 }
