@@ -27,8 +27,8 @@ fn main() -> sparselm::Result<()> {
         std::env::set_var("SPARSELM_FAST", "1");
     }
     let model = args.get_str("model", "e2e");
-    let steps = args.get_usize("steps", 300);
-    let ebft = args.get_usize("ebft", 24);
+    let steps = args.get_usize("steps", 300)?;
+    let ebft = args.get_usize("ebft", 24)?;
     let sw = Stopwatch::start();
 
     let ctx = ExperimentCtx::new("artifacts")?;

@@ -14,9 +14,9 @@ use sparselm::util::args::Args;
 fn main() -> sparselm::Result<()> {
     let args = Args::from_env();
     let model = args.get_str("model", "e2e");
-    let batch = args.get_usize("batch", 8);
+    let batch = args.get_usize("batch", 8)?;
     let (n, m) = sparselm::cli::parse_pattern(&args.get_str("sparsity", "8:16"))?;
-    let k = args.get_usize("outliers", 16);
+    let k = args.get_usize("outliers", 16)?;
 
     let engine = Engine::new(&args.get_str("artifacts", "artifacts"))?;
     let manifest = engine.model_manifest(&model)?;

@@ -43,7 +43,7 @@ fn main() -> sparselm::Result<()> {
     println!("== compressing {} to 8:16 + 16:256, packed ==", cfg.name);
     let threads = default_parallelism();
     let dense_lm = SparseLm::from_params(&params).with_threads(threads);
-    let packed = SparseLm::compress(&params, 8, 16, 16).with_threads(threads);
+    let packed = Arc::new(SparseLm::compress(&params, 8, 16, 16).with_threads(threads));
     let (pk, dn) = (packed.linear_operand_bytes(), packed.dense_linear_bytes());
     println!(
         "   linear weight traffic: packed {} KiB vs dense bf16 {} KiB ({:.3}x)",
@@ -75,7 +75,7 @@ fn main() -> sparselm::Result<()> {
     let eval_text = CorpusSpec::new(CorpusKind::Wiki, 600, 5).generate(&world);
     let stream = TokenStream::new(tokenizer.encode(&eval_text));
     let dense_ppl = perplexity_model(&dense_lm, &stream, 2)?;
-    let packed_ppl = perplexity_model(&packed, &stream, 2)?;
+    let packed_ppl = perplexity_model(&*packed, &stream, 2)?;
     println!(
         "   ppl (untrained stand-in): dense {:.2} vs packed {:.2}",
         dense_ppl.ppl, packed_ppl.ppl
@@ -84,13 +84,14 @@ fn main() -> sparselm::Result<()> {
     println!("== starting decode-free scoring server ==");
     let batch = cfg.batch;
     let handle = serve(
-        spmm_scorer(packed),
+        spmm_scorer(Arc::clone(&packed)),
         Arc::new(tokenizer),
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             max_conns: 8,
             max_batch: batch,
             max_wait: Duration::from_millis(10),
+            ..Default::default()
         },
     )?;
     println!("   listening on {}", handle.addr);

@@ -45,6 +45,7 @@ fn main() -> sparselm::Result<()> {
             max_conns: 16,
             max_batch: batch,
             max_wait: Duration::from_millis(10),
+            ..Default::default()
         },
     )?;
     let addr = handle.addr;

@@ -56,7 +56,7 @@ fn main() -> sparselm::Result<()> {
             // name is "blk{b}.{w}" — route to that block's stats
             let (blk, wname) = name.split_once('.').unwrap();
             let b: usize = blk.trim_start_matches("blk").parse().unwrap();
-            let layer_stats = record.stats[b].for_linear(wname);
+            let layer_stats = record.stats[b].for_linear(wname)?;
             let spec = PruneSpec::new(*n, *m).sq(true).vc(true);
             let r = prune_layer(&dense.tensors[idx], layer_stats, &spec);
             out.tensors[idx] = r.w_ns;

@@ -35,7 +35,10 @@ fn main() -> sparselm::Result<()> {
     let stats_for = |name: &str| {
         let (blk, wname) = name.split_once('.').unwrap();
         let b: usize = blk.trim_start_matches("blk").parse().unwrap();
-        record.stats[b].for_linear(wname).clone()
+        record.stats[b]
+            .for_linear(wname)
+            .expect("BLOCK_LINEAR name")
+            .clone()
     };
 
     let dense_ppl = ppl_of(&dense)?;

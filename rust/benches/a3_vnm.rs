@@ -45,7 +45,7 @@ fn main() -> sparselm::Result<()> {
             let w = &dense.tensors[idx];
             let (blk, wname) = name.split_once('.').unwrap();
             let b: usize = blk.trim_start_matches("blk").parse().unwrap();
-            let st = record.stats[b].for_linear(wname);
+            let st = record.stats[b].for_linear(wname).expect("BLOCK_LINEAR name");
             // same RIA+SQ scoring as the main pipeline
             let w_eq = equalize(w, &st.colmax);
             let score = ria_score(&w_eq, &st.l2, 0.5);

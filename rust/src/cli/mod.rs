@@ -10,6 +10,7 @@
 //! sparselm quant    --ckpt runs/tiny.ckpt --bits 4 --group 128 --outliers 16
 //! sparselm owl      --ckpt runs/tiny.ckpt --m 16 --keep 0.5
 //! sparselm serve    --model tiny --ckpt runs/tiny-8x16.ckpt --addr 127.0.0.1:7433
+//! sparselm generate --model tiny --random --prompt "the quick brown" --max-tokens 32
 //! sparselm serve-bench --addr 127.0.0.1:7433 --clients 4 --requests 50
 //! ```
 
@@ -45,6 +46,7 @@ pub fn main_entry() -> crate::Result<()> {
         "quant" => quant_cmd::cmd_quant(args),
         "owl" => quant_cmd::cmd_owl(args),
         "serve" => serve_cmd::cmd_serve(args),
+        "generate" => serve_cmd::cmd_generate(args),
         "serve-bench" => serve_cmd::cmd_serve_bench(args),
         _ => {
             print_help();
@@ -65,9 +67,12 @@ subcommands:
   info      model/artifact inventory
   quant     group-quantize a checkpoint (SPQR-style outliers optional)
   owl       OWL per-layer N:M allocation report
-  serve     scoring server (dynamic batching; --backend spmm packs + serves
+  serve     scoring + generation server (dynamic batching for nll/choice,
+            continuous batching for generate; --backend spmm packs + serves
             decode-free, dense serves exact weights via the host forward,
-            pjrt uses the AOT artifacts)
+            pjrt uses the AOT artifacts, scoring only)
+  generate  one-shot KV-cached generation from a checkpoint (--random for
+            an offline stand-in; --temperature 0 = greedy)
   serve-bench  closed-loop load generator against a running server
 
 common flags: --model <tiny|small|gqa|wide|e2e> --artifacts <dir>
@@ -85,20 +90,20 @@ pub fn parse_pattern(s: &str) -> crate::Result<(usize, usize)> {
 
 fn cmd_train(args: Args) -> crate::Result<()> {
     let model = args.get_str("model", "tiny");
-    let steps = args.get_usize("steps", 300);
+    let steps = args.get_usize("steps", 300)?;
     let out = args.get_str("out", &format!("runs/{model}.ckpt"));
     let ctx = ExperimentCtx::new(&args.get_str("artifacts", "artifacts"))?;
     let exec = ModelExec::new(Arc::clone(&ctx.engine), &model)?;
-    let mut rng = Rng::new(args.get_u64("seed", 0xBEEF));
+    let mut rng = Rng::new(args.get_u64("seed", 0xBEEF)?);
     let mut params = ParamSet::init(&exec.config, &mut rng);
     let trainer = Trainer {
         exec: &exec,
         config: TrainConfig {
             steps,
-            lr: args.get_f64("lr", 3e-3) as f32,
+            lr: args.get_f64("lr", 3e-3)? as f32,
             warmup: steps / 10,
             log_every: (steps / 20).max(1),
-            seed: args.get_u64("seed", 0xBEEF),
+            seed: args.get_u64("seed", 0xBEEF)?,
         },
     };
     let kind = CorpusKind::parse(&args.get_str("corpus", "wiki")).unwrap_or(CorpusKind::Wiki);
@@ -114,7 +119,7 @@ fn cmd_train(args: Args) -> crate::Result<()> {
 
 fn build_spec(args: &Args) -> crate::Result<PipelineSpec> {
     let (n, m) = parse_pattern(&args.get_str("sparsity", "8:16"))?;
-    let k = args.get_usize("outliers", 0);
+    let k = args.get_usize("outliers", 0)?;
     let method = PruneMethod::parse(&args.get_str("method", "ria"))
         .ok_or_else(|| anyhow::anyhow!("bad --method"))?;
     let mut prune = PruneSpec::new(n, m)
@@ -125,9 +130,9 @@ fn build_spec(args: &Args) -> crate::Result<PipelineSpec> {
         prune = prune.outliers(k);
     }
     let mut spec = PipelineSpec::new(prune);
-    spec.ebft_steps = args.get_usize("ebft", 0);
-    spec.ebft_lr = args.get_f64("ebft-lr", 1e-3) as f32;
-    spec.calib_batches = args.get_usize("calib-batches", 8);
+    spec.ebft_steps = args.get_usize("ebft", 0)?;
+    spec.ebft_lr = args.get_f64("ebft-lr", 1e-3)? as f32;
+    spec.calib_batches = args.get_usize("calib-batches", 8)?;
     spec.unstructured_outliers = args.get_bool("unstructured");
     spec.use_kernels = !args.get_bool("host-prune");
     Ok(spec)
@@ -182,7 +187,7 @@ fn cmd_eval(args: Args) -> crate::Result<()> {
             &lits,
             &ctx.tokenizer,
             &ctx.world,
-            args.get_usize("items", ExperimentCtx::zs_items()),
+            args.get_usize("items", ExperimentCtx::zs_items())?,
             7,
         )?;
         for t in &zs.tasks {
@@ -200,7 +205,7 @@ fn cmd_eval(args: Args) -> crate::Result<()> {
 
 fn cmd_hwsim(args: Args) -> crate::Result<()> {
     let hw = HwModel::default();
-    let batch = args.get_usize("batch", 8);
+    let batch = args.get_usize("batch", 8)?;
     let sizes = [512usize, 1024, 2048, 4096, 8192, 16384];
     let patterns = [(2usize, 4usize), (4, 8), (8, 16), (16, 32)];
     println!("projected sparse-GEMM speedup vs dense (batch={batch}):");

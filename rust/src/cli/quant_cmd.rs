@@ -14,9 +14,9 @@ use crate::util::args::Args;
 pub fn cmd_quant(args: Args) -> crate::Result<()> {
     let model = args.get_str("model", "tiny");
     let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
-    let bits = args.get_usize("bits", 4) as u32;
-    let group = args.get_usize("group", 128);
-    let k = args.get_usize("outliers", 0);
+    let bits = args.get_usize("bits", 4)? as u32;
+    let group = args.get_usize("group", 128)?;
+    let k = args.get_usize("outliers", 0)?;
     let params = load_checkpoint(Path::new(&ckpt))?;
     let store = if k > 0 {
         OutlierStore::Structured { k, m: 256 }
@@ -70,10 +70,10 @@ pub fn cmd_quant(args: Args) -> crate::Result<()> {
 pub fn cmd_owl(args: Args) -> crate::Result<()> {
     let model = args.get_str("model", "tiny");
     let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
-    let m = args.get_usize("m", 16);
-    let theta = args.get_f64("theta", 5.0) as f32;
-    let lambda = args.get_f64("lambda", 2.0);
-    let keep = args.get_f64("keep", 0.5);
+    let m = args.get_usize("m", 16)?;
+    let theta = args.get_f64("theta", 5.0)? as f32;
+    let lambda = args.get_f64("lambda", 2.0)?;
+    let keep = args.get_f64("keep", 0.5)?;
     let params = load_checkpoint(Path::new(&ckpt))?;
 
     let stats: Vec<LayerOutlierStats> = params

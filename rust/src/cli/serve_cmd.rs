@@ -1,17 +1,26 @@
-//! `sparselm serve` / `serve-bench` — the deployment front end.
+//! `sparselm serve` / `serve-bench` / `generate` — the deployment
+//! front end.
 //!
-//! `serve` loads a (compressed) checkpoint and exposes the scoring
-//! protocol on a TCP port; `serve-bench` is the matching closed-loop
-//! load generator reporting latency percentiles and batch fill — the
-//! numbers a deployment of the paper's sparse models would be judged on.
+//! `serve` loads a (compressed) checkpoint and exposes the scoring +
+//! generation protocol on a TCP port; `generate` runs the same
+//! KV-cached decode engine in-process for one prompt; `serve-bench` is
+//! the matching closed-loop load generator reporting latency
+//! percentiles and batch fill — the numbers a deployment of the paper's
+//! sparse models would be judged on.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::data::tokenizer::{BOS, EOS};
 use crate::data::{CorpusKind, CorpusSpec, Tokenizer, World};
-use crate::model::{load_checkpoint, SparseLm};
-use crate::serve::{pjrt_scorer, serve, spmm_scorer, ServeClient, ServerConfig};
+use crate::eval::Sampler;
+use crate::model::{load_checkpoint, ModelConfig, ParamSet, SparseLm};
+use crate::serve::{
+    pjrt_scorer, serve, serve_generate, spmm_generator, spmm_scorer, ServeClient,
+    ServerConfig,
+};
 use crate::util::args::Args;
+use crate::util::Rng;
 
 /// Rebuild the deterministic tokenizer every component shares (the same
 /// construction as `ExperimentCtx::new`, without touching PJRT).
@@ -32,34 +41,44 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
     let tokenizer = Arc::new(standard_tokenizer(crate::bench::fast_mode()));
     let server_cfg = ServerConfig {
         addr,
-        max_conns: args.get_usize("max-conns", 32),
+        max_conns: args.get_usize("max-conns", 32)?,
         max_batch: batch,
-        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 15)),
+        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 15)?),
+        max_gen_tokens: args.get_usize("max-gen-tokens", 512)?,
     };
     // default: serve the checkpoint decode-free (packed spmm host
     // forward); `--backend dense` serves the exact weights through the
     // host forward; `--backend pjrt` keeps the artifact path (needs
-    // `--features xla`)
+    // `--features xla`). The host-forward backends also serve the
+    // `generate` op through the continuous-batching decode engine —
+    // `--gen-batch` bounds the decode batch.
     let default_backend = if crate::runtime::pjrt_available() {
         "pjrt"
     } else {
         "spmm"
     };
     let backend = args.get_str("backend", default_backend);
-    let threads = args.get_usize("threads", crate::util::pool::default_parallelism());
+    let threads = args.get_usize("threads", crate::util::pool::default_parallelism())?;
+    let gen_batch = args.get_usize("gen-batch", 8)?.max(1);
+    let serve_lm = |lm: SparseLm| -> crate::Result<crate::serve::ServerHandle> {
+        let lm = Arc::new(lm);
+        serve_generate(
+            spmm_scorer(Arc::clone(&lm)),
+            spmm_generator(lm, gen_batch),
+            tokenizer.clone(),
+            server_cfg.clone(),
+        )
+    };
     let handle = match backend.as_str() {
         "pjrt" => serve(
             pjrt_scorer(artifacts, model.clone(), params),
-            tokenizer,
-            server_cfg,
+            Arc::clone(&tokenizer),
+            server_cfg.clone(),
         )?,
-        "dense" => {
-            let lm = SparseLm::from_params(&params).with_threads(threads);
-            serve(spmm_scorer(lm), tokenizer, server_cfg)?
-        }
+        "dense" => serve_lm(SparseLm::from_params(&params).with_threads(threads))?,
         "spmm" => {
             let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
-            let k = args.get_usize("outliers", 16);
+            let k = args.get_usize("outliers", 16)?;
             let lm = SparseLm::compress(&params, n, m, k).with_threads(threads);
             println!(
                 "packing checkpoint to {n}:{m} + {k}:256 (magnitude selection) — \
@@ -70,23 +89,79 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
                 lm.linear_operand_bytes() / 1024,
                 lm.dense_linear_bytes() / 1024
             );
-            serve(spmm_scorer(lm), tokenizer, server_cfg)?
+            serve_lm(lm)?
         }
         other => anyhow::bail!("unknown --backend {other} (expected spmm|dense|pjrt)"),
     };
     println!(
-        "serving {model} ({ckpt}, {backend}) on {} — newline-JSON ops: ping/nll/choice/stats/shutdown",
-        handle.addr
+        "serving {model} ({ckpt}, {backend}) on {} — newline-JSON ops: \
+         ping/nll/choice/generate/stats/shutdown{}",
+        handle.addr,
+        if backend == "pjrt" {
+            " (generate unavailable on pjrt)"
+        } else {
+            ""
+        }
     );
     handle.join()?;
     println!("server stopped");
     Ok(())
 }
 
+/// `sparselm generate` — one-shot KV-cached generation, in-process (the
+/// same prefill → decode loop the server's `generate` op runs, without
+/// the socket). `--random` initializes a stand-in model instead of
+/// loading a checkpoint, so the subcommand works fully offline.
+pub fn cmd_generate(args: Args) -> crate::Result<()> {
+    let model = args.get_str("model", "tiny");
+    let prompt = args.get_str("prompt", "the quick brown fox");
+    let max_tokens = args.get_usize("max-tokens", 32)?.max(1);
+    let temperature = args.get_f64("temperature", 0.0)? as f32;
+    let seed = args.get_u64("seed", 0)?;
+    let threads = args.get_usize("threads", crate::util::pool::default_parallelism())?;
+    let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
+    let k = args.get_usize("outliers", 16)?;
+
+    let params = if args.get_bool("random") {
+        let cfg = ModelConfig::preset(&model)
+            .ok_or_else(|| anyhow::anyhow!("unknown model preset {model:?}"))?;
+        ParamSet::init_outliers(&cfg, &mut Rng::new(seed ^ 0xFACE))
+    } else {
+        let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
+        load_checkpoint(std::path::Path::new(&ckpt))?
+    };
+    let lm = if args.get_bool("dense") {
+        SparseLm::from_params(&params).with_threads(threads)
+    } else {
+        SparseLm::compress(&params, n, m, k).with_threads(threads)
+    };
+    let tokenizer = standard_tokenizer(crate::bench::fast_mode());
+
+    let mut ids = vec![BOS];
+    ids.extend(tokenizer.encode(&prompt));
+    let mut sampler = Sampler::new(temperature, seed);
+    let t0 = Instant::now();
+    // one shared decode loop: SparseLm::generate stops at EOS without
+    // burning budget and caps prompt + generated at the context window
+    let emitted = lm.generate(&ids, max_tokens, Some(EOS), |logits| sampler.next(logits))?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{prompt} {}", tokenizer.decode(&emitted));
+    println!(
+        "-- {} tokens in {:.2}s ({:.1} tok/s); decode streams {} KiB packed weights/step \
+         (dense {} KiB)",
+        emitted.len(),
+        dt,
+        emitted.len() as f64 / dt.max(1e-9),
+        lm.linear_operand_bytes() / 1024,
+        lm.dense_linear_bytes() / 1024
+    );
+    Ok(())
+}
+
 pub fn cmd_serve_bench(args: Args) -> crate::Result<()> {
     let addr = args.get_str("addr", "127.0.0.1:7433");
-    let clients = args.get_usize("clients", 4);
-    let reqs = args.get_usize("requests", 50);
+    let clients = args.get_usize("clients", 4)?;
+    let reqs = args.get_usize("requests", 50)?;
     let world = World::new(99);
     let text = CorpusSpec::new(CorpusKind::Wiki, 2_000, 17).generate(&world);
     let sentences: Vec<&str> = text

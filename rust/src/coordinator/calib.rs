@@ -33,14 +33,17 @@ impl BlockStats {
         }
     }
 
-    /// Statistics for a named linear weight of the block.
-    pub fn for_linear(&self, name: &str) -> &ActStats {
+    /// Statistics for a named linear weight of the block. A name outside
+    /// the `BLOCK_LINEAR` contract (a malformed checkpoint or pipeline
+    /// spec) returns a typed [`crate::Error::NotALinear`] instead of
+    /// panicking, so it cannot abort a serving/compression process.
+    pub fn for_linear(&self, name: &str) -> crate::Result<&ActStats> {
         match name {
-            "wq" | "wk" | "wv" => &self.attn_in,
-            "wo" => &self.o_in,
-            "wg" | "wu" => &self.mlp_in,
-            "wd" => &self.down_in,
-            _ => panic!("not a linear: {name}"),
+            "wq" | "wk" | "wv" => Ok(&self.attn_in),
+            "wo" => Ok(&self.o_in),
+            "wg" | "wu" => Ok(&self.mlp_in),
+            "wd" => Ok(&self.down_in),
+            _ => Err(crate::Error::NotALinear(name.to_string()).into()),
         }
     }
 }
@@ -118,5 +121,22 @@ impl<'a> Calibrator<'a> {
             batch_ids,
             hiddens,
         })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn for_linear_rejects_non_linears_with_typed_error() {
+        let bs = BlockStats::new(4, 8);
+        assert!(bs.for_linear("wq").is_ok());
+        assert!(bs.for_linear("wd").is_ok());
+        let err = bs.for_linear("ln1").unwrap_err();
+        match err.downcast_ref::<crate::Error>() {
+            Some(crate::Error::NotALinear(n)) => assert_eq!(n, "ln1"),
+            other => panic!("want NotALinear, got {other:?}"),
+        }
     }
 }

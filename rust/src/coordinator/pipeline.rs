@@ -169,7 +169,7 @@ impl CompressionPipeline {
             for lin in crate::model::BLOCK_LINEAR {
                 let name = format!("blk{b}.{lin}");
                 let w = dense.get(&name).clone();
-                let stats = calib.stats[b].for_linear(lin).clone();
+                let stats = calib.stats[b].for_linear(lin)?.clone();
                 let (w_eff, keep, sal, report) = self.metrics.time("prune_layer", || {
                     self.prune_one(&name, &w, &stats, spec)
                 })?;

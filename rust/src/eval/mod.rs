@@ -6,11 +6,18 @@
 //! ([`PjrtModel`]) and the offline decode-free packed path
 //! ([`crate::model::SparseLm`]) plug in interchangeably, so eval results
 //! can be produced with packed weights staying packed end-to-end.
+//!
+//! Generation rides on the same contract: [`sample`] provides the token
+//! pickers ([`Sampler`] — greedy / temperature softmax) the decode
+//! engine uses, and [`continuation_nll`] scores generated continuations
+//! back through an [`NllModel`] window.
 
 mod ppl;
+pub mod sample;
 mod zeroshot;
 
 pub use ppl::{perplexity, perplexity_model, PplReport};
+pub use sample::{argmax, continuation_nll, softmax_sample, Sampler};
 pub use zeroshot::{
     eval_task, eval_task_model, zero_shot_accuracy, zero_shot_accuracy_model, TaskReport,
     ZeroShotReport,

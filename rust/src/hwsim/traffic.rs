@@ -146,6 +146,99 @@ impl HwModel {
             modeled_bytes: self.nm_operand_bytes(g, n, m),
         }
     }
+
+    // ---------------------------------------------- decode-phase model
+    //
+    // One autoregressive decode step is a batch-1 GEMV per linear: the
+    // activation row is tiny, so latency is weight-operand streaming —
+    // the regime §8 says packed N:M wins most. `shapes` is the model's
+    // per-step weight operand list with multiplicity
+    // (`ModelConfig::decode_linear_shapes`); the measured counterpart is
+    // `SparseLm::linear_operand_bytes`, which a decode step streams
+    // exactly once.
+
+    /// Modeled packed weight-operand bytes (values + pattern metadata,
+    /// plus `k_out`:256 structured-outlier side streams when
+    /// `k_out > 0`) one decode step streams across `shapes`.
+    pub fn decode_operand_bytes(
+        &self,
+        shapes: &[(usize, usize)],
+        n: usize,
+        m: usize,
+        k_out: usize,
+    ) -> f64 {
+        shapes
+            .iter()
+            .map(|&(rows, cols)| {
+                let g = GemmShape::new(1, rows, cols);
+                let mut b = self.nm_operand_bytes(g, n, m);
+                if k_out > 0 {
+                    b += self.outlier_overhead(g, k_out);
+                }
+                b
+            })
+            .sum()
+    }
+
+    /// The dense bf16 weight bytes the same decode step would stream.
+    pub fn decode_dense_bytes(&self, shapes: &[(usize, usize)]) -> f64 {
+        shapes
+            .iter()
+            .map(|&(rows, cols)| (rows * cols) as f64 * self.elem_bytes)
+            .sum()
+    }
+
+    /// Modeled end-to-end speedup of one packed decode step over dense:
+    /// per-linear roofline latencies summed across `shapes` (each linear
+    /// is its own kernel launch, like the spmm path runs them). When
+    /// `k_out > 0` the `k_out`:256 outlier side stream's extra bytes are
+    /// priced into the packed side, so the full paper format is not
+    /// flattered with the base format's traffic.
+    pub fn decode_speedup(
+        &self,
+        shapes: &[(usize, usize)],
+        n: usize,
+        m: usize,
+        k_out: usize,
+    ) -> f64 {
+        let dense: f64 = shapes
+            .iter()
+            .map(|&(rows, cols)| self.dense(GemmShape::new(1, rows, cols)).latency)
+            .sum();
+        let sparse: f64 = shapes
+            .iter()
+            .map(|&(rows, cols)| {
+                let g = GemmShape::new(1, rows, cols);
+                let r = self.sparse_nm(g, n, m);
+                let extra = if k_out > 0 {
+                    self.outlier_overhead(g, k_out) / self.bandwidth
+                } else {
+                    0.0
+                };
+                self.overhead + (r.mem_time + extra).max(r.compute_time)
+            })
+            .sum();
+        dense / sparse
+    }
+
+    /// Measured-vs-modeled for the decode phase: the bytes a packed
+    /// model's kernels report streaming per decode step
+    /// (`SparseLm::linear_operand_bytes`) against
+    /// [`Self::decode_operand_bytes`]. Driven by `cargo bench --bench
+    /// f3_decode`.
+    pub fn check_decode_operand(
+        &self,
+        shapes: &[(usize, usize)],
+        n: usize,
+        m: usize,
+        k_out: usize,
+        measured_bytes: usize,
+    ) -> ModelCheck {
+        ModelCheck {
+            measured_bytes: measured_bytes as f64,
+            modeled_bytes: self.decode_operand_bytes(shapes, n, m, k_out),
+        }
+    }
 }
 
 /// Measured-vs-modeled weight traffic for one packed operand.
@@ -255,6 +348,55 @@ mod tests {
         let g = GemmShape::new(8, 4096, 4096);
         let dense = hw.dense(g).weight_bytes;
         assert!(hw.nm_operand_bytes(g, 8, 16) <= 0.60 * dense);
+    }
+
+    #[test]
+    fn decode_step_is_bandwidth_bound_and_packed_wins() {
+        let hw = HwModel::default();
+        // paper-scale decoder: 7 block linears per layer, 32 layers
+        let mut cfg = crate::model::ModelConfig::preset("e2e").unwrap();
+        cfg.dim = 4096;
+        cfg.hidden = 14336;
+        cfg.n_layers = 32;
+        cfg.n_heads = 32;
+        cfg.n_kv_heads = 8;
+        let shapes = cfg.decode_linear_shapes();
+        let s816 = hw.decode_speedup(&shapes, 8, 16, 0);
+        // batch-1 GEMVs: memory-bound, so speedup tracks the traffic
+        // ratio (≈1/0.555 = 1.8) minus launch overhead
+        assert!(s816 > 1.4 && s816 < 2.0, "decode speedup {s816}");
+        // the outlier side stream costs real bandwidth: pricing it in
+        // must strictly lower the modeled speedup
+        let s_out = hw.decode_speedup(&shapes, 8, 16, 16);
+        assert!(s_out < s816, "outliers priced in: {s_out} !< {s816}");
+        assert!(s_out > 1.2, "still a win with outliers: {s_out}");
+        // packed decode-step traffic ≤ 0.60× dense (the bench bar)
+        let packed = hw.decode_operand_bytes(&shapes, 8, 16, 0);
+        let dense = hw.decode_dense_bytes(&shapes);
+        assert!(packed <= 0.60 * dense, "{packed} vs {dense}");
+    }
+
+    #[test]
+    fn measured_decode_bytes_match_decode_model() {
+        use crate::model::{ModelConfig, ParamSet, SparseLm};
+        use crate::util::Rng;
+        let hw = HwModel::default();
+        let mut cfg = ModelConfig::preset("tiny").unwrap();
+        cfg.n_layers = 2;
+        cfg.vocab = 512;
+        let mut rng = Rng::new(21);
+        let params = ParamSet::init(&cfg, &mut rng);
+        let shapes = cfg.decode_linear_shapes();
+        for k_out in [0usize, 16] {
+            let lm = SparseLm::compress(&params, 8, 16, k_out);
+            let chk =
+                hw.check_decode_operand(&shapes, 8, 16, k_out, lm.linear_operand_bytes());
+            assert!(
+                chk.within(0.01),
+                "k_out={k_out}: measured/modeled ratio {}",
+                chk.ratio()
+            );
+        }
     }
 
     #[test]

@@ -26,9 +26,11 @@
 //! layout is specified in `docs/FORMAT.md`.
 //!
 //! Start with [`coordinator::CompressionPipeline`] for the paper's §4
-//! pipeline, [`sparse`] for the storage formats and spmm kernels, and
-//! `examples/` for runnable entry points (`packed_serve` is the
-//! offline end-to-end demo).
+//! pipeline, [`sparse`] for the storage formats and spmm kernels,
+//! [`model::SparseLm::prefill`] / [`model::SparseLm::decode_step`] for
+//! KV-cached generation, and `examples/` for runnable entry points
+//! (`packed_serve` scores, `packed_generate` decodes — both offline
+//! end-to-end demos).
 
 pub mod bench;
 pub mod cli;
@@ -47,3 +49,42 @@ pub mod util;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;
+
+/// Typed error conditions a serving process must survive without
+/// aborting: malformed checkpoints/configs and bad CLI flags used to
+/// `panic!` deep inside the coordinator, which would take the whole
+/// server down. They now surface as `Error` variants carried through
+/// [`anyhow`], so `crate::Result` call sites compose unchanged while
+/// callers that care can still `downcast_ref::<Error>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Error {
+    /// A parameter name outside the `ModelConfig::param_names` contract
+    /// (e.g. a corrupted or foreign checkpoint).
+    UnknownParam(String),
+    /// A block parameter that is not one of the prunable linears.
+    NotALinear(String),
+    /// A `--key value` CLI flag that failed to parse as its declared type.
+    BadFlag {
+        key: String,
+        value: String,
+        want: &'static str,
+    },
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::UnknownParam(name) => {
+                write!(f, "unknown param {name:?} (not in the model's parameter contract)")
+            }
+            Error::NotALinear(name) => {
+                write!(f, "not a prunable linear: {name:?}")
+            }
+            Error::BadFlag { key, value, want } => {
+                write!(f, "--{key} expects {want}, got {value:?} (usage: --{key} <{want}>)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for Error {}

@@ -117,10 +117,10 @@ pub fn load_checkpoint(path: &Path) -> crate::Result<ParamSet> {
             r.read_exact(&mut u64b)?;
             dims.push(u64::from_le_bytes(u64b) as usize);
         }
+        let want_shape = config.param_shape(name)?;
         anyhow::ensure!(
-            dims == config.param_shape(name),
-            "param {name}: checkpoint shape {dims:?} vs config {:?}",
-            config.param_shape(name)
+            dims == want_shape,
+            "param {name}: checkpoint shape {dims:?} vs config {want_shape:?}"
         );
         let n: usize = dims.iter().product();
         let mut bytes = vec![0u8; n * 4];

@@ -96,29 +96,38 @@ impl ModelConfig {
         names
     }
 
-    pub fn param_shape(&self, name: &str) -> Vec<usize> {
+    /// Shape of a named parameter. A name outside the
+    /// [`Self::param_names`] contract returns a typed
+    /// [`crate::Error::UnknownParam`] instead of panicking — a malformed
+    /// checkpoint must not abort a serving process.
+    pub fn param_shape(&self, name: &str) -> crate::Result<Vec<usize>> {
         let (d, h, kv, v) = (self.dim, self.hidden, self.kv_dim(), self.vocab);
         if name == "tok_emb" {
-            return vec![v, d];
+            return Ok(vec![v, d]);
         }
         if name == "ln_f" {
-            return vec![d];
+            return Ok(vec![d]);
         }
         let base = name.rsplit('.').next().unwrap();
-        match base {
+        Ok(match base {
             "ln1" | "ln2" => vec![d],
             "wq" | "wo" => vec![d, d],
             "wk" | "wv" => vec![kv, d],
             "wg" | "wu" => vec![h, d],
             "wd" => vec![d, h],
-            _ => panic!("unknown param {name}"),
-        }
+            _ => return Err(crate::Error::UnknownParam(name.to_string()).into()),
+        })
     }
 
     pub fn n_params(&self) -> usize {
         self.param_names()
             .iter()
-            .map(|n| self.param_shape(n).iter().product::<usize>())
+            .map(|n| {
+                self.param_shape(n)
+                    .expect("param_names() yields only known params")
+                    .iter()
+                    .product::<usize>()
+            })
             .sum()
     }
 
@@ -133,6 +142,23 @@ impl ModelConfig {
         shapes.sort_unstable();
         shapes.dedup();
         shapes
+    }
+
+    /// The seven prunable linears of one block **with multiplicity**, in
+    /// `BLOCK_LINEAR` order (`wq wk wv wo wg wu wd`) — the weight
+    /// operands one decode step streams per layer.
+    pub fn block_linear_shapes(&self) -> Vec<(usize, usize)> {
+        let (d, h, kv) = (self.dim, self.hidden, self.kv_dim());
+        vec![(d, d), (kv, d), (kv, d), (d, d), (h, d), (h, d), (d, h)]
+    }
+
+    /// Every block linear one decode step streams, across all layers —
+    /// the shape list behind the [`crate::hwsim`] decode-phase traffic
+    /// model (the measured counterpart is
+    /// [`super::SparseLm::linear_operand_bytes`]).
+    pub fn decode_linear_shapes(&self) -> Vec<(usize, usize)> {
+        let blk = self.block_linear_shapes();
+        (0..self.n_layers).flat_map(|_| blk.iter().copied()).collect()
     }
 
     /// Tokens per forward batch.
@@ -197,9 +223,31 @@ mod tests {
         let cfg = test_config();
         assert_eq!(cfg.head_dim(), 64);
         assert_eq!(cfg.kv_dim(), 128);
-        assert_eq!(cfg.param_shape("blk0.wk"), vec![128, 256]);
-        assert_eq!(cfg.param_shape("blk1.wd"), vec![256, 512]);
-        assert_eq!(cfg.param_shape("tok_emb"), vec![1024, 256]);
+        assert_eq!(cfg.param_shape("blk0.wk").unwrap(), vec![128, 256]);
+        assert_eq!(cfg.param_shape("blk1.wd").unwrap(), vec![256, 512]);
+        assert_eq!(cfg.param_shape("tok_emb").unwrap(), vec![1024, 256]);
+    }
+
+    #[test]
+    fn unknown_param_is_a_typed_error_not_a_panic() {
+        let cfg = test_config();
+        let err = cfg.param_shape("blk0.wx").unwrap_err();
+        match err.downcast_ref::<crate::Error>() {
+            Some(crate::Error::UnknownParam(name)) => assert_eq!(name, "blk0.wx"),
+            other => panic!("want UnknownParam, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn decode_shapes_cover_every_block_linear() {
+        let cfg = test_config();
+        let blk = cfg.block_linear_shapes();
+        assert_eq!(blk.len(), 7);
+        let all = cfg.decode_linear_shapes();
+        assert_eq!(all.len(), 7 * cfg.n_layers);
+        // per-step dense weight bytes = sum over shapes × 2 (bf16)
+        let dense: usize = all.iter().map(|&(r, c)| r * c * 2).sum();
+        assert!(dense > 0);
     }
 
     #[test]
@@ -225,6 +273,6 @@ mod tests {
         let cfg = ModelConfig::from_manifest(&j);
         assert_eq!(cfg.dim, 256);
         assert_eq!(cfg.n_params(), cfg.param_names().iter()
-            .map(|n| cfg.param_shape(n).iter().product::<usize>()).sum::<usize>());
+            .map(|n| cfg.param_shape(n).unwrap().iter().product::<usize>()).sum::<usize>());
     }
 }

@@ -1,0 +1,438 @@
+//! KV-cached incremental forward: prefill + single-token decode steps.
+//!
+//! The monolithic scorer ([`SparseLm::lm_nll`]) recomputes every
+//! position of a window per call; generation would make that O(L²) per
+//! token. This module is the O(L)-per-token path the paper's decode
+//! roofline (§8 / [`crate::hwsim`]) actually describes:
+//!
+//! * [`SparseLm::prefill`] runs a prompt once, filling a
+//!   [`KvCache`] and returning per-position logits;
+//! * [`SparseLm::decode_step`] advances a **batch of independent
+//!   sequences** by one token each — the activations of all sequences
+//!   share each packed-weight GEMM, so pattern unranking and bf16
+//!   widening amortize across the decode batch exactly as they do
+//!   across prefill rows (the continuous-batching scheduler in
+//!   [`crate::serve`] lives on this property);
+//! * a single-sequence step routes every linear through
+//!   [`crate::sparse::spmm_vec`], the one-activation-row GEMV fast
+//!   path.
+//!
+//! Per-sequence results are **independent of decode-batch
+//! composition**: every kernel accumulates each activation row
+//! separately and attention reads only the sequence's own cache, so a
+//! sequence decoded alone is bitwise identical to the same sequence
+//! decoded while sharing the batch with others (asserted in the tests
+//! below). Incremental logits match the full-sequence forward
+//! ([`SparseLm::full_logits`]) step-for-step within f32 tolerance —
+//! `tests/generate_parity.rs` holds both backends to that.
+
+use crate::sparse::{spmm_vec, Kernel};
+use crate::tensor::{dot, Tensor};
+
+use super::forward::{apply_rope, rmsnorm, rope_tables_range, rotate_heads, silu};
+use super::kv::KvCache;
+use super::SparseLm;
+
+impl SparseLm {
+    /// Apply a linear to `rows` activations, taking the
+    /// [`spmm_vec`] GEMV fast path when there is exactly one row — the
+    /// bandwidth-bound decode shape the packed formats exist for.
+    fn lin_rows(&self, w: &dyn Kernel, x: &Tensor) -> Tensor {
+        if x.dims2().0 == 1 {
+            let out = spmm_vec(x.row(0), w);
+            Tensor::new(vec![1, out.len()], out)
+        } else {
+            self.lin(w, x)
+        }
+    }
+
+    /// Run `tokens` (one sequence) through the model, appending their
+    /// K/V rows to `cache`, and return the `(len, vocab)` logits of
+    /// every prompt position. The cache may already hold context
+    /// (chunked prefill); `cache.len() + tokens.len()` must fit the
+    /// cache capacity so the attended window never slides mid-prompt.
+    ///
+    /// Generation only needs the *last* position's logits — use
+    /// [`Self::prefill_last`] there: the tied-head GEMM is the model's
+    /// largest matmul, and running it over every prompt row just to
+    /// discard all but one is `len×` wasted head compute.
+    pub fn prefill(&self, tokens: &[i32], cache: &mut KvCache) -> crate::Result<Tensor> {
+        let h = self.prefill_hidden(tokens, cache)?;
+        let xf = rmsnorm(&h, &self.ln_f);
+        Ok(self.lin_rows(&self.tok_emb, &xf))
+    }
+
+    /// [`Self::prefill`] computing the head only for the final prompt
+    /// position — the admission path of the generation engine. The
+    /// returned row is bitwise identical to the last row of
+    /// [`Self::prefill`] (per-row independent norm + GEMV).
+    pub fn prefill_last(&self, tokens: &[i32], cache: &mut KvCache) -> crate::Result<Vec<f32>> {
+        let h = self.prefill_hidden(tokens, cache)?;
+        let (rows, d) = h.dims2();
+        let last = Tensor::new(vec![1, d], h.row(rows - 1).to_vec());
+        let xf = rmsnorm(&last, &self.ln_f);
+        Ok(self.lin_rows(&self.tok_emb, &xf).into_data())
+    }
+
+    /// Shared prefill body: block stack + cache writes, stopping before
+    /// the final norm/head.
+    fn prefill_hidden(&self, tokens: &[i32], cache: &mut KvCache) -> crate::Result<Tensor> {
+        let cfg = &self.config;
+        let s = tokens.len();
+        anyhow::ensure!(s > 0, "prefill: empty token sequence");
+        anyhow::ensure!(
+            cache.len() + s <= cache.capacity(),
+            "prefill: {} cached + {s} new tokens exceed cache capacity {}",
+            cache.len(),
+            cache.capacity()
+        );
+        let (nh, nkv, hd) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let kvd = cfg.kv_dim();
+        let d = cfg.dim;
+        let start = cache.len();
+
+        let mut h = self.embed(tokens); // (s, d)
+        let rope = rope_tables_range(start, s, hd, cfg.rope_theta);
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let x = rmsnorm(&h, &blk.ln1);
+            let mut q = self.lin_rows(&*blk.wq, &x);
+            let mut k = self.lin_rows(&*blk.wk, &x);
+            let v = self.lin_rows(&*blk.wv, &x);
+            apply_rope(&mut q, 1, s, nh, hd, &rope.0, &rope.1);
+            apply_rope(&mut k, 1, s, nkv, hd, &rope.0, &rope.1);
+            for p in 0..s {
+                cache.put(bi, start + p, &k.row(p)[..kvd], &v.row(p)[..kvd]);
+            }
+            let mut o = vec![0.0f32; s * d];
+            for p in 0..s {
+                attend_cached(q.row(p), cache, bi, start + p, nh, nkv, hd, &mut o[p * d..(p + 1) * d]);
+            }
+            let attn_out = self.lin_rows(&*blk.wo, &Tensor::new(vec![s, d], o));
+            let h1 = h.add(&attn_out);
+            let y = rmsnorm(&h1, &blk.ln2);
+            let g = self.lin_rows(&*blk.wg, &y);
+            let u = self.lin_rows(&*blk.wu, &y);
+            let z = g.zip(&u, |gv, uv| silu(gv) * uv);
+            let mlp = self.lin_rows(&*blk.wd, &z);
+            h = h1.add(&mlp);
+        }
+        cache.advance(s);
+        Ok(h)
+    }
+
+    /// Advance a batch of independent sequences by one token each:
+    /// `toks[i]` is appended to the sequence whose state is `caches[i]`,
+    /// and row `i` of the returned `(len, vocab)` tensor holds that
+    /// sequence's next-token logits.
+    ///
+    /// All sequences share each weight GEMM (the decode batch is the
+    /// activation matrix), but attention, RoPE position and cache are
+    /// strictly per-sequence — results do not depend on which other
+    /// sequences happen to share the step.
+    pub fn decode_step(
+        &self,
+        toks: &[i32],
+        caches: &mut [&mut KvCache],
+    ) -> crate::Result<Tensor> {
+        let b = toks.len();
+        anyhow::ensure!(b > 0, "decode_step: empty batch");
+        anyhow::ensure!(
+            caches.len() == b,
+            "decode_step: {b} tokens but {} caches",
+            caches.len()
+        );
+        let cfg = &self.config;
+        let (nh, nkv, hd) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
+        let kvd = cfg.kv_dim();
+        let d = cfg.dim;
+        // each sequence decodes at its own absolute position
+        let pos: Vec<usize> = caches.iter().map(|c| c.len()).collect();
+        let rope_rows: Vec<(Vec<f32>, Vec<f32>)> = pos
+            .iter()
+            .map(|&p| rope_tables_range(p, 1, hd, cfg.rope_theta))
+            .collect();
+
+        let mut h = self.embed(toks); // (b, d)
+        for (bi, blk) in self.blocks.iter().enumerate() {
+            let x = rmsnorm(&h, &blk.ln1);
+            let mut q = self.lin_rows(&*blk.wq, &x);
+            let mut k = self.lin_rows(&*blk.wk, &x);
+            let v = self.lin_rows(&*blk.wv, &x);
+            for i in 0..b {
+                let (cos, sin) = &rope_rows[i];
+                rotate_heads(&mut q.row_mut(i)[..d], nh, hd, cos, sin);
+                rotate_heads(&mut k.row_mut(i)[..kvd], nkv, hd, cos, sin);
+                caches[i].put(bi, pos[i], &k.row(i)[..kvd], &v.row(i)[..kvd]);
+            }
+            let mut o = vec![0.0f32; b * d];
+            for i in 0..b {
+                attend_cached(
+                    q.row(i),
+                    &*caches[i],
+                    bi,
+                    pos[i],
+                    nh,
+                    nkv,
+                    hd,
+                    &mut o[i * d..(i + 1) * d],
+                );
+            }
+            let attn_out = self.lin_rows(&*blk.wo, &Tensor::new(vec![b, d], o));
+            let h1 = h.add(&attn_out);
+            let y = rmsnorm(&h1, &blk.ln2);
+            let g = self.lin_rows(&*blk.wg, &y);
+            let u = self.lin_rows(&*blk.wu, &y);
+            let z = g.zip(&u, |gv, uv| silu(gv) * uv);
+            let mlp = self.lin_rows(&*blk.wd, &z);
+            h = h1.add(&mlp);
+        }
+        for c in caches.iter_mut() {
+            c.advance(1);
+        }
+        let xf = rmsnorm(&h, &self.ln_f);
+        Ok(self.lin_rows(&self.tok_emb, &xf))
+    }
+
+    /// Autoregressive generation for one sequence: prefill the prompt,
+    /// then decode until `max_tokens` tokens are emitted or `pick`
+    /// selects the `stop` token (which is not emitted). `pick` maps a
+    /// logits row to the chosen token id (greedy argmax, temperature
+    /// sampling, …; see [`crate::eval::Sampler`]).
+    ///
+    /// The budget is capped so `prompt + generated` fits the model's
+    /// context window — generation never silently degrades to
+    /// sliding-window attention, keeping the output identical to a
+    /// full-sequence greedy decode (the `tests/generate_parity.rs`
+    /// guarantee). This is the same loop the serve-layer scheduler and
+    /// the `generate` CLI subcommand run.
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        max_tokens: usize,
+        stop: Option<i32>,
+        mut pick: impl FnMut(&[f32]) -> usize,
+    ) -> crate::Result<Vec<i32>> {
+        anyhow::ensure!(!prompt.is_empty(), "generate: empty prompt");
+        let mut cache = KvCache::new(&self.config);
+        anyhow::ensure!(
+            prompt.len() <= cache.capacity(),
+            "generate: prompt of {} tokens exceeds context capacity {}",
+            prompt.len(),
+            cache.capacity()
+        );
+        let budget = max_tokens.min(cache.capacity() - prompt.len());
+        let mut out = Vec::with_capacity(budget);
+        if budget == 0 {
+            return Ok(out);
+        }
+        let logits = self.prefill_last(prompt, &mut cache)?;
+        let mut tok = pick(&logits) as i32;
+        while Some(tok) != stop {
+            out.push(tok);
+            if out.len() >= budget {
+                break;
+            }
+            let lg = self.decode_step(&[tok], &mut [&mut cache])?;
+            tok = pick(lg.row(0)) as i32;
+        }
+        Ok(out)
+    }
+}
+
+/// Causal softmax attention of one query row against a sequence's
+/// cache: query at absolute position `pos` attends every cached
+/// position in the ring's window up to and including itself, with GQA
+/// head grouping (`q` head `h` reads kv head `h / (nh/nkv)`).
+/// Accumulates the context vector into `out` (`nh * hd` floats,
+/// pre-zeroed).
+#[allow(clippy::too_many_arguments)]
+fn attend_cached(
+    q_row: &[f32],
+    cache: &KvCache,
+    blk: usize,
+    pos: usize,
+    nh: usize,
+    nkv: usize,
+    hd: usize,
+    out: &mut [f32],
+) {
+    let rep = nh / nkv;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let lo = (pos + 1).saturating_sub(cache.capacity());
+    let span = pos + 1 - lo;
+    let mut att = vec![0.0f32; span];
+    for hh in 0..nh {
+        let kvh = hh / rep;
+        let qvec = &q_row[hh * hd..(hh + 1) * hd];
+        let mut mx = f32::NEG_INFINITY;
+        for (ai, kp) in (lo..=pos).enumerate() {
+            let kvec = &cache.k_row(blk, kp)[kvh * hd..][..hd];
+            let sc = dot(qvec, kvec) * scale;
+            att[ai] = sc;
+            if sc > mx {
+                mx = sc;
+            }
+        }
+        let mut denom = 0.0f32;
+        for a in att.iter_mut() {
+            *a = (*a - mx).exp();
+            denom += *a;
+        }
+        let inv = 1.0 / denom;
+        let orow = &mut out[hh * hd..(hh + 1) * hd];
+        for (ai, kp) in (lo..=pos).enumerate() {
+            let w = att[ai] * inv;
+            let vvec = &cache.v_row(blk, kp)[kvh * hd..][..hd];
+            for (o, &vv) in orow.iter_mut().zip(vvec) {
+                *o += w * vv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{ModelConfig, ParamSet};
+    use crate::tensor::rel_error;
+    use crate::util::propcheck::assert_allclose;
+    use crate::util::Rng;
+
+    fn small_cfg() -> ModelConfig {
+        let mut cfg = ModelConfig::preset("gqa").unwrap();
+        cfg.n_layers = 2;
+        cfg.seq = 24;
+        cfg.batch = 1;
+        cfg.vocab = 512;
+        cfg
+    }
+
+    fn toks(n: usize, cfg: &ModelConfig, rng: &mut Rng) -> Vec<i32> {
+        (0..n).map(|_| rng.below(cfg.vocab) as i32).collect()
+    }
+
+    #[test]
+    fn prefill_matches_full_logits() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(41);
+        let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
+        let prompt = toks(9, &cfg, &mut rng);
+        let want = lm.full_logits(&prompt).unwrap();
+        let mut cache = KvCache::new(&cfg);
+        let got = lm.prefill(&prompt, &mut cache).unwrap();
+        assert_eq!(got.shape(), want.shape());
+        assert_eq!(cache.len(), prompt.len());
+        assert!(
+            rel_error(&got, &want) < 1e-5,
+            "prefill vs full: {}",
+            rel_error(&got, &want)
+        );
+        // the admission-path variant is the last row, bitwise
+        let mut cache2 = KvCache::new(&cfg);
+        let last = lm.prefill_last(&prompt, &mut cache2).unwrap();
+        assert_eq!(last.as_slice(), got.row(prompt.len() - 1));
+        assert_eq!(cache2.len(), prompt.len());
+    }
+
+    #[test]
+    fn decode_steps_match_full_logits_at_every_position() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(42);
+        let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
+        let seq = toks(14, &cfg, &mut rng);
+        let mut cache = KvCache::new(&cfg);
+        lm.prefill(&seq[..4], &mut cache).unwrap();
+        for t in 4..seq.len() {
+            let lg = lm.decode_step(&[seq[t]], &mut [&mut cache]).unwrap();
+            let full = lm.full_logits(&seq[..=t]).unwrap();
+            let last = full.row(t);
+            assert_allclose(lg.row(0), last, 1e-4, 1e-5)
+                .unwrap_or_else(|e| panic!("step {t}: {e}"));
+        }
+    }
+
+    #[test]
+    fn batched_decode_is_independent_of_batch_composition() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(43);
+        let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
+        let a = toks(6, &cfg, &mut rng);
+        let b = toks(3, &cfg, &mut rng);
+
+        // joint: both sequences share each decode step's GEMMs
+        let mut ca = KvCache::new(&cfg);
+        let mut cb = KvCache::new(&cfg);
+        lm.prefill(&a, &mut ca).unwrap();
+        lm.prefill(&b, &mut cb).unwrap();
+        let joint = lm
+            .decode_step(&[7, 9], &mut [&mut ca, &mut cb])
+            .unwrap();
+
+        // solo: each sequence decoded alone (spmm_vec fast path)
+        let mut ca2 = KvCache::new(&cfg);
+        let mut cb2 = KvCache::new(&cfg);
+        lm.prefill(&a, &mut ca2).unwrap();
+        lm.prefill(&b, &mut cb2).unwrap();
+        let solo_a = lm.decode_step(&[7], &mut [&mut ca2]).unwrap();
+        let solo_b = lm.decode_step(&[9], &mut [&mut cb2]).unwrap();
+
+        assert_eq!(joint.row(0), solo_a.row(0), "seq a depends on batch-mate");
+        assert_eq!(joint.row(1), solo_b.row(0), "seq b depends on batch-mate");
+    }
+
+    #[test]
+    fn generate_is_deterministic_greedy() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(44);
+        let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
+        let prompt = toks(5, &cfg, &mut rng);
+        let pick = |l: &[f32]| {
+            l.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        let g1 = lm.generate(&prompt, 8, None, pick).unwrap();
+        let g2 = lm.generate(&prompt, 8, None, pick).unwrap();
+        assert_eq!(g1.len(), 8);
+        assert_eq!(g1, g2);
+        assert!(g1.iter().all(|&t| (t as usize) < cfg.vocab));
+        // a stop token ends generation at its *first* occurrence,
+        // without being emitted (greedy chains may repeat tokens)
+        let stop = g1[2];
+        let first = g1.iter().position(|&t| t == stop).unwrap();
+        let stopped = lm.generate(&prompt, 8, Some(stop), pick).unwrap();
+        assert_eq!(stopped, g1[..first].to_vec());
+    }
+
+    #[test]
+    fn generate_budget_capped_at_context_window() {
+        // prompt + generated never exceeds the cache capacity: the
+        // window must not silently slide mid-generation
+        let cfg = small_cfg(); // seq = 24
+        let mut rng = Rng::new(46);
+        let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
+        let prompt = toks(20, &cfg, &mut rng);
+        let out = lm.generate(&prompt, 100, None, |l| {
+            l.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        }).unwrap();
+        assert_eq!(out.len(), cfg.seq - prompt.len());
+    }
+
+    #[test]
+    fn prefill_rejects_overflow_and_empty() {
+        let cfg = small_cfg();
+        let mut rng = Rng::new(45);
+        let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
+        let mut cache = KvCache::with_capacity(&cfg, 4);
+        assert!(lm.prefill(&[], &mut cache).is_err());
+        let long = toks(5, &cfg, &mut rng);
+        assert!(lm.prefill(&long, &mut cache).is_err());
+        assert!(cache.is_empty(), "failed prefill must not commit positions");
+    }
+}

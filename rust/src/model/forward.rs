@@ -14,6 +14,13 @@
 //! the PJRT path ([`crate::coordinator::ModelExec`]) remains the
 //! artifact-backed alternative. `docs/ARCHITECTURE.md` walks the full
 //! request path.
+//!
+//! The forward is factored into reusable stages — `embed`, `block_fwd`,
+//! `head_logits` — shared by three consumers: the batch scorer
+//! [`SparseLm::lm_nll`], the full-sequence reference
+//! [`SparseLm::full_logits`], and the KV-cached incremental path
+//! ([`SparseLm::prefill`] / [`SparseLm::decode_step`] in
+//! `model/decode.rs`).
 
 use crate::sparse::{spmm, spmm_parallel, Kernel, PackedLinear};
 use crate::tensor::{dot, Tensor};
@@ -98,12 +105,32 @@ impl SparseLm {
     }
 
     #[inline]
-    fn lin(&self, w: &dyn Kernel, x: &Tensor) -> Tensor {
+    pub(super) fn lin(&self, w: &dyn Kernel, x: &Tensor) -> Tensor {
         if self.threads > 1 {
             spmm_parallel(x, w, self.threads)
         } else {
             spmm(x, w)
         }
+    }
+
+    /// Embedding gather: token ids → `(len, dim)` hidden states.
+    /// Out-of-vocab ids clamp to the last embedding row (the artifact
+    /// path clips identically inside its gather).
+    pub(super) fn embed(&self, inp: &[i32]) -> Tensor {
+        let (d, vocab) = (self.config.dim, self.config.vocab);
+        let mut hbuf = vec![0.0f32; inp.len() * d];
+        for (i, &t) in inp.iter().enumerate() {
+            let id = (t.max(0) as usize).min(vocab - 1);
+            hbuf[i * d..(i + 1) * d].copy_from_slice(self.tok_emb.row(id));
+        }
+        Tensor::new(vec![inp.len(), d], hbuf)
+    }
+
+    /// Final RMSNorm + tied-head GEMM: `(rows, dim)` hidden states →
+    /// `(rows, vocab)` logits.
+    pub(super) fn head_logits(&self, h: &Tensor) -> Tensor {
+        let xf = rmsnorm(h, &self.ln_f);
+        self.lin(&self.tok_emb, &xf)
     }
 
     /// Bytes a decoder streams for all block linears — the measured
@@ -139,7 +166,7 @@ impl SparseLm {
     /// identically inside the gather).
     pub fn lm_nll(&self, tokens: &[i32]) -> crate::Result<Tensor> {
         let cfg = &self.config;
-        let (b, s, d) = (cfg.batch, cfg.seq, cfg.dim);
+        let (b, s) = (cfg.batch, cfg.seq);
         anyhow::ensure!(
             tokens.len() == b * (s + 1),
             "lm_nll batch shape: got {} tokens, want {}x{}",
@@ -154,26 +181,16 @@ impl SparseLm {
             inp.extend_from_slice(&row[..s]);
             tgt.extend_from_slice(&row[1..]);
         }
-
-        // embed
-        let vocab = cfg.vocab;
-        let mut hbuf = vec![0.0f32; b * s * d];
-        for (i, &t) in inp.iter().enumerate() {
-            let id = (t.max(0) as usize).min(vocab - 1);
-            hbuf[i * d..(i + 1) * d].copy_from_slice(self.tok_emb.row(id));
-        }
-        let mut h = Tensor::new(vec![b * s, d], hbuf);
+        let mut h = self.embed(&inp); // (B*S, D)
 
         // RoPE tables depend only on (seq, head_dim, theta): build once
         // per call, shared by every block
         let rope = rope_tables(s, cfg.head_dim(), cfg.rope_theta);
         for blk in &self.blocks {
-            h = self.block_fwd(blk, &h, &rope);
+            h = self.block_fwd(blk, &h, &rope, b, s);
         }
 
-        // final norm + tied head
-        let xf = rmsnorm(&h, &self.ln_f);
-        let logits = self.lin(&self.tok_emb, &xf); // (B*S, V)
+        let logits = self.head_logits(&h); // (B*S, V)
         let (_, v) = logits.dims2();
         let mut nll = vec![0.0f32; b * s];
         for (i, out) in nll.iter_mut().enumerate() {
@@ -186,17 +203,35 @@ impl SparseLm {
         Ok(Tensor::new(vec![b, s], nll))
     }
 
-    /// One pre-norm block over `(B*S, D)` hidden states.
-    fn block_fwd(
+    /// Full-sequence logits for **one** sequence: `(L,)` token ids →
+    /// `(L, vocab)`. This is the monolithic forward (the same code path
+    /// as [`Self::lm_nll`], batch 1) and serves as the reference the
+    /// KV-cached incremental path is checked against — it never touches
+    /// [`super::KvCache`].
+    pub fn full_logits(&self, tokens: &[i32]) -> crate::Result<Tensor> {
+        anyhow::ensure!(!tokens.is_empty(), "full_logits: empty sequence");
+        let cfg = &self.config;
+        let s = tokens.len();
+        let mut h = self.embed(tokens);
+        let rope = rope_tables(s, cfg.head_dim(), cfg.rope_theta);
+        for blk in &self.blocks {
+            h = self.block_fwd(blk, &h, &rope, 1, s);
+        }
+        Ok(self.head_logits(&h))
+    }
+
+    /// One pre-norm block over `(b*s, D)` hidden states — `b` sequences
+    /// of `s` positions each, causally masked within each sequence.
+    pub(super) fn block_fwd(
         &self,
         blk: &BlockWeights,
         h: &Tensor,
         rope: &(Vec<f32>, Vec<f32>),
+        b: usize,
+        s: usize,
     ) -> Tensor {
         let cfg = &self.config;
-        let (bs, _d) = h.dims2();
-        let b = cfg.batch;
-        let s = bs / b;
+        debug_assert_eq!(h.dims2().0, b * s);
         let (nh, nkv, hd) = (cfg.n_heads, cfg.n_kv_heads, cfg.head_dim());
 
         let x = rmsnorm(h, &blk.ln1);
@@ -220,12 +255,12 @@ impl SparseLm {
 }
 
 #[inline]
-fn silu(x: f32) -> f32 {
+pub(super) fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
 /// RMSNorm over the rows of a `(rows, d)` matrix.
-fn rmsnorm(x: &Tensor, gain: &[f32]) -> Tensor {
+pub(super) fn rmsnorm(x: &Tensor, gain: &[f32]) -> Tensor {
     let (rows, d) = x.dims2();
     debug_assert_eq!(gain.len(), d);
     let mut out = vec![0.0f32; rows * d];
@@ -242,38 +277,59 @@ fn rmsnorm(x: &Tensor, gain: &[f32]) -> Tensor {
 }
 
 /// `(cos, sin)` tables, `(s, hd/2)` row-major — `model.py::rope_tables`.
-fn rope_tables(s: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+pub(super) fn rope_tables(s: usize, hd: usize, theta: f64) -> (Vec<f32>, Vec<f32>) {
+    rope_tables_range(0, s, hd, theta)
+}
+
+/// RoPE tables for absolute positions `start .. start + count` — row `i`
+/// holds position `start + i`, with values identical to the same row of
+/// a from-zero table (the incremental decode path depends on that).
+pub(super) fn rope_tables_range(
+    start: usize,
+    count: usize,
+    hd: usize,
+    theta: f64,
+) -> (Vec<f32>, Vec<f32>) {
     let half = hd / 2;
-    let mut cos = vec![0.0f32; s * half];
-    let mut sin = vec![0.0f32; s * half];
+    let mut cos = vec![0.0f32; count * half];
+    let mut sin = vec![0.0f32; count * half];
     for t in 0..half {
         let freq = theta.powf(-((2 * t) as f64) / hd as f64);
-        for p in 0..s {
-            let ang = p as f64 * freq;
-            cos[p * half + t] = ang.cos() as f32;
-            sin[p * half + t] = ang.sin() as f32;
+        for i in 0..count {
+            let ang = (start + i) as f64 * freq;
+            cos[i * half + t] = ang.cos() as f32;
+            sin[i * half + t] = ang.sin() as f32;
         }
     }
     (cos, sin)
 }
 
+/// Rotate (even, odd) pairs of every head of one activation row in
+/// place, given the single position's `(hd/2,)` cos/sin rows — the one
+/// copy of the rotation convention; [`apply_rope`] (full-sequence) and
+/// the incremental decode path (`model/decode.rs`) both call it.
+pub(super) fn rotate_heads(row: &mut [f32], nh: usize, hd: usize, cos: &[f32], sin: &[f32]) {
+    let half = hd / 2;
+    for hh in 0..nh {
+        let head = &mut row[hh * hd..(hh + 1) * hd];
+        for j in 0..half {
+            let (x1, x2) = (head[2 * j], head[2 * j + 1]);
+            let (c, sn) = (cos[j], sin[j]);
+            head[2 * j] = x1 * c - x2 * sn;
+            head[2 * j + 1] = x1 * sn + x2 * c;
+        }
+    }
+}
+
 /// Rotate (even, odd) pairs of every head in place — `model.py::apply_rope`.
-fn apply_rope(t: &mut Tensor, b: usize, s: usize, nh: usize, hd: usize, cos: &[f32], sin: &[f32]) {
+pub(super) fn apply_rope(t: &mut Tensor, b: usize, s: usize, nh: usize, hd: usize, cos: &[f32], sin: &[f32]) {
     let d = nh * hd;
     let half = hd / 2;
     let data = t.data_mut();
     for bi in 0..b {
         for p in 0..s {
             let row = &mut data[(bi * s + p) * d..(bi * s + p + 1) * d];
-            for hh in 0..nh {
-                let head = &mut row[hh * hd..(hh + 1) * hd];
-                for j in 0..half {
-                    let (x1, x2) = (head[2 * j], head[2 * j + 1]);
-                    let (c, sn) = (cos[p * half + j], sin[p * half + j]);
-                    head[2 * j] = x1 * c - x2 * sn;
-                    head[2 * j + 1] = x1 * sn + x2 * c;
-                }
-            }
+            rotate_heads(row, nh, hd, &cos[p * half..(p + 1) * half], &sin[p * half..(p + 1) * half]);
         }
     }
 }

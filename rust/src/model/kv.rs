@@ -1,0 +1,184 @@
+//! KV cache for incremental decoding — per-block K/V rings.
+//!
+//! Autoregressive generation recomputes nothing: each step projects one
+//! token's q/k/v, appends the new K/V rows here, and attends over the
+//! cached positions. The cache is **GQA-aware**: it stores
+//! `n_kv_heads * head_dim` floats per position (the grouped K/V heads),
+//! not the full query width — query head `h` reads cached head
+//! `h / (n_heads / n_kv_heads)`, exactly like the full-sequence forward.
+//!
+//! Storage is a ring per transformer block: position `p` lives in slot
+//! `p % capacity`, so a sequence can in principle run past `capacity`
+//! with sliding-window attention (the oldest positions fall out of the
+//! attended window). The serving path never relies on that — the
+//! generation scheduler caps `prompt + max_tokens` at the capacity so
+//! incremental logits stay step-for-step consistent with the
+//! full-sequence forward (asserted by `tests/generate_parity.rs`).
+
+use super::config::ModelConfig;
+
+/// K/V rings for one sequence across all transformer blocks.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    /// positions the ring can hold before the window starts sliding
+    capacity: usize,
+    /// floats per cached position: `n_kv_heads * head_dim`
+    kv_dim: usize,
+    /// absolute positions appended so far (RoPE phase of the next token)
+    len: usize,
+    /// per block: `capacity * kv_dim` keys, ring-indexed by position
+    k: Vec<Vec<f32>>,
+    /// per block: `capacity * kv_dim` values, same layout
+    v: Vec<Vec<f32>>,
+}
+
+impl KvCache {
+    /// Cache sized to the model's trained context window (`cfg.seq`).
+    pub fn new(cfg: &ModelConfig) -> KvCache {
+        Self::with_capacity(cfg, cfg.seq)
+    }
+
+    /// Cache with an explicit position capacity.
+    pub fn with_capacity(cfg: &ModelConfig, capacity: usize) -> KvCache {
+        assert!(capacity > 0, "KvCache needs at least one slot");
+        let kv_dim = cfg.kv_dim();
+        KvCache {
+            capacity,
+            kv_dim,
+            len: 0,
+            k: (0..cfg.n_layers).map(|_| vec![0.0; capacity * kv_dim]).collect(),
+            v: (0..cfg.n_layers).map(|_| vec![0.0; capacity * kv_dim]).collect(),
+        }
+    }
+
+    /// Absolute positions appended so far — also the RoPE position of
+    /// the *next* token.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Floats per cached position (`n_kv_heads * head_dim`).
+    pub fn kv_dim(&self) -> usize {
+        self.kv_dim
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.k.len()
+    }
+
+    /// First absolute position still inside the attended window.
+    pub fn window_start(&self) -> usize {
+        self.len.saturating_sub(self.capacity)
+    }
+
+    /// Reset to empty without releasing storage (slot reuse in the
+    /// continuous-batching scheduler).
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Write the K/V rows of absolute position `pos` for block `blk`.
+    /// Rows are written for every block at the same `pos` before
+    /// [`Self::advance`] commits the position.
+    pub fn put(&mut self, blk: usize, pos: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), self.kv_dim);
+        debug_assert_eq!(v_row.len(), self.kv_dim);
+        let slot = (pos % self.capacity) * self.kv_dim;
+        self.k[blk][slot..slot + self.kv_dim].copy_from_slice(k_row);
+        self.v[blk][slot..slot + self.kv_dim].copy_from_slice(v_row);
+    }
+
+    /// Cached K row of absolute position `pos` for block `blk`.
+    #[inline]
+    pub fn k_row(&self, blk: usize, pos: usize) -> &[f32] {
+        let slot = (pos % self.capacity) * self.kv_dim;
+        &self.k[blk][slot..slot + self.kv_dim]
+    }
+
+    /// Cached V row of absolute position `pos` for block `blk`.
+    #[inline]
+    pub fn v_row(&self, blk: usize, pos: usize) -> &[f32] {
+        let slot = (pos % self.capacity) * self.kv_dim;
+        &self.v[blk][slot..slot + self.kv_dim]
+    }
+
+    /// Commit `n` freshly written positions (call once per forward step,
+    /// after every block has [`Self::put`] its rows).
+    pub fn advance(&mut self, n: usize) {
+        self.len += n;
+    }
+
+    /// Bytes of K/V state this sequence holds resident (f32 host cache).
+    pub fn resident_bytes(&self) -> usize {
+        2 * self.n_blocks() * self.capacity * self.kv_dim * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        let mut c = ModelConfig::preset("gqa").unwrap();
+        c.seq = 8;
+        c
+    }
+
+    #[test]
+    fn put_get_roundtrip_and_advance() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        assert_eq!(kv.capacity(), 8);
+        assert_eq!(kv.kv_dim(), c.kv_dim());
+        assert!(kv.is_empty());
+        let krow: Vec<f32> = (0..kv.kv_dim()).map(|i| i as f32).collect();
+        let vrow: Vec<f32> = (0..kv.kv_dim()).map(|i| -(i as f32)).collect();
+        for blk in 0..kv.n_blocks() {
+            kv.put(blk, 0, &krow, &vrow);
+        }
+        kv.advance(1);
+        assert_eq!(kv.len(), 1);
+        assert_eq!(kv.k_row(1, 0), &krow[..]);
+        assert_eq!(kv.v_row(1, 0), &vrow[..]);
+    }
+
+    #[test]
+    fn ring_wraps_and_window_slides() {
+        let c = cfg();
+        let mut kv = KvCache::with_capacity(&c, 4);
+        let dim = kv.kv_dim();
+        for pos in 0..6 {
+            let row = vec![pos as f32; dim];
+            kv.put(0, pos, &row, &row);
+            kv.advance(1);
+        }
+        assert_eq!(kv.len(), 6);
+        // window covers positions 2..6; slot of pos 5 is 5 % 4 = 1
+        assert_eq!(kv.window_start(), 2);
+        assert_eq!(kv.k_row(0, 5)[0], 5.0);
+        assert_eq!(kv.k_row(0, 4)[0], 4.0);
+        // pos 0/1 were overwritten by 4/5 (same slots)
+        assert_eq!(kv.k_row(0, 0)[0], 4.0);
+    }
+
+    #[test]
+    fn clear_resets_without_realloc() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c);
+        let row = vec![1.0; kv.kv_dim()];
+        kv.put(0, 0, &row, &row);
+        kv.advance(1);
+        kv.clear();
+        assert!(kv.is_empty());
+        assert_eq!(kv.window_start(), 0);
+        assert!(kv.resident_bytes() > 0);
+    }
+}

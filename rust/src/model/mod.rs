@@ -8,13 +8,22 @@
 //! without Python — **and** [`SparseLm`], a host-resident forward whose
 //! linear layers run through [`crate::sparse::Kernel`], so packed N:M
 //! weights are served decode-free (see `docs/ARCHITECTURE.md`).
+//!
+//! The forward has two consumers: the batch scorer
+//! ([`SparseLm::lm_nll`], fixed `(B, S+1)` windows) and the KV-cached
+//! incremental path ([`SparseLm::prefill`] / [`SparseLm::decode_step`]
+//! over a [`KvCache`]) that powers autoregressive generation and the
+//! continuous-batching server.
 
 mod checkpoint;
 mod config;
+mod decode;
 mod forward;
+mod kv;
 mod params;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint};
 pub use config::ModelConfig;
 pub use forward::{BlockWeights, SparseLm, RMS_EPS};
+pub use kv::KvCache;
 pub use params::{ParamSet, BLOCK_LINEAR, BLOCK_PARAMS};

@@ -28,7 +28,9 @@ impl ParamSet {
         let tensors = names
             .iter()
             .map(|n| {
-                let shape = config.param_shape(n);
+                let shape = config
+                    .param_shape(n)
+                    .expect("param_names() yields only known params");
                 if shape.len() == 1 {
                     Tensor::ones(shape)
                 } else {
@@ -50,7 +52,9 @@ impl ParamSet {
     pub fn init_outliers(config: &ModelConfig, rng: &mut Rng) -> ParamSet {
         let mut ps = ParamSet::init(config, rng);
         for (name, t) in ps.names.clone().iter().zip(ps.tensors.iter_mut()) {
-            let shape = config.param_shape(name);
+            let shape = config
+                .param_shape(name)
+                .expect("param_names() yields only known params");
             if shape.len() == 2 && name != "tok_emb" {
                 let std = (shape[1] as f32).powf(-0.5);
                 *t = Tensor::randn_outliers(shape, std, 0.005, 8.0, rng);

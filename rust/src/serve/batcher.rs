@@ -164,8 +164,23 @@ impl Batcher {
     /// Drain loop: repeatedly collect a batch and score it with
     /// `score_batch(rows) -> per-row (sum_nll, tokens)`. Rows are the
     /// requests' token vectors in arrival order; the callback sees at
-    /// most `max_batch` rows. Returns when closed and drained.
+    /// most `max_batch` rows. Returns when closed and drained; on a
+    /// scorer error the batcher is closed and still-queued requests
+    /// are dropped so their clients disconnect instead of hanging.
     pub fn run(
+        &self,
+        score_batch: impl FnMut(&[ScoreRequest]) -> crate::Result<Vec<(f64, usize)>>,
+    ) -> crate::Result<()> {
+        let result = self.run_inner(score_batch);
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        st.closed = true;
+        st.q.clear();
+        cv.notify_all();
+        result
+    }
+
+    fn run_inner(
         &self,
         mut score_batch: impl FnMut(&[ScoreRequest]) -> crate::Result<Vec<(f64, usize)>>,
     ) -> crate::Result<()> {

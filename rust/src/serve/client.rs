@@ -76,6 +76,47 @@ impl ServeClient {
         }
     }
 
+    /// Autoregressive continuation of `prompt` (greedy when
+    /// `temperature == 0`, sampling seed 0 otherwise). Returns
+    /// `(text, generated_tokens)`.
+    pub fn generate(
+        &mut self,
+        prompt: &str,
+        max_tokens: usize,
+        temperature: f64,
+    ) -> crate::Result<(String, usize)> {
+        self.generate_seeded(prompt, max_tokens, temperature, 0)
+    }
+
+    /// [`Self::generate`] with an explicit sampling seed — distinct
+    /// seeds give independent sample paths at `temperature > 0`. Seeds
+    /// must stay below 2^53: the json wire format carries numbers as
+    /// f64, and larger integers would silently alias to a different
+    /// sample path.
+    pub fn generate_seeded(
+        &mut self,
+        prompt: &str,
+        max_tokens: usize,
+        temperature: f64,
+        seed: u64,
+    ) -> crate::Result<(String, usize)> {
+        anyhow::ensure!(
+            seed < (1 << 53),
+            "seed {seed} >= 2^53 cannot survive the json f64 transport"
+        );
+        let req = Request::Generate {
+            prompt: prompt.into(),
+            max_tokens,
+            temperature,
+            seed,
+        };
+        match self.call(&req)? {
+            Response::Generate { text, tokens, .. } => Ok((text, tokens)),
+            Response::Error(e) => anyhow::bail!("server error: {e}"),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
+    }
+
     /// Raw stats object.
     pub fn stats(&mut self) -> crate::Result<crate::util::json::Json> {
         match self.call(&Request::Stats)? {

@@ -1,0 +1,859 @@
+//! Continuous-batching generation scheduler.
+//!
+//! [`super::Batcher`] coalesces *whole requests* and flushes a batch —
+//! right for one-shot scoring, wrong for generation, where a 4-token
+//! reply would be held hostage by a 256-token batch-mate. This module
+//! generalizes the batcher to **per-step membership**: sequences join
+//! the decode batch the step after they arrive and leave the step they
+//! finish, so the weight-streaming cost of each
+//! [`crate::model::SparseLm::decode_step`] is always shared by every
+//! in-flight sequence (the packed-operand amortization the decode
+//! roofline in [`crate::hwsim`] prices), and short requests never wait
+//! on long ones.
+//!
+//! The scheduler mirrors the [`super::Batcher`] surface — `submit` /
+//! `close` / `stats` / `run` — and stays model-agnostic behind
+//! [`DecodeEngine`], so the queueing logic is fully unit- and
+//! property-testable without a model. [`SpmmEngine`] is the production
+//! engine: per-slot [`KvCache`]s over an [`Arc<SparseLm>`], prefill
+//! on admission, shared decode steps after.
+//!
+//! Fairness: admission is strict FIFO and membership is bounded only by
+//! [`DecodeEngine::max_seqs`], so no request starves (asserted by the
+//! mixed-load property test). Per-step fill levels are recorded in
+//! [`GenStats::batch_fill`], the histogram `{"op":"stats"}` exposes.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::eval::Sampler;
+use crate::model::{KvCache, SparseLm};
+
+/// One generation request: a tokenized prompt plus sampling policy.
+#[derive(Clone, Debug)]
+pub struct GenRequest {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    /// tokens to generate (capped so `prompt + generated` fits the
+    /// engine's position budget; prompts longer than the budget keep
+    /// their tail, like `pack_windows`)
+    pub max_tokens: usize,
+    /// `0.0` = greedy argmax; `> 0` = seeded softmax sampling
+    pub temperature: f32,
+    /// per-sequence sampling seed (reproducible regardless of
+    /// batch-mates)
+    pub seed: u64,
+    /// token id that terminates generation without being emitted
+    pub stop: Option<i32>,
+}
+
+/// Per-request result.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GenResponse {
+    pub id: u64,
+    /// generated token ids (stop token, if hit, is not included)
+    pub tokens: Vec<i32>,
+    /// prompt length actually prefilled (after tail-truncation)
+    pub prompt_tokens: usize,
+    /// decode steps this sequence participated in
+    pub steps: u64,
+    /// wall time from submit to reply
+    pub latency: Duration,
+    /// mean decode-batch fill over this sequence's steps (0 when the
+    /// first sampled token already finished it)
+    pub mean_batch_fill: f64,
+}
+
+/// Aggregate scheduler metrics (monotone; read with
+/// [`GenScheduler::stats`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct GenStats {
+    /// requests accepted by `submit`
+    pub requests: u64,
+    /// sequences admitted to the decode batch (prompt prefilled)
+    pub started: u64,
+    /// replies delivered
+    pub completed: u64,
+    /// decode steps executed
+    pub decode_steps: u64,
+    /// tokens delivered in replies (admission-time first tokens
+    /// included, stop tokens excluded)
+    pub tokens_generated: u64,
+    /// `batch_fill[f]` = decode steps that ran with `f` sequences in
+    /// the batch (index 0 unused) — the continuous-batching fill
+    /// histogram surfaced by `{"op":"stats"}`
+    pub batch_fill: Vec<u64>,
+}
+
+impl GenStats {
+    /// Mean sequences per decode step.
+    pub fn mean_fill(&self) -> f64 {
+        let steps: u64 = self.batch_fill.iter().sum();
+        if steps == 0 {
+            return 0.0;
+        }
+        let rows: u64 = self
+            .batch_fill
+            .iter()
+            .enumerate()
+            .map(|(f, &c)| f as u64 * c)
+            .sum();
+        rows as f64 / steps as f64
+    }
+}
+
+/// Model-side contract of the scheduler: start sequences in slots,
+/// advance all active slots one token per step. Implementations own the
+/// per-slot KV state; the scheduler owns queueing, sampling and
+/// lifecycle.
+pub trait DecodeEngine: Send {
+    /// Sequence slots available — the decode batch's maximum fill.
+    fn max_seqs(&self) -> usize;
+
+    /// Maximum positions (prompt + generated) a sequence may occupy.
+    fn max_positions(&self) -> usize;
+
+    /// Prefill `prompt` into `slot` and return the logits of its last
+    /// position. `slot < max_seqs()`, prompt is non-empty and fits
+    /// `max_positions()`.
+    fn start(&mut self, slot: usize, prompt: &[i32]) -> crate::Result<Vec<f32>>;
+
+    /// Advance every listed slot by one token (`(slot, token)` pairs in
+    /// strictly ascending slot order) and return next-token logits per
+    /// entry, same order.
+    fn step(&mut self, toks: &[(usize, i32)]) -> crate::Result<Vec<Vec<f32>>>;
+
+    /// Sequence in `slot` finished; release its state for reuse.
+    fn finish(&mut self, slot: usize);
+}
+
+impl DecodeEngine for Box<dyn DecodeEngine> {
+    fn max_seqs(&self) -> usize {
+        (**self).max_seqs()
+    }
+    fn max_positions(&self) -> usize {
+        (**self).max_positions()
+    }
+    fn start(&mut self, slot: usize, prompt: &[i32]) -> crate::Result<Vec<f32>> {
+        (**self).start(slot, prompt)
+    }
+    fn step(&mut self, toks: &[(usize, i32)]) -> crate::Result<Vec<Vec<f32>>> {
+        (**self).step(toks)
+    }
+    fn finish(&mut self, slot: usize) {
+        (**self).finish(slot)
+    }
+}
+
+struct PendingGen {
+    req: GenRequest,
+    enqueued: Instant,
+    reply: Sender<GenResponse>,
+}
+
+#[derive(Default)]
+struct GenQueue {
+    q: VecDeque<PendingGen>,
+    closed: bool,
+}
+
+enum Take {
+    Got(Box<PendingGen>),
+    Empty,
+    Closed,
+}
+
+/// An in-flight sequence inside the decode batch.
+struct ActiveSeq {
+    slot: usize,
+    pending: PendingGen,
+    sampler: Sampler,
+    out: Vec<i32>,
+    prompt_tokens: usize,
+    /// generation budget after position capping
+    allowed: usize,
+    next_tok: i32,
+    steps: u64,
+    fill_sum: u64,
+}
+
+/// The queue half of the continuous batcher: clone-able submitter + a
+/// drain loop that owns the decode engine.
+pub struct GenScheduler {
+    state: Arc<(Mutex<GenQueue>, Condvar)>,
+    stats: Arc<Mutex<GenStats>>,
+}
+
+impl Default for GenScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl GenScheduler {
+    pub fn new() -> GenScheduler {
+        GenScheduler {
+            state: Arc::new((Mutex::new(GenQueue::default()), Condvar::new())),
+            stats: Arc::new(Mutex::new(GenStats::default())),
+        }
+    }
+
+    /// Enqueue a request; the returned receiver yields exactly one
+    /// response (or disconnects if the scheduler shuts down first, or
+    /// the request is unservable — empty prompt or zero budget).
+    pub fn submit(&self, req: GenRequest) -> Receiver<GenResponse> {
+        let (tx, rx) = channel();
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        if !st.closed {
+            st.q.push_back(PendingGen {
+                req,
+                enqueued: Instant::now(),
+                reply: tx,
+            });
+            self.stats.lock().unwrap().requests += 1;
+            cv.notify_all();
+        } // closed: drop tx → receiver disconnects
+        rx
+    }
+
+    /// Stop accepting work; `run` returns once queued and in-flight
+    /// sequences have drained.
+    pub fn close(&self) {
+        let (lock, cv) = &*self.state;
+        lock.lock().unwrap().closed = true;
+        cv.notify_all();
+    }
+
+    pub fn stats(&self) -> GenStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.state.0.lock().unwrap().q.len()
+    }
+
+    fn take_queued(&self, block: bool) -> Take {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        loop {
+            if let Some(p) = st.q.pop_front() {
+                return Take::Got(Box::new(p));
+            }
+            if st.closed {
+                return Take::Closed;
+            }
+            if !block {
+                return Take::Empty;
+            }
+            st = cv.wait(st).unwrap();
+        }
+    }
+
+    /// Prefill + first-token sampling for a newly admitted request.
+    /// Returns `None` when the sequence finished at admission (first
+    /// token hit the stop id or the budget was 1) or was unservable
+    /// (empty prompt — the dropped reply channel signals the error).
+    fn admit(
+        &self,
+        p: PendingGen,
+        slot: usize,
+        engine: &mut impl DecodeEngine,
+    ) -> crate::Result<Option<ActiveSeq>> {
+        let max_pos = engine.max_positions().max(2);
+        if p.req.prompt.is_empty() {
+            return Ok(None); // drop reply: protocol layer validates first
+        }
+        // keep the prompt tail (pack_windows convention) so at least one
+        // token can always be generated
+        let cut = p.req.prompt.len().saturating_sub(max_pos - 1);
+        let prompt = p.req.prompt[cut..].to_vec();
+        let allowed = p.req.max_tokens.min(max_pos - prompt.len());
+        if allowed == 0 {
+            return Ok(None);
+        }
+        let logits = engine.start(slot, &prompt)?;
+        let mut sampler = Sampler::new(p.req.temperature, p.req.seed);
+        let tok = sampler.next(&logits) as i32;
+        let mut a = ActiveSeq {
+            slot,
+            pending: p,
+            sampler,
+            out: Vec::with_capacity(allowed),
+            prompt_tokens: prompt.len(),
+            allowed,
+            next_tok: tok,
+            steps: 0,
+            fill_sum: 0,
+        };
+        let stopped = a.pending.req.stop == Some(tok);
+        {
+            let mut s = self.stats.lock().unwrap();
+            s.started += 1;
+            if !stopped {
+                s.tokens_generated += 1;
+            }
+        }
+        if !stopped {
+            a.out.push(tok);
+        }
+        if stopped || a.out.len() >= a.allowed {
+            self.retire(a, engine);
+            return Ok(None);
+        }
+        Ok(Some(a))
+    }
+
+    /// Release the slot and deliver the reply.
+    fn retire(&self, a: ActiveSeq, engine: &mut impl DecodeEngine) {
+        engine.finish(a.slot);
+        let mean_fill = if a.steps > 0 {
+            a.fill_sum as f64 / a.steps as f64
+        } else {
+            0.0
+        };
+        self.stats.lock().unwrap().completed += 1;
+        // receiver may have hung up (client timeout) — fine
+        let _ = a.pending.reply.send(GenResponse {
+            id: a.pending.req.id,
+            tokens: a.out,
+            prompt_tokens: a.prompt_tokens,
+            steps: a.steps,
+            latency: a.pending.enqueued.elapsed(),
+            mean_batch_fill: mean_fill,
+        });
+    }
+
+    /// Drain loop: admit queued requests into free slots every step,
+    /// decode all in-flight sequences together, retire finished ones.
+    /// Returns once closed **and** drained. Engine errors are fatal to
+    /// the loop (the scheduler pre-validates requests, so an engine
+    /// error means the model itself is broken) — on *any* exit the
+    /// scheduler is closed and still-queued requests are dropped, so
+    /// their clients see a disconnect instead of hanging on a queue
+    /// nobody drains.
+    pub fn run(&self, engine: impl DecodeEngine) -> crate::Result<()> {
+        let result = self.run_inner(engine);
+        // seal the queue whether we drained cleanly or died on an
+        // engine error: dropping the pending senders disconnects their
+        // receivers (in-flight sequences were dropped by run_inner)
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        st.closed = true;
+        st.q.clear();
+        cv.notify_all();
+        result
+    }
+
+    fn run_inner(&self, mut engine: impl DecodeEngine) -> crate::Result<()> {
+        let max_seqs = engine.max_seqs().max(1);
+        let mut active: Vec<ActiveSeq> = Vec::new();
+        // free slots, descending so pop() hands out the lowest first
+        let mut free: Vec<usize> = (0..max_seqs).rev().collect();
+        loop {
+            // ---- admission: fill free slots from the FIFO queue ------
+            while active.len() < max_seqs {
+                match self.take_queued(active.is_empty()) {
+                    Take::Got(p) => {
+                        let slot = free.pop().expect("free slot when active < max");
+                        match self.admit(*p, slot, &mut engine)? {
+                            Some(a) => active.push(a),
+                            None => free.push(slot),
+                        }
+                    }
+                    Take::Closed => {
+                        if active.is_empty() {
+                            return Ok(());
+                        }
+                        break;
+                    }
+                    Take::Empty => break,
+                }
+            }
+            if active.is_empty() {
+                continue;
+            }
+            // ---- one shared decode step over the current membership --
+            active.sort_by_key(|a| a.slot);
+            let toks: Vec<(usize, i32)> =
+                active.iter().map(|a| (a.slot, a.next_tok)).collect();
+            let rows = engine.step(&toks)?;
+            debug_assert_eq!(rows.len(), active.len());
+            let fill = active.len();
+            let mut done: Vec<usize> = Vec::new();
+            let mut emitted = 0u64;
+            for (i, a) in active.iter_mut().enumerate() {
+                a.steps += 1;
+                a.fill_sum += fill as u64;
+                let tok = a.sampler.next(&rows[i]) as i32;
+                let stopped = a.pending.req.stop == Some(tok);
+                if !stopped {
+                    a.out.push(tok);
+                    a.next_tok = tok;
+                    emitted += 1;
+                }
+                if stopped || a.out.len() >= a.allowed {
+                    done.push(i);
+                }
+            }
+            // one stats acquisition per step, not one per token — this
+            // mutex is contended by every connection's `stats` op
+            {
+                let mut s = self.stats.lock().unwrap();
+                s.decode_steps += 1;
+                if s.batch_fill.len() <= fill {
+                    s.batch_fill.resize(fill + 1, 0);
+                }
+                s.batch_fill[fill] += 1;
+                s.tokens_generated += emitted;
+            }
+            for &i in done.iter().rev() {
+                let a = active.remove(i);
+                free.push(a.slot);
+                self.retire(a, &mut engine);
+            }
+            free.sort_unstable_by(|x, y| y.cmp(x));
+        }
+    }
+}
+
+// ------------------------------------------------------------ SpmmEngine
+
+/// The production [`DecodeEngine`]: per-slot [`KvCache`] rings over a
+/// shared packed model. Prefill and decode run the same
+/// [`crate::sparse::Kernel`] linears the scorer uses — weights stay
+/// packed end-to-end, and a single-sequence step takes the
+/// [`crate::sparse::spmm_vec`] GEMV fast path.
+pub struct SpmmEngine {
+    lm: Arc<SparseLm>,
+    slots: Vec<Option<KvCache>>,
+}
+
+impl SpmmEngine {
+    /// `max_seqs` is the decode batch's capacity — unlike the scorer's
+    /// fixed PJRT batch dim, the host forward is shape-generic, so this
+    /// is a scheduling knob, not a model constant.
+    pub fn new(lm: Arc<SparseLm>, max_seqs: usize) -> SpmmEngine {
+        assert!(max_seqs > 0);
+        SpmmEngine {
+            lm,
+            slots: (0..max_seqs).map(|_| None).collect(),
+        }
+    }
+}
+
+impl DecodeEngine for SpmmEngine {
+    fn max_seqs(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn max_positions(&self) -> usize {
+        self.lm.config.seq
+    }
+
+    fn start(&mut self, slot: usize, prompt: &[i32]) -> crate::Result<Vec<f32>> {
+        let mut cache = self.slots[slot]
+            .take()
+            .unwrap_or_else(|| KvCache::new(&self.lm.config));
+        cache.clear();
+        // last-position head only: admission runs on the decode thread
+        // between steps, and the tied-head GEMM over every prompt row
+        // would stall the whole in-flight batch
+        let last = self.lm.prefill_last(prompt, &mut cache)?;
+        self.slots[slot] = Some(cache);
+        Ok(last)
+    }
+
+    fn step(&mut self, toks: &[(usize, i32)]) -> crate::Result<Vec<Vec<f32>>> {
+        let ids: Vec<i32> = toks.iter().map(|&(_, t)| t).collect();
+        // split the slot vec so each active cache is borrowed mutably
+        // exactly once (requires ascending slots — the scheduler's order)
+        let mut refs: Vec<&mut KvCache> = Vec::with_capacity(toks.len());
+        let mut rest: &mut [Option<KvCache>] = &mut self.slots;
+        let mut base = 0usize;
+        for &(slot, _) in toks {
+            anyhow::ensure!(slot >= base, "step slots must be strictly ascending");
+            let (head, tail) = rest.split_at_mut(slot - base + 1);
+            refs.push(
+                head[slot - base]
+                    .as_mut()
+                    .ok_or_else(|| anyhow::anyhow!("slot {slot} has no started sequence"))?,
+            );
+            rest = tail;
+            base = slot + 1;
+        }
+        let logits = self.lm.decode_step(&ids, &mut refs)?;
+        Ok((0..ids.len()).map(|i| logits.row(i).to_vec()).collect())
+    }
+
+    fn finish(&mut self, slot: usize) {
+        if let Some(c) = self.slots[slot].as_mut() {
+            c.clear();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// Deterministic fake: next token is always `(prev + 1) % VOCAB`.
+    struct FakeEngine {
+        max_seqs: usize,
+        max_pos: usize,
+        last: Vec<Option<i32>>,
+    }
+
+    const VOCAB: usize = 16;
+
+    impl FakeEngine {
+        fn new(max_seqs: usize, max_pos: usize) -> FakeEngine {
+            FakeEngine {
+                max_seqs,
+                max_pos,
+                last: vec![None; max_seqs],
+            }
+        }
+
+        fn logits_for(tok: i32) -> Vec<f32> {
+            let mut l = vec![0.0f32; VOCAB];
+            l[((tok as usize) + 1) % VOCAB] = 10.0;
+            l
+        }
+    }
+
+    impl DecodeEngine for FakeEngine {
+        fn max_seqs(&self) -> usize {
+            self.max_seqs
+        }
+        fn max_positions(&self) -> usize {
+            self.max_pos
+        }
+        fn start(&mut self, slot: usize, prompt: &[i32]) -> crate::Result<Vec<f32>> {
+            self.last[slot] = Some(*prompt.last().unwrap());
+            Ok(Self::logits_for(*prompt.last().unwrap()))
+        }
+        fn step(&mut self, toks: &[(usize, i32)]) -> crate::Result<Vec<Vec<f32>>> {
+            let mut prev: Option<usize> = None;
+            for &(slot, _) in toks {
+                if let Some(p) = prev {
+                    assert!(slot > p, "slots not ascending: {toks:?}");
+                }
+                prev = Some(slot);
+            }
+            Ok(toks
+                .iter()
+                .map(|&(slot, t)| {
+                    self.last[slot] = Some(t);
+                    Self::logits_for(t)
+                })
+                .collect())
+        }
+        fn finish(&mut self, slot: usize) {
+            self.last[slot] = None;
+        }
+    }
+
+    fn req(id: u64, start_tok: i32, max_tokens: usize) -> GenRequest {
+        GenRequest {
+            id,
+            prompt: vec![0, start_tok],
+            max_tokens,
+            temperature: 0.0,
+            seed: id,
+            stop: None,
+        }
+    }
+
+    fn with_running<T>(
+        max_seqs: usize,
+        body: impl FnOnce(&GenScheduler) -> T,
+    ) -> (T, GenStats) {
+        let s = Arc::new(GenScheduler::new());
+        let s2 = Arc::clone(&s);
+        let h = thread::spawn(move || s2.run(FakeEngine::new(max_seqs, 64)).unwrap());
+        let out = body(&s);
+        s.close();
+        h.join().unwrap();
+        (out, s.stats())
+    }
+
+    #[test]
+    fn greedy_generation_counts_up() {
+        let ((), stats) = with_running(2, |s| {
+            let rx = s.submit(req(1, 3, 5));
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.id, 1);
+            // fake model: next = prev + 1 — prompt ends at 3
+            assert_eq!(r.tokens, vec![4, 5, 6, 7, 8]);
+            assert_eq!(r.prompt_tokens, 2);
+            assert_eq!(r.steps, 4, "first token comes from prefill");
+            assert!(rx.recv().is_err(), "exactly one reply");
+        });
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.tokens_generated, 5);
+        assert_eq!(stats.decode_steps, 4);
+    }
+
+    #[test]
+    fn stop_token_ends_early_and_is_not_emitted() {
+        let ((), stats) = with_running(1, |s| {
+            let mut r = req(1, 3, 10);
+            r.stop = Some(6);
+            let got = s
+                .submit(r)
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap();
+            assert_eq!(got.tokens, vec![4, 5]);
+        });
+        assert_eq!(stats.tokens_generated, 2);
+    }
+
+    #[test]
+    fn sequences_join_and_leave_mid_flight() {
+        // submit everything *before* the drain loop starts so the
+        // admission/fill schedule is deterministic: 4 slots, 6 requests
+        // with different lengths — membership must change step to step
+        let s = Arc::new(GenScheduler::new());
+        let rxs: Vec<_> = (0..6u64)
+            .map(|i| s.submit(req(i, i as i32, 3 + 4 * (i as usize % 3))))
+            .collect();
+        let s2 = Arc::clone(&s);
+        let h = thread::spawn(move || s2.run(FakeEngine::new(4, 64)).unwrap());
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.tokens.len(), 3 + 4 * (i % 3));
+            // greedy chain continues from the prompt tail
+            assert_eq!(r.tokens[0], (i as i32 + 1) % VOCAB as i32);
+        }
+        s.close();
+        h.join().unwrap();
+        let stats = s.stats();
+        assert_eq!(stats.completed, 6);
+        // fill never exceeded the slot count
+        assert!(stats.batch_fill.len() <= 5, "{:?}", stats.batch_fill);
+        // histogram ↔ replies reconciliation
+        let step_rows: u64 = stats
+            .batch_fill
+            .iter()
+            .enumerate()
+            .map(|(f, &c)| f as u64 * c)
+            .sum();
+        // every generated token beyond each request's first came from a
+        // decode step row
+        assert_eq!(step_rows, stats.tokens_generated - stats.started);
+        assert!(stats.mean_fill() > 1.0, "no overlap: {:?}", stats.batch_fill);
+    }
+
+    #[test]
+    fn budget_caps_at_engine_positions() {
+        // max_pos 8, prompt 2 → at most 6 generated
+        let s = Arc::new(GenScheduler::new());
+        let s2 = Arc::clone(&s);
+        let h = thread::spawn(move || s2.run(FakeEngine::new(1, 8)).unwrap());
+        let r = s
+            .submit(req(1, 2, 100))
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(r.tokens.len(), 6);
+        // over-long prompt keeps its tail and still generates one token
+        let long = GenRequest {
+            id: 2,
+            prompt: (0..12).collect(),
+            max_tokens: 100,
+            temperature: 0.0,
+            seed: 0,
+            stop: None,
+        };
+        let r2 = s
+            .submit(long)
+            .recv_timeout(Duration::from_secs(5))
+            .unwrap();
+        assert_eq!(r2.prompt_tokens, 7);
+        assert_eq!(r2.tokens.len(), 1);
+        s.close();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn unservable_requests_disconnect_without_killing_the_loop() {
+        let ((), stats) = with_running(2, |s| {
+            let empty = GenRequest {
+                id: 1,
+                prompt: vec![],
+                max_tokens: 4,
+                temperature: 0.0,
+                seed: 0,
+                stop: None,
+            };
+            assert!(s.submit(empty).recv().is_err(), "empty prompt disconnects");
+            // the loop survives and serves the next request
+            let r = s
+                .submit(req(2, 1, 2))
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap();
+            assert_eq!(r.tokens, vec![2, 3]);
+        });
+        assert_eq!(stats.completed, 1);
+        assert_eq!(stats.requests, 2);
+    }
+
+    #[test]
+    fn submit_after_close_disconnects() {
+        let s = GenScheduler::new();
+        s.close();
+        assert!(s.submit(req(1, 1, 2)).recv().is_err());
+        // run() on a closed empty scheduler returns immediately
+        s.run(FakeEngine::new(1, 8)).unwrap();
+    }
+
+    #[test]
+    fn property_mixed_nll_and_generate_traffic_reconciles() {
+        // the satellite bar: concurrent scoring + generation through both
+        // schedulers — no request starves, and the stats counters
+        // (including the decode-step batch_fill histogram) reconcile
+        // exactly with the replies
+        use crate::serve::batcher::{Batcher, BatcherConfig, ScoreRequest};
+        use crate::util::propcheck::{check, Gen};
+        check("mixed nll+generate load conserves", 6, |g: &mut Gen| {
+            let n_nll = g.int(1, 25) as u64;
+            let n_gen = g.int(1, 15) as u64;
+            let max_seqs = g.int(1, 4);
+            let batcher = Arc::new(Batcher::new(BatcherConfig {
+                max_batch: g.int(1, 4),
+                max_wait: Duration::from_millis(g.int(0, 5) as u64),
+            }));
+            let sched = Arc::new(GenScheduler::new());
+            let b2 = Arc::clone(&batcher);
+            let bt = thread::spawn(move || {
+                b2.run(|reqs: &[ScoreRequest]| {
+                    Ok(reqs.iter().map(|r| (r.id as f64, r.scored_from)).collect())
+                })
+                .unwrap()
+            });
+            let s2 = Arc::clone(&sched);
+            let st = thread::spawn(move || s2.run(FakeEngine::new(max_seqs, 64)).unwrap());
+
+            let b3 = Arc::clone(&batcher);
+            let nll_client = thread::spawn(move || -> Result<u64, String> {
+                for i in 0..n_nll {
+                    b3.submit(ScoreRequest {
+                        id: i,
+                        tokens: vec![1; 4],
+                        scored_from: 3,
+                    })
+                    .recv_timeout(Duration::from_secs(10))
+                    .map_err(|e| format!("nll {i} starved: {e}"))?;
+                }
+                Ok(n_nll)
+            });
+            let s3 = Arc::clone(&sched);
+            let gen_client = thread::spawn(move || -> Result<(u64, u64), String> {
+                let (mut tokens, mut steps) = (0u64, 0u64);
+                for i in 0..n_gen {
+                    let len = 1 + (i as usize % 5);
+                    let r = s3
+                        .submit(GenRequest {
+                            id: i,
+                            prompt: vec![0, (i % 14) as i32],
+                            max_tokens: len,
+                            temperature: 0.0,
+                            seed: i,
+                            stop: None,
+                        })
+                        .recv_timeout(Duration::from_secs(10))
+                        .map_err(|e| format!("generate {i} starved: {e}"))?;
+                    if r.tokens.len() != len {
+                        return Err(format!(
+                            "gen {i}: {} tokens, want {len}",
+                            r.tokens.len()
+                        ));
+                    }
+                    tokens += r.tokens.len() as u64;
+                    steps += r.steps;
+                }
+                Ok((tokens, steps))
+            });
+            let nll_served = nll_client.join().unwrap()?;
+            let (gen_tokens, gen_steps) = gen_client.join().unwrap()?;
+            batcher.close();
+            sched.close();
+            bt.join().unwrap();
+            st.join().unwrap();
+
+            let bs = batcher.stats();
+            if bs.rows_scored != nll_served || bs.requests != nll_served {
+                return Err(format!("batcher stats {bs:?} vs {nll_served} replies"));
+            }
+            let gs = sched.stats();
+            if gs.completed != n_gen || gs.started != n_gen {
+                return Err(format!("gen stats {gs:?} vs {n_gen} replies"));
+            }
+            if gs.tokens_generated != gen_tokens {
+                return Err(format!(
+                    "tokens_generated {} vs {} tokens delivered",
+                    gs.tokens_generated, gen_tokens
+                ));
+            }
+            // histogram ↔ replies: every decode step is one histogram
+            // entry, every step-row is one reply's step
+            let hist_steps: u64 = gs.batch_fill.iter().sum();
+            if hist_steps != gs.decode_steps {
+                return Err(format!(
+                    "batch_fill sums to {hist_steps}, decode_steps {}",
+                    gs.decode_steps
+                ));
+            }
+            let hist_rows: u64 = gs
+                .batch_fill
+                .iter()
+                .enumerate()
+                .map(|(f, &c)| f as u64 * c)
+                .sum();
+            if hist_rows != gen_steps {
+                return Err(format!(
+                    "batch_fill rows {hist_rows} vs {gen_steps} per-reply steps"
+                ));
+            }
+            if gs.tokens_generated != gs.started + hist_rows {
+                return Err(format!(
+                    "token conservation: {} != {} started + {hist_rows} step rows",
+                    gs.tokens_generated, gs.started
+                ));
+            }
+            if gs.batch_fill.len() > max_seqs + 1 {
+                return Err(format!(
+                    "fill exceeded {max_seqs} slots: {:?}",
+                    gs.batch_fill
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn temperature_sampling_is_reproducible_per_seed() {
+        let run_once = |seed: u64| -> Vec<i32> {
+            let s = Arc::new(GenScheduler::new());
+            let s2 = Arc::clone(&s);
+            let h = thread::spawn(move || s2.run(FakeEngine::new(1, 64)).unwrap());
+            let mut r = req(1, 3, 8);
+            r.temperature = 1.5;
+            r.seed = seed;
+            let got = s
+                .submit(r)
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap()
+                .tokens;
+            s.close();
+            h.join().unwrap();
+            got
+        };
+        assert_eq!(run_once(42), run_once(42), "same seed, same sample path");
+    }
+}

@@ -1,36 +1,52 @@
-//! Scoring service — the compressed model behind a socket.
+//! Scoring **and generation** service — the compressed model behind a
+//! socket.
 //!
 //! The paper motivates 8:16 sparsity with deployment efficiency; this
-//! module is the deployment: a Rust-only eval server that serves
-//! log-likelihood scoring over TCP with **dynamic batching** — requests
-//! are coalesced into the model's fixed batch shape, vLLM-router style,
-//! so single-request clients still get full-batch throughput.
+//! module is the deployment: a Rust-only server that serves
+//! log-likelihood scoring *and KV-cached autoregressive generation*
+//! over TCP. Scoring requests are coalesced into the model's fixed
+//! batch shape by the [`Batcher`] (vLLM-router-style dynamic batching);
+//! generation requests flow through the [`GenScheduler`], a
+//! **continuous-batching** generalization of the same idea — in-flight
+//! sequences join and leave the decode batch every step, so short
+//! replies never wait on long batch-mates and every
+//! [`crate::model::SparseLm::decode_step`] amortizes its packed-weight
+//! streaming across the whole in-flight set.
 //!
-//! The request path is socket → [`Batcher`] → scorer, where the default
-//! scorer ([`spmm_scorer`]) runs the decode-free packed hot path: every
-//! linear layer applies bit-packed N:M weights (+ structured outliers)
-//! straight from storage via [`crate::sparse::spmm_parallel()`] — the
-//! weights are never expanded to dense, so serving traffic matches the
-//! packed footprint the paper's Table 1 accounts for. The PJRT-backed
+//! The request paths share one packed model (`Arc`): socket →
+//! [`Batcher`] → [`spmm_scorer`] for `nll`/`choice`, socket →
+//! [`GenScheduler`] → [`spmm_generator`] (prefill → shared decode loop
+//! → detokenize) for `generate`. Every linear applies bit-packed N:M
+//! weights (+ structured outliers) straight from storage via
+//! [`crate::sparse::spmm_parallel()`] / [`crate::sparse::spmm_vec()`] —
+//! the weights are never expanded to dense, so serving traffic matches
+//! the packed footprint the paper's Table 1 accounts for, in exactly
+//! the bandwidth-bound decode regime §8 argues about. The PJRT-backed
 //! [`pjrt_scorer`] (AOT artifacts, `--features xla`) is the
-//! artifact-path alternative. Python is never involved. The full hot
-//! path (tokens → batcher → packed spmm → logits) is walked through in
-//! `docs/ARCHITECTURE.md`.
+//! artifact-path alternative (scoring only). Python is never involved.
+//! Both hot paths are walked through in `docs/ARCHITECTURE.md`.
 //!
-//! * [`batcher`] — the queueing/coalescing core (pure, fully unit- and
-//!   property-tested without sockets);
+//! * [`batcher`] — the scoring queue/coalescing core (pure, fully unit-
+//!   and property-tested without sockets);
+//! * [`generate`] — the continuous-batching decode scheduler and the
+//!   [`DecodeEngine`] contract (same purity);
 //! * [`server`] — TCP front end speaking newline-delimited JSON;
 //! * [`client`] — a small blocking client used by tests, examples and
 //!   the `serve-bench` CLI.
 
 pub mod batcher;
 pub mod client;
+pub mod generate;
 pub mod protocol;
 pub mod server;
 
 pub use batcher::{Batcher, BatcherConfig, ScoreRequest, ScoreResponse};
 pub use client::ServeClient;
+pub use generate::{
+    DecodeEngine, GenRequest, GenResponse, GenScheduler, GenStats, SpmmEngine,
+};
 pub use protocol::{Request, Response};
 pub use server::{
-    pjrt_scorer, serve, spmm_scorer, Scorer, ServerConfig, ServerHandle, ServerStats,
+    pjrt_scorer, serve, serve_generate, spmm_generator, spmm_scorer, GenEngine, Scorer,
+    ServerConfig, ServerHandle, ServerStats,
 };

@@ -8,7 +8,15 @@
 //! * `{"op":"choice","context":"...","choices":["a","b",...]}` → the
 //!   lm-eval-harness zero-shot protocol: rank continuations by summed
 //!   log-likelihood, report the argmin-NLL choice
-//! * `{"op":"stats"}` → server + batcher counters
+//! * `{"op":"generate","prompt":"...","max_tokens":32,"temperature":0.0,
+//!   "seed":0}` → autoregressive continuation of the prompt through the
+//!   KV-cached continuous-batching decode engine; `max_tokens`
+//!   (default 32, capped server-side), `temperature` (default 0 =
+//!   greedy) and `seed` (default 0, temperature sampling only) are
+//!   optional. Replies with the generated `text`, token count, decode
+//!   `steps` and the mean decode-batch fill the request observed
+//! * `{"op":"stats"}` → server + batcher + generation counters
+//!   (including the per-step `batch_fill` histogram)
 //! * `{"op":"shutdown"}` → drain and stop (admin)
 //!
 //! Responses always carry `"ok"`; failures put a message in `"error"`
@@ -22,6 +30,12 @@ pub enum Request {
     Ping,
     Nll { text: String },
     Choice { context: String, choices: Vec<String> },
+    Generate {
+        prompt: String,
+        max_tokens: usize,
+        temperature: f64,
+        seed: u64,
+    },
     Stats,
     Shutdown,
 }
@@ -65,6 +79,63 @@ impl Request {
                 }
                 Ok(Request::Choice { context, choices })
             }
+            "generate" => {
+                let prompt = v
+                    .get("prompt")
+                    .and_then(|p| p.as_str())
+                    .ok_or_else(|| "generate needs \"prompt\"".to_string())?
+                    .to_string();
+                if prompt.is_empty() {
+                    return Err("empty prompt".into());
+                }
+                // optional fields default when absent, but a present
+                // field of the wrong type is an error, not a silent
+                // fallback
+                let max_tokens = match v.get("max_tokens") {
+                    None => 32,
+                    Some(m) => {
+                        let x = m
+                            .as_f64()
+                            .ok_or_else(|| "max_tokens must be a number".to_string())?;
+                        if x < 1.0 || x.fract() != 0.0 {
+                            return Err("max_tokens must be a positive integer".into());
+                        }
+                        x as usize
+                    }
+                };
+                let temperature = match v.get("temperature") {
+                    None => 0.0,
+                    Some(t) => t
+                        .as_f64()
+                        .ok_or_else(|| "temperature must be a number".to_string())?,
+                };
+                if !temperature.is_finite() || temperature < 0.0 {
+                    return Err("temperature must be finite and >= 0".into());
+                }
+                let seed = match v.get("seed") {
+                    None => 0,
+                    Some(s) => {
+                        let x = s
+                            .as_f64()
+                            .ok_or_else(|| "seed must be a number".to_string())?;
+                        // reject rather than silently saturate/round:
+                        // the seed names an exact sample path, and json
+                        // f64 transport aliases integers at 2^53
+                        if x < 0.0 || x.fract() != 0.0 || x >= (1u64 << 53) as f64 {
+                            return Err(
+                                "seed must be a non-negative integer < 2^53".into()
+                            );
+                        }
+                        x as u64
+                    }
+                };
+                Ok(Request::Generate {
+                    prompt,
+                    max_tokens,
+                    temperature,
+                    seed,
+                })
+            }
             other => Err(format!("unknown op {other:?}")),
         }
     }
@@ -87,6 +158,18 @@ impl Request {
                     Json::Arr(choices.iter().map(|c| Json::str(c.clone())).collect()),
                 ),
             ]),
+            Request::Generate {
+                prompt,
+                max_tokens,
+                temperature,
+                seed,
+            } => Json::obj(vec![
+                ("op", Json::str("generate")),
+                ("prompt", Json::str(prompt.clone())),
+                ("max_tokens", Json::num(*max_tokens as f64)),
+                ("temperature", Json::num(*temperature)),
+                ("seed", Json::num(*seed as f64)),
+            ]),
         }
     }
 }
@@ -106,6 +189,13 @@ pub enum Response {
         best: usize,
         scores: Vec<f64>,
         latency_ms: f64,
+    },
+    Generate {
+        text: String,
+        tokens: usize,
+        steps: usize,
+        latency_ms: f64,
+        mean_batch_fill: f64,
     },
     Stats(Json),
     ShuttingDown,
@@ -146,6 +236,20 @@ impl Response {
                 ),
                 ("latency_ms", Json::num(*latency_ms)),
             ]),
+            Response::Generate {
+                text,
+                tokens,
+                steps,
+                latency_ms,
+                mean_batch_fill,
+            } => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("text", Json::str(text.clone())),
+                ("tokens", Json::num(*tokens as f64)),
+                ("steps", Json::num(*steps as f64)),
+                ("latency_ms", Json::num(*latency_ms)),
+                ("mean_batch_fill", Json::num(*mean_batch_fill)),
+            ]),
             Response::Stats(j) => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("stats", j.clone()),
@@ -180,6 +284,18 @@ impl Response {
         }
         if let Some(s) = v.get("stats") {
             return Ok(Response::Stats(s.clone()));
+        }
+        if let Some(text) = v.get("text").and_then(|t| t.as_str()) {
+            return Ok(Response::Generate {
+                text: text.to_string(),
+                tokens: v.get("tokens").and_then(|t| t.as_usize()).unwrap_or(0),
+                steps: v.get("steps").and_then(|s| s.as_usize()).unwrap_or(0),
+                latency_ms: v.get("latency_ms").and_then(|l| l.as_f64()).unwrap_or(0.0),
+                mean_batch_fill: v
+                    .get("mean_batch_fill")
+                    .and_then(|b| b.as_f64())
+                    .unwrap_or(0.0),
+            });
         }
         if let Some(best) = v.get("best").and_then(|b| b.as_f64()) {
             let scores = v
@@ -230,10 +346,63 @@ mod tests {
                 context: "2+2 =".into(),
                 choices: vec!["4".into(), "5".into()],
             },
+            Request::Generate {
+                prompt: "the quick".into(),
+                max_tokens: 16,
+                temperature: 0.7,
+                seed: 42,
+            },
         ] {
             let line = r.to_json().to_string();
             assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
         }
+    }
+
+    #[test]
+    fn generate_request_defaults_and_validation() {
+        let r = Request::parse("{\"op\":\"generate\",\"prompt\":\"hi\"}").unwrap();
+        assert_eq!(
+            r,
+            Request::Generate {
+                prompt: "hi".into(),
+                max_tokens: 32,
+                temperature: 0.0,
+                seed: 0,
+            }
+        );
+        assert!(Request::parse("{\"op\":\"generate\"}").is_err());
+        assert!(Request::parse("{\"op\":\"generate\",\"prompt\":\"\"}").is_err());
+        assert!(
+            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"max_tokens\":0}").is_err()
+        );
+        assert!(
+            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"temperature\":-1}")
+                .is_err()
+        );
+        // present-but-mistyped fields must error, not silently default
+        assert!(
+            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"max_tokens\":\"64\"}")
+                .is_err()
+        );
+        assert!(
+            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"temperature\":\"hot\"}")
+                .is_err()
+        );
+        assert!(
+            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"seed\":\"abc\"}").is_err()
+        );
+        assert!(
+            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"seed\":-5}").is_err(),
+            "negative seeds must not silently saturate to 0"
+        );
+        assert!(
+            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"seed\":1.5}").is_err()
+        );
+        assert!(
+            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"max_tokens\":5.9}")
+                .is_err(),
+            "fractional max_tokens must not silently truncate"
+        );
     }
 
     #[test]
@@ -253,6 +422,13 @@ mod tests {
                 best: 1,
                 scores: vec![3.0, 2.0, 4.5],
                 latency_ms: 0.5,
+            },
+            Response::Generate {
+                text: "brown fox".into(),
+                tokens: 2,
+                steps: 1,
+                latency_ms: 4.5,
+                mean_batch_fill: 2.5,
             },
         ] {
             let line = r.to_json().to_string();

@@ -1,18 +1,20 @@
 //! TCP front end: newline-delimited JSON requests, dynamically batched
-//! model scoring behind them.
+//! model scoring **and KV-cached generation** behind them.
 //!
 //! Layout: one acceptor thread, one OS thread per connection (bounded by
-//! `max_conns`), one scoring thread owning the model state and draining
-//! the [`Batcher`]. The server takes a **scorer factory**: a `Send`
-//! closure invoked *on* the scoring thread to build the scorer (PJRT
-//! handles are `!Send` — the `xla` crate wraps `Rc`s over C pointers —
-//! and the factory pattern also lets tests pass fakes). Two production
-//! factories exist: [`spmm_scorer`] serves packed N:M weights through
-//! the decode-free host forward (offline, the default deployment), and
-//! [`pjrt_scorer`] serves HLO artifacts through PJRT (`--features xla`).
-//! Shutdown is cooperative: `{"op":"shutdown"}` (or
-//! [`ServerHandle::shutdown`]) closes the batcher, unblocks the acceptor
-//! and joins every thread.
+//! `max_conns`), one scoring thread owning the scorer state and draining
+//! the [`Batcher`], and — when a generation engine is supplied via
+//! [`serve_generate`] — one decode thread owning the KV caches and
+//! draining the continuous-batching [`GenScheduler`]. The server takes
+//! **factories**: `Send` closures invoked *on* their worker thread to
+//! build the scorer / decode engine (PJRT handles are `!Send` — the
+//! `xla` crate wraps `Rc`s over C pointers — and the factory pattern
+//! also lets tests pass fakes). Production factories: [`spmm_scorer`] +
+//! [`spmm_generator`] share one packed model via `Arc` (offline, the
+//! default deployment); [`pjrt_scorer`] serves HLO artifacts through
+//! PJRT (`--features xla`, scoring only). Shutdown is cooperative:
+//! `{"op":"shutdown"}` (or [`ServerHandle::shutdown`]) closes both
+//! queues, unblocks the acceptor and joins every thread.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -23,9 +25,10 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{Batcher, BatcherConfig, ScoreRequest};
+use super::generate::{DecodeEngine, GenRequest, GenScheduler, SpmmEngine};
 use super::protocol::{Request, Response};
 use crate::data::batch::pack_windows;
-use crate::data::tokenizer::BOS;
+use crate::data::tokenizer::{BOS, EOS};
 use crate::data::Tokenizer;
 use crate::util::json::Json;
 
@@ -40,6 +43,8 @@ pub struct ServerConfig {
     pub max_batch: usize,
     /// batching deadline (see [`BatcherConfig::max_wait`])
     pub max_wait: Duration,
+    /// hard cap on per-request `max_tokens` (generation)
+    pub max_gen_tokens: usize,
 }
 
 impl Default for ServerConfig {
@@ -49,6 +54,7 @@ impl Default for ServerConfig {
             max_conns: 32,
             max_batch: 4,
             max_wait: Duration::from_millis(15),
+            max_gen_tokens: 512,
         }
     }
 }
@@ -61,50 +67,127 @@ pub struct ServerStats {
     pub errors: AtomicU64,
     pub nll_ops: AtomicU64,
     pub choice_ops: AtomicU64,
+    pub generate_ops: AtomicU64,
 }
 
-/// Handle returned by [`serve`]: join or stop the server.
+/// Handle returned by [`serve`] / [`serve_generate`]: join or stop the
+/// server.
 pub struct ServerHandle {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
     batcher: Arc<Batcher>,
+    generator: Option<Arc<GenScheduler>>,
     threads: Vec<JoinHandle<()>>,
     scorer: Option<JoinHandle<crate::Result<()>>>,
+    gen_thread: Option<JoinHandle<crate::Result<()>>>,
     pub stats: Arc<ServerStats>,
 }
 
 impl ServerHandle {
+    fn close_workers(&self) {
+        self.batcher.close();
+        if let Some(g) = &self.generator {
+            g.close();
+        }
+    }
+
+    fn join_workers(&mut self) -> crate::Result<()> {
+        let mut first_err = None;
+        if let Some(s) = self.scorer.take() {
+            match s.join() {
+                Ok(r) => {
+                    if let Err(e) = r {
+                        first_err.get_or_insert(e);
+                    }
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow::anyhow!("scorer panicked"));
+                }
+            }
+        }
+        if let Some(g) = self.gen_thread.take() {
+            match g.join() {
+                Ok(r) => {
+                    if let Err(e) = r {
+                        first_err.get_or_insert(e);
+                    }
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow::anyhow!("decode engine panicked"));
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
     /// Signal shutdown and join all threads.
     pub fn shutdown(mut self) -> crate::Result<()> {
         self.stop.store(true, Ordering::SeqCst);
-        self.batcher.close();
+        self.close_workers();
         // poke the acceptor out of accept()
         let _ = TcpStream::connect(self.addr);
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
-        if let Some(s) = self.scorer.take() {
-            s.join().map_err(|_| anyhow::anyhow!("scorer panicked"))??;
-        }
-        Ok(())
+        self.join_workers()
     }
 
     /// Block until the scoring thread exits (e.g. after a client sent
-    /// `shutdown`), then join the rest.
+    /// `shutdown`), then stop and join the rest. A scorer error is
+    /// reported only *after* the acceptor, connection and decode
+    /// threads are stopped — an early return here would leak a live
+    /// half-broken server (bound port, running threads) into the
+    /// embedding process.
     pub fn join(mut self) -> crate::Result<()> {
+        let mut first_err = None;
         if let Some(s) = self.scorer.take() {
-            s.join().map_err(|_| anyhow::anyhow!("scorer panicked"))??;
+            match s.join() {
+                Ok(Err(e)) => {
+                    first_err = Some(e);
+                }
+                Err(_) => {
+                    first_err = Some(anyhow::anyhow!("scorer panicked"));
+                }
+                Ok(Ok(())) => {}
+            }
         }
         self.stop.store(true, Ordering::SeqCst);
+        self.close_workers();
         let _ = TcpStream::connect(self.addr);
         for t in self.threads.drain(..) {
             let _ = t.join();
         }
-        Ok(())
+        if let Some(g) = self.gen_thread.take() {
+            match g.join() {
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow::anyhow!("decode engine panicked"));
+                }
+                Ok(Ok(())) => {}
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
     }
 
     pub fn batcher_stats(&self) -> super::batcher::BatcherStats {
         self.batcher.stats()
+    }
+
+    /// Continuous-batching generation counters (empty default when the
+    /// server was started without a generation engine).
+    pub fn gen_stats(&self) -> super::generate::GenStats {
+        self.generator
+            .as_ref()
+            .map(|g| g.stats())
+            .unwrap_or_default()
     }
 }
 
@@ -161,9 +244,10 @@ pub fn pjrt_scorer(
 /// packed N:M + structured-outlier weights directly via
 /// [`crate::sparse::spmm_parallel()`] — weights stay packed end-to-end
 /// (tokens → batcher → packed spmm → logits → NLL), no PJRT, no
-/// artifacts, fully offline.
+/// artifacts, fully offline. Takes an `Arc` so the same packed weights
+/// can back the generation engine ([`spmm_generator`]) without a copy.
 pub fn spmm_scorer(
-    model: crate::model::SparseLm,
+    model: Arc<crate::model::SparseLm>,
 ) -> impl FnOnce() -> crate::Result<Scorer> + Send {
     move || {
         let (b, s) = (model.config.batch, model.config.seq);
@@ -179,11 +263,50 @@ pub fn spmm_scorer(
     }
 }
 
-/// Start the server. `factory` runs on the scoring thread; [`serve`]
-/// returns after the socket is bound **and** the factory succeeded (its
-/// error is propagated here otherwise).
+/// A boxed decode engine, built on the decode thread.
+pub type GenEngine = Box<dyn DecodeEngine>;
+
+/// Continuous-batching generation engine over the same packed model the
+/// scorer serves: per-slot KV caches, prefill on admission, shared
+/// decode steps ([`SpmmEngine`]). `max_seqs` bounds the decode batch.
+pub fn spmm_generator(
+    model: Arc<crate::model::SparseLm>,
+    max_seqs: usize,
+) -> impl FnOnce() -> crate::Result<GenEngine> + Send {
+    move || Ok(Box::new(SpmmEngine::new(model, max_seqs)) as GenEngine)
+}
+
+/// Start a scoring-only server (`generate` requests answer with a
+/// typed error). `factory` runs on the scoring thread; returns after
+/// the socket is bound **and** the factory succeeded (its error is
+/// propagated here otherwise).
 pub fn serve(
     factory: impl FnOnce() -> crate::Result<Scorer> + Send + 'static,
+    tokenizer: Arc<Tokenizer>,
+    cfg: ServerConfig,
+) -> crate::Result<ServerHandle> {
+    serve_inner(factory, None, tokenizer, cfg)
+}
+
+/// Start a server with both scoring **and** KV-cached generation: the
+/// scorer factory feeds the [`Batcher`] thread, the engine factory
+/// feeds the continuous-batching [`GenScheduler`] thread, and both run
+/// concurrently over their own queues (an `Arc`-shared model makes the
+/// weights common; see [`spmm_scorer`] / [`spmm_generator`]).
+pub fn serve_generate(
+    factory: impl FnOnce() -> crate::Result<Scorer> + Send + 'static,
+    gen_factory: impl FnOnce() -> crate::Result<GenEngine> + Send + 'static,
+    tokenizer: Arc<Tokenizer>,
+    cfg: ServerConfig,
+) -> crate::Result<ServerHandle> {
+    serve_inner(factory, Some(Box::new(gen_factory)), tokenizer, cfg)
+}
+
+type BoxedGenFactory = Box<dyn FnOnce() -> crate::Result<GenEngine> + Send>;
+
+fn serve_inner(
+    factory: impl FnOnce() -> crate::Result<Scorer> + Send + 'static,
+    gen_factory: Option<BoxedGenFactory>,
     tokenizer: Arc<Tokenizer>,
     cfg: ServerConfig,
 ) -> crate::Result<ServerHandle> {
@@ -222,13 +345,64 @@ pub fn serve(
         return Err(e);
     }
 
+    // ---- decode thread: builds the engine, drains the scheduler -------
+    let (generator, gen_thread) = match gen_factory {
+        None => (None, None),
+        Some(build) => {
+            let sched = Arc::new(GenScheduler::new());
+            let (gready_tx, gready_rx) = sync_channel::<crate::Result<()>>(1);
+            let thread = {
+                let sched = Arc::clone(&sched);
+                let batcher = Arc::clone(&batcher);
+                std::thread::spawn(move || -> crate::Result<()> {
+                    let engine = match build() {
+                        Ok(e) => {
+                            let _ = gready_tx.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = gready_tx.send(Err(anyhow::anyhow!("{e:#}")));
+                            return Err(e);
+                        }
+                    };
+                    let r = sched.run(engine);
+                    if r.is_err() {
+                        // a dead decode engine must take the server down
+                        // observably, exactly like a dead scorer does:
+                        // closing the batcher lets the scoring thread
+                        // exit so ServerHandle::join() unblocks and
+                        // surfaces this error instead of serving broken
+                        // generation forever
+                        batcher.close();
+                    }
+                    r
+                })
+            };
+            // a factory panic drops gready_tx without sending: treat it
+            // like a factory error and tear down the scoring thread too,
+            // instead of leaking it blocked on the batcher condvar
+            let ready = gready_rx
+                .recv()
+                .unwrap_or_else(|_| Err(anyhow::anyhow!("decode thread died during startup")));
+            if let Err(e) = ready {
+                batcher.close();
+                let _ = scorer_thread.join();
+                let _ = thread.join();
+                return Err(e);
+            }
+            (Some(sched), Some(thread))
+        }
+    };
+
     // ---- acceptor + per-connection threads ----------------------------
     let acceptor = {
         let stop = Arc::clone(&stop);
         let stats = Arc::clone(&stats);
         let batcher = Arc::clone(&batcher);
+        let generator = generator.clone();
         let tokenizer = Arc::clone(&tokenizer);
         let max_conns = cfg.max_conns;
+        let max_gen_tokens = cfg.max_gen_tokens.max(1);
         std::thread::spawn(move || {
             let live = Arc::new(Mutex::new(Vec::<JoinHandle<()>>::new()));
             for conn in listener.incoming() {
@@ -252,9 +426,18 @@ pub fn serve(
                 let stop2 = Arc::clone(&stop);
                 let stats2 = Arc::clone(&stats);
                 let batcher2 = Arc::clone(&batcher);
+                let gen2 = generator.clone();
                 let tok2 = Arc::clone(&tokenizer);
                 let h = std::thread::spawn(move || {
-                    handle_conn(stream, &stop2, &stats2, &batcher2, &tok2)
+                    handle_conn(
+                        stream,
+                        &stop2,
+                        &stats2,
+                        &batcher2,
+                        gen2.as_deref(),
+                        max_gen_tokens,
+                        &tok2,
+                    )
                 });
                 live.lock().unwrap().push(h);
             }
@@ -268,8 +451,10 @@ pub fn serve(
         addr,
         stop,
         batcher,
+        generator,
         threads: vec![acceptor],
         scorer: Some(scorer_thread),
+        gen_thread,
         stats,
     })
 }
@@ -285,6 +470,8 @@ fn handle_conn(
     stop: &AtomicBool,
     stats: &ServerStats,
     batcher: &Batcher,
+    generator: Option<&GenScheduler>,
+    max_gen_tokens: usize,
     tok: &Tokenizer,
 ) {
     // read with a timeout so the handler notices `stop` even while the
@@ -325,7 +512,7 @@ fn handle_conn(
             continue;
         }
         stats.requests.fetch_add(1, Ordering::Relaxed);
-        let resp = match Request::parse(&line) {
+        let resp = match Request::parse(line) {
             Err(e) => {
                 stats.errors.fetch_add(1, Ordering::Relaxed);
                 Response::Error(e)
@@ -335,11 +522,14 @@ fn handle_conn(
                 let _ = respond(&stream, &Response::ShuttingDown);
                 stop.store(true, Ordering::SeqCst);
                 batcher.close();
+                if let Some(g) = generator {
+                    g.close();
+                }
                 return;
             }
             Ok(Request::Stats) => {
                 let b = batcher.stats();
-                Response::Stats(Json::obj(vec![
+                let mut fields = vec![
                     (
                         "connections",
                         Json::num(stats.connections.load(Ordering::Relaxed) as f64),
@@ -356,7 +546,28 @@ fn handle_conn(
                     ("rows_scored", Json::num(b.rows_scored as f64)),
                     ("timeout_flushes", Json::num(b.timeout_flushes as f64)),
                     ("queue_depth", Json::num(batcher.queue_depth() as f64)),
-                ]))
+                ];
+                if let Some(g) = generator {
+                    let gs = g.stats();
+                    fields.push(("gen_requests", Json::num(gs.requests as f64)));
+                    fields.push(("gen_completed", Json::num(gs.completed as f64)));
+                    fields.push(("decode_steps", Json::num(gs.decode_steps as f64)));
+                    fields.push((
+                        "tokens_generated",
+                        Json::num(gs.tokens_generated as f64),
+                    ));
+                    fields.push(("mean_batch_fill", Json::num(gs.mean_fill())));
+                    fields.push((
+                        "batch_fill",
+                        Json::Arr(
+                            gs.batch_fill
+                                .iter()
+                                .map(|&c| Json::num(c as f64))
+                                .collect(),
+                        ),
+                    ));
+                }
+                Response::Stats(Json::obj(fields))
             }
             Ok(Request::Nll { text }) => {
                 stats.nll_ops.fetch_add(1, Ordering::Relaxed);
@@ -426,6 +637,40 @@ fn handle_conn(
                     }
                 }
             }
+            Ok(Request::Generate {
+                prompt,
+                max_tokens,
+                temperature,
+                seed,
+            }) => match generator {
+                None => Response::Error(
+                    "generation not supported by this backend (scoring-only server)".into(),
+                ),
+                Some(g) => {
+                    stats.generate_ops.fetch_add(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    let mut ids = vec![BOS];
+                    ids.extend(tok.encode(&prompt));
+                    let rx = g.submit(GenRequest {
+                        id: next_id.fetch_add(1, Ordering::Relaxed),
+                        prompt: ids,
+                        max_tokens: max_tokens.min(max_gen_tokens),
+                        temperature: temperature as f32,
+                        seed,
+                        stop: Some(EOS),
+                    });
+                    match rx.recv() {
+                        Ok(r) => Response::Generate {
+                            text: tok.decode(&r.tokens),
+                            tokens: r.tokens.len(),
+                            steps: r.steps as usize,
+                            latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                            mean_batch_fill: r.mean_batch_fill,
+                        },
+                        Err(_) => Response::Error("server shutting down".into()),
+                    }
+                }
+            },
         };
         if respond(&stream, &resp).is_err() {
             break;
@@ -466,6 +711,7 @@ mod tests {
                 max_conns: 8,
                 max_batch: 3,
                 max_wait: Duration::from_millis(3),
+                ..Default::default()
             },
         )
         .unwrap()
@@ -535,6 +781,94 @@ mod tests {
         let mut c = ServeClient::connect(h.addr).unwrap();
         c.shutdown().unwrap();
         h.join().unwrap();
+    }
+
+    /// fake decode engine: parrots token id 5 forever
+    struct ParrotEngine;
+    impl DecodeEngine for ParrotEngine {
+        fn max_seqs(&self) -> usize {
+            2
+        }
+        fn max_positions(&self) -> usize {
+            32
+        }
+        fn start(&mut self, _slot: usize, _prompt: &[i32]) -> crate::Result<Vec<f32>> {
+            let mut l = vec![0.0f32; 16];
+            l[5] = 10.0;
+            Ok(l)
+        }
+        fn step(&mut self, toks: &[(usize, i32)]) -> crate::Result<Vec<Vec<f32>>> {
+            Ok(toks
+                .iter()
+                .map(|_| {
+                    let mut l = vec![0.0f32; 16];
+                    l[5] = 10.0;
+                    l
+                })
+                .collect())
+        }
+        fn finish(&mut self, _slot: usize) {}
+    }
+
+    fn gen_test_server() -> ServerHandle {
+        serve_generate(
+            fake_factory,
+            || Ok(Box::new(ParrotEngine) as GenEngine),
+            test_tokenizer(),
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                max_conns: 8,
+                max_batch: 3,
+                max_wait: Duration::from_millis(3),
+                max_gen_tokens: 8,
+            },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn generate_op_roundtrips_and_caps_tokens() {
+        let h = gen_test_server();
+        let mut c = ServeClient::connect(h.addr).unwrap();
+        let (text, tokens) = c.generate("the quick brown", 100, 0.0).unwrap();
+        // server caps 100 → max_gen_tokens = 8; parrot emits id 5 = "."
+        assert_eq!(tokens, 8);
+        assert!(!text.is_empty());
+        let gs = h.gen_stats();
+        assert_eq!(gs.completed, 1);
+        assert_eq!(gs.tokens_generated, 8);
+        assert!(!gs.batch_fill.is_empty());
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn generate_without_engine_is_a_protocol_error() {
+        let h = test_server();
+        let mut c = ServeClient::connect(h.addr).unwrap();
+        let r = c
+            .call(&Request::Generate {
+                prompt: "x".into(),
+                max_tokens: 4,
+                temperature: 0.0,
+                seed: 0,
+            })
+            .unwrap();
+        assert!(matches!(r, Response::Error(_)), "{r:?}");
+        // scoring still works on the same connection
+        assert!(c.ping().unwrap());
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn stats_include_generation_counters() {
+        let h = gen_test_server();
+        let mut c = ServeClient::connect(h.addr).unwrap();
+        c.generate("a b", 4, 0.0).unwrap();
+        let stats = c.stats().unwrap();
+        assert_eq!(stats.at("gen_completed").as_f64(), Some(1.0));
+        assert!(stats.at("decode_steps").as_f64().unwrap() >= 1.0);
+        assert!(stats.at("batch_fill").as_arr().is_some());
+        h.shutdown().unwrap();
     }
 
     #[test]

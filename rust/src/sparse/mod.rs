@@ -26,7 +26,7 @@ pub use csr::Csr;
 pub use nm::PackedNm;
 pub use outliers::StructuredOutliers;
 pub use patterns::PatternInfo;
-pub use spmm::{spmm, spmm_parallel, PackedLinear};
+pub use spmm::{spmm, spmm_parallel, spmm_vec, PackedLinear};
 pub use vnm::{vnm_select, PackedVnm};
 
 use crate::tensor::Tensor;
@@ -53,6 +53,18 @@ pub trait Kernel: Send + Sync {
     /// `out` is *added to*, never overwritten — callers zero it (or chain
     /// kernels over it).
     fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]);
+
+    /// Accumulate `x (in,) @ W[r0..r1, :]ᵀ` into `out` (`r1 - r0` floats)
+    /// for **one** activation row — the decode-step GEMV
+    /// ([`spmm_vec()`]). Implementations must accumulate per output row
+    /// in the same order as [`Self::accumulate_rows`] so a sequence
+    /// decoded alone is bitwise identical to one decoded in a batch.
+    /// The default wraps `x` in a 1-row tensor; the packed formats
+    /// override it with allocation-free single-row loops.
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        let xt = Tensor::new(vec![1, x.len()], x.to_vec());
+        self.accumulate_rows(&xt, r0, r1, out);
+    }
 
     /// Bytes a decoder streams for this weight operand (values +
     /// metadata) — the *measured* side of the [`crate::hwsim::HwModel`]

@@ -17,6 +17,8 @@
 //!   streams), dense [`Tensor`] (reference), and [`PackedLinear`]
 //!   (N:M base + structured outliers — the paper's full format);
 //! * [`spmm()`] — single-thread driver;
+//! * [`spmm_vec()`] — one-activation-row GEMV driver (the decode step;
+//!   [`Kernel::accumulate_vec`] skips the batch indirection entirely);
 //! * [`spmm_parallel()`] — row-blocked fork-join on scoped threads
 //!   ([`crate::util::pool::scoped_map`]; no rayon/tokio, offline-safe),
 //!   with a serial fallback below [`PARALLEL_MIN_MACS`].
@@ -44,6 +46,27 @@ pub fn spmm(x: &Tensor, w: &dyn Kernel) -> Tensor {
     let mut out = vec![0.0f32; b * rows];
     w.accumulate_rows(x, 0, rows, &mut out);
     Tensor::new(vec![b, rows], out)
+}
+
+/// `y (out,) = x (in,) @ Wᵀ` — the GEMV-shaped decode step. One
+/// activation row streams the whole packed operand
+/// ([`Kernel::operand_bytes`]) for a single output token, which is
+/// exactly the bandwidth-bound regime where the packed footprint *is*
+/// the win (the `hwsim` decode roofline; asserted measured-vs-modeled
+/// by `cargo bench --bench f3_decode`). Dispatches to
+/// [`Kernel::accumulate_vec`], which packed formats implement without
+/// the batch indirection of the matrix path.
+pub fn spmm_vec(x: &[f32], w: &dyn Kernel) -> Vec<f32> {
+    let (rows, cols) = w.dims();
+    assert_eq!(
+        x.len(),
+        cols,
+        "spmm_vec: x has {} features, W expects {cols}",
+        x.len()
+    );
+    let mut out = vec![0.0f32; rows];
+    w.accumulate_vec(x, 0, rows, &mut out);
+    out
 }
 
 /// Work-size floor below which `spmm_parallel` stays serial: scoped
@@ -145,6 +168,35 @@ impl Kernel for PackedNm {
             }
         }
     }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert!(r1 <= self.rows && r0 <= r1);
+        debug_assert_eq!(out.len(), r1 - r0);
+        let bpr = self.cols / m;
+        let unranker = Unranker::new(m, n);
+        let values = self.values_raw();
+        let meta = self.meta_words();
+        let mut idx = vec![0usize; n];
+        for r in r0..r1 {
+            let mut pos = r * bpr * bits as usize;
+            let mut vi = r * bpr * n;
+            for bblk in 0..bpr {
+                let rank = read_bits(meta, pos, bits);
+                pos += bits as usize;
+                unranker.unrank_into(rank, &mut idx);
+                let xblk = &x[bblk * m..(bblk + 1) * m];
+                let mut acc = 0.0f32;
+                for t in 0..n {
+                    acc += bf16_to_f32(values[vi + t]) * xblk[idx[t]];
+                }
+                vi += n;
+                out[r - r0] += acc;
+            }
+        }
+    }
 }
 
 // ------------------------------------------------------------ PackedVnm
@@ -206,6 +258,39 @@ impl Kernel for PackedVnm {
             t0 += self.v;
         }
     }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(out.len(), r1 - r0);
+        let bpr = self.cols / m;
+        let unranker = Unranker::new(m, n);
+        let values = self.values_raw();
+        let meta = self.meta_words();
+        let mut idx = vec![0usize; n];
+        let mut t0 = r0 - r0 % self.v;
+        while t0 < r1 {
+            let tile_row = t0 / self.v;
+            let lo = t0.max(r0);
+            let hi = (t0 + self.v).min(r1);
+            for bblk in 0..bpr {
+                let ti = tile_row * bpr + bblk;
+                let rank = read_bits(meta, ti * bits as usize, bits);
+                unranker.unrank_into(rank, &mut idx);
+                let xblk = &x[bblk * m..(bblk + 1) * m];
+                for r in lo..hi {
+                    let vi = ti * self.v * n + (r - t0) * n;
+                    let mut acc = 0.0f32;
+                    for t in 0..n {
+                        acc += bf16_to_f32(values[vi + t]) * xblk[idx[t]];
+                    }
+                    out[r - r0] += acc;
+                }
+            }
+            t0 += self.v;
+        }
+    }
 }
 
 // --------------------------------------------------- StructuredOutliers
@@ -252,6 +337,30 @@ impl Kernel for StructuredOutliers {
             }
         }
     }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        if self.k == 0 {
+            return;
+        }
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(out.len(), r1 - r0);
+        let bpr = self.cols / self.m;
+        let values = self.values_raw();
+        let indices = self.indices_raw();
+        for r in r0..r1 {
+            for bblk in 0..bpr {
+                let bi = r * bpr + bblk;
+                let vs = &values[bi * self.k..(bi + 1) * self.k];
+                let is = &indices[bi * self.k..(bi + 1) * self.k];
+                let xblk = &x[bblk * self.m..(bblk + 1) * self.m];
+                let mut acc = 0.0f32;
+                for t in 0..self.k {
+                    acc += bf16_to_f32(vs[t]) * xblk[is[t] as usize];
+                }
+                out[r - r0] += acc;
+            }
+        }
+    }
 }
 
 // ------------------------------------------------------------------ Csr
@@ -287,6 +396,20 @@ impl Kernel for Csr {
             }
         }
     }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(out.len(), r1 - r0);
+        let (row_ptr, col_idx, values) = self.raw_parts();
+        for r in r0..r1 {
+            let (lo, hi) = (row_ptr[r] as usize, row_ptr[r + 1] as usize);
+            let mut acc = 0.0f32;
+            for t in lo..hi {
+                acc += bf16_to_f32(values[t]) * x[col_idx[t] as usize];
+            }
+            out[r - r0] += acc;
+        }
+    }
 }
 
 // -------------------------------------------------------- dense Tensor
@@ -316,6 +439,14 @@ impl Kernel for Tensor {
             for i in 0..bsz {
                 out[i * width + (r - r0)] += dot(&xd[i * cin..(i + 1) * cin], wrow);
             }
+        }
+    }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.dims2().1);
+        debug_assert_eq!(out.len(), r1 - r0);
+        for r in r0..r1 {
+            out[r - r0] += dot(x, self.row(r));
         }
     }
 }
@@ -383,6 +514,13 @@ impl Kernel for PackedLinear {
         self.weights.accumulate_rows(x, r0, r1, out);
         if let Some(o) = &self.outliers {
             o.accumulate_rows(x, r0, r1, out);
+        }
+    }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        self.weights.accumulate_vec(x, r0, r1, out);
+        if let Some(o) = &self.outliers {
+            o.accumulate_vec(x, r0, r1, out);
         }
     }
 }
@@ -554,5 +692,39 @@ mod tests {
         let p = PackedNm::from_dense_mask(&w, &mask, 2, 4);
         let x = Tensor::ones(vec![2, 8]);
         spmm(&x, &p);
+    }
+
+    #[test]
+    fn spmm_vec_bitwise_matches_single_row_spmm() {
+        // the decode GEMV fast path must be indistinguishable from the
+        // matrix path with one activation row, for every kernel kind —
+        // continuous batching moves sequences between the two freely
+        let mut rng = Rng::new(110);
+        let w = Tensor::randn_outliers(vec![48, 512], 0.05, 0.02, 8.0, &mut rng);
+        let x = Tensor::randn(vec![1, 512], 1.0, &mut rng);
+        let layer = PackedLinear::compress(&w, &w.map(f32::abs), 8, 16, 16);
+        let vmask = vnm_mask(&w, 4, 2, 4);
+        let vnm = PackedVnm::from_dense_mask(&w, &vmask, 4, 2, 4);
+        let csr = Csr::from_topk_global(&w, &w.map(f32::abs), 300);
+        let kernels: Vec<&dyn Kernel> = vec![
+            &layer.weights,
+            layer.outliers.as_ref().unwrap(),
+            &layer,
+            &vnm,
+            &csr,
+            &w,
+        ];
+        for (ki, k) in kernels.into_iter().enumerate() {
+            let want = spmm(&x, k);
+            let got = spmm_vec(x.row(0), k);
+            assert_eq!(got.as_slice(), want.data(), "kernel #{ki}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "features")]
+    fn spmm_vec_shape_mismatch_panics() {
+        let w = Tensor::ones(vec![4, 16]);
+        spmm_vec(&[1.0; 8], &w);
     }
 }

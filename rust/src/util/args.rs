@@ -56,22 +56,40 @@ impl Args {
         self.flags.get(key).map(|s| s.as_str())
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    /// Parse `--key` as `T`, falling back to `default` when absent. A
+    /// malformed value is a typed [`crate::Error::BadFlag`] whose
+    /// message carries a one-line usage hint — never a `panic!` (the CLI
+    /// prints it and exits nonzero; a server embedding the parser keeps
+    /// running).
+    fn get_parsed<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+        want: &'static str,
+    ) -> crate::Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                crate::Error::BadFlag {
+                    key: key.to_string(),
+                    value: v.to_string(),
+                    want,
+                }
+                .into()
+            }),
+        }
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v:?}")))
-            .unwrap_or(default)
+    pub fn get_usize(&self, key: &str, default: usize) -> crate::Result<usize> {
+        self.get_parsed(key, default, "an integer")
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn get_f64(&self, key: &str, default: f64) -> crate::Result<f64> {
+        self.get_parsed(key, default, "a number")
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> crate::Result<u64> {
+        self.get_parsed(key, default, "a non-negative integer")
     }
 
     pub fn get_bool(&self, key: &str) -> bool {
@@ -107,9 +125,29 @@ mod tests {
     fn key_value_forms() {
         let a = Args::parse(&sv(&["--model", "tiny", "--steps=100", "--fast"]));
         assert_eq!(a.get("model"), Some("tiny"));
-        assert_eq!(a.get_usize("steps", 0), 100);
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 100);
         assert!(a.get_bool("fast"));
         assert!(!a.get_bool("slow"));
+    }
+
+    #[test]
+    fn bad_values_are_errors_with_usage_hint_not_panics() {
+        let a = Args::parse(&sv(&["--steps", "ten", "--lr", "fast", "--seed", "-3"]));
+        let err = a.get_usize("steps", 0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("--steps"), "{msg}");
+        assert!(msg.contains("usage:"), "{msg}");
+        match err.downcast_ref::<crate::Error>() {
+            Some(crate::Error::BadFlag { key, value, .. }) => {
+                assert_eq!(key, "steps");
+                assert_eq!(value, "ten");
+            }
+            other => panic!("want BadFlag, got {other:?}"),
+        }
+        assert!(a.get_f64("lr", 1e-3).is_err());
+        assert!(a.get_u64("seed", 0).is_err(), "u64 rejects negatives");
+        // absent keys still fall back to defaults
+        assert_eq!(a.get_usize("absent", 7).unwrap(), 7);
     }
 
     #[test]
@@ -122,13 +160,13 @@ mod tests {
     #[test]
     fn defaults() {
         let a = Args::parse(&sv(&[]));
-        assert_eq!(a.get_f64("lr", 1e-3), 1e-3);
+        assert_eq!(a.get_f64("lr", 1e-3).unwrap(), 1e-3);
         assert_eq!(a.get_str("out", "x"), "x");
     }
 
     #[test]
     fn negative_number_value() {
         let a = Args::parse(&sv(&["--bias", "-0.5"]));
-        assert_eq!(a.get_f64("bias", 0.0), -0.5);
+        assert_eq!(a.get_f64("bias", 0.0).unwrap(), -0.5);
     }
 }

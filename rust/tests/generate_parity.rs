@@ -1,0 +1,176 @@
+//! Acceptance: greedy incremental decode is step-for-step consistent
+//! with the full-sequence forward, on both the dense and the packed
+//! backend, over ≥ 32 generated tokens — and the end-to-end generate
+//! path (server → continuous batcher → KV-cached spmm decode →
+//! detokenize) works fully offline.
+//!
+//! The reference is [`SparseLm::full_logits`], the monolithic forward
+//! (same code path as `lm_nll`), which never touches a KV cache.
+//! Causality makes each position's logits independent of later tokens,
+//! so one full forward over the final sequence checks every
+//! incremental step at once.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparselm::data::{CorpusKind, CorpusSpec, Tokenizer, World};
+use sparselm::eval::argmax;
+use sparselm::model::{KvCache, ModelConfig, ParamSet, SparseLm};
+use sparselm::serve::{
+    serve_generate, spmm_generator, spmm_scorer, ServeClient, ServerConfig,
+};
+use sparselm::util::propcheck::assert_allclose;
+use sparselm::util::Rng;
+
+/// Stand-in config: structurally complete (GQA, 256-aligned inputs for
+/// k:256 outliers), shrunk for CI.
+fn test_config() -> ModelConfig {
+    let mut cfg = ModelConfig::preset("gqa").unwrap();
+    cfg.n_layers = 2;
+    cfg.vocab = 256;
+    cfg.hidden = 256;
+    cfg.seq = 48;
+    cfg.batch = 1;
+    cfg
+}
+
+const GEN_TOKENS: usize = 32;
+
+/// Greedy-decode `GEN_TOKENS` tokens incrementally, then verify every
+/// step's logits (and chosen token) against one full-sequence forward
+/// over the final token sequence.
+fn assert_incremental_matches_full(lm: &SparseLm, label: &str) {
+    let cfg = &lm.config;
+    let mut rng = Rng::new(0x5EED);
+    let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
+
+    // incremental path: prefill + 32 decode steps, greedy
+    let mut cache = KvCache::new(cfg);
+    let prefill_logits = lm.prefill(&prompt, &mut cache).unwrap();
+    let (prows, _) = prefill_logits.dims2();
+    let mut step_logits: Vec<Vec<f32>> = vec![prefill_logits.row(prows - 1).to_vec()];
+    let mut generated: Vec<i32> = vec![argmax(step_logits[0].as_slice()) as i32];
+    for _ in 1..GEN_TOKENS {
+        let last = *generated.last().unwrap();
+        let lg = lm.decode_step(&[last], &mut [&mut cache]).unwrap();
+        step_logits.push(lg.row(0).to_vec());
+        generated.push(argmax(lg.row(0)) as i32);
+    }
+    assert_eq!(generated.len(), GEN_TOKENS);
+    assert_eq!(cache.len(), prompt.len() + GEN_TOKENS - 1);
+
+    // reference: one monolithic forward over prompt + generated inputs
+    // (the final token is sampled, never fed back)
+    let mut full_seq = prompt.clone();
+    full_seq.extend_from_slice(&generated[..GEN_TOKENS - 1]);
+    let full = lm.full_logits(&full_seq).unwrap();
+    for (i, step_row) in step_logits.iter().enumerate() {
+        let pos = prompt.len() - 1 + i;
+        let want = full.row(pos);
+        assert_allclose(step_row, want, 1e-4, 1e-5)
+            .unwrap_or_else(|e| panic!("{label}: step {i} logits diverge: {e}"));
+        assert_eq!(
+            generated[i],
+            argmax(want) as i32,
+            "{label}: step {i} greedy token diverges"
+        );
+    }
+}
+
+#[test]
+fn greedy_decode_matches_full_forward_dense_backend() {
+    let cfg = test_config();
+    let mut rng = Rng::new(51);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let lm = SparseLm::from_params(&params);
+    assert_incremental_matches_full(&lm, "dense");
+}
+
+#[test]
+fn greedy_decode_matches_full_forward_packed_backend() {
+    let cfg = test_config();
+    let mut rng = Rng::new(52);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    // the paper's full format: 8:16 packed base + 16:256 outliers
+    let lm = SparseLm::compress(&params, 8, 16, 16);
+    assert_incremental_matches_full(&lm, "packed 8:16+16:256");
+}
+
+#[test]
+fn generate_convenience_reproduces_stepwise_greedy() {
+    let cfg = test_config();
+    let mut rng = Rng::new(53);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let lm = SparseLm::compress(&params, 8, 16, 0);
+    let prompt: Vec<i32> = vec![3, 17, 99];
+    let via_generate = lm.generate(&prompt, 12, None, argmax).unwrap();
+
+    let mut cache = KvCache::new(&cfg);
+    let pl = lm.prefill(&prompt, &mut cache).unwrap();
+    let mut tok = argmax(pl.row(pl.dims2().0 - 1)) as i32;
+    let mut manual = vec![tok];
+    for _ in 1..12 {
+        let lg = lm.decode_step(&[tok], &mut [&mut cache]).unwrap();
+        tok = argmax(lg.row(0)) as i32;
+        manual.push(tok);
+    }
+    assert_eq!(via_generate, manual);
+}
+
+#[test]
+fn packed_generate_server_end_to_end() {
+    let cfg = test_config();
+    let mut rng = Rng::new(54);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let lm = Arc::new(SparseLm::compress(&params, 8, 16, 16));
+
+    let world = World::new(7);
+    let text = CorpusSpec::new(CorpusKind::Wiki, 4_000, 3).generate(&world);
+    let tok = Arc::new(Tokenizer::fit(&text, cfg.vocab));
+
+    let handle = serve_generate(
+        spmm_scorer(Arc::clone(&lm)),
+        spmm_generator(Arc::clone(&lm), 4),
+        Arc::clone(&tok),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 8,
+            max_batch: cfg.batch,
+            max_wait: Duration::from_millis(5),
+            max_gen_tokens: 16,
+        },
+    )
+    .unwrap();
+
+    // concurrent clients: generation is deterministic per prompt at
+    // temperature 0, whatever the decode batch happens to hold
+    let addr = handle.addr;
+    let mut threads = Vec::new();
+    for c in 0..3usize {
+        threads.push(std::thread::spawn(move || -> u64 {
+            let mut cl = ServeClient::connect(addr).unwrap();
+            cl.set_timeout(Duration::from_secs(120)).unwrap();
+            let prompt = format!("the quick brown fox number {c}");
+            let (t1, n1) = cl.generate(&prompt, 8, 0.0).unwrap();
+            let (t2, n2) = cl.generate(&prompt, 8, 0.0).unwrap();
+            assert!(n1 <= 8, "server caps generation: {n1}");
+            assert_eq!((t1, n1), (t2, n2), "greedy generation must be stable");
+            // scoring still works on the same connection (shared model)
+            let (nll, toks) = cl.nll(&prompt).unwrap();
+            assert!(nll.is_finite() && toks > 0);
+            (n1 + n2) as u64
+        }));
+    }
+    let mut delivered = 0u64;
+    for t in threads {
+        delivered += t.join().unwrap();
+    }
+    let gs = handle.gen_stats();
+    assert_eq!(gs.completed, 6);
+    assert_eq!(gs.completed, gs.requests);
+    // counters reconcile with what clients actually received
+    assert_eq!(gs.tokens_generated, delivered, "stats must reconcile: {gs:?}");
+    let hist_steps: u64 = gs.batch_fill.iter().sum();
+    assert_eq!(hist_steps, gs.decode_steps, "histogram covers every step");
+    handle.shutdown().unwrap();
+}

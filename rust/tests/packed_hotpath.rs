@@ -48,7 +48,7 @@ fn packed_server_scores_match_direct_eval() {
     let cfg = test_config();
     let mut rng = Rng::new(41);
     let params = ParamSet::init_outliers(&cfg, &mut rng);
-    let packed = SparseLm::compress(&params, 8, 16, 16);
+    let packed = Arc::new(SparseLm::compress(&params, 8, 16, 16));
     let tok = Arc::new(test_tokenizer(cfg.vocab));
 
     // direct in-process reference for one sentence
@@ -69,13 +69,14 @@ fn packed_server_scores_match_direct_eval() {
     // the same sentence through the server (packed weights on the
     // scoring thread — never expanded)
     let handle = serve(
-        spmm_scorer(packed),
+        spmm_scorer(Arc::clone(&packed)),
         Arc::clone(&tok),
         ServerConfig {
             addr: "127.0.0.1:0".into(),
             max_conns: 4,
             max_batch: b,
             max_wait: Duration::from_millis(5),
+            ..Default::default()
         },
     )
     .unwrap();

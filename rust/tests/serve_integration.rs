@@ -30,6 +30,7 @@ fn server_cfg(batch: usize) -> ServerConfig {
         max_conns: 8,
         max_batch: batch,
         max_wait: Duration::from_millis(5),
+        ..Default::default()
     }
 }
 
