@@ -1,0 +1,158 @@
+#!/usr/bin/env python3
+"""Perf-trajectory gate: compare emitted BENCH_*.json files against a
+committed baseline.
+
+Usage:
+    python3 ci/bench_gate.py --dir bench-out --baseline bench/baseline.json
+    python3 ci/bench_gate.py --self-test
+
+Run schema (one file per bench, written by `sparselm::bench::BenchReport`;
+see docs/BENCHMARKS.md):
+
+    {"schema": 1, "bench": "f2_spmm", "fast": true,
+     "metrics": {"bytes_over_dense_8_16_1536x512":
+                   {"value": 0.556, "unit": "x", "better": "lower"}, ...},
+     "perf": {...}}
+
+Baseline schema (bench/baseline.json):
+
+    {"schema": 1, "default_rel_tol": 0.10,
+     "metrics": {
+        "f2_spmm:bytes_over_dense_8_16_1536x512": {"max": 0.60},
+        "perf_hotpath:tiled_speedup_b8":          {"min": 1.3},
+        "f1_speedup_scaling:headline_speedup_8192_b8_8_16":
+            {"value": 1.8, "rel_tol": 0.05}
+     }}
+
+Gate rules, per baseline entry (metrics are addressed "bench:key"):
+  * the metric must exist in the run — a vanished trajectory point fails;
+  * "min" / "max" are hard bounds (used for the roofline-bytes
+    invariants and within-run speedup ratios, which are
+    machine-comparable);
+  * "value" compares with relative tolerance ("rel_tol", default
+    default_rel_tol = 10%) applied in the metric's *worse* direction
+    only — a metric may improve past the baseline freely, it may not
+    regress past the tolerance.
+
+Metrics present in the run but absent from the baseline pass untouched
+(new trajectory points land first, get baselined next change). Exit
+status 0 = gate passed, 1 = regression or schema problem.
+
+Stdlib only — no pip installs.
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def load_runs(bench_dir):
+    """Flatten every BENCH_*.json in `bench_dir` to {"bench:key": metric}."""
+    runs = {}
+    paths = sorted(pathlib.Path(bench_dir).glob("BENCH_*.json"))
+    if not paths:
+        raise SystemExit(f"bench_gate: no BENCH_*.json files in {bench_dir}")
+    for path in paths:
+        doc = json.loads(path.read_text())
+        if doc.get("schema") != 1:
+            raise SystemExit(f"bench_gate: {path} has schema {doc.get('schema')!r}, want 1")
+        bench = doc["bench"]
+        for key, metric in doc.get("metrics", {}).items():
+            runs[f"{bench}:{key}"] = metric
+    return runs
+
+
+def check(baseline, runs):
+    """Return a list of human-readable failure strings (empty = pass)."""
+    failures = []
+    default_tol = float(baseline.get("default_rel_tol", 0.10))
+    for key, gate in baseline.get("metrics", {}).items():
+        metric = runs.get(key)
+        if metric is None:
+            failures.append(f"{key}: missing from run (trajectory point vanished)")
+            continue
+        value = float(metric["value"])
+        if "min" in gate and value < float(gate["min"]):
+            failures.append(f"{key}: {value:g} < min {gate['min']:g}")
+        if "max" in gate and value > float(gate["max"]):
+            failures.append(f"{key}: {value:g} > max {gate['max']:g}")
+        if "value" in gate:
+            base = float(gate["value"])
+            tol = float(gate.get("rel_tol", default_tol))
+            better = metric.get("better", "higher")
+            if better == "higher":
+                floor = base * (1.0 - tol)
+                if value < floor:
+                    failures.append(
+                        f"{key}: {value:g} regressed below {floor:g} "
+                        f"(baseline {base:g}, tol {tol:.0%})"
+                    )
+            else:
+                ceil = base * (1.0 + tol)
+                if value > ceil:
+                    failures.append(
+                        f"{key}: {value:g} regressed above {ceil:g} "
+                        f"(baseline {base:g}, tol {tol:.0%})"
+                    )
+    return failures
+
+
+def self_test():
+    baseline = {
+        "schema": 1,
+        "default_rel_tol": 0.10,
+        "metrics": {
+            "b:ratio_ok": {"max": 0.60},
+            "b:ratio_bad": {"max": 0.60},
+            "b:speed_ok": {"min": 1.3},
+            "b:lat_ok": {"value": 10.0},
+            "b:lat_bad": {"value": 10.0},
+            "b:thr_improved": {"value": 100.0},
+            "b:gone": {"min": 0.0},
+        },
+    }
+    runs = {
+        "b:ratio_ok": {"value": 0.55, "better": "lower"},
+        "b:ratio_bad": {"value": 0.70, "better": "lower"},
+        "b:speed_ok": {"value": 1.9, "better": "higher"},
+        "b:lat_ok": {"value": 10.5, "better": "lower"},
+        "b:lat_bad": {"value": 12.0, "better": "lower"},
+        "b:thr_improved": {"value": 250.0, "better": "higher"},
+        "b:unbaselined": {"value": 1.0, "better": "higher"},
+    }
+    failures = check(baseline, runs)
+    failed_keys = sorted(f.split(":")[0] + ":" + f.split(":")[1].split()[0] for f in failures)
+    expect = sorted(["b:gone", "b:lat_bad", "b:ratio_bad"])
+    assert failed_keys == expect, (failed_keys, expect, failures)
+    # bounds and tolerance directions: improvements never fail
+    assert not check({"metrics": {"b:thr_improved": {"value": 100.0}}}, runs)
+    assert not check({"metrics": {"b:lat_ok": {"value": 10.0}}}, runs)
+    print("bench_gate self-test: OK")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dir", default="bench-out", help="directory holding BENCH_*.json")
+    ap.add_argument("--baseline", default="bench/baseline.json")
+    ap.add_argument("--self-test", action="store_true")
+    args = ap.parse_args()
+    if args.self_test:
+        self_test()
+        return
+    baseline = json.loads(pathlib.Path(args.baseline).read_text())
+    runs = load_runs(args.dir)
+    failures = check(baseline, runs)
+    gated = len(baseline.get("metrics", {}))
+    if failures:
+        print(f"bench_gate: {len(failures)}/{gated} gated metrics FAILED\n")
+        for f in failures:
+            print(f"  FAIL {f}")
+        sys.exit(1)
+    print(f"bench_gate: {gated} gated metrics OK ({len(runs)} recorded)")
+    for key in sorted(baseline.get("metrics", {})):
+        print(f"  PASS {key} = {runs[key]['value']:g}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,14 +5,22 @@
 //! implemented in silicon (both halve weight traffic; 8:16 pays 0.875 vs
 //! 0.75 metadata bits/element). No 8:16 hardware exists, so this is the
 //! analytic `hwsim` model (DESIGN.md §Substitutions).
+//!
+//! Emits `BENCH_f1_speedup_scaling.json` (schema: docs/BENCHMARKS.md)
+//! so the headline model numbers are part of the recorded perf
+//! trajectory — these are deterministic given [`HwModel`], so the CI
+//! bench gate pins them tightly: a drift means someone changed the
+//! roofline.
 
-use sparselm::bench::TablePrinter;
+use sparselm::bench::{BenchReport, TablePrinter};
 use sparselm::hwsim::{speedup_curve, GemmShape, HwModel};
 
 fn main() {
     let hw = HwModel::default();
     let patterns = [(2usize, 4usize), (4, 8), (8, 16), (16, 32)];
     let sizes = [256usize, 512, 1024, 2048, 4096, 8192, 16384];
+    let mut report = BenchReport::new("f1_speedup_scaling");
+    report.extra("hw", hw.to_json());
 
     for batch in [1usize, 8, 64] {
         println!("\n# §2 figure — projected speedup vs matrix size (batch={batch})\n");
@@ -37,18 +45,26 @@ fn main() {
 
     // the paper's headline claim: large decode GEMMs land in 1.5-2.0x
     let g = GemmShape::new(8, 8192, 8192);
+    let s24 = hw.speedup(g, 2, 4);
+    let s816 = hw.speedup(g, 8, 16);
     println!(
-        "\nheadline: 8192² @ batch 8 -> 2:4 {:.2}x, 8:16 {:.2}x (paper: ~1.5-2x)",
-        hw.speedup(g, 2, 4),
-        hw.speedup(g, 8, 16)
+        "\nheadline: 8192² @ batch 8 -> 2:4 {s24:.2}x, 8:16 {s816:.2}x (paper: ~1.5-2x)"
     );
+    report.higher("headline_speedup_8192_b8_2_4", s24, "x");
+    report.higher("headline_speedup_8192_b8_8_16", s816, "x");
+    // scaling anchor points for the trajectory
+    for &size in &[1024usize, 4096] {
+        let s = hw.speedup(GemmShape::new(8, size, size), 8, 16);
+        report.higher(&format!("speedup_{size}_b8_8_16"), s, "x");
+    }
     // metadata cost of 8:16 over 2:4 as % of dense traffic
     let r24 = hw.sparse_nm(g, 2, 4);
     let r816 = hw.sparse_nm(g, 8, 16);
     let dense = hw.dense(g);
-    println!(
-        "8:16 metadata premium over 2:4: {:.2}% of dense traffic",
-        100.0 * (r816.meta_bytes - r24.meta_bytes)
-            / (dense.weight_bytes + dense.act_bytes)
-    );
+    let premium_pct =
+        100.0 * (r816.meta_bytes - r24.meta_bytes) / (dense.weight_bytes + dense.act_bytes);
+    println!("8:16 metadata premium over 2:4: {premium_pct:.2}% of dense traffic");
+    report.lower("metadata_premium_pct_dense", premium_pct, "%");
+
+    report.emit().expect("emit BENCH_f1_speedup_scaling.json");
 }

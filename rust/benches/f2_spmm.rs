@@ -14,8 +14,14 @@
 //! operand streams ≤ 0.60× the dense bf16 weight bytes, measured within
 //! 1% of the model's prediction, and spmm matches the dense reference
 //! within bf16 tolerance.
+//!
+//! Emits `BENCH_f2_spmm.json` (schema: docs/BENCHMARKS.md) with the
+//! byte ratios and latencies per shape × pattern; the byte-ratio
+//! metrics are deterministic and gated by CI's `bench-gate` job against
+//! `bench/baseline.json` (a roofline-bytes violation fails the gate
+//! independently of this bench's own asserts).
 
-use sparselm::bench::{fast_mode, time_it, TablePrinter};
+use sparselm::bench::{fast_mode, time_it, BenchReport, TablePrinter};
 use sparselm::hwsim::{GemmShape, HwModel};
 use sparselm::pruning::mask_topn_per_block;
 use sparselm::sparse::{spmm, spmm_parallel, Kernel, PackedNm};
@@ -28,6 +34,8 @@ fn main() {
     let batch = 8usize;
     let threads = default_parallelism();
     let mut rng = Rng::new(2024);
+    let mut report = BenchReport::new("f2_spmm");
+    report.extra("hw", hw.to_json());
 
     // stand-in linear shapes (tiny/e2e families) + paper-scale decode GEMMs
     let mut shapes: Vec<(usize, usize)> = vec![(256, 256), (512, 256), (256, 512), (1536, 512)];
@@ -91,7 +99,20 @@ fn main() {
                 format!("{:.3}", traffic_ratio),
                 format!("{:.4}", chk.ratio()),
             ]);
+
+            let tag = format!("{n}_{m}_{rows}x{cols}");
+            report.lower(&format!("spmm_ms_{tag}"), dt_spmm * 1e3, "ms");
+            report.lower(&format!("spmm_par_ms_{tag}"), dt_par * 1e3, "ms");
+            report.lower(&format!("bytes_over_dense_{tag}"), traffic_ratio, "x");
+            // gate on |measured/modeled - 1| so one baseline bound
+            // covers drift in either direction
+            report.lower(
+                &format!("model_err_{tag}"),
+                (chk.ratio() - 1.0).abs(),
+                "frac",
+            );
         }
+        report.lower(&format!("dense_ms_{rows}x{cols}"), dt_dense * 1e3, "ms");
     }
 
     println!(
@@ -100,4 +121,5 @@ fn main() {
          vs-model    = measured / hwsim::traffic prediction (1.0 = exact)\n\
          acceptance: 8:16 bytes/dense <= 0.60 and vs-model within 1% — asserted above"
     );
+    report.emit().expect("emit BENCH_f2_spmm.json");
 }

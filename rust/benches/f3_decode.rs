@@ -18,8 +18,13 @@
 //! decode step streams ≤ 0.60× the dense bf16 weight bytes, measured
 //! within 1% of the model's prediction (with and without the 16:256
 //! outlier side stream priced in).
+//!
+//! Emits `BENCH_f3_decode.json` (schema: docs/BENCHMARKS.md): per
+//! config × format the decode tok/s, the per-step operand bytes and the
+//! measured-vs-modeled error — the byte metrics are deterministic and
+//! gated by CI's `bench-gate` job.
 
-use sparselm::bench::{fast_mode, time_it, TablePrinter};
+use sparselm::bench::{fast_mode, time_it, BenchReport, TablePrinter};
 use sparselm::hwsim::HwModel;
 use sparselm::model::{KvCache, ModelConfig, ParamSet, SparseLm};
 use sparselm::util::Rng;
@@ -27,6 +32,8 @@ use sparselm::util::Rng;
 fn main() {
     let hw = HwModel::default();
     let mut rng = Rng::new(2025);
+    let mut report = BenchReport::new("f3_decode");
+    report.extra("hw", hw.to_json());
 
     let mut cfgs: Vec<ModelConfig> = Vec::new();
     let mut tiny = ModelConfig::preset("tiny").expect("tiny preset");
@@ -115,6 +122,19 @@ fn main() {
                 format!("{ratio_model:.4}"),
                 format!("{speedup:.2}x"),
             ]);
+
+            let tag = format!("{}_{}", cfg.name, label.replace(':', "_").replace('+', "_"));
+            report.higher(&format!("decode_tok_s_{tag}"), 1.0 / per_tok, "tok/s");
+            report.lower(&format!("prefill_ms_{tag}"), dt_prefill * 1e3, "ms");
+            if packed {
+                report.lower(&format!("bytes_over_dense_{tag}"), ratio_dense, "x");
+                report.lower(
+                    &format!("model_err_{tag}"),
+                    (ratio_model - 1.0).abs(),
+                    "frac",
+                );
+                report.higher(&format!("modeled_speedup_{tag}"), speedup, "x");
+            }
         }
     }
 
@@ -125,4 +145,5 @@ fn main() {
          speedup*    = modeled decode-step speedup at these shapes (no 8:16 silicon exists;\n\
                        latency columns here are host-CPU reference numbers, not the claim)"
     );
+    report.emit().expect("emit BENCH_f3_decode.json");
 }

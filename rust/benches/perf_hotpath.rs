@@ -5,24 +5,36 @@
 //!   * score+mask+vc host mirror (per-layer prune fallback)
 //!   * PackedNm pack/unpack throughput (runs after every prune job)
 //!   * decode-free spmm vs dense GEMM vs the old unpack+matmul round-trip
+//!   * the **tiled multi-row micro-kernel vs the per-row kernel** at
+//!     batch 8 (the cache/register-blocking win; acceptance target
+//!     ≥ 1.5×, gated ≥ 1.3× in `bench/baseline.json` to absorb CI
+//!     hardware noise)
+//!   * decode-shaped `spmm_parallel` p50 on the **persistent worker
+//!     pool vs the per-call scoped-spawn driver** (the spawn tax)
 //!   * k:256 outlier extraction + packing
 //!   * PJRT prune chain (score -> mask -> finalize artifacts; needs the
 //!     real xla backend, `--features xla`)
 //!   * lm_nll eval batch latency (the eval loop's unit of work)
+//!
+//! Emits `BENCH_perf_hotpath.json` (schema: docs/BENCHMARKS.md); the
+//! tiling and pool speedup ratios are within-run ratios — machine
+//! comparable — and gated by CI's `bench-gate` job.
 
 use std::sync::Arc;
 
-use sparselm::bench::{fmt_rate, time_it, ExperimentCtx, TablePrinter};
+use sparselm::bench::{fast_mode, fmt_rate, time_it, BenchReport, ExperimentCtx, TablePrinter};
 use sparselm::coordinator::ModelExec;
 use sparselm::model::ParamSet;
 use sparselm::pruning::{prune_layer, ActStats, PruneSpec};
 use sparselm::runtime::{literal_f32, Engine};
 use sparselm::sparse::{Csr, PackedNm, StructuredOutliers};
 use sparselm::tensor::Tensor;
+use sparselm::util::timer::LatencyStats;
 use sparselm::util::Rng;
 
 fn main() -> sparselm::Result<()> {
     sparselm::util::logging::init();
+    let mut report = BenchReport::new("perf_hotpath");
     let mut rng = Rng::new(99);
     let (r, c) = (768usize, 256usize);
     let w = Tensor::randn_outliers(vec![r, c], 0.05, 0.01, 8.0, &mut rng);
@@ -39,6 +51,7 @@ fn main() -> sparselm::Result<()> {
         format!("{:.2} ms", dt * 1e3),
         fmt_rate(bytes / dt),
     ]);
+    report.lower("prune_layer_ms", dt * 1e3, "ms");
 
     let res = prune_layer(&w, &stats, &spec);
     let dt = time_it(2, 20, || {
@@ -49,6 +62,7 @@ fn main() -> sparselm::Result<()> {
         format!("{:.2} ms", dt * 1e3),
         fmt_rate(bytes / dt),
     ]);
+    report.lower("pack_8_16_ms", dt * 1e3, "ms");
 
     let packed = PackedNm::from_dense_mask(&res.w_ns, &res.keep, 8, 16);
     let dt = time_it(2, 20, || packed.to_dense());
@@ -76,19 +90,67 @@ fn main() -> sparselm::Result<()> {
         fmt_rate(bytes / dt),
     ]);
     let pk_bytes = sparselm::sparse::Kernel::operand_bytes(&packed) as f64;
-    let dt = time_it(2, 20, || sparselm::sparse::spmm(&x, &packed));
+    let dt_tiled = time_it(2, 20, || sparselm::sparse::spmm(&x, &packed));
     t.row(&[
-        "GEMM spmm 8:16 decode-free".into(),
-        format!("{:.2} ms", dt * 1e3),
-        fmt_rate(pk_bytes / dt),
+        "GEMM spmm 8:16 tiled (b=8)".into(),
+        format!("{:.2} ms", dt_tiled * 1e3),
+        fmt_rate(pk_bytes / dt_tiled),
     ]);
+    report.lower("spmm_tiled_ms_b8", dt_tiled * 1e3, "ms");
+    // the pre-tiling per-row kernel, same packed operand — the tiling
+    // refactor's acceptance comparison (bitwise-equal output, see
+    // tests/spmm_tiling.rs; only the loop order differs)
+    let (wr, _wc) = (packed.rows, packed.cols);
+    let dt_rowwise = time_it(2, 20, || {
+        let mut out = vec![0.0f32; x.dims2().0 * wr];
+        packed.accumulate_rows_rowwise(&x, 0, wr, &mut out);
+        out
+    });
+    t.row(&[
+        "GEMM spmm 8:16 per-row kernel".into(),
+        format!("{:.2} ms", dt_rowwise * 1e3),
+        fmt_rate(pk_bytes / dt_rowwise),
+    ]);
+    report.lower("spmm_rowwise_ms_b8", dt_rowwise * 1e3, "ms");
+    let tiled_speedup = dt_rowwise / dt_tiled;
+    println!("tiled multi-row kernel vs per-row at b=8: {tiled_speedup:.2}x");
+    report.higher("tiled_speedup_b8", tiled_speedup, "x");
+
     let threads = sparselm::util::pool::default_parallelism();
     let dt = time_it(2, 20, || sparselm::sparse::spmm_parallel(&x, &packed, threads));
     t.row(&[
-        format!("GEMM spmm 8:16 parallel x{threads}"),
+        format!("GEMM spmm 8:16 pool x{threads}"),
         format!("{:.2} ms", dt * 1e3),
         fmt_rate(pk_bytes / dt),
     ]);
+    report.lower("spmm_pool_ms_b8", dt * 1e3, "ms");
+
+    // decode-step-shaped latency distribution: the persistent pool vs
+    // per-call scoped spawning on the same chunking. p50 is what a
+    // decode step in the serving loop actually pays per linear.
+    let reps = if fast_mode() { 30usize } else { 120 };
+    let mut pool_lat = LatencyStats::default();
+    let mut scoped_lat = LatencyStats::default();
+    // warm the global pool once so its lazy spawn is not in sample 0
+    std::hint::black_box(sparselm::sparse::spmm_parallel(&x, &packed, threads));
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(sparselm::sparse::spmm_parallel(&x, &packed, threads));
+        pool_lat.record(t0.elapsed());
+        let t0 = std::time::Instant::now();
+        std::hint::black_box(sparselm::sparse::spmm_parallel_scoped(&x, &packed, threads));
+        scoped_lat.record(t0.elapsed());
+    }
+    let (p50_pool, p50_scoped) = (pool_lat.percentile(50.0), scoped_lat.percentile(50.0));
+    println!(
+        "spmm_parallel p50 x{threads}: pool {:.3} ms vs scoped-spawn {:.3} ms ({:.2}x)",
+        p50_pool * 1e3,
+        p50_scoped * 1e3,
+        p50_scoped / p50_pool
+    );
+    report.lower("spmm_parallel_pool_p50_ms", p50_pool * 1e3, "ms");
+    report.lower("spmm_parallel_scoped_p50_ms", p50_scoped * 1e3, "ms");
+    report.higher("pool_p50_speedup", p50_scoped / p50_pool, "x");
 
     let dt = time_it(2, 20, || {
         StructuredOutliers::from_dense_mask(&w, &res.omask, 16, 256)
@@ -168,5 +230,6 @@ fn main() -> sparselm::Result<()> {
             st.compiles, st.compile_secs, st.executions, st.execute_secs
         );
     }
+    report.emit()?;
     Ok(())
 }

@@ -47,6 +47,127 @@ pub fn fast_mode() -> bool {
     matches!(std::env::var("SPARSELM_FAST").as_deref(), Ok("1") | Ok("true"))
 }
 
+// ------------------------------------------------- trajectory reports
+
+use crate::util::json::Json;
+use crate::util::perf;
+use std::collections::BTreeMap;
+
+/// One metric inside a [`BenchReport`]: a value, its unit, and which
+/// direction is an improvement (the gate script applies tolerance in
+/// that direction).
+#[derive(Clone, Debug)]
+pub struct BenchMetric {
+    pub value: f64,
+    pub unit: String,
+    /// `"higher"` or `"lower"`
+    pub better: &'static str,
+}
+
+/// Machine-readable perf-trajectory record: every figure bench
+/// (`f1`/`f2`/`f3`/`perf_hotpath`) builds one of these alongside its
+/// printed table and [emits](Self::emit) it as `BENCH_<name>.json`
+/// (schema in `docs/BENCHMARKS.md`). CI's `bench-gate` job compares the
+/// emitted files against the committed `bench/baseline.json` and fails
+/// on regressions, so the numbers the paper argues about are *recorded*
+/// per commit instead of scrolling away in a log.
+pub struct BenchReport {
+    name: String,
+    metrics: BTreeMap<String, BenchMetric>,
+    extra: Vec<(String, Json)>,
+}
+
+impl BenchReport {
+    pub fn new(name: &str) -> BenchReport {
+        BenchReport {
+            name: name.to_string(),
+            metrics: BTreeMap::new(),
+            extra: Vec::new(),
+        }
+    }
+
+    /// Record a metric where **higher** is better (throughput, speedup).
+    pub fn higher(&mut self, key: &str, value: f64, unit: &str) {
+        self.metrics.insert(
+            key.to_string(),
+            BenchMetric {
+                value,
+                unit: unit.to_string(),
+                better: "higher",
+            },
+        );
+    }
+
+    /// Record a metric where **lower** is better (latency, byte ratios).
+    pub fn lower(&mut self, key: &str, value: f64, unit: &str) {
+        self.metrics.insert(
+            key.to_string(),
+            BenchMetric {
+                value,
+                unit: unit.to_string(),
+                better: "lower",
+            },
+        );
+    }
+
+    /// Attach free-form context (e.g. the hwsim device description) —
+    /// recorded but never gated.
+    pub fn extra(&mut self, key: &str, value: Json) {
+        self.extra.push((key.to_string(), value));
+    }
+
+    pub fn to_json(&self) -> Json {
+        let metrics: Vec<(&str, Json)> = self
+            .metrics
+            .iter()
+            .map(|(k, m)| {
+                (
+                    k.as_str(),
+                    Json::obj(vec![
+                        ("value", Json::num(m.value)),
+                        ("unit", Json::str(m.unit.clone())),
+                        ("better", Json::str(m.better)),
+                    ]),
+                )
+            })
+            .collect();
+        let mut fields = vec![
+            ("schema", Json::num(1.0)),
+            ("bench", Json::str(self.name.clone())),
+            ("fast", Json::Bool(fast_mode())),
+            ("metrics", Json::obj(metrics)),
+            ("perf", perf::snapshot().to_json()),
+        ];
+        for (k, v) in &self.extra {
+            fields.push((k.as_str(), v.clone()));
+        }
+        Json::obj(fields)
+    }
+
+    /// Directory `BENCH_*.json` files land in: `$SPARSELM_BENCH_DIR`,
+    /// or the working directory when unset.
+    pub fn out_dir() -> PathBuf {
+        std::env::var("SPARSELM_BENCH_DIR")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("."))
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`.
+    pub fn emit_to(&self, dir: &std::path::Path) -> crate::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, format!("{}\n", self.to_json()))?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<name>.json` into [`Self::out_dir`] and say so.
+    pub fn emit(&self) -> crate::Result<PathBuf> {
+        let path = self.emit_to(&Self::out_dir())?;
+        println!("\nwrote {}", path.display());
+        Ok(path)
+    }
+}
+
 /// Markdown-ish table printer shared by the table benches.
 pub struct TablePrinter {
     widths: Vec<usize>,
@@ -233,5 +354,36 @@ mod tests {
     fn fmt_rate_units() {
         assert!(fmt_rate(2.5e9).contains("GB/s"));
         assert!(fmt_rate(3.0e6).contains("MB/s"));
+    }
+
+    #[test]
+    fn bench_report_schema_roundtrips() {
+        let mut r = BenchReport::new("unit_test");
+        r.higher("tok_s", 1234.5, "tok/s");
+        r.lower("bytes_ratio", 0.555, "x");
+        r.extra("hw", Json::str("test-device"));
+        let j = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(j.at("schema").as_usize(), Some(1));
+        assert_eq!(j.at("bench").as_str(), Some("unit_test"));
+        let m = j.at("metrics");
+        assert_eq!(m.at("tok_s").at("value").as_f64(), Some(1234.5));
+        assert_eq!(m.at("tok_s").at("better").as_str(), Some("higher"));
+        assert_eq!(m.at("bytes_ratio").at("better").as_str(), Some("lower"));
+        assert_eq!(m.at("bytes_ratio").at("unit").as_str(), Some("x"));
+        assert!(j.at("perf").get("operand_bytes").is_some());
+        assert_eq!(j.at("hw").as_str(), Some("test-device"));
+    }
+
+    #[test]
+    fn bench_report_emits_file() {
+        let dir = std::env::temp_dir().join("sparselm-bench-report-test");
+        let mut r = BenchReport::new("emit_test");
+        r.higher("x", 1.0, "");
+        let path = r.emit_to(&dir).unwrap();
+        assert_eq!(path.file_name().unwrap(), "BENCH_emit_test.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let j = Json::parse(text.trim()).unwrap();
+        assert_eq!(j.at("bench").as_str(), Some("emit_test"));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

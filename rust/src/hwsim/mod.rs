@@ -17,7 +17,11 @@
 //! ([`crate::sparse::Kernel::operand_bytes`]), and [`ModelCheck`] ties
 //! that measurement back to this model's prediction — `cargo bench
 //! --bench f2_spmm` walks the paper's layer shapes and asserts
-//! measured ≈ modeled and packed ≤ 0.60× dense at 8:16.
+//! measured ≈ modeled and packed ≤ 0.60× dense at 8:16. Every such
+//! bench also records its measured-vs-modeled numbers (plus
+//! [`HwModel::to_json`], the device parameters that produced them) in
+//! a `BENCH_*.json` trajectory file that CI's `bench-gate` job
+//! compares against `bench/baseline.json` — see `docs/BENCHMARKS.md`.
 
 mod speedup;
 mod traffic;

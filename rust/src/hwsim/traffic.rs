@@ -122,6 +122,20 @@ impl HwModel {
         self.dense(g).latency / self.sparse_nm(g, n, m).latency
     }
 
+    /// Device-parameter description embedded in `BENCH_*.json`
+    /// trajectory files, so every recorded modeled number names the
+    /// roofline that produced it (see `docs/BENCHMARKS.md`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("bandwidth_bytes_s", Json::num(self.bandwidth)),
+            ("compute_macs_s", Json::num(self.compute)),
+            ("overhead_s", Json::num(self.overhead)),
+            ("sparse_compute", Json::Bool(self.sparse_compute)),
+            ("elem_bytes", Json::num(self.elem_bytes)),
+        ])
+    }
+
     /// Modeled weight-operand traffic (values + pattern metadata bytes)
     /// of one packed N:M GEMM — the prediction side of the
     /// measured-vs-modeled comparison.
@@ -396,6 +410,20 @@ mod tests {
                 "k_out={k_out}: measured/modeled ratio {}",
                 chk.ratio()
             );
+        }
+    }
+
+    #[test]
+    fn device_description_json_has_all_params() {
+        let j = HwModel::default().to_json();
+        for key in [
+            "bandwidth_bytes_s",
+            "compute_macs_s",
+            "overhead_s",
+            "sparse_compute",
+            "elem_bytes",
+        ] {
+            assert!(j.get(key).is_some(), "missing {key}");
         }
     }
 

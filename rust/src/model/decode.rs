@@ -28,6 +28,7 @@
 
 use crate::sparse::{spmm_vec, Kernel};
 use crate::tensor::{dot, Tensor};
+use crate::util::perf;
 
 use super::forward::{apply_rope, rmsnorm, rope_tables_range, rotate_heads, silu};
 use super::kv::KvCache;
@@ -77,6 +78,7 @@ impl SparseLm {
     /// Shared prefill body: block stack + cache writes, stopping before
     /// the final norm/head.
     fn prefill_hidden(&self, tokens: &[i32], cache: &mut KvCache) -> crate::Result<Tensor> {
+        let _perf = perf::phase(perf::Phase::Prefill);
         let cfg = &self.config;
         let s = tokens.len();
         anyhow::ensure!(s > 0, "prefill: empty token sequence");
@@ -134,6 +136,7 @@ impl SparseLm {
         toks: &[i32],
         caches: &mut [&mut KvCache],
     ) -> crate::Result<Tensor> {
+        let _perf = perf::phase(perf::Phase::Decode);
         let b = toks.len();
         anyhow::ensure!(b > 0, "decode_step: empty batch");
         anyhow::ensure!(

@@ -24,6 +24,7 @@
 
 use crate::sparse::{spmm, spmm_parallel, Kernel, PackedLinear};
 use crate::tensor::{dot, Tensor};
+use crate::util::perf;
 
 use super::config::ModelConfig;
 use super::params::ParamSet;
@@ -165,6 +166,7 @@ impl SparseLm {
     /// to the last row of the embedding (the artifact path clips
     /// identically inside the gather).
     pub fn lm_nll(&self, tokens: &[i32]) -> crate::Result<Tensor> {
+        let _perf = perf::phase(perf::Phase::Score);
         let cfg = &self.config;
         let (b, s) = (cfg.batch, cfg.seq);
         anyhow::ensure!(
@@ -209,6 +211,7 @@ impl SparseLm {
     /// KV-cached incremental path is checked against — it never touches
     /// [`super::KvCache`].
     pub fn full_logits(&self, tokens: &[i32]) -> crate::Result<Tensor> {
+        let _perf = perf::phase(perf::Phase::Score);
         anyhow::ensure!(!tokens.is_empty(), "full_logits: empty sequence");
         let cfg = &self.config;
         let s = tokens.len();

@@ -30,6 +30,12 @@ use std::time::{Duration, Instant};
 
 use crate::eval::Sampler;
 use crate::model::{KvCache, SparseLm};
+use crate::util::timer::LatencyRing;
+
+/// Decode-step latency samples retained for the percentile fields of
+/// [`GenStats`] — a sliding window, so `decode_p50_us` reads "p50 now",
+/// not "p50 since boot".
+const STEP_LATENCY_WINDOW: usize = 4096;
 
 /// One generation request: a tokenized prompt plus sampling policy.
 #[derive(Clone, Debug)]
@@ -85,6 +91,16 @@ pub struct GenStats {
     /// the batch (index 0 unused) — the continuous-batching fill
     /// histogram surfaced by `{"op":"stats"}`
     pub batch_fill: Vec<u64>,
+    /// wall nanos spent inside [`DecodeEngine::step`] (monotone)
+    pub decode_nanos: u64,
+    /// wall nanos spent inside [`DecodeEngine::start`] — admission
+    /// prefills (monotone)
+    pub prefill_nanos: u64,
+    /// decode-step latency p50 in µs over the recent window
+    /// (`0.0` before the first step)
+    pub decode_p50_us: f64,
+    /// decode-step latency p99 in µs over the recent window
+    pub decode_p99_us: f64,
 }
 
 impl GenStats {
@@ -184,6 +200,7 @@ struct ActiveSeq {
 pub struct GenScheduler {
     state: Arc<(Mutex<GenQueue>, Condvar)>,
     stats: Arc<Mutex<GenStats>>,
+    step_lat: Mutex<LatencyRing>,
 }
 
 impl Default for GenScheduler {
@@ -197,6 +214,7 @@ impl GenScheduler {
         GenScheduler {
             state: Arc::new((Mutex::new(GenQueue::default()), Condvar::new())),
             stats: Arc::new(Mutex::new(GenStats::default())),
+            step_lat: Mutex::new(LatencyRing::new(STEP_LATENCY_WINDOW)),
         }
     }
 
@@ -228,7 +246,13 @@ impl GenScheduler {
     }
 
     pub fn stats(&self) -> GenStats {
-        self.stats.lock().unwrap().clone()
+        let mut s = self.stats.lock().unwrap().clone();
+        let lat = self.step_lat.lock().unwrap();
+        if lat.count() > 0 {
+            s.decode_p50_us = lat.percentile(50.0) * 1e6;
+            s.decode_p99_us = lat.percentile(99.0) * 1e6;
+        }
+        s
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -274,7 +298,9 @@ impl GenScheduler {
         if allowed == 0 {
             return Ok(None);
         }
+        let t0 = Instant::now();
         let logits = engine.start(slot, &prompt)?;
+        let prefill_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
         let mut sampler = Sampler::new(p.req.temperature, p.req.seed);
         let tok = sampler.next(&logits) as i32;
         let mut a = ActiveSeq {
@@ -292,6 +318,7 @@ impl GenScheduler {
         {
             let mut s = self.stats.lock().unwrap();
             s.started += 1;
+            s.prefill_nanos += prefill_ns;
             if !stopped {
                 s.tokens_generated += 1;
             }
@@ -379,7 +406,9 @@ impl GenScheduler {
             active.sort_by_key(|a| a.slot);
             let toks: Vec<(usize, i32)> =
                 active.iter().map(|a| (a.slot, a.next_tok)).collect();
+            let t0 = Instant::now();
             let rows = engine.step(&toks)?;
+            let step_dt = t0.elapsed();
             debug_assert_eq!(rows.len(), active.len());
             let fill = active.len();
             let mut done: Vec<usize> = Vec::new();
@@ -408,7 +437,9 @@ impl GenScheduler {
                 }
                 s.batch_fill[fill] += 1;
                 s.tokens_generated += emitted;
+                s.decode_nanos += step_dt.as_nanos().min(u64::MAX as u128) as u64;
             }
+            self.step_lat.lock().unwrap().record(step_dt);
             for &i in done.iter().rev() {
                 let a = active.remove(i);
                 free.push(a.slot);
@@ -597,6 +628,24 @@ mod tests {
         assert_eq!(stats.completed, 1);
         assert_eq!(stats.tokens_generated, 5);
         assert_eq!(stats.decode_steps, 4);
+    }
+
+    #[test]
+    fn stats_record_prefill_and_decode_wall_time() {
+        let ((), stats) = with_running(2, |s| {
+            let r = s
+                .submit(req(1, 3, 5))
+                .recv_timeout(Duration::from_secs(5))
+                .unwrap();
+            assert_eq!(r.steps, 4);
+        });
+        // 1 admission prefill + 4 decode steps ran through the engine;
+        // the wall-time accumulators and the windowed percentiles must
+        // have moved
+        assert!(stats.prefill_nanos > 0, "{stats:?}");
+        assert!(stats.decode_nanos > 0, "{stats:?}");
+        assert!(stats.decode_p50_us > 0.0, "{stats:?}");
+        assert!(stats.decode_p99_us >= stats.decode_p50_us, "{stats:?}");
     }
 
     #[test]

@@ -15,8 +15,11 @@
 //!   greedy) and `seed` (default 0, temperature sampling only) are
 //!   optional. Replies with the generated `text`, token count, decode
 //!   `steps` and the mean decode-batch fill the request observed
-//! * `{"op":"stats"}` → server + batcher + generation counters
-//!   (including the per-step `batch_fill` histogram)
+//! * `{"op":"stats"}` → server + batcher + generation counters:
+//!   the per-step `batch_fill` histogram plus the decode-phase wall
+//!   clocks (`prefill_nanos`, `decode_nanos` — monotone totals inside
+//!   the engine) and the recent-window decode-step latency percentiles
+//!   (`decode_p50_us`, `decode_p99_us`)
 //! * `{"op":"shutdown"}` → drain and stop (admin)
 //!
 //! Responses always carry `"ok"`; failures put a message in `"error"`

@@ -566,6 +566,10 @@ fn handle_conn(
                                 .collect(),
                         ),
                     ));
+                    fields.push(("prefill_nanos", Json::num(gs.prefill_nanos as f64)));
+                    fields.push(("decode_nanos", Json::num(gs.decode_nanos as f64)));
+                    fields.push(("decode_p50_us", Json::num(gs.decode_p50_us)));
+                    fields.push(("decode_p99_us", Json::num(gs.decode_p99_us)));
                 }
                 Response::Stats(Json::obj(fields))
             }
@@ -868,6 +872,11 @@ mod tests {
         assert_eq!(stats.at("gen_completed").as_f64(), Some(1.0));
         assert!(stats.at("decode_steps").as_f64().unwrap() >= 1.0);
         assert!(stats.at("batch_fill").as_arr().is_some());
+        // perf-telemetry fields threaded from GenScheduler
+        assert!(stats.at("decode_nanos").as_f64().unwrap() >= 0.0);
+        assert!(stats.at("prefill_nanos").as_f64().unwrap() > 0.0);
+        assert!(stats.at("decode_p50_us").as_f64().is_some());
+        assert!(stats.at("decode_p99_us").as_f64().is_some());
         h.shutdown().unwrap();
     }
 

@@ -26,7 +26,10 @@ pub use csr::Csr;
 pub use nm::PackedNm;
 pub use outliers::StructuredOutliers;
 pub use patterns::PatternInfo;
-pub use spmm::{spmm, spmm_parallel, spmm_vec, PackedLinear};
+pub use spmm::{
+    dispatch, spmm, spmm_parallel, spmm_parallel_scoped, spmm_vec, MicroKernel, PackedLinear,
+    GEMM_MIN_ROWS, ROW_TILE, WEIGHT_TILE,
+};
 pub use vnm::{vnm_select, PackedVnm};
 
 use crate::tensor::Tensor;
@@ -71,6 +74,14 @@ pub trait Kernel: Send + Sync {
     /// traffic model. Dense kernels report their bf16 deployment
     /// footprint so ratios match the paper's accounting.
     fn operand_bytes(&self) -> usize;
+
+    /// Pattern-metadata blocks one full application of this kernel
+    /// decodes (combinadic unranks) — the [`crate::util::perf`]
+    /// telemetry side. Formats without pattern metadata (dense, CSR,
+    /// structured outliers) report 0.
+    fn decode_blocks(&self) -> usize {
+        0
+    }
 
     /// Output-row partition granularity for parallel row-blocking
     /// ([`PackedVnm`] tiles span `v` consecutive rows).

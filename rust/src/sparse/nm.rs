@@ -156,6 +156,13 @@ impl PackedNm {
         self.values.len()
     }
 
+    /// Pattern blocks this matrix stores (`rows * cols / m`) — each is
+    /// one combinadic unrank for the decoder, the unit the
+    /// [`crate::util::perf`] decoded-blocks counter counts.
+    pub fn n_blocks(&self) -> usize {
+        self.rows * (self.cols / self.pattern.m)
+    }
+
     /// Decoder-side view of the kept values: raw bf16 words, block-major
     /// (`n` per block, `rows * cols / m` blocks row-major).
     pub fn values_raw(&self) -> &[u16] {

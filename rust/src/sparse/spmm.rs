@@ -19,13 +19,31 @@
 //! * [`spmm()`] — single-thread driver;
 //! * [`spmm_vec()`] — one-activation-row GEMV driver (the decode step;
 //!   [`Kernel::accumulate_vec`] skips the batch indirection entirely);
-//! * [`spmm_parallel()`] — row-blocked fork-join on scoped threads
-//!   ([`crate::util::pool::scoped_map`]; no rayon/tokio, offline-safe),
-//!   with a serial fallback below [`PARALLEL_MIN_MACS`].
+//! * [`spmm_parallel()`] — row-blocked fan-out on the **persistent
+//!   worker pool** ([`crate::util::pool::global`]): deterministic
+//!   [`crate::util::pool::chunk_ranges`] chunking, long-lived workers,
+//!   no per-call thread spawn (the old scoped-spawn driver survives as
+//!   [`spmm_parallel_scoped`], the baseline `perf_hotpath` measures
+//!   the spawn tax against), with a serial fallback below
+//!   [`PARALLEL_MIN_MACS`].
 //!
-//! Loop order matters: patterns and values decode **once per weight
-//! block** and are reused across every activation row, so decode cost
-//! amortizes with batch size while the dense path's traffic does not.
+//! Multi-row kernels are **cache-blocked and register-blocked**: a
+//! runtime dispatch table ([`dispatch`], keyed on activation rows —
+//! each format maps the family to its best loop order) picks between
+//! the GEMV path ([`MicroKernel::Gemv`]), a small-batch order that
+//! decodes each weight block once and sweeps [`ROW_TILE`]-wide groups
+//! of activation rows over it ([`MicroKernel::SmallBatch`]), and a
+//! prefill-GEMM order that additionally tiles [`WEIGHT_TILE`] weight
+//! rows so an activation column-block is streamed once per weight tile
+//! instead of once per weight row ([`MicroKernel::TiledGemm`]). All
+//! three accumulate every output element in the same floating-point
+//! order, so the paths are **bitwise interchangeable** — continuous
+//! batching moves sequences between them freely, and
+//! `tests/spmm_tiling.rs` property-checks the equality across formats,
+//! batch sizes and worker counts. Loop order still obeys the paper's
+//! economics: patterns and values decode **once per weight block** and
+//! are reused across every activation row, so decode cost amortizes
+//! with batch size while the dense path's traffic does not.
 
 use super::bits::read_bits;
 use super::csr::Csr;
@@ -36,15 +54,71 @@ use super::vnm::PackedVnm;
 use super::Kernel;
 use crate::pruning::{mask_excluding, mask_topn_per_block};
 use crate::tensor::{bf16_to_f32, dot, Tensor};
-use crate::util::pool::scoped_map;
+use crate::util::pool::{self, chunk_ranges, scoped_map};
+use crate::util::perf;
+use std::sync::Mutex;
+
+// ------------------------------------------------------ dispatch table
+
+/// Micro-kernel families the runtime dispatch table selects between.
+/// Each [`Kernel`] maps the family to its own best loop order (the
+/// V-tiled format always weight-tiles by `v`; dense rows have no
+/// decode step to tile, so both multi-row families share one order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MicroKernel {
+    /// One activation row: the [`spmm_vec`] GEMV loop, no batch
+    /// indirection.
+    Gemv,
+    /// Few activation rows (decode batch): decode each weight block
+    /// once, register-block the activation rows [`ROW_TILE`] wide.
+    SmallBatch,
+    /// Many activation rows (prefill GEMM): additionally tile
+    /// [`WEIGHT_TILE`] weight rows per decoded stack tile so the
+    /// activation stream is reused across the tile.
+    TiledGemm,
+}
+
+/// Activation rows per register block — the j-loop unroll width. Four
+/// independent accumulators amortize each decoded (value, index) pair
+/// over four activation rows and give the CPU independent FMA chains.
+pub const ROW_TILE: usize = 4;
+
+/// Weight rows decoded per stack tile in the [`MicroKernel::TiledGemm`]
+/// order: an activation column-block is streamed once per tile instead
+/// of once per weight row, an 8× cut in activation re-reads for
+/// prefill-sized batches.
+pub const WEIGHT_TILE: usize = 8;
+
+/// Activation-row count at which [`MicroKernel::TiledGemm`] overtakes
+/// the small-batch order (the activation working set stops fitting the
+/// innermost cache level).
+pub const GEMM_MIN_ROWS: usize = 16;
+
+/// The runtime dispatch rule: micro-kernel family by activation-row
+/// count. `(rows, format)` together choose the concrete loop — each
+/// [`Kernel`] impl consults this table in `accumulate_rows`. A zero-row
+/// batch maps to `SmallBatch`, whose loops degenerate to no-ops.
+pub fn dispatch(rows: usize) -> MicroKernel {
+    if rows == 1 {
+        MicroKernel::Gemv
+    } else if rows < GEMM_MIN_ROWS {
+        MicroKernel::SmallBatch
+    } else {
+        MicroKernel::TiledGemm
+    }
+}
+
+// ------------------------------------------------------------- drivers
 
 /// `y (b, out) = x (b, in) @ Wᵀ`, single-threaded.
 pub fn spmm(x: &Tensor, w: &dyn Kernel) -> Tensor {
+    let _p = perf::phase(perf::Phase::Spmm);
     let (rows, cols) = w.dims();
     let (b, cin) = x.dims2();
     assert_eq!(cin, cols, "spmm: x has {cin} features, W expects {cols}");
     let mut out = vec![0.0f32; b * rows];
     w.accumulate_rows(x, 0, rows, &mut out);
+    perf::record_spmm(w.operand_bytes(), w.decode_blocks());
     Tensor::new(vec![b, rows], out)
 }
 
@@ -57,6 +131,7 @@ pub fn spmm(x: &Tensor, w: &dyn Kernel) -> Tensor {
 /// [`Kernel::accumulate_vec`], which packed formats implement without
 /// the batch indirection of the matrix path.
 pub fn spmm_vec(x: &[f32], w: &dyn Kernel) -> Vec<f32> {
+    let _p = perf::phase(perf::Phase::Spmm);
     let (rows, cols) = w.dims();
     assert_eq!(
         x.len(),
@@ -66,24 +141,24 @@ pub fn spmm_vec(x: &[f32], w: &dyn Kernel) -> Vec<f32> {
     );
     let mut out = vec![0.0f32; rows];
     w.accumulate_vec(x, 0, rows, &mut out);
+    perf::record_gemv(w.operand_bytes(), w.decode_blocks());
     out
 }
 
-/// Work-size floor below which `spmm_parallel` stays serial: scoped
-/// fork-join spawns OS threads per call, and for the small per-layer
-/// GEMMs of the stand-in configs that overhead can exceed the kernel
-/// itself. ~64k MACs ≈ the break-even point observed on laptop-class
-/// CPUs.
+/// Work-size floor below which the parallel drivers stay serial: even a
+/// pool wake costs more than the kernel itself for the small per-layer
+/// GEMMs of the stand-in configs. ~64k MACs ≈ the break-even point
+/// observed on laptop-class CPUs.
 pub const PARALLEL_MIN_MACS: usize = 1 << 16;
 
-/// [`spmm()`] with the output rows split into aligned blocks run
-/// fork-join on up to `threads` scoped threads
-/// ([`crate::util::pool::scoped_map`] — the borrow-safe half of the
-/// pool module; the FIFO [`crate::util::pool::ThreadPool`] queue takes
-/// boxed `'static` jobs and cannot borrow `x`/`w`). Threads are spawned
-/// per call, so small GEMMs (below [`PARALLEL_MIN_MACS`]) run serial;
-/// results are stitched in input order, making the output bitwise
-/// identical to the serial path.
+/// [`spmm()`] with the output rows split into aligned blocks
+/// ([`chunk_ranges`] — deterministic, so the stitched result is bitwise
+/// identical to the serial path no matter which worker runs which
+/// chunk) and fanned out on the **persistent**
+/// [`crate::util::pool::WorkerPool`]. `threads` bounds the chunk
+/// count; execution uses the global pool plus the calling thread, so a
+/// decode step pays a condvar wake instead of `threads` OS-thread
+/// spawns. Small GEMMs (below [`PARALLEL_MIN_MACS`]) run serial.
 pub fn spmm_parallel(x: &Tensor, w: &dyn Kernel, threads: usize) -> Tensor {
     let (rows, cols) = w.dims();
     let (b, cin) = x.dims2();
@@ -93,16 +168,56 @@ pub fn spmm_parallel(x: &Tensor, w: &dyn Kernel, threads: usize) -> Tensor {
     if threads == 1 || rows <= align || b * rows * cols < PARALLEL_MIN_MACS {
         return spmm(x, w);
     }
-    // block size: ceil(rows / threads), rounded up to the row alignment
-    let per = (rows + threads - 1) / threads;
-    let per = ((per + align - 1) / align * align).max(align);
-    let mut ranges = Vec::new();
-    let mut r0 = 0usize;
-    while r0 < rows {
-        let r1 = (r0 + per).min(rows);
-        ranges.push((r0, r1));
-        r0 = r1;
+    let ranges = chunk_ranges(rows, align, threads);
+    if ranges.len() == 1 {
+        return spmm(x, w);
     }
+    let _p = perf::phase(perf::Phase::Spmm);
+    // per-chunk buffers behind (uncontended) mutexes: each task locks
+    // its own index exactly once, keeping the fan-out closure safe Rust
+    let parts: Vec<Mutex<Vec<f32>>> = ranges
+        .iter()
+        .map(|&(a, z)| Mutex::new(vec![0.0f32; b * (z - a)]))
+        .collect();
+    pool::global().run(ranges.len(), &|i| {
+        let (a, z) = ranges[i];
+        let mut buf = parts[i].lock().unwrap();
+        w.accumulate_rows(x, a, z, &mut buf);
+    });
+    let mut out = vec![0.0f32; b * rows];
+    for (&(a, z), part) in ranges.iter().zip(parts) {
+        let part = part.into_inner().unwrap();
+        let width = z - a;
+        for i in 0..b {
+            out[i * rows + a..i * rows + z]
+                .copy_from_slice(&part[i * width..(i + 1) * width]);
+        }
+    }
+    perf::record_spmm(w.operand_bytes(), w.decode_blocks());
+    Tensor::new(vec![b, rows], out)
+}
+
+/// The pre-pool parallel driver: identical chunking, but fork-join on
+/// scoped OS threads spawned **per call**
+/// ([`crate::util::pool::scoped_map`]). Retained as the measured
+/// baseline for the thread-spawn tax — `cargo bench --bench
+/// perf_hotpath` reports the p50 latency of this driver against
+/// [`spmm_parallel`] on the same shapes. Output is bitwise identical
+/// to both the serial and pool paths.
+pub fn spmm_parallel_scoped(x: &Tensor, w: &dyn Kernel, threads: usize) -> Tensor {
+    let (rows, cols) = w.dims();
+    let (b, cin) = x.dims2();
+    assert_eq!(cin, cols, "spmm: x has {cin} features, W expects {cols}");
+    let threads = threads.max(1);
+    let align = w.row_align().max(1);
+    if threads == 1 || rows <= align || b * rows * cols < PARALLEL_MIN_MACS {
+        return spmm(x, w);
+    }
+    let ranges = chunk_ranges(rows, align, threads);
+    if ranges.len() == 1 {
+        return spmm(x, w);
+    }
+    let _p = perf::phase(perf::Phase::Spmm);
     let parts = scoped_map(threads, ranges.clone(), |(a, z)| {
         let mut buf = vec![0.0f32; b * (z - a)];
         w.accumulate_rows(x, a, z, &mut buf);
@@ -116,21 +231,19 @@ pub fn spmm_parallel(x: &Tensor, w: &dyn Kernel, threads: usize) -> Tensor {
                 .copy_from_slice(&part[i * width..(i + 1) * width]);
         }
     }
+    perf::record_spmm(w.operand_bytes(), w.decode_blocks());
     Tensor::new(vec![b, rows], out)
 }
 
 // ------------------------------------------------------------- PackedNm
 
-impl Kernel for PackedNm {
-    fn dims(&self) -> (usize, usize) {
-        (self.rows, self.cols)
-    }
-
-    fn operand_bytes(&self) -> usize {
-        self.bytes()
-    }
-
-    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+impl PackedNm {
+    /// The pre-tiling multi-row kernel: one output row at a time, one
+    /// accumulator per activation row. Kept as the reference the tiled
+    /// path is property-checked against (bitwise — the per-element
+    /// accumulation order is identical) and as the "per-row kernel"
+    /// baseline `perf_hotpath` prices the tiling win against.
+    pub fn accumulate_rows_rowwise(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
         let (n, m) = (self.pattern.n, self.pattern.m);
         let bits = self.pattern.codebook_bits();
         let (bsz, cin) = x.dims2();
@@ -166,6 +279,118 @@ impl Kernel for PackedNm {
                     out[i * width + (r - r0)] += acc;
                 }
             }
+        }
+    }
+
+    /// Cache-blocked multi-row kernel: decode `wt` weight rows' worth of
+    /// one block column into a stack tile (`wt == 1` is the small-batch
+    /// order, `wt == WEIGHT_TILE` the prefill-GEMM order), then sweep
+    /// [`ROW_TILE`]-wide groups of activation rows over the decoded
+    /// tile. Per output element the accumulation order matches
+    /// [`Self::accumulate_rows_rowwise`] exactly (blocks ascending,
+    /// in-block terms ascending), so the paths are bitwise equal.
+    fn accumulate_rows_tiled(
+        &self,
+        x: &Tensor,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+        wt: usize,
+    ) {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let (bsz, cin) = x.dims2();
+        debug_assert_eq!(cin, self.cols);
+        debug_assert!(r1 <= self.rows && r0 <= r1);
+        debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        let bpr = self.cols / m;
+        let unranker = Unranker::new(m, n);
+        let width = r1 - r0;
+        let xd = x.data();
+        let values = self.values_raw();
+        let meta = self.meta_words();
+        // decoded (indices, widened values) for one weight tile × block
+        let mut tidx = vec![0usize; wt * n];
+        let mut tval = vec![0.0f32; wt * n];
+        let mut rt = r0;
+        while rt < r1 {
+            let hi = (rt + wt).min(r1);
+            let th = hi - rt;
+            for bblk in 0..bpr {
+                for (ti, r) in (rt..hi).enumerate() {
+                    let rank = read_bits(meta, (r * bpr + bblk) * bits as usize, bits);
+                    unranker.unrank_into(rank, &mut tidx[ti * n..ti * n + n]);
+                    let vi = (r * bpr + bblk) * n;
+                    for t in 0..n {
+                        tval[ti * n + t] = bf16_to_f32(values[vi + t]);
+                    }
+                }
+                let base = bblk * m;
+                let mut i = 0usize;
+                while i + ROW_TILE <= bsz {
+                    let x0 = &xd[i * cin + base..i * cin + base + m];
+                    let x1 = &xd[(i + 1) * cin + base..(i + 1) * cin + base + m];
+                    let x2 = &xd[(i + 2) * cin + base..(i + 2) * cin + base + m];
+                    let x3 = &xd[(i + 3) * cin + base..(i + 3) * cin + base + m];
+                    for ti in 0..th {
+                        let iv = &tidx[ti * n..ti * n + n];
+                        let vv = &tval[ti * n..ti * n + n];
+                        let (mut a0, mut a1) = (0.0f32, 0.0f32);
+                        let (mut a2, mut a3) = (0.0f32, 0.0f32);
+                        for t in 0..n {
+                            let v = vv[t];
+                            let j = iv[t];
+                            a0 += v * x0[j];
+                            a1 += v * x1[j];
+                            a2 += v * x2[j];
+                            a3 += v * x3[j];
+                        }
+                        let o = rt + ti - r0;
+                        out[i * width + o] += a0;
+                        out[(i + 1) * width + o] += a1;
+                        out[(i + 2) * width + o] += a2;
+                        out[(i + 3) * width + o] += a3;
+                    }
+                    i += ROW_TILE;
+                }
+                while i < bsz {
+                    let xr = &xd[i * cin + base..i * cin + base + m];
+                    for ti in 0..th {
+                        let iv = &tidx[ti * n..ti * n + n];
+                        let vv = &tval[ti * n..ti * n + n];
+                        let mut acc = 0.0f32;
+                        for t in 0..n {
+                            acc += vv[t] * xr[iv[t]];
+                        }
+                        out[i * width + (rt + ti - r0)] += acc;
+                    }
+                    i += 1;
+                }
+            }
+            rt = hi;
+        }
+    }
+}
+
+impl Kernel for PackedNm {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    fn decode_blocks(&self) -> usize {
+        self.n_blocks()
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        let (bsz, _) = x.dims2();
+        match dispatch(bsz) {
+            MicroKernel::Gemv => self.accumulate_vec(&x.data()[..self.cols], r0, r1, out),
+            MicroKernel::SmallBatch => self.accumulate_rows_tiled(x, r0, r1, out, 1),
+            MicroKernel::TiledGemm => self.accumulate_rows_tiled(x, r0, r1, out, WEIGHT_TILE),
         }
     }
 
@@ -210,14 +435,24 @@ impl Kernel for PackedVnm {
         self.bytes()
     }
 
+    fn decode_blocks(&self) -> usize {
+        self.n_tiles()
+    }
+
     fn row_align(&self) -> usize {
         self.v
     }
 
     fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        let (bsz, cin) = x.dims2();
+        if dispatch(bsz) == MicroKernel::Gemv {
+            return self.accumulate_vec(&x.data()[..self.cols], r0, r1, out);
+        }
+        // the V-row tile IS the natural weight tile here: one pattern
+        // decode serves v rows, so both multi-row families share the
+        // tiled-by-v order with the ROW_TILE-wide j-loop
         let (n, m) = (self.pattern.n, self.pattern.m);
         let bits = self.pattern.codebook_bits();
-        let (bsz, cin) = x.dims2();
         debug_assert_eq!(cin, self.cols);
         debug_assert_eq!(out.len(), bsz * (r1 - r0));
         let bpr = self.cols / m;
@@ -227,7 +462,7 @@ impl Kernel for PackedVnm {
         let values = self.values_raw();
         let meta = self.meta_words();
         let mut idx = vec![0usize; n];
-        let mut vals = vec![0.0f32; n];
+        let mut tval = vec![0.0f32; self.v * n];
         // first tile covering r0 (ranges from spmm_parallel are v-aligned;
         // arbitrary ranges still work, decoding the partial tile)
         let mut t0 = r0 - r0 % self.v;
@@ -239,20 +474,50 @@ impl Kernel for PackedVnm {
                 let ti = tile_row * bpr + bblk;
                 let rank = read_bits(meta, ti * bits as usize, bits);
                 unranker.unrank_into(rank, &mut idx);
-                let base = bblk * m;
                 for r in lo..hi {
                     let vi = ti * self.v * n + (r - t0) * n;
                     for t in 0..n {
-                        vals[t] = bf16_to_f32(values[vi + t]);
+                        tval[(r - lo) * n + t] = bf16_to_f32(values[vi + t]);
                     }
-                    for i in 0..bsz {
-                        let xrow = &xd[i * cin + base..i * cin + base + m];
+                }
+                let base = bblk * m;
+                let mut i = 0usize;
+                while i + ROW_TILE <= bsz {
+                    let x0 = &xd[i * cin + base..i * cin + base + m];
+                    let x1 = &xd[(i + 1) * cin + base..(i + 1) * cin + base + m];
+                    let x2 = &xd[(i + 2) * cin + base..(i + 2) * cin + base + m];
+                    let x3 = &xd[(i + 3) * cin + base..(i + 3) * cin + base + m];
+                    for r in lo..hi {
+                        let vv = &tval[(r - lo) * n..(r - lo) * n + n];
+                        let (mut a0, mut a1) = (0.0f32, 0.0f32);
+                        let (mut a2, mut a3) = (0.0f32, 0.0f32);
+                        for t in 0..n {
+                            let v = vv[t];
+                            let j = idx[t];
+                            a0 += v * x0[j];
+                            a1 += v * x1[j];
+                            a2 += v * x2[j];
+                            a3 += v * x3[j];
+                        }
+                        let o = r - r0;
+                        out[i * width + o] += a0;
+                        out[(i + 1) * width + o] += a1;
+                        out[(i + 2) * width + o] += a2;
+                        out[(i + 3) * width + o] += a3;
+                    }
+                    i += ROW_TILE;
+                }
+                while i < bsz {
+                    let xr = &xd[i * cin + base..i * cin + base + m];
+                    for r in lo..hi {
+                        let vv = &tval[(r - lo) * n..(r - lo) * n + n];
                         let mut acc = 0.0f32;
                         for t in 0..n {
-                            acc += vals[t] * xrow[idx[t]];
+                            acc += vv[t] * xr[idx[t]];
                         }
                         out[i * width + (r - r0)] += acc;
                     }
+                    i += 1;
                 }
             }
             t0 += self.v;
@@ -311,6 +576,9 @@ impl Kernel for StructuredOutliers {
         let (bsz, cin) = x.dims2();
         debug_assert_eq!(cin, self.cols);
         debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        if dispatch(bsz) == MicroKernel::Gemv {
+            return self.accumulate_vec(&x.data()[..self.cols], r0, r1, out);
+        }
         let bpr = self.cols / self.m;
         let width = r1 - r0;
         let xd = x.data();
@@ -326,13 +594,37 @@ impl Kernel for StructuredOutliers {
                     vals[t] = bf16_to_f32(vs[t]);
                 }
                 let base = bblk * self.m;
-                for i in 0..bsz {
+                let mut i = 0usize;
+                while i + ROW_TILE <= bsz {
+                    let x0 = &xd[i * cin + base..i * cin + base + self.m];
+                    let x1 = &xd[(i + 1) * cin + base..(i + 1) * cin + base + self.m];
+                    let x2 = &xd[(i + 2) * cin + base..(i + 2) * cin + base + self.m];
+                    let x3 = &xd[(i + 3) * cin + base..(i + 3) * cin + base + self.m];
+                    let (mut a0, mut a1) = (0.0f32, 0.0f32);
+                    let (mut a2, mut a3) = (0.0f32, 0.0f32);
+                    for t in 0..self.k {
+                        let v = vals[t];
+                        let j = is[t] as usize;
+                        a0 += v * x0[j];
+                        a1 += v * x1[j];
+                        a2 += v * x2[j];
+                        a3 += v * x3[j];
+                    }
+                    let o = r - r0;
+                    out[i * width + o] += a0;
+                    out[(i + 1) * width + o] += a1;
+                    out[(i + 2) * width + o] += a2;
+                    out[(i + 3) * width + o] += a3;
+                    i += ROW_TILE;
+                }
+                while i < bsz {
                     let xrow = &xd[i * cin + base..i * cin + base + self.m];
                     let mut acc = 0.0f32;
                     for t in 0..self.k {
                         acc += vals[t] * xrow[is[t] as usize];
                     }
                     out[i * width + (r - r0)] += acc;
+                    i += 1;
                 }
             }
         }
@@ -378,6 +670,9 @@ impl Kernel for Csr {
         let (bsz, cin) = x.dims2();
         debug_assert_eq!(cin, self.cols);
         debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        if dispatch(bsz) == MicroKernel::Gemv {
+            return self.accumulate_vec(&x.data()[..self.cols], r0, r1, out);
+        }
         let (row_ptr, col_idx, values) = self.raw_parts();
         let width = r1 - r0;
         let xd = x.data();
@@ -386,13 +681,37 @@ impl Kernel for Csr {
             if lo == hi {
                 continue;
             }
-            for i in 0..bsz {
+            let mut i = 0usize;
+            while i + ROW_TILE <= bsz {
+                let x0 = &xd[i * cin..(i + 1) * cin];
+                let x1 = &xd[(i + 1) * cin..(i + 2) * cin];
+                let x2 = &xd[(i + 2) * cin..(i + 3) * cin];
+                let x3 = &xd[(i + 3) * cin..(i + 4) * cin];
+                let (mut a0, mut a1) = (0.0f32, 0.0f32);
+                let (mut a2, mut a3) = (0.0f32, 0.0f32);
+                for t in lo..hi {
+                    let v = bf16_to_f32(values[t]);
+                    let j = col_idx[t] as usize;
+                    a0 += v * x0[j];
+                    a1 += v * x1[j];
+                    a2 += v * x2[j];
+                    a3 += v * x3[j];
+                }
+                let o = r - r0;
+                out[i * width + o] += a0;
+                out[(i + 1) * width + o] += a1;
+                out[(i + 2) * width + o] += a2;
+                out[(i + 3) * width + o] += a3;
+                i += ROW_TILE;
+            }
+            while i < bsz {
                 let xrow = &xd[i * cin..(i + 1) * cin];
                 let mut acc = 0.0f32;
                 for t in lo..hi {
                     acc += bf16_to_f32(values[t]) * xrow[col_idx[t] as usize];
                 }
                 out[i * width + (r - r0)] += acc;
+                i += 1;
             }
         }
     }
@@ -417,7 +736,10 @@ impl Kernel for Csr {
 /// Dense reference kernel: the same contract over an unpacked weight
 /// matrix. `operand_bytes` reports the bf16 deployment footprint (2
 /// bytes/element) so packed-vs-dense ratios follow the paper's
-/// accounting, not the host f32 mirror.
+/// accounting, not the host f32 mirror. Dense rows have no decode step
+/// to amortize, so both multi-row dispatch families share the plain
+/// row-major order (per-element math is [`dot`] on every path — the
+/// bitwise contract holds trivially).
 impl Kernel for Tensor {
     fn dims(&self) -> (usize, usize) {
         self.dims2()
@@ -432,6 +754,9 @@ impl Kernel for Tensor {
         let (_, cols) = self.dims2();
         debug_assert_eq!(cin, cols);
         debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        if dispatch(bsz) == MicroKernel::Gemv {
+            return self.accumulate_vec(&x.data()[..cols], r0, r1, out);
+        }
         let width = r1 - r0;
         let xd = x.data();
         for r in r0..r1 {
@@ -508,6 +833,10 @@ impl Kernel for PackedLinear {
 
     fn operand_bytes(&self) -> usize {
         self.weights.bytes() + self.outliers.as_ref().map_or(0, |o| o.bytes())
+    }
+
+    fn decode_blocks(&self) -> usize {
+        self.weights.n_blocks()
     }
 
     fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
@@ -626,14 +955,16 @@ mod tests {
         let serial = spmm(&x, &layer);
         for threads in [2usize, 3, 8] {
             let par = spmm_parallel(&x, &layer, threads);
-            assert_eq!(par, serial, "threads={threads}");
+            assert_eq!(par, serial, "pool threads={threads}");
+            let scoped = spmm_parallel_scoped(&x, &layer, threads);
+            assert_eq!(scoped, serial, "scoped threads={threads}");
         }
     }
 
     #[test]
     fn parallel_respects_vnm_tile_alignment() {
         let mut rng = Rng::new(106);
-        // large enough to clear PARALLEL_MIN_MACS so the fork-join path
+        // large enough to clear PARALLEL_MIN_MACS so the fan-out path
         // actually runs, with rows not divisible by most thread counts
         let w = Tensor::randn(vec![132, 256], 0.05, &mut rng);
         let mask = vnm_mask(&w, 4, 2, 4);
@@ -644,6 +975,38 @@ mod tests {
         for threads in [2usize, 5, 24] {
             assert_eq!(spmm_parallel(&x, &p, threads), serial, "threads={threads}");
         }
+    }
+
+    #[test]
+    fn tiled_kernel_bitwise_matches_rowwise_reference() {
+        // the tiling refactor's core contract: SmallBatch and TiledGemm
+        // orders reproduce the pre-tiling per-row kernel bit for bit
+        let mut rng = Rng::new(111);
+        let w = Tensor::randn_outliers(vec![37, 512], 0.05, 0.02, 8.0, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let packed = PackedNm::from_dense_mask(&w, &mask, 8, 16);
+        for bsz in [2usize, 3, 4, 5, 8, 16, 33] {
+            let x = Tensor::randn(vec![bsz, 512], 1.0, &mut rng);
+            let mut want = vec![0.0f32; bsz * 37];
+            packed.accumulate_rows_rowwise(&x, 0, 37, &mut want);
+            let got = spmm(&x, &packed);
+            assert_eq!(got.data(), want.as_slice(), "bsz={bsz}");
+            // and on a sub-range, as the parallel driver slices it
+            let mut want_part = vec![0.0f32; bsz * 20];
+            packed.accumulate_rows_rowwise(&x, 9, 29, &mut want_part);
+            let mut got_part = vec![0.0f32; bsz * 20];
+            packed.accumulate_rows(&x, 9, 29, &mut got_part);
+            assert_eq!(got_part, want_part, "bsz={bsz} subrange");
+        }
+    }
+
+    #[test]
+    fn dispatch_table_thresholds() {
+        assert_eq!(dispatch(1), MicroKernel::Gemv);
+        assert_eq!(dispatch(2), MicroKernel::SmallBatch);
+        assert_eq!(dispatch(GEMM_MIN_ROWS - 1), MicroKernel::SmallBatch);
+        assert_eq!(dispatch(GEMM_MIN_ROWS), MicroKernel::TiledGemm);
+        assert_eq!(dispatch(1024), MicroKernel::TiledGemm);
     }
 
     #[test]
@@ -673,6 +1036,18 @@ mod tests {
             packed.operand_bytes(),
             dense_bytes
         );
+    }
+
+    #[test]
+    fn decode_blocks_counts_pattern_blocks() {
+        let mut rng = Rng::new(112);
+        let w = Tensor::randn(vec![48, 256], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let packed = PackedNm::from_dense_mask(&w, &mask, 8, 16);
+        assert_eq!(Kernel::decode_blocks(&packed), 48 * 256 / 16);
+        assert_eq!(Kernel::decode_blocks(&w), 0, "dense has no patterns");
+        let layer = PackedLinear::new(packed.clone(), None);
+        assert_eq!(Kernel::decode_blocks(&layer), packed.n_blocks());
     }
 
     #[test]

@@ -152,6 +152,13 @@ impl PackedVnm {
         self.meta_bits() as f64 / (self.rows * self.cols) as f64
     }
 
+    /// Pattern entries this matrix stores (one combinadic rank per
+    /// `(V, M)` tile) — the decoder's unrank count for one full pass,
+    /// the unit the [`crate::util::perf`] decoded-blocks counter counts.
+    pub fn n_tiles(&self) -> usize {
+        ((self.rows + self.v - 1) / self.v) * (self.cols / self.pattern.m)
+    }
+
     /// Storage in bytes: bf16 values + packed metadata.
     pub fn bytes(&self) -> usize {
         self.values.len() * 2 + (self.meta_bits() + 7) / 8

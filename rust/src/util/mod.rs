@@ -8,6 +8,7 @@
 pub mod args;
 pub mod json;
 pub mod logging;
+pub mod perf;
 pub mod pool;
 pub mod propcheck;
 pub mod rng;

@@ -1,0 +1,282 @@
+//! Global performance telemetry for the serving hot path.
+//!
+//! The roofline benches (`f2_spmm`, `f3_decode`) *predict* what the
+//! packed kernels stream; this module is the **measurement side wired
+//! into the production code paths**: process-wide atomic counters for
+//! decoded pattern blocks and weight-operand bytes (bumped once per
+//! GEMM by [`crate::sparse::spmm`]/[`crate::sparse::spmm_vec`]/
+//! [`crate::sparse::spmm_parallel`] — never inside inner loops), plus
+//! wall-time accumulators per [`Phase`] threaded through
+//! [`crate::model::SparseLm::lm_nll`] (score), `prefill` and
+//! `decode_step`.
+//!
+//! Every `BENCH_*.json` trajectory file embeds a [`Snapshot`] (see
+//! `docs/BENCHMARKS.md`), and `serve::GenScheduler` reports its own
+//! per-step latency stats alongside these counters, so a perf
+//! regression shows up both in the CI bench gate and in live
+//! `{"op":"stats"}` output.
+//!
+//! Phases are independent accumulators, not an exclusive partition: a
+//! decode step's wall time includes the spmm time of its linears, so
+//! `Decode ⊇ Spmm` for a pure-decode workload. Counters are global and
+//! lock-free; concurrent scorers/generators all add into the same
+//! totals. Use [`snapshot`] + [`Snapshot::delta`] to meter a region.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use super::json::Json;
+
+/// Number of [`Phase`] variants (array sizing).
+pub const N_PHASES: usize = 4;
+
+/// Hot-path phases with dedicated wall-time accumulators.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Batch scoring forward (`SparseLm::lm_nll` / `full_logits`).
+    Score = 0,
+    /// Prompt prefill into a KV cache.
+    Prefill = 1,
+    /// One shared decode step over the in-flight batch.
+    Decode = 2,
+    /// Any packed/dense GEMM or GEMV through the spmm drivers.
+    Spmm = 3,
+}
+
+impl Phase {
+    pub const ALL: [Phase; N_PHASES] = [Phase::Score, Phase::Prefill, Phase::Decode, Phase::Spmm];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Phase::Score => "score",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::Spmm => "spmm",
+        }
+    }
+}
+
+struct Counters {
+    spmm_calls: AtomicU64,
+    gemv_calls: AtomicU64,
+    operand_bytes: AtomicU64,
+    decoded_blocks: AtomicU64,
+    phase_ns: [AtomicU64; N_PHASES],
+    phase_calls: [AtomicU64; N_PHASES],
+}
+
+static COUNTERS: Counters = Counters {
+    spmm_calls: AtomicU64::new(0),
+    gemv_calls: AtomicU64::new(0),
+    operand_bytes: AtomicU64::new(0),
+    decoded_blocks: AtomicU64::new(0),
+    phase_ns: [
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+    ],
+    phase_calls: [
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+        AtomicU64::new(0),
+    ],
+};
+
+/// One matrix-path GEMM completed, streaming `operand_bytes` of packed
+/// weight operand and decoding `blocks` pattern blocks.
+pub fn record_spmm(operand_bytes: usize, blocks: usize) {
+    COUNTERS.spmm_calls.fetch_add(1, Ordering::Relaxed);
+    COUNTERS
+        .operand_bytes
+        .fetch_add(operand_bytes as u64, Ordering::Relaxed);
+    COUNTERS
+        .decoded_blocks
+        .fetch_add(blocks as u64, Ordering::Relaxed);
+}
+
+/// One GEMV-path (single activation row) application completed.
+pub fn record_gemv(operand_bytes: usize, blocks: usize) {
+    COUNTERS.gemv_calls.fetch_add(1, Ordering::Relaxed);
+    COUNTERS
+        .operand_bytes
+        .fetch_add(operand_bytes as u64, Ordering::Relaxed);
+    COUNTERS
+        .decoded_blocks
+        .fetch_add(blocks as u64, Ordering::Relaxed);
+}
+
+/// RAII wall-time meter: the elapsed time between construction and drop
+/// is added to `phase`'s accumulator.
+pub struct PhaseGuard {
+    phase: Phase,
+    start: Instant,
+}
+
+impl Drop for PhaseGuard {
+    fn drop(&mut self) {
+        let ns = self.start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        COUNTERS.phase_ns[self.phase as usize].fetch_add(ns, Ordering::Relaxed);
+        COUNTERS.phase_calls[self.phase as usize].fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Start metering `phase`; keep the guard alive for the region's extent.
+pub fn phase(phase: Phase) -> PhaseGuard {
+    PhaseGuard {
+        phase,
+        start: Instant::now(),
+    }
+}
+
+/// Point-in-time copy of every counter.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Snapshot {
+    pub spmm_calls: u64,
+    pub gemv_calls: u64,
+    pub operand_bytes: u64,
+    pub decoded_blocks: u64,
+    pub phase_ns: [u64; N_PHASES],
+    pub phase_calls: [u64; N_PHASES],
+}
+
+impl Snapshot {
+    /// Counter movement since `earlier` (saturating — robust to a
+    /// [`reset`] between the two snapshots).
+    pub fn delta(&self, earlier: &Snapshot) -> Snapshot {
+        let mut d = Snapshot {
+            spmm_calls: self.spmm_calls.saturating_sub(earlier.spmm_calls),
+            gemv_calls: self.gemv_calls.saturating_sub(earlier.gemv_calls),
+            operand_bytes: self.operand_bytes.saturating_sub(earlier.operand_bytes),
+            decoded_blocks: self.decoded_blocks.saturating_sub(earlier.decoded_blocks),
+            ..Snapshot::default()
+        };
+        for i in 0..N_PHASES {
+            d.phase_ns[i] = self.phase_ns[i].saturating_sub(earlier.phase_ns[i]);
+            d.phase_calls[i] = self.phase_calls[i].saturating_sub(earlier.phase_calls[i]);
+        }
+        d
+    }
+
+    /// Accumulated wall seconds in `p`.
+    pub fn phase_secs(&self, p: Phase) -> f64 {
+        self.phase_ns[p as usize] as f64 / 1e9
+    }
+
+    /// The `"perf"` object every `BENCH_*.json` embeds.
+    pub fn to_json(&self) -> Json {
+        let phases = Phase::ALL
+            .iter()
+            .map(|&p| {
+                (
+                    p.name(),
+                    Json::obj(vec![
+                        ("wall_ns", Json::num(self.phase_ns[p as usize] as f64)),
+                        ("calls", Json::num(self.phase_calls[p as usize] as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj(vec![
+            ("spmm_calls", Json::num(self.spmm_calls as f64)),
+            ("gemv_calls", Json::num(self.gemv_calls as f64)),
+            ("operand_bytes", Json::num(self.operand_bytes as f64)),
+            ("decoded_blocks", Json::num(self.decoded_blocks as f64)),
+            ("phases", Json::obj(phases)),
+        ])
+    }
+}
+
+/// Read every counter.
+pub fn snapshot() -> Snapshot {
+    let mut s = Snapshot {
+        spmm_calls: COUNTERS.spmm_calls.load(Ordering::Relaxed),
+        gemv_calls: COUNTERS.gemv_calls.load(Ordering::Relaxed),
+        operand_bytes: COUNTERS.operand_bytes.load(Ordering::Relaxed),
+        decoded_blocks: COUNTERS.decoded_blocks.load(Ordering::Relaxed),
+        ..Snapshot::default()
+    };
+    for i in 0..N_PHASES {
+        s.phase_ns[i] = COUNTERS.phase_ns[i].load(Ordering::Relaxed);
+        s.phase_calls[i] = COUNTERS.phase_calls[i].load(Ordering::Relaxed);
+    }
+    s
+}
+
+/// Zero every counter. Counters are process-global, so prefer
+/// [`snapshot`] + [`Snapshot::delta`] when other threads may be active.
+pub fn reset() {
+    COUNTERS.spmm_calls.store(0, Ordering::Relaxed);
+    COUNTERS.gemv_calls.store(0, Ordering::Relaxed);
+    COUNTERS.operand_bytes.store(0, Ordering::Relaxed);
+    COUNTERS.decoded_blocks.store(0, Ordering::Relaxed);
+    for i in 0..N_PHASES {
+        COUNTERS.phase_ns[i].store(0, Ordering::Relaxed);
+        COUNTERS.phase_calls[i].store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // counters are process-global and tests run concurrently, so every
+    // assertion here is a monotone >= on a local delta, never an ==
+
+    #[test]
+    fn record_moves_counters_monotonically() {
+        let before = snapshot();
+        record_spmm(1000, 7);
+        record_gemv(250, 3);
+        let d = snapshot().delta(&before);
+        assert!(d.spmm_calls >= 1);
+        assert!(d.gemv_calls >= 1);
+        assert!(d.operand_bytes >= 1250);
+        assert!(d.decoded_blocks >= 10);
+    }
+
+    #[test]
+    fn phase_guard_accumulates_wall_time() {
+        let before = snapshot();
+        {
+            let _g = phase(Phase::Decode);
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        let d = snapshot().delta(&before);
+        assert!(d.phase_calls[Phase::Decode as usize] >= 1);
+        assert!(d.phase_ns[Phase::Decode as usize] >= 1_000_000, "{d:?}");
+    }
+
+    #[test]
+    fn snapshot_json_has_every_field() {
+        record_spmm(1, 1);
+        let j = snapshot().to_json();
+        for key in ["spmm_calls", "gemv_calls", "operand_bytes", "decoded_blocks"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        for p in Phase::ALL {
+            let ph = j.at("phases").at(p.name());
+            assert!(ph.get("wall_ns").is_some() && ph.get("calls").is_some());
+        }
+    }
+
+    #[test]
+    fn delta_saturates_across_reset() {
+        let before = snapshot();
+        reset();
+        let after = snapshot();
+        // not zero in general (other tests run concurrently), but delta
+        // must not underflow
+        let d = after.delta(&before);
+        let _ = d;
+    }
+
+    #[test]
+    fn phase_names_are_stable() {
+        assert_eq!(Phase::Score.name(), "score");
+        assert_eq!(Phase::Prefill.name(), "prefill");
+        assert_eq!(Phase::Decode.name(), "decode");
+        assert_eq!(Phase::Spmm.name(), "spmm");
+    }
+}

@@ -1,14 +1,31 @@
-//! A small fixed-size worker thread pool (tokio/rayon are unavailable
-//! offline).
+//! Worker threads for the compute hot paths (tokio/rayon are
+//! unavailable offline).
 //!
-//! The coordinator schedules per-layer pruning jobs and EBFT block jobs on
-//! this pool; `scope` provides structured fork-join parallelism over
-//! borrowed data (implemented with `std::thread::scope` under the hood so
-//! no `'static` bounds leak into call sites).
+//! Three tiers, by job granularity:
+//!
+//! * [`WorkerPool`] — the **persistent** pool the spmm serving path
+//!   runs on ([`global()`]): long-lived workers with per-worker parked
+//!   queues, woken per fan-out. Spawning OS threads per GEMM was the
+//!   dominant fixed cost of a decode step; the pool replaces the spawn
+//!   tax with a mutex/condvar wake.
+//! * [`scoped_map`] — structured fork-join over borrowed data that
+//!   spawns threads per call (`std::thread::scope`). Still right for
+//!   coarse jobs (per-layer pruning, EBFT blocks) where a few spawns
+//!   amortize over milliseconds of work, and retained as the
+//!   measured baseline the `perf_hotpath` bench compares the pool
+//!   against.
+//! * [`ThreadPool`] — a FIFO queue of boxed `'static` jobs for
+//!   fire-and-forget background work.
+//!
+//! Chunking for row-parallel GEMMs lives here too ([`chunk_ranges`]):
+//! it is a pure function of `(total, align, parts)`, so the work
+//! decomposition — and therefore the stitched result — is deterministic
+//! no matter which worker executes which chunk or in what order.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -75,7 +92,6 @@ impl ThreadPool {
             thread::yield_now();
         }
     }
-
 }
 
 /// Threads worth using for compute-bound fork-join work on this host.
@@ -90,6 +106,248 @@ impl Drop for ThreadPool {
             let _ = w.join();
         }
     }
+}
+
+// -------------------------------------------------- persistent WorkerPool
+
+/// A type-erased fan-out job: workers and the submitting caller claim
+/// task indices from one atomic counter and invoke the caller's closure
+/// through `call`.
+///
+/// SAFETY contract: `data` points into the stack frame of
+/// [`WorkerPool::run`], which does not return until `remaining` hits
+/// zero and the completion latch flips — so no thread dereferences
+/// `data` after that frame could unwind. A worker that pops the job
+/// late (after all tasks are claimed) only touches the atomics.
+struct FanOut {
+    call: unsafe fn(*const (), usize),
+    data: *const (),
+    tasks: usize,
+    next: AtomicUsize,
+    remaining: AtomicUsize,
+    poisoned: AtomicBool,
+    /// first caught panic payload — re-raised by `run` so a kernel
+    /// assertion message survives the pool crossing
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+// SAFETY: see the struct-level contract — `data` is only dereferenced
+// while the submitting `run` frame is provably alive, and the erased
+// closure is required to be `Sync` at the `run` call site.
+unsafe impl Send for FanOut {}
+unsafe impl Sync for FanOut {}
+
+impl FanOut {
+    /// Claim and execute tasks until the counter is exhausted; flip the
+    /// completion latch on the last one. Panics inside a task are
+    /// caught (the pool must survive a failing kernel assertion), the
+    /// task is counted as finished, and the job is flagged poisoned so
+    /// the submitting caller re-raises.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.tasks {
+                break;
+            }
+            let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (self.call)(self.data, i)
+            }));
+            if let Err(payload) = r {
+                self.poisoned.store(true, Ordering::Release);
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            if self.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+                let mut done = self.done.lock().unwrap();
+                *done = true;
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct ParkedQueue {
+    q: Mutex<VecDeque<Arc<FanOut>>>,
+    cv: Condvar,
+}
+
+struct PoolShared {
+    queues: Vec<ParkedQueue>,
+    shutdown: AtomicBool,
+}
+
+/// Persistent worker pool for the spmm serving hot path.
+///
+/// `n` workers are spawned once and live until the pool is dropped
+/// (the [`global()`] pool lives for the process). Each worker parks on
+/// its own mutex/condvar queue, so an idle pool costs nothing and a
+/// fan-out wakes only as many workers as the job has tasks.
+///
+/// [`run`](Self::run) executes `f(0)..f(tasks-1)` across the workers
+/// **and the calling thread**: the caller claims task indices from the
+/// same atomic counter, so a pool busy with another caller's job (or a
+/// nested `run` issued from inside a task) degrades to caller-inline
+/// execution instead of deadlocking. Borrowed environments are safe —
+/// the pool erases the closure's lifetime internally, but `run` does
+/// not return until the last task finished, so the closure and its
+/// borrows strictly outlive every use.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    pub fn new(n: usize) -> WorkerPool {
+        let n = n.max(1);
+        let shared = Arc::new(PoolShared {
+            queues: (0..n)
+                .map(|_| ParkedQueue {
+                    q: Mutex::new(VecDeque::new()),
+                    cv: Condvar::new(),
+                })
+                .collect(),
+            shutdown: AtomicBool::new(false),
+        });
+        let handles = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name(format!("sparselm-pool-{i}"))
+                    .spawn(move || Self::worker_loop(&shared, i))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, handles }
+    }
+
+    fn worker_loop(shared: &PoolShared, idx: usize) {
+        let queue = &shared.queues[idx];
+        loop {
+            let job = {
+                let mut q = queue.q.lock().unwrap();
+                loop {
+                    if let Some(j) = q.pop_front() {
+                        break Some(j);
+                    }
+                    if shared.shutdown.load(Ordering::Acquire) {
+                        break None;
+                    }
+                    q = queue.cv.wait(q).unwrap();
+                }
+            };
+            match job {
+                Some(j) => j.work(),
+                None => break,
+            }
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f(i)` for every `i in 0..tasks` on the pool plus the calling
+    /// thread, returning when all tasks completed. Task-to-thread
+    /// assignment is racy but the task *indices* are not — callers that
+    /// decompose work with [`chunk_ranges`] get deterministic output.
+    ///
+    /// Panics (after all tasks settled) if any task panicked.
+    pub fn run<F>(&self, tasks: usize, f: &F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if tasks == 0 {
+            return;
+        }
+        /// Monomorphic trampoline the erased job calls back through.
+        unsafe fn call_shim<F: Fn(usize) + Sync>(data: *const (), i: usize) {
+            let f = &*(data as *const F);
+            f(i);
+        }
+        let job = Arc::new(FanOut {
+            call: call_shim::<F>,
+            data: f as *const F as *const (),
+            tasks,
+            next: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(tasks),
+            poisoned: AtomicBool::new(false),
+            panic: Mutex::new(None),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        });
+        // wake at most `tasks - 1` workers: the caller takes a share
+        let fan = self.handles.len().min(tasks.saturating_sub(1));
+        for queue in self.shared.queues.iter().take(fan) {
+            queue.q.lock().unwrap().push_back(Arc::clone(&job));
+            queue.cv.notify_one();
+        }
+        job.work();
+        {
+            let mut done = job.done.lock().unwrap();
+            while !*done {
+                done = job.done_cv.wait(done).unwrap();
+            }
+        }
+        if job.poisoned.load(Ordering::Acquire) {
+            // re-raise the original payload so a kernel assertion
+            // message is as debuggable as it was on scoped threads
+            if let Some(payload) = job.panic.lock().unwrap().take() {
+                std::panic::resume_unwind(payload);
+            }
+            panic!("WorkerPool::run: a pooled task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        for q in &self.shared.queues {
+            // take the lock so the store is ordered before the wake
+            let _g = q.q.lock().unwrap();
+            q.cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+static GLOBAL_POOL: OnceLock<WorkerPool> = OnceLock::new();
+
+/// The process-wide [`WorkerPool`] the spmm hot path fans out on.
+/// Sized to `cores - 1` workers because [`WorkerPool::run`] always
+/// executes on the calling thread too.
+pub fn global() -> &'static WorkerPool {
+    GLOBAL_POOL.get_or_init(|| WorkerPool::new(default_parallelism().saturating_sub(1).max(1)))
+}
+
+/// Deterministic row-range chunking for parallel GEMMs: split `total`
+/// rows into at most `parts` contiguous ranges whose boundaries are
+/// multiples of `align` (the kernel's [`crate::sparse::Kernel::row_align`];
+/// the final range absorbs the remainder). Pure function of its inputs —
+/// the same `(total, align, parts)` always yields the same ranges, which
+/// is what makes pool execution bit-reproducible.
+pub fn chunk_ranges(total: usize, align: usize, parts: usize) -> Vec<(usize, usize)> {
+    if total == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1);
+    let align = align.max(1);
+    let per = (total + parts - 1) / parts;
+    let per = ((per + align - 1) / align * align).max(align);
+    let mut ranges = Vec::new();
+    let mut r0 = 0usize;
+    while r0 < total {
+        let r1 = (r0 + per).min(total);
+        ranges.push((r0, r1));
+        r0 = r1;
+    }
+    ranges
 }
 
 /// Structured fork-join over borrowed data: runs `items.len()` tasks on at
@@ -183,5 +441,134 @@ mod tests {
     #[test]
     fn default_parallelism_positive() {
         assert!(default_parallelism() >= 1);
+    }
+
+    // --------------------------------------------------- WorkerPool
+
+    #[test]
+    fn worker_pool_runs_every_task_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicU64> = (0..97).map(|_| AtomicU64::new(0)).collect();
+        pool.run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn worker_pool_borrows_environment() {
+        let pool = WorkerPool::new(3);
+        let base = vec![5u64, 7, 11];
+        let out: Vec<AtomicU64> = (0..3).map(|_| AtomicU64::new(0)).collect();
+        pool.run(3, &|i| {
+            out[i].store(base[i] * 2, Ordering::SeqCst);
+        });
+        let got: Vec<u64> = out.iter().map(|a| a.load(Ordering::SeqCst)).collect();
+        assert_eq!(got, vec![10, 14, 22]);
+    }
+
+    #[test]
+    fn worker_pool_is_reusable_across_jobs() {
+        // the whole point vs scoped_map: threads survive between calls
+        let pool = WorkerPool::new(2);
+        let counter = AtomicU64::new(0);
+        for _ in 0..50 {
+            pool.run(8, &|_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 400);
+    }
+
+    #[test]
+    fn worker_pool_nested_run_does_not_deadlock() {
+        let pool = WorkerPool::new(2);
+        let counter = AtomicU64::new(0);
+        pool.run(4, &|_| {
+            // nested fan-out from inside a task: the inner caller
+            // self-drains even when every worker is busy
+            global().run(3, &|_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 12);
+    }
+
+    #[test]
+    fn worker_pool_shutdown_joins_parked_workers() {
+        let pool = WorkerPool::new(4);
+        pool.run(2, &|_| {});
+        // workers are parked on their condvars here; drop must wake and
+        // join all of them rather than hanging
+        drop(pool);
+    }
+
+    #[test]
+    fn worker_pool_zero_tasks_is_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, &|_| panic!("must not be called"));
+    }
+
+    #[test]
+    #[should_panic(expected = "boom")]
+    fn worker_pool_propagates_task_panics_with_payload() {
+        // the ORIGINAL message must cross the pool boundary, exactly as
+        // it did on scoped threads — not a generic "task panicked"
+        let pool = WorkerPool::new(2);
+        pool.run(4, &|i| {
+            if i == 2 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn global_pool_is_shared_and_alive() {
+        let a = global() as *const WorkerPool;
+        let b = global() as *const WorkerPool;
+        assert_eq!(a, b);
+        let counter = AtomicU64::new(0);
+        global().run(16, &|_| {
+            counter.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(Ordering::SeqCst), 16);
+    }
+
+    // ------------------------------------------------- chunk_ranges
+
+    #[test]
+    fn chunk_ranges_is_deterministic_and_covers() {
+        for &(total, align, parts) in &[
+            (67usize, 1usize, 8usize),
+            (132, 4, 5),
+            (1536, 4, 24),
+            (16, 16, 4),
+            (7, 1, 1),
+            (64, 8, 64),
+        ] {
+            let a = chunk_ranges(total, align, parts);
+            let b = chunk_ranges(total, align, parts);
+            assert_eq!(a, b, "deterministic for {total}/{align}/{parts}");
+            assert!(a.len() <= parts.max(1));
+            // contiguous cover of 0..total
+            let mut pos = 0usize;
+            for (i, &(lo, hi)) in a.iter().enumerate() {
+                assert_eq!(lo, pos, "gap before chunk {i}");
+                assert!(hi > lo, "empty chunk {i}");
+                // interior boundaries respect the alignment
+                if hi != total {
+                    assert_eq!(hi % align, 0, "chunk {i} boundary unaligned");
+                }
+                pos = hi;
+            }
+            assert_eq!(pos, total);
+        }
+    }
+
+    #[test]
+    fn chunk_ranges_empty_total() {
+        assert!(chunk_ranges(0, 4, 8).is_empty());
     }
 }

@@ -71,13 +71,7 @@ impl LatencyStats {
 
     /// p in [0, 100].
     pub fn percentile(&self, p: f64) -> f64 {
-        if self.samples.is_empty() {
-            return 0.0;
-        }
-        let mut s = self.samples.clone();
-        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
-        s[idx.min(s.len() - 1)]
+        percentile_of(&self.samples, p)
     }
 
     pub fn summary(&self, unit_scale: f64, unit: &str) -> String {
@@ -90,6 +84,76 @@ impl LatencyStats {
             self.max() * unit_scale,
             u = unit,
         )
+    }
+}
+
+/// Fixed-capacity ring of the most recent latency samples — the bounded
+/// variant of [`LatencyStats`] for long-running servers, where an
+/// unbounded sample vec would grow with every decode step. Percentiles
+/// are over the retained window (the last `cap` samples), which is the
+/// operationally useful read anyway: `p50 now`, not `p50 since boot`.
+#[derive(Clone, Debug)]
+pub struct LatencyRing {
+    buf: Vec<f64>, // seconds
+    next: usize,
+    cap: usize,
+}
+
+impl LatencyRing {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0, "LatencyRing needs capacity >= 1");
+        LatencyRing {
+            buf: Vec::new(),
+            next: 0,
+            cap,
+        }
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_secs(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, s: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(s);
+        } else {
+            self.buf[self.next] = s;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    /// Samples currently retained (≤ capacity).
+    pub fn count(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn mean(&self) -> f64 {
+        mean_of(&self.buf)
+    }
+
+    /// `p` in [0, 100], over the retained window.
+    pub fn percentile(&self, p: f64) -> f64 {
+        percentile_of(&self.buf, p)
+    }
+}
+
+/// Nearest-rank percentile (`p` in [0, 100]) over an unsorted sample
+/// slice; 0 when empty. Shared by [`LatencyStats`] and [`LatencyRing`].
+fn percentile_of(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+    s[idx.min(s.len() - 1)]
+}
+
+fn mean_of(samples: &[f64]) -> f64 {
+    if samples.is_empty() {
+        0.0
+    } else {
+        samples.iter().sum::<f64>() / samples.len() as f64
     }
 }
 
@@ -130,5 +194,32 @@ mod tests {
         let s = LatencyStats::default();
         assert_eq!(s.mean(), 0.0);
         assert_eq!(s.percentile(99.0), 0.0);
+    }
+
+    #[test]
+    fn ring_caps_at_capacity_and_keeps_recent() {
+        let mut r = LatencyRing::new(4);
+        assert_eq!(r.percentile(50.0), 0.0);
+        for i in 1..=10 {
+            r.record_secs(i as f64);
+        }
+        // only the last 4 samples (7, 8, 9, 10) survive
+        assert_eq!(r.count(), 4);
+        assert!((r.mean() - 8.5).abs() < 1e-9);
+        assert_eq!(r.percentile(0.0), 7.0);
+        assert_eq!(r.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn ring_below_capacity_matches_plain_stats() {
+        let mut r = LatencyRing::new(100);
+        let mut s = LatencyStats::default();
+        for i in 1..=10 {
+            r.record_secs(i as f64);
+            s.record_secs(i as f64);
+        }
+        assert_eq!(r.count(), s.count());
+        assert_eq!(r.percentile(50.0), s.percentile(50.0));
+        assert_eq!(r.mean(), s.mean());
     }
 }
