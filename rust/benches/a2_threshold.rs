@@ -42,7 +42,9 @@ fn main() -> sparselm::Result<()> {
     };
 
     let dense_ppl = ppl_of(&dense)?;
-    println!("\n# A2 — Performance Threshold: bits/param vs PPL ({model}, dense bf16 PPL {dense_ppl:.3})\n");
+    println!(
+        "\n# A2 — Performance Threshold: bits/param vs PPL ({model}, dense bf16 PPL {dense_ppl:.3})\n"
+    );
     let t = TablePrinter::new(&["Variant", "Bits/param", "PPL", "vs dense"], &[26, 11, 9, 9]);
     t.row(&["dense bf16".into(), "16.000".into(), format!("{dense_ppl:.3}"), "1.00x".into()]);
 

@@ -27,6 +27,7 @@
 use sparselm::bench::{fast_mode, time_it, BenchReport, TablePrinter};
 use sparselm::hwsim::HwModel;
 use sparselm::model::{KvCache, ModelConfig, ParamSet, SparseLm};
+use sparselm::quant::QuantSpec;
 use sparselm::util::Rng;
 
 fn main() {
@@ -60,17 +61,25 @@ fn main() {
         let dense_bytes = hw.decode_dense_bytes(&shapes);
         let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
 
+        let q4 = QuantSpec::int4_g128();
         for (label, k_out, lm) in [
             ("dense", 0usize, SparseLm::from_params(&params)),
             ("8:16", 0, SparseLm::compress(&params, 8, 16, 0)),
             ("8:16+16:256", 16, SparseLm::compress(&params, 8, 16, 16)),
+            ("8:16q4", 0, SparseLm::compress_quant(&params, 8, 16, 0, q4)),
+            ("8:16q4+16:256", 16, SparseLm::compress_quant(&params, 8, 16, 16, q4)),
         ] {
             let packed = label != "dense";
+            let quantized = label.contains("q4");
             let measured = lm.linear_operand_bytes();
 
             // measured-vs-modeled decode traffic (the acceptance bar)
             let (ratio_dense, ratio_model) = if packed {
-                let chk = hw.check_decode_operand(&shapes, 8, 16, k_out, measured);
+                let chk = if quantized {
+                    hw.check_decode_quant_operand(&shapes, 8, 16, k_out, q4, measured)
+                } else {
+                    hw.check_decode_operand(&shapes, 8, 16, k_out, measured)
+                };
                 let rd = measured as f64 / dense_bytes;
                 assert!(
                     chk.within(0.01),
@@ -79,9 +88,11 @@ fn main() {
                     chk.ratio()
                 );
                 if k_out == 0 {
+                    // bf16 packed: ≤ 0.60× dense; int4-under-mask: ≤ 0.20×
+                    let bar = if quantized { 0.20 } else { 0.60 };
                     assert!(
-                        rd <= 0.60,
-                        "{} {label}: decode step streams {measured} B > 0.60x dense",
+                        rd <= bar,
+                        "{} {label}: decode step streams {measured} B > {bar}x dense",
                         cfg.name
                     );
                 }
@@ -107,7 +118,9 @@ fn main() {
             }
             let per_tok = t0.elapsed().as_secs_f64() / steps as f64;
 
-            let speedup = if packed {
+            let speedup = if quantized {
+                hw.decode_quant_speedup(&shapes, 8, 16, k_out, q4)
+            } else if packed {
                 hw.decode_speedup(&shapes, 8, 16, k_out)
             } else {
                 1.0
@@ -140,7 +153,7 @@ fn main() {
 
     println!(
         "\nbytes/step  = weight operand bytes one decode step streams (all block linears)\n\
-         vs-dense    = measured packed / dense bf16 (acceptance: 8:16 <= 0.60)\n\
+         vs-dense    = measured packed / dense bf16 (acceptance: 8:16 <= 0.60, 8:16q4 <= 0.20)\n\
          vs-model    = measured / hwsim decode-roofline prediction (acceptance: within 1%)\n\
          speedup*    = modeled decode-step speedup at these shapes (no 8:16 silicon exists;\n\
                        latency columns here are host-CPU reference numbers, not the claim)"

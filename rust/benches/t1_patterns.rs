@@ -47,6 +47,8 @@ fn main() -> sparselm::Result<()> {
         }
         t.row(&row);
     }
-    println!("\npaper shape: PPL(2:4) >> PPL(4:8) > PPL(8:16) > PPL(16:32); VC helps every pattern");
+    println!(
+        "\npaper shape: PPL(2:4) >> PPL(4:8) > PPL(8:16) > PPL(16:32); VC helps every pattern"
+    );
     Ok(())
 }

@@ -58,6 +58,8 @@ fn main() -> sparselm::Result<()> {
             hw.csr_overhead(g, k) / 1024.0
         );
     }
-    println!("\npaper shape: semi-structured ≥ unstructured accuracy at every budget, with less traffic");
+    println!(
+        "\npaper shape: semi-structured ≥ unstructured accuracy at every budget, with less traffic"
+    );
     Ok(())
 }

@@ -73,6 +73,8 @@ fn main() -> sparselm::Result<()> {
             t.row(&row);
         }
     }
-    println!("\npaper shape: outliers monotone; 8:16 > 2:4; EBFT stacks; wide (Mistral) more robust");
+    println!(
+        "\npaper shape: outliers monotone; 8:16 > 2:4; EBFT stacks; wide (Mistral) more robust"
+    );
     Ok(())
 }

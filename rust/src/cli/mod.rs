@@ -17,6 +17,7 @@
 mod quant_cmd;
 mod serve_cmd;
 
+pub use quant_cmd::packed_quant_report;
 pub use serve_cmd::standard_tokenizer;
 
 use std::path::PathBuf;
@@ -61,18 +62,22 @@ fn print_help() {
 
 subcommands:
   train     train a stand-in model via the AOT train-step artifact
-  compress  run the §4 pipeline (SQ -> RIA -> N:M + k:256 outliers -> VC -> EBFT)
+  compress  run the §4 pipeline (SQ -> RIA -> N:M + k:256 outliers -> VC ->
+            EBFT; --quant adds the pack-time int4 stage)
   eval      perplexity (and --zeroshot accuracy) of a checkpoint
   hwsim     projected sparse-GEMM speedups (the paper's §2 analysis)
   info      model/artifact inventory
-  quant     group-quantize a checkpoint (SPQR-style outliers optional)
+  quant     group-quantize a checkpoint (SPQR-style outliers optional;
+            --pack N:M reports the fused sparse+quant PackedQnm footprint)
   owl       OWL per-layer N:M allocation report
   serve     scoring + generation server (dynamic batching for nll/choice,
             continuous batching for generate; --backend spmm packs + serves
-            decode-free, dense serves exact weights via the host forward,
-            pjrt uses the AOT artifacts, scoring only)
+            decode-free, spmm-q4 additionally int4-quantizes the kept values
+            (--qbits/--qgroup), dense serves exact weights via the host
+            forward, pjrt uses the AOT artifacts, scoring only)
   generate  one-shot KV-cached generation from a checkpoint (--random for
-            an offline stand-in; --temperature 0 = greedy)
+            an offline stand-in; --quant for the int4 packed format;
+            --temperature 0 = greedy)
   serve-bench  closed-loop load generator against a running server
 
 common flags: --model <tiny|small|gqa|wide|e2e> --artifacts <dir>
@@ -86,6 +91,17 @@ pub fn parse_pattern(s: &str) -> crate::Result<(usize, usize)> {
         .split_once(':')
         .ok_or_else(|| anyhow::anyhow!("pattern must be N:M, got {s:?}"))?;
     Ok((n.parse()?, m.parse()?))
+}
+
+/// Parse `--qbits` / `--qgroup` into a validated
+/// [`crate::quant::QuantSpec`] — typed errors instead of the
+/// constructor's assert, since CLI flags are untrusted input.
+pub fn parse_quant_spec(args: &Args) -> crate::Result<crate::quant::QuantSpec> {
+    let bits = args.get_usize("qbits", 4)?;
+    let group = args.get_usize("qgroup", 128)?;
+    anyhow::ensure!((2..=8).contains(&bits), "--qbits must be 2..=8, got {bits}");
+    anyhow::ensure!(group > 0, "--qgroup must be > 0, got {group}");
+    Ok(crate::quant::QuantSpec::new(bits as u32, group))
 }
 
 fn cmd_train(args: Args) -> crate::Result<()> {
@@ -135,6 +151,9 @@ fn build_spec(args: &Args) -> crate::Result<PipelineSpec> {
     spec.calib_batches = args.get_usize("calib-batches", 8)?;
     spec.unstructured_outliers = args.get_bool("unstructured");
     spec.use_kernels = !args.get_bool("host-prune");
+    if args.get_bool("quant") {
+        spec.quant = Some(parse_quant_spec(args)?);
+    }
     Ok(spec)
 }
 

@@ -1,15 +1,62 @@
 //! `sparselm quant` — group-quantize a checkpoint's linear layers
 //! (optionally SPQR-style with structured outliers) and report
-//! reconstruction error + bits/param; `sparselm owl` — report the OWL
+//! reconstruction error + bits/param; with `--pack N:M` the report is
+//! for the **fused sparse+quant** serving format
+//! ([`crate::sparse::PackedQnm`]: mask metadata + int codes + scales —
+//! what `--backend spmm-q4` streams); `sparselm owl` — report the OWL
 //! per-layer pattern allocation for a checkpoint.
 
 use std::path::Path;
 
 use crate::model::load_checkpoint;
-use crate::pruning::{layer_outlier_distribution, owl_allocate, ActStats, LayerOutlierStats};
-use crate::quant::{OutlierStore, QuantSpec, SpqrLayer, SpqrSpec};
+use crate::pruning::{
+    layer_outlier_distribution, mask_topn_per_block, owl_allocate, ActStats, LayerOutlierStats,
+};
+use crate::quant::{nm_quant_bits_per_param, OutlierStore, QuantSpec, SpqrLayer, SpqrSpec};
+use crate::sparse::PackedQnm;
 use crate::tensor::rel_error;
 use crate::util::args::Args;
+
+/// The `--pack N:M` report: pack every divisible linear into
+/// [`PackedQnm`] (magnitude top-n selection, the same packing
+/// `--backend spmm-q4` serves) and report measured vs analytic
+/// bits/param. Returns `(layers, measured_bits_per_param)` so the
+/// storage cross-check test can hold the report to
+/// [`nm_quant_bits_per_param`].
+pub fn packed_quant_report(
+    params: &crate::model::ParamSet,
+    n: usize,
+    m: usize,
+    spec: QuantSpec,
+    verbose: bool,
+) -> crate::Result<(usize, f64)> {
+    let mut total_bytes = 0usize;
+    let mut total_elems = 0usize;
+    let mut layers = 0usize;
+    for (name, idx) in params.linear_indices() {
+        let w = &params.tensors[idx];
+        let (_r, c) = w.dims2();
+        if c % m != 0 {
+            continue;
+        }
+        let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+        let fitted = PackedQnm::fit_spec(spec, n, m, c);
+        let p = PackedQnm::from_dense_mask(w, &mask, n, m, fitted);
+        let err = rel_error(&p.to_dense(), &w.mul(&mask));
+        total_bytes += p.bytes();
+        total_elems += w.len();
+        layers += 1;
+        if verbose {
+            println!(
+                "  {name:<28} err {err:.4}  {:.4} bits/param (g{})",
+                p.bits_per_param(),
+                fitted.group
+            );
+        }
+    }
+    anyhow::ensure!(layers > 0, "no packable linear layers found");
+    Ok((layers, 8.0 * total_bytes as f64 / total_elems as f64))
+}
 
 pub fn cmd_quant(args: Args) -> crate::Result<()> {
     let model = args.get_str("model", "tiny");
@@ -18,6 +65,25 @@ pub fn cmd_quant(args: Args) -> crate::Result<()> {
     let group = args.get_usize("group", 128)?;
     let k = args.get_usize("outliers", 0)?;
     let params = load_checkpoint(Path::new(&ckpt))?;
+    anyhow::ensure!((2..=8).contains(&bits), "--bits must be 2..=8, got {bits}");
+    anyhow::ensure!(group > 0, "--group must be > 0");
+    if let Some(pat) = args.get("pack") {
+        let (n, m) = super::parse_pattern(pat)?;
+        let spec = QuantSpec::new(bits, group);
+        println!("packing {ckpt}: {n}:{m} mask + int{bits} g{group} kept values");
+        let (layers, measured) =
+            packed_quant_report(&params, n, m, spec, args.get_bool("verbose"))?;
+        let analytic = nm_quant_bits_per_param(n, m, bits, group);
+        println!(
+            "{layers} layers: {measured:.4} bits/param measured \
+             (analytic {analytic:.4} = {:.3} mask + {:.3} codes+scales; \
+             {:.2}x vs bf16)",
+            crate::sparse::PatternInfo::new(n, m).bits_per_element_codebook(),
+            analytic - crate::sparse::PatternInfo::new(n, m).bits_per_element_codebook(),
+            16.0 / measured
+        );
+        return Ok(());
+    }
     let store = if k > 0 {
         OutlierStore::Structured { k, m: 256 }
     } else {

@@ -91,7 +91,24 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
             );
             serve_lm(lm)?
         }
-        other => anyhow::bail!("unknown --backend {other} (expected spmm|dense|pjrt)"),
+        "spmm-q4" => {
+            let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
+            let k = args.get_usize("outliers", 16)?;
+            let spec = super::parse_quant_spec(&args)?;
+            let lm = SparseLm::compress_quant(&params, n, m, k, spec).with_threads(threads);
+            println!(
+                "packing checkpoint to {n}:{m} + {k}:256 with int{} g{} kept values \
+                 (magnitude selection, dequant in-kernel) — lossy for dense checkpoints",
+                spec.bits, spec.group
+            );
+            println!(
+                "packed-quant linear traffic {} KiB (dense {} KiB)",
+                lm.linear_operand_bytes() / 1024,
+                lm.dense_linear_bytes() / 1024
+            );
+            serve_lm(lm)?
+        }
+        other => anyhow::bail!("unknown --backend {other} (expected spmm|spmm-q4|dense|pjrt)"),
     };
     println!(
         "serving {model} ({ckpt}, {backend}) on {} — newline-JSON ops: \
@@ -132,6 +149,9 @@ pub fn cmd_generate(args: Args) -> crate::Result<()> {
     };
     let lm = if args.get_bool("dense") {
         SparseLm::from_params(&params).with_threads(threads)
+    } else if args.get_bool("quant") {
+        let spec = super::parse_quant_spec(&args)?;
+        SparseLm::compress_quant(&params, n, m, k, spec).with_threads(threads)
     } else {
         SparseLm::compress(&params, n, m, k).with_threads(threads)
     };
@@ -198,7 +218,7 @@ pub fn cmd_serve_bench(args: Args) -> crate::Result<()> {
         lats.extend(h.join().map_err(|_| anyhow::anyhow!("client panicked"))??);
     }
     let wall = t0.elapsed().as_secs_f64();
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lats.sort_by(|a, b| a.total_cmp(b));
     let pct = |p: f64| lats[((lats.len() - 1) as f64 * p) as usize];
     println!(
         "{} requests from {clients} clients in {wall:.2}s ({:.1} req/s)",
@@ -212,16 +232,19 @@ pub fn cmd_serve_bench(args: Args) -> crate::Result<()> {
         pct(0.99),
         lats.last().unwrap()
     );
-    // pull server-side stats for batch fill
+    // pull server-side stats for batch fill — `get`, not the panicking
+    // `at`: the server's reply is not a manifest we control, and a
+    // missing counter (older server, pjrt backend) should degrade to a
+    // zero, not abort the bench
     let mut cl = ServeClient::connect(&addr)?;
     let stats = cl.stats()?;
-    let batches = stats.at("batches").as_f64().unwrap_or(1.0).max(1.0);
-    let rows = stats.at("rows_scored").as_f64().unwrap_or(0.0);
+    let field = |k: &str| stats.get(k).and_then(|v| v.as_f64()).unwrap_or(0.0);
+    let batches = field("batches").max(1.0);
     println!(
         "server: {} batches, mean fill {:.2} rows/batch, {} timeout flushes",
         batches,
-        rows / batches,
-        stats.at("timeout_flushes").as_f64().unwrap_or(0.0)
+        field("rows_scored") / batches,
+        field("timeout_flushes")
     );
     Ok(())
 }

@@ -9,6 +9,18 @@
 //! has no exported kernel artifact fall back to the host mirrors in
 //! [`crate::pruning`] (numerically identical; cross-checked by the
 //! `runtime_kernels` integration suite).
+//!
+//! When [`PipelineSpec::quant`] is set the pipeline appends a pack-time
+//! **quantization stage**: after pruning, variance correction and
+//! (optional) EBFT have produced the final non-salient weights, the kept
+//! values of every linear are group-quantized and stored as
+//! [`PackedQnm`] (mask meta + int codes + bf16 scales) — the §4.2
+//! correction composes with quantization because VC rescales the values
+//! *before* the quantizer fits its per-group scales to them. Salient
+//! weights stay bf16 (the SPQR discipline), and the effective dense
+//! weight swapped into the compressed model is the dequantized base +
+//! outliers, so downstream eval measures exactly what a
+//! `--backend spmm-q4` deployment serves.
 
 use std::sync::Arc;
 
@@ -17,8 +29,9 @@ use crate::model::ParamSet;
 use crate::pruning::{
     self, ActStats, PruneMethod, PruneSpec,
 };
+use crate::quant::QuantSpec;
 use crate::runtime::{literal_f32, tensor_from_literal, Engine, KernelSet};
-use crate::sparse::{Csr, PackedNm, StructuredOutliers};
+use crate::sparse::{Csr, PackedNm, PackedQnm, StructuredOutliers};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -42,6 +55,10 @@ pub struct PipelineSpec {
     /// store salient weights unstructured (CSR at matched budget) instead
     /// of structured k:256 — the Table 7 baseline
     pub unstructured_outliers: bool,
+    /// group-quantize the kept base values at pack time
+    /// (prune → VC → [EBFT] → quantize → pack into [`PackedQnm`]);
+    /// `None` stores them bf16 ([`PackedNm`])
+    pub quant: Option<QuantSpec>,
 }
 
 impl PipelineSpec {
@@ -54,11 +71,18 @@ impl PipelineSpec {
             use_kernels: true,
             seed: 0x5EED,
             unstructured_outliers: false,
+            quant: None,
         }
     }
 
     pub fn ebft(mut self, steps: usize) -> Self {
         self.ebft_steps = steps;
+        self
+    }
+
+    /// Quantize the kept base values at pack time.
+    pub fn quantize(mut self, spec: QuantSpec) -> Self {
+        self.quant = Some(spec);
         self
     }
 
@@ -78,6 +102,9 @@ impl PipelineSpec {
         if self.ebft_steps > 0 {
             s.push_str("+EBFT");
         }
+        if let Some(q) = &self.quant {
+            s.push_str(&format!("+INT{}", q.bits));
+        }
         s
     }
 }
@@ -89,7 +116,9 @@ pub struct LayerReport {
     pub rows: usize,
     pub cols: usize,
     pub sparsity: f64,
-    /// packed N:M bytes (values + metadata)
+    /// packed N:M base bytes (values + mask metadata); when the spec
+    /// quantizes, this is the [`PackedQnm`] footprint (codes + scales +
+    /// mask metadata)
     pub nm_bytes: usize,
     /// structured outlier bytes (0 when no outliers kept)
     pub outlier_bytes: usize,
@@ -195,6 +224,40 @@ impl CompressionPipeline {
             };
             ebft_losses = self.metrics.time("ebft", || {
                 trainer.run(&mut compressed, &calib, &block_masks, &block_salient)
+            })?;
+        }
+
+        // 4. pack-time quantization: group-quantize the final kept base
+        // values (post-VC, post-EBFT) into PackedQnm and swap the
+        // dequantized effective weight back in, so eval sees exactly the
+        // serving format's values. Runs last because EBFT nudges dense
+        // values the quantizer must then fit.
+        if let Some(qspec) = spec.quant {
+            self.metrics.time("quantize", || -> crate::Result<()> {
+                for b in 0..self.exec.config.n_layers {
+                    for (i, lin) in crate::model::BLOCK_LINEAR.iter().enumerate() {
+                        let name = format!("blk{b}.{lin}");
+                        let salient = &block_salient[b][i];
+                        let keep = &block_masks[b][i];
+                        let w_eff = compressed.get(&name);
+                        let w_ns = w_eff.zip(salient, |w, s| w - s);
+                        let (_, cols) = w_ns.dims2();
+                        let fitted =
+                            PackedQnm::fit_spec(qspec, spec.prune.n, spec.prune.m, cols);
+                        let qnm = PackedQnm::from_dense_mask(
+                            &w_ns,
+                            keep,
+                            spec.prune.n,
+                            spec.prune.m,
+                            fitted,
+                        );
+                        let li = b * crate::model::BLOCK_LINEAR.len() + i;
+                        layers[li].nm_bytes = qnm.bytes();
+                        *compressed.get_mut(&name) = qnm.to_dense().add(salient);
+                        self.metrics.incr("layers_quantized", 1);
+                    }
+                }
+                Ok(())
             })?;
         }
 
@@ -352,6 +415,8 @@ mod tests {
                 .vc(false),
         );
         assert_eq!(spec.label(), "Magnitude");
+        let spec = PipelineSpec::new(PruneSpec::new(8, 16)).quantize(QuantSpec::int4_g128());
+        assert_eq!(spec.label(), "RIA+SQ+VC+INT4");
     }
 
     #[test]

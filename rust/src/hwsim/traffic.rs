@@ -1,6 +1,7 @@
 //! Byte-exact traffic accounting and a roofline latency model for dense
 //! vs N:M-sparse GEMM.
 
+use crate::quant::QuantSpec;
 use crate::sparse::PatternInfo;
 
 /// `y (b, n) = x (b, k) @ W^T (n, k)` — the linear-layer GEMM.
@@ -85,6 +86,32 @@ impl HwModel {
         self.finish(weight_bytes, meta_bytes, act_bytes, macs)
     }
 
+    /// N:M sparse GEMM with **int-quantized kept values** (the
+    /// [`crate::sparse::PackedQnm`] format): weight bytes are the
+    /// `spec.bits`-wide codes plus one bf16 scale per `spec.group` kept
+    /// values; metadata is the same codebook mask stream as
+    /// [`Self::sparse_nm`]. At 8:16 / int4 / g128 the operand streams
+    /// 2.9375 bits/param — 0.18× the dense bf16 bytes.
+    pub fn sparse_nm_quant(
+        &self,
+        g: GemmShape,
+        n: usize,
+        m: usize,
+        spec: QuantSpec,
+    ) -> TrafficReport {
+        let p = PatternInfo::new(n, m);
+        let kept = (g.n * g.k) as f64 * p.density();
+        let weight_bytes = kept * spec.bits as f64 / 8.0 + kept / spec.group as f64 * 2.0;
+        let meta_bytes = (g.n * g.k) as f64 * p.bits_per_element_codebook() / 8.0;
+        let act_bytes = ((g.b * g.k) + (g.b * g.n)) as f64 * self.elem_bytes;
+        let macs = if self.sparse_compute {
+            g.macs() as f64 * p.density()
+        } else {
+            g.macs() as f64
+        };
+        self.finish(weight_bytes, meta_bytes, act_bytes, macs)
+    }
+
     /// Structured k:256 outlier side-stream (added to a sparse GEMM when
     /// salient weights are recovered).
     pub fn outlier_overhead(&self, g: GemmShape, k: usize) -> f64 {
@@ -102,7 +129,13 @@ impl HwModel {
         raw * 2.0
     }
 
-    fn finish(&self, weight_bytes: f64, meta_bytes: f64, act_bytes: f64, macs: f64) -> TrafficReport {
+    fn finish(
+        &self,
+        weight_bytes: f64,
+        meta_bytes: f64,
+        act_bytes: f64,
+        macs: f64,
+    ) -> TrafficReport {
         let bytes = weight_bytes + meta_bytes + act_bytes;
         let mem_time = bytes / self.bandwidth;
         let compute_time = macs / self.compute;
@@ -158,6 +191,38 @@ impl HwModel {
         ModelCheck {
             measured_bytes: measured_bytes as f64,
             modeled_bytes: self.nm_operand_bytes(g, n, m),
+        }
+    }
+
+    /// Modeled weight-operand traffic of one packed-quant N:M GEMM
+    /// (codes + scales + pattern metadata) — the prediction side of the
+    /// measured-vs-modeled comparison for [`crate::sparse::PackedQnm`].
+    pub fn nm_quant_operand_bytes(
+        &self,
+        g: GemmShape,
+        n: usize,
+        m: usize,
+        spec: QuantSpec,
+    ) -> f64 {
+        let r = self.sparse_nm_quant(g, n, m, spec);
+        r.weight_bytes + r.meta_bytes
+    }
+
+    /// Measured-vs-modeled for a packed-quant operand
+    /// ([`crate::sparse::PackedQnm::bytes`] against
+    /// [`Self::nm_quant_operand_bytes`]); `cargo bench --bench f2_spmm`
+    /// asserts agreement within ±1%.
+    pub fn check_nm_quant_operand(
+        &self,
+        g: GemmShape,
+        n: usize,
+        m: usize,
+        spec: QuantSpec,
+        measured_bytes: usize,
+    ) -> ModelCheck {
+        ModelCheck {
+            measured_bytes: measured_bytes as f64,
+            modeled_bytes: self.nm_quant_operand_bytes(g, n, m, spec),
         }
     }
 
@@ -251,6 +316,85 @@ impl HwModel {
         ModelCheck {
             measured_bytes: measured_bytes as f64,
             modeled_bytes: self.decode_operand_bytes(shapes, n, m, k_out),
+        }
+    }
+
+    /// Modeled packed-quant weight-operand bytes one decode step streams
+    /// across `shapes` (codes + scales + mask metadata, plus the
+    /// `k_out`:256 bf16 outlier side stream when `k_out > 0`). The
+    /// group is fitted per shape exactly as
+    /// [`crate::sparse::PackedQnm::fit_spec`] does at pack time, so the
+    /// model prices the bytes the kernel actually stores.
+    pub fn decode_quant_operand_bytes(
+        &self,
+        shapes: &[(usize, usize)],
+        n: usize,
+        m: usize,
+        k_out: usize,
+        spec: QuantSpec,
+    ) -> f64 {
+        shapes
+            .iter()
+            .map(|&(rows, cols)| {
+                let g = GemmShape::new(1, rows, cols);
+                let fitted = crate::sparse::PackedQnm::fit_spec(spec, n, m, cols);
+                let mut b = self.nm_quant_operand_bytes(g, n, m, fitted);
+                if k_out > 0 {
+                    b += self.outlier_overhead(g, k_out);
+                }
+                b
+            })
+            .sum()
+    }
+
+    /// Modeled end-to-end speedup of one packed-quant decode step over
+    /// dense — [`Self::decode_speedup`] with the quantized operand's
+    /// (smaller) memory time on the packed side.
+    pub fn decode_quant_speedup(
+        &self,
+        shapes: &[(usize, usize)],
+        n: usize,
+        m: usize,
+        k_out: usize,
+        spec: QuantSpec,
+    ) -> f64 {
+        let dense: f64 = shapes
+            .iter()
+            .map(|&(rows, cols)| self.dense(GemmShape::new(1, rows, cols)).latency)
+            .sum();
+        let sparse: f64 = shapes
+            .iter()
+            .map(|&(rows, cols)| {
+                let g = GemmShape::new(1, rows, cols);
+                let fitted = crate::sparse::PackedQnm::fit_spec(spec, n, m, cols);
+                let r = self.sparse_nm_quant(g, n, m, fitted);
+                let extra = if k_out > 0 {
+                    self.outlier_overhead(g, k_out) / self.bandwidth
+                } else {
+                    0.0
+                };
+                self.overhead + (r.mem_time + extra).max(r.compute_time)
+            })
+            .sum();
+        dense / sparse
+    }
+
+    /// Measured-vs-modeled for the quantized decode phase
+    /// (`SparseLm::linear_operand_bytes` of a `compress_quant` model
+    /// against [`Self::decode_quant_operand_bytes`]). Driven by `cargo
+    /// bench --bench f3_decode`.
+    pub fn check_decode_quant_operand(
+        &self,
+        shapes: &[(usize, usize)],
+        n: usize,
+        m: usize,
+        k_out: usize,
+        spec: QuantSpec,
+        measured_bytes: usize,
+    ) -> ModelCheck {
+        ModelCheck {
+            measured_bytes: measured_bytes as f64,
+            modeled_bytes: self.decode_quant_operand_bytes(shapes, n, m, k_out, spec),
         }
     }
 }
@@ -425,6 +569,80 @@ mod tests {
         ] {
             assert!(j.get(key).is_some(), "missing {key}");
         }
+    }
+
+    #[test]
+    fn quant_operand_is_2_9375_bits_per_param() {
+        let hw = HwModel::default();
+        let g = GemmShape::new(1, 1024, 1024);
+        let spec = QuantSpec::int4_g128();
+        let bytes = hw.nm_quant_operand_bytes(g, 8, 16, spec);
+        let bits_per_param = bytes * 8.0 / (1024.0 * 1024.0);
+        assert!((bits_per_param - 2.9375).abs() < 1e-9, "{bits_per_param}");
+        // ≤ 0.20× dense bf16 — the f2/f3 acceptance bar, at model level
+        let dense = hw.dense(g).weight_bytes;
+        assert!(bytes <= 0.20 * dense, "{bytes} vs {dense}");
+        // and it matches the shared accounting helper exactly
+        let want = crate::quant::nm_quant_bits_per_param(8, 16, 4, 128);
+        assert!((bits_per_param - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn measured_packed_quant_bytes_match_model() {
+        use crate::pruning::mask_topn_per_block;
+        use crate::sparse::{Kernel, PackedQnm};
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+        let hw = HwModel::default();
+        let mut rng = Rng::new(19);
+        let (rows, cols) = (256usize, 512usize);
+        let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let spec = QuantSpec::int4_g128();
+        let packed = PackedQnm::from_dense_mask(&w, &mask, 8, 16, spec);
+        let g = GemmShape::new(8, rows, cols);
+        let chk = hw.check_nm_quant_operand(g, 8, 16, spec, packed.operand_bytes());
+        assert!(chk.within(0.01), "ratio {}", chk.ratio());
+    }
+
+    #[test]
+    fn measured_quant_decode_bytes_match_decode_model() {
+        use crate::model::{ModelConfig, ParamSet, SparseLm};
+        use crate::util::Rng;
+        let hw = HwModel::default();
+        let mut cfg = ModelConfig::preset("tiny").unwrap();
+        cfg.n_layers = 2;
+        cfg.vocab = 512;
+        let mut rng = Rng::new(22);
+        let params = ParamSet::init(&cfg, &mut rng);
+        let shapes = cfg.decode_linear_shapes();
+        let spec = QuantSpec::int4_g128();
+        for k_out in [0usize, 16] {
+            let lm = SparseLm::compress_quant(&params, 8, 16, k_out, spec);
+            let chk = hw.check_decode_quant_operand(
+                &shapes,
+                8,
+                16,
+                k_out,
+                spec,
+                lm.linear_operand_bytes(),
+            );
+            assert!(
+                chk.within(0.01),
+                "k_out={k_out}: measured/modeled ratio {}",
+                chk.ratio()
+            );
+            // quantized decode streams ≤ 0.20× the dense bf16 bytes
+            if k_out == 0 {
+                let dense = hw.decode_dense_bytes(&shapes);
+                assert!(lm.linear_operand_bytes() as f64 <= 0.20 * dense);
+            }
+        }
+        // pricing the quantized values in strictly raises the modeled
+        // speedup over the bf16 packed format (fewer bytes, same macs)
+        let s_bf16 = hw.decode_speedup(&shapes, 8, 16, 0);
+        let s_q4 = hw.decode_quant_speedup(&shapes, 8, 16, 0, spec);
+        assert!(s_q4 > s_bf16, "{s_q4} !> {s_bf16}");
     }
 
     #[test]

@@ -107,7 +107,8 @@ impl SparseLm {
             }
             let mut o = vec![0.0f32; s * d];
             for p in 0..s {
-                attend_cached(q.row(p), cache, bi, start + p, nh, nkv, hd, &mut o[p * d..(p + 1) * d]);
+                let orow = &mut o[p * d..(p + 1) * d];
+                attend_cached(q.row(p), cache, bi, start + p, nh, nkv, hd, orow);
             }
             let attn_out = self.lin_rows(&*blk.wo, &Tensor::new(vec![s, d], o));
             let h1 = h.add(&attn_out);

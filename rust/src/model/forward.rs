@@ -22,7 +22,8 @@
 //! ([`SparseLm::prefill`] / [`SparseLm::decode_step`] in
 //! `model/decode.rs`).
 
-use crate::sparse::{spmm, spmm_parallel, Kernel, PackedLinear};
+use crate::quant::QuantSpec;
+use crate::sparse::{spmm, spmm_parallel, Kernel, PackedLinear, PackedQuantLinear};
 use crate::tensor::{dot, Tensor};
 use crate::util::perf;
 
@@ -70,6 +71,25 @@ impl SparseLm {
     pub fn compress(params: &ParamSet, n: usize, m: usize, k_out: usize) -> SparseLm {
         Self::build(params, |w| {
             Box::new(PackedLinear::compress(w, &w.map(f32::abs), n, m, k_out))
+        })
+    }
+
+    /// [`Self::compress`] with the kept base values **group-quantized**
+    /// under `spec` ([`PackedQuantLinear`]): mask metadata + int codes +
+    /// bf16 scales stream through the spmm kernels, dequantized
+    /// in-kernel; outliers stay bf16. This is the `--backend spmm-q4`
+    /// deployment — at 8:16 / int4 / g128 a decode step streams
+    /// 2.9375 bits/param, ≤ 0.20× the dense bf16 weight traffic
+    /// (asserted by `cargo bench --bench f3_decode`).
+    pub fn compress_quant(
+        params: &ParamSet,
+        n: usize,
+        m: usize,
+        k_out: usize,
+        spec: QuantSpec,
+    ) -> SparseLm {
+        Self::build(params, |w| {
+            Box::new(PackedQuantLinear::compress(w, &w.map(f32::abs), n, m, k_out, spec))
         })
     }
 
@@ -325,14 +345,23 @@ pub(super) fn rotate_heads(row: &mut [f32], nh: usize, hd: usize, cos: &[f32], s
 }
 
 /// Rotate (even, odd) pairs of every head in place — `model.py::apply_rope`.
-pub(super) fn apply_rope(t: &mut Tensor, b: usize, s: usize, nh: usize, hd: usize, cos: &[f32], sin: &[f32]) {
+pub(super) fn apply_rope(
+    t: &mut Tensor,
+    b: usize,
+    s: usize,
+    nh: usize,
+    hd: usize,
+    cos: &[f32],
+    sin: &[f32],
+) {
     let d = nh * hd;
     let half = hd / 2;
     let data = t.data_mut();
     for bi in 0..b {
         for p in 0..s {
             let row = &mut data[(bi * s + p) * d..(bi * s + p + 1) * d];
-            rotate_heads(row, nh, hd, &cos[p * half..(p + 1) * half], &sin[p * half..(p + 1) * half]);
+            let (c, sn) = (&cos[p * half..(p + 1) * half], &sin[p * half..(p + 1) * half]);
+            rotate_heads(row, nh, hd, c, sn);
         }
     }
 }
@@ -454,6 +483,42 @@ mod tests {
         assert!(
             rel_error(&got, &want) < 1e-4,
             "packed vs dense-of-packed: {}",
+            rel_error(&got, &want)
+        );
+    }
+
+    #[test]
+    fn quantized_forward_tracks_dequantized_dense_forward() {
+        // the quantized packed forward must equal (up to fp reassociation)
+        // the dense forward over the *dequantized* weights — quantization
+        // error is baked into the stored values, the kernel adds none
+        let cfg = tiny_test_config();
+        let mut rng = Rng::new(17);
+        let params = ParamSet::init_outliers(&cfg, &mut rng);
+        let w = window(&cfg, &mut rng);
+        let spec = QuantSpec::int4_g128();
+
+        let packed = SparseLm::compress_quant(&params, 8, 16, 16, spec);
+        let got = packed.lm_nll(&w).unwrap();
+
+        let mut dequant = params.clone();
+        for (_, idx) in params.linear_indices() {
+            let wt = &params.tensors[idx];
+            let layer = crate::sparse::PackedQuantLinear::compress(
+                wt,
+                &wt.map(f32::abs),
+                8,
+                16,
+                16,
+                spec,
+            );
+            dequant.tensors[idx] = layer.to_dense();
+        }
+        let reference = SparseLm::from_params(&dequant);
+        let want = reference.lm_nll(&w).unwrap();
+        assert!(
+            rel_error(&got, &want) < 1e-4,
+            "quant packed vs dense-of-dequant: {}",
             rel_error(&got, &want)
         );
     }

@@ -144,7 +144,9 @@ mod tests {
                         .filter(|(_, &k)| k == 0.0)
                         .fold(f32::NEG_INFINITY, |a, (&x, _)| a.max(x));
                     if kept_min < drop_max {
-                        return Err(format!("block ({r},{b}): kept {kept_min} < dropped {drop_max}"));
+                        return Err(format!(
+                            "block ({r},{b}): kept {kept_min} < dropped {drop_max}"
+                        ));
                     }
                 }
             }

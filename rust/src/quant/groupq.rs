@@ -145,6 +145,20 @@ impl GroupQuant {
     pub fn compression_ratio(&self) -> f64 {
         (self.rows * self.cols * 2) as f64 / self.bytes() as f64
     }
+
+    /// Decoder-side view of the packed codes: signed `spec.bits`-wide
+    /// two's-complement integers, LSB-first within little-endian `u32`
+    /// words, row-major — the stream [`crate::sparse::PackedQnm`]
+    /// dequantizes inside the spmm kernel.
+    pub fn codes_raw(&self) -> &[u32] {
+        &self.codes
+    }
+
+    /// Decoder-side view of the per-group bf16 scales, row-major over
+    /// `(rows, cols / spec.group)`.
+    pub fn scales_raw(&self) -> &[u16] {
+        &self.scales
+    }
 }
 
 #[cfg(test)]
@@ -171,7 +185,10 @@ mod tests {
                     let step = absmax / qmax * 1.01 + 1e-8;
                     for j in 0..64 {
                         let err = (d.at2(r, g * 64 + j) - blk[j]).abs();
-                        assert!(err <= 0.5 * step + absmax * 0.005, "bits={bits} err={err} step={step}");
+                        assert!(
+                            err <= 0.5 * step + absmax * 0.005,
+                            "bits={bits} err={err} step={step}"
+                        );
                     }
                 }
             }

@@ -30,6 +30,17 @@ pub fn nm_bits_per_param(n: usize, m: usize) -> f64 {
     16.0 * n as f64 / m as f64 + info.bits_per_element_codebook()
 }
 
+/// Bits per (dense) parameter of the fused sparse+quant format
+/// ([`crate::sparse::PackedQnm`]): codebook mask metadata + `bits`-wide
+/// codes and one bf16 scale per `group` kept values, both scaled by the
+/// pattern density. 8:16 / int4 / g128 → 0.875 + 0.5·(4 + 16/128)
+/// = 2.9375 — the number `sparselm quant --pack` reports and the
+/// `hwsim` `sparse_nm_quant` traffic model streams.
+pub fn nm_quant_bits_per_param(n: usize, m: usize, bits: u32, group: usize) -> f64 {
+    let info = crate::sparse::PatternInfo::new(n, m);
+    info.bits_per_element_codebook() + info.density() * quant_bits_per_param(bits, group)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -48,5 +59,16 @@ mod tests {
         let s = nm_bits_per_param(8, 16); // 8.875
         assert!(s > quant_bits_per_param(8, 128));
         assert!(s < 16.0);
+    }
+
+    #[test]
+    fn fused_sparse_quant_accounting() {
+        // 8:16 int4 g128: 0.875 mask + 2 code bits + 0.0625 scale bits
+        assert!((nm_quant_bits_per_param(8, 16, 4, 128) - 2.9375).abs() < 1e-12);
+        // quantizing the kept values must beat both parents
+        assert!(nm_quant_bits_per_param(8, 16, 4, 128) < nm_bits_per_param(8, 16));
+        assert!(nm_quant_bits_per_param(8, 16, 4, 128) < quant_bits_per_param(4, 128));
+        // and lands ≤ 0.20× dense bf16 — the f2/f3 acceptance bar
+        assert!(nm_quant_bits_per_param(8, 16, 4, 128) / 16.0 <= 0.20);
     }
 }

@@ -70,13 +70,20 @@ impl Request {
                     .and_then(|t| t.as_str())
                     .ok_or_else(|| "choice needs \"context\"".to_string())?
                     .to_string();
+                // a non-string element is an error, not a silent drop —
+                // otherwise the reply's indices would not line up with
+                // the array the client sent
                 let choices: Vec<String> = v
                     .get("choices")
                     .and_then(|c| c.as_arr())
                     .ok_or_else(|| "choice needs \"choices\"".to_string())?
                     .iter()
-                    .filter_map(|c| c.as_str().map(str::to_string))
-                    .collect();
+                    .map(|c| {
+                        c.as_str()
+                            .map(str::to_string)
+                            .ok_or_else(|| "choices must be strings".to_string())
+                    })
+                    .collect::<Result<_, _>>()?;
                 if choices.len() < 2 {
                     return Err("need at least 2 choices".into());
                 }
@@ -446,7 +453,20 @@ mod tests {
         assert!(Request::parse("{\"op\":\"frobnicate\"}").is_err());
         assert!(Request::parse("{\"op\":\"nll\"}").is_err());
         assert!(Request::parse("{\"op\":\"nll\",\"text\":\"\"}").is_err());
-        assert!(Request::parse("{\"op\":\"choice\",\"context\":\"c\",\"choices\":[\"x\"]}").is_err());
+        assert!(
+            Request::parse("{\"op\":\"choice\",\"context\":\"c\",\"choices\":[\"x\"]}").is_err()
+        );
+        // mistyped fields are errors, never silent coercions/drops
+        assert!(Request::parse("{\"op\":\"nll\",\"text\":5}").is_err());
+        assert!(
+            Request::parse("{\"op\":\"choice\",\"context\":\"c\",\"choices\":\"xy\"}").is_err()
+        );
+        assert!(
+            Request::parse("{\"op\":\"choice\",\"context\":\"c\",\"choices\":[1,2,\"a\"]}")
+                .is_err(),
+            "non-string choice elements must not be dropped"
+        );
+        assert!(Request::parse("{\"op\":5}").is_err());
     }
 
     #[test]

@@ -196,7 +196,12 @@ pub type Scorer = Box<dyn FnMut(&[ScoreRequest]) -> crate::Result<Vec<(f64, usiz
 
 /// Reduce a `(B, S)` NLL tensor + scored-position mask back to per-row
 /// `(sum_nll, scored_tokens)` for the first `n` rows.
-fn rows_from_nll(nll: &crate::tensor::Tensor, mask: &[f32], n: usize, s: usize) -> Vec<(f64, usize)> {
+fn rows_from_nll(
+    nll: &crate::tensor::Tensor,
+    mask: &[f32],
+    n: usize,
+    s: usize,
+) -> Vec<(f64, usize)> {
     (0..n)
         .map(|r| {
             let row = &nll.data()[r * s..(r + 1) * s];
@@ -628,12 +633,29 @@ fn handle_conn(
                 if failed {
                     Response::Error("server shutting down".into())
                 } else {
+                    // total_cmp, not partial_cmp().unwrap(): a NaN score
+                    // (a degenerate model is the client's problem, not a
+                    // reason to kill this connection's worker thread)
+                    // must still produce a reply. Non-finite scores are
+                    // excluded from the ranking outright — total order
+                    // alone would let a sign-bit-set NaN (the default
+                    // x86 arithmetic NaN) sort *below* every finite
+                    // score and win. All-degenerate falls back to 0.
                     let best = scores
                         .iter()
                         .enumerate()
-                        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .filter(|(_, s)| s.is_finite())
+                        .min_by(|a, b| a.1.total_cmp(b.1))
                         .map(|(i, _)| i)
                         .unwrap_or(0);
+                    // JSON has no inf/NaN: clamp degenerate/unscorable
+                    // entries to MAX so the reply stays numeric and
+                    // index-aligned with the client's choices array
+                    for s in scores.iter_mut() {
+                        if !s.is_finite() {
+                            *s = f64::MAX;
+                        }
+                    }
                     Response::Choice {
                         best,
                         scores,
@@ -752,6 +774,97 @@ mod tests {
         }
         assert!(c.ping().unwrap(), "connection survived the garbage");
         assert_eq!(h.stats.errors.load(Ordering::Relaxed), 3);
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn garbage_ops_and_fields_never_kill_a_worker() {
+        // the request-path panic audit's regression net: every malformed
+        // op/field shape a client can send must come back as a typed
+        // error reply on a connection that keeps serving
+        let h = test_server();
+        let mut c = ServeClient::connect(h.addr).unwrap();
+        let garbage = [
+            // unknown / mistyped ops
+            "{\"op\":\"frobnicate\"}",
+            "{\"op\":5}",
+            "{\"op\":null}",
+            "[1,2,3]",
+            "\"nll\"",
+            // mistyped fields
+            "{\"op\":\"nll\",\"text\":12}",
+            "{\"op\":\"nll\",\"text\":{\"a\":1}}",
+            "{\"op\":\"choice\",\"context\":\"c\",\"choices\":\"not-an-array\"}",
+            "{\"op\":\"choice\",\"context\":\"c\",\"choices\":[1,2,\"x\"]}",
+            "{\"op\":\"choice\",\"context\":7,\"choices\":[\"a\",\"b\"]}",
+            "{\"op\":\"generate\",\"prompt\":[\"x\"]}",
+            "{\"op\":\"generate\",\"prompt\":\"x\",\"max_tokens\":-4}",
+            "{\"op\":\"generate\",\"prompt\":\"x\",\"temperature\":\"warm\"}",
+            "{\"op\":\"generate\",\"prompt\":\"x\",\"seed\":1e300}",
+            // structurally broken json
+            "{\"op\":\"nll\",\"text\":\"x\"",
+            "{\"op\": }",
+        ];
+        for bad in garbage {
+            let r = c.call_raw(bad).unwrap_or_else(|e| panic!("{bad}: hangup ({e})"));
+            assert!(matches!(r, Response::Error(_)), "{bad}: {r:?}");
+        }
+        // every one of them was counted, and the server still works
+        assert_eq!(h.stats.errors.load(Ordering::Relaxed), garbage.len() as u64);
+        assert!(c.ping().unwrap(), "connection survived all garbage");
+        let (mean, _) = {
+            let mut c2 = ServeClient::connect(h.addr).unwrap();
+            c2.nll("the quick brown fox").unwrap()
+        };
+        assert!((mean - 1.0).abs() < 1e-9, "scoring path intact after abuse");
+        h.shutdown().unwrap();
+    }
+
+    #[test]
+    fn nan_scores_yield_a_reply_not_a_dead_connection() {
+        // regression: `choice` ranked scores with partial_cmp().unwrap(),
+        // so one NaN from the scorer panicked the connection's worker
+        // thread and the client saw a hangup instead of a reply. The
+        // sign-bit-set NaN here is the default x86 arithmetic NaN — it
+        // sorts below -inf under total order, so this also pins the
+        // rule that a degenerate score can never *win* the ranking.
+        let h = serve(
+            || {
+                Ok(Box::new(|reqs: &[ScoreRequest]| {
+                    // odd request ids score -NaN, even ids score 2.0
+                    Ok(reqs
+                        .iter()
+                        .map(|r| (if r.id % 2 == 1 { -f64::NAN } else { 2.0 }, 1usize))
+                        .collect())
+                }) as Scorer)
+            },
+            test_tokenizer(),
+            ServerConfig {
+                addr: "127.0.0.1:0".into(),
+                max_conns: 4,
+                max_batch: 2,
+                max_wait: Duration::from_millis(3),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut c = ServeClient::connect(h.addr).unwrap();
+        let r = c
+            .call(&Request::Choice {
+                context: "2+2 =".into(),
+                choices: vec!["4".into(), "5".into()],
+            })
+            .expect("NaN scores must still produce a reply line");
+        // candidate 0 got the -NaN (first id), candidate 1 the finite
+        // score: the finite one must win
+        match r {
+            Response::Choice { best, ref scores, .. } => {
+                assert_eq!(best, 1, "negative NaN must not win: {scores:?}");
+                assert_eq!(scores.len(), 2);
+            }
+            other => panic!("want Choice, got {other:?}"),
+        }
+        assert!(c.ping().unwrap(), "connection survived NaN scores");
         h.shutdown().unwrap();
     }
 

@@ -1,5 +1,6 @@
 //! Sparse storage substrates **and the decode-free GEMM that consumes
-//! them**: the N:M pattern codebook, packed N:M weight storage, V:N:M
+//! them**: the N:M pattern codebook, packed N:M weight storage (bf16
+//! values in [`PackedNm`], int-quantized values in [`PackedQnm`]), V:N:M
 //! tiles, the structured k:256 outlier format, CSR for the unstructured
 //! baseline, and the [`Kernel`] trait + [`spmm()`]/[`spmm_parallel()`]
 //! hot path that computes `y = x @ Wᵀ` straight from packed bits.
@@ -19,6 +20,7 @@ pub mod csr;
 pub mod nm;
 pub mod outliers;
 pub mod patterns;
+pub mod qnm;
 pub mod spmm;
 pub mod vnm;
 
@@ -26,9 +28,10 @@ pub use csr::Csr;
 pub use nm::PackedNm;
 pub use outliers::StructuredOutliers;
 pub use patterns::PatternInfo;
+pub use qnm::PackedQnm;
 pub use spmm::{
     dispatch, spmm, spmm_parallel, spmm_parallel_scoped, spmm_vec, MicroKernel, PackedLinear,
-    GEMM_MIN_ROWS, ROW_TILE, WEIGHT_TILE,
+    PackedQuantLinear, GEMM_MIN_ROWS, ROW_TILE, WEIGHT_TILE,
 };
 pub use vnm::{vnm_select, PackedVnm};
 

@@ -19,6 +19,44 @@ use super::bits::{push_bits, read_bits};
 use super::patterns::{rank_combination, unrank_combination, PatternInfo};
 use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
 
+/// Collect the (ascending, padded) keep-set of block `b` of one mask
+/// row into `idx_buf`: the masked indices, padded with zero-valued
+/// slots at the lowest free indices when outlier exclusion left fewer
+/// than `n` survivors — exactly like fixed-slot hardware formats, so
+/// the pattern id always encodes an N-subset. This is the **one copy**
+/// of the pad discipline; the bf16 ([`PackedNm`]) and quantized
+/// ([`super::PackedQnm`]) packers both call it, so their meta streams
+/// cannot diverge. `r` is for the panic message only.
+pub(crate) fn keep_indices_for_block(
+    mrow: &[f32],
+    r: usize,
+    b: usize,
+    n: usize,
+    m: usize,
+    idx_buf: &mut Vec<usize>,
+) {
+    idx_buf.clear();
+    for j in 0..m {
+        if mrow[b * m + j] != 0.0 {
+            idx_buf.push(j);
+        }
+    }
+    assert!(
+        idx_buf.len() <= n,
+        "block ({r},{b}) holds {} kept values, pattern allows {n}",
+        idx_buf.len()
+    );
+    // pad deficient blocks with zero-valued slots (lowest free indices)
+    let mut j = 0;
+    while idx_buf.len() < n {
+        if mrow[b * m + j] == 0.0 && !idx_buf.contains(&j) {
+            idx_buf.push(j);
+        }
+        j += 1;
+    }
+    idx_buf.sort_unstable();
+}
+
 /// A rank-2 weight matrix stored in packed N:M form.
 #[derive(Clone, Debug)]
 pub struct PackedNm {
@@ -55,27 +93,7 @@ impl PackedNm {
             let drow = dense.row(r);
             let mrow = mask.row(r);
             for b in 0..cols / m {
-                idx_buf.clear();
-                for j in 0..m {
-                    if mrow[b * m + j] != 0.0 {
-                        idx_buf.push(j);
-                    }
-                }
-                assert!(
-                    idx_buf.len() <= n,
-                    "block ({r},{b}) holds {} kept values, pattern allows {n}",
-                    idx_buf.len()
-                );
-                // pad deficient blocks with zero-valued slots (lowest free
-                // indices) so the pattern id is always an N-subset
-                let mut j = 0;
-                while idx_buf.len() < n {
-                    if mrow[b * m + j] == 0.0 && !idx_buf.contains(&j) {
-                        idx_buf.push(j);
-                    }
-                    j += 1;
-                }
-                idx_buf.sort_unstable();
+                keep_indices_for_block(mrow, r, b, n, m, &mut idx_buf);
                 for &j in &idx_buf {
                     // padded slots carry a zero value
                     let v = if mrow[b * m + j] != 0.0 { drow[b * m + j] } else { 0.0 };

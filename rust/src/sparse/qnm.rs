@@ -1,0 +1,399 @@
+//! Packed N:M weight storage with **int-quantized kept values** — the
+//! memory-equivalent format the paper's comparison actually argues for.
+//!
+//! [`super::PackedNm`] stores the mask in 0.875 bits/element (8:16
+//! codebook ranks) but ships the kept values as full bf16, so a packed
+//! operand still streams ~8.9 bits/param. The paper's abstract pairs
+//! sparsification with quantization ("quantization maintains performance
+//! with reduced precision"); `PackedQnm` is that composition as a
+//! storage format: the same combinadic pattern stream, with the kept
+//! values stored as symmetric `bits`-wide group-quantized codes
+//! ([`GroupQuant`]'s bit-packing, one bf16 scale per `group` kept
+//! values) and **dequantized inside the spmm kernel** — never expanded
+//! on the request path. At 8:16 / int4 / g128 the whole operand is
+//! 0.875 + 4·½ + 16/128·½ = **2.9375 bits/param**, 0.18× the dense bf16
+//! traffic (`docs/FORMAT.md` has the worked block; the
+//! [`mod@super::spmm`] kernel and the `hwsim` `sparse_nm_quant` model
+//! tie the accounting to measured bytes).
+//!
+//! Layout invariants shared with [`super::PackedNm`]: blocks are
+//! enumerated row-major, each block's pattern id is a combinadic rank in
+//! `codebook_bits` bits, kept values are block-major ascending by
+//! in-block index, and deficient blocks (outlier exclusion) pad with
+//! zero-valued slots. Quantization groups cover `group` **consecutive
+//! kept values of one row** — groups never straddle rows, so row-ranged
+//! kernels decode without neighbouring-row state.
+
+use super::bits::{push_bits, read_bits};
+use super::nm::keep_indices_for_block;
+use super::patterns::{rank_combination, unrank_combination, PatternInfo};
+use crate::quant::{GroupQuant, QuantSpec};
+use crate::tensor::{bf16_to_f32, Tensor};
+
+/// Greatest common divisor (used to fit a quant group to a row's kept
+/// count).
+fn gcd(a: usize, b: usize) -> usize {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// A rank-2 weight matrix stored packed N:M with group-quantized values.
+#[derive(Clone, Debug)]
+pub struct PackedQnm {
+    pub pattern: PatternInfo,
+    pub rows: usize,
+    pub cols: usize,
+    /// kept values as a group-quantized `(rows, cols/m*n)` matrix —
+    /// codes + scales exactly as [`GroupQuant`] lays them out
+    quant: GroupQuant,
+    /// bit-packed combinadic pattern ids, `codebook_bits` per block
+    meta: Vec<u64>,
+}
+
+impl PackedQnm {
+    /// Kept values per row under pattern `n:m` over `cols` columns.
+    pub fn kept_per_row(n: usize, m: usize, cols: usize) -> usize {
+        cols / m * n
+    }
+
+    /// Largest group ≤ `spec.group` that divides the kept-value count of
+    /// one row — the adjustment [`Self::from_dense_mask`] requires.
+    /// Layers whose kept row length the preferred group does not divide
+    /// (e.g. gqa's 384-wide kept rows under g=256) shrink to the gcd so
+    /// scales still tile rows exactly.
+    pub fn fit_spec(spec: QuantSpec, n: usize, m: usize, cols: usize) -> QuantSpec {
+        let kept = Self::kept_per_row(n, m, cols).max(1);
+        QuantSpec::new(spec.bits, gcd(spec.group, kept).max(1))
+    }
+
+    /// Pack `dense * mask`, quantizing the kept values.
+    ///
+    /// Mask discipline is identical to [`super::PackedNm::from_dense_mask`]:
+    /// at most `n` kept entries per `(1, m)` block, deficient blocks
+    /// padded with zero-valued slots (which quantize to code 0).
+    /// `spec.group` must divide the kept values per row
+    /// (`cols / m * n`) — see [`Self::fit_spec`].
+    pub fn from_dense_mask(
+        dense: &Tensor,
+        mask: &Tensor,
+        n: usize,
+        m: usize,
+        spec: QuantSpec,
+    ) -> Self {
+        assert!(m <= 64, "PackedQnm stores u64 combinadic ranks (m <= 64), got m={m}");
+        let pattern = PatternInfo::new(n, m);
+        let (rows, cols) = dense.dims2();
+        assert_eq!(dense.shape(), mask.shape(), "mask shape mismatch");
+        assert_eq!(cols % m, 0, "cols {cols} not divisible by m {m}");
+        let kpr = Self::kept_per_row(n, m, cols);
+        assert_eq!(
+            kpr % spec.group,
+            0,
+            "quant group {} does not divide {kpr} kept values/row (use fit_spec)",
+            spec.group
+        );
+        let bits = pattern.codebook_bits();
+        let blocks = rows * cols / m;
+        let mut kept = Vec::with_capacity(blocks * n);
+        let mut meta = Vec::with_capacity((blocks * bits as usize + 63) / 64 + 1);
+        let mut pos = 0usize;
+        let mut idx_buf = Vec::with_capacity(n);
+        for r in 0..rows {
+            let drow = dense.row(r);
+            let mrow = mask.row(r);
+            for b in 0..cols / m {
+                keep_indices_for_block(mrow, r, b, n, m, &mut idx_buf);
+                for &j in &idx_buf {
+                    // padded slots carry a zero value (quantizes to code 0)
+                    let v = if mrow[b * m + j] != 0.0 { drow[b * m + j] } else { 0.0 };
+                    kept.push(v);
+                }
+                push_bits(&mut meta, &mut pos, rank_combination(&idx_buf, m), bits);
+            }
+        }
+        let quant = GroupQuant::quantize(&Tensor::new(vec![rows, kpr], kept), spec);
+        PackedQnm {
+            pattern,
+            rows,
+            cols,
+            quant,
+            meta,
+        }
+    }
+
+    /// Widen the `n` quantized values of block `(r, bblk)` into f32 —
+    /// the in-kernel dequant step (`value = code * bf16(scale)`), shared
+    /// by every spmm loop order so all paths see identical floats.
+    #[inline]
+    pub(crate) fn dequant_block_into(&self, r: usize, bblk: usize, out: &mut [f32]) {
+        let n = self.pattern.n;
+        let spec = self.quant.spec;
+        let bits = spec.bits as usize;
+        let qmask = (1u32 << bits) - 1;
+        let qsign = 1u32 << (bits - 1);
+        let codes = self.quant.codes_raw();
+        let scales = self.quant.scales_raw();
+        let kpr = self.quant.cols;
+        let gpr = kpr / spec.group;
+        let base = bblk * n;
+        let mut bitpos = (r * kpr + base) * bits;
+        // a block's values are consecutive in the kept stream, so they
+        // touch at most two scale groups; hoist the common single-group
+        // case out of the inner loop
+        let g0 = base / spec.group;
+        let s0 = bf16_to_f32(scales[r * gpr + g0]);
+        let single = base % spec.group + n <= spec.group;
+        for (t, o) in out.iter_mut().enumerate().take(n) {
+            let word = bitpos / 32;
+            let off = bitpos % 32;
+            let mut u = codes[word] >> off;
+            if off + bits > 32 {
+                u |= codes[word + 1] << (32 - off);
+            }
+            u &= qmask;
+            let q = if u & qsign != 0 { (u | !qmask) as i32 } else { u as i32 };
+            let scale = if single {
+                s0
+            } else {
+                bf16_to_f32(scales[r * gpr + (base + t) / spec.group])
+            };
+            *o = q as f32 * scale;
+            bitpos += bits;
+        }
+    }
+
+    /// Expand back to a dense tensor (dequantized values). Error
+    /// reporting and tests only — the spmm kernel never calls this.
+    pub fn to_dense(&self) -> Tensor {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let vals = self.quant.dequantize();
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let mut pos = 0usize;
+        let mut vi = 0usize;
+        for r in 0..self.rows {
+            for b in 0..self.cols / m {
+                let rank = read_bits(&self.meta, pos, bits);
+                pos += bits as usize;
+                for &j in &unrank_combination(rank, m, n) {
+                    out[r * self.cols + b * m + j] = vals.data()[vi];
+                    vi += 1;
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// The dense 0/1 keep mask encoded by the metadata.
+    pub fn mask(&self) -> Tensor {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let mut pos = 0usize;
+        for r in 0..self.rows {
+            for b in 0..self.cols / m {
+                let rank = read_bits(&self.meta, pos, bits);
+                pos += bits as usize;
+                for &j in &unrank_combination(rank, m, n) {
+                    out[r * self.cols + b * m + j] = 1.0;
+                }
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// The quantization parameters actually stored (group may have been
+    /// fitted down from the requested spec).
+    pub fn spec(&self) -> QuantSpec {
+        self.quant.spec
+    }
+
+    /// Storage in bytes: packed codes + bf16 scales + packed metadata.
+    pub fn bytes(&self) -> usize {
+        self.value_bytes() + self.meta_bytes()
+    }
+
+    /// Codes + scales alone — exactly [`GroupQuant::bytes`] of the kept
+    /// value matrix (the storage-accounting cross-check in
+    /// `tests/quant_pack.rs` holds this equality).
+    pub fn value_bytes(&self) -> usize {
+        self.quant.bytes()
+    }
+
+    /// Pattern metadata footprint (same u64-word padding rule as
+    /// [`super::PackedNm::bytes`]).
+    pub fn meta_bytes(&self) -> usize {
+        (self.meta.len() * 8).min(self.meta_bits() / 8 + 8)
+    }
+
+    /// Exact metadata footprint in bits.
+    pub fn meta_bits(&self) -> usize {
+        (self.rows * self.cols / self.pattern.m) * self.pattern.codebook_bits() as usize
+    }
+
+    /// Dense bf16 storage this replaces, in bytes.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 2
+    }
+
+    /// Compression ratio vs dense bf16 (>1 means smaller).
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bytes() as f64 / self.bytes() as f64
+    }
+
+    /// Stored bits per (dense) parameter — mask meta + codes + scales.
+    pub fn bits_per_param(&self) -> f64 {
+        8.0 * self.bytes() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Pattern blocks this matrix stores (one combinadic unrank + one
+    /// block dequant each for the decoder).
+    pub fn n_blocks(&self) -> usize {
+        self.rows * (self.cols / self.pattern.m)
+    }
+
+    /// Decoder-side view of the pattern stream (bit-packed combinadic
+    /// ranks, [`PatternInfo::codebook_bits`] bits per block, row-major
+    /// block order).
+    pub fn meta_words(&self) -> &[u64] {
+        &self.meta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask_topn_per_block;
+    use crate::tensor::rel_error;
+    use crate::util::Rng;
+
+    fn pack(
+        n: usize,
+        m: usize,
+        rows: usize,
+        cols: usize,
+        seed: u64,
+    ) -> (Tensor, Tensor, PackedQnm) {
+        let mut rng = Rng::new(seed);
+        let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+        let spec = PackedQnm::fit_spec(QuantSpec::int4_g128(), n, m, cols);
+        let p = PackedQnm::from_dense_mask(&w, &mask, n, m, spec);
+        (w, mask, p)
+    }
+
+    #[test]
+    fn roundtrip_is_quantized_masked_weight() {
+        for (i, (n, m)) in [(2usize, 4usize), (4, 8), (8, 16)].into_iter().enumerate() {
+            let (w, mask, p) = pack(n, m, 16, 256, i as u64 + 1);
+            let d = p.to_dense();
+            // zeros stay exactly zero, kept values carry only quant error
+            let masked = w.mul(&mask);
+            for j in 0..w.len() {
+                if mask.data()[j] == 0.0 {
+                    assert_eq!(d.data()[j], 0.0, "elem {j} must stay pruned");
+                }
+            }
+            // int4 RTN over g≤128 gaussian groups: half-step error rms is
+            // ~10% of the kept-value rms — bound it loosely, the exact
+            // grid behaviour is groupq.rs's job
+            let err = rel_error(&d, &masked);
+            assert!(err < 0.2, "{n}:{m} quant roundtrip err {err}");
+            assert_eq!(p.mask(), mask);
+        }
+    }
+
+    #[test]
+    fn matches_groupquant_of_kept_values() {
+        // the stored codes/scales ARE GroupQuant of the kept-value
+        // matrix: dequantized kept values agree element-for-element
+        let (w, mask, p) = pack(8, 16, 8, 512, 9);
+        let kpr = PackedQnm::kept_per_row(8, 16, 512);
+        let mut kept = Vec::new();
+        for r in 0..8 {
+            for c in 0..512 {
+                if mask.at2(r, c) != 0.0 {
+                    kept.push(w.at2(r, c));
+                }
+            }
+        }
+        let gq = GroupQuant::quantize(&Tensor::new(vec![8, kpr], kept), p.spec());
+        assert_eq!(p.value_bytes(), gq.bytes());
+        let want = gq.dequantize();
+        let d = p.to_dense();
+        let mut vi = 0usize;
+        for r in 0..8 {
+            for c in 0..512 {
+                if mask.at2(r, c) != 0.0 {
+                    assert_eq!(d.at2(r, c), want.data()[vi], "kept ({r},{c})");
+                    vi += 1;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn storage_accounting_8_16_int4() {
+        let (_, _, p) = pack(8, 16, 256, 512, 5);
+        let elems = 256 * 512;
+        // mask meta: 14 bits per 16-block = 0.875 bits/element
+        assert_eq!(p.meta_bits(), elems / 16 * 14);
+        // codes: 4 bits per kept value (half the elements)
+        // scales: one bf16 per 128 kept values
+        assert_eq!(p.value_bytes(), elems / 2 / 2 + elems / 2 / 128 * 2);
+        // combined ≈ 2.9375 bits/param (+ the ≤8-byte meta word padding)
+        let want = crate::quant::nm_quant_bits_per_param(8, 16, 4, 128);
+        assert!((want - 2.9375).abs() < 1e-12);
+        let got = p.bits_per_param();
+        assert!(
+            got >= want && got - want < 0.002,
+            "bits/param {got} vs analytic {want}"
+        );
+        assert!(p.compression_ratio() > 5.0, "{}", p.compression_ratio());
+    }
+
+    #[test]
+    fn fit_spec_divides_awkward_rows() {
+        // gqa hidden 768 at 8:16 keeps 384/row: g128 fits, g256 must
+        // shrink to gcd(256, 384) = 128
+        let s = PackedQnm::fit_spec(QuantSpec::new(4, 256), 8, 16, 768);
+        assert_eq!(s.group, 128);
+        let s = PackedQnm::fit_spec(QuantSpec::int4_g128(), 8, 16, 256);
+        assert_eq!(s.group, 128);
+        // degenerate tiny rows never panic
+        let s = PackedQnm::fit_spec(QuantSpec::new(4, 128), 2, 4, 12);
+        assert_eq!(s.group, gcd(128, 6).max(1));
+    }
+
+    #[test]
+    fn deficient_blocks_quantize_padding_to_zero() {
+        let w = Tensor::new(vec![1, 8], vec![5., 6., 7., 8., 1., 2., 3., 4.]);
+        let mask = Tensor::new(vec![1, 8], vec![0., 1., 0., 0., 0., 0., 1., 1.]);
+        let spec = PackedQnm::fit_spec(QuantSpec::new(4, 128), 2, 4, 8);
+        let p = PackedQnm::from_dense_mask(&w, &mask, 2, 4, spec);
+        let d = p.to_dense();
+        for (j, (&got, &m)) in d.data().iter().zip(mask.data()).enumerate() {
+            if m == 0.0 {
+                assert_eq!(got, 0.0, "elem {j}");
+            } else {
+                // int4 half-step: |err| ≤ absmax/7/2 (+ bf16 scale slack)
+                let want = w.data()[j];
+                assert!((got - want).abs() <= 6.0 / 7.0 * 0.51, "elem {j}: {got} vs {want}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "does not divide")]
+    fn unfitted_group_rejected() {
+        let w = Tensor::ones(vec![2, 16]);
+        let mask = mask_topn_per_block(&w, 8, 16);
+        // 8 kept values/row, group 128 does not divide
+        PackedQnm::from_dense_mask(&w, &mask, 8, 16, QuantSpec::int4_g128());
+    }
+}

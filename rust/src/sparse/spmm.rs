@@ -12,10 +12,13 @@
 //!
 //! Topology:
 //!
-//! * [`Kernel`] impls for [`PackedNm`] (per-row N:M), [`PackedVnm`]
-//!   (V-row tiles), [`StructuredOutliers`] and [`Csr`] (salient side
-//!   streams), dense [`Tensor`] (reference), and [`PackedLinear`]
-//!   (N:M base + structured outliers — the paper's full format);
+//! * [`Kernel`] impls for [`PackedNm`] (per-row N:M), [`PackedQnm`]
+//!   (N:M with int-quantized values, dequantized in-kernel),
+//!   [`PackedVnm`] (V-row tiles), [`StructuredOutliers`] and [`Csr`]
+//!   (salient side streams), dense [`Tensor`] (reference),
+//!   [`PackedLinear`] (N:M base + structured outliers — the paper's
+//!   full format) and [`PackedQuantLinear`] (quantized base + bf16
+//!   outliers — the memory-equivalent deployment);
 //! * [`spmm()`] — single-thread driver;
 //! * [`spmm_vec()`] — one-activation-row GEMV driver (the decode step;
 //!   [`Kernel::accumulate_vec`] skips the batch indirection entirely);
@@ -50,9 +53,11 @@ use super::csr::Csr;
 use super::nm::PackedNm;
 use super::outliers::StructuredOutliers;
 use super::patterns::Unranker;
+use super::qnm::PackedQnm;
 use super::vnm::PackedVnm;
 use super::Kernel;
 use crate::pruning::{mask_excluding, mask_topn_per_block};
+use crate::quant::QuantSpec;
 use crate::tensor::{bf16_to_f32, dot, Tensor};
 use crate::util::pool::{self, chunk_ranges, scoped_map};
 use crate::util::perf;
@@ -424,6 +429,190 @@ impl Kernel for PackedNm {
     }
 }
 
+// ------------------------------------------------------------ PackedQnm
+
+impl PackedQnm {
+    /// Per-row reference kernel for the quantized format: one output row
+    /// at a time, one accumulator per activation row. The tiled paths
+    /// below are property-checked bitwise against this (and against the
+    /// GEMV oracle in `tests/spmm_tiling.rs`).
+    pub fn accumulate_rows_rowwise(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let (bsz, cin) = x.dims2();
+        debug_assert_eq!(cin, self.cols);
+        debug_assert!(r1 <= self.rows && r0 <= r1);
+        debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        let bpr = self.cols / m;
+        let unranker = Unranker::new(m, n);
+        let width = r1 - r0;
+        let xd = x.data();
+        let meta = self.meta_words();
+        let mut idx = vec![0usize; n];
+        let mut vals = vec![0.0f32; n];
+        for r in r0..r1 {
+            let mut pos = r * bpr * bits as usize;
+            for bblk in 0..bpr {
+                let rank = read_bits(meta, pos, bits);
+                pos += bits as usize;
+                unranker.unrank_into(rank, &mut idx);
+                self.dequant_block_into(r, bblk, &mut vals);
+                let base = bblk * m;
+                for i in 0..bsz {
+                    let xrow = &xd[i * cin + base..i * cin + base + m];
+                    let mut acc = 0.0f32;
+                    for t in 0..n {
+                        acc += vals[t] * xrow[idx[t]];
+                    }
+                    out[i * width + (r - r0)] += acc;
+                }
+            }
+        }
+    }
+
+    /// Cache-blocked multi-row kernel, same tiling scheme as the bf16
+    /// format's `accumulate_rows_tiled`: decode `wt` weight rows'
+    /// worth of one block column — **mask unrank + int4 dequant, once
+    /// per weight tile** — then sweep [`ROW_TILE`]-wide groups of
+    /// activation rows over the decoded tile. Accumulation order per
+    /// output element matches [`Self::accumulate_rows_rowwise`] exactly
+    /// (blocks ascending, in-block terms ascending), so all dispatch
+    /// paths are bitwise interchangeable.
+    fn accumulate_rows_tiled(
+        &self,
+        x: &Tensor,
+        r0: usize,
+        r1: usize,
+        out: &mut [f32],
+        wt: usize,
+    ) {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        let (bsz, cin) = x.dims2();
+        debug_assert_eq!(cin, self.cols);
+        debug_assert!(r1 <= self.rows && r0 <= r1);
+        debug_assert_eq!(out.len(), bsz * (r1 - r0));
+        let bpr = self.cols / m;
+        let unranker = Unranker::new(m, n);
+        let width = r1 - r0;
+        let xd = x.data();
+        let meta = self.meta_words();
+        // decoded (indices, dequantized values) for one weight tile × block
+        let mut tidx = vec![0usize; wt * n];
+        let mut tval = vec![0.0f32; wt * n];
+        let mut rt = r0;
+        while rt < r1 {
+            let hi = (rt + wt).min(r1);
+            let th = hi - rt;
+            for bblk in 0..bpr {
+                for (ti, r) in (rt..hi).enumerate() {
+                    let rank = read_bits(meta, (r * bpr + bblk) * bits as usize, bits);
+                    unranker.unrank_into(rank, &mut tidx[ti * n..ti * n + n]);
+                    self.dequant_block_into(r, bblk, &mut tval[ti * n..ti * n + n]);
+                }
+                let base = bblk * m;
+                let mut i = 0usize;
+                while i + ROW_TILE <= bsz {
+                    let x0 = &xd[i * cin + base..i * cin + base + m];
+                    let x1 = &xd[(i + 1) * cin + base..(i + 1) * cin + base + m];
+                    let x2 = &xd[(i + 2) * cin + base..(i + 2) * cin + base + m];
+                    let x3 = &xd[(i + 3) * cin + base..(i + 3) * cin + base + m];
+                    for ti in 0..th {
+                        let iv = &tidx[ti * n..ti * n + n];
+                        let vv = &tval[ti * n..ti * n + n];
+                        let (mut a0, mut a1) = (0.0f32, 0.0f32);
+                        let (mut a2, mut a3) = (0.0f32, 0.0f32);
+                        for t in 0..n {
+                            let v = vv[t];
+                            let j = iv[t];
+                            a0 += v * x0[j];
+                            a1 += v * x1[j];
+                            a2 += v * x2[j];
+                            a3 += v * x3[j];
+                        }
+                        let o = rt + ti - r0;
+                        out[i * width + o] += a0;
+                        out[(i + 1) * width + o] += a1;
+                        out[(i + 2) * width + o] += a2;
+                        out[(i + 3) * width + o] += a3;
+                    }
+                    i += ROW_TILE;
+                }
+                while i < bsz {
+                    let xr = &xd[i * cin + base..i * cin + base + m];
+                    for ti in 0..th {
+                        let iv = &tidx[ti * n..ti * n + n];
+                        let vv = &tval[ti * n..ti * n + n];
+                        let mut acc = 0.0f32;
+                        for t in 0..n {
+                            acc += vv[t] * xr[iv[t]];
+                        }
+                        out[i * width + (rt + ti - r0)] += acc;
+                    }
+                    i += 1;
+                }
+            }
+            rt = hi;
+        }
+    }
+}
+
+impl Kernel for PackedQnm {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    fn decode_blocks(&self) -> usize {
+        self.n_blocks()
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        let (bsz, _) = x.dims2();
+        match dispatch(bsz) {
+            MicroKernel::Gemv => self.accumulate_vec(&x.data()[..self.cols], r0, r1, out),
+            MicroKernel::SmallBatch => self.accumulate_rows_tiled(x, r0, r1, out, 1),
+            MicroKernel::TiledGemm => self.accumulate_rows_tiled(x, r0, r1, out, WEIGHT_TILE),
+        }
+    }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        let (n, m) = (self.pattern.n, self.pattern.m);
+        let bits = self.pattern.codebook_bits();
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert!(r1 <= self.rows && r0 <= r1);
+        debug_assert_eq!(out.len(), r1 - r0);
+        let bpr = self.cols / m;
+        let unranker = Unranker::new(m, n);
+        let meta = self.meta_words();
+        // allocation-free: the decode-step GEMV runs once per output
+        // token per linear, so the block scratch lives on the stack
+        // (m ≤ 64 ⇒ n ≤ 64, asserted at pack time)
+        let mut idx_buf = [0usize; 64];
+        let mut val_buf = [0.0f32; 64];
+        let idx = &mut idx_buf[..n];
+        let vals = &mut val_buf[..n];
+        for r in r0..r1 {
+            let mut pos = r * bpr * bits as usize;
+            for bblk in 0..bpr {
+                let rank = read_bits(meta, pos, bits);
+                pos += bits as usize;
+                unranker.unrank_into(rank, idx);
+                self.dequant_block_into(r, bblk, vals);
+                let xblk = &x[bblk * m..(bblk + 1) * m];
+                let mut acc = 0.0f32;
+                for t in 0..n {
+                    acc += vals[t] * xblk[idx[t]];
+                }
+                out[r - r0] += acc;
+            }
+        }
+    }
+}
+
 // ------------------------------------------------------------ PackedVnm
 
 impl Kernel for PackedVnm {
@@ -778,6 +967,33 @@ impl Kernel for Tensor {
 
 // --------------------------------------------------------- PackedLinear
 
+/// The §4 selection order, shared by [`PackedLinear::compress`] and
+/// [`PackedQuantLinear::compress`] so the bf16 and quantized layers can
+/// never select different weight sets: top-`k_out` per 256 block
+/// structured outliers first (when `k_out > 0`), then the N:M keep mask
+/// on the remaining positions. Returns the salient side stream and the
+/// base keep mask.
+fn select_outliers_and_keep(
+    w: &Tensor,
+    score: &Tensor,
+    n: usize,
+    m: usize,
+    k_out: usize,
+) -> (Option<StructuredOutliers>, Tensor) {
+    let (omask, outliers) = if k_out > 0 {
+        let om = mask_topn_per_block(score, k_out, super::outliers::OUTLIER_M);
+        let so = StructuredOutliers::from_dense_mask(w, &om, k_out, super::outliers::OUTLIER_M);
+        (Some(om), Some(so))
+    } else {
+        (None, None)
+    };
+    let keep = match &omask {
+        Some(om) => mask_excluding(score, om, n, m),
+        None => mask_topn_per_block(score, n, m),
+    };
+    (outliers, keep)
+}
+
 /// The paper's full per-layer format: a [`PackedNm`] non-salient base
 /// plus an optional [`StructuredOutliers`] salient side stream, applied
 /// as one fused kernel (`W_eff = W_ns + W_salient`).
@@ -795,21 +1011,10 @@ impl PackedLinear {
         PackedLinear { weights, outliers }
     }
 
-    /// Prune + pack a dense weight under `score`: top-`k_out` per 256
-    /// block structured outliers first (when `k_out > 0`), then N:M
-    /// top-n on the remaining positions — the §4 selection order.
+    /// Prune + pack a dense weight under `score` via the §4 selection
+    /// order ([`select_outliers_and_keep`]).
     pub fn compress(w: &Tensor, score: &Tensor, n: usize, m: usize, k_out: usize) -> Self {
-        let (omask, outliers) = if k_out > 0 {
-            let om = mask_topn_per_block(score, k_out, super::outliers::OUTLIER_M);
-            let so = StructuredOutliers::from_dense_mask(w, &om, k_out, super::outliers::OUTLIER_M);
-            (Some(om), Some(so))
-        } else {
-            (None, None)
-        };
-        let keep = match &omask {
-            Some(om) => mask_excluding(score, om, n, m),
-            None => mask_topn_per_block(score, n, m),
-        };
+        let (outliers, keep) = select_outliers_and_keep(w, score, n, m, k_out);
         PackedLinear {
             weights: PackedNm::from_dense_mask(w, &keep, n, m),
             outliers,
@@ -827,6 +1032,88 @@ impl PackedLinear {
 }
 
 impl Kernel for PackedLinear {
+    fn dims(&self) -> (usize, usize) {
+        (self.weights.rows, self.weights.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.weights.bytes() + self.outliers.as_ref().map_or(0, |o| o.bytes())
+    }
+
+    fn decode_blocks(&self) -> usize {
+        self.weights.n_blocks()
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        self.weights.accumulate_rows(x, r0, r1, out);
+        if let Some(o) = &self.outliers {
+            o.accumulate_rows(x, r0, r1, out);
+        }
+    }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        self.weights.accumulate_vec(x, r0, r1, out);
+        if let Some(o) = &self.outliers {
+            o.accumulate_vec(x, r0, r1, out);
+        }
+    }
+}
+
+// ---------------------------------------------------- PackedQuantLinear
+
+/// The memory-equivalent per-layer format: a [`PackedQnm`] non-salient
+/// base (mask meta + int-quantized kept values, dequantized in-kernel)
+/// plus an optional [`StructuredOutliers`] salient side stream kept at
+/// bf16 — the SPQR discipline (salient weights stay high-precision, and
+/// carving them out *before* quantization keeps them from stretching
+/// the per-group scales) fused with the paper's 8:16 pattern.
+#[derive(Clone, Debug)]
+pub struct PackedQuantLinear {
+    pub weights: PackedQnm,
+    pub outliers: Option<StructuredOutliers>,
+}
+
+impl PackedQuantLinear {
+    pub fn new(weights: PackedQnm, outliers: Option<StructuredOutliers>) -> Self {
+        if let Some(o) = &outliers {
+            assert_eq!((o.rows, o.cols), (weights.rows, weights.cols));
+        }
+        PackedQuantLinear { weights, outliers }
+    }
+
+    /// Prune + quantize + pack a dense weight under `score`: the same §4
+    /// selection as [`PackedLinear::compress`] (one shared
+    /// [`select_outliers_and_keep`] body), with the surviving base
+    /// values group-quantized under `spec` (group fitted to the row's
+    /// kept count via [`PackedQnm::fit_spec`]).
+    pub fn compress(
+        w: &Tensor,
+        score: &Tensor,
+        n: usize,
+        m: usize,
+        k_out: usize,
+        spec: QuantSpec,
+    ) -> Self {
+        let (_, cols) = w.dims2();
+        let (outliers, keep) = select_outliers_and_keep(w, score, n, m, k_out);
+        let spec = PackedQnm::fit_spec(spec, n, m, cols);
+        PackedQuantLinear {
+            weights: PackedQnm::from_dense_mask(w, &keep, n, m, spec),
+            outliers,
+        }
+    }
+
+    /// Effective dense weight (reconstruction-error reporting only).
+    pub fn to_dense(&self) -> Tensor {
+        let mut d = self.weights.to_dense();
+        if let Some(o) = &self.outliers {
+            o.add_into(&mut d);
+        }
+        d
+    }
+}
+
+impl Kernel for PackedQuantLinear {
     fn dims(&self) -> (usize, usize) {
         (self.weights.rows, self.weights.cols)
     }
@@ -890,7 +1177,11 @@ mod tests {
             let rows = g.int(1, 12).max(1);
             // in-features must fit a 256-block when outliers are on
             let with_outliers = g.bool();
-            let cols = if with_outliers { 256 * g.int(1, 2).max(1) } else { m * g.int(1, 12).max(1) };
+            let cols = if with_outliers {
+                256 * g.int(1, 2).max(1)
+            } else {
+                m * g.int(1, 12).max(1)
+            };
             let bsz = g.int(1, 6).max(1);
             let w = Tensor::new(vec![rows, cols], g.vec_normal(rows * cols));
             let score = w.map(f32::abs);
@@ -1078,6 +1369,8 @@ mod tests {
         let w = Tensor::randn_outliers(vec![48, 512], 0.05, 0.02, 8.0, &mut rng);
         let x = Tensor::randn(vec![1, 512], 1.0, &mut rng);
         let layer = PackedLinear::compress(&w, &w.map(f32::abs), 8, 16, 16);
+        let qlayer =
+            PackedQuantLinear::compress(&w, &w.map(f32::abs), 8, 16, 16, QuantSpec::int4_g128());
         let vmask = vnm_mask(&w, 4, 2, 4);
         let vnm = PackedVnm::from_dense_mask(&w, &vmask, 4, 2, 4);
         let csr = Csr::from_topk_global(&w, &w.map(f32::abs), 300);
@@ -1085,6 +1378,8 @@ mod tests {
             &layer.weights,
             layer.outliers.as_ref().unwrap(),
             &layer,
+            &qlayer.weights,
+            &qlayer,
             &vnm,
             &csr,
             &w,
@@ -1101,5 +1396,99 @@ mod tests {
     fn spmm_vec_shape_mismatch_panics() {
         let w = Tensor::ones(vec![4, 16]);
         spmm_vec(&[1.0; 8], &w);
+    }
+
+    #[test]
+    fn qnm_matches_dense_of_dequantized() {
+        // the quantized kernel must reproduce exactly the product of its
+        // own dequantized expansion — quantization error lives in the
+        // *stored values*, never in the kernel math
+        let mut rng = Rng::new(113);
+        let w = Tensor::randn_outliers(vec![48, 256], 0.05, 0.01, 8.0, &mut rng);
+        for (n, m) in [(2usize, 4usize), (4, 8), (8, 16)] {
+            let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+            let spec = PackedQnm::fit_spec(QuantSpec::int4_g128(), n, m, 256);
+            let packed = PackedQnm::from_dense_mask(&w, &mask, n, m, spec);
+            let x = Tensor::randn(vec![5, 256], 1.0, &mut rng);
+            let got = spmm(&x, &packed);
+            let want = dense_ref(&x, &packed.to_dense());
+            assert!(
+                rel_error(&got, &want) < 1e-5,
+                "{n}:{m} rel {}",
+                rel_error(&got, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn qnm_tiled_bitwise_matches_rowwise_reference() {
+        // SmallBatch and TiledGemm orders over the quantized format
+        // reproduce the per-row kernel bit for bit, full range and
+        // sub-range — the same contract the bf16 format holds
+        let mut rng = Rng::new(114);
+        let w = Tensor::randn_outliers(vec![37, 512], 0.05, 0.02, 8.0, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let spec = PackedQnm::fit_spec(QuantSpec::int4_g128(), 8, 16, 512);
+        let packed = PackedQnm::from_dense_mask(&w, &mask, 8, 16, spec);
+        for bsz in [2usize, 3, 4, 5, 8, 16, 33] {
+            let x = Tensor::randn(vec![bsz, 512], 1.0, &mut rng);
+            let mut want = vec![0.0f32; bsz * 37];
+            packed.accumulate_rows_rowwise(&x, 0, 37, &mut want);
+            let got = spmm(&x, &packed);
+            assert_eq!(got.data(), want.as_slice(), "bsz={bsz}");
+            let mut want_part = vec![0.0f32; bsz * 20];
+            packed.accumulate_rows_rowwise(&x, 9, 29, &mut want_part);
+            let mut got_part = vec![0.0f32; bsz * 20];
+            packed.accumulate_rows(&x, 9, 29, &mut got_part);
+            assert_eq!(got_part, want_part, "bsz={bsz} subrange");
+        }
+    }
+
+    #[test]
+    fn quant_linear_outlier_side_stream_composes() {
+        let mut rng = Rng::new(115);
+        let w = Tensor::randn_outliers(vec![16, 512], 0.05, 0.02, 10.0, &mut rng);
+        let layer =
+            PackedQuantLinear::compress(&w, &w.map(f32::abs), 8, 16, 16, QuantSpec::int4_g128());
+        let x = Tensor::randn(vec![3, 512], 1.0, &mut rng);
+        let base = spmm(&x, &layer.weights);
+        let side = spmm(&x, layer.outliers.as_ref().unwrap());
+        let fused = spmm(&x, &layer);
+        assert_allclose(fused.data(), base.add(&side).data(), 1e-5, 1e-6).unwrap();
+        // and the fused product tracks the dequantized-dense reference
+        let want = dense_ref(&x, &layer.to_dense());
+        assert_allclose(fused.data(), want.data(), 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn quant_operand_bytes_le_020_dense_at_8_16() {
+        let mut rng = Rng::new(116);
+        let w = Tensor::randn(vec![256, 512], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let packed = PackedQnm::from_dense_mask(&w, &mask, 8, 16, QuantSpec::int4_g128());
+        let dense_bytes = Kernel::operand_bytes(&w);
+        // acceptance: mask meta + int4 codes + scales ≤ 0.20× dense bf16
+        assert!(
+            (packed.operand_bytes() as f64) <= 0.20 * dense_bytes as f64,
+            "{} vs dense {}",
+            packed.operand_bytes(),
+            dense_bytes
+        );
+        // and the quantized format beats its own bf16 parent by > 2.5×
+        let bf16 = PackedNm::from_dense_mask(&w, &mask, 8, 16);
+        assert!((bf16.operand_bytes() as f64) > 2.5 * packed.operand_bytes() as f64);
+    }
+
+    #[test]
+    fn qnm_parallel_matches_serial_bitwise() {
+        let mut rng = Rng::new(117);
+        let w = Tensor::randn_outliers(vec![67, 512], 0.05, 0.01, 8.0, &mut rng);
+        let layer =
+            PackedQuantLinear::compress(&w, &w.map(f32::abs), 8, 16, 16, QuantSpec::int4_g128());
+        let x = Tensor::randn(vec![7, 512], 1.0, &mut rng);
+        let serial = spmm(&x, &layer);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(spmm_parallel(&x, &layer, threads), serial, "threads={threads}");
+        }
     }
 }

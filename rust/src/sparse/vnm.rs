@@ -227,7 +227,8 @@ mod tests {
         let p = PackedVnm::from_dense_mask(&w, &mask, 4, 8, 16);
         // 14 bits per (4,16) tile = 0.875/4 bits per element
         assert!((p.bits_per_element() - 0.875 / 4.0).abs() < 1e-9);
-        let nm = crate::sparse::PackedNm::from_dense_mask(&w, &crate::pruning::mask_topn_per_block(&w.map(f32::abs), 8, 16), 8, 16);
+        let nm_mask = crate::pruning::mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let nm = crate::sparse::PackedNm::from_dense_mask(&w, &nm_mask, 8, 16);
         assert!(p.bytes() < nm.bytes());
     }
 

@@ -41,7 +41,11 @@ impl Json {
     }
 
     /// `obj["a"]["b"][2]`-style path access, panics with context on miss —
-    /// for manifests whose schema we control.
+    /// **trusted documents only** (artifact manifests, checkpoints, our
+    /// own test fixtures). Never call this on bytes that crossed a
+    /// socket: request-path code must route misses through [`Self::get`]
+    /// into a typed error reply, not a worker-thread panic
+    /// (`serve/protocol.rs` is the reference).
     pub fn at(&self, key: &str) -> &Json {
         self.get(key)
             .unwrap_or_else(|| panic!("json: missing key {key:?} in {self:.60?}"))
@@ -324,7 +328,11 @@ impl fmt::Display for Json {
             Json::Null => write!(f, "null"),
             Json::Bool(b) => write!(f, "{b}"),
             Json::Num(x) => {
-                if x.fract() == 0.0 && x.abs() < 1e15 {
+                if !x.is_finite() {
+                    // JSON has no NaN/inf — "null" keeps the document
+                    // parseable instead of poisoning the whole line
+                    write!(f, "null")
+                } else if x.fract() == 0.0 && x.abs() < 1e15 {
                     write!(f, "{}", *x as i64)
                 } else {
                     write!(f, "{x}")
@@ -407,6 +415,18 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let back = Json::parse(&v.to_string()).unwrap();
         assert_eq!(v, back);
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // a NaN/inf smuggled into a reply must not make the whole wire
+        // line unparseable (JSON has no non-finite literals)
+        for x in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = Json::obj(vec![("x", Json::num(x))]);
+            let line = doc.to_string();
+            assert_eq!(line, "{\"x\":null}", "{x}");
+            assert!(Json::parse(&line).is_ok());
+        }
     }
 
     #[test]

@@ -1,0 +1,239 @@
+//! Acceptance for the quantized 8:16 packed serving path:
+//!
+//! * storage accounting agrees three ways — [`PackedQnm::operand_bytes`]
+//!   vs [`GroupQuant::bytes`] of the kept-value matrix vs the
+//!   `hwsim` `sparse_nm_quant` traffic model — and the combined
+//!   bits/param (0.875 mask + 4-bit codes + scales) matches what the
+//!   `sparselm quant --pack` report computes;
+//! * quantize → pack → spmm parity, property-checked across formats ×
+//!   batch 1..64 × worker counts 1..8 (the bitwise dispatch contract,
+//!   extended to the quantized kernel);
+//! * `--backend spmm-q4` generates **token-parity** output against the
+//!   dequantized-dense reference over ≥ 32 greedy steps, in-process and
+//!   through a live server.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparselm::data::{CorpusKind, CorpusSpec, Tokenizer, World};
+use sparselm::data::tokenizer::{BOS, EOS};
+use sparselm::eval::argmax;
+use sparselm::hwsim::{GemmShape, HwModel};
+use sparselm::model::{ModelConfig, ParamSet, SparseLm};
+use sparselm::pruning::mask_topn_per_block;
+use sparselm::quant::{nm_quant_bits_per_param, GroupQuant, QuantSpec};
+use sparselm::serve::{serve_generate, spmm_generator, spmm_scorer, ServeClient, ServerConfig};
+use sparselm::sparse::{spmm, spmm_parallel, spmm_vec, Kernel, PackedQnm, PackedQuantLinear};
+use sparselm::tensor::Tensor;
+use sparselm::util::propcheck::{check, Gen};
+use sparselm::util::Rng;
+
+// ------------------------------------------------- storage accounting
+
+#[test]
+fn storage_accounting_agrees_across_format_quantizer_and_model() {
+    let mut rng = Rng::new(0xACC7);
+    let (rows, cols) = (128usize, 512usize);
+    let (n, m) = (8usize, 16usize);
+    let spec = QuantSpec::int4_g128();
+    let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+    let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+    let p = PackedQnm::from_dense_mask(&w, &mask, n, m, spec);
+
+    // 1. codes + scales are exactly GroupQuant::bytes of the kept matrix
+    let kpr = PackedQnm::kept_per_row(n, m, cols);
+    let mut kept = Vec::with_capacity(rows * kpr);
+    for r in 0..rows {
+        for c in 0..cols {
+            if mask.at2(r, c) != 0.0 {
+                kept.push(w.at2(r, c));
+            }
+        }
+    }
+    let gq = GroupQuant::quantize(&Tensor::new(vec![rows, kpr], kept), spec);
+    assert_eq!(p.value_bytes(), gq.bytes(), "PackedQnm values != GroupQuant");
+
+    // 2. operand bytes = GroupQuant bytes + mask metadata, and the hwsim
+    // model prices the same streams: exact on codes+scales+meta bits,
+    // within the ≤8-byte u64 word-padding sliver overall
+    assert_eq!(p.operand_bytes(), gq.bytes() + p.meta_bytes());
+    let hw = HwModel::default();
+    let modeled = hw.sparse_nm_quant(GemmShape::new(1, rows, cols), n, m, spec);
+    let modeled_operand = modeled.weight_bytes + modeled.meta_bytes;
+    assert_eq!(modeled.weight_bytes, gq.bytes() as f64, "model codes+scales");
+    assert_eq!(modeled.meta_bytes, (p.meta_bits() / 8) as f64, "model mask meta");
+    let pad = p.operand_bytes() as f64 - modeled_operand;
+    assert!((0.0..=8.0).contains(&pad), "padding sliver {pad}");
+
+    // 3. combined bits/param: measured ≈ analytic 2.9375, and the
+    // quant_cmd --pack report lands on the same number
+    let analytic = nm_quant_bits_per_param(n, m, spec.bits, spec.group);
+    assert!((analytic - 2.9375).abs() < 1e-12);
+    assert!((p.bits_per_param() - analytic).abs() < 0.002, "{}", p.bits_per_param());
+
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let params = ParamSet::init(&cfg, &mut rng);
+    let (layers, reported) =
+        sparselm::cli::packed_quant_report(&params, n, m, spec, false).unwrap();
+    assert!(layers > 0);
+    assert!(
+        (reported - analytic).abs() < 0.01,
+        "quant_cmd report {reported} vs analytic {analytic}"
+    );
+}
+
+// ------------------------------------- quantize → pack → spmm parity
+
+fn bitwise_eq(a: &Tensor, b: &Tensor) -> bool {
+    a.shape() == b.shape()
+        && a.data()
+            .iter()
+            .zip(b.data())
+            .all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn property_quantized_kernels_bitwise_equal_gemv_reference() {
+    check("quantize→pack→spmm parity", 20, |g: &mut Gen| {
+        let (n, m) = *g.choose(&[(2usize, 4usize), (4, 8), (8, 16)]);
+        let with_outliers = g.bool();
+        let rows = g.int(1, 48).max(1);
+        let cols = if with_outliers { 256 } else { m * g.int(1, 8).max(1) };
+        let b = g.int(1, 64).max(1);
+        let bits = *g.choose(&[3u32, 4, 8]);
+        let group = *g.choose(&[32usize, 64, 128]);
+        let spec = PackedQnm::fit_spec(QuantSpec::new(bits, group), n, m, cols);
+        let w = Tensor::new(vec![rows, cols], g.vec_normal(rows * cols));
+        let score = w.map(f32::abs);
+        let kernel: Box<dyn Kernel> = if with_outliers {
+            Box::new(PackedQuantLinear::compress(&w, &score, n, m, 8, spec))
+        } else {
+            let mask = mask_topn_per_block(&score, n, m);
+            Box::new(PackedQnm::from_dense_mask(&w, &mask, n, m, spec))
+        };
+        let x = Tensor::new(vec![b, cols], g.vec_normal(b * cols));
+        // GEMV oracle, row by row
+        let (orows, _) = kernel.dims();
+        let mut want = vec![0.0f32; b * orows];
+        for i in 0..b {
+            let y = spmm_vec(x.row(i), &*kernel);
+            want[i * orows..(i + 1) * orows].copy_from_slice(&y);
+        }
+        let want = Tensor::new(vec![b, orows], want);
+        let serial = spmm(&x, &*kernel);
+        if !bitwise_eq(&serial, &want) {
+            return Err(format!(
+                "int{bits} g{} {n}:{m} rows={rows} b={b}: serial != gemv",
+                spec.group
+            ));
+        }
+        for workers in [1usize, 2, 3, 5, 8] {
+            let par = spmm_parallel(&x, &*kernel, workers);
+            if !bitwise_eq(&par, &serial) {
+                return Err(format!(
+                    "int{bits} {n}:{m} rows={rows} b={b} workers={workers}: pool != serial"
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------ generation parity
+
+/// Stand-in config: structurally complete, shrunk for CI (mirrors
+/// tests/generate_parity.rs).
+fn test_config() -> ModelConfig {
+    let mut cfg = ModelConfig::preset("gqa").unwrap();
+    cfg.n_layers = 2;
+    cfg.vocab = 256;
+    cfg.hidden = 256;
+    cfg.seq = 48;
+    cfg.batch = 1;
+    cfg
+}
+
+const GEN_TOKENS: usize = 32;
+
+/// Build the dequantized-dense reference of a `compress_quant` model:
+/// the same deterministic selection + quantization, expanded to dense
+/// tensors served through the reference kernels.
+fn dequantized_reference(params: &ParamSet, k_out: usize, spec: QuantSpec) -> SparseLm {
+    let mut dq = params.clone();
+    for (_, idx) in params.linear_indices() {
+        let w = &params.tensors[idx];
+        let layer = PackedQuantLinear::compress(w, &w.map(f32::abs), 8, 16, k_out, spec);
+        dq.tensors[idx] = layer.to_dense();
+    }
+    SparseLm::from_params(&dq)
+}
+
+#[test]
+fn quantized_backend_generates_token_parity_with_dequantized_dense() {
+    let cfg = test_config();
+    let mut rng = Rng::new(61);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let spec = QuantSpec::int4_g128();
+    let packed = SparseLm::compress_quant(&params, 8, 16, 16, spec);
+    let reference = dequantized_reference(&params, 16, spec);
+
+    let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let got = packed.generate(&prompt, GEN_TOKENS, None, argmax).unwrap();
+    let want = reference.generate(&prompt, GEN_TOKENS, None, argmax).unwrap();
+    assert_eq!(got.len(), GEN_TOKENS);
+    assert_eq!(
+        got, want,
+        "quantized packed decode must token-match its dequantized-dense reference"
+    );
+}
+
+#[test]
+fn quantized_generate_server_end_to_end() {
+    // the `--backend spmm-q4` composition: compress_quant model behind
+    // spmm_scorer + spmm_generator, scoring and generating over TCP,
+    // with the generated text token-matching the in-process reference
+    let cfg = test_config();
+    let mut rng = Rng::new(62);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let spec = QuantSpec::int4_g128();
+    let lm = Arc::new(SparseLm::compress_quant(&params, 8, 16, 16, spec));
+    let reference = dequantized_reference(&params, 16, spec);
+
+    let world = World::new(7);
+    let text = CorpusSpec::new(CorpusKind::Wiki, 4_000, 3).generate(&world);
+    let tok = Arc::new(Tokenizer::fit(&text, cfg.vocab));
+
+    let handle = serve_generate(
+        spmm_scorer(Arc::clone(&lm)),
+        spmm_generator(Arc::clone(&lm), 4),
+        Arc::clone(&tok),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 4,
+            max_batch: cfg.batch,
+            max_wait: Duration::from_millis(5),
+            max_gen_tokens: GEN_TOKENS,
+        },
+    )
+    .unwrap();
+
+    let mut cl = ServeClient::connect(handle.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(120)).unwrap();
+    let prompt = "the quick brown fox";
+    let (served, n1) = cl.generate(prompt, GEN_TOKENS, 0.0).unwrap();
+    let (served2, n2) = cl.generate(prompt, GEN_TOKENS, 0.0).unwrap();
+    assert_eq!((served.clone(), n1), (served2, n2), "greedy generation stable");
+
+    // in-process reference over the same tokenization + stop rule
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(prompt));
+    let want = reference
+        .generate(&ids, GEN_TOKENS, Some(EOS), argmax)
+        .unwrap();
+    assert_eq!(served, tok.decode(&want), "server output != dequantized reference");
+
+    // scoring still works over the same quantized weights
+    let (nll, toks) = cl.nll(prompt).unwrap();
+    assert!(nll.is_finite() && toks > 0);
+    handle.shutdown().unwrap();
+}
