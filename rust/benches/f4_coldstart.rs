@@ -1,0 +1,148 @@
+//! f4_coldstart — artifact mmap load vs dense-checkpoint + re-pack.
+//!
+//! The `.spak` container's two claims, measured:
+//!
+//! * **cold start**: booting a serving model by mmapping a packed
+//!   artifact (`store::read_artifact` + `into_sparse_lm`) vs the legacy
+//!   path (load a dense checkpoint, re-pack every linear by magnitude —
+//!   what `serve --backend spmm --repack` does). The speedup is a
+//!   within-run ratio, machine-comparable, gated in
+//!   `bench/baseline.json`.
+//! * **exact storage accounting**: the artifact's on-disk packed-stream
+//!   bytes must equal the `hwsim::artifact` model **exactly** (equality,
+//!   not tolerance — the bits/param claim as an `ls -l`-able fact), and
+//!   the artifact-measured bits/param must sit within the trailing-word
+//!   padding sliver of the Table-1 / `nm_quant_bits_per_param`
+//!   analytics.
+//!
+//! Emits `BENCH_f4_coldstart.json` (schema: docs/BENCHMARKS.md) for
+//! CI's bench-gate job.
+
+use sparselm::bench::{time_it, BenchReport, TablePrinter};
+use sparselm::hwsim::artifact::{model_linear_stream_bytes, model_outlier_stream_bytes};
+use sparselm::model::{load_checkpoint, save_checkpoint, ModelConfig, ParamSet, SparseLm};
+use sparselm::quant::{nm_bits_per_param, nm_quant_bits_per_param, QuantSpec};
+use sparselm::store::{read_artifact, write_artifact, PackedModel};
+use sparselm::util::Rng;
+
+fn main() -> sparselm::Result<()> {
+    sparselm::util::logging::init();
+    let mut report = BenchReport::new("f4_coldstart");
+    let cfg = ModelConfig::preset("tiny").unwrap();
+    let (n, m, k_out) = (8usize, 16usize, 16usize);
+    let mut rng = Rng::new(0xC01D);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+
+    let dir = std::env::temp_dir().join("sparselm-f4-coldstart");
+    std::fs::create_dir_all(&dir)?;
+    let ckpt = dir.join("tiny.ckpt");
+    let spak = dir.join("tiny.spak");
+    let spak_q4 = dir.join("tiny-q4.spak");
+    save_checkpoint(&ckpt, &params)?;
+    let packed = PackedModel::compress(&params, n, m, k_out, None);
+    let info = write_artifact(&spak, &packed)?;
+    let spec = QuantSpec::int4_g128();
+    let packed_q4 = PackedModel::compress(&params, n, m, k_out, Some(spec));
+    let info_q4 = write_artifact(&spak_q4, &packed_q4)?;
+
+    println!("\n# f4_coldstart — tiny, {n}:{m} + {k_out}:256\n");
+    let t = TablePrinter::new(&["cold-start path", "latency", "notes"], &[40, 12, 30]);
+
+    // legacy: dense checkpoint -> magnitude re-pack of every linear
+    let dt_repack = time_it(1, 3, || {
+        let p = load_checkpoint(&ckpt).unwrap();
+        SparseLm::compress(&p, n, m, k_out)
+    });
+    t.row(&[
+        "load ckpt + magnitude re-pack".into(),
+        format!("{:.1} ms", dt_repack * 1e3),
+        format!("{} KiB f32 checkpoint", std::fs::metadata(&ckpt)?.len() / 1024),
+    ]);
+    report.lower("repack_coldstart_ms", dt_repack * 1e3, "ms");
+
+    // artifact: mmap + checksum + zero-copy kernel assembly
+    let dt_mmap = time_it(1, 3, || {
+        let (pm, _) = read_artifact(&spak).unwrap();
+        pm.into_sparse_lm().unwrap()
+    });
+    t.row(&[
+        "mmap .spak artifact".into(),
+        format!("{:.1} ms", dt_mmap * 1e3),
+        format!("{} KiB on disk", info.file_bytes / 1024),
+    ]);
+    report.lower("mmap_coldstart_ms", dt_mmap * 1e3, "ms");
+    let speedup = dt_repack / dt_mmap;
+    report.higher("coldstart_speedup", speedup, "x");
+    println!("\ncold start speedup (repack / mmap): {speedup:.2}x");
+
+    // the mmap'd model must be the in-memory packed model, bitwise
+    let (back, _) = read_artifact(&spak)?;
+    #[cfg(unix)]
+    assert!(back.all_streams_mapped(), "spak weight streams must be mmap-backed");
+    let served = back.into_sparse_lm()?;
+    let reference = SparseLm::compress(&params, n, m, k_out);
+    let prompt = [1i32, 17, 40, 3];
+    assert_eq!(
+        served.generate(&prompt, 12, None, sparselm::eval::argmax)?,
+        reference.generate(&prompt, 12, None, sparselm::eval::argmax)?,
+        "mmap-served generation must match the in-memory packed model"
+    );
+
+    // byte-exact accounting: measured streams == hwsim artifact model,
+    // and the container's structural identity holds
+    let modeled = model_linear_stream_bytes(&cfg, n, m, None);
+    let modeled_out = model_outlier_stream_bytes(&cfg, k_out);
+    let exact = info.linear_stream_bytes == modeled
+        && info.outlier_stream_bytes == modeled_out
+        && info.file_bytes == info.expected_file_bytes();
+    println!(
+        "bf16 artifact: measured {} + {} outlier bytes vs modeled {} + {} — {}",
+        info.linear_stream_bytes,
+        info.outlier_stream_bytes,
+        modeled,
+        modeled_out,
+        if exact { "exact" } else { "MISMATCH" }
+    );
+    report.higher(
+        "artifact_bytes_match_model",
+        if exact { 1.0 } else { 0.0 },
+        "bool",
+    );
+
+    let modeled_q4 = model_linear_stream_bytes(&cfg, n, m, Some(spec));
+    let exact_q4 = info_q4.linear_stream_bytes == modeled_q4
+        && info_q4.outlier_stream_bytes == modeled_out
+        && info_q4.file_bytes == info_q4.expected_file_bytes();
+    println!(
+        "int4 artifact: measured {} bytes vs modeled {modeled_q4} — {}",
+        info_q4.linear_stream_bytes,
+        if exact_q4 { "exact" } else { "MISMATCH" }
+    );
+    report.higher(
+        "artifact_q4_bytes_match_model",
+        if exact_q4 { 1.0 } else { 0.0 },
+        "bool",
+    );
+
+    // bits/param vs the analytic accounting (≥ 1 by construction; the
+    // excess is the pattern stream's trailing-word padding)
+    let ratio = info.base_bits_per_param() / nm_bits_per_param(n, m);
+    let ratio_q4 =
+        info_q4.base_bits_per_param() / nm_quant_bits_per_param(n, m, spec.bits, spec.group);
+    println!(
+        "bits/param: bf16 {:.5} ({ratio:.5}x Table-1 {:.4}), int4 {:.5} \
+         ({ratio_q4:.5}x model {:.4})",
+        info.base_bits_per_param(),
+        nm_bits_per_param(n, m),
+        info_q4.base_bits_per_param(),
+        nm_quant_bits_per_param(n, m, spec.bits, spec.group)
+    );
+    report.lower("spak_bits_per_param_over_table1", ratio, "x");
+    report.lower("spak_q4_bits_per_param_over_model", ratio_q4, "x");
+
+    report.emit()?;
+    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(&spak).ok();
+    std::fs::remove_file(&spak_q4).ok();
+    Ok(())
+}

@@ -5,6 +5,9 @@
 //! sparselm compress --model tiny --ckpt runs/tiny.ckpt --sparsity 8:16 \
 //!                   --outliers 16 --method ria --sq --vc --ebft 40
 //! sparselm eval     --model tiny --ckpt runs/tiny-8x16.ckpt [--zeroshot]
+//! sparselm pack     --ckpt runs/tiny.ckpt --out runs/tiny.spak --sparsity 8:16 \
+//!                   --outliers 16 [--quant --qbits 4 --qgroup 128]
+//! sparselm inspect  runs/tiny.spak
 //! sparselm hwsim    --batch 8
 //! sparselm info     --model tiny
 //! sparselm quant    --ckpt runs/tiny.ckpt --bits 4 --group 128 --outliers 16
@@ -42,6 +45,8 @@ pub fn main_entry() -> crate::Result<()> {
         "train" => cmd_train(args),
         "compress" => cmd_compress(args),
         "eval" => cmd_eval(args),
+        "pack" => cmd_pack(args),
+        "inspect" => cmd_inspect(args),
         "hwsim" => cmd_hwsim(args),
         "info" => cmd_info(args),
         "quant" => quant_cmd::cmd_quant(args),
@@ -63,19 +68,27 @@ fn print_help() {
 subcommands:
   train     train a stand-in model via the AOT train-step artifact
   compress  run the §4 pipeline (SQ -> RIA -> N:M + k:256 outliers -> VC ->
-            EBFT; --quant adds the pack-time int4 stage)
+            EBFT; --quant adds the pack-time int4 stage; --pack-out x.spak
+            additionally writes the calibrated packed-model artifact)
   eval      perplexity (and --zeroshot accuracy) of a checkpoint
+  pack      pack a dense checkpoint into a .spak artifact (magnitude
+            selection; the calibrated route is compress --pack-out)
+  inspect   validate a .spak artifact and print its per-tensor layout,
+            exact byte accounting and bits/param vs the Table-1 model
   hwsim     projected sparse-GEMM speedups (the paper's §2 analysis)
   info      model/artifact inventory
   quant     group-quantize a checkpoint (SPQR-style outliers optional;
             --pack N:M reports the fused sparse+quant PackedQnm footprint)
   owl       OWL per-layer N:M allocation report
   serve     scoring + generation server (dynamic batching for nll/choice,
-            continuous batching for generate; --backend spmm packs + serves
-            decode-free, spmm-q4 additionally int4-quantizes the kept values
+            continuous batching for generate; --model x.spak mmaps a packed
+            artifact and serves it zero-copy; --backend spmm re-packs a dense
+            checkpoint — requires --repack to acknowledge the lossy magnitude
+            selection — spmm-q4 additionally int4-quantizes the kept values
             (--qbits/--qgroup), dense serves exact weights via the host
             forward, pjrt uses the AOT artifacts, scoring only)
-  generate  one-shot KV-cached generation from a checkpoint (--random for
+  generate  one-shot KV-cached generation from a checkpoint or a .spak
+            artifact (--model x.spak mmaps the packed model; --random for
             an offline stand-in; --quant for the int4 packed format;
             --temperature 0 = greedy)
   serve-bench  closed-loop load generator against a running server
@@ -161,13 +174,31 @@ fn cmd_compress(args: Args) -> crate::Result<()> {
     let model = args.get_str("model", "tiny");
     let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
     let out = args.get_str("out", &format!("runs/{model}-compressed.ckpt"));
+    let pack_out = args.get_str("pack-out", "");
     let ctx = ExperimentCtx::new(&args.get_str("artifacts", "artifacts"))?;
     let dense = load_checkpoint(&PathBuf::from(&ckpt))?;
     let spec = build_spec(&args)?;
     let kind = CorpusKind::parse(&args.get_str("corpus", "wiki")).unwrap_or(CorpusKind::Wiki);
 
     let pipeline = CompressionPipeline::new(Arc::clone(&ctx.engine), &model)?;
-    let (compressed, report) = pipeline.run(&dense, ctx.stream(kind), &spec)?;
+    let (compressed, report) = if pack_out.is_empty() {
+        let (compressed, report) = pipeline.run(&dense, ctx.stream(kind), &spec)?;
+        (compressed, report)
+    } else {
+        // pack-artifact output stage: persist the calibrated packed
+        // layers themselves, not just their dense expansion
+        let (compressed, report, packed) =
+            pipeline.run_packed(&dense, ctx.stream(kind), &spec)?;
+        let info = crate::store::write_artifact(&PathBuf::from(&pack_out), &packed)?;
+        println!(
+            "packed artifact {pack_out}: {} bytes on disk, base {:.4} bits/param \
+             (+outliers {:.4})",
+            info.file_bytes,
+            info.base_bits_per_param(),
+            info.total_bits_per_param()
+        );
+        (compressed, report)
+    };
     save_checkpoint(&PathBuf::from(&out), &compressed)?;
 
     println!("pipeline: {} on {}", report.label, model);
@@ -180,6 +211,130 @@ fn cmd_compress(args: Args) -> crate::Result<()> {
     );
     println!("{}", pipeline.metrics.report());
     println!("saved {out}");
+    Ok(())
+}
+
+/// `sparselm pack` — pack a dense checkpoint into a `.spak` artifact
+/// with **magnitude selection** (no calibration data involved; the
+/// calibrated route is `compress --pack-out`). The written file is the
+/// exact operand set `serve --model x.spak` later mmaps.
+fn cmd_pack(args: Args) -> crate::Result<()> {
+    let ckpt = args.get_str("ckpt", "");
+    anyhow::ensure!(!ckpt.is_empty(), "pack needs --ckpt <checkpoint>");
+    let (n, m) = parse_pattern(&args.get_str("sparsity", "8:16"))?;
+    let k = args.get_usize("outliers", 16)?;
+    let quant = if args.get_bool("quant") {
+        Some(parse_quant_spec(&args)?)
+    } else {
+        None
+    };
+    let default_out = format!("{}.spak", ckpt.trim_end_matches(".ckpt"));
+    let out = args.get_str("out", &default_out);
+
+    let params = load_checkpoint(&PathBuf::from(&ckpt))?;
+    let packed = crate::store::PackedModel::compress(&params, n, m, k, quant);
+    let info = crate::store::write_artifact(&PathBuf::from(&out), &packed)?;
+    println!(
+        "packed {ckpt} -> {out} ({}, {n}:{m} + {k}:256, magnitude selection)",
+        packed.label
+    );
+    println!(
+        "on disk: {} bytes = header {} + streams {} + padding {} + trailer 8",
+        info.file_bytes,
+        info.header_bytes(),
+        info.payload_bytes,
+        info.padding_bytes
+    );
+    println!(
+        "packed linears: {} KiB base ({:.4} bits/param) + {} KiB outliers \
+         ({:.4} bits/param total); dense params {} KiB",
+        info.linear_stream_bytes / 1024,
+        info.base_bits_per_param(),
+        info.outlier_stream_bytes / 1024,
+        info.total_bits_per_param(),
+        info.dense_stream_bytes / 1024
+    );
+    let modeled =
+        crate::hwsim::artifact::model_linear_stream_bytes(&params.config, n, m, quant);
+    println!(
+        "hwsim cross-check: modeled base streams {} bytes — {}",
+        modeled,
+        if modeled == info.linear_stream_bytes { "exact match" } else { "MISMATCH" }
+    );
+    anyhow::ensure!(
+        modeled == info.linear_stream_bytes,
+        "artifact base streams ({} bytes) diverge from the hwsim accounting ({modeled})",
+        info.linear_stream_bytes
+    );
+    Ok(())
+}
+
+/// `sparselm inspect` — validate (magic/version/checksum/layout) and
+/// print the byte-exact contents of a `.spak` artifact.
+fn cmd_inspect(args: Args) -> crate::Result<()> {
+    let path = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| args.get_str("model", ""));
+    anyhow::ensure!(!path.is_empty(), "inspect needs a path: sparselm inspect x.spak");
+    let (packed, info) = crate::store::read_artifact(&PathBuf::from(&path))?;
+    let cfg = &packed.config;
+    println!(
+        "{path}: SPAK v{} ({}), checksum OK, {} bytes",
+        crate::store::VERSION,
+        if info.label.is_empty() { "unlabeled" } else { info.label.as_str() },
+        info.file_bytes
+    );
+    println!(
+        "model {}: dim={} layers={} heads={} (kv {}) hidden={} vocab={} seq={} batch={}",
+        cfg.name,
+        cfg.dim,
+        cfg.n_layers,
+        cfg.n_heads,
+        cfg.n_kv_heads,
+        cfg.hidden,
+        cfg.vocab,
+        cfg.seq,
+        cfg.batch
+    );
+    println!("{:<12} {:>10} {:>16} {:>12}", "kind", "tensors", "shape-elems", "bytes");
+    let mut by_kind: std::collections::BTreeMap<String, (usize, usize, usize)> =
+        std::collections::BTreeMap::new();
+    for t in &info.tensors {
+        let e = by_kind.entry(t.kind.clone()).or_default();
+        e.0 += 1;
+        e.1 += t.shape.iter().product::<usize>();
+        e.2 += t.stream_bytes;
+    }
+    for (kind, (count, elems, bytes)) in &by_kind {
+        println!("{kind:<12} {count:>10} {elems:>16} {bytes:>12}");
+    }
+    println!(
+        "layout: header {} + streams {} + padding {} + trailer 8 = {} bytes",
+        info.header_bytes(),
+        info.payload_bytes,
+        info.padding_bytes,
+        info.file_bytes
+    );
+    if let Some((n, m, quant)) = packed.pack_summary() {
+        let modeled = crate::hwsim::artifact::model_linear_stream_bytes(cfg, n, m, quant);
+        let analytic = match quant {
+            Some(q) => crate::quant::nm_quant_bits_per_param(n, m, q.bits, q.group),
+            None => crate::quant::nm_bits_per_param(n, m),
+        };
+        println!(
+            "packed base: {n}:{m}{} — {:.4} bits/param measured vs {analytic:.4} analytic, \
+             modeled streams {} bytes ({})",
+            match quant {
+                Some(q) => format!(" int{} g{}", q.bits, q.group),
+                None => String::new(),
+            },
+            info.base_bits_per_param(),
+            modeled,
+            if modeled == info.linear_stream_bytes { "exact match" } else { "MISMATCH" }
+        );
+    }
     Ok(())
 }
 

@@ -31,21 +31,91 @@ pub fn standard_tokenizer(fast: bool) -> Tokenizer {
     Tokenizer::fit(&text, 2048)
 }
 
+/// Typed refusal for the silent-approximation trap: `--backend spmm`
+/// on a dense checkpoint re-selects weights by magnitude alone,
+/// discarding whatever calibrated artifacts produced the checkpoint.
+/// The operator must either acknowledge it (`--repack`) or serve a
+/// pipeline-packed `.spak` artifact instead.
+fn require_repack(args: &Args, backend: &str) -> crate::Result<()> {
+    if args.get_bool("repack") {
+        return Ok(());
+    }
+    Err(anyhow::Error::new(crate::Error::BadFlag {
+        key: "repack".into(),
+        value: "absent".into(),
+        want: "to be set: --backend spmm re-packs the checkpoint with magnitude-only \
+               selection, which silently discards calibrated pruning artifacts; pass \
+               --repack to acknowledge the lossy re-pack, or serve a pipeline-packed \
+               artifact with --model <x.spak>",
+    })
+    .context(format!("--backend {backend} on a dense checkpoint")))
+}
+
 pub fn cmd_serve(args: Args) -> crate::Result<()> {
     let model = args.get_str("model", "tiny");
-    let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
     let artifacts = args.get_str("artifacts", "artifacts");
     let addr = args.get_str("addr", "127.0.0.1:7433");
-    let params = load_checkpoint(std::path::Path::new(&ckpt))?;
-    let batch = params.config.batch;
-    let tokenizer = Arc::new(standard_tokenizer(crate::bench::fast_mode()));
-    let server_cfg = ServerConfig {
-        addr,
-        max_conns: args.get_usize("max-conns", 32)?,
-        max_batch: batch,
-        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 15)?),
-        max_gen_tokens: args.get_usize("max-gen-tokens", 512)?,
+    let threads = args.get_usize("threads", crate::util::pool::default_parallelism())?;
+    let gen_batch = args.get_usize("gen-batch", 8)?.max(1);
+    let mk_cfg = |batch: usize| -> crate::Result<ServerConfig> {
+        Ok(ServerConfig {
+            addr: addr.clone(),
+            max_conns: args.get_usize("max-conns", 32)?,
+            max_batch: batch,
+            max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 15)?),
+            max_gen_tokens: args.get_usize("max-gen-tokens", 512)?,
+        })
     };
+    let tokenizer = Arc::new(standard_tokenizer(crate::bench::fast_mode()));
+    let serve_lm = |lm: SparseLm,
+                    cfg: ServerConfig|
+     -> crate::Result<crate::serve::ServerHandle> {
+        let lm = Arc::new(lm);
+        serve_generate(
+            spmm_scorer(Arc::clone(&lm)),
+            spmm_generator(lm, gen_batch),
+            tokenizer.clone(),
+            cfg,
+        )
+    };
+
+    // --model x.spak: mmap the packed artifact and serve it zero-copy —
+    // no re-pack, no backend choice (the artifact *is* the format)
+    if model.ends_with(".spak") {
+        if let Some(b) = args.get("backend") {
+            anyhow::bail!(
+                "--model {model} serves the artifact's own packed format; \
+                 --backend {b} does not apply"
+            );
+        }
+        let t0 = Instant::now();
+        let (packed, info) = crate::store::read_artifact(std::path::Path::new(&model))?;
+        let lm = packed.into_sparse_lm()?.with_threads(threads);
+        println!(
+            "mmap'd {model} in {:.0} ms ({}; zero-copy: {}): packed linears {} KiB \
+             at {:.4} bits/param base, dense params {} KiB",
+            t0.elapsed().as_secs_f64() * 1e3,
+            if info.label.is_empty() { "unlabeled" } else { info.label.as_str() },
+            info.mapped,
+            (info.linear_stream_bytes + info.outlier_stream_bytes) / 1024,
+            info.base_bits_per_param(),
+            info.dense_stream_bytes / 1024
+        );
+        let cfg = mk_cfg(lm.config.batch)?;
+        let handle = serve_lm(lm, cfg)?;
+        println!(
+            "serving {model} (spak, spmm) on {} — newline-JSON ops: \
+             ping/nll/choice/generate/stats/shutdown",
+            handle.addr
+        );
+        handle.join()?;
+        println!("server stopped");
+        return Ok(());
+    }
+
+    let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
+    let params = load_checkpoint(std::path::Path::new(&ckpt))?;
+    let server_cfg = mk_cfg(params.config.batch)?;
     // default: serve the checkpoint decode-free (packed spmm host
     // forward); `--backend dense` serves the exact weights through the
     // host forward; `--backend pjrt` keeps the artifact path (needs
@@ -58,47 +128,41 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
         "spmm"
     };
     let backend = args.get_str("backend", default_backend);
-    let threads = args.get_usize("threads", crate::util::pool::default_parallelism())?;
-    let gen_batch = args.get_usize("gen-batch", 8)?.max(1);
-    let serve_lm = |lm: SparseLm| -> crate::Result<crate::serve::ServerHandle> {
-        let lm = Arc::new(lm);
-        serve_generate(
-            spmm_scorer(Arc::clone(&lm)),
-            spmm_generator(lm, gen_batch),
-            tokenizer.clone(),
-            server_cfg.clone(),
-        )
-    };
     let handle = match backend.as_str() {
         "pjrt" => serve(
             pjrt_scorer(artifacts, model.clone(), params),
             Arc::clone(&tokenizer),
             server_cfg.clone(),
         )?,
-        "dense" => serve_lm(SparseLm::from_params(&params).with_threads(threads))?,
+        "dense" => serve_lm(
+            SparseLm::from_params(&params).with_threads(threads),
+            server_cfg.clone(),
+        )?,
         "spmm" => {
+            require_repack(&args, "spmm")?;
             let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
             let k = args.get_usize("outliers", 16)?;
             let lm = SparseLm::compress(&params, n, m, k).with_threads(threads);
             println!(
-                "packing checkpoint to {n}:{m} + {k}:256 (magnitude selection) — \
-                 lossy for dense checkpoints; use --backend dense to serve exact weights"
+                "packing checkpoint to {n}:{m} + {k}:256 (magnitude selection, \
+                 --repack acknowledged) — use --model <x.spak> for calibrated artifacts"
             );
             println!(
                 "packed linear traffic {} KiB (dense {} KiB)",
                 lm.linear_operand_bytes() / 1024,
                 lm.dense_linear_bytes() / 1024
             );
-            serve_lm(lm)?
+            serve_lm(lm, server_cfg.clone())?
         }
         "spmm-q4" => {
+            require_repack(&args, "spmm-q4")?;
             let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
             let k = args.get_usize("outliers", 16)?;
             let spec = super::parse_quant_spec(&args)?;
             let lm = SparseLm::compress_quant(&params, n, m, k, spec).with_threads(threads);
             println!(
                 "packing checkpoint to {n}:{m} + {k}:256 with int{} g{} kept values \
-                 (magnitude selection, dequant in-kernel) — lossy for dense checkpoints",
+                 (magnitude selection, dequant in-kernel, --repack acknowledged)",
                 spec.bits, spec.group
             );
             println!(
@@ -106,7 +170,7 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
                 lm.linear_operand_bytes() / 1024,
                 lm.dense_linear_bytes() / 1024
             );
-            serve_lm(lm)?
+            serve_lm(lm, server_cfg.clone())?
         }
         other => anyhow::bail!("unknown --backend {other} (expected spmm|spmm-q4|dense|pjrt)"),
     };
@@ -139,21 +203,35 @@ pub fn cmd_generate(args: Args) -> crate::Result<()> {
     let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
     let k = args.get_usize("outliers", 16)?;
 
-    let params = if args.get_bool("random") {
-        let cfg = ModelConfig::preset(&model)
-            .ok_or_else(|| anyhow::anyhow!("unknown model preset {model:?}"))?;
-        ParamSet::init_outliers(&cfg, &mut Rng::new(seed ^ 0xFACE))
+    // --model x.spak: decode straight from the mmap'd artifact (no
+    // re-pack; the stored selection — calibrated when the pipeline
+    // wrote it — is what serves)
+    let lm = if model.ends_with(".spak") {
+        let (packed, info) = crate::store::read_artifact(std::path::Path::new(&model))?;
+        println!(
+            "mmap'd {model} ({}; zero-copy: {}): {:.4} bits/param base",
+            if info.label.is_empty() { "unlabeled" } else { info.label.as_str() },
+            info.mapped,
+            info.base_bits_per_param()
+        );
+        packed.into_sparse_lm()?.with_threads(threads)
     } else {
-        let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
-        load_checkpoint(std::path::Path::new(&ckpt))?
-    };
-    let lm = if args.get_bool("dense") {
-        SparseLm::from_params(&params).with_threads(threads)
-    } else if args.get_bool("quant") {
-        let spec = super::parse_quant_spec(&args)?;
-        SparseLm::compress_quant(&params, n, m, k, spec).with_threads(threads)
-    } else {
-        SparseLm::compress(&params, n, m, k).with_threads(threads)
+        let params = if args.get_bool("random") {
+            let cfg = ModelConfig::preset(&model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model preset {model:?}"))?;
+            ParamSet::init_outliers(&cfg, &mut Rng::new(seed ^ 0xFACE))
+        } else {
+            let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
+            load_checkpoint(std::path::Path::new(&ckpt))?
+        };
+        if args.get_bool("dense") {
+            SparseLm::from_params(&params).with_threads(threads)
+        } else if args.get_bool("quant") {
+            let spec = super::parse_quant_spec(&args)?;
+            SparseLm::compress_quant(&params, n, m, k, spec).with_threads(threads)
+        } else {
+            SparseLm::compress(&params, n, m, k).with_threads(threads)
+        }
     };
     let tokenizer = standard_tokenizer(crate::bench::fast_mode());
 

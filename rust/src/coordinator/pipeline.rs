@@ -21,6 +21,13 @@
 //! weight swapped into the compressed model is the dequantized base +
 //! outliers, so downstream eval measures exactly what a
 //! `--backend spmm-q4` deployment serves.
+//!
+//! [`CompressionPipeline::run_packed`] adds the **pack-artifact output
+//! stage**: instead of discarding the packed layers after accounting,
+//! it assembles them (plus the dense non-linear params) into a
+//! [`crate::store::PackedModel`] for [`crate::store::write_artifact`] —
+//! the `.spak` container a server then mmaps directly, skipping the
+//! lossy magnitude re-pack a dense checkpoint cold start performs.
 
 use std::sync::Arc;
 
@@ -32,6 +39,7 @@ use crate::pruning::{
 use crate::quant::QuantSpec;
 use crate::runtime::{literal_f32, tensor_from_literal, Engine, KernelSet};
 use crate::sparse::{Csr, PackedNm, PackedQnm, StructuredOutliers};
+use crate::store::{PackedLayer, PackedModel, PackedWeights};
 use crate::tensor::Tensor;
 use crate::util::Rng;
 
@@ -176,6 +184,40 @@ impl CompressionPipeline {
         stream: &TokenStream,
         spec: &PipelineSpec,
     ) -> crate::Result<(ParamSet, CompressionReport)> {
+        let (params, report, _) = self.run_inner(dense, stream, spec, false)?;
+        Ok((params, report))
+    }
+
+    /// [`Self::run`] plus the **pack-artifact output stage**: the exact
+    /// per-layer artifacts the pipeline computed — calibrated keep
+    /// masks, variance-corrected (and optionally EBFT-tuned) kept
+    /// values, quant codes/scales, structured outlier sets — are kept
+    /// in packed form and returned as a [`PackedModel`], ready for
+    /// [`crate::store::write_artifact`]. Serving that artifact skips
+    /// the lossy magnitude re-pack a dense checkpoint cold start would
+    /// do. Unstructured (CSR) outliers have no serving composite, so
+    /// `spec.unstructured_outliers` is rejected here.
+    pub fn run_packed(
+        &self,
+        dense: &ParamSet,
+        stream: &TokenStream,
+        spec: &PipelineSpec,
+    ) -> crate::Result<(ParamSet, CompressionReport, PackedModel)> {
+        let (params, report, packed) = self.run_inner(dense, stream, spec, true)?;
+        Ok((params, report, packed.expect("run_inner packs when asked")))
+    }
+
+    fn run_inner(
+        &self,
+        dense: &ParamSet,
+        stream: &TokenStream,
+        spec: &PipelineSpec,
+        want_pack: bool,
+    ) -> crate::Result<(ParamSet, CompressionReport, Option<PackedModel>)> {
+        anyhow::ensure!(
+            !(want_pack && spec.unstructured_outliers),
+            "pack-artifact stage supports structured outliers only (drop --unstructured)"
+        );
         let mut rng = Rng::new(spec.seed);
         let lits = self.exec.upload(dense)?;
 
@@ -188,27 +230,32 @@ impl CompressionPipeline {
         // 2. per-layer pruning
         let mut compressed = dense.clone();
         let mut layers = Vec::new();
-        // per block: (masks, salient tensors) for EBFT, BLOCK_LINEAR order
+        // per block: (masks, outlier masks, salient tensors) for EBFT
+        // and the pack stage, BLOCK_LINEAR order
         let mut block_masks: Vec<Vec<Tensor>> = Vec::new();
+        let mut block_omasks: Vec<Vec<Tensor>> = Vec::new();
         let mut block_salient: Vec<Vec<Tensor>> = Vec::new();
 
         for b in 0..self.exec.config.n_layers {
             let mut masks = Vec::new();
+            let mut omasks = Vec::new();
             let mut salients = Vec::new();
             for lin in crate::model::BLOCK_LINEAR {
                 let name = format!("blk{b}.{lin}");
                 let w = dense.get(&name).clone();
                 let stats = calib.stats[b].for_linear(lin)?.clone();
-                let (w_eff, keep, sal, report) = self.metrics.time("prune_layer", || {
+                let (w_eff, keep, omask, sal, report) = self.metrics.time("prune_layer", || {
                     self.prune_one(&name, &w, &stats, spec)
                 })?;
                 *compressed.get_mut(&name) = w_eff;
                 masks.push(keep);
+                omasks.push(omask);
                 salients.push(sal);
                 layers.push(report);
                 self.metrics.incr("layers_pruned", 1);
             }
             block_masks.push(masks);
+            block_omasks.push(omasks);
             block_salient.push(salients);
         }
 
@@ -231,7 +278,9 @@ impl CompressionPipeline {
         // values (post-VC, post-EBFT) into PackedQnm and swap the
         // dequantized effective weight back in, so eval sees exactly the
         // serving format's values. Runs last because EBFT nudges dense
-        // values the quantizer must then fit.
+        // values the quantizer must then fit. When the artifact stage is
+        // on, the freshly packed layers are kept instead of discarded.
+        let mut packed_layers: Vec<PackedLayer> = Vec::new();
         if let Some(qspec) = spec.quant {
             self.metrics.time("quantize", || -> crate::Result<()> {
                 for b in 0..self.exec.config.n_layers {
@@ -254,12 +303,70 @@ impl CompressionPipeline {
                         let li = b * crate::model::BLOCK_LINEAR.len() + i;
                         layers[li].nm_bytes = qnm.bytes();
                         *compressed.get_mut(&name) = qnm.to_dense().add(salient);
+                        if want_pack {
+                            packed_layers.push(PackedLayer {
+                                name,
+                                weights: PackedWeights::Qnm(qnm),
+                                outliers: pack_outliers(
+                                    salient,
+                                    &block_omasks[b][i],
+                                    &spec.prune,
+                                ),
+                            });
+                        }
                         self.metrics.incr("layers_quantized", 1);
                     }
                 }
                 Ok(())
             })?;
+        } else if want_pack {
+            // 4'. bf16 pack stage: the same per-layer assembly without
+            // the quantizer — PackedNm base over the calibrated keep
+            // mask, structured outliers from the salient side.
+            self.metrics.time("pack_artifact", || {
+                for b in 0..self.exec.config.n_layers {
+                    for (i, lin) in crate::model::BLOCK_LINEAR.iter().enumerate() {
+                        let name = format!("blk{b}.{lin}");
+                        let salient = &block_salient[b][i];
+                        let keep = &block_masks[b][i];
+                        let w_eff = compressed.get(&name);
+                        let w_ns = w_eff.zip(salient, |w, s| w - s);
+                        let nm =
+                            PackedNm::from_dense_mask(&w_ns, keep, spec.prune.n, spec.prune.m);
+                        packed_layers.push(PackedLayer {
+                            name,
+                            weights: PackedWeights::Nm(nm),
+                            outliers: pack_outliers(salient, &block_omasks[b][i], &spec.prune),
+                        });
+                    }
+                }
+            });
         }
+
+        // 5. assemble the artifact model: packed linears + the dense
+        // non-linear params (embeddings, norms) of the compressed set
+        let packed = if want_pack {
+            let linear_names: std::collections::BTreeSet<String> = compressed
+                .linear_indices()
+                .into_iter()
+                .map(|(name, _)| name)
+                .collect();
+            let dense_params: Vec<(String, Tensor)> = compressed
+                .names
+                .iter()
+                .zip(&compressed.tensors)
+                .filter(|(name, _)| !linear_names.contains(*name))
+                .map(|(name, t)| (name.clone(), t.clone()))
+                .collect();
+            Some(PackedModel {
+                config: compressed.config.clone(),
+                label: spec.label(),
+                dense: dense_params,
+                layers: packed_layers,
+            })
+        } else {
+            None
+        };
 
         Ok((
             compressed,
@@ -268,18 +375,19 @@ impl CompressionPipeline {
                 label: spec.label(),
                 ebft_losses,
             },
+            packed,
         ))
     }
 
-    /// Prune a single weight matrix; returns (effective weight, keep mask,
-    /// salient tensor, storage report).
+    /// Prune a single weight matrix; returns (effective weight, keep
+    /// mask, outlier mask, salient tensor, storage report).
     fn prune_one(
         &self,
         name: &str,
         w: &Tensor,
         stats: &ActStats,
         spec: &PipelineSpec,
-    ) -> crate::Result<(Tensor, Tensor, Tensor, LayerReport)> {
+    ) -> crate::Result<(Tensor, Tensor, Tensor, Tensor, LayerReport)> {
         let (rows, cols) = w.dims2();
         let p = &spec.prune;
 
@@ -327,7 +435,7 @@ impl CompressionPipeline {
             outlier_csr_bytes,
             dense_bytes: rows * cols * 2,
         };
-        Ok((w_eff, result.keep, salient, report))
+        Ok((w_eff, result.keep, result.omask, salient, report))
     }
 
     /// The L1-kernel route: score → outlier mask → keep mask → finalize,
@@ -396,6 +504,27 @@ impl CompressionPipeline {
         }
         h
     }
+}
+
+/// Pack the salient side stream for the artifact stage: the calibrated
+/// outlier mask selects exactly `k_outlier` entries per `m_outlier`
+/// block, and the values come from the *salient tensor* — the very
+/// component the pipeline adds into the effective weight, so
+/// base + outliers reproduces the evaluated model (up to bf16 storage).
+fn pack_outliers(
+    salient: &Tensor,
+    omask: &Tensor,
+    p: &PruneSpec,
+) -> Option<StructuredOutliers> {
+    if p.k_outlier == 0 {
+        return None;
+    }
+    Some(StructuredOutliers::from_dense_mask(
+        salient,
+        omask,
+        p.k_outlier,
+        p.m_outlier,
+    ))
 }
 
 #[cfg(test)]

@@ -1,0 +1,159 @@
+//! Byte-**exact** `.spak` artifact size accounting — the bridge between
+//! the Table-1 / [`crate::quant::nm_quant_bits_per_param`] analysis and
+//! an actual `ls -l` of a packed-model file.
+//!
+//! The roofline checks in [`super::HwModel`] compare *operand traffic*
+//! within ±1% (the pattern stream's trailing-word padding is tolerated).
+//! Artifact files are different: their size is a deterministic function
+//! of the model config and pack settings, so the cross-check here is
+//! **equality**, not tolerance — each function reproduces the packers'
+//! own layout arithmetic (kept counts, the `u32` code-word rule of
+//! [`crate::quant::GroupQuant`], the `u64` pattern-word growth rule
+//! shared through `sparse::bits::packed_words`) and must match the
+//! written streams to the byte. `cargo bench --bench f4_coldstart`
+//! gates the identity in CI; `tests/store_roundtrip.rs` property-checks
+//! it across shapes.
+
+use crate::model::ModelConfig;
+use crate::quant::QuantSpec;
+use crate::sparse::bits::packed_words;
+use crate::sparse::{PackedQnm, PatternInfo};
+
+/// Exact serialized bytes of one [`crate::sparse::PackedNm`] base:
+/// bf16 kept values + full `u64` pattern words.
+pub fn nm_stream_bytes(rows: usize, cols: usize, n: usize, m: usize) -> usize {
+    let blocks = rows * cols / m;
+    let bits = PatternInfo::new(n, m).codebook_bits();
+    blocks * n * 2 + packed_words(blocks, bits) * 8
+}
+
+/// Exact serialized bytes of one [`crate::sparse::PackedQnm`] base:
+/// packed int codes + bf16 group scales + full `u64` pattern words.
+/// `spec` is fitted to the row's kept count exactly as pack time does
+/// ([`PackedQnm::fit_spec`]).
+pub fn qnm_stream_bytes(
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    spec: QuantSpec,
+) -> usize {
+    let fitted = PackedQnm::fit_spec(spec, n, m, cols);
+    let kpr = PackedQnm::kept_per_row(n, m, cols);
+    let codes = (rows * kpr * fitted.bits as usize + 31) / 32 * 4;
+    let scales = rows * (kpr / fitted.group) * 2;
+    let blocks = rows * cols / m;
+    let bits = PatternInfo::new(n, m).codebook_bits();
+    codes + scales + packed_words(blocks, bits) * 8
+}
+
+/// Exact serialized bytes of one `k`:256 structured-outlier side stream
+/// (bf16 value + one-byte index per salient entry).
+pub fn outlier_stream_bytes(rows: usize, cols: usize, k_out: usize) -> usize {
+    rows * cols / crate::sparse::outliers::OUTLIER_M * k_out * 3
+}
+
+/// Exact packed **base**-stream bytes of every prunable linear of
+/// `cfg`, under pattern `n:m` (bf16 values when `quant` is `None`, int
+/// codes + scales otherwise). This is the number an artifact's
+/// [`crate::store::ArtifactInfo::linear_stream_bytes`] must equal.
+pub fn model_linear_stream_bytes(
+    cfg: &ModelConfig,
+    n: usize,
+    m: usize,
+    quant: Option<QuantSpec>,
+) -> usize {
+    cfg.decode_linear_shapes()
+        .iter()
+        .map(|&(rows, cols)| match quant {
+            None => nm_stream_bytes(rows, cols, n, m),
+            Some(spec) => qnm_stream_bytes(rows, cols, n, m, spec),
+        })
+        .sum()
+}
+
+/// Exact outlier side-stream bytes across the same linears.
+pub fn model_outlier_stream_bytes(cfg: &ModelConfig, k_out: usize) -> usize {
+    cfg.decode_linear_shapes()
+        .iter()
+        .map(|&(rows, cols)| outlier_stream_bytes(rows, cols, k_out))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pruning::mask_topn_per_block;
+    use crate::sparse::{PackedNm, StructuredOutliers};
+    use crate::tensor::Tensor;
+    use crate::util::Rng;
+
+    #[test]
+    fn nm_model_is_byte_exact_against_the_packer() {
+        let mut rng = Rng::new(71);
+        for (rows, cols, n, m) in
+            [(16usize, 256usize, 8usize, 16usize), (48, 512, 2, 4), (7, 64, 4, 8)]
+        {
+            let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+            let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+            let p = PackedNm::from_dense_mask(&w, &mask, n, m);
+            let measured = p.values_raw().len() * 2 + p.meta_words().len() * 8;
+            assert_eq!(measured, nm_stream_bytes(rows, cols, n, m), "{rows}x{cols} {n}:{m}");
+        }
+    }
+
+    #[test]
+    fn qnm_model_is_byte_exact_against_the_packer() {
+        let mut rng = Rng::new(72);
+        let spec = QuantSpec::int4_g128();
+        for (rows, cols, n, m) in [(16usize, 256usize, 8usize, 16usize), (8, 512, 4, 8)] {
+            let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+            let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+            let fitted = PackedQnm::fit_spec(spec, n, m, cols);
+            let p = PackedQnm::from_dense_mask(&w, &mask, n, m, fitted);
+            let measured =
+                p.codes_raw().len() * 4 + p.scales_raw().len() * 2 + p.meta_words().len() * 8;
+            assert_eq!(measured, qnm_stream_bytes(rows, cols, n, m, spec), "{n}:{m}");
+        }
+    }
+
+    #[test]
+    fn outlier_model_is_byte_exact_against_the_packer() {
+        let mut rng = Rng::new(73);
+        let w = Tensor::randn(vec![16, 512], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 16, 256);
+        let so = StructuredOutliers::from_dense_mask(&w, &mask, 16, 256);
+        let measured = so.values_raw().len() * 2 + so.indices_raw().len();
+        assert_eq!(measured, outlier_stream_bytes(16, 512, 16));
+    }
+
+    #[test]
+    fn stream_bytes_track_table1_bits_per_param() {
+        // the exact byte model is the analytic bits/param plus only the
+        // trailing-word padding sliver (< 0.5% on paper-scale layers)
+        let (rows, cols) = (1024usize, 1024usize);
+        let exact = nm_stream_bytes(rows, cols, 8, 16);
+        let analytic = crate::quant::nm_bits_per_param(8, 16) * (rows * cols) as f64 / 8.0;
+        let ratio = exact as f64 / analytic;
+        assert!(ratio >= 1.0 && ratio < 1.005, "{ratio}");
+        let exact_q = qnm_stream_bytes(rows, cols, 8, 16, QuantSpec::int4_g128());
+        let analytic_q =
+            crate::quant::nm_quant_bits_per_param(8, 16, 4, 128) * (rows * cols) as f64 / 8.0;
+        let ratio_q = exact_q as f64 / analytic_q;
+        assert!(ratio_q >= 1.0 && ratio_q < 1.005, "{ratio_q}");
+    }
+
+    #[test]
+    fn model_sums_cover_every_decode_linear() {
+        let cfg = ModelConfig::preset("tiny").unwrap();
+        let total = model_linear_stream_bytes(&cfg, 8, 16, None);
+        let by_hand: usize = cfg
+            .decode_linear_shapes()
+            .iter()
+            .map(|&(r, c)| nm_stream_bytes(r, c, 8, 16))
+            .sum();
+        assert_eq!(total, by_hand);
+        assert!(model_outlier_stream_bytes(&cfg, 16) > 0);
+        assert_eq!(model_outlier_stream_bytes(&cfg, 0), 0);
+    }
+}

@@ -23,8 +23,15 @@
 //! a `BENCH_*.json` trajectory file that CI's `bench-gate` job
 //! compares against `bench/baseline.json` — see `docs/BENCHMARKS.md`.
 
+//! The artifact side goes further: [`artifact`] reproduces the packers'
+//! layout arithmetic **byte-exactly**, so a `.spak` file's measured
+//! stream bytes are gated against the model with equality, not
+//! tolerance (`cargo bench --bench f4_coldstart`).
+
 mod speedup;
 mod traffic;
+
+pub mod artifact;
 
 pub use speedup::{speedup_curve, SpeedupPoint};
 pub use traffic::{GemmShape, HwModel, ModelCheck, TrafficReport};

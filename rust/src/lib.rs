@@ -27,10 +27,11 @@
 //!
 //! Start with [`coordinator::CompressionPipeline`] for the paper's §4
 //! pipeline, [`sparse`] for the storage formats and spmm kernels,
-//! [`model::SparseLm::prefill`] / [`model::SparseLm::decode_step`] for
-//! KV-cached generation, and `examples/` for runnable entry points
-//! (`packed_serve` scores, `packed_generate` decodes — both offline
-//! end-to-end demos).
+//! [`store`] for the `.spak` packed-model artifact container (mmap
+//! zero-copy cold start), [`model::SparseLm::prefill`] /
+//! [`model::SparseLm::decode_step`] for KV-cached generation, and
+//! `examples/` for runnable entry points (`packed_serve` scores,
+//! `packed_generate` decodes — both offline end-to-end demos).
 
 pub mod bench;
 pub mod cli;
@@ -44,6 +45,7 @@ pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod sparse;
+pub mod store;
 pub mod tensor;
 pub mod util;
 
@@ -69,6 +71,36 @@ pub enum Error {
         value: String,
         want: &'static str,
     },
+    /// A binary container whose magic bytes name a different format —
+    /// shared by the checkpoint loader (`SPLM`) and the `.spak` artifact
+    /// reader (`SPAK`), so "you passed the wrong file" is one
+    /// downcastable condition everywhere.
+    BadMagic {
+        path: String,
+        want: [u8; 4],
+        got: [u8; 4],
+    },
+    /// A container written by an incompatible format version.
+    BadVersion { path: String, want: u32, got: u32 },
+    /// The container's payload checksum does not match its trailer —
+    /// truncated tail, bit rot, or a partially written file.
+    ChecksumMismatch { path: String, want: u64, got: u64 },
+    /// The file ends before a section its header promises.
+    Truncated { path: String, need: u64, have: u64 },
+}
+
+impl Error {
+    fn fmt_magic(m: &[u8; 4]) -> String {
+        m.iter()
+            .map(|&b| {
+                if b.is_ascii_graphic() {
+                    (b as char).to_string()
+                } else {
+                    format!("\\x{b:02x}")
+                }
+            })
+            .collect()
+    }
 }
 
 impl std::fmt::Display for Error {
@@ -82,6 +114,28 @@ impl std::fmt::Display for Error {
             }
             Error::BadFlag { key, value, want } => {
                 write!(f, "--{key} expects {want}, got {value:?} (usage: --{key} <{want}>)")
+            }
+            Error::BadMagic { path, want, got } => {
+                write!(
+                    f,
+                    "{path}: bad magic {:?} (want {:?} — not a {} file?)",
+                    Error::fmt_magic(got),
+                    Error::fmt_magic(want),
+                    if want == b"SPAK" { "packed-model artifact" } else { "checkpoint" }
+                )
+            }
+            Error::BadVersion { path, want, got } => {
+                write!(f, "{path}: unsupported container version {got} (this build reads {want})")
+            }
+            Error::ChecksumMismatch { path, want, got } => {
+                write!(
+                    f,
+                    "{path}: payload checksum mismatch (stored {want:#018x}, computed \
+                     {got:#018x}) — corrupt or partially written file"
+                )
+            }
+            Error::Truncated { path, need, have } => {
+                write!(f, "{path}: truncated — header promises {need} bytes, file has {have}")
             }
         }
     }

@@ -18,11 +18,14 @@ use super::config::ModelConfig;
 use super::params::ParamSet;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::{fnv1a, FNV_OFFSET};
 
 const MAGIC: &[u8; 4] = b"SPLM";
 const VERSION: u32 = 1;
 
-fn config_json(cfg: &ModelConfig) -> Json {
+/// Serialize a [`ModelConfig`] as the flat JSON object both binary
+/// containers (checkpoint and `.spak` artifact) embed in their headers.
+pub(crate) fn config_json(cfg: &ModelConfig) -> Json {
     Json::obj(vec![
         ("name", Json::str(cfg.name.clone())),
         ("dim", Json::num(cfg.dim as f64)),
@@ -41,18 +44,12 @@ fn config_json(cfg: &ModelConfig) -> Json {
     ])
 }
 
-fn config_from_json(j: &Json) -> ModelConfig {
+/// Inverse of [`config_json`] (shared with the `.spak` reader, whose
+/// input is untrusted — hence the typed error instead of the
+/// trusted-manifest panic of [`ModelConfig::from_manifest`]).
+pub(crate) fn config_from_json(j: &Json) -> crate::Result<ModelConfig> {
     let wrapped = Json::obj(vec![("config", j.clone())]);
-    ModelConfig::from_manifest(&wrapped)
-}
-
-/// FNV-1a over bytes — cheap integrity check for the weight payload.
-fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
+    ModelConfig::try_from_manifest(&wrapped)
 }
 
 pub fn save_checkpoint(path: &Path, params: &ParamSet) -> crate::Result<()> {
@@ -68,7 +65,7 @@ pub fn save_checkpoint(path: &Path, params: &ParamSet) -> crate::Result<()> {
     w.write_all(&(header.len() as u32).to_le_bytes())?;
     w.write_all(header.as_bytes())?;
 
-    let mut checksum = 0xcbf29ce484222325u64;
+    let mut checksum = FNV_OFFSET;
     for t in &params.tensors {
         w.write_all(&(t.rank() as u32).to_le_bytes())?;
         for &d in t.shape() {
@@ -92,22 +89,36 @@ pub fn load_checkpoint(path: &Path) -> crate::Result<ParamSet> {
 
     let mut magic = [0u8; 4];
     r.read_exact(&mut magic)?;
-    anyhow::ensure!(&magic == MAGIC, "bad checkpoint magic {magic:?}");
+    if &magic != MAGIC {
+        return Err(crate::Error::BadMagic {
+            path: path.display().to_string(),
+            want: *MAGIC,
+            got: magic,
+        }
+        .into());
+    }
     let mut u32b = [0u8; 4];
     r.read_exact(&mut u32b)?;
     let version = u32::from_le_bytes(u32b);
-    anyhow::ensure!(version == VERSION, "unsupported checkpoint version {version}");
+    if version != VERSION {
+        return Err(crate::Error::BadVersion {
+            path: path.display().to_string(),
+            want: VERSION,
+            got: version,
+        }
+        .into());
+    }
     r.read_exact(&mut u32b)?;
     let hlen = u32::from_le_bytes(u32b) as usize;
     let mut hbytes = vec![0u8; hlen];
     r.read_exact(&mut hbytes)?;
     let header = Json::parse(std::str::from_utf8(&hbytes)?)
         .map_err(|e| anyhow::anyhow!("checkpoint header: {e}"))?;
-    let config = config_from_json(&header);
+    let config = config_from_json(&header)?;
 
     let names = config.param_names();
     let mut tensors = Vec::with_capacity(names.len());
-    let mut checksum = 0xcbf29ce484222325u64;
+    let mut checksum = FNV_OFFSET;
     let mut u64b = [0u8; 8];
     for name in &names {
         r.read_exact(&mut u32b)?;
@@ -134,10 +145,14 @@ pub fn load_checkpoint(path: &Path) -> crate::Result<ParamSet> {
     }
     r.read_exact(&mut u64b)?;
     let want = u64::from_le_bytes(u64b);
-    anyhow::ensure!(
-        want == checksum,
-        "checkpoint payload checksum mismatch (corrupt file?)"
-    );
+    if want != checksum {
+        return Err(crate::Error::ChecksumMismatch {
+            path: path.display().to_string(),
+            want,
+            got: checksum,
+        }
+        .into());
+    }
     Ok(ParamSet {
         config,
         names,
@@ -204,5 +219,55 @@ mod tests {
     #[test]
     fn missing_file_is_error() {
         assert!(load_checkpoint(Path::new("/nonexistent/x.bin")).is_err());
+    }
+
+    #[test]
+    fn magic_version_checksum_errors_are_typed() {
+        let mut rng = Rng::new(11);
+        let ps = ParamSet::init(&cfg(), &mut rng);
+        let dir = std::env::temp_dir().join("sparselm-test-ckpt");
+        let path = dir.join("typed.bin");
+        save_checkpoint(&path, &ps).unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // wrong magic
+        let mut bytes = good.clone();
+        bytes[..4].copy_from_slice(b"SPAK");
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_checkpoint(&path).unwrap_err();
+        match err.downcast_ref::<crate::Error>() {
+            Some(crate::Error::BadMagic { want, got, .. }) => {
+                assert_eq!(want, b"SPLM");
+                assert_eq!(got, b"SPAK");
+            }
+            other => panic!("want BadMagic, got {other:?}"),
+        }
+
+        // future version
+        let mut bytes = good.clone();
+        bytes[4..8].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_checkpoint(&path).unwrap_err();
+        match err.downcast_ref::<crate::Error>() {
+            Some(crate::Error::BadVersion { want, got, .. }) => {
+                assert_eq!((*want, *got), (VERSION, 99));
+            }
+            other => panic!("want BadVersion, got {other:?}"),
+        }
+
+        // flipped payload byte
+        let mut bytes = good.clone();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_checkpoint(&path).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<crate::Error>(),
+                Some(crate::Error::ChecksumMismatch { .. })
+            ),
+            "want ChecksumMismatch, got {err:?}"
+        );
+        std::fs::remove_file(&path).ok();
     }
 }

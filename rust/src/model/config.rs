@@ -23,27 +23,51 @@ pub struct ModelConfig {
 }
 
 impl ModelConfig {
-    /// Parse the `config` object of a model manifest.
+    /// Parse the `config` object of a model manifest. Panics on a
+    /// malformed document — **trusted manifests only** (the artifact
+    /// tree this binary was built against). Untrusted containers
+    /// (checkpoints, `.spak` artifacts) go through
+    /// [`Self::try_from_manifest`].
     pub fn from_manifest(raw: &Json) -> ModelConfig {
-        let c = raw.at("config");
-        let u = |k: &str| c.at(k).as_usize().unwrap();
-        let f = |k: &str| c.at(k).as_f64().unwrap();
-        ModelConfig {
-            name: c.at("name").as_str().unwrap().to_string(),
-            dim: u("dim"),
-            n_layers: u("n_layers"),
-            n_heads: u("n_heads"),
-            n_kv_heads: u("n_kv_heads"),
-            hidden: u("hidden"),
-            vocab: u("vocab"),
-            seq: u("seq"),
-            batch: u("batch"),
-            rope_theta: f("rope_theta"),
-            adam_b1: f("adam_b1"),
-            adam_b2: f("adam_b2"),
-            adam_eps: f("adam_eps"),
-            weight_decay: f("weight_decay"),
-        }
+        Self::try_from_manifest(raw).unwrap_or_else(|e| panic!("model manifest: {e}"))
+    }
+
+    /// [`Self::from_manifest`] with typed errors instead of panics, for
+    /// config JSON read out of files a serving process must survive.
+    pub fn try_from_manifest(raw: &Json) -> crate::Result<ModelConfig> {
+        let c = raw
+            .get("config")
+            .ok_or_else(|| anyhow::anyhow!("missing \"config\" object"))?;
+        let u = |k: &str| {
+            c.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("config.{k} missing or not a number"))
+        };
+        let f = |k: &str| {
+            c.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("config.{k} missing or not a number"))
+        };
+        Ok(ModelConfig {
+            name: c
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("config.name missing or not a string"))?
+                .to_string(),
+            dim: u("dim")?,
+            n_layers: u("n_layers")?,
+            n_heads: u("n_heads")?,
+            n_kv_heads: u("n_kv_heads")?,
+            hidden: u("hidden")?,
+            vocab: u("vocab")?,
+            seq: u("seq")?,
+            batch: u("batch")?,
+            rope_theta: f("rope_theta")?,
+            adam_b1: f("adam_b1")?,
+            adam_b2: f("adam_b2")?,
+            adam_eps: f("adam_eps")?,
+            weight_decay: f("weight_decay")?,
+        })
     }
 
     /// Built-in config family, mirroring `python/compile/configs.py`

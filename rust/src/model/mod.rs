@@ -23,6 +23,7 @@ mod kv;
 mod params;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint};
+pub(crate) use checkpoint::{config_from_json, config_json};
 pub use config::ModelConfig;
 pub use forward::{BlockWeights, SparseLm, RMS_EPS};
 pub use kv::KvCache;

@@ -6,6 +6,7 @@
 //! `w ≈ q * scale`, `q ∈ [-(2^{b-1}-1), 2^{b-1}-1]` (symmetric, no zero
 //! point; -2^{b-1} is unused so the grid is sign-balanced).
 
+use crate::sparse::Storage;
 use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
 
 /// Quantization parameters.
@@ -49,9 +50,10 @@ pub struct GroupQuant {
     pub rows: usize,
     pub cols: usize,
     /// packed signed values, `bits` each, row-major, LSB-first in words
-    codes: Vec<u32>,
+    /// — owned when freshly quantized, mmap-backed from a `.spak`
+    codes: Storage<u32>,
     /// bf16 per-group scales, row-major over (rows, cols/group)
-    scales: Vec<u16>,
+    scales: Storage<u16>,
 }
 
 impl GroupQuant {
@@ -98,9 +100,56 @@ impl GroupQuant {
             spec,
             rows,
             cols,
+            codes: codes.into(),
+            scales: scales.into(),
+        }
+    }
+
+    /// Reassemble from decoder-side streams (the `.spak` mmap reader
+    /// path) — lengths must match [`Self::codes_words_len`] /
+    /// [`Self::scales_len`] exactly, so [`Self::bytes`] accounting
+    /// round-trips.
+    pub fn from_raw_parts(
+        spec: QuantSpec,
+        rows: usize,
+        cols: usize,
+        codes: Storage<u32>,
+        scales: Storage<u16>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(
+            spec.group > 0 && cols % spec.group == 0,
+            "cols {cols} not divisible by group {}",
+            spec.group
+        );
+        anyhow::ensure!(
+            codes.len() == Self::codes_words_len(rows, cols, spec),
+            "GroupQuant codes stream: {} words, want {}",
+            codes.len(),
+            Self::codes_words_len(rows, cols, spec)
+        );
+        anyhow::ensure!(
+            scales.len() == Self::scales_len(rows, cols, spec),
+            "GroupQuant scales stream: {} entries, want {}",
+            scales.len(),
+            Self::scales_len(rows, cols, spec)
+        );
+        Ok(GroupQuant {
+            spec,
+            rows,
+            cols,
             codes,
             scales,
-        }
+        })
+    }
+
+    /// Exact `u32` word count of the packed code stream.
+    pub fn codes_words_len(rows: usize, cols: usize, spec: QuantSpec) -> usize {
+        (rows * cols * spec.bits as usize + 31) / 32
+    }
+
+    /// Exact per-group scale count.
+    pub fn scales_len(rows: usize, cols: usize, spec: QuantSpec) -> usize {
+        rows * (cols / spec.group)
     }
 
     /// Dequantize back to dense f32.
@@ -158,6 +207,12 @@ impl GroupQuant {
     /// `(rows, cols / spec.group)`.
     pub fn scales_raw(&self) -> &[u16] {
         &self.scales
+    }
+
+    /// `true` when both streams read straight from a live mmap (the
+    /// `.spak` zero-copy serving property).
+    pub fn is_mapped(&self) -> bool {
+        self.codes.is_mapped() && self.scales.is_mapped()
     }
 }
 

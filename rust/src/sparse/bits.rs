@@ -24,6 +24,20 @@ pub(crate) fn push_bits(buf: &mut Vec<u64>, pos: &mut usize, v: u64, bits: u32) 
     *pos += bits as usize;
 }
 
+/// Exact `u64` word count [`push_bits`] produces for `blocks` ids of
+/// `bits` each: the growth rule (`buf.len() <= word + 1` → push) always
+/// leaves one spare word after the word the last id starts in. Shared
+/// by the packers, the `.spak` container accounting and the
+/// [`crate::hwsim`] artifact-size model, so on-disk stream lengths
+/// round-trip to byte-identical in-memory layouts.
+pub(crate) fn packed_words(blocks: usize, bits: u32) -> usize {
+    if blocks == 0 || bits == 0 {
+        0
+    } else {
+        (blocks * bits as usize - bits as usize) / 64 + 2
+    }
+}
+
 /// Read `bits` bits at bit offset `pos`.
 #[inline]
 pub(crate) fn read_bits(buf: &[u64], pos: usize, bits: u32) -> u64 {
@@ -65,6 +79,27 @@ mod tests {
         push_bits(&mut buf, &mut pos, 123, 0);
         assert_eq!(pos, 0);
         assert_eq!(read_bits(&buf, 0, 0), 0);
+    }
+
+    #[test]
+    fn packed_words_matches_push_bits_growth() {
+        for bits in [1u32, 3, 7, 13, 14, 30, 63, 64] {
+            for blocks in [1usize, 2, 3, 7, 64, 65, 100] {
+                let mut buf = Vec::new();
+                let mut pos = 0;
+                for i in 0..blocks {
+                    let v = (i as u64 * 0x9E37) & ((1u128 << bits) - 1) as u64;
+                    push_bits(&mut buf, &mut pos, v, bits);
+                }
+                assert_eq!(
+                    buf.len(),
+                    packed_words(blocks, bits),
+                    "blocks={blocks} bits={bits}"
+                );
+            }
+        }
+        assert_eq!(packed_words(0, 14), 0);
+        assert_eq!(packed_words(100, 0), 0);
     }
 
     #[test]

@@ -12,16 +12,19 @@
 //! weights are never expanded on the request path, so the bytes a GEMM
 //! streams are exactly the bytes the format stores (cross-checked against
 //! the [`crate::hwsim`] roofline model by `cargo bench --bench f2_spmm`).
-//! Layout spec: `docs/FORMAT.md`; hot-path walkthrough:
-//! `docs/ARCHITECTURE.md`.
+//! Every format's streams live behind [`Storage`] (owned at pack time,
+//! zero-copy mmap-backed when loaded from a `.spak` artifact by
+//! [`crate::store`]). Layout spec: `docs/FORMAT.md`; hot-path
+//! walkthrough: `docs/ARCHITECTURE.md`.
 
-mod bits;
+pub(crate) mod bits;
 pub mod csr;
 pub mod nm;
 pub mod outliers;
 pub mod patterns;
 pub mod qnm;
 pub mod spmm;
+pub mod storage;
 pub mod vnm;
 
 pub use csr::Csr;
@@ -29,6 +32,7 @@ pub use nm::PackedNm;
 pub use outliers::StructuredOutliers;
 pub use patterns::PatternInfo;
 pub use qnm::PackedQnm;
+pub use storage::Storage;
 pub use spmm::{
     dispatch, spmm, spmm_parallel, spmm_parallel_scoped, spmm_vec, MicroKernel, PackedLinear,
     PackedQuantLinear, GEMM_MIN_ROWS, ROW_TILE, WEIGHT_TILE,

@@ -15,8 +15,9 @@
 //! 8:16 block) is specified in `docs/FORMAT.md`; where the format sits in
 //! the serving hot path is covered by `docs/ARCHITECTURE.md`.
 
-use super::bits::{push_bits, read_bits};
+use super::bits::{packed_words, push_bits, read_bits};
 use super::patterns::{rank_combination, unrank_combination, PatternInfo};
+use super::storage::Storage;
 use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
 
 /// Collect the (ascending, padded) keep-set of block `b` of one mask
@@ -63,10 +64,11 @@ pub struct PackedNm {
     pub pattern: PatternInfo,
     pub rows: usize,
     pub cols: usize,
-    /// kept values, bf16, block-major: `rows * cols / m * n` entries
-    values: Vec<u16>,
+    /// kept values, bf16, block-major: `rows * cols / m * n` entries —
+    /// owned when freshly packed, mmap-backed when loaded from a `.spak`
+    values: Storage<u16>,
     /// bit-packed combinadic pattern ids, `codebook_bits` per block
-    meta: Vec<u64>,
+    meta: Storage<u64>,
 }
 
 impl PackedNm {
@@ -106,9 +108,59 @@ impl PackedNm {
             pattern,
             rows,
             cols,
+            values: values.into(),
+            meta: meta.into(),
+        }
+    }
+
+    /// Reassemble from decoder-side streams — the `.spak` mmap reader
+    /// path ([`crate::store`]). Stream lengths must be exactly what a
+    /// pack of the same `(rows, cols, n, m)` produces
+    /// ([`Self::values_len`] / [`Self::meta_words_len`]), so the
+    /// reconstructed operand is byte-identical (including
+    /// [`Self::bytes`] accounting) to the in-memory original.
+    pub fn from_raw_parts(
+        n: usize,
+        m: usize,
+        rows: usize,
+        cols: usize,
+        values: Storage<u16>,
+        meta: Storage<u64>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(m <= 64, "PackedNm stores u64 combinadic ranks (m <= 64), got m={m}");
+        anyhow::ensure!(n <= m && m > 0 && cols % m == 0, "bad pattern {n}:{m} for cols {cols}");
+        let pattern = PatternInfo::new(n, m);
+        anyhow::ensure!(
+            values.len() == Self::values_len(rows, cols, n, m),
+            "PackedNm values stream: {} entries, want {}",
+            values.len(),
+            Self::values_len(rows, cols, n, m)
+        );
+        anyhow::ensure!(
+            meta.len() == Self::meta_words_len(rows, cols, n, m),
+            "PackedNm meta stream: {} words, want {}",
+            meta.len(),
+            Self::meta_words_len(rows, cols, n, m)
+        );
+        Ok(PackedNm {
+            pattern,
+            rows,
+            cols,
             values,
             meta,
-        }
+        })
+    }
+
+    /// Exact kept-value stream length of a `(rows, cols)` matrix.
+    pub fn values_len(rows: usize, cols: usize, n: usize, m: usize) -> usize {
+        rows * cols / m * n
+    }
+
+    /// Exact `u64` word count of the pattern stream (the shared
+    /// `sparse::bits` word-growth rule — what `from_dense_mask`
+    /// produces).
+    pub fn meta_words_len(rows: usize, cols: usize, n: usize, m: usize) -> usize {
+        packed_words(rows * cols / m, PatternInfo::new(n, m).codebook_bits())
     }
 
     /// Expand back to a dense tensor (bf16-rounded values).
@@ -193,6 +245,12 @@ impl PackedNm {
     pub fn meta_words(&self) -> &[u64] {
         &self.meta
     }
+
+    /// `true` when both streams read straight from a live mmap (the
+    /// `.spak` zero-copy serving property; see [`Storage::is_mapped`]).
+    pub fn is_mapped(&self) -> bool {
+        self.values.is_mapped() && self.meta.is_mapped()
+    }
 }
 
 #[cfg(test)]
@@ -229,6 +287,38 @@ mod tests {
         {
             pack_roundtrip(n, m, 32, 256, i as u64 + 1);
         }
+    }
+
+    #[test]
+    fn raw_parts_reassembly_is_identical() {
+        let mut rng = Rng::new(31);
+        let w = Tensor::randn(vec![16, 256], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let p = PackedNm::from_dense_mask(&w, &mask, 8, 16);
+        // the declared stream lengths are what the packer produced
+        assert_eq!(p.values_raw().len(), PackedNm::values_len(16, 256, 8, 16));
+        assert_eq!(p.meta_words().len(), PackedNm::meta_words_len(16, 256, 8, 16));
+        let back = PackedNm::from_raw_parts(
+            8,
+            16,
+            16,
+            256,
+            p.values_raw().to_vec().into(),
+            p.meta_words().to_vec().into(),
+        )
+        .unwrap();
+        assert_eq!(back.to_dense(), p.to_dense());
+        assert_eq!(back.bytes(), p.bytes());
+        // wrong lengths are typed errors, not panics
+        assert!(PackedNm::from_raw_parts(
+            8,
+            16,
+            16,
+            256,
+            vec![0u16; 3].into(),
+            p.meta_words().to_vec().into()
+        )
+        .is_err());
     }
 
     #[test]

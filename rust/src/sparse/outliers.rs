@@ -7,6 +7,7 @@
 //! irregular row lengths ([`crate::sparse::Csr`], contrasted in Table 7
 //! and `hwsim`).
 
+use super::storage::Storage;
 use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
 
 pub const OUTLIER_M: usize = 256;
@@ -18,10 +19,11 @@ pub struct StructuredOutliers {
     pub m: usize,
     pub rows: usize,
     pub cols: usize,
-    /// bf16 values, block-major, `k` per block
-    values: Vec<u16>,
+    /// bf16 values, block-major, `k` per block — owned when freshly
+    /// packed, mmap-backed when loaded from a `.spak`
+    values: Storage<u16>,
     /// in-block indices, `k` per block, strictly ascending
-    indices: Vec<u8>,
+    indices: Storage<u8>,
 }
 
 impl StructuredOutliers {
@@ -54,9 +56,38 @@ impl StructuredOutliers {
             m,
             rows,
             cols,
+            values: values.into(),
+            indices: indices.into(),
+        }
+    }
+
+    /// Reassemble from decoder-side streams (the `.spak` mmap reader
+    /// path) — both streams hold exactly `rows * cols / m * k` entries.
+    pub fn from_raw_parts(
+        k: usize,
+        m: usize,
+        rows: usize,
+        cols: usize,
+        values: Storage<u16>,
+        indices: Storage<u8>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(m > 0 && m <= 256, "in-block index is one byte (m <= 256), got {m}");
+        anyhow::ensure!(cols % m == 0, "cols {cols} not divisible by m {m}");
+        let want = rows * cols / m * k;
+        anyhow::ensure!(
+            values.len() == want && indices.len() == want,
+            "outlier streams: {} values / {} indices, want {want} each",
+            values.len(),
+            indices.len()
+        );
+        Ok(StructuredOutliers {
+            k,
+            m,
+            rows,
+            cols,
             values,
             indices,
-        }
+        })
     }
 
     /// Zero-outlier placeholder (the "0%" rows of Table 5).
@@ -66,8 +97,8 @@ impl StructuredOutliers {
             m: OUTLIER_M,
             rows,
             cols,
-            values: Vec::new(),
-            indices: Vec::new(),
+            values: Vec::new().into(),
+            indices: Vec::new().into(),
         }
     }
 
@@ -136,6 +167,12 @@ impl StructuredOutliers {
     /// block, same block order as [`Self::values_raw`]).
     pub fn indices_raw(&self) -> &[u8] {
         &self.indices
+    }
+
+    /// `true` when both streams read straight from a live mmap (the
+    /// `.spak` zero-copy serving property).
+    pub fn is_mapped(&self) -> bool {
+        self.values.is_mapped() && self.indices.is_mapped()
     }
 }
 

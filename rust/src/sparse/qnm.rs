@@ -24,9 +24,10 @@
 //! kept values of one row** — groups never straddle rows, so row-ranged
 //! kernels decode without neighbouring-row state.
 
-use super::bits::{push_bits, read_bits};
+use super::bits::{packed_words, push_bits, read_bits};
 use super::nm::keep_indices_for_block;
 use super::patterns::{rank_combination, unrank_combination, PatternInfo};
+use super::storage::Storage;
 use crate::quant::{GroupQuant, QuantSpec};
 use crate::tensor::{bf16_to_f32, Tensor};
 
@@ -51,8 +52,9 @@ pub struct PackedQnm {
     /// kept values as a group-quantized `(rows, cols/m*n)` matrix —
     /// codes + scales exactly as [`GroupQuant`] lays them out
     quant: GroupQuant,
-    /// bit-packed combinadic pattern ids, `codebook_bits` per block
-    meta: Vec<u64>,
+    /// bit-packed combinadic pattern ids, `codebook_bits` per block —
+    /// owned when freshly packed, mmap-backed when loaded from a `.spak`
+    meta: Storage<u64>,
 }
 
 impl PackedQnm {
@@ -122,8 +124,55 @@ impl PackedQnm {
             rows,
             cols,
             quant,
-            meta,
+            meta: meta.into(),
         }
+    }
+
+    /// Reassemble from decoder-side streams (the `.spak` mmap reader
+    /// path): the group-quantized kept-value matrix (codes + scales,
+    /// validated by [`GroupQuant::from_raw_parts`] over the
+    /// `(rows, kept_per_row)` shape) plus the pattern stream
+    /// ([`Self::meta_words_len`]). `spec` must already be row-fitted
+    /// ([`Self::fit_spec`]) — exactly what pack time stored.
+    pub fn from_raw_parts(
+        n: usize,
+        m: usize,
+        rows: usize,
+        cols: usize,
+        spec: QuantSpec,
+        codes: Storage<u32>,
+        scales: Storage<u16>,
+        meta: Storage<u64>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(m <= 64, "PackedQnm stores u64 combinadic ranks (m <= 64), got m={m}");
+        anyhow::ensure!(n <= m && m > 0 && cols % m == 0, "bad pattern {n}:{m} for cols {cols}");
+        let pattern = PatternInfo::new(n, m);
+        let kpr = Self::kept_per_row(n, m, cols);
+        anyhow::ensure!(
+            spec.group > 0 && kpr % spec.group == 0,
+            "quant group {} does not divide {kpr} kept values/row (spec not fitted?)",
+            spec.group
+        );
+        let quant = GroupQuant::from_raw_parts(spec, rows, kpr, codes, scales)?;
+        anyhow::ensure!(
+            meta.len() == Self::meta_words_len(rows, cols, n, m),
+            "PackedQnm meta stream: {} words, want {}",
+            meta.len(),
+            Self::meta_words_len(rows, cols, n, m)
+        );
+        Ok(PackedQnm {
+            pattern,
+            rows,
+            cols,
+            quant,
+            meta,
+        })
+    }
+
+    /// Exact `u64` word count of the pattern stream (same rule as
+    /// [`super::PackedNm::meta_words_len`]).
+    pub fn meta_words_len(rows: usize, cols: usize, n: usize, m: usize) -> usize {
+        packed_words(rows * cols / m, PatternInfo::new(n, m).codebook_bits())
     }
 
     /// Widen the `n` quantized values of block `(r, bblk)` into f32 —
@@ -262,6 +311,24 @@ impl PackedQnm {
     /// block order).
     pub fn meta_words(&self) -> &[u64] {
         &self.meta
+    }
+
+    /// Decoder-side view of the packed int codes
+    /// ([`GroupQuant::codes_raw`] of the kept-value matrix).
+    pub fn codes_raw(&self) -> &[u32] {
+        self.quant.codes_raw()
+    }
+
+    /// Decoder-side view of the per-group bf16 scales
+    /// ([`GroupQuant::scales_raw`] of the kept-value matrix).
+    pub fn scales_raw(&self) -> &[u16] {
+        self.quant.scales_raw()
+    }
+
+    /// `true` when every stream (codes, scales, pattern meta) reads
+    /// straight from a live mmap (the `.spak` zero-copy property).
+    pub fn is_mapped(&self) -> bool {
+        self.quant.is_mapped() && self.meta.is_mapped()
     }
 }
 

@@ -1,0 +1,188 @@
+//! Borrowed-or-owned backing storage for the packed weight streams.
+//!
+//! Every packed format used to own its streams as plain `Vec`s, which
+//! forced the `.spak` cold-start path to copy each weight stream onto
+//! the heap before a kernel could touch it. [`Storage<T>`] is the
+//! load-bearing abstraction that removes that copy: a stream is either
+//! `Owned` (the pack-time path — `push_bits` and friends still build
+//! `Vec`s) or `Mapped` (a typed window into an [`MappedFile`], i.e. the
+//! page cache). `Deref<Target = [T]>` makes the two indistinguishable to
+//! the spmm kernels, so `spmm`/`spmm_vec`/the tiled micro-kernels stream
+//! weights directly out of a memory-mapped artifact — zero per-linear
+//! heap copies, and multiple server processes share one physical copy.
+//!
+//! The mapped view reinterprets raw little-endian file bytes as `[T]`
+//! (the `.spak` format is declared little-endian, like the checkpoint
+//! format before it); [`Storage::mapped`] checks alignment and bounds
+//! once at construction so the hot path carries no checks.
+
+use std::marker::PhantomData;
+use std::ops::Deref;
+use std::sync::Arc;
+
+use crate::util::mmap::MappedFile;
+
+/// Plain-old-data element types a mapped stream may be viewed as. The
+/// trait is sealed to the fixed set of stream dtypes the packed formats
+/// use, all of which tolerate any bit pattern.
+pub trait Pod: Copy + Send + Sync + 'static {}
+impl Pod for u8 {}
+impl Pod for u16 {}
+impl Pod for u32 {}
+impl Pod for u64 {}
+impl Pod for f32 {}
+
+/// A typed window into a shared [`MappedFile`].
+#[derive(Clone)]
+pub struct MappedSlice<T: Pod> {
+    map: Arc<MappedFile>,
+    byte_off: usize,
+    len: usize,
+    _elem: PhantomData<T>,
+}
+
+/// A packed weight stream: owned by the packer, or a zero-copy view of
+/// a memory-mapped artifact. Dereferences to `[T]` either way.
+#[derive(Clone)]
+pub enum Storage<T: Pod> {
+    Owned(Vec<T>),
+    Mapped(MappedSlice<T>),
+}
+
+impl<T: Pod> Storage<T> {
+    /// View `len` elements of `map` starting at `byte_off` — zero-copy.
+    /// Fails (typed, recoverable) on a misaligned offset or a window
+    /// that leaves the file, both of which mean a corrupt or
+    /// wrongly-indexed artifact rather than a programming error.
+    pub fn mapped(map: Arc<MappedFile>, byte_off: usize, len: usize) -> crate::Result<Storage<T>> {
+        let elem = std::mem::size_of::<T>();
+        // the map base is page-aligned (mmap) or 8-byte aligned (owned
+        // fallback), so checking the resolved address covers both
+        anyhow::ensure!(
+            (map.bytes().as_ptr() as usize + byte_off) % std::mem::align_of::<T>() == 0,
+            "mapped stream offset {byte_off} misaligned for {}-byte elements",
+            elem
+        );
+        let end = byte_off
+            .checked_add(len.checked_mul(elem).ok_or_else(|| {
+                anyhow::anyhow!("mapped stream length {len} overflows")
+            })?)
+            .ok_or_else(|| anyhow::anyhow!("mapped stream offset {byte_off} overflows"))?;
+        anyhow::ensure!(
+            end <= map.len(),
+            "mapped stream [{byte_off}, {end}) exceeds file of {} bytes",
+            map.len()
+        );
+        Ok(Storage::Mapped(MappedSlice {
+            map,
+            byte_off,
+            len,
+            _elem: PhantomData,
+        }))
+    }
+
+    /// `true` when this stream reads straight from a live mmap (the
+    /// zero-copy serving property the store tests assert).
+    pub fn is_mapped(&self) -> bool {
+        match self {
+            Storage::Owned(_) => false,
+            Storage::Mapped(m) => m.map.is_mapped(),
+        }
+    }
+}
+
+impl<T: Pod> Deref for Storage<T> {
+    type Target = [T];
+
+    #[inline]
+    fn deref(&self) -> &[T] {
+        match self {
+            Storage::Owned(v) => v,
+            Storage::Mapped(m) => {
+                // SAFETY: bounds and alignment were validated in
+                // `Storage::mapped`; the map lives as long as `self`
+                // (Arc), is immutable, and T tolerates any bit pattern.
+                unsafe {
+                    std::slice::from_raw_parts(
+                        m.map.bytes().as_ptr().add(m.byte_off) as *const T,
+                        m.len,
+                    )
+                }
+            }
+        }
+    }
+}
+
+impl<T: Pod> From<Vec<T>> for Storage<T> {
+    fn from(v: Vec<T>) -> Storage<T> {
+        Storage::Owned(v)
+    }
+}
+
+impl<T: Pod> std::fmt::Debug for Storage<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Storage::Owned(v) => write!(f, "Storage::Owned(len={})", v.len()),
+            Storage::Mapped(m) => {
+                write!(f, "Storage::Mapped(off={}, len={})", m.byte_off, m.len)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("sparselm-storage-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(name);
+        std::fs::write(&path, bytes).unwrap();
+        path
+    }
+
+    #[test]
+    fn owned_derefs_to_slice() {
+        let s: Storage<u16> = vec![1u16, 2, 3].into();
+        assert_eq!(&s[..], &[1, 2, 3]);
+        assert!(!s.is_mapped());
+    }
+
+    #[test]
+    fn mapped_view_reads_little_endian_words() {
+        let mut bytes = Vec::new();
+        for w in [0x1122u16, 0x3344, 0xAABB] {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        bytes.extend_from_slice(&0xDEADBEEFu32.to_le_bytes());
+        let path = fixture("words.bin", &bytes);
+        let map = MappedFile::open(&path).unwrap();
+        let u16s: Storage<u16> = Storage::mapped(Arc::clone(&map), 0, 3).unwrap();
+        assert_eq!(&u16s[..], &[0x1122, 0x3344, 0xAABB]);
+        // cloning a mapped stream is an Arc bump pointing at the same bytes
+        let clone = u16s.clone();
+        assert_eq!(&clone[..], &u16s[..]);
+        // the zero-copy property: the slice points inside the mapping
+        #[cfg(unix)]
+        {
+            assert!(u16s.is_mapped());
+            let base = map.bytes().as_ptr() as usize;
+            let p = u16s.as_ptr() as usize;
+            assert!(p >= base && p < base + map.len());
+        }
+        let u32s: Storage<u32> = Storage::mapped(Arc::clone(&map), 8, 1).unwrap();
+        assert_eq!(u32s[0], 0xDEADBEEF);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn misaligned_or_out_of_bounds_rejected() {
+        let path = fixture("bounds.bin", &[0u8; 32]);
+        let map = MappedFile::open(&path).unwrap();
+        assert!(Storage::<u64>::mapped(Arc::clone(&map), 4, 1).is_err(), "misaligned");
+        assert!(Storage::<u64>::mapped(Arc::clone(&map), 0, 5).is_err(), "past end");
+        assert!(Storage::<u8>::mapped(Arc::clone(&map), 0, 32).is_ok());
+        std::fs::remove_file(&path).ok();
+    }
+}

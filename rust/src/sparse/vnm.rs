@@ -13,8 +13,9 @@
 //! * flexibility: one pattern per V rows — strictly fewer masks than
 //!   per-row N:M, so reconstruction error is never lower at equal N:M.
 
-use super::bits::{push_bits, read_bits};
+use super::bits::{packed_words, push_bits, read_bits};
 use super::patterns::{rank_combination, unrank_combination, PatternInfo};
+use super::storage::Storage;
 use crate::tensor::{bf16_to_f32, f32_to_bf16, Tensor};
 
 /// A rank-2 matrix stored V:N:M packed: for every `(V, M)` tile one
@@ -25,10 +26,11 @@ pub struct PackedVnm {
     pub pattern: PatternInfo,
     pub rows: usize,
     pub cols: usize,
-    /// kept values bf16, tile-major then row-major inside the tile
-    values: Vec<u16>,
+    /// kept values bf16, tile-major then row-major inside the tile —
+    /// owned when freshly packed, mmap-backed when loaded from a `.spak`
+    values: Storage<u16>,
     /// one combinadic rank per (V, M) tile, bit-packed
-    meta: Vec<u64>,
+    meta: Storage<u64>,
     meta_bits_used: usize,
 }
 
@@ -113,10 +115,60 @@ impl PackedVnm {
             pattern,
             rows,
             cols,
-            values,
-            meta,
+            values: values.into(),
+            meta: meta.into(),
             meta_bits_used: pos,
         }
+    }
+
+    /// Reassemble from decoder-side streams (the `.spak` mmap reader
+    /// path) — lengths must match [`Self::values_len`] /
+    /// [`Self::meta_words_len`] exactly.
+    pub fn from_raw_parts(
+        v: usize,
+        n: usize,
+        m: usize,
+        rows: usize,
+        cols: usize,
+        values: Storage<u16>,
+        meta: Storage<u64>,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(m <= 64, "combinadic ranks stored in u64 (m <= 64), got m={m}");
+        anyhow::ensure!(v > 0 && rows % v == 0, "rows {rows} not divisible by v {v}");
+        anyhow::ensure!(n <= m && m > 0 && cols % m == 0, "bad pattern {n}:{m} for cols {cols}");
+        let pattern = PatternInfo::new(n, m);
+        anyhow::ensure!(
+            values.len() == Self::values_len(v, rows, cols, n, m),
+            "PackedVnm values stream: {} entries, want {}",
+            values.len(),
+            Self::values_len(v, rows, cols, n, m)
+        );
+        anyhow::ensure!(
+            meta.len() == Self::meta_words_len(v, rows, cols, n, m),
+            "PackedVnm meta stream: {} words, want {}",
+            meta.len(),
+            Self::meta_words_len(v, rows, cols, n, m)
+        );
+        let tiles = (rows / v) * (cols / m);
+        Ok(PackedVnm {
+            v,
+            pattern,
+            rows,
+            cols,
+            values,
+            meta,
+            meta_bits_used: tiles * pattern.codebook_bits() as usize,
+        })
+    }
+
+    /// Exact kept-value stream length (`v * n` per `(V, M)` tile).
+    pub fn values_len(v: usize, rows: usize, cols: usize, n: usize, m: usize) -> usize {
+        (rows / v) * (cols / m) * v * n
+    }
+
+    /// Exact `u64` word count of the tile-pattern stream.
+    pub fn meta_words_len(v: usize, rows: usize, cols: usize, n: usize, m: usize) -> usize {
+        packed_words((rows / v) * (cols / m), PatternInfo::new(n, m).codebook_bits())
     }
 
     /// Expand back to dense (bf16-rounded values).
@@ -178,6 +230,12 @@ impl PackedVnm {
     /// rank per tile, in tile order.
     pub fn meta_words(&self) -> &[u64] {
         &self.meta
+    }
+
+    /// `true` when both streams read straight from a live mmap (the
+    /// `.spak` zero-copy serving property).
+    pub fn is_mapped(&self) -> bool {
+        self.values.is_mapped() && self.meta.is_mapped()
     }
 }
 

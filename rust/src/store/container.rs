@@ -1,0 +1,701 @@
+//! The `SPAK` binary container: writer, mmap reader, and inspection.
+//!
+//! Layout (little-endian; full spec with a worked example in
+//! `docs/FORMAT.md`):
+//!
+//! ```text
+//! [0..4)    magic  b"SPAK"
+//! [4..8)    version u32
+//! [8..12)   index_len u32
+//! [12..12+index_len)  index JSON (config + label + per-tensor entries)
+//! zero pad to the next 64-byte boundary            -> data_start
+//! sections: one byte stream per tensor component, each aligned to a
+//!           64-byte boundary relative to data_start (offsets in the
+//!           index are relative to data_start)
+//! [file_len-8..file_len)  u64 FNV-1a over [12, file_len-8)
+//! ```
+//!
+//! The checksum trailer covers everything after the fixed header —
+//! index JSON, alignment padding **and** sections — so a bit flip in a
+//! stream offset is caught just like one in the stream bytes (an index
+//! that lies about offsets would otherwise remap windows silently).
+//!
+//! Every index entry names a tensor, its kind (`dense`/`nm`/`vnm`/
+//! `qnm`), its dense shape, the kind's parameters (`n`, `m`, `v`,
+//! `qbits`, `qgroup`) and its streams (`{off, bytes}` each); packed
+//! linears may carry a nested `outliers` object. The reader validates
+//! magic/version/checksum with the shared typed errors
+//! ([`crate::Error::BadMagic`] / [`crate::Error::BadVersion`] /
+//! [`crate::Error::ChecksumMismatch`] / [`crate::Error::Truncated`] —
+//! the same conditions `model/checkpoint.rs` raises), then rebuilds
+//! every packed format over [`Storage::mapped`] windows: loads are
+//! zero-copy, and stream lengths are validated against the packers'
+//! exact layout rules so the reconstructed operands are byte-identical
+//! to the originals.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::model::{config_from_json, config_json};
+use crate::quant::QuantSpec;
+use crate::sparse::storage::{Pod, Storage};
+use crate::sparse::{PackedNm, PackedQnm, PackedVnm, StructuredOutliers};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::mmap::MappedFile;
+use crate::util::{fnv1a, FNV_OFFSET};
+
+use super::{PackedLayer, PackedModel, PackedWeights};
+
+/// Container magic bytes.
+pub const MAGIC: &[u8; 4] = b"SPAK";
+/// Container format version this build writes and reads.
+pub const VERSION: u32 = 1;
+/// Section alignment: every stream starts on a 64-byte boundary (cache-
+/// line aligned, and a multiple of every stream dtype's alignment).
+pub const ALIGN: u64 = 64;
+
+const FIXED_HEADER: u64 = 12;
+
+fn align_up(x: u64, a: u64) -> u64 {
+    (x + a - 1) / a * a
+}
+
+// ------------------------------------------------------------- streams
+
+/// A typed view of one serialized stream (borrowed from the in-memory
+/// packed model at write time).
+enum StreamData<'a> {
+    U8(&'a [u8]),
+    U16(&'a [u16]),
+    U32(&'a [u32]),
+    U64(&'a [u64]),
+    F32(&'a [f32]),
+}
+
+impl StreamData<'_> {
+    fn byte_len(&self) -> usize {
+        match self {
+            StreamData::U8(s) => s.len(),
+            StreamData::U16(s) => s.len() * 2,
+            StreamData::U32(s) => s.len() * 4,
+            StreamData::U64(s) => s.len() * 8,
+            StreamData::F32(s) => s.len() * 4,
+        }
+    }
+
+    /// Raw little-endian bytes (this crate targets little-endian hosts;
+    /// the checkpoint writer makes the same assumption).
+    fn as_bytes(&self) -> &[u8] {
+        // SAFETY: all stream dtypes are plain-old-data; the slice
+        // lengths are recomputed in bytes.
+        unsafe {
+            match self {
+                StreamData::U8(s) => s,
+                StreamData::U16(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 2)
+                }
+                StreamData::U32(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+                }
+                StreamData::U64(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 8)
+                }
+                StreamData::F32(s) => {
+                    std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len() * 4)
+                }
+            }
+        }
+    }
+}
+
+/// One stream scheduled for writing: key (index name), data, and its
+/// offset relative to `data_start` (assigned by the allocator).
+struct StreamRec<'a> {
+    key: &'static str,
+    data: StreamData<'a>,
+    off: u64,
+}
+
+struct EntryPlan<'a> {
+    name: &'a str,
+    kind: &'static str,
+    shape: Vec<usize>,
+    /// kind parameters serialized into the index entry
+    attrs: Vec<(&'static str, Json)>,
+    streams: Vec<StreamRec<'a>>,
+    /// nested outlier side stream: (k, m, streams)
+    outlier: Option<(usize, usize, Vec<StreamRec<'a>>)>,
+}
+
+fn plan_entries(model: &PackedModel) -> Vec<EntryPlan<'_>> {
+    let mut entries = Vec::new();
+    for (name, t) in &model.dense {
+        entries.push(EntryPlan {
+            name: name.as_str(),
+            kind: "dense",
+            shape: t.shape().to_vec(),
+            attrs: Vec::new(),
+            streams: vec![StreamRec {
+                key: "f32",
+                data: StreamData::F32(t.data()),
+                off: 0,
+            }],
+            outlier: None,
+        });
+    }
+    for layer in &model.layers {
+        let (rows, cols) = layer.weights.dims();
+        let (attrs, streams) = match &layer.weights {
+            PackedWeights::Nm(p) => (
+                vec![
+                    ("n", Json::num(p.pattern.n as f64)),
+                    ("m", Json::num(p.pattern.m as f64)),
+                ],
+                vec![
+                    StreamRec { key: "values", data: StreamData::U16(p.values_raw()), off: 0 },
+                    StreamRec { key: "meta", data: StreamData::U64(p.meta_words()), off: 0 },
+                ],
+            ),
+            PackedWeights::Vnm(p) => (
+                vec![
+                    ("v", Json::num(p.v as f64)),
+                    ("n", Json::num(p.pattern.n as f64)),
+                    ("m", Json::num(p.pattern.m as f64)),
+                ],
+                vec![
+                    StreamRec { key: "values", data: StreamData::U16(p.values_raw()), off: 0 },
+                    StreamRec { key: "meta", data: StreamData::U64(p.meta_words()), off: 0 },
+                ],
+            ),
+            PackedWeights::Qnm(p) => (
+                vec![
+                    ("n", Json::num(p.pattern.n as f64)),
+                    ("m", Json::num(p.pattern.m as f64)),
+                    ("qbits", Json::num(p.spec().bits as f64)),
+                    ("qgroup", Json::num(p.spec().group as f64)),
+                ],
+                vec![
+                    StreamRec { key: "codes", data: StreamData::U32(p.codes_raw()), off: 0 },
+                    StreamRec { key: "scales", data: StreamData::U16(p.scales_raw()), off: 0 },
+                    StreamRec { key: "meta", data: StreamData::U64(p.meta_words()), off: 0 },
+                ],
+            ),
+        };
+        let outlier = layer.outliers.as_ref().map(|o| {
+            (
+                o.k,
+                o.m,
+                vec![
+                    StreamRec { key: "values", data: StreamData::U16(o.values_raw()), off: 0 },
+                    StreamRec { key: "indices", data: StreamData::U8(o.indices_raw()), off: 0 },
+                ],
+            )
+        });
+        entries.push(EntryPlan {
+            name: layer.name.as_str(),
+            kind: layer.weights.kind(),
+            shape: vec![rows, cols],
+            attrs,
+            streams,
+            outlier,
+        });
+    }
+    entries
+}
+
+// -------------------------------------------------------- ArtifactInfo
+
+/// One tensor's footprint inside an artifact (base + outlier streams).
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub name: String,
+    pub kind: String,
+    pub shape: Vec<usize>,
+    pub stream_bytes: usize,
+}
+
+/// Byte-exact accounting for a written or opened `.spak` artifact — the
+/// measured side of the [`crate::hwsim::artifact`] cross-check.
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub path: PathBuf,
+    /// total on-disk size
+    pub file_bytes: u64,
+    /// index JSON bytes (excluding the 12 fixed header bytes)
+    pub index_bytes: usize,
+    /// sum of all stream bytes (no padding)
+    pub payload_bytes: usize,
+    /// alignment padding between streams
+    pub padding_bytes: usize,
+    /// dense (non-linear) stream bytes — f32 embeddings and norms
+    pub dense_stream_bytes: usize,
+    /// packed base streams of the linears (values/codes/scales/meta)
+    pub linear_stream_bytes: usize,
+    /// structured-outlier side streams
+    pub outlier_stream_bytes: usize,
+    /// dense element count across the packed linears
+    pub linear_elems: usize,
+    pub label: String,
+    /// read path: `true` when the bytes are served by a live mmap
+    pub mapped: bool,
+    pub tensors: Vec<TensorInfo>,
+}
+
+impl ArtifactInfo {
+    /// Bytes the fixed header + index + its alignment pad occupy.
+    pub fn header_bytes(&self) -> u64 {
+        align_up(FIXED_HEADER + self.index_bytes as u64, ALIGN)
+    }
+
+    /// The container's structural identity: header + padded payload
+    /// span + 8-byte checksum trailer account for every file byte.
+    pub fn expected_file_bytes(&self) -> u64 {
+        self.header_bytes() + (self.payload_bytes + self.padding_bytes) as u64 + 8
+    }
+
+    /// Stored bits per dense linear parameter of the packed **base**
+    /// streams — the artifact-measured side of the Table-1 /
+    /// `nm_quant_bits_per_param` accounting.
+    pub fn base_bits_per_param(&self) -> f64 {
+        8.0 * self.linear_stream_bytes as f64 / self.linear_elems.max(1) as f64
+    }
+
+    /// Base + outlier side streams, bits per dense linear parameter.
+    pub fn total_bits_per_param(&self) -> f64 {
+        8.0 * (self.linear_stream_bytes + self.outlier_stream_bytes) as f64
+            / self.linear_elems.max(1) as f64
+    }
+}
+
+// --------------------------------------------------------------- write
+
+/// Serialize `model` to `path` as a `SPAK` container. Returns the
+/// byte-exact accounting (whose `expected_file_bytes` is asserted
+/// against the actual file).
+pub fn write_artifact(path: &Path, model: &PackedModel) -> crate::Result<ArtifactInfo> {
+    let mut entries = plan_entries(model);
+
+    // pass 1: assign aligned offsets relative to data_start
+    let mut off = 0u64;
+    let mut padding = 0u64;
+    let mut payload = 0u64;
+    {
+        let mut place = |s: &mut StreamRec<'_>| {
+            let aligned = align_up(off, ALIGN);
+            padding += aligned - off;
+            s.off = aligned;
+            off = aligned + s.data.byte_len() as u64;
+            payload += s.data.byte_len() as u64;
+        };
+        for e in &mut entries {
+            for s in &mut e.streams {
+                place(s);
+            }
+            if let Some((_, _, streams)) = &mut e.outlier {
+                for s in streams {
+                    place(s);
+                }
+            }
+        }
+    }
+    let span = off;
+
+    // pass 2: index JSON (offsets now known) + accounting
+    let stream_obj = |streams: &[StreamRec<'_>]| -> Json {
+        Json::obj(
+            streams
+                .iter()
+                .map(|s| {
+                    (
+                        s.key,
+                        Json::obj(vec![
+                            ("off", Json::num(s.off as f64)),
+                            ("bytes", Json::num(s.data.byte_len() as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        )
+    };
+    let mut tensor_infos = Vec::new();
+    let mut tensors_json = Vec::new();
+    let (mut dense_b, mut linear_b, mut outlier_b) = (0usize, 0usize, 0usize);
+    let mut linear_elems = 0usize;
+    for e in &entries {
+        let base_bytes: usize = e.streams.iter().map(|s| s.data.byte_len()).sum();
+        let mut fields = vec![
+            ("name", Json::str(e.name)),
+            ("kind", Json::str(e.kind)),
+            (
+                "shape",
+                Json::Arr(e.shape.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+        ];
+        for &(k, ref v) in &e.attrs {
+            fields.push((k, v.clone()));
+        }
+        fields.push(("streams", stream_obj(&e.streams)));
+        let mut total = base_bytes;
+        if e.kind == "dense" {
+            dense_b += base_bytes;
+        } else {
+            linear_b += base_bytes;
+            linear_elems += e.shape.iter().product::<usize>();
+        }
+        if let Some((k, m, streams)) = &e.outlier {
+            let ob: usize = streams.iter().map(|s| s.data.byte_len()).sum();
+            outlier_b += ob;
+            total += ob;
+            fields.push((
+                "outliers",
+                Json::obj(vec![
+                    ("k", Json::num(*k as f64)),
+                    ("m", Json::num(*m as f64)),
+                    ("streams", stream_obj(streams)),
+                ]),
+            ));
+        }
+        tensor_infos.push(TensorInfo {
+            name: e.name.to_string(),
+            kind: e.kind.to_string(),
+            shape: e.shape.clone(),
+            stream_bytes: total,
+        });
+        tensors_json.push(Json::obj(fields));
+    }
+    let index = Json::obj(vec![
+        ("format", Json::str("spak")),
+        ("label", Json::str(model.label.clone())),
+        ("config", config_json(&model.config)),
+        ("tensors", Json::Arr(tensors_json)),
+    ])
+    .to_string();
+    anyhow::ensure!(
+        index.len() < u32::MAX as usize,
+        "artifact index of {} bytes exceeds the u32 header field",
+        index.len()
+    );
+
+    // pass 3: write
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir).ok();
+    }
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating artifact {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(index.len() as u32).to_le_bytes())?;
+    w.write_all(index.as_bytes())?;
+    let zeros = [0u8; ALIGN as usize];
+    let header_end = FIXED_HEADER + index.len() as u64;
+    let mut pad = (align_up(header_end, ALIGN) - header_end) as usize;
+    w.write_all(&zeros[..pad])?;
+
+    // the trailer covers [12, len-8): index + header pad + sections
+    let mut checksum = fnv1a(index.as_bytes(), FNV_OFFSET);
+    checksum = fnv1a(&zeros[..pad], checksum);
+    let mut pos = 0u64;
+    for e in &entries {
+        let all = e
+            .streams
+            .iter()
+            .chain(e.outlier.iter().flat_map(|(_, _, s)| s.iter()));
+        for s in all {
+            pad = (s.off - pos) as usize;
+            w.write_all(&zeros[..pad])?;
+            checksum = fnv1a(&zeros[..pad], checksum);
+            let bytes = s.data.as_bytes();
+            w.write_all(bytes)?;
+            checksum = fnv1a(bytes, checksum);
+            pos = s.off + bytes.len() as u64;
+        }
+    }
+    debug_assert_eq!(pos, span);
+    w.write_all(&checksum.to_le_bytes())?;
+    w.flush()?;
+
+    let info = ArtifactInfo {
+        path: path.to_path_buf(),
+        file_bytes: align_up(header_end, ALIGN) + span + 8,
+        index_bytes: index.len(),
+        payload_bytes: payload as usize,
+        padding_bytes: padding as usize,
+        dense_stream_bytes: dense_b,
+        linear_stream_bytes: linear_b,
+        outlier_stream_bytes: outlier_b,
+        linear_elems,
+        label: model.label.clone(),
+        mapped: false,
+        tensors: tensor_infos,
+    };
+    debug_assert_eq!(info.expected_file_bytes(), info.file_bytes);
+    Ok(info)
+}
+
+// ---------------------------------------------------------------- read
+
+/// Typed-error helpers over the untrusted index document.
+fn want_obj<'a>(j: &'a Json, key: &str, what: &str) -> crate::Result<&'a Json> {
+    j.get(key)
+        .ok_or_else(|| anyhow::anyhow!("artifact index: {what} missing {key:?}"))
+}
+
+/// Strict non-negative integer read — `Json::as_usize` is a saturating
+/// f64 cast, which would silently coerce a corrupt `-64` offset to 0 or
+/// a fractional `qbits` to its floor; untrusted indices get neither.
+fn want_usize(j: &Json, key: &str, what: &str) -> crate::Result<usize> {
+    let x = want_obj(j, key, what)?
+        .as_f64()
+        .ok_or_else(|| anyhow::anyhow!("artifact index: {what}.{key} is not a number"))?;
+    anyhow::ensure!(
+        x >= 0.0 && x.fract() == 0.0 && x <= 9_007_199_254_740_992.0, // 2^53
+        "artifact index: {what}.{key} = {x} is not a non-negative integer"
+    );
+    Ok(x as usize)
+}
+
+/// Resolve one `{off, bytes}` stream of `streams` into a typed mapped
+/// window. `data_start`/`data_end` bound the payload span (the trailer
+/// and header are never addressable).
+fn mapped_stream<T: Pod>(
+    map: &std::sync::Arc<MappedFile>,
+    streams: &Json,
+    key: &str,
+    what: &str,
+    data_start: u64,
+    data_end: u64,
+) -> crate::Result<Storage<T>> {
+    let s = want_obj(streams, key, what)?;
+    let off = want_usize(s, "off", what)? as u64;
+    let bytes = want_usize(s, "bytes", what)? as u64;
+    let elem = std::mem::size_of::<T>() as u64;
+    anyhow::ensure!(
+        bytes % elem == 0,
+        "artifact index: {what}.{key} of {bytes} bytes is not a whole number of \
+         {elem}-byte elements"
+    );
+    let abs = data_start
+        .checked_add(off)
+        .ok_or_else(|| anyhow::anyhow!("artifact index: {what}.{key} offset overflows"))?;
+    anyhow::ensure!(
+        abs.checked_add(bytes).is_some_and(|end| end <= data_end),
+        "artifact index: {what}.{key} [{off}, {off}+{bytes}) leaves the payload span"
+    );
+    Storage::mapped(std::sync::Arc::clone(map), abs as usize, (bytes / elem) as usize)
+}
+
+/// Open a `.spak` artifact: mmap, validate magic/version/checksum
+/// (typed errors), parse the index, and rebuild every tensor with
+/// zero-copy mapped streams. The returned [`PackedModel`] serves
+/// through [`PackedModel::into_sparse_lm`]; the [`ArtifactInfo`] is the
+/// byte-exact accounting of what was mapped.
+pub fn read_artifact(path: &Path) -> crate::Result<(PackedModel, ArtifactInfo)> {
+    let map = MappedFile::open(path)
+        .with_context(|| format!("opening artifact {}", path.display()))?;
+    let bytes = map.bytes();
+    let p = || path.display().to_string();
+    if (bytes.len() as u64) < FIXED_HEADER {
+        return Err(crate::Error::Truncated {
+            path: p(),
+            need: FIXED_HEADER,
+            have: bytes.len() as u64,
+        }
+        .into());
+    }
+    let magic: [u8; 4] = bytes[0..4].try_into().unwrap();
+    if &magic != MAGIC {
+        return Err(crate::Error::BadMagic { path: p(), want: *MAGIC, got: magic }.into());
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION {
+        return Err(
+            crate::Error::BadVersion { path: p(), want: VERSION, got: version }.into(),
+        );
+    }
+    let index_len = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as u64;
+    let data_start = align_up(FIXED_HEADER + index_len, ALIGN);
+    if (bytes.len() as u64) < data_start + 8 {
+        return Err(crate::Error::Truncated {
+            path: p(),
+            need: data_start + 8,
+            have: bytes.len() as u64,
+        }
+        .into());
+    }
+    let data_end = bytes.len() as u64 - 8;
+    let stored = u64::from_le_bytes(bytes[data_end as usize..].try_into().unwrap());
+    let computed = fnv1a(&bytes[FIXED_HEADER as usize..data_end as usize], FNV_OFFSET);
+    if stored != computed {
+        return Err(crate::Error::ChecksumMismatch {
+            path: p(),
+            want: stored,
+            got: computed,
+        }
+        .into());
+    }
+
+    let index_str = std::str::from_utf8(&bytes[12..(FIXED_HEADER + index_len) as usize])
+        .with_context(|| format!("artifact index of {} is not utf-8", p()))?;
+    let index = Json::parse(index_str)
+        .map_err(|e| anyhow::anyhow!("artifact index of {}: {e}", p()))?;
+    let config = config_from_json(want_obj(&index, "config", "index")?)?;
+    let label = index
+        .get("label")
+        .and_then(|l| l.as_str())
+        .unwrap_or("")
+        .to_string();
+
+    let mut dense = Vec::new();
+    let mut layers = Vec::new();
+    let mut tensor_infos = Vec::new();
+    let (mut dense_b, mut linear_b, mut outlier_b) = (0usize, 0usize, 0usize);
+    let mut linear_elems = 0usize;
+    let mut payload = 0usize;
+    let entries = want_obj(&index, "tensors", "index")?
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("artifact index: tensors is not an array"))?;
+    for e in entries {
+        let name = want_obj(e, "name", "tensor")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("artifact index: tensor name is not a string"))?
+            .to_string();
+        let what = format!("tensor {name}");
+        let kind = want_obj(e, "kind", &what)?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("artifact index: {what}.kind is not a string"))?
+            .to_string();
+        let shape = want_obj(e, "shape", &what)?
+            .usize_arr()
+            .ok_or_else(|| anyhow::anyhow!("artifact index: {what}.shape malformed"))?;
+        let streams = want_obj(e, "streams", &what)?;
+        let elems: usize = shape.iter().product();
+        let entry_bytes = if kind == "dense" {
+            let data: Storage<f32> =
+                mapped_stream(&map, streams, "f32", &what, data_start, data_end)?;
+            anyhow::ensure!(
+                data.len() == elems,
+                "{what}: f32 stream holds {} values, shape {shape:?} wants {elems}",
+                data.len()
+            );
+            dense_b += elems * 4;
+            // dense params are copied (they are outside the packed
+            // zero-copy contract: the forward mutates nothing but needs
+            // an owned Tensor)
+            dense.push((name.clone(), Tensor::new(shape.clone(), data.to_vec())));
+            elems * 4
+        } else {
+            anyhow::ensure!(
+                shape.len() == 2,
+                "{what}: packed kind {kind:?} wants a rank-2 shape, got {shape:?}"
+            );
+            let (rows, cols) = (shape[0], shape[1]);
+            let n = want_usize(e, "n", &what)?;
+            let m = want_usize(e, "m", &what)?;
+            let weights = match kind.as_str() {
+                "nm" => PackedWeights::Nm(PackedNm::from_raw_parts(
+                    n,
+                    m,
+                    rows,
+                    cols,
+                    mapped_stream(&map, streams, "values", &what, data_start, data_end)?,
+                    mapped_stream(&map, streams, "meta", &what, data_start, data_end)?,
+                )?),
+                "vnm" => PackedWeights::Vnm(PackedVnm::from_raw_parts(
+                    want_usize(e, "v", &what)?,
+                    n,
+                    m,
+                    rows,
+                    cols,
+                    mapped_stream(&map, streams, "values", &what, data_start, data_end)?,
+                    mapped_stream(&map, streams, "meta", &what, data_start, data_end)?,
+                )?),
+                "qnm" => {
+                    let qbits = want_usize(e, "qbits", &what)?;
+                    let qgroup = want_usize(e, "qgroup", &what)?;
+                    anyhow::ensure!(
+                        (2..=8).contains(&qbits) && qgroup > 0,
+                        "{what}: bad quant spec int{qbits} g{qgroup}"
+                    );
+                    PackedWeights::Qnm(PackedQnm::from_raw_parts(
+                        n,
+                        m,
+                        rows,
+                        cols,
+                        QuantSpec::new(qbits as u32, qgroup),
+                        mapped_stream(&map, streams, "codes", &what, data_start, data_end)?,
+                        mapped_stream(&map, streams, "scales", &what, data_start, data_end)?,
+                        mapped_stream(&map, streams, "meta", &what, data_start, data_end)?,
+                    )?)
+                }
+                other => anyhow::bail!("{what}: unknown tensor kind {other:?}"),
+            };
+            let mut eb = weights.stream_bytes();
+            linear_b += eb;
+            linear_elems += elems;
+            let outliers = match e.get("outliers") {
+                None => None,
+                Some(o) => {
+                    let ow = format!("{what}.outliers");
+                    let k = want_usize(o, "k", &ow)?;
+                    let om = want_usize(o, "m", &ow)?;
+                    let ostreams = want_obj(o, "streams", &ow)?;
+                    let so = StructuredOutliers::from_raw_parts(
+                        k,
+                        om,
+                        rows,
+                        cols,
+                        mapped_stream(&map, ostreams, "values", &ow, data_start, data_end)?,
+                        mapped_stream(&map, ostreams, "indices", &ow, data_start, data_end)?,
+                    )?;
+                    let ob = so.values_raw().len() * 2 + so.indices_raw().len();
+                    outlier_b += ob;
+                    eb += ob;
+                    Some(so)
+                }
+            };
+            layers.push(PackedLayer { name: name.clone(), weights, outliers });
+            eb
+        };
+        payload += entry_bytes;
+        tensor_infos.push(TensorInfo {
+            name,
+            kind,
+            shape,
+            stream_bytes: entry_bytes,
+        });
+    }
+
+    let info = ArtifactInfo {
+        path: path.to_path_buf(),
+        file_bytes: bytes.len() as u64,
+        index_bytes: index_len as usize,
+        payload_bytes: payload,
+        padding_bytes: ((data_end - data_start) as usize).saturating_sub(payload),
+        dense_stream_bytes: dense_b,
+        linear_stream_bytes: linear_b,
+        outlier_stream_bytes: outlier_b,
+        linear_elems,
+        label,
+        mapped: map.is_mapped(),
+        tensors: tensor_infos,
+    };
+    let model = PackedModel {
+        config,
+        label: info.label.clone(),
+        dense,
+        layers,
+    };
+    Ok((model, info))
+}
+
+/// Validate and account a `.spak` file without keeping the model — the
+/// `sparselm inspect` backend (full magic/version/checksum/layout
+/// validation runs, since accounting is only as trustworthy as the
+/// index it came from).
+pub fn inspect_artifact(path: &Path) -> crate::Result<ArtifactInfo> {
+    read_artifact(path).map(|(_, info)| info)
+}

@@ -1,0 +1,348 @@
+//! `store` — the packed-model artifact container (`.spak`) and its
+//! mmap zero-copy reader.
+//!
+//! The compression pipeline ends with calibrated, variance-corrected,
+//! optionally fine-tuned and quantized packed weights — but until this
+//! module existed they were flattened back to a dense checkpoint, and a
+//! server cold-started by **re-packing with magnitude-only selection**,
+//! silently discarding everything the pipeline computed. The `.spak`
+//! container makes the paper's storage claim a literal on-disk byte
+//! count (2.9375 bits/param at 8:16 / int4 / g128, cross-checked
+//! byte-exactly by [`crate::hwsim::artifact`]) and turns cold start into
+//! "mmap and go":
+//!
+//! * [`PackedModel`] — the fully compressed model in memory: config,
+//!   dense non-linear params (embeddings/norms), and one
+//!   [`PackedLayer`] per prunable linear ([`PackedNm`] bf16 /
+//!   [`PackedQnm`] int-quantized / [`PackedVnm`] base, plus the
+//!   structured-outlier side stream). Produced by the pipeline's
+//!   pack-artifact stage ([`crate::coordinator::CompressionPipeline::run_packed`])
+//!   or, magnitude-only, by [`PackedModel::compress`] (the `sparselm
+//!   pack` subcommand).
+//! * [`write_artifact`] / [`read_artifact`] — the `SPAK` binary
+//!   container (versioned, FNV-1a-checksummed payload, 64-byte-aligned
+//!   sections, JSON per-tensor index; layout spec in `docs/FORMAT.md`).
+//!   The reader memory-maps the file and hands every weight stream to
+//!   its format as a [`crate::sparse::Storage::Mapped`] window, so
+//!   [`PackedModel::into_sparse_lm`] builds a serving model whose spmm
+//!   kernels stream weights **directly from the page cache** — zero
+//!   per-linear heap copies, byte-identical `operand_bytes` accounting,
+//!   bitwise-identical outputs to the in-memory packed model, and one
+//!   physical copy shared by every server process on the host.
+//!
+//! `serve --model x.spak` / `generate --model x.spak` boot through this
+//! path; `docs/ARCHITECTURE.md` contrasts it with the legacy
+//! dense-checkpoint + `--repack` cold start.
+
+pub mod container;
+
+pub use container::{
+    inspect_artifact, read_artifact, write_artifact, ArtifactInfo, TensorInfo, ALIGN, MAGIC,
+    VERSION,
+};
+
+use std::collections::BTreeMap;
+
+use crate::model::{BlockWeights, ModelConfig, ParamSet, SparseLm};
+use crate::quant::QuantSpec;
+use crate::sparse::{
+    Kernel, PackedLinear, PackedNm, PackedQnm, PackedQuantLinear, PackedVnm, StructuredOutliers,
+};
+use crate::tensor::Tensor;
+
+/// The packed base weights of one linear layer — every N:M family the
+/// container can hold.
+#[derive(Clone, Debug)]
+pub enum PackedWeights {
+    /// per-row N:M, bf16 kept values
+    Nm(PackedNm),
+    /// V-row-tiled N:M, bf16 kept values
+    Vnm(PackedVnm),
+    /// per-row N:M, int-quantized kept values (dequantized in-kernel)
+    Qnm(PackedQnm),
+}
+
+impl PackedWeights {
+    /// `(out_features, in_features)` of the dense matrix this packs.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            PackedWeights::Nm(p) => (p.rows, p.cols),
+            PackedWeights::Vnm(p) => (p.rows, p.cols),
+            PackedWeights::Qnm(p) => (p.rows, p.cols),
+        }
+    }
+
+    /// Exact serialized stream bytes (values/codes/scales + full meta
+    /// words) — what the container stores, and what
+    /// [`crate::hwsim::artifact`] models.
+    pub fn stream_bytes(&self) -> usize {
+        match self {
+            PackedWeights::Nm(p) => p.values_raw().len() * 2 + p.meta_words().len() * 8,
+            PackedWeights::Vnm(p) => p.values_raw().len() * 2 + p.meta_words().len() * 8,
+            PackedWeights::Qnm(p) => {
+                p.codes_raw().len() * 4 + p.scales_raw().len() * 2 + p.meta_words().len() * 8
+            }
+        }
+    }
+
+    /// Short format tag used in the artifact index (`nm`/`vnm`/`qnm`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            PackedWeights::Nm(_) => "nm",
+            PackedWeights::Vnm(_) => "vnm",
+            PackedWeights::Qnm(_) => "qnm",
+        }
+    }
+}
+
+/// One prunable linear in its serving format: packed base + optional
+/// structured-outlier side stream.
+#[derive(Clone, Debug)]
+pub struct PackedLayer {
+    pub name: String,
+    pub weights: PackedWeights,
+    pub outliers: Option<StructuredOutliers>,
+}
+
+impl PackedLayer {
+    /// Exact serialized bytes of the outlier side stream (0 when none).
+    pub fn outlier_stream_bytes(&self) -> usize {
+        self.outliers
+            .as_ref()
+            .map_or(0, |o| o.values_raw().len() * 2 + o.indices_raw().len())
+    }
+
+    /// Turn this layer into the fused kernel the forward pass applies.
+    /// V:N:M has no outlier composite (it exists for the a3 ablation,
+    /// not the §4 serving format), so it is servable only without a
+    /// side stream.
+    pub fn into_kernel(self) -> crate::Result<Box<dyn Kernel>> {
+        if let Some(o) = &self.outliers {
+            let (r, c) = self.weights.dims();
+            anyhow::ensure!(
+                (o.rows, o.cols) == (r, c),
+                "layer {}: outlier shape ({}, {}) vs base ({r}, {c})",
+                self.name,
+                o.rows,
+                o.cols
+            );
+        }
+        Ok(match self.weights {
+            PackedWeights::Nm(p) => Box::new(PackedLinear::new(p, self.outliers)),
+            PackedWeights::Qnm(p) => Box::new(PackedQuantLinear::new(p, self.outliers)),
+            PackedWeights::Vnm(p) => {
+                anyhow::ensure!(
+                    self.outliers.is_none(),
+                    "layer {}: V:N:M base cannot carry an outlier side stream",
+                    self.name
+                );
+                Box::new(p)
+            }
+        })
+    }
+}
+
+/// The fully compressed model — exactly what the `.spak` container
+/// persists. Field order follows the parameter contract
+/// ([`ModelConfig::param_names`]): `dense` holds every non-linear
+/// tensor (tok_emb, per-block norms, ln_f), `layers` every prunable
+/// linear, block-major in [`crate::model::BLOCK_LINEAR`] order.
+pub struct PackedModel {
+    pub config: ModelConfig,
+    /// pipeline provenance label (e.g. `RIA+SQ+VC+INT4`), `Magnitude`
+    /// for checkpoint-repacks
+    pub label: String,
+    pub dense: Vec<(String, Tensor)>,
+    pub layers: Vec<PackedLayer>,
+}
+
+impl PackedModel {
+    /// Magnitude-selection pack of a dense parameter set — the same
+    /// selection as [`SparseLm::compress`] / [`SparseLm::compress_quant`]
+    /// (one shared `select_outliers_and_keep` body underneath), so a
+    /// written-then-mmapped artifact is bitwise interchangeable with the
+    /// in-memory packed model. This is the `sparselm pack` path; the
+    /// calibrated path is the pipeline's pack-artifact stage.
+    pub fn compress(
+        params: &ParamSet,
+        n: usize,
+        m: usize,
+        k_out: usize,
+        quant: Option<QuantSpec>,
+    ) -> PackedModel {
+        let linear: std::collections::BTreeSet<String> =
+            params.linear_indices().into_iter().map(|(name, _)| name).collect();
+        let mut dense = Vec::new();
+        let mut layers = Vec::new();
+        for (name, t) in params.names.iter().zip(&params.tensors) {
+            if !linear.contains(name) {
+                dense.push((name.clone(), t.clone()));
+                continue;
+            }
+            let score = t.map(f32::abs);
+            let (weights, outliers) = match quant {
+                Some(spec) => {
+                    let l = PackedQuantLinear::compress(t, &score, n, m, k_out, spec);
+                    (PackedWeights::Qnm(l.weights), l.outliers)
+                }
+                None => {
+                    let l = PackedLinear::compress(t, &score, n, m, k_out);
+                    (PackedWeights::Nm(l.weights), l.outliers)
+                }
+            };
+            layers.push(PackedLayer {
+                name: name.clone(),
+                weights,
+                outliers,
+            });
+        }
+        let label = match quant {
+            Some(spec) => format!("Magnitude+INT{}", spec.bits),
+            None => "Magnitude".to_string(),
+        };
+        PackedModel {
+            config: params.config.clone(),
+            label,
+            dense,
+            layers,
+        }
+    }
+
+    /// The uniform pack settings across every linear, when consistent:
+    /// `(n, m, quant spec of the base)`. `None` when layers mix
+    /// patterns, formats, or quant specs — including quant groups that
+    /// were gcd-fitted differently per layer shape, where no single
+    /// spec reproduces the stored streams (per-layer N:M allocation à
+    /// la OWL would land here too). Callers printing an analytic
+    /// cross-check skip it in that case rather than report a false
+    /// mismatch.
+    pub fn pack_summary(&self) -> Option<(usize, usize, Option<QuantSpec>)> {
+        let mut summary: Option<(usize, usize, Option<QuantSpec>)> = None;
+        for l in &self.layers {
+            let this = match &l.weights {
+                PackedWeights::Nm(p) => (p.pattern.n, p.pattern.m, None),
+                PackedWeights::Qnm(p) => (p.pattern.n, p.pattern.m, Some(p.spec())),
+                PackedWeights::Vnm(_) => return None,
+            };
+            match summary {
+                None => summary = Some(this),
+                Some(prev) if prev != this => return None,
+                Some(_) => {}
+            }
+        }
+        summary
+    }
+
+    /// Total dense elements across the packed linears (the bits/param
+    /// denominator).
+    pub fn linear_elems(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| {
+                let (r, c) = l.weights.dims();
+                r * c
+            })
+            .sum()
+    }
+
+    /// Exact serialized bytes of the packed base streams.
+    pub fn linear_stream_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.weights.stream_bytes()).sum()
+    }
+
+    /// Exact serialized bytes of the outlier side streams.
+    pub fn outlier_stream_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.outlier_stream_bytes()).sum()
+    }
+
+    /// Build the serving model, consuming `self` — when the layers came
+    /// out of [`read_artifact`] their streams are [`crate::sparse::Storage::Mapped`]
+    /// windows, so the resulting [`SparseLm`]'s kernels read weights
+    /// straight from the page cache (no per-linear heap copies; dense
+    /// non-linear params are copied into f32 tensors, which is outside
+    /// the zero-copy contract). Validates every tensor against the
+    /// parameter contract of `config`.
+    pub fn into_sparse_lm(self) -> crate::Result<SparseLm> {
+        let cfg = self.config;
+        let mut dense: BTreeMap<String, Tensor> = self.dense.into_iter().collect();
+        let mut layers: BTreeMap<String, PackedLayer> = self
+            .layers
+            .into_iter()
+            .map(|l| (l.name.clone(), l))
+            .collect();
+
+        let mut take_dense = |name: &str, want: &[usize]| -> crate::Result<Tensor> {
+            let t = dense
+                .remove(name)
+                .ok_or_else(|| anyhow::anyhow!("artifact missing dense param {name:?}"))?;
+            anyhow::ensure!(
+                t.shape() == want,
+                "dense param {name}: artifact shape {:?} vs config {:?}",
+                t.shape(),
+                want
+            );
+            Ok(t)
+        };
+
+        let tok_emb = take_dense("tok_emb", &cfg.param_shape("tok_emb")?)?;
+        let ln_f = take_dense("ln_f", &cfg.param_shape("ln_f")?)?.into_data();
+
+        let mut blocks = Vec::with_capacity(cfg.n_layers);
+        for b in 0..cfg.n_layers {
+            let mut lin = |p: &str| -> crate::Result<Box<dyn Kernel>> {
+                let name = format!("blk{b}.{p}");
+                let layer = layers
+                    .remove(&name)
+                    .ok_or_else(|| anyhow::anyhow!("artifact missing packed linear {name:?}"))?;
+                let want = cfg.param_shape(&name)?;
+                let (r, c) = layer.weights.dims();
+                anyhow::ensure!(
+                    vec![r, c] == want,
+                    "linear {name}: artifact shape [{r}, {c}] vs config {want:?}"
+                );
+                layer.into_kernel()
+            };
+            let wq = lin("wq")?;
+            let wk = lin("wk")?;
+            let wv = lin("wv")?;
+            let wo = lin("wo")?;
+            let wg = lin("wg")?;
+            let wu = lin("wu")?;
+            let wd = lin("wd")?;
+            let ln1 = take_dense(&format!("blk{b}.ln1"), &[cfg.dim])?.into_data();
+            let ln2 = take_dense(&format!("blk{b}.ln2"), &[cfg.dim])?.into_data();
+            blocks.push(BlockWeights {
+                ln1,
+                wq,
+                wk,
+                wv,
+                wo,
+                ln2,
+                wg,
+                wu,
+                wd,
+            });
+        }
+        Ok(SparseLm {
+            config: cfg,
+            tok_emb,
+            blocks,
+            ln_f,
+            threads: 1,
+        })
+    }
+
+    /// `true` when every packed weight stream is a live mmap window —
+    /// the zero-copy property [`read_artifact`] establishes (reported
+    /// through [`ArtifactInfo::mapped`] too; exposed here for tests).
+    pub fn all_streams_mapped(&self) -> bool {
+        self.layers.iter().all(|l| {
+            let base = match &l.weights {
+                PackedWeights::Nm(p) => p.is_mapped(),
+                PackedWeights::Vnm(p) => p.is_mapped(),
+                PackedWeights::Qnm(p) => p.is_mapped(),
+            };
+            base && l.outliers.iter().all(|o| o.is_mapped())
+        })
+    }
+}

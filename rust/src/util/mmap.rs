@@ -1,0 +1,217 @@
+//! Read-only file memory-mapping for the `.spak` artifact reader.
+//!
+//! The offline registry carries no `memmap2`, so this wraps the raw
+//! `mmap(2)`/`munmap(2)` C calls directly (libc is linked by `std` on
+//! every unix target — no new dependency). Mappings are `MAP_SHARED` +
+//! `PROT_READ`: every server process that opens the same artifact shares
+//! one physical copy through the page cache, which is the deployment
+//! property the packed-model container exists for. On non-unix targets
+//! (and on `mmap` failure) [`MappedFile::open`] degrades to reading the
+//! file into an owned buffer — same API, no zero-copy claim
+//! ([`MappedFile::is_mapped`] reports which mode is live, and the store
+//! tests gate their zero-copy assertions on it).
+
+use std::path::Path;
+use std::sync::Arc;
+
+#[cfg(unix)]
+mod sys {
+    use std::ffi::c_void;
+    use std::os::fd::AsRawFd;
+
+    // Prototypes match POSIX; PROT_READ and MAP_SHARED are 1 on every
+    // unix this crate targets (linux, macOS, the BSDs).
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    const PROT_READ: i32 = 1;
+    const MAP_SHARED: i32 = 1;
+
+    pub(super) fn map(file: &std::fs::File, len: usize) -> Option<*const u8> {
+        if len == 0 {
+            return None;
+        }
+        let p = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_SHARED,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        // MAP_FAILED is (void*)-1
+        if p.is_null() || p as isize == -1 {
+            None
+        } else {
+            Some(p as *const u8)
+        }
+    }
+
+    pub(super) fn unmap(ptr: *const u8, len: usize) {
+        unsafe {
+            munmap(ptr as *mut c_void, len);
+        }
+    }
+}
+
+/// A whole file mapped read-only (or, as a fallback, read into memory).
+/// Cheap to share: the store reader hands every packed weight stream an
+/// `Arc<MappedFile>` plus a byte range, so dropping the model drops the
+/// mapping exactly once.
+pub struct MappedFile {
+    /// live mmap base (page-aligned), or null when `buf` backs the data
+    ptr: *const u8,
+    len: usize,
+    /// owned fallback (non-unix, empty file, or mmap failure) — held as
+    /// `u64` words so the base stays 8-byte aligned like a real mapping,
+    /// which the typed stream views rely on
+    buf: Vec<u64>,
+}
+
+// SAFETY: the mapping is immutable (PROT_READ, and this module never
+// exposes a writable view), so shared references across threads are safe.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// Map `path` read-only. Falls back to an owned read when mapping is
+    /// unavailable; check [`Self::is_mapped`] when zero-copy matters.
+    pub fn open(path: &Path) -> std::io::Result<Arc<MappedFile>> {
+        let file = std::fs::File::open(path)?;
+        let len = file.metadata()?.len() as usize;
+        #[cfg(unix)]
+        if let Some(ptr) = sys::map(&file, len) {
+            return Ok(Arc::new(MappedFile {
+                ptr,
+                len,
+                buf: Vec::new(),
+            }));
+        }
+        let bytes = std::fs::read(path)?;
+        let len = bytes.len();
+        let mut buf = vec![0u64; (len + 7) / 8];
+        // SAFETY: the destination spans `len` bytes of initialized u64s.
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), buf.as_mut_ptr() as *mut u8, len);
+        }
+        Ok(Arc::new(MappedFile {
+            ptr: std::ptr::null(),
+            len,
+            buf,
+        }))
+    }
+
+    /// The file contents.
+    pub fn bytes(&self) -> &[u8] {
+        if self.ptr.is_null() {
+            // SAFETY: buf holds at least `len` initialized bytes.
+            unsafe { std::slice::from_raw_parts(self.buf.as_ptr() as *const u8, self.len) }
+        } else {
+            // SAFETY: ptr/len come from a successful mmap of this length,
+            // held alive until Drop.
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// `true` when the bytes are served by a live `mmap` (page-cache
+    /// backed, shared between processes); `false` in owned-buffer
+    /// fallback mode.
+    pub fn is_mapped(&self) -> bool {
+        !self.ptr.is_null()
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        #[cfg(unix)]
+        if !self.ptr.is_null() {
+            sys::unmap(self.ptr, self.len);
+        }
+    }
+}
+
+impl std::fmt::Debug for MappedFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MappedFile({} bytes, {})",
+            self.len,
+            if self.is_mapped() { "mmap" } else { "owned" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_file_contents() {
+        let dir = std::env::temp_dir().join("sparselm-mmap-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("map.bin");
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        std::fs::write(&path, &data).unwrap();
+        let map = MappedFile::open(&path).unwrap();
+        assert_eq!(map.len(), data.len());
+        assert_eq!(map.bytes(), &data[..]);
+        #[cfg(unix)]
+        assert!(map.is_mapped(), "unix open should be a live mmap");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn empty_file_is_empty_slice() {
+        let dir = std::env::temp_dir().join("sparselm-mmap-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("empty.bin");
+        std::fs::write(&path, b"").unwrap();
+        let map = MappedFile::open(&path).unwrap();
+        assert!(map.is_empty());
+        assert_eq!(map.bytes(), b"");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_is_io_error() {
+        assert!(MappedFile::open(Path::new("/nonexistent/spak.bin")).is_err());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let dir = std::env::temp_dir().join("sparselm-mmap-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("shared.bin");
+        std::fs::write(&path, vec![7u8; 4096]).unwrap();
+        let map = MappedFile::open(&path).unwrap();
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = Arc::clone(&map);
+                std::thread::spawn(move || m.bytes().iter().map(|&b| b as u64).sum::<u64>())
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), 7 * 4096);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -8,6 +8,7 @@
 pub mod args;
 pub mod json;
 pub mod logging;
+pub mod mmap;
 pub mod perf;
 pub mod pool;
 pub mod propcheck;
@@ -15,3 +16,17 @@ pub mod rng;
 pub mod timer;
 
 pub use rng::Rng;
+
+/// FNV-1a over `bytes`, continuing from `h` (seed with [`FNV_OFFSET`]) —
+/// the cheap payload-integrity hash shared by the checkpoint format and
+/// the `.spak` packed-model container.
+pub fn fnv1a(bytes: &[u8], mut h: u64) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// FNV-1a offset basis (the initial `h` for [`fnv1a`]).
+pub const FNV_OFFSET: u64 = 0xcbf29ce484222325;

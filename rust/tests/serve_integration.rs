@@ -6,12 +6,14 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use sparselm::data::tokenizer::BOS;
+use sparselm::data::tokenizer::{BOS, EOS};
 use sparselm::data::{CorpusKind, CorpusSpec, Tokenizer, World};
-use sparselm::model::ParamSet;
+use sparselm::model::{ModelConfig, ParamSet, SparseLm};
 use sparselm::serve::{
-    pjrt_scorer, serve, ScoreRequest, Scorer, ServeClient, ServerConfig,
+    pjrt_scorer, serve, serve_generate, spmm_generator, spmm_scorer, ScoreRequest, Scorer,
+    ServeClient, ServerConfig,
 };
+use sparselm::store::{read_artifact, write_artifact, PackedModel};
 use sparselm::util::Rng;
 
 fn have_artifacts() -> bool {
@@ -90,6 +92,83 @@ fn pjrt_server_scores_match_direct_eval() {
     assert!(scores.iter().all(|s| s.is_finite()));
 
     handle.shutdown().unwrap();
+}
+
+#[test]
+fn spak_artifact_server_matches_in_process_generation() {
+    // the artifact cold-start acceptance: write a `.spak`, boot a server
+    // from the mmap'd file (no PJRT, no re-pack), and require token
+    // parity with in-process generation over the same packed weights
+    let mut cfg = ModelConfig::preset("tiny").unwrap();
+    cfg.n_layers = 2;
+    cfg.seq = 48;
+    cfg.batch = 2;
+    let mut rng = Rng::new(4096);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+
+    let dir = std::env::temp_dir().join("sparselm-spak-serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("served.spak");
+    let packed = PackedModel::compress(&params, 8, 16, 16, None);
+    write_artifact(&path, &packed).unwrap();
+
+    let (back, info) = read_artifact(&path).unwrap();
+    #[cfg(unix)]
+    assert!(info.mapped && back.all_streams_mapped(), "spak boot must be zero-copy");
+    let lm = Arc::new(back.into_sparse_lm().unwrap());
+
+    let tok = test_tokenizer();
+    let mut server_cfg = server_cfg(cfg.batch);
+    server_cfg.max_gen_tokens = 64;
+    let handle = serve_generate(
+        spmm_scorer(Arc::clone(&lm)),
+        spmm_generator(Arc::clone(&lm), 4),
+        Arc::clone(&tok),
+        server_cfg,
+    )
+    .unwrap();
+    let mut client = ServeClient::connect(handle.addr).unwrap();
+    client.set_timeout(Duration::from_secs(120)).unwrap();
+
+    // greedy server-side generation vs the same loop in-process, over
+    // the *in-memory* packed model — the chain mmap == in-memory ==
+    // served closes the bitwise acceptance end to end
+    let prompt = "the quick brown fox";
+    let (served_text, served_tokens) = client.generate(prompt, 24, 0.0).unwrap();
+    let reference = SparseLm::compress(&params, 8, 16, 16);
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(prompt));
+    let want = reference
+        .generate(&ids, 24, Some(EOS), sparselm::eval::argmax)
+        .unwrap();
+    assert_eq!(served_tokens, want.len(), "token count parity");
+    assert_eq!(served_text, tok.decode(&want), "token parity");
+
+    // scoring parity: the served nll equals the in-process packed nll
+    let sentence = "jumps over the lazy dog";
+    let (served_nll, scored) = client.nll(sentence).unwrap();
+    assert!(scored > 0);
+    let mut sids = vec![BOS];
+    sids.extend(tok.encode(sentence));
+    let (win, mask) = sparselm::data::batch::pack_windows(
+        &[(sids, 1)],
+        cfg.batch,
+        cfg.seq,
+    );
+    let nll = reference.lm_nll(&win).unwrap();
+    let want_nll: f64 = nll.data()[..cfg.seq]
+        .iter()
+        .zip(&mask[..cfg.seq])
+        .map(|(&n, &m)| n as f64 * m as f64)
+        .sum::<f64>()
+        / mask[..cfg.seq].iter().filter(|&&m| m != 0.0).count() as f64;
+    assert!(
+        (served_nll - want_nll).abs() < 1e-6,
+        "served {served_nll} vs in-process {want_nll}"
+    );
+
+    handle.shutdown().unwrap();
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]

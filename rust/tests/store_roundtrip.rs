@@ -1,0 +1,311 @@
+//! `.spak` artifact round-trip: pack → write → mmap → spmm must be
+//! **bitwise** identical to the in-memory packed model, across every
+//! packed format family, batch size and worker count — plus the
+//! container's typed failure modes and its byte-exact size identity
+//! against the `hwsim` artifact accounting.
+
+use std::path::PathBuf;
+
+use sparselm::hwsim::artifact::{model_linear_stream_bytes, model_outlier_stream_bytes};
+use sparselm::model::{ModelConfig, ParamSet, SparseLm};
+use sparselm::pruning::mask_topn_per_block;
+use sparselm::quant::QuantSpec;
+use sparselm::sparse::{
+    spmm_parallel, vnm_select, Kernel, PackedNm, PackedQnm, PackedVnm,
+};
+use sparselm::store::{
+    read_artifact, write_artifact, PackedLayer, PackedModel, PackedWeights,
+};
+use sparselm::tensor::Tensor;
+use sparselm::util::propcheck::{check, Gen};
+use sparselm::util::Rng;
+
+fn tmp(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join("sparselm-store-roundtrip");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+fn tiny_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::preset("tiny").unwrap();
+    cfg.n_layers = 2;
+    cfg.vocab = 512;
+    cfg.seq = 16;
+    cfg.batch = 2;
+    cfg
+}
+
+/// Wrap one packed tensor in a single-layer artifact model (the
+/// container does not require the tensor list to satisfy a model's
+/// parameter contract — only `into_sparse_lm` does).
+fn single_layer_model(layer: PackedLayer) -> PackedModel {
+    PackedModel {
+        config: ModelConfig::preset("tiny").unwrap(),
+        label: "roundtrip-test".into(),
+        dense: Vec::new(),
+        layers: vec![layer],
+    }
+}
+
+#[test]
+fn property_artifact_spmm_bitwise_across_formats_batches_workers() {
+    check("spak roundtrip == in-memory packed", 12, |g: &mut Gen| {
+        let kind = *g.choose(&["nm", "vnm", "qnm"]);
+        let (n, m) = *g.choose(&[(2usize, 4usize), (4, 8), (8, 16)]);
+        let with_outliers = kind != "vnm" && g.bool();
+        let v = *g.choose(&[2usize, 4]);
+        let rows = v * g.int(1, 16).max(1);
+        let cols = if with_outliers {
+            256 * g.int(1, 2).max(1)
+        } else {
+            m * g.int(2, 16).max(2)
+        };
+        let w = Tensor::new(vec![rows, cols], g.vec_normal(rows * cols));
+        let score = w.map(f32::abs);
+        let k_out = if with_outliers { *g.choose(&[4usize, 16]) } else { 0 };
+
+        let layer = match kind {
+            "nm" => {
+                let l = sparselm::sparse::PackedLinear::compress(&w, &score, n, m, k_out);
+                PackedLayer {
+                    name: "w".into(),
+                    weights: PackedWeights::Nm(l.weights),
+                    outliers: l.outliers,
+                }
+            }
+            "qnm" => {
+                let l = sparselm::sparse::PackedQuantLinear::compress(
+                    &w,
+                    &score,
+                    n,
+                    m,
+                    k_out,
+                    QuantSpec::int4_g128(),
+                );
+                PackedLayer {
+                    name: "w".into(),
+                    weights: PackedWeights::Qnm(l.weights),
+                    outliers: l.outliers,
+                }
+            }
+            _ => {
+                let mask = vnm_select(&score, v, n, m);
+                PackedLayer {
+                    name: "w".into(),
+                    weights: PackedWeights::Vnm(PackedVnm::from_dense_mask(&w, &mask, v, n, m)),
+                    outliers: None,
+                }
+            }
+        };
+
+        let path = tmp(&format!("prop-{kind}-{rows}x{cols}-{n}-{m}-{k_out}.spak"));
+        let model = single_layer_model(layer.clone());
+        let winfo = write_artifact(&path, &model).map_err(|e| e.to_string())?;
+        let (back, rinfo) = read_artifact(&path).map_err(|e| e.to_string())?;
+        if winfo.payload_bytes != rinfo.payload_bytes
+            || winfo.linear_stream_bytes != rinfo.linear_stream_bytes
+        {
+            return Err("write/read accounting disagrees".to_string());
+        }
+        if rinfo.file_bytes != rinfo.expected_file_bytes() {
+            return Err(format!(
+                "file size {} != structural identity {}",
+                rinfo.file_bytes,
+                rinfo.expected_file_bytes()
+            ));
+        }
+        #[cfg(unix)]
+        if !back.all_streams_mapped() {
+            return Err("loaded streams are not mmap-backed".to_string());
+        }
+        let loaded = back.layers.into_iter().next().ok_or("no layer read back")?;
+        let orig = layer.into_kernel().map_err(|e| e.to_string())?;
+        let got = loaded.into_kernel().map_err(|e| e.to_string())?;
+        if orig.operand_bytes() != got.operand_bytes() {
+            return Err(format!(
+                "operand bytes {} != {}",
+                got.operand_bytes(),
+                orig.operand_bytes()
+            ));
+        }
+        for &bsz in &[1usize, 2, 5, 16, 33, 64] {
+            let x = Tensor::new(vec![bsz, cols], g.vec_normal(bsz * cols));
+            for &workers in &[1usize, 2, 3, 8] {
+                let want = spmm_parallel(&x, orig.as_ref(), workers);
+                let have = spmm_parallel(&x, got.as_ref(), workers);
+                if want != have {
+                    return Err(format!(
+                        "{kind} {n}:{m} b={bsz} workers={workers}: mmap spmm diverged"
+                    ));
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+        Ok(())
+    });
+}
+
+#[test]
+fn model_artifact_serves_bitwise_equal_to_in_memory_compress() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(2024);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+
+    for quant in [None, Some(QuantSpec::int4_g128())] {
+        let packed = PackedModel::compress(&params, 8, 16, 16, quant);
+        let path = tmp(&format!("model-{}.spak", quant.is_some()));
+        let winfo = write_artifact(&path, &packed).unwrap();
+
+        // exact on-disk accounting vs the hwsim artifact model
+        assert_eq!(
+            winfo.linear_stream_bytes,
+            model_linear_stream_bytes(&cfg, 8, 16, quant),
+            "quant={quant:?}"
+        );
+        assert_eq!(winfo.outlier_stream_bytes, model_outlier_stream_bytes(&cfg, 16));
+        assert_eq!(winfo.file_bytes, winfo.expected_file_bytes());
+        assert_eq!(winfo.file_bytes, std::fs::metadata(&path).unwrap().len());
+
+        let (back, rinfo) = read_artifact(&path).unwrap();
+        assert_eq!(rinfo.linear_stream_bytes, winfo.linear_stream_bytes);
+        #[cfg(unix)]
+        {
+            assert!(rinfo.mapped, "artifact should be mmap-backed on unix");
+            assert!(back.all_streams_mapped(), "every weight stream should be zero-copy");
+        }
+        let served = back.into_sparse_lm().unwrap();
+
+        let reference = match quant {
+            None => SparseLm::compress(&params, 8, 16, 16),
+            Some(spec) => SparseLm::compress_quant(&params, 8, 16, 16, spec),
+        };
+        // identical streams → identical arithmetic: scoring is bitwise
+        let window: Vec<i32> = (0..cfg.batch * (cfg.seq + 1))
+            .map(|i| (i * 37 % cfg.vocab) as i32)
+            .collect();
+        let want = reference.lm_nll(&window).unwrap();
+        let got = served.lm_nll(&window).unwrap();
+        assert_eq!(got, want, "quant={quant:?}: artifact nll diverged");
+
+        // and generation emits the same tokens greedily
+        let prompt: Vec<i32> = vec![1, 5, 9, 2];
+        let want_toks = reference
+            .generate(&prompt, 16, None, sparselm::eval::argmax)
+            .unwrap();
+        let got_toks = served.generate(&prompt, 16, None, sparselm::eval::argmax).unwrap();
+        assert_eq!(got_toks, want_toks, "quant={quant:?}: artifact decode diverged");
+
+        // zero per-linear heap copies: operand accounting identical too
+        assert_eq!(served.linear_operand_bytes(), reference.linear_operand_bytes());
+        std::fs::remove_file(&path).ok();
+    }
+}
+
+#[test]
+fn dense_params_roundtrip_exact() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(7);
+    let params = ParamSet::init(&cfg, &mut rng);
+    let packed = PackedModel::compress(&params, 8, 16, 0, None);
+    let path = tmp("dense-exact.spak");
+    write_artifact(&path, &packed).unwrap();
+    let (back, _) = read_artifact(&path).unwrap();
+    for (name, t) in &back.dense {
+        assert_eq!(t, params.get(name), "{name} not bit-exact");
+    }
+    assert_eq!(back.dense.len(), 2 + 2 * cfg.n_layers); // tok_emb, ln_f, ln1/ln2
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn container_failure_modes_are_typed() {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(9);
+    let params = ParamSet::init(&cfg, &mut rng);
+    let packed = PackedModel::compress(&params, 8, 16, 0, None);
+    let path = tmp("typed-errors.spak");
+    let info = write_artifact(&path, &packed).unwrap();
+    let good = std::fs::read(&path).unwrap();
+    assert_eq!(good.len() as u64, info.file_bytes);
+
+    // wrong magic (a checkpoint handed to the artifact reader)
+    let mut bytes = good.clone();
+    bytes[..4].copy_from_slice(b"SPLM");
+    std::fs::write(&path, &bytes).unwrap();
+    match read_artifact(&path).unwrap_err().downcast_ref::<sparselm::Error>() {
+        Some(sparselm::Error::BadMagic { want, got, .. }) => {
+            assert_eq!(want, b"SPAK");
+            assert_eq!(got, b"SPLM");
+        }
+        other => panic!("want BadMagic, got {other:?}"),
+    }
+
+    // future version
+    let mut bytes = good.clone();
+    bytes[4..8].copy_from_slice(&7u32.to_le_bytes());
+    std::fs::write(&path, &bytes).unwrap();
+    match read_artifact(&path).unwrap_err().downcast_ref::<sparselm::Error>() {
+        Some(sparselm::Error::BadVersion { want, got, .. }) => {
+            assert_eq!((*want, *got), (sparselm::store::VERSION, 7));
+        }
+        other => panic!("want BadVersion, got {other:?}"),
+    }
+
+    // flipped payload byte
+    let mut bytes = good.clone();
+    let mid = bytes.len() - 1000;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(
+        matches!(
+            read_artifact(&path).unwrap_err().downcast_ref::<sparselm::Error>(),
+            Some(sparselm::Error::ChecksumMismatch { .. })
+        ),
+        "flipped byte should be a typed checksum mismatch"
+    );
+
+    // truncated tail
+    std::fs::write(&path, &good[..good.len() / 2]).unwrap();
+    let err = read_artifact(&path).unwrap_err();
+    assert!(
+        matches!(
+            err.downcast_ref::<sparselm::Error>(),
+            Some(sparselm::Error::Truncated { .. })
+                | Some(sparselm::Error::ChecksumMismatch { .. })
+        ),
+        "truncated file should be typed, got {err:?}"
+    );
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn raw_parts_reject_corrupt_stream_lengths() {
+    // a lying index cannot smuggle short streams past the readers
+    let mut rng = Rng::new(5);
+    let w = Tensor::randn(vec![8, 64], 0.05, &mut rng);
+    let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+    let p = PackedNm::from_dense_mask(&w, &mask, 8, 16);
+    assert!(PackedNm::from_raw_parts(
+        8,
+        16,
+        8,
+        64,
+        p.values_raw()[..10].to_vec().into(),
+        p.meta_words().to_vec().into()
+    )
+    .is_err());
+    let spec = PackedQnm::fit_spec(QuantSpec::int4_g128(), 8, 16, 64);
+    let q = PackedQnm::from_dense_mask(&w, &mask, 8, 16, spec);
+    assert!(PackedQnm::from_raw_parts(
+        8,
+        16,
+        8,
+        64,
+        spec,
+        q.codes_raw().to_vec().into(),
+        vec![0u16; 1].into(),
+        q.meta_words().to_vec().into()
+    )
+    .is_err());
+}
