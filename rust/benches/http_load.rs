@@ -1,0 +1,170 @@
+//! Load generator for the HTTP front end: boots a tiny packed model
+//! behind `serve_generate` + `attach_http`, drives concurrent
+//! keep-alive `POST /score` clients, scrapes `/metrics` mid-flight,
+//! and emits `BENCH_http.json` for CI's bench-gate job.
+//!
+//! Gated points (`bench/baseline.json`, schema in docs/BENCHMARKS.md):
+//!
+//! * `error_rate` == 0 — every request under load answered 200
+//! * `requests_exact` == 1 — the server's `http_requests_total`
+//!   counter for the score route equals the generator's sent count
+//!   EXACTLY (no lost or double-counted requests)
+//! * `scrape_valid` == 1 — the `/metrics` page taken *during* live
+//!   load parses under the strict in-repo Prometheus 0.0.4 parser
+//! * `http_p99_us` — tail latency trajectory point under load
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sparselm::bench::{fast_mode, BenchReport, TablePrinter, WORLD_SEED};
+use sparselm::data::{CorpusKind, CorpusSpec, Tokenizer, World};
+use sparselm::model::{ModelConfig, ParamSet, SparseLm};
+use sparselm::serve::{
+    serve_generate, spmm_generator, spmm_scorer, HttpClient, HttpConfig, ServerConfig,
+};
+use sparselm::util::prom;
+use sparselm::util::Rng;
+
+const CLIENTS: usize = 4;
+
+fn main() -> sparselm::Result<()> {
+    sparselm::util::logging::init();
+    let mut report = BenchReport::new("http");
+    let per_client = if fast_mode() { 10usize } else { 50 };
+
+    // tiny packed model: big enough that /score does real spmm work,
+    // small enough that the fast-mode CI run finishes in seconds
+    let mut cfg = ModelConfig::preset("tiny").expect("tiny preset");
+    cfg.n_layers = 2;
+    cfg.seq = 48;
+    cfg.batch = 4;
+    let mut rng = Rng::new(WORLD_SEED);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let lm = Arc::new(SparseLm::compress(&params, 8, 16, 16));
+
+    let world = World::new(7);
+    let text = CorpusSpec::new(CorpusKind::Wiki, 8_000, 3).generate(&world);
+    let tok = Arc::new(Tokenizer::fit(&text, cfg.vocab));
+
+    let handle = serve_generate(
+        spmm_scorer(Arc::clone(&lm)),
+        spmm_generator(Arc::clone(&lm), 4),
+        tok,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 16,
+            max_batch: cfg.batch,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )?;
+    let http = handle.attach_http(HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    })?;
+    let addr = http.addr;
+    println!("\n# http_load — {CLIENTS} clients x {per_client} POST /score on {addr}\n");
+
+    // ---- drive the load: keep-alive clients, one thread each --------
+    let sent = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let t_start = Instant::now();
+    let mut workers = Vec::new();
+    for c in 0..CLIENTS {
+        let (sent, errors) = (Arc::clone(&sent), Arc::clone(&errors));
+        workers.push(std::thread::spawn(move || {
+            let mut lat = Vec::with_capacity(per_client);
+            let mut cl = HttpClient::connect(addr).expect("connect");
+            cl.set_timeout(Duration::from_secs(120)).expect("timeout");
+            for i in 0..per_client {
+                let body =
+                    format!("{{\"text\": \"client {c} sentence {i} about the quick brown fox\"}}");
+                let t0 = Instant::now();
+                sent.fetch_add(1, Ordering::SeqCst);
+                match cl.post_json("/score", &body) {
+                    Ok(reply) if reply.status == 200 => lat.push(t0.elapsed()),
+                    Ok(reply) => {
+                        errors.fetch_add(1, Ordering::SeqCst);
+                        eprintln!("client {c}: status {} on request {i}", reply.status);
+                    }
+                    Err(e) => {
+                        errors.fetch_add(1, Ordering::SeqCst);
+                        eprintln!("client {c}: io error on request {i}: {e}");
+                    }
+                }
+            }
+            lat
+        }));
+    }
+
+    // ---- scrape /metrics while the load is live ---------------------
+    std::thread::sleep(Duration::from_millis(50));
+    let mut scraper = HttpClient::connect(addr)?;
+    scraper.set_timeout(Duration::from_secs(30))?;
+    let mid = scraper.get("/metrics")?;
+    let mid_scrape = prom::parse_text(&mid.text());
+    let scrape_valid = match &mid_scrape {
+        Ok(_) => 1.0,
+        Err(e) => {
+            eprintln!("mid-load /metrics scrape INVALID: {e}");
+            0.0
+        }
+    };
+
+    let mut lat: Vec<Duration> = Vec::new();
+    for w in workers {
+        lat.extend(w.join().expect("client thread"));
+    }
+    let elapsed = t_start.elapsed().as_secs_f64();
+    let sent = sent.load(Ordering::SeqCst);
+    let errors = errors.load(Ordering::SeqCst);
+
+    // ---- exactness: the server counted what the generator sent ------
+    let fin = scraper.get("/metrics")?;
+    let fin_scrape = prom::parse_text(&fin.text())
+        .map_err(|e| anyhow::anyhow!("final scrape invalid: {e}"))?;
+    let counted = fin_scrape.sum("http_requests_total", &[("route", "score")]);
+    let requests_exact = if counted == sent as f64 { 1.0 } else { 0.0 };
+    if requests_exact != 1.0 {
+        eprintln!("http_requests_total{{route=score}} {counted} != sent {sent}");
+    }
+    // counters must be monotone between the two live scrapes
+    if let Ok(m) = &mid_scrape {
+        let before = m.sum("http_requests_total", &[]);
+        let after = fin_scrape.sum("http_requests_total", &[]);
+        assert!(after >= before, "counter went backwards: {after} < {before}");
+    }
+
+    lat.sort();
+    let pct = |p: f64| -> f64 {
+        if lat.is_empty() {
+            return 0.0;
+        }
+        let idx = ((p / 100.0) * (lat.len() - 1) as f64).round() as usize;
+        lat[idx.min(lat.len() - 1)].as_secs_f64()
+    };
+    let (p50, p99) = (pct(50.0), pct(99.0));
+    let rps = sent as f64 / elapsed;
+    let err_rate = errors as f64 / sent as f64;
+
+    let t = TablePrinter::new(&["metric", "value"], &[26, 18]);
+    t.row(&["sent".into(), format!("{sent}")]);
+    t.row(&["errors".into(), format!("{errors}")]);
+    t.row(&["server counted (score)".into(), format!("{counted}")]);
+    t.row(&["p50".into(), format!("{:.1} us", p50 * 1e6)]);
+    t.row(&["p99".into(), format!("{:.1} us", p99 * 1e6)]);
+    t.row(&["throughput".into(), format!("{rps:.1} req/s")]);
+
+    report.lower("http_p50_us", p50 * 1e6, "us");
+    report.lower("http_p99_us", p99 * 1e6, "us");
+    report.higher("req_per_s", rps, "req/s");
+    report.lower("error_rate", err_rate, "ratio");
+    report.higher("scrape_valid", scrape_valid, "bool");
+    report.higher("requests_exact", requests_exact, "bool");
+
+    http.shutdown()?;
+    handle.shutdown()?;
+    report.emit()?;
+    Ok(())
+}

@@ -12,7 +12,8 @@
 //! sparselm info     --model tiny
 //! sparselm quant    --ckpt runs/tiny.ckpt --bits 4 --group 128 --outliers 16
 //! sparselm owl      --ckpt runs/tiny.ckpt --m 16 --keep 0.5
-//! sparselm serve    --model tiny --ckpt runs/tiny-8x16.ckpt --addr 127.0.0.1:7433
+//! sparselm serve    --model tiny --ckpt runs/tiny-8x16.ckpt --addr 127.0.0.1:7433 \
+//!                   --http 127.0.0.1:7080
 //! sparselm generate --model tiny --random --prompt "the quick brown" --max-tokens 32
 //! sparselm serve-bench --addr 127.0.0.1:7433 --clients 4 --requests 50
 //! ```
@@ -86,7 +87,10 @@ subcommands:
             checkpoint — requires --repack to acknowledge the lossy magnitude
             selection — spmm-q4 additionally int4-quantizes the kept values
             (--qbits/--qgroup), dense serves exact weights via the host
-            forward, pjrt uses the AOT artifacts, scoring only)
+            forward, pjrt uses the AOT artifacts, scoring only; --http ADDR
+            adds the HTTP front end: POST /score, POST /generate, GET /health,
+            Prometheus GET /metrics, 429 backpressure via --http-max-inflight,
+            graceful SIGTERM drain)
   generate  one-shot KV-cached generation from a checkpoint or a .spak
             artifact (--model x.spak mmaps the packed model; --random for
             an offline stand-in; --quant for the int4 packed format;

@@ -2,11 +2,14 @@
 //! front end.
 //!
 //! `serve` loads a (compressed) checkpoint and exposes the scoring +
-//! generation protocol on a TCP port; `generate` runs the same
-//! KV-cached decode engine in-process for one prompt; `serve-bench` is
-//! the matching closed-loop load generator reporting latency
-//! percentiles and batch fill — the numbers a deployment of the paper's
-//! sparse models would be judged on.
+//! generation protocol on a TCP port — and, with `--http ADDR`, the
+//! same model over the production HTTP front end (`POST /score`,
+//! `POST /generate`, `GET /health`, Prometheus `GET /metrics`) with a
+//! SIGTERM-driven graceful drain; `generate` runs the same KV-cached
+//! decode engine in-process for one prompt; `serve-bench` is the
+//! matching closed-loop load generator reporting latency percentiles
+//! and batch fill — the numbers a deployment of the paper's sparse
+//! models would be judged on.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -16,8 +19,8 @@ use crate::data::{CorpusKind, CorpusSpec, Tokenizer, World};
 use crate::eval::Sampler;
 use crate::model::{load_checkpoint, ModelConfig, ParamSet, SparseLm};
 use crate::serve::{
-    pjrt_scorer, serve, serve_generate, spmm_generator, spmm_scorer, ServeClient,
-    ServerConfig,
+    pjrt_scorer, serve, serve_generate, spmm_generator, spmm_scorer, HttpConfig,
+    ServeClient, ServerConfig, ServerHandle,
 };
 use crate::util::args::Args;
 use crate::util::Rng;
@@ -49,6 +52,64 @@ fn require_repack(args: &Args, backend: &str) -> crate::Result<()> {
                artifact with --model <x.spak>",
     })
     .context(format!("--backend {backend} on a dense checkpoint")))
+}
+
+/// `--http*` flags → front-end config; `None` when `--http` is absent.
+fn http_cfg(args: &Args) -> crate::Result<Option<HttpConfig>> {
+    let Some(addr) = args.get("http") else {
+        return Ok(None);
+    };
+    let mut cfg = HttpConfig::default();
+    // bare `--http` (no value) parses as "true": keep the default addr
+    if addr != "true" {
+        cfg.addr = addr.to_string();
+    }
+    cfg.max_conns = args.get_usize("http-max-conns", cfg.max_conns)?;
+    cfg.max_body = args.get_usize("http-max-body", cfg.max_body)?;
+    cfg.max_head = args.get_usize("http-max-head", cfg.max_head)?;
+    cfg.max_inflight = args.get_usize("http-max-inflight", cfg.max_inflight)?;
+    cfg.read_timeout = Duration::from_millis(args.get_u64("http-read-timeout-ms", 5_000)?);
+    cfg.write_timeout =
+        Duration::from_millis(args.get_u64("http-write-timeout-ms", 5_000)?);
+    cfg.retry_after_secs = args.get_u64("http-retry-after", cfg.retry_after_secs)?;
+    cfg.drain_grace = Duration::from_millis(args.get_u64("http-drain-grace-ms", 5_000)?);
+    Ok(Some(cfg))
+}
+
+/// Block on the TCP handle; with `--http`, run the HTTP front end
+/// alongside it and install the SIGTERM/SIGINT graceful-drain sequence
+/// (refuse new HTTP work → finish in-flight → stop HTTP → stop TCP).
+fn run_front_ends(handle: ServerHandle, http: Option<HttpConfig>) -> crate::Result<()> {
+    let Some(cfg) = http else {
+        handle.join()?;
+        println!("server stopped");
+        return Ok(());
+    };
+    let http_handle = Arc::new(handle.attach_http(cfg)?);
+    println!(
+        "http front end on {} — POST /score, POST /generate, GET /health, GET /metrics",
+        http_handle.addr
+    );
+    crate::util::signal::install();
+    let tcp_addr = handle.addr;
+    let watcher_http = Arc::clone(&http_handle);
+    std::thread::spawn(move || {
+        while !crate::util::signal::termination_requested() {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        // drain first (in-flight HTTP requests still need the workers),
+        // then stop the TCP server, which unblocks the join below
+        let _ = watcher_http.shutdown();
+        if let Ok(mut c) = ServeClient::connect(tcp_addr) {
+            let _ = c.shutdown();
+        }
+    });
+    handle.join()?;
+    // TCP stopped via a client's shutdown op rather than a signal:
+    // bring the HTTP side down too (no-op after the watcher's call)
+    http_handle.shutdown()?;
+    println!("server stopped");
+    Ok(())
 }
 
 pub fn cmd_serve(args: Args) -> crate::Result<()> {
@@ -108,9 +169,7 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
              ping/nll/choice/generate/stats/shutdown",
             handle.addr
         );
-        handle.join()?;
-        println!("server stopped");
-        return Ok(());
+        return run_front_ends(handle, http_cfg(&args)?);
     }
 
     let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
@@ -184,9 +243,7 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
             ""
         }
     );
-    handle.join()?;
-    println!("server stopped");
-    Ok(())
+    run_front_ends(handle, http_cfg(&args)?)
 }
 
 /// `sparselm generate` — one-shot KV-cached generation, in-process (the

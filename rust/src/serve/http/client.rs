@@ -1,0 +1,153 @@
+//! Minimal blocking HTTP/1.1 client — the test harness and load
+//! generator's side of the wire.
+//!
+//! Deliberately not a general client: it speaks exactly what the front
+//! end serves (keep-alive, `Content-Length` bodies) plus the raw-bytes
+//! escape hatch ([`HttpClient::send_raw`]) the conformance tests use to
+//! send malformed and pipelined traffic. Replies are parsed with the
+//! same head-scanning primitive as the server
+//! ([`super::parser::find_head_end`]), and leftover bytes stay in the
+//! client buffer so pipelined responses read back one at a time.
+
+use std::io::{Read, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::parser::find_head_end;
+use crate::util::json::Json;
+
+/// One parsed HTTP response.
+#[derive(Debug, Clone)]
+pub struct HttpReply {
+    pub status: u16,
+    /// header pairs with lowercased names
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpReply {
+    /// First value of `name` (ASCII case-insensitive).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn text(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+
+    pub fn json(&self) -> Result<Json, String> {
+        Json::parse(&self.text()).map_err(|e| format!("bad json body: {e}"))
+    }
+}
+
+/// Blocking client over one keep-alive connection.
+pub struct HttpClient {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl HttpClient {
+    pub fn connect(addr: impl ToSocketAddrs) -> std::io::Result<HttpClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(HttpClient {
+            stream,
+            buf: Vec::new(),
+        })
+    }
+
+    /// Cap how long a single reply read may block.
+    pub fn set_timeout(&mut self, d: Duration) -> std::io::Result<()> {
+        self.stream.set_read_timeout(Some(d))
+    }
+
+    /// `GET path` and read the reply.
+    pub fn get(&mut self, path: &str) -> std::io::Result<HttpReply> {
+        let req = format!("GET {path} HTTP/1.1\r\nHost: sparselm\r\n\r\n");
+        self.send_raw(req.as_bytes())?;
+        self.read_reply()
+    }
+
+    /// `POST path` with a JSON body and read the reply.
+    pub fn post_json(&mut self, path: &str, body: &str) -> std::io::Result<HttpReply> {
+        let req = format!(
+            "POST {path} HTTP/1.1\r\nHost: sparselm\r\n\
+             Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len(),
+        );
+        self.send_raw(req.as_bytes())?;
+        self.read_reply()
+    }
+
+    /// Write raw bytes — the conformance tests' malformed traffic.
+    pub fn send_raw(&mut self, bytes: &[u8]) -> std::io::Result<()> {
+        self.stream.write_all(bytes)?;
+        self.stream.flush()
+    }
+
+    /// Read exactly one response (head + `Content-Length` body); bytes
+    /// past it stay buffered for the next call (pipelining).
+    pub fn read_reply(&mut self) -> std::io::Result<HttpReply> {
+        let head_end = loop {
+            if let Some(end) = find_head_end(&self.buf) {
+                break end;
+            }
+            self.fill()?;
+        };
+        let head = String::from_utf8_lossy(&self.buf[..head_end]).into_owned();
+        let mut lines = head.lines();
+        let status_line = lines.next().unwrap_or("");
+        let status = status_line
+            .split(' ')
+            .nth(1)
+            .and_then(|s| s.parse::<u16>().ok())
+            .ok_or_else(|| {
+                std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("bad status line {status_line:?}"),
+                )
+            })?;
+        let mut headers = Vec::new();
+        for line in lines {
+            if line.is_empty() {
+                break;
+            }
+            if let Some((name, value)) = line.split_once(':') {
+                headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+            }
+        }
+        let len = headers
+            .iter()
+            .find(|(n, _)| n == "content-length")
+            .and_then(|(_, v)| v.parse::<usize>().ok())
+            .unwrap_or(0);
+        while self.buf.len() < head_end + len {
+            self.fill()?;
+        }
+        let body = self.buf[head_end..head_end + len].to_vec();
+        self.buf.drain(..head_end + len);
+        Ok(HttpReply {
+            status,
+            headers,
+            body,
+        })
+    }
+
+    fn fill(&mut self) -> std::io::Result<()> {
+        let mut chunk = [0u8; 4096];
+        let n = self.stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed mid-reply",
+            ));
+        }
+        self.buf.extend_from_slice(&chunk[..n]);
+        Ok(())
+    }
+}

@@ -1,0 +1,119 @@
+//! Admission control: a lock-free in-flight gate.
+//!
+//! The HTTP front end bounds *concurrently executing* model requests
+//! (`/score`, `/generate`) separately from open sockets: a Prometheus
+//! scrape or health probe must never queue behind a slow decode, and a
+//! burst of scoring traffic must turn into fast `429 + Retry-After`
+//! rejections instead of an unbounded pile of blocked threads. The
+//! [`Gate`] is that bound — acquire on admission, release on drop, so
+//! an early return or handler panic can never leak a slot.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Counting admission gate with a hard capacity.
+#[derive(Debug)]
+pub struct Gate {
+    cap: usize,
+    inflight: AtomicUsize,
+}
+
+impl Gate {
+    pub fn new(cap: usize) -> Arc<Gate> {
+        Arc::new(Gate {
+            cap: cap.max(1),
+            inflight: AtomicUsize::new(0),
+        })
+    }
+
+    /// Try to claim a slot. `None` means the caller must reject with
+    /// 429 — there is deliberately no blocking variant: backpressure
+    /// is pushed to the client, not hidden in a queue.
+    pub fn try_acquire(self: &Arc<Gate>) -> Option<GateGuard> {
+        let mut cur = self.inflight.load(Ordering::Relaxed);
+        loop {
+            if cur >= self.cap {
+                return None;
+            }
+            match self.inflight.compare_exchange_weak(
+                cur,
+                cur + 1,
+                Ordering::AcqRel,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return Some(GateGuard { gate: Arc::clone(self) }),
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    /// Requests currently holding a slot (the `http_inflight` gauge).
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::Acquire)
+    }
+
+    /// Configured capacity (the `http_inflight_limit` gauge).
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+}
+
+/// RAII slot: releases the gate when dropped.
+pub struct GateGuard {
+    gate: Arc<Gate>,
+}
+
+impl Drop for GateGuard {
+    fn drop(&mut self) {
+        self.gate.inflight.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_admits_up_to_cap_and_releases_on_drop() {
+        let g = Gate::new(2);
+        let a = g.try_acquire().unwrap();
+        let b = g.try_acquire().unwrap();
+        assert_eq!(g.inflight(), 2);
+        assert!(g.try_acquire().is_none(), "over cap must reject");
+        drop(a);
+        assert_eq!(g.inflight(), 1);
+        let c = g.try_acquire();
+        assert!(c.is_some(), "slot freed by drop is reusable");
+        drop(b);
+        drop(c);
+        assert_eq!(g.inflight(), 0);
+    }
+
+    #[test]
+    fn gate_is_race_free_under_contention() {
+        let g = Gate::new(4);
+        let peak = Arc::new(AtomicUsize::new(0));
+        let admitted = Arc::new(AtomicUsize::new(0));
+        let mut threads = Vec::new();
+        for _ in 0..8 {
+            let g = Arc::clone(&g);
+            let peak = Arc::clone(&peak);
+            let admitted = Arc::clone(&admitted);
+            threads.push(std::thread::spawn(move || {
+                for _ in 0..200 {
+                    if let Some(_slot) = g.try_acquire() {
+                        admitted.fetch_add(1, Ordering::Relaxed);
+                        peak.fetch_max(g.inflight(), Ordering::Relaxed);
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert_eq!(g.inflight(), 0, "all slots released");
+        assert!(peak.load(Ordering::Relaxed) <= 4, "cap never exceeded");
+        assert!(admitted.load(Ordering::Relaxed) > 0);
+    }
+}

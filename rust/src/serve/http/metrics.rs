@@ -1,0 +1,484 @@
+//! `/metrics` — Prometheus text exposition for the whole serving stack.
+//!
+//! One render pulls together every telemetry source the process has:
+//! the global kernel counters ([`crate::util::perf`], via its
+//! [`PromExport`] impl), the line-protocol server counters
+//! ([`crate::serve::ServerStats`]), the scoring-queue and decode
+//! schedulers (via [`crate::serve::Service`]), and the HTTP front end's
+//! own [`HttpStats`]. Families are properly typed — monotone totals are
+//! counters, point-in-time readings are gauges, latencies and the
+//! decode batch-fill distribution are real histograms with cumulative
+//! `le` buckets — because a mistyped family silently breaks `rate()`
+//! in every dashboard built on it.
+//!
+//! The page is validated in-repo: the scrape tests and the `http_load`
+//! bench feed every emitted page back through
+//! [`crate::util::prom::parse_text`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::limits::Gate;
+use crate::serve::service::Service;
+use crate::util::prom::{PromExport, PromKind, PromWriter};
+use crate::util::timer::LatencyRing;
+
+/// Request-duration histogram bounds (seconds). Spread for a serving
+/// path whose fast ops are sub-millisecond and whose generate calls can
+/// run for seconds.
+const BOUNDS: [f64; 7] = [0.001, 0.005, 0.025, 0.1, 0.5, 2.5, 10.0];
+
+/// Retained latency samples for the p50/p99 gauges (recent window, the
+/// operationally useful read — matches `GenScheduler`'s ring).
+const LATENCY_WINDOW: usize = 4096;
+
+struct Inner {
+    /// `(route label, status code)` → request count
+    by_route: BTreeMap<(&'static str, u16), u64>,
+    latency: LatencyRing,
+    /// per-bucket (non-cumulative) counts; last slot is the overflow
+    bucket_counts: [u64; BOUNDS.len() + 1],
+    duration_sum: f64,
+    duration_count: u64,
+}
+
+/// HTTP front-end counters, shared by every connection thread.
+pub struct HttpStats {
+    connections: AtomicU64,
+    admitted: AtomicU64,
+    rejected: AtomicU64,
+    inner: Mutex<Inner>,
+}
+
+impl Default for HttpStats {
+    fn default() -> HttpStats {
+        HttpStats {
+            connections: AtomicU64::new(0),
+            admitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            inner: Mutex::new(Inner {
+                by_route: BTreeMap::new(),
+                latency: LatencyRing::new(LATENCY_WINDOW),
+                bucket_counts: [0; BOUNDS.len() + 1],
+                duration_sum: 0.0,
+                duration_count: 0,
+            }),
+        }
+    }
+}
+
+impl HttpStats {
+    /// One socket accepted.
+    pub fn record_connection(&self) {
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One model request admitted through the gate.
+    pub fn record_admitted(&self) {
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One model request rejected with 429.
+    pub fn record_rejected(&self) {
+        self.rejected.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// One request answered: count it under `{route, code}` and feed
+    /// the duration into the histogram + percentile window.
+    pub fn observe(&self, route: &'static str, status: u16, took: Duration) {
+        let secs = took.as_secs_f64();
+        let mut inner = self.inner.lock().unwrap();
+        *inner.by_route.entry((route, status)).or_insert(0) += 1;
+        inner.latency.record_secs(secs);
+        let slot = BOUNDS
+            .iter()
+            .position(|&b| secs <= b)
+            .unwrap_or(BOUNDS.len());
+        inner.bucket_counts[slot] += 1;
+        inner.duration_sum += secs;
+        inner.duration_count += 1;
+    }
+
+    pub fn connections(&self) -> u64 {
+        self.connections.load(Ordering::Relaxed)
+    }
+
+    pub fn admitted(&self) -> u64 {
+        self.admitted.load(Ordering::Relaxed)
+    }
+
+    pub fn rejected(&self) -> u64 {
+        self.rejected.load(Ordering::Relaxed)
+    }
+
+    /// Total requests answered, every route and status included — the
+    /// exactness contract with the load generator.
+    pub fn requests_total(&self) -> u64 {
+        self.inner.lock().unwrap().by_route.values().sum()
+    }
+
+    /// Latency percentile (seconds) over the retained window.
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.inner.lock().unwrap().latency.percentile(p)
+    }
+}
+
+/// Render the complete scrape page.
+pub fn render(service: &Service, http: &HttpStats, gate: &Gate, draining: bool) -> String {
+    let mut w = PromWriter::new();
+
+    // ---- kernel telemetry (global perf counters) ----------------------
+    crate::util::perf::snapshot().prom_export(&mut w);
+
+    // ---- line-protocol server + shared op counters --------------------
+    let ss = service.server_stats();
+    w.metric(
+        "sparselm_requests_total",
+        "line-protocol requests received over TCP",
+        PromKind::Counter,
+    );
+    w.sample(
+        "sparselm_requests_total",
+        &[],
+        ss.requests.load(Ordering::Relaxed) as f64,
+    );
+    w.metric(
+        "sparselm_request_errors_total",
+        "requests rejected as malformed",
+        PromKind::Counter,
+    );
+    w.sample(
+        "sparselm_request_errors_total",
+        &[],
+        ss.errors.load(Ordering::Relaxed) as f64,
+    );
+    w.metric(
+        "sparselm_tcp_connections_total",
+        "TCP connections accepted by the line-protocol server",
+        PromKind::Counter,
+    );
+    w.sample(
+        "sparselm_tcp_connections_total",
+        &[],
+        ss.connections.load(Ordering::Relaxed) as f64,
+    );
+    w.metric(
+        "sparselm_ops_total",
+        "model operations executed, by op (both ingresses)",
+        PromKind::Counter,
+    );
+    for (op, count) in [
+        ("nll", ss.nll_ops.load(Ordering::Relaxed)),
+        ("choice", ss.choice_ops.load(Ordering::Relaxed)),
+        ("generate", ss.generate_ops.load(Ordering::Relaxed)),
+    ] {
+        w.sample("sparselm_ops_total", &[("op", op)], count as f64);
+    }
+
+    // ---- scoring queue ------------------------------------------------
+    let bs = service.batcher_stats();
+    w.metric(
+        "sparselm_score_batches_total",
+        "coalesced scoring batches executed",
+        PromKind::Counter,
+    );
+    w.sample("sparselm_score_batches_total", &[], bs.batches as f64);
+    w.metric(
+        "sparselm_score_rows_total",
+        "scoring rows executed across all batches",
+        PromKind::Counter,
+    );
+    w.sample("sparselm_score_rows_total", &[], bs.rows_scored as f64);
+    w.metric(
+        "sparselm_score_timeout_flushes_total",
+        "batches flushed by the max-wait deadline rather than fill",
+        PromKind::Counter,
+    );
+    w.sample(
+        "sparselm_score_timeout_flushes_total",
+        &[],
+        bs.timeout_flushes as f64,
+    );
+    w.metric(
+        "sparselm_score_queue_depth",
+        "scoring requests currently queued",
+        PromKind::Gauge,
+    );
+    w.sample("sparselm_score_queue_depth", &[], service.queue_depth() as f64);
+
+    // ---- decode scheduler ---------------------------------------------
+    if service.has_generator() {
+        let gs = service.gen_stats();
+        w.metric(
+            "sparselm_gen_requests_total",
+            "generation requests accepted by the scheduler",
+            PromKind::Counter,
+        );
+        w.sample("sparselm_gen_requests_total", &[], gs.requests as f64);
+        w.metric(
+            "sparselm_gen_completed_total",
+            "generation requests completed",
+            PromKind::Counter,
+        );
+        w.sample("sparselm_gen_completed_total", &[], gs.completed as f64);
+        w.metric(
+            "sparselm_decode_steps_total",
+            "shared decode steps executed",
+            PromKind::Counter,
+        );
+        w.sample("sparselm_decode_steps_total", &[], gs.decode_steps as f64);
+        w.metric(
+            "sparselm_tokens_generated_total",
+            "tokens emitted by the decode engine",
+            PromKind::Counter,
+        );
+        w.sample(
+            "sparselm_tokens_generated_total",
+            &[],
+            gs.tokens_generated as f64,
+        );
+        w.metric(
+            "sparselm_prefill_seconds_total",
+            "wall seconds spent in prompt prefill",
+            PromKind::Counter,
+        );
+        w.sample(
+            "sparselm_prefill_seconds_total",
+            &[],
+            gs.prefill_nanos as f64 / 1e9,
+        );
+        w.metric(
+            "sparselm_decode_seconds_total",
+            "wall seconds spent in shared decode steps",
+            PromKind::Counter,
+        );
+        w.sample(
+            "sparselm_decode_seconds_total",
+            &[],
+            gs.decode_nanos as f64 / 1e9,
+        );
+        w.metric(
+            "sparselm_decode_step_p50_us",
+            "median decode-step latency over the recent window",
+            PromKind::Gauge,
+        );
+        w.sample("sparselm_decode_step_p50_us", &[], gs.decode_p50_us);
+        w.metric(
+            "sparselm_decode_step_p99_us",
+            "p99 decode-step latency over the recent window",
+            PromKind::Gauge,
+        );
+        w.sample("sparselm_decode_step_p99_us", &[], gs.decode_p99_us);
+
+        // batch-fill distribution: `batch_fill[i]` = steps run with i
+        // sequences in flight, re-shaped into a cumulative histogram
+        w.metric(
+            "sparselm_decode_batch_fill",
+            "decode steps by number of in-flight sequences",
+            PromKind::Histogram,
+        );
+        let mut cum = 0u64;
+        let mut fill_sum = 0u64;
+        for (fill, &steps) in gs.batch_fill.iter().enumerate() {
+            cum += steps;
+            fill_sum += fill as u64 * steps;
+            let le = fill.to_string();
+            w.sample(
+                "sparselm_decode_batch_fill_bucket",
+                &[("le", &le)],
+                cum as f64,
+            );
+        }
+        w.sample(
+            "sparselm_decode_batch_fill_bucket",
+            &[("le", "+Inf")],
+            cum as f64,
+        );
+        w.sample("sparselm_decode_batch_fill_sum", &[], fill_sum as f64);
+        w.sample("sparselm_decode_batch_fill_count", &[], cum as f64);
+    }
+
+    // ---- HTTP front end -----------------------------------------------
+    w.metric(
+        "http_requests_total",
+        "HTTP requests answered, by route and status code",
+        PromKind::Counter,
+    );
+    {
+        let inner = http.inner.lock().unwrap();
+        for (&(route, status), &count) in &inner.by_route {
+            let code = status.to_string();
+            w.sample(
+                "http_requests_total",
+                &[("route", route), ("code", &code)],
+                count as f64,
+            );
+        }
+    }
+    w.metric(
+        "http_connections_total",
+        "HTTP connections accepted",
+        PromKind::Counter,
+    );
+    w.sample("http_connections_total", &[], http.connections() as f64);
+    w.metric(
+        "http_admitted_total",
+        "model requests admitted through the in-flight gate",
+        PromKind::Counter,
+    );
+    w.sample("http_admitted_total", &[], http.admitted() as f64);
+    w.metric(
+        "http_rejected_total",
+        "model requests rejected with 429 (gate full)",
+        PromKind::Counter,
+    );
+    w.sample("http_rejected_total", &[], http.rejected() as f64);
+    w.metric(
+        "http_inflight",
+        "model requests currently executing",
+        PromKind::Gauge,
+    );
+    w.sample("http_inflight", &[], gate.inflight() as f64);
+    w.metric(
+        "http_inflight_limit",
+        "configured in-flight admission cap",
+        PromKind::Gauge,
+    );
+    w.sample("http_inflight_limit", &[], gate.cap() as f64);
+    w.metric(
+        "http_draining",
+        "1 while the server is draining, else 0",
+        PromKind::Gauge,
+    );
+    w.sample("http_draining", &[], if draining { 1.0 } else { 0.0 });
+
+    w.metric(
+        "http_request_duration_seconds",
+        "request wall time from full receipt to response written",
+        PromKind::Histogram,
+    );
+    {
+        let inner = http.inner.lock().unwrap();
+        let mut cum = 0u64;
+        for (i, &bound) in BOUNDS.iter().enumerate() {
+            cum += inner.bucket_counts[i];
+            let le = format!("{bound}");
+            w.sample(
+                "http_request_duration_seconds_bucket",
+                &[("le", &le)],
+                cum as f64,
+            );
+        }
+        cum += inner.bucket_counts[BOUNDS.len()];
+        w.sample(
+            "http_request_duration_seconds_bucket",
+            &[("le", "+Inf")],
+            cum as f64,
+        );
+        w.sample(
+            "http_request_duration_seconds_sum",
+            &[],
+            inner.duration_sum,
+        );
+        w.sample(
+            "http_request_duration_seconds_count",
+            &[],
+            inner.duration_count as f64,
+        );
+    }
+    w.metric(
+        "http_request_p50_us",
+        "median request latency over the recent window",
+        PromKind::Gauge,
+    );
+    w.sample("http_request_p50_us", &[], http.latency_percentile(50.0) * 1e6);
+    w.metric(
+        "http_request_p99_us",
+        "p99 request latency over the recent window",
+        PromKind::Gauge,
+    );
+    w.sample("http_request_p99_us", &[], http.latency_percentile(99.0) * 1e6);
+
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::batcher::{Batcher, BatcherConfig};
+    use crate::util::prom::parse_text;
+    use std::sync::Arc;
+
+    fn test_service() -> Service {
+        Service::new(
+            Arc::new(Batcher::new(BatcherConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+            })),
+            None,
+            Arc::new(crate::data::Tokenizer::fit("a b c d", 32)),
+            Arc::new(crate::serve::ServerStats::default()),
+            8,
+        )
+    }
+
+    #[test]
+    fn rendered_page_parses_and_carries_http_families() {
+        let service = test_service();
+        let http = HttpStats::default();
+        let gate = Gate::new(4);
+        http.record_connection();
+        http.record_admitted();
+        http.observe("score", 200, Duration::from_millis(3));
+        http.observe("score", 200, Duration::from_millis(40));
+        http.observe("health", 200, Duration::from_micros(50));
+        http.record_rejected();
+        http.observe("score", 429, Duration::from_micros(10));
+
+        let page = render(&service, &http, &gate, false);
+        let s = parse_text(&page).expect("page must be valid prometheus text");
+        assert_eq!(
+            s.value("http_requests_total", &[("route", "score"), ("code", "200")]),
+            Some(2.0)
+        );
+        assert_eq!(s.sum("http_requests_total", &[]), 4.0);
+        assert_eq!(s.value("http_rejected_total", &[]), Some(1.0));
+        assert_eq!(s.value("http_inflight", &[]), Some(0.0));
+        assert_eq!(s.value("http_inflight_limit", &[]), Some(4.0));
+        assert_eq!(s.value("http_draining", &[]), Some(0.0));
+        assert_eq!(
+            s.value("http_request_duration_seconds_count", &[]),
+            Some(4.0)
+        );
+        assert_eq!(
+            s.value("http_request_duration_seconds_bucket", &[("le", "+Inf")]),
+            Some(4.0)
+        );
+        // kernel + scheduler families ride along on the same page
+        assert!(s.value("sparselm_spmm_calls_total", &[]).is_some());
+        assert_eq!(s.value("sparselm_score_queue_depth", &[]), Some(0.0));
+        assert_eq!(s.value("sparselm_ops_total", &[("op", "nll")]), Some(0.0));
+    }
+
+    #[test]
+    fn draining_flag_flips_the_gauge() {
+        let service = test_service();
+        let http = HttpStats::default();
+        let gate = Gate::new(1);
+        let page = render(&service, &http, &gate, true);
+        let s = parse_text(&page).unwrap();
+        assert_eq!(s.value("http_draining", &[]), Some(1.0));
+    }
+
+    #[test]
+    fn requests_total_counts_every_status() {
+        let http = HttpStats::default();
+        http.observe("score", 200, Duration::from_millis(1));
+        http.observe("other", 404, Duration::from_micros(5));
+        http.observe("score", 429, Duration::from_micros(5));
+        assert_eq!(http.requests_total(), 3);
+        assert!(http.latency_percentile(99.0) > 0.0);
+    }
+}

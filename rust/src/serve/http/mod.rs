@@ -1,0 +1,445 @@
+//! Production HTTP/1.1 front end — `/score`, `/generate`, `/health`,
+//! and Prometheus `/metrics` over the same [`Service`] the TCP line
+//! protocol runs on.
+//!
+//! Hand-rolled on `std` TCP like everything else in this repo (the
+//! offline registry carries no HTTP crate), which keeps the surface
+//! exactly as small as the deployment needs:
+//!
+//! * **Routing** ([`router`]) — `POST /score` and `POST /generate`
+//!   validate bodies with the *same* functions as the TCP ops, so the
+//!   two ingresses return byte-identical JSON; `GET /health` answers
+//!   readiness (503 while draining); `GET /metrics` renders the full
+//!   telemetry page ([`metrics`]).
+//! * **Hardening** — request heads over `max_head` → 431, bodies over
+//!   `max_body` → 413, chunked transfer → 501, unknown versions → 505,
+//!   malformed syntax → 400, a request that trickles in longer than
+//!   `read_timeout` (slow-loris) → 408 + close. Parse failures close
+//!   the connection (framing is untrustworthy after one); routing
+//!   failures (404/405) keep it alive. Pipelined requests are served
+//!   in order from the same buffer.
+//! * **Backpressure** ([`limits`]) — at most `max_inflight` model
+//!   requests execute concurrently; excess traffic is rejected
+//!   *immediately* with `429 + Retry-After` instead of queueing, so
+//!   client-observed latency stays honest. `max_conns` bounds sockets
+//!   the same way the TCP server does.
+//! * **Graceful drain** — [`HttpHandle::begin_drain`] flips `/health`
+//!   to 503 and rejects new model work (503 + `Connection: close`)
+//!   while in-flight requests finish; [`HttpHandle::shutdown`] waits
+//!   for the gate to empty (bounded by `drain_grace`), stops the
+//!   acceptor, joins every connection thread and logs the final
+//!   counter flush. Scrapes keep working during the drain window so
+//!   the last metrics are observable, not lost.
+
+pub mod client;
+pub mod limits;
+pub mod metrics;
+pub mod parser;
+pub mod router;
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+pub use client::{HttpClient, HttpReply};
+pub use limits::Gate;
+pub use metrics::HttpStats;
+
+use super::service::Service;
+use crate::util::json::Json;
+use parser::{find_head_end, parse_head};
+use router::{HttpResponse, Route};
+
+/// HTTP front-end tuning.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// bind address; port 0 lets the OS pick (tests)
+    pub addr: String,
+    /// max simultaneous sockets
+    pub max_conns: usize,
+    /// max request body bytes (413 beyond)
+    pub max_body: usize,
+    /// max request head bytes (431 beyond)
+    pub max_head: usize,
+    /// max concurrently executing model requests (429 beyond)
+    pub max_inflight: usize,
+    /// total time a request may take to arrive (408 beyond)
+    pub read_timeout: Duration,
+    /// socket write timeout
+    pub write_timeout: Duration,
+    /// `Retry-After` seconds advertised on 429
+    pub retry_after_secs: u64,
+    /// how long [`HttpHandle::shutdown`] waits for in-flight requests
+    pub drain_grace: Duration,
+}
+
+impl Default for HttpConfig {
+    fn default() -> Self {
+        HttpConfig {
+            addr: "127.0.0.1:7080".into(),
+            max_conns: 64,
+            max_body: 1 << 20,
+            max_head: 16 << 10,
+            max_inflight: 16,
+            read_timeout: Duration::from_secs(5),
+            write_timeout: Duration::from_secs(5),
+            retry_after_secs: 1,
+            drain_grace: Duration::from_secs(5),
+        }
+    }
+}
+
+/// Handle to a running HTTP front end.
+pub struct HttpHandle {
+    pub addr: SocketAddr,
+    service: Arc<Service>,
+    stats: Arc<HttpStats>,
+    gate: Arc<Gate>,
+    stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    drain_grace: Duration,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl HttpHandle {
+    /// Enter drain mode: `/health` answers 503, new `/score`/`/generate`
+    /// requests are refused, in-flight requests keep running, scrapes
+    /// keep working.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    pub fn stats(&self) -> Arc<HttpStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Model requests currently executing (the gate's reading).
+    pub fn inflight(&self) -> usize {
+        self.gate.inflight()
+    }
+
+    /// Render the metrics page without a socket round-trip (the final
+    /// flush on shutdown uses this).
+    pub fn metrics_text(&self) -> String {
+        metrics::render(
+            &self.service,
+            &self.stats,
+            &self.gate,
+            self.draining.load(Ordering::SeqCst),
+        )
+    }
+
+    /// Graceful stop: drain, wait for in-flight work (bounded by
+    /// `drain_grace`), stop the acceptor, join every connection thread,
+    /// and log the final counter flush. Idempotent — a second call is a
+    /// no-op, so the CLI's signal watcher and its main thread can both
+    /// call it without coordination.
+    pub fn shutdown(&self) -> crate::Result<()> {
+        self.begin_drain();
+        let deadline = Instant::now() + self.drain_grace;
+        while self.gate.inflight() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the acceptor out of accept()
+        let _ = TcpStream::connect(self.addr);
+        let acceptor = self.acceptor.lock().unwrap().take();
+        let Some(a) = acceptor else {
+            return Ok(()); // already shut down
+        };
+        let _ = a.join();
+        log::info!(
+            "http front end stopped: {} requests ({} admitted, {} rejected 429) \
+             over {} connections, p99 {:.1}us",
+            self.stats.requests_total(),
+            self.stats.admitted(),
+            self.stats.rejected(),
+            self.stats.connections(),
+            self.stats.latency_percentile(99.0) * 1e6,
+        );
+        Ok(())
+    }
+}
+
+/// Everything a connection thread needs, bundled once.
+struct ConnCtx {
+    service: Arc<Service>,
+    stats: Arc<HttpStats>,
+    gate: Arc<Gate>,
+    stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    cfg: HttpConfig,
+}
+
+/// Start the HTTP front end over `service`. Returns after the socket is
+/// bound; the acceptor and connection threads run until
+/// [`HttpHandle::shutdown`].
+pub fn serve_http(service: Arc<Service>, cfg: HttpConfig) -> crate::Result<HttpHandle> {
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let draining = Arc::new(AtomicBool::new(false));
+    let stats = Arc::new(HttpStats::default());
+    let gate = Gate::new(cfg.max_inflight);
+    let drain_grace = cfg.drain_grace;
+
+    let ctx = Arc::new(ConnCtx {
+        service: Arc::clone(&service),
+        stats: Arc::clone(&stats),
+        gate: Arc::clone(&gate),
+        stop: Arc::clone(&stop),
+        draining: Arc::clone(&draining),
+        cfg,
+    });
+
+    let acceptor = {
+        let ctx = Arc::clone(&ctx);
+        std::thread::spawn(move || {
+            let live = Mutex::new(Vec::<JoinHandle<()>>::new());
+            for conn in listener.incoming() {
+                if ctx.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                {
+                    let mut v = live.lock().unwrap();
+                    v.retain(|h| !h.is_finished());
+                    if v.len() >= ctx.cfg.max_conns {
+                        let resp =
+                            HttpResponse::error(503, "server at connection capacity");
+                        let mut s = stream;
+                        let _ = resp.write_to(&mut s, true);
+                        continue;
+                    }
+                }
+                ctx.stats.record_connection();
+                let ctx2 = Arc::clone(&ctx);
+                let h = std::thread::spawn(move || handle_conn(stream, &ctx2));
+                live.lock().unwrap().push(h);
+            }
+            for h in live.lock().unwrap().drain(..) {
+                let _ = h.join();
+            }
+        })
+    };
+
+    log::info!("http front end listening on {addr}");
+    Ok(HttpHandle {
+        addr,
+        service,
+        stats,
+        gate,
+        stop,
+        draining,
+        drain_grace,
+        acceptor: Mutex::new(Some(acceptor)),
+    })
+}
+
+/// Outcome of one attempt to serve a buffered request.
+enum Step {
+    /// head or body incomplete — read more bytes
+    NeedMore,
+    /// request answered, connection stays open
+    Continue,
+    /// connection must close (protocol damage or `Connection: close`)
+    Close,
+}
+
+fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
+    // short poll timeout so the handler notices `stop` while idle;
+    // the *request* deadline (slow-loris) is enforced separately below
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .is_err()
+    {
+        return;
+    }
+    let _ = stream.set_write_timeout(Some(ctx.cfg.write_timeout));
+    let _ = stream.set_nodelay(true);
+    let mut buf: Vec<u8> = Vec::new();
+    // when the current (incomplete) request started arriving
+    let mut started: Option<Instant> = None;
+    loop {
+        if ctx.stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match step(&mut buf, &mut stream, ctx) {
+            Step::Close => break,
+            Step::Continue => {
+                // a pipelined follow-up may already be buffered; its
+                // clock starts now
+                started = if buf.is_empty() { None } else { Some(Instant::now()) };
+                continue;
+            }
+            Step::NeedMore => {}
+        }
+        if let Some(t) = started {
+            if t.elapsed() > ctx.cfg.read_timeout {
+                let resp = HttpResponse::error(408, "request timed out");
+                let _ = resp.write_to(&mut stream, true);
+                ctx.stats.observe("other", 408, t.elapsed());
+                break;
+            }
+        }
+        let mut chunk = [0u8; 8192];
+        match stream.read(&mut chunk) {
+            Ok(0) => {
+                if !buf.is_empty() {
+                    // mid-request EOF: best-effort error, then close
+                    let resp = HttpResponse::error(400, "truncated request");
+                    let _ = resp.write_to(&mut stream, true);
+                    ctx.stats.observe("other", 400, Duration::ZERO);
+                }
+                break;
+            }
+            Ok(n) => {
+                if started.is_none() {
+                    started = Some(Instant::now());
+                }
+                buf.extend_from_slice(&chunk[..n]);
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+/// Write `resp`, record the observation, and translate into a [`Step`].
+fn finish(
+    stream: &mut TcpStream,
+    ctx: &ConnCtx,
+    label: &'static str,
+    resp: &HttpResponse,
+    close: bool,
+    t0: Instant,
+) -> Step {
+    let wrote = resp.write_to(stream, close).is_ok();
+    ctx.stats.observe(label, resp.status, t0.elapsed());
+    if close || !wrote {
+        Step::Close
+    } else {
+        Step::Continue
+    }
+}
+
+/// Try to carve one complete request out of `buf` and answer it.
+fn step(buf: &mut Vec<u8>, stream: &mut TcpStream, ctx: &ConnCtx) -> Step {
+    let t0 = Instant::now();
+    let Some(head_end) = find_head_end(buf) else {
+        if buf.len() > ctx.cfg.max_head {
+            let resp = HttpResponse::error(431, "request head too large");
+            return finish(stream, ctx, "other", &resp, true, t0);
+        }
+        return Step::NeedMore;
+    };
+    if head_end > ctx.cfg.max_head {
+        let resp = HttpResponse::error(431, "request head too large");
+        return finish(stream, ctx, "other", &resp, true, t0);
+    }
+    let head = match parse_head(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(e) => {
+            // after a malformed head the request framing is unknowable;
+            // answer and close rather than guess at a resync point
+            let resp = HttpResponse::from_http_error(&e);
+            return finish(stream, ctx, "other", &resp, true, t0);
+        }
+    };
+    if head.is_chunked() {
+        let resp = HttpResponse::error(501, "chunked transfer encoding not supported");
+        return finish(stream, ctx, "other", &resp, true, t0);
+    }
+    let body_len = match head.content_length() {
+        Ok(n) => n.unwrap_or(0),
+        Err(e) => {
+            let resp = HttpResponse::from_http_error(&e);
+            return finish(stream, ctx, "other", &resp, true, t0);
+        }
+    };
+    if body_len > ctx.cfg.max_body {
+        let resp = HttpResponse::error(413, "request body too large");
+        return finish(stream, ctx, "other", &resp, true, t0);
+    }
+    if buf.len() < head_end + body_len {
+        return Step::NeedMore;
+    }
+
+    let body: Vec<u8> = buf[head_end..head_end + body_len].to_vec();
+    buf.drain(..head_end + body_len);
+    let (label, resp, force_close) = dispatch(&head, &body, ctx);
+    let close = force_close || head.wants_close();
+    finish(stream, ctx, label, &resp, close, t0)
+}
+
+/// Route and execute one well-framed request. Returns the route label
+/// for metrics, the response, and whether the connection must close.
+fn dispatch(
+    head: &parser::Head,
+    body: &[u8],
+    ctx: &ConnCtx,
+) -> (&'static str, HttpResponse, bool) {
+    let route = match router::route(&head.method, &head.target) {
+        Ok(r) => r,
+        Err(e) => return ("other", HttpResponse::from_http_error(&e), false),
+    };
+    let label = route.label();
+    let draining = ctx.draining.load(Ordering::SeqCst);
+    match route {
+        Route::Health => {
+            let resp = if draining {
+                HttpResponse::json(
+                    503,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(false)),
+                        ("status", Json::str("draining")),
+                    ]),
+                )
+            } else {
+                HttpResponse::json(
+                    200,
+                    &Json::obj(vec![
+                        ("ok", Json::Bool(true)),
+                        ("status", Json::str("ok")),
+                        ("generate", Json::Bool(ctx.service.has_generator())),
+                    ]),
+                )
+            };
+            (label, resp, false)
+        }
+        Route::Metrics => {
+            let page = metrics::render(&ctx.service, &ctx.stats, &ctx.gate, draining);
+            (label, HttpResponse::metrics(page), false)
+        }
+        Route::Score | Route::Generate => {
+            if draining {
+                // close so load balancers stop reusing this socket
+                return (label, HttpResponse::error(503, "server is draining"), true);
+            }
+            let Some(_slot) = ctx.gate.try_acquire() else {
+                ctx.stats.record_rejected();
+                let resp = HttpResponse::error(429, "server at capacity, retry later")
+                    .with_header("Retry-After", ctx.cfg.retry_after_secs.to_string());
+                return (label, resp, false);
+            };
+            ctx.stats.record_admitted();
+            let resp = match router::body_to_request(route, body) {
+                Err(msg) => HttpResponse::error(400, &msg),
+                Ok(req) => HttpResponse::from_protocol(&ctx.service.execute(&req)),
+            };
+            (label, resp, false)
+        }
+    }
+}

@@ -1,0 +1,313 @@
+//! HTTP/1.1 request-head parsing — pure functions, no sockets.
+//!
+//! Deliberately small: the front end serves four routes to cooperating
+//! clients (load balancers, Prometheus, test harnesses), so the parser
+//! implements the subset of RFC 9112 those speak — request line +
+//! header fields, `Content-Length` bodies, keep-alive/close semantics —
+//! and answers everything else with a *typed* error status instead of
+//! guessing: chunked bodies are 501, unknown versions 505, oversized
+//! heads 431 (sized in the connection loop), malformed syntax 400.
+//! Every reject path is a value, never a panic; the property test
+//! (`tests/http_parser_prop.rs`) holds it against a reference
+//! implementation on generated heads.
+
+/// A typed parse/route failure: HTTP status + human-readable detail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpError {
+    pub status: u16,
+    pub msg: String,
+    /// `Allow:` header value for 405 replies.
+    pub allow: Option<&'static str>,
+}
+
+impl HttpError {
+    pub fn new(status: u16, msg: impl Into<String>) -> HttpError {
+        HttpError {
+            status,
+            msg: msg.into(),
+            allow: None,
+        }
+    }
+}
+
+/// A parsed request head: method, target, `HTTP/1.<minor>`, and header
+/// fields with **lowercased names** and obs-folds already joined.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Head {
+    pub method: String,
+    pub target: String,
+    pub minor: u8,
+    pub headers: Vec<(String, String)>,
+}
+
+impl Head {
+    /// First value of `name` (ASCII case-insensitive lookup).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    /// Declared body length. Duplicate `Content-Length` fields must
+    /// agree (RFC 9112 §6.3: conflicting values are unrecoverable),
+    /// and the value must be a plain decimal that fits `usize`.
+    pub fn content_length(&self) -> Result<Option<usize>, HttpError> {
+        let mut seen: Option<usize> = None;
+        for (n, v) in &self.headers {
+            if n != "content-length" {
+                continue;
+            }
+            // one field may itself carry a duplicated list value
+            for part in v.split(',') {
+                let part = part.trim();
+                let parsed = parse_decimal(part).ok_or_else(|| {
+                    HttpError::new(400, format!("bad content-length {part:?}"))
+                })?;
+                match seen {
+                    None => seen = Some(parsed),
+                    Some(prev) if prev == parsed => {}
+                    Some(prev) => {
+                        return Err(HttpError::new(
+                            400,
+                            format!("conflicting content-length ({prev} vs {parsed})"),
+                        ))
+                    }
+                }
+            }
+        }
+        Ok(seen)
+    }
+
+    /// Does `Transfer-Encoding` name `chunked`? (Answered with 501 by
+    /// the connection loop — cooperating clients send sized bodies.)
+    pub fn is_chunked(&self) -> bool {
+        self.header("transfer-encoding")
+            .map(|v| {
+                v.split(',')
+                    .any(|t| t.trim().eq_ignore_ascii_case("chunked"))
+            })
+            .unwrap_or(false)
+    }
+
+    /// Should the connection close after this exchange?
+    /// `Connection: close` always closes; HTTP/1.0 closes unless the
+    /// client opted into `keep-alive`.
+    pub fn wants_close(&self) -> bool {
+        let conn = self.header("connection").unwrap_or("");
+        let has = |tok: &str| {
+            conn.split(',').any(|t| t.trim().eq_ignore_ascii_case(tok))
+        };
+        if has("close") {
+            return true;
+        }
+        self.minor == 0 && !has("keep-alive")
+    }
+}
+
+/// Decimal parse without `+`/`-`/whitespace liberality: HTTP lengths
+/// are plain digit strings. `None` on empty, non-digit, or overflow.
+fn parse_decimal(s: &str) -> Option<usize> {
+    if s.is_empty() || !s.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    let mut out: usize = 0;
+    for b in s.bytes() {
+        out = out
+            .checked_mul(10)?
+            .checked_add((b - b'0') as usize)?;
+    }
+    Some(out)
+}
+
+/// RFC 9110 `tchar` — the characters legal in methods and field names.
+fn is_tchar(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b"!#$%&'*+-.^_`|~".contains(&b)
+}
+
+/// Index **one past** the blank line terminating the head (`CRLFCRLF`
+/// or bare `LFLF`), or `None` if the head is still incomplete.
+pub fn find_head_end(buf: &[u8]) -> Option<usize> {
+    let mut i = 0;
+    while i < buf.len() {
+        if buf[i] != b'\n' {
+            i += 1;
+            continue;
+        }
+        // line ending at i; is the next line empty?
+        let rest = &buf[i + 1..];
+        if rest.first() == Some(&b'\n') {
+            return Some(i + 2);
+        }
+        if rest.len() >= 2 && rest[0] == b'\r' && rest[1] == b'\n' {
+            return Some(i + 3);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// Parse a complete request head (everything up to and including the
+/// blank line). Accepts both CRLF and bare-LF line endings; rejects
+/// with 400 on malformed syntax and 505 on versions other than
+/// HTTP/1.0 / HTTP/1.1.
+pub fn parse_head(head: &[u8]) -> Result<Head, HttpError> {
+    let text = std::str::from_utf8(head)
+        .map_err(|_| HttpError::new(400, "request head is not valid UTF-8"))?;
+    let mut lines = text.split('\n').map(|l| l.strip_suffix('\r').unwrap_or(l));
+
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split(' ').filter(|p| !p.is_empty());
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m, t, v),
+            _ => {
+                return Err(HttpError::new(
+                    400,
+                    format!("malformed request line {request_line:?}"),
+                ))
+            }
+        };
+    if method.is_empty() || !method.bytes().all(is_tchar) {
+        return Err(HttpError::new(400, format!("bad method {method:?}")));
+    }
+    let minor = match version {
+        "HTTP/1.1" => 1,
+        "HTTP/1.0" => 0,
+        _ => {
+            return Err(HttpError::new(
+                505,
+                format!("unsupported version {version:?}"),
+            ))
+        }
+    };
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            break; // the blank line terminating the head
+        }
+        if line.starts_with(' ') || line.starts_with('\t') {
+            // obs-fold: continuation of the previous field value
+            let Some(last) = headers.last_mut() else {
+                return Err(HttpError::new(400, "header continuation before any header"));
+            };
+            if !last.1.is_empty() {
+                last.1.push(' ');
+            }
+            last.1.push_str(line.trim_matches([' ', '\t']));
+            continue;
+        }
+        let Some(colon) = line.find(':') else {
+            return Err(HttpError::new(400, format!("header without colon {line:?}")));
+        };
+        let name = &line[..colon];
+        if name.is_empty() || !name.bytes().all(is_tchar) {
+            // also catches whitespace before the colon (RFC 9112 §5.1:
+            // must be rejected, it enables request smuggling)
+            return Err(HttpError::new(400, format!("bad header name {name:?}")));
+        }
+        let value = line[colon + 1..].trim_matches([' ', '\t']).to_string();
+        headers.push((name.to_ascii_lowercase(), value));
+    }
+
+    Ok(Head {
+        method: method.to_string(),
+        target: target.to_string(),
+        minor,
+        headers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Head, HttpError> {
+        parse_head(s.as_bytes())
+    }
+
+    #[test]
+    fn parses_a_simple_post() {
+        let h = parse(
+            "POST /score HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(h.method, "POST");
+        assert_eq!(h.target, "/score");
+        assert_eq!(h.minor, 1);
+        assert_eq!(h.header("HOST"), Some("x"), "lookup is case-insensitive");
+        assert_eq!(h.content_length().unwrap(), Some(12));
+        assert!(!h.wants_close());
+    }
+
+    #[test]
+    fn find_head_end_handles_both_line_endings() {
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\n\r\nbody"), Some(18));
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\n\nbody"), Some(16));
+        assert_eq!(find_head_end(b"GET / HTTP/1.1\r\nHost: x\r\n"), None);
+    }
+
+    #[test]
+    fn obs_fold_joins_into_previous_value() {
+        let h = parse("GET / HTTP/1.1\r\nX-A: one\r\n two\r\n\r\n").unwrap();
+        assert_eq!(h.header("x-a"), Some("one two"));
+        let e = parse("GET / HTTP/1.1\r\n folded-first\r\n\r\n").unwrap_err();
+        assert_eq!(e.status, 400);
+    }
+
+    #[test]
+    fn rejects_malformed_heads_with_typed_statuses() {
+        for (head, status) in [
+            ("GET\r\n\r\n", 400),
+            ("GET / HTTP/1.1 extra\r\n\r\n", 400),
+            ("G\u{7f}T / HTTP/1.1\r\n\r\n", 400),
+            ("GET / HTTP/2.0\r\n\r\n", 505),
+            ("GET / SPDY/3\r\n\r\n", 505),
+            ("GET / HTTP/1.1\r\nBad Header: v\r\n\r\n", 400),
+            ("GET / HTTP/1.1\r\nName : v\r\n\r\n", 400),
+            ("GET / HTTP/1.1\r\nno-colon-here\r\n\r\n", 400),
+        ] {
+            let e = parse(head).unwrap_err();
+            assert_eq!(e.status, status, "{head:?}: {e:?}");
+        }
+    }
+
+    #[test]
+    fn content_length_duplicates_must_agree() {
+        let ok = parse(
+            "POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 5\r\n\r\n",
+        )
+        .unwrap();
+        assert_eq!(ok.content_length().unwrap(), Some(5));
+        let listed = parse("POST / HTTP/1.1\r\nContent-Length: 5, 5\r\n\r\n").unwrap();
+        assert_eq!(listed.content_length().unwrap(), Some(5));
+        for bad in [
+            "POST / HTTP/1.1\r\nContent-Length: 5\r\nContent-Length: 6\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: -1\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 12x\r\n\r\n",
+            "POST / HTTP/1.1\r\nContent-Length: 99999999999999999999999\r\n\r\n",
+        ] {
+            let h = parse(bad).unwrap();
+            assert_eq!(h.content_length().unwrap_err().status, 400, "{bad:?}");
+        }
+        let none = parse("GET / HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(none.content_length().unwrap(), None);
+    }
+
+    #[test]
+    fn connection_semantics() {
+        let close = parse("GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(close.wants_close());
+        let old = parse("GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(old.wants_close(), "HTTP/1.0 defaults to close");
+        let ka = parse("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(!ka.wants_close());
+        let chunked = parse(
+            "POST / HTTP/1.1\r\nTransfer-Encoding: gzip, Chunked\r\n\r\n",
+        )
+        .unwrap();
+        assert!(chunked.is_chunked());
+    }
+}

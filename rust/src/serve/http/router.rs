@@ -1,0 +1,264 @@
+//! Route table and HTTP response shaping.
+//!
+//! The router is a pure mapping in both directions: `(method, target)`
+//! → [`Route`] (or a typed 404/405), request body → the *same*
+//! [`Request`] values the TCP line protocol produces (via the shared
+//! validators on [`Request`]), and [`Response`] → an [`HttpResponse`]
+//! whose JSON body is exactly `Response::to_json().to_string()`. That
+//! last identity is what makes the two ingresses byte-compatible: the
+//! parity integration test compares an HTTP `/score` body against a TCP
+//! `{"op":"nll"}` line and they must match to the byte.
+
+use std::io::Write;
+
+use super::parser::HttpError;
+use crate::serve::protocol::{Request, Response};
+use crate::util::json::Json;
+
+/// The four endpoints the front end serves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// `GET /health` — liveness/readiness (503 while draining).
+    Health,
+    /// `GET /metrics` — Prometheus text exposition.
+    Metrics,
+    /// `POST /score` — `nll` (or `choice` when the body has `choices`).
+    Score,
+    /// `POST /generate` — KV-cached generation.
+    Generate,
+}
+
+impl Route {
+    /// Label used in `http_requests_total{route=...}`.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Route::Health => "health",
+            Route::Metrics => "metrics",
+            Route::Score => "score",
+            Route::Generate => "generate",
+        }
+    }
+}
+
+/// Resolve `(method, target)` to a route. The query string is ignored;
+/// a known path with the wrong method is 405 (+ `Allow`), an unknown
+/// path is 404.
+pub fn route(method: &str, target: &str) -> Result<Route, HttpError> {
+    let path = target.split(['?', '#']).next().unwrap_or(target);
+    let (want, matched) = match path {
+        "/health" => ("GET", Route::Health),
+        "/metrics" => ("GET", Route::Metrics),
+        "/score" => ("POST", Route::Score),
+        "/generate" => ("POST", Route::Generate),
+        _ => {
+            return Err(HttpError::new(404, format!("no route for {path:?}")));
+        }
+    };
+    if method != want {
+        let mut e = HttpError::new(
+            405,
+            format!("{path} only accepts {want}, got {method}"),
+        );
+        e.allow = Some(want);
+        return Err(e);
+    }
+    Ok(matched)
+}
+
+/// Map a request body to the protocol [`Request`] a TCP client would
+/// have sent — same validators, same error strings. `/score` dispatches
+/// on the presence of `"choices"`: with it, the lm-eval `choice` op;
+/// without, plain `nll`.
+pub fn body_to_request(route: Route, body: &[u8]) -> Result<Request, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
+    let v = Json::parse(text).map_err(|e| format!("bad json: {e}"))?;
+    match route {
+        Route::Score => {
+            if v.get("choices").is_some() {
+                Request::choice_from_json(&v)
+            } else {
+                Request::nll_from_json(&v)
+            }
+        }
+        Route::Generate => Request::generate_from_json(&v),
+        Route::Health | Route::Metrics => Err("route carries no body".into()),
+    }
+}
+
+/// Reason phrase for the statuses this server emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Content Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        501 => "Not Implemented",
+        503 => "Service Unavailable",
+        505 => "HTTP Version Not Supported",
+        _ => "Unknown",
+    }
+}
+
+/// A response ready to serialize: status, body, extra headers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: Vec<u8>,
+    /// extra headers, e.g. `Retry-After` on 429 or `Allow` on 405
+    pub extra: Vec<(&'static str, String)>,
+}
+
+impl HttpResponse {
+    pub fn json(status: u16, v: &Json) -> HttpResponse {
+        HttpResponse {
+            status,
+            content_type: "application/json",
+            body: v.to_string().into_bytes(),
+            extra: Vec::new(),
+        }
+    }
+
+    /// Prometheus text page (content type fixed by the exposition
+    /// format spec).
+    pub fn metrics(page: String) -> HttpResponse {
+        HttpResponse {
+            status: 200,
+            content_type: "text/plain; version=0.0.4; charset=utf-8",
+            body: page.into_bytes(),
+            extra: Vec::new(),
+        }
+    }
+
+    /// JSON error body in the wire protocol's error shape.
+    pub fn error(status: u16, msg: &str) -> HttpResponse {
+        HttpResponse::json(
+            status,
+            &Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(msg)),
+            ]),
+        )
+    }
+
+    pub fn from_http_error(e: &HttpError) -> HttpResponse {
+        let mut r = HttpResponse::error(e.status, &e.msg);
+        if let Some(allow) = e.allow {
+            r.extra.push(("Allow", allow.to_string()));
+        }
+        r
+    }
+
+    /// A protocol [`Response`] as HTTP: body is byte-for-byte the TCP
+    /// reply line (sans newline); a typed `Error` maps to 400.
+    pub fn from_protocol(resp: &Response) -> HttpResponse {
+        let status = match resp {
+            Response::Error(_) => 400,
+            _ => 200,
+        };
+        HttpResponse::json(status, &resp.to_json())
+    }
+
+    pub fn with_header(mut self, name: &'static str, value: String) -> HttpResponse {
+        self.extra.push((name, value));
+        self
+    }
+
+    /// Serialize head + body. `close` controls the `Connection` header.
+    pub fn write_to(&self, w: &mut impl Write, close: bool) -> std::io::Result<()> {
+        let mut head = format!(
+            "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+            self.status,
+            status_text(self.status),
+            self.content_type,
+            self.body.len(),
+        );
+        for (name, value) in &self.extra {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str(if close {
+            "Connection: close\r\n\r\n"
+        } else {
+            "Connection: keep-alive\r\n\r\n"
+        });
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_resolve_with_query_strings_ignored() {
+        assert_eq!(route("GET", "/health").unwrap(), Route::Health);
+        assert_eq!(route("GET", "/metrics?format=prom").unwrap(), Route::Metrics);
+        assert_eq!(route("POST", "/score").unwrap(), Route::Score);
+        assert_eq!(route("POST", "/generate").unwrap(), Route::Generate);
+    }
+
+    #[test]
+    fn wrong_method_is_405_with_allow() {
+        let e = route("POST", "/health").unwrap_err();
+        assert_eq!(e.status, 405);
+        assert_eq!(e.allow, Some("GET"));
+        let e = route("GET", "/score").unwrap_err();
+        assert_eq!(e.status, 405);
+        assert_eq!(e.allow, Some("POST"));
+        assert_eq!(route("DELETE", "/nope").unwrap_err().status, 404);
+    }
+
+    #[test]
+    fn score_body_dispatches_on_choices_presence() {
+        let r = body_to_request(Route::Score, b"{\"text\":\"hi\"}").unwrap();
+        assert!(matches!(r, Request::Nll { .. }));
+        let r = body_to_request(
+            Route::Score,
+            b"{\"context\":\"c\",\"choices\":[\"a\",\"b\"]}",
+        )
+        .unwrap();
+        assert!(matches!(r, Request::Choice { .. }));
+        // shared validators: same error text as the TCP protocol
+        let e = body_to_request(Route::Score, b"{}").unwrap_err();
+        assert_eq!(e, "nll needs \"text\"");
+        let e = body_to_request(Route::Generate, b"{}").unwrap_err();
+        assert_eq!(e, "generate needs \"prompt\"");
+    }
+
+    #[test]
+    fn protocol_response_body_matches_tcp_line() {
+        let resp = Response::Choice {
+            best: 1,
+            scores: vec![2.0, 1.0],
+            latency_ms: 0.0,
+        };
+        let http = HttpResponse::from_protocol(&resp);
+        assert_eq!(http.status, 200);
+        assert_eq!(http.body, resp.to_json().to_string().into_bytes());
+        let err = HttpResponse::from_protocol(&Response::Error("bad".into()));
+        assert_eq!(err.status, 400);
+    }
+
+    #[test]
+    fn serialization_carries_extra_headers_and_connection() {
+        let r = HttpResponse::error(429, "full").with_header("Retry-After", "1".into());
+        let mut out = Vec::new();
+        r.write_to(&mut out, true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.contains("Content-Length: "));
+        assert!(text.ends_with("{\"error\":\"full\",\"ok\":false}"), "{text}");
+    }
+}

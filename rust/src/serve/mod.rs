@@ -30,23 +30,33 @@
 //!   and property-tested without sockets);
 //! * [`generate`] — the continuous-batching decode scheduler and the
 //!   [`DecodeEngine`] contract (same purity);
+//! * [`service`] — the transport-independent op executor both ingresses
+//!   share (`/score` byte-matches `{"op":"nll"}` by construction);
 //! * [`server`] — TCP front end speaking newline-delimited JSON;
+//! * [`http`] — HTTP/1.1 front end over the same [`Service`]: `POST
+//!   /score`, `POST /generate`, `GET /health` and a Prometheus-text
+//!   `GET /metrics`, with admission control (429 + `Retry-After`),
+//!   body/header caps and graceful drain;
 //! * [`client`] — a small blocking client used by tests, examples and
 //!   the `serve-bench` CLI.
 
 pub mod batcher;
 pub mod client;
 pub mod generate;
+pub mod http;
 pub mod protocol;
 pub mod server;
+pub mod service;
 
 pub use batcher::{Batcher, BatcherConfig, ScoreRequest, ScoreResponse};
 pub use client::ServeClient;
 pub use generate::{
     DecodeEngine, GenRequest, GenResponse, GenScheduler, GenStats, SpmmEngine,
 };
+pub use http::{serve_http, HttpClient, HttpConfig, HttpHandle, HttpReply};
 pub use protocol::{Request, Response};
 pub use server::{
     pjrt_scorer, serve, serve_generate, spmm_generator, spmm_scorer, GenEngine, Scorer,
     ServerConfig, ServerHandle, ServerStats,
 };
+pub use service::Service;

@@ -54,100 +54,110 @@ impl Request {
             "ping" => Ok(Request::Ping),
             "stats" => Ok(Request::Stats),
             "shutdown" => Ok(Request::Shutdown),
-            "nll" => {
-                let text = v
-                    .get("text")
-                    .and_then(|t| t.as_str())
-                    .ok_or_else(|| "nll needs \"text\"".to_string())?;
-                if text.is_empty() {
-                    return Err("empty text".into());
-                }
-                Ok(Request::Nll { text: text.to_string() })
-            }
-            "choice" => {
-                let context = v
-                    .get("context")
-                    .and_then(|t| t.as_str())
-                    .ok_or_else(|| "choice needs \"context\"".to_string())?
-                    .to_string();
-                // a non-string element is an error, not a silent drop —
-                // otherwise the reply's indices would not line up with
-                // the array the client sent
-                let choices: Vec<String> = v
-                    .get("choices")
-                    .and_then(|c| c.as_arr())
-                    .ok_or_else(|| "choice needs \"choices\"".to_string())?
-                    .iter()
-                    .map(|c| {
-                        c.as_str()
-                            .map(str::to_string)
-                            .ok_or_else(|| "choices must be strings".to_string())
-                    })
-                    .collect::<Result<_, _>>()?;
-                if choices.len() < 2 {
-                    return Err("need at least 2 choices".into());
-                }
-                Ok(Request::Choice { context, choices })
-            }
-            "generate" => {
-                let prompt = v
-                    .get("prompt")
-                    .and_then(|p| p.as_str())
-                    .ok_or_else(|| "generate needs \"prompt\"".to_string())?
-                    .to_string();
-                if prompt.is_empty() {
-                    return Err("empty prompt".into());
-                }
-                // optional fields default when absent, but a present
-                // field of the wrong type is an error, not a silent
-                // fallback
-                let max_tokens = match v.get("max_tokens") {
-                    None => 32,
-                    Some(m) => {
-                        let x = m
-                            .as_f64()
-                            .ok_or_else(|| "max_tokens must be a number".to_string())?;
-                        if x < 1.0 || x.fract() != 0.0 {
-                            return Err("max_tokens must be a positive integer".into());
-                        }
-                        x as usize
-                    }
-                };
-                let temperature = match v.get("temperature") {
-                    None => 0.0,
-                    Some(t) => t
-                        .as_f64()
-                        .ok_or_else(|| "temperature must be a number".to_string())?,
-                };
-                if !temperature.is_finite() || temperature < 0.0 {
-                    return Err("temperature must be finite and >= 0".into());
-                }
-                let seed = match v.get("seed") {
-                    None => 0,
-                    Some(s) => {
-                        let x = s
-                            .as_f64()
-                            .ok_or_else(|| "seed must be a number".to_string())?;
-                        // reject rather than silently saturate/round:
-                        // the seed names an exact sample path, and json
-                        // f64 transport aliases integers at 2^53
-                        if x < 0.0 || x.fract() != 0.0 || x >= (1u64 << 53) as f64 {
-                            return Err(
-                                "seed must be a non-negative integer < 2^53".into()
-                            );
-                        }
-                        x as u64
-                    }
-                };
-                Ok(Request::Generate {
-                    prompt,
-                    max_tokens,
-                    temperature,
-                    seed,
-                })
-            }
+            "nll" => Request::nll_from_json(&v),
+            "choice" => Request::choice_from_json(&v),
+            "generate" => Request::generate_from_json(&v),
             other => Err(format!("unknown op {other:?}")),
         }
+    }
+
+    /// Validate an `nll` body (no `"op"` required — the HTTP router maps
+    /// `POST /score` here, so both ingresses share one validator).
+    pub fn nll_from_json(v: &Json) -> Result<Request, String> {
+        let text = v
+            .get("text")
+            .and_then(|t| t.as_str())
+            .ok_or_else(|| "nll needs \"text\"".to_string())?;
+        if text.is_empty() {
+            return Err("empty text".into());
+        }
+        Ok(Request::Nll { text: text.to_string() })
+    }
+
+    /// Validate a `choice` body (shared by the TCP op and `POST /score`
+    /// with a `"choices"` field).
+    pub fn choice_from_json(v: &Json) -> Result<Request, String> {
+        let context = v
+            .get("context")
+            .and_then(|t| t.as_str())
+            .ok_or_else(|| "choice needs \"context\"".to_string())?
+            .to_string();
+        // a non-string element is an error, not a silent drop —
+        // otherwise the reply's indices would not line up with
+        // the array the client sent
+        let choices: Vec<String> = v
+            .get("choices")
+            .and_then(|c| c.as_arr())
+            .ok_or_else(|| "choice needs \"choices\"".to_string())?
+            .iter()
+            .map(|c| {
+                c.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| "choices must be strings".to_string())
+            })
+            .collect::<Result<_, _>>()?;
+        if choices.len() < 2 {
+            return Err("need at least 2 choices".into());
+        }
+        Ok(Request::Choice { context, choices })
+    }
+
+    /// Validate a `generate` body (shared by the TCP op and
+    /// `POST /generate`).
+    pub fn generate_from_json(v: &Json) -> Result<Request, String> {
+        let prompt = v
+            .get("prompt")
+            .and_then(|p| p.as_str())
+            .ok_or_else(|| "generate needs \"prompt\"".to_string())?
+            .to_string();
+        if prompt.is_empty() {
+            return Err("empty prompt".into());
+        }
+        // optional fields default when absent, but a present
+        // field of the wrong type is an error, not a silent
+        // fallback
+        let max_tokens = match v.get("max_tokens") {
+            None => 32,
+            Some(m) => {
+                let x = m
+                    .as_f64()
+                    .ok_or_else(|| "max_tokens must be a number".to_string())?;
+                if x < 1.0 || x.fract() != 0.0 {
+                    return Err("max_tokens must be a positive integer".into());
+                }
+                x as usize
+            }
+        };
+        let temperature = match v.get("temperature") {
+            None => 0.0,
+            Some(t) => t
+                .as_f64()
+                .ok_or_else(|| "temperature must be a number".to_string())?,
+        };
+        if !temperature.is_finite() || temperature < 0.0 {
+            return Err("temperature must be finite and >= 0".into());
+        }
+        let seed = match v.get("seed") {
+            None => 0,
+            Some(s) => {
+                let x = s
+                    .as_f64()
+                    .ok_or_else(|| "seed must be a number".to_string())?;
+                // reject rather than silently saturate/round:
+                // the seed names an exact sample path, and json
+                // f64 transport aliases integers at 2^53
+                if x < 0.0 || x.fract() != 0.0 || x >= (1u64 << 53) as f64 {
+                    return Err("seed must be a non-negative integer < 2^53".into());
+                }
+                x as u64
+            }
+        };
+        Ok(Request::Generate {
+            prompt,
+            max_tokens,
+            temperature,
+            seed,
+        })
     }
 
     /// Serialize (client side).

@@ -22,15 +22,14 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 use super::batcher::{Batcher, BatcherConfig, ScoreRequest};
-use super::generate::{DecodeEngine, GenRequest, GenScheduler, SpmmEngine};
+use super::generate::{DecodeEngine, GenScheduler, SpmmEngine};
 use super::protocol::{Request, Response};
+use super::service::Service;
 use crate::data::batch::pack_windows;
-use crate::data::tokenizer::{BOS, EOS};
 use crate::data::Tokenizer;
-use crate::util::json::Json;
 
 /// Server tuning.
 #[derive(Clone, Debug)]
@@ -77,6 +76,7 @@ pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     batcher: Arc<Batcher>,
     generator: Option<Arc<GenScheduler>>,
+    service: Arc<Service>,
     threads: Vec<JoinHandle<()>>,
     scorer: Option<JoinHandle<crate::Result<()>>>,
     gen_thread: Option<JoinHandle<crate::Result<()>>>,
@@ -179,6 +179,25 @@ impl ServerHandle {
 
     pub fn batcher_stats(&self) -> super::batcher::BatcherStats {
         self.batcher.stats()
+    }
+
+    /// The transport-independent op executor this server runs on —
+    /// hand it to [`super::http::serve_http`] (or use
+    /// [`ServerHandle::attach_http`]) to expose the same model over
+    /// HTTP.
+    pub fn service(&self) -> Arc<Service> {
+        Arc::clone(&self.service)
+    }
+
+    /// Start an HTTP/1.1 front end over this server's [`Service`]. The
+    /// returned handle has its own lifecycle: drain/shut it down before
+    /// (or after) this TCP handle — the two ingresses share workers but
+    /// not sockets.
+    pub fn attach_http(
+        &self,
+        cfg: super::http::HttpConfig,
+    ) -> crate::Result<super::http::HttpHandle> {
+        super::http::serve_http(self.service(), cfg)
     }
 
     /// Continuous-batching generation counters (empty default when the
@@ -399,15 +418,21 @@ fn serve_inner(
         }
     };
 
+    // ---- the shared op executor ---------------------------------------
+    let service = Arc::new(Service::new(
+        Arc::clone(&batcher),
+        generator.clone(),
+        tokenizer,
+        Arc::clone(&stats),
+        cfg.max_gen_tokens,
+    ));
+
     // ---- acceptor + per-connection threads ----------------------------
     let acceptor = {
         let stop = Arc::clone(&stop);
         let stats = Arc::clone(&stats);
-        let batcher = Arc::clone(&batcher);
-        let generator = generator.clone();
-        let tokenizer = Arc::clone(&tokenizer);
+        let service = Arc::clone(&service);
         let max_conns = cfg.max_conns;
-        let max_gen_tokens = cfg.max_gen_tokens.max(1);
         std::thread::spawn(move || {
             let live = Arc::new(Mutex::new(Vec::<JoinHandle<()>>::new()));
             for conn in listener.incoming() {
@@ -429,21 +454,8 @@ fn serve_inner(
                 }
                 stats.connections.fetch_add(1, Ordering::Relaxed);
                 let stop2 = Arc::clone(&stop);
-                let stats2 = Arc::clone(&stats);
-                let batcher2 = Arc::clone(&batcher);
-                let gen2 = generator.clone();
-                let tok2 = Arc::clone(&tokenizer);
-                let h = std::thread::spawn(move || {
-                    handle_conn(
-                        stream,
-                        &stop2,
-                        &stats2,
-                        &batcher2,
-                        gen2.as_deref(),
-                        max_gen_tokens,
-                        &tok2,
-                    )
-                });
+                let service2 = Arc::clone(&service);
+                let h = std::thread::spawn(move || handle_conn(stream, &stop2, &service2));
                 live.lock().unwrap().push(h);
             }
             for h in live.lock().unwrap().drain(..) {
@@ -457,6 +469,7 @@ fn serve_inner(
         stop,
         batcher,
         generator,
+        service,
         threads: vec![acceptor],
         scorer: Some(scorer_thread),
         gen_thread,
@@ -470,15 +483,8 @@ fn respond(mut stream: &TcpStream, resp: &Response) -> std::io::Result<()> {
     stream.write_all(line.as_bytes())
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    stop: &AtomicBool,
-    stats: &ServerStats,
-    batcher: &Batcher,
-    generator: Option<&GenScheduler>,
-    max_gen_tokens: usize,
-    tok: &Tokenizer,
-) {
+fn handle_conn(stream: TcpStream, stop: &AtomicBool, service: &Service) {
+    let stats = service.server_stats();
     // read with a timeout so the handler notices `stop` even while the
     // client keeps the connection open — shutdown() joins these threads
     if stream
@@ -491,7 +497,6 @@ fn handle_conn(
         Ok(s) => s,
         Err(_) => return,
     });
-    let next_id = AtomicU64::new(1);
     let mut buf = String::new();
     loop {
         if stop.load(Ordering::SeqCst) {
@@ -522,181 +527,15 @@ fn handle_conn(
                 stats.errors.fetch_add(1, Ordering::Relaxed);
                 Response::Error(e)
             }
-            Ok(Request::Ping) => Response::Pong,
             Ok(Request::Shutdown) => {
+                // lifecycle op: tear down here, where the sockets and
+                // worker queues are owned — not in Service::execute
                 let _ = respond(&stream, &Response::ShuttingDown);
                 stop.store(true, Ordering::SeqCst);
-                batcher.close();
-                if let Some(g) = generator {
-                    g.close();
-                }
+                service.close();
                 return;
             }
-            Ok(Request::Stats) => {
-                let b = batcher.stats();
-                let mut fields = vec![
-                    (
-                        "connections",
-                        Json::num(stats.connections.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "requests",
-                        Json::num(stats.requests.load(Ordering::Relaxed) as f64),
-                    ),
-                    (
-                        "errors",
-                        Json::num(stats.errors.load(Ordering::Relaxed) as f64),
-                    ),
-                    ("batches", Json::num(b.batches as f64)),
-                    ("rows_scored", Json::num(b.rows_scored as f64)),
-                    ("timeout_flushes", Json::num(b.timeout_flushes as f64)),
-                    ("queue_depth", Json::num(batcher.queue_depth() as f64)),
-                ];
-                if let Some(g) = generator {
-                    let gs = g.stats();
-                    fields.push(("gen_requests", Json::num(gs.requests as f64)));
-                    fields.push(("gen_completed", Json::num(gs.completed as f64)));
-                    fields.push(("decode_steps", Json::num(gs.decode_steps as f64)));
-                    fields.push((
-                        "tokens_generated",
-                        Json::num(gs.tokens_generated as f64),
-                    ));
-                    fields.push(("mean_batch_fill", Json::num(gs.mean_fill())));
-                    fields.push((
-                        "batch_fill",
-                        Json::Arr(
-                            gs.batch_fill
-                                .iter()
-                                .map(|&c| Json::num(c as f64))
-                                .collect(),
-                        ),
-                    ));
-                    fields.push(("prefill_nanos", Json::num(gs.prefill_nanos as f64)));
-                    fields.push(("decode_nanos", Json::num(gs.decode_nanos as f64)));
-                    fields.push(("decode_p50_us", Json::num(gs.decode_p50_us)));
-                    fields.push(("decode_p99_us", Json::num(gs.decode_p99_us)));
-                }
-                Response::Stats(Json::obj(fields))
-            }
-            Ok(Request::Nll { text }) => {
-                stats.nll_ops.fetch_add(1, Ordering::Relaxed);
-                let t0 = Instant::now();
-                let mut ids = vec![BOS];
-                ids.extend(tok.encode(&text));
-                let rx = batcher.submit(ScoreRequest {
-                    id: next_id.fetch_add(1, Ordering::Relaxed),
-                    tokens: ids,
-                    scored_from: 1,
-                });
-                match rx.recv() {
-                    Ok(r) if r.tokens > 0 => Response::Nll {
-                        mean_nll: r.sum_nll / r.tokens as f64,
-                        sum_nll: r.sum_nll,
-                        tokens: r.tokens,
-                        latency_ms: t0.elapsed().as_secs_f64() * 1e3,
-                        batch_fill: r.batch_fill,
-                    },
-                    Ok(_) => Response::Error("text tokenized to nothing scorable".into()),
-                    Err(_) => Response::Error("server shutting down".into()),
-                }
-            }
-            Ok(Request::Choice { context, choices }) => {
-                stats.choice_ops.fetch_add(1, Ordering::Relaxed);
-                let t0 = Instant::now();
-                // submit all candidates, then await — they share batches
-                let ctx_len = tok.encode(&context).len();
-                let rxs: Vec<_> = choices
-                    .iter()
-                    .map(|c| {
-                        let full = format!("{context} {c}");
-                        let mut ids = vec![BOS];
-                        ids.extend(tok.encode(&full));
-                        batcher.submit(ScoreRequest {
-                            id: next_id.fetch_add(1, Ordering::Relaxed),
-                            tokens: ids,
-                            scored_from: 1 + ctx_len,
-                        })
-                    })
-                    .collect();
-                let mut scores = Vec::with_capacity(rxs.len());
-                let mut failed = false;
-                for rx in rxs {
-                    match rx.recv() {
-                        Ok(r) if r.tokens > 0 => scores.push(r.sum_nll / r.tokens as f64),
-                        Ok(_) => scores.push(f64::INFINITY),
-                        Err(_) => {
-                            failed = true;
-                            break;
-                        }
-                    }
-                }
-                if failed {
-                    Response::Error("server shutting down".into())
-                } else {
-                    // total_cmp, not partial_cmp().unwrap(): a NaN score
-                    // (a degenerate model is the client's problem, not a
-                    // reason to kill this connection's worker thread)
-                    // must still produce a reply. Non-finite scores are
-                    // excluded from the ranking outright — total order
-                    // alone would let a sign-bit-set NaN (the default
-                    // x86 arithmetic NaN) sort *below* every finite
-                    // score and win. All-degenerate falls back to 0.
-                    let best = scores
-                        .iter()
-                        .enumerate()
-                        .filter(|(_, s)| s.is_finite())
-                        .min_by(|a, b| a.1.total_cmp(b.1))
-                        .map(|(i, _)| i)
-                        .unwrap_or(0);
-                    // JSON has no inf/NaN: clamp degenerate/unscorable
-                    // entries to MAX so the reply stays numeric and
-                    // index-aligned with the client's choices array
-                    for s in scores.iter_mut() {
-                        if !s.is_finite() {
-                            *s = f64::MAX;
-                        }
-                    }
-                    Response::Choice {
-                        best,
-                        scores,
-                        latency_ms: t0.elapsed().as_secs_f64() * 1e3,
-                    }
-                }
-            }
-            Ok(Request::Generate {
-                prompt,
-                max_tokens,
-                temperature,
-                seed,
-            }) => match generator {
-                None => Response::Error(
-                    "generation not supported by this backend (scoring-only server)".into(),
-                ),
-                Some(g) => {
-                    stats.generate_ops.fetch_add(1, Ordering::Relaxed);
-                    let t0 = Instant::now();
-                    let mut ids = vec![BOS];
-                    ids.extend(tok.encode(&prompt));
-                    let rx = g.submit(GenRequest {
-                        id: next_id.fetch_add(1, Ordering::Relaxed),
-                        prompt: ids,
-                        max_tokens: max_tokens.min(max_gen_tokens),
-                        temperature: temperature as f32,
-                        seed,
-                        stop: Some(EOS),
-                    });
-                    match rx.recv() {
-                        Ok(r) => Response::Generate {
-                            text: tok.decode(&r.tokens),
-                            tokens: r.tokens.len(),
-                            steps: r.steps as usize,
-                            latency_ms: t0.elapsed().as_secs_f64() * 1e3,
-                            mean_batch_fill: r.mean_batch_fill,
-                        },
-                        Err(_) => Response::Error("server shutting down".into()),
-                    }
-                }
-            },
+            Ok(req) => service.execute(&req),
         };
         if respond(&stream, &resp).is_err() {
             break;

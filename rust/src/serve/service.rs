@@ -1,0 +1,271 @@
+//! Transport-independent op execution — the seam between ingress
+//! protocols and the model.
+//!
+//! Before the HTTP front end existed, the whole request path lived
+//! inside the TCP server's per-connection loop. [`Service`] is that op
+//! logic extracted behind one `execute` call: tokenize → submit to the
+//! [`Batcher`] / [`GenScheduler`] → shape the [`Response`]. The TCP
+//! handler ([`super::server`]) and the HTTP router
+//! ([`super::http::router`]) both call it, so `/score` and `/generate`
+//! answers byte-match the line protocol's **by construction** — there
+//! is exactly one implementation to diverge from, and the parity
+//! integration test (`tests/http_integration.rs`) pins it.
+//!
+//! Connection-lifecycle ops stay in the ingress: `shutdown` tears down
+//! sockets and worker threads the service has no business owning, so
+//! [`Service::execute`] answers it with a typed error and the TCP
+//! handler intercepts it first.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::batcher::{Batcher, BatcherStats, ScoreRequest};
+use super::generate::{GenRequest, GenScheduler, GenStats};
+use super::protocol::{Request, Response};
+use super::server::ServerStats;
+use crate::data::tokenizer::{BOS, EOS};
+use crate::data::Tokenizer;
+use crate::util::json::Json;
+
+/// Shared op-execution state: one per server, `Arc`-shared by every
+/// connection of every ingress.
+pub struct Service {
+    batcher: Arc<Batcher>,
+    generator: Option<Arc<GenScheduler>>,
+    tokenizer: Arc<Tokenizer>,
+    stats: Arc<ServerStats>,
+    max_gen_tokens: usize,
+    next_id: AtomicU64,
+}
+
+impl Service {
+    pub(crate) fn new(
+        batcher: Arc<Batcher>,
+        generator: Option<Arc<GenScheduler>>,
+        tokenizer: Arc<Tokenizer>,
+        stats: Arc<ServerStats>,
+        max_gen_tokens: usize,
+    ) -> Service {
+        Service {
+            batcher,
+            generator,
+            tokenizer,
+            stats,
+            max_gen_tokens: max_gen_tokens.max(1),
+            next_id: AtomicU64::new(1),
+        }
+    }
+
+    /// Ingress-shared server counters.
+    pub fn server_stats(&self) -> &ServerStats {
+        &self.stats
+    }
+
+    /// Scoring-queue counters.
+    pub fn batcher_stats(&self) -> BatcherStats {
+        self.batcher.stats()
+    }
+
+    /// Scoring requests currently queued (admission gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.queue_depth()
+    }
+
+    /// Generation counters (default when serving without an engine).
+    pub fn gen_stats(&self) -> GenStats {
+        self.generator.as_ref().map(|g| g.stats()).unwrap_or_default()
+    }
+
+    /// Does this server answer `generate`?
+    pub fn has_generator(&self) -> bool {
+        self.generator.is_some()
+    }
+
+    /// Close both worker queues (shutdown/drain).
+    pub fn close(&self) {
+        self.batcher.close();
+        if let Some(g) = &self.generator {
+            g.close();
+        }
+    }
+
+    /// Execute one request synchronously. Never panics on malformed
+    /// model output; every path returns a [`Response`].
+    pub fn execute(&self, req: &Request) -> Response {
+        match req {
+            Request::Ping => Response::Pong,
+            Request::Stats => Response::Stats(self.stats_json()),
+            Request::Shutdown => {
+                // lifecycle belongs to the ingress (the TCP handler
+                // intercepts this op before calling execute; HTTP does
+                // not route it at all)
+                Response::Error("shutdown is a connection-level op".into())
+            }
+            Request::Nll { text } => self.run_nll(text),
+            Request::Choice { context, choices } => self.run_choice(context, choices),
+            Request::Generate {
+                prompt,
+                max_tokens,
+                temperature,
+                seed,
+            } => self.run_generate(prompt, *max_tokens, *temperature, *seed),
+        }
+    }
+
+    fn run_nll(&self, text: &str) -> Response {
+        self.stats.nll_ops.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let mut ids = vec![BOS];
+        ids.extend(self.tokenizer.encode(text));
+        let rx = self.batcher.submit(ScoreRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            tokens: ids,
+            scored_from: 1,
+        });
+        match rx.recv() {
+            Ok(r) if r.tokens > 0 => Response::Nll {
+                mean_nll: r.sum_nll / r.tokens as f64,
+                sum_nll: r.sum_nll,
+                tokens: r.tokens,
+                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                batch_fill: r.batch_fill,
+            },
+            Ok(_) => Response::Error("text tokenized to nothing scorable".into()),
+            Err(_) => Response::Error("server shutting down".into()),
+        }
+    }
+
+    fn run_choice(&self, context: &str, choices: &[String]) -> Response {
+        self.stats.choice_ops.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        // submit all candidates, then await — they share batches
+        let ctx_len = self.tokenizer.encode(context).len();
+        let rxs: Vec<_> = choices
+            .iter()
+            .map(|c| {
+                let full = format!("{context} {c}");
+                let mut ids = vec![BOS];
+                ids.extend(self.tokenizer.encode(&full));
+                self.batcher.submit(ScoreRequest {
+                    id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                    tokens: ids,
+                    scored_from: 1 + ctx_len,
+                })
+            })
+            .collect();
+        let mut scores = Vec::with_capacity(rxs.len());
+        for rx in rxs {
+            match rx.recv() {
+                Ok(r) if r.tokens > 0 => scores.push(r.sum_nll / r.tokens as f64),
+                Ok(_) => scores.push(f64::INFINITY),
+                Err(_) => return Response::Error("server shutting down".into()),
+            }
+        }
+        // total_cmp, not partial_cmp().unwrap(): a NaN score
+        // (a degenerate model is the client's problem, not a
+        // reason to kill this connection's worker thread)
+        // must still produce a reply. Non-finite scores are
+        // excluded from the ranking outright — total order
+        // alone would let a sign-bit-set NaN (the default
+        // x86 arithmetic NaN) sort *below* every finite
+        // score and win. All-degenerate falls back to 0.
+        let best = scores
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_finite())
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        // JSON has no inf/NaN: clamp degenerate/unscorable
+        // entries to MAX so the reply stays numeric and
+        // index-aligned with the client's choices array
+        for s in scores.iter_mut() {
+            if !s.is_finite() {
+                *s = f64::MAX;
+            }
+        }
+        Response::Choice {
+            best,
+            scores,
+            latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+        }
+    }
+
+    fn run_generate(
+        &self,
+        prompt: &str,
+        max_tokens: usize,
+        temperature: f64,
+        seed: u64,
+    ) -> Response {
+        let Some(g) = &self.generator else {
+            return Response::Error(
+                "generation not supported by this backend (scoring-only server)".into(),
+            );
+        };
+        self.stats.generate_ops.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let mut ids = vec![BOS];
+        ids.extend(self.tokenizer.encode(prompt));
+        let rx = g.submit(GenRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            prompt: ids,
+            max_tokens: max_tokens.min(self.max_gen_tokens),
+            temperature: temperature as f32,
+            seed,
+            stop: Some(EOS),
+        });
+        match rx.recv() {
+            Ok(r) => Response::Generate {
+                text: self.tokenizer.decode(&r.tokens),
+                tokens: r.tokens.len(),
+                steps: r.steps as usize,
+                latency_ms: t0.elapsed().as_secs_f64() * 1e3,
+                mean_batch_fill: r.mean_batch_fill,
+            },
+            Err(_) => Response::Error("server shutting down".into()),
+        }
+    }
+
+    /// The `{"op":"stats"}` object — also reused by the HTTP `/metrics`
+    /// renderer for its gauge values, so the two views cannot drift.
+    pub fn stats_json(&self) -> Json {
+        let b = self.batcher.stats();
+        let mut fields = vec![
+            (
+                "connections",
+                Json::num(self.stats.connections.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "requests",
+                Json::num(self.stats.requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "errors",
+                Json::num(self.stats.errors.load(Ordering::Relaxed) as f64),
+            ),
+            ("batches", Json::num(b.batches as f64)),
+            ("rows_scored", Json::num(b.rows_scored as f64)),
+            ("timeout_flushes", Json::num(b.timeout_flushes as f64)),
+            ("queue_depth", Json::num(self.batcher.queue_depth() as f64)),
+        ];
+        if let Some(g) = &self.generator {
+            let gs = g.stats();
+            fields.push(("gen_requests", Json::num(gs.requests as f64)));
+            fields.push(("gen_completed", Json::num(gs.completed as f64)));
+            fields.push(("decode_steps", Json::num(gs.decode_steps as f64)));
+            fields.push(("tokens_generated", Json::num(gs.tokens_generated as f64)));
+            fields.push(("mean_batch_fill", Json::num(gs.mean_fill())));
+            fields.push((
+                "batch_fill",
+                Json::Arr(gs.batch_fill.iter().map(|&c| Json::num(c as f64)).collect()),
+            ));
+            fields.push(("prefill_nanos", Json::num(gs.prefill_nanos as f64)));
+            fields.push(("decode_nanos", Json::num(gs.decode_nanos as f64)));
+            fields.push(("decode_p50_us", Json::num(gs.decode_p50_us)));
+            fields.push(("decode_p99_us", Json::num(gs.decode_p99_us)));
+        }
+        Json::obj(fields)
+    }
+}

@@ -11,8 +11,10 @@ pub mod logging;
 pub mod mmap;
 pub mod perf;
 pub mod pool;
+pub mod prom;
 pub mod propcheck;
 pub mod rng;
+pub mod signal;
 pub mod timer;
 
 pub use rng::Rng;

@@ -188,6 +188,62 @@ impl Snapshot {
     }
 }
 
+impl super::prom::PromExport for Snapshot {
+    /// The kernel-telemetry families of the `/metrics` page (names are
+    /// part of the scrape contract; the conformance tests pin them).
+    fn prom_export(&self, w: &mut super::prom::PromWriter) {
+        use super::prom::PromKind::Counter;
+        w.metric(
+            "sparselm_spmm_calls_total",
+            "matrix-path packed GEMMs executed",
+            Counter,
+        );
+        w.sample("sparselm_spmm_calls_total", &[], self.spmm_calls as f64);
+        w.metric(
+            "sparselm_gemv_calls_total",
+            "GEMV-path (single activation row) packed applications",
+            Counter,
+        );
+        w.sample("sparselm_gemv_calls_total", &[], self.gemv_calls as f64);
+        w.metric(
+            "sparselm_operand_bytes_total",
+            "packed weight-operand bytes streamed through the spmm drivers",
+            Counter,
+        );
+        w.sample("sparselm_operand_bytes_total", &[], self.operand_bytes as f64);
+        w.metric(
+            "sparselm_decoded_blocks_total",
+            "N:M pattern blocks decoded",
+            Counter,
+        );
+        w.sample("sparselm_decoded_blocks_total", &[], self.decoded_blocks as f64);
+        w.metric(
+            "sparselm_phase_seconds_total",
+            "wall seconds accumulated per hot-path phase",
+            Counter,
+        );
+        for p in Phase::ALL {
+            w.sample(
+                "sparselm_phase_seconds_total",
+                &[("phase", p.name())],
+                self.phase_secs(p),
+            );
+        }
+        w.metric(
+            "sparselm_phase_calls_total",
+            "metered regions entered per hot-path phase",
+            Counter,
+        );
+        for p in Phase::ALL {
+            w.sample(
+                "sparselm_phase_calls_total",
+                &[("phase", p.name())],
+                self.phase_calls[p as usize] as f64,
+            );
+        }
+    }
+}
+
 /// Read every counter.
 pub fn snapshot() -> Snapshot {
     let mut s = Snapshot {
@@ -270,6 +326,33 @@ mod tests {
         // must not underflow
         let d = after.delta(&before);
         let _ = d;
+    }
+
+    #[test]
+    fn prom_export_is_valid_and_complete() {
+        use crate::util::prom::{parse_text, PromExport, PromWriter};
+        record_spmm(128, 4);
+        let snap = snapshot();
+        let mut w = PromWriter::new();
+        snap.prom_export(&mut w);
+        let page = w.finish();
+        let s = parse_text(&page).expect("perf export must parse as prometheus text");
+        assert_eq!(
+            s.value("sparselm_spmm_calls_total", &[]),
+            Some(snap.spmm_calls as f64)
+        );
+        assert_eq!(
+            s.value("sparselm_operand_bytes_total", &[]),
+            Some(snap.operand_bytes as f64)
+        );
+        for p in Phase::ALL {
+            assert!(
+                s.value("sparselm_phase_seconds_total", &[("phase", p.name())])
+                    .is_some(),
+                "missing phase {}",
+                p.name()
+            );
+        }
     }
 
     #[test]

@@ -1,0 +1,532 @@
+//! Prometheus text exposition (format 0.0.4) — writer, export trait and
+//! a strict parser/validator.
+//!
+//! The HTTP front end's `GET /metrics` endpoint ([`crate::serve::http`])
+//! assembles its reply through [`PromWriter`]; any subsystem that wants
+//! its counters on that page implements [`PromExport`] (the
+//! [`crate::util::perf::Snapshot`] impl is the blueprint). The matching
+//! [`parse_text`] is the *consumer* side — the scrape tests and the
+//! `http_load` bench validate every emitted page through it, so a
+//! malformed exposition (missing `# TYPE`, bad label escaping, a
+//! histogram whose buckets are not cumulative) fails in CI rather than
+//! in a production Prometheus server.
+//!
+//! No third-party crate is involved (the offline registry carries none);
+//! the subset implemented is exactly what the format spec requires for
+//! counters, gauges and histograms: `# HELP`/`# TYPE` comment lines
+//! preceding each family, label values escaped with `\\`, `\"` and
+//! `\n`, and sample values rendered as integers whenever they are
+//! integral (Prometheus parses either form; integral rendering keeps
+//! counter pages diffable).
+
+use std::collections::BTreeMap;
+
+/// Metric family kind, rendered into the `# TYPE` line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PromKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl PromKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PromKind::Counter => "counter",
+            PromKind::Gauge => "gauge",
+            PromKind::Histogram => "histogram",
+        }
+    }
+}
+
+/// Anything that can append metric families to a scrape page.
+pub trait PromExport {
+    fn prom_export(&self, w: &mut PromWriter);
+}
+
+/// Incremental builder for one scrape page.
+///
+/// Call [`PromWriter::metric`] once per family (it writes the
+/// `# HELP` / `# TYPE` pair), then [`PromWriter::sample`] for each
+/// sample of that family, then [`PromWriter::finish`].
+#[derive(Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter::default()
+    }
+
+    /// Start a metric family: `# HELP` + `# TYPE` lines.
+    pub fn metric(&mut self, name: &str, help: &str, kind: PromKind) {
+        debug_assert!(valid_metric_name(name), "bad metric name {name:?}");
+        self.out.push_str("# HELP ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(&escape_help(help));
+        self.out.push('\n');
+        self.out.push_str("# TYPE ");
+        self.out.push_str(name);
+        self.out.push(' ');
+        self.out.push_str(kind.name());
+        self.out.push('\n');
+    }
+
+    /// Append one sample line. `name` may extend the family name with
+    /// the histogram suffixes (`_bucket`, `_sum`, `_count`); label
+    /// values are escaped here, so callers pass them raw.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                self.out.push_str(k);
+                self.out.push_str("=\"");
+                self.out.push_str(&escape_label(v));
+                self.out.push('"');
+            }
+            self.out.push('}');
+        }
+        self.out.push(' ');
+        self.out.push_str(&fmt_value(value));
+        self.out.push('\n');
+    }
+
+    /// The assembled page.
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Escape a `# HELP` text: `\\` and `\n`.
+pub fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value: `\\`, `\"` and `\n`.
+pub fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Render a sample value: integral f64s print without a decimal point
+/// (both forms are valid; the integral form keeps counters exact and
+/// pages diffable), non-finite values use the spec spellings.
+fn fmt_value(v: f64) -> String {
+    if v.is_nan() {
+        return "NaN".into();
+    }
+    if v.is_infinite() {
+        return if v > 0.0 { "+Inf".into() } else { "-Inf".into() };
+    }
+    if v.fract() == 0.0 && v.abs() < 9.007_199_254_740_992e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+fn valid_metric_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars().enumerate().all(|(i, c)| {
+            c.is_ascii_alphabetic() || c == '_' || c == ':' || (i > 0 && c.is_ascii_digit())
+        })
+}
+
+fn valid_label_name(s: &str) -> bool {
+    !s.is_empty()
+        && s.chars()
+            .enumerate()
+            .all(|(i, c)| c.is_ascii_alphabetic() || c == '_' || (i > 0 && c.is_ascii_digit()))
+}
+
+/// One parsed sample line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PromSample {
+    /// full sample name (family name, possibly + `_bucket`/`_sum`/`_count`)
+    pub name: String,
+    /// label pairs in source order, values unescaped
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+/// One parsed metric family.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PromFamily {
+    pub kind: String,
+    pub help: String,
+    pub samples: Vec<PromSample>,
+}
+
+/// A fully parsed scrape page.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PromScrape {
+    pub families: BTreeMap<String, PromFamily>,
+}
+
+impl PromScrape {
+    /// Value of the sample with exactly these labels (order-insensitive).
+    pub fn value(&self, sample_name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        let fam = self.family_of(sample_name)?;
+        fam.samples
+            .iter()
+            .find(|s| {
+                s.name == sample_name
+                    && s.labels.len() == labels.len()
+                    && labels.iter().all(|(k, v)| {
+                        s.labels.iter().any(|(sk, sv)| sk == k && sv == v)
+                    })
+            })
+            .map(|s| s.value)
+    }
+
+    /// Sum over every sample named `sample_name`, optionally restricted
+    /// to those carrying all of `labels`.
+    pub fn sum(&self, sample_name: &str, labels: &[(&str, &str)]) -> f64 {
+        let Some(fam) = self.family_of(sample_name) else {
+            return 0.0;
+        };
+        fam.samples
+            .iter()
+            .filter(|s| {
+                s.name == sample_name
+                    && labels.iter().all(|(k, v)| {
+                        s.labels.iter().any(|(sk, sv)| sk == k && sv == v)
+                    })
+            })
+            .map(|s| s.value)
+            .sum()
+    }
+
+    fn family_of(&self, sample_name: &str) -> Option<&PromFamily> {
+        if let Some(f) = self.families.get(sample_name) {
+            return Some(f);
+        }
+        for suffix in ["_bucket", "_sum", "_count"] {
+            if let Some(base) = sample_name.strip_suffix(suffix) {
+                if let Some(f) = self.families.get(base) {
+                    if f.kind == "histogram" {
+                        return Some(f);
+                    }
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Parse and validate a text-format scrape page.
+///
+/// Strict by design — this is the test oracle for everything the
+/// `/metrics` endpoint emits. Rejections: samples without a preceding
+/// `# TYPE`, duplicate `# TYPE` lines, invalid metric/label names,
+/// unterminated or badly escaped label values, unparsable sample
+/// values, histogram `_bucket` series whose cumulative counts decrease,
+/// and counter samples with negative values.
+pub fn parse_text(text: &str) -> Result<PromScrape, String> {
+    let mut scrape = PromScrape::default();
+    for (ln, line) in text.lines().enumerate() {
+        let err = |msg: String| format!("line {}: {msg}", ln + 1);
+        let line = line.trim_end();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let (name, help) = rest
+                .split_once(' ')
+                .map(|(n, h)| (n, h.to_string()))
+                .unwrap_or((rest, String::new()));
+            if !valid_metric_name(name) {
+                return Err(err(format!("bad metric name in HELP: {name:?}")));
+            }
+            scrape.families.entry(name.to_string()).or_default().help = help;
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let (name, kind) = rest
+                .split_once(' ')
+                .ok_or_else(|| err("TYPE line needs a kind".into()))?;
+            if !valid_metric_name(name) {
+                return Err(err(format!("bad metric name in TYPE: {name:?}")));
+            }
+            if !matches!(kind, "counter" | "gauge" | "histogram" | "summary" | "untyped") {
+                return Err(err(format!("unknown TYPE kind {kind:?}")));
+            }
+            let fam = scrape.families.entry(name.to_string()).or_default();
+            if !fam.kind.is_empty() {
+                return Err(err(format!("duplicate TYPE for {name}")));
+            }
+            if !fam.samples.is_empty() {
+                return Err(err(format!("TYPE for {name} after its samples")));
+            }
+            fam.kind = kind.to_string();
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+        let sample = parse_sample(line).map_err(&err)?;
+        let fam_name = family_name_of(&scrape, &sample.name)
+            .ok_or_else(|| err(format!("sample {} has no preceding # TYPE", sample.name)))?;
+        let fam = scrape.families.get(&fam_name).unwrap();
+        if fam.kind == "counter" && sample.value < 0.0 {
+            return Err(err(format!("counter {} went negative", sample.name)));
+        }
+        scrape
+            .families
+            .get_mut(&fam_name)
+            .unwrap()
+            .samples
+            .push(sample);
+    }
+    validate_histograms(&scrape)?;
+    Ok(scrape)
+}
+
+fn family_name_of(scrape: &PromScrape, sample_name: &str) -> Option<String> {
+    let typed = |n: &str| {
+        scrape
+            .families
+            .get(n)
+            .is_some_and(|f| !f.kind.is_empty())
+    };
+    if typed(sample_name) {
+        return Some(sample_name.to_string());
+    }
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = sample_name.strip_suffix(suffix) {
+            if typed(base) && scrape.families[base].kind == "histogram" {
+                return Some(base.to_string());
+            }
+        }
+    }
+    None
+}
+
+fn parse_sample(line: &str) -> Result<PromSample, String> {
+    let (name_labels, value_str) = match line.find('{') {
+        Some(brace) => {
+            let close = line
+                .rfind('}')
+                .ok_or_else(|| format!("unterminated label set: {line:?}"))?;
+            if close < brace {
+                return Err(format!("mismatched braces: {line:?}"));
+            }
+            (&line[..close + 1], line[close + 1..].trim())
+        }
+        None => {
+            let sp = line
+                .find(' ')
+                .ok_or_else(|| format!("sample line without value: {line:?}"))?;
+            (&line[..sp], line[sp + 1..].trim())
+        }
+    };
+    // optional trailing timestamp: `value [timestamp]`
+    let value_str = value_str.split(' ').next().unwrap_or(value_str);
+    let value = match value_str {
+        "+Inf" => f64::INFINITY,
+        "-Inf" => f64::NEG_INFINITY,
+        "NaN" => f64::NAN,
+        v => v
+            .parse::<f64>()
+            .map_err(|_| format!("bad sample value {v:?}"))?,
+    };
+    let (name, labels) = match name_labels.find('{') {
+        None => (name_labels.to_string(), Vec::new()),
+        Some(brace) => {
+            let name = &name_labels[..brace];
+            let body = &name_labels[brace + 1..name_labels.len() - 1];
+            (name.to_string(), parse_labels(body)?)
+        }
+    };
+    if !valid_metric_name(&name) {
+        return Err(format!("bad sample name {name:?}"));
+    }
+    Ok(PromSample { name, labels, value })
+}
+
+fn parse_labels(body: &str) -> Result<Vec<(String, String)>, String> {
+    let mut labels = Vec::new();
+    let mut rest = body;
+    while !rest.is_empty() {
+        let eq = rest
+            .find('=')
+            .ok_or_else(|| format!("label without '=': {rest:?}"))?;
+        let name = rest[..eq].trim();
+        if !valid_label_name(name) {
+            return Err(format!("bad label name {name:?}"));
+        }
+        let after = &rest[eq + 1..];
+        if !after.starts_with('"') {
+            return Err(format!("label value must be quoted: {after:?}"));
+        }
+        // unescape until the closing quote
+        let mut value = String::new();
+        let mut chars = after[1..].char_indices();
+        let mut end = None;
+        loop {
+            let Some((i, c)) = chars.next() else { break };
+            match c {
+                '"' => {
+                    end = Some(i);
+                    break;
+                }
+                '\\' => match chars.next() {
+                    Some((_, 'n')) => value.push('\n'),
+                    Some((_, '\\')) => value.push('\\'),
+                    Some((_, '"')) => value.push('"'),
+                    other => return Err(format!("bad escape \\{other:?}")),
+                },
+                c => value.push(c),
+            }
+        }
+        let end = end.ok_or_else(|| format!("unterminated label value: {after:?}"))?;
+        labels.push((name.to_string(), value));
+        rest = after[1 + end + 1..].trim_start_matches(',').trim_start();
+    }
+    Ok(labels)
+}
+
+fn validate_histograms(scrape: &PromScrape) -> Result<(), String> {
+    for (name, fam) in &scrape.families {
+        if fam.kind != "histogram" {
+            continue;
+        }
+        let bucket_name = format!("{name}_bucket");
+        // group buckets by their non-`le` label set
+        let mut series: BTreeMap<Vec<(String, String)>, Vec<(f64, f64)>> = BTreeMap::new();
+        for s in fam.samples.iter().filter(|s| s.name == bucket_name) {
+            let le = s
+                .labels
+                .iter()
+                .find(|(k, _)| k == "le")
+                .ok_or_else(|| format!("{bucket_name} sample without le label"))?;
+            let bound = match le.1.as_str() {
+                "+Inf" => f64::INFINITY,
+                v => v
+                    .parse::<f64>()
+                    .map_err(|_| format!("{bucket_name}: bad le {v:?}"))?,
+            };
+            let key: Vec<(String, String)> = s
+                .labels
+                .iter()
+                .filter(|(k, _)| k != "le")
+                .cloned()
+                .collect();
+            series.entry(key).or_default().push((bound, s.value));
+        }
+        for (key, mut buckets) in series {
+            buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+            if buckets.last().map(|b| b.0) != Some(f64::INFINITY) {
+                return Err(format!("{bucket_name}{key:?}: missing +Inf bucket"));
+            }
+            for w in buckets.windows(2) {
+                if w[1].1 < w[0].1 {
+                    return Err(format!(
+                        "{bucket_name}{key:?}: buckets not cumulative \
+                         (le={} count {} > le={} count {})",
+                        w[0].0, w[0].1, w[1].0, w[1].1
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writer_emits_valid_page() {
+        let mut w = PromWriter::new();
+        w.metric("demo_requests_total", "requests seen", PromKind::Counter);
+        w.sample("demo_requests_total", &[("route", "score")], 3.0);
+        w.sample("demo_requests_total", &[("route", "health")], 0.0);
+        w.metric("demo_inflight", "current in-flight", PromKind::Gauge);
+        w.sample("demo_inflight", &[], 2.0);
+        let page = w.finish();
+        let s = parse_text(&page).unwrap();
+        assert_eq!(s.value("demo_requests_total", &[("route", "score")]), Some(3.0));
+        assert_eq!(s.sum("demo_requests_total", &[]), 3.0);
+        assert_eq!(s.value("demo_inflight", &[]), Some(2.0));
+        assert_eq!(s.families["demo_requests_total"].kind, "counter");
+        assert_eq!(s.families["demo_requests_total"].help, "requests seen");
+    }
+
+    #[test]
+    fn label_escaping_roundtrips() {
+        let nasty = "a\"b\\c\nd";
+        let mut w = PromWriter::new();
+        w.metric("demo_labels", "escape me: \\ and\nnewline", PromKind::Gauge);
+        w.sample("demo_labels", &[("k", nasty)], 1.0);
+        let page = w.finish();
+        let s = parse_text(&page).unwrap();
+        assert_eq!(s.value("demo_labels", &[("k", nasty)]), Some(1.0));
+        let sample = &s.families["demo_labels"].samples[0];
+        assert_eq!(sample.labels[0].1, nasty, "unescape(escape(v)) == v");
+    }
+
+    #[test]
+    fn histogram_buckets_must_be_cumulative() {
+        let mut w = PromWriter::new();
+        w.metric("demo_lat", "latency", PromKind::Histogram);
+        w.sample("demo_lat_bucket", &[("le", "0.1")], 1.0);
+        w.sample("demo_lat_bucket", &[("le", "+Inf")], 3.0);
+        w.sample("demo_lat_sum", &[], 0.5);
+        w.sample("demo_lat_count", &[], 3.0);
+        assert!(parse_text(&w.finish()).is_ok());
+
+        let bad = "# TYPE demo_lat histogram\n\
+                   demo_lat_bucket{le=\"0.1\"} 5\n\
+                   demo_lat_bucket{le=\"+Inf\"} 3\n";
+        let e = parse_text(bad).unwrap_err();
+        assert!(e.contains("not cumulative"), "{e}");
+        let no_inf = "# TYPE demo_lat histogram\ndemo_lat_bucket{le=\"0.1\"} 5\n";
+        assert!(parse_text(no_inf).unwrap_err().contains("+Inf"));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_pages() {
+        for (bad, why) in [
+            ("orphan_metric 1\n", "no preceding # TYPE"),
+            ("# TYPE x counter\n# TYPE x counter\nx 1\n", "duplicate TYPE"),
+            ("# TYPE x frobnitz\n", "unknown TYPE kind"),
+            ("# TYPE x counter\nx -3\n", "negative"),
+            ("# TYPE x counter\nx{k=\"v} 1\n", "unterminated"),
+            ("# TYPE x counter\nx{9bad=\"v\"} 1\n", "bad label name"),
+            ("# TYPE x counter\nx notanumber\n", "bad sample value"),
+        ] {
+            let e = parse_text(bad).unwrap_err();
+            assert!(e.contains(why), "{bad:?}: got {e:?}, want {why:?}");
+        }
+    }
+
+    #[test]
+    fn integral_values_render_without_decimal() {
+        assert_eq!(fmt_value(3.0), "3");
+        assert_eq!(fmt_value(0.0), "0");
+        assert_eq!(fmt_value(2.5), "2.5");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert_eq!(fmt_value(f64::NAN), "NaN");
+        // past 2^53 the i64 render would lie; keep the float form
+        assert!(fmt_value(1e18).contains('e') || fmt_value(1e18).contains("000"));
+    }
+
+    #[test]
+    fn metric_and_label_name_validation() {
+        assert!(valid_metric_name("http_requests_total"));
+        assert!(valid_metric_name("ns:sub_total"));
+        assert!(!valid_metric_name("9starts_with_digit"));
+        assert!(!valid_metric_name("has space"));
+        assert!(!valid_metric_name(""));
+        assert!(valid_label_name("route"));
+        assert!(!valid_label_name("le:"));
+    }
+}

@@ -1,0 +1,80 @@
+//! SIGTERM/SIGINT latch for graceful drain — no `libc` crate.
+//!
+//! The offline registry carries no signal-handling crate, but `std`
+//! already links the platform libc, so the two C symbols the drain path
+//! needs (`signal` with a plain handler) are declared here directly.
+//! The handler does the only async-signal-safe thing possible: it sets
+//! a static `AtomicBool`. The serving CLI polls
+//! [`termination_requested`] from an ordinary thread and runs the
+//! actual drain (stop accepting, finish in-flight, flush metrics — see
+//! `docs/ARCHITECTURE.md` §HTTP front end) in normal code.
+//!
+//! [`trigger`] latches the same flag from safe code, so tests and
+//! embedding processes can exercise the drain path without delivering a
+//! real signal.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+static TERM: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+mod imp {
+    use std::sync::atomic::Ordering;
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" {
+        // `sighandler_t signal(int, sighandler_t)`; the previous-handler
+        // return value is a pointer we never inspect, declared as usize.
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+
+    extern "C" fn on_signal(_signum: i32) {
+        super::TERM.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        unsafe {
+            signal(SIGTERM, on_signal);
+            signal(SIGINT, on_signal);
+        }
+    }
+}
+
+#[cfg(not(unix))]
+mod imp {
+    pub fn install() {}
+}
+
+/// Install the latch for SIGTERM and SIGINT. Idempotent; call once at
+/// server startup. On non-unix targets this is a no-op and only
+/// [`trigger`] can latch the flag.
+pub fn install() {
+    imp::install();
+}
+
+/// Has a termination signal (or [`trigger`]) been seen?
+pub fn termination_requested() -> bool {
+    TERM.load(Ordering::SeqCst)
+}
+
+/// Latch the flag from safe code (tests, embedders).
+pub fn trigger() {
+    TERM.store(true, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trigger_latches_the_flag() {
+        // process-global: install first so the handler path compiles in,
+        // then latch via the safe entry point (delivering a real signal
+        // from a test would race the whole test binary)
+        install();
+        trigger();
+        assert!(termination_requested());
+    }
+}

@@ -1,0 +1,114 @@
+//! Backpressure: the admission gate bounds concurrent model work, the
+//! overflow is rejected *immediately* with `429 + Retry-After` (never
+//! queued), the inflight gauge on `/metrics` matches the observed
+//! concurrency, and the books balance exactly:
+//! admitted + rejected == sent.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparselm::data::Tokenizer;
+use sparselm::serve::{
+    serve, HttpClient, HttpConfig, HttpHandle, ScoreRequest, Scorer, ServerConfig, ServerHandle,
+};
+use sparselm::util::prom;
+
+/// A scorer that holds each batch for `hold` — requests pile up on the
+/// admission gate deterministically.
+fn boot_slow(hold: Duration, max_inflight: usize) -> (ServerHandle, HttpHandle) {
+    let factory = move || -> sparselm::Result<Scorer> {
+        Ok(Box::new(move |reqs: &[ScoreRequest]| {
+            std::thread::sleep(hold);
+            Ok(reqs.iter().map(|r| (1.0, r.tokens.len().max(1) - 1)).collect())
+        }))
+    };
+    let tok = Arc::new(Tokenizer::fit("the quick brown fox jumps over the lazy dog", 64));
+    let handle = serve(
+        factory,
+        tok,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 16,
+            // one request per batch: each blocker occupies the scorer
+            // (and its gate slot) for a full `hold`
+            max_batch: 1,
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let http = handle
+        .attach_http(HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            max_inflight,
+            ..Default::default()
+        })
+        .unwrap();
+    (handle, http)
+}
+
+#[test]
+fn saturated_gate_rejects_with_retry_after_and_exact_accounting() {
+    const CAP: usize = 2;
+    const PROBES: usize = 4;
+    let (handle, http) = boot_slow(Duration::from_millis(500), CAP);
+    let addr = http.addr;
+
+    // fill the gate: CAP blockers, each held by the slow scorer (the
+    // second one queues behind the first inside the batcher, holding
+    // its gate slot the whole time)
+    let mut blockers = Vec::new();
+    for i in 0..CAP {
+        blockers.push(std::thread::spawn(move || {
+            let mut cl = HttpClient::connect(addr).unwrap();
+            cl.set_timeout(Duration::from_secs(30)).unwrap();
+            cl.post_json("/score", &format!("{{\"text\": \"blocker {i}\"}}")).unwrap().status
+        }));
+    }
+    // let both blockers through their admission before probing
+    let t0 = std::time::Instant::now();
+    while http.inflight() < CAP {
+        assert!(t0.elapsed() < Duration::from_secs(10), "blockers never admitted");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // the inflight gauge on a live scrape reads the observed concurrency
+    let mut cl = HttpClient::connect(addr).unwrap();
+    cl.set_timeout(Duration::from_secs(30)).unwrap();
+    let s = prom::parse_text(&cl.get("/metrics").unwrap().text()).unwrap();
+    assert_eq!(s.value("http_inflight", &[]), Some(CAP as f64));
+    assert_eq!(s.value("http_inflight_limit", &[]), Some(CAP as f64));
+
+    // every probe while saturated: immediate 429 carrying Retry-After,
+    // connection kept alive (a 429 is not protocol damage)
+    for p in 0..PROBES {
+        let reply = cl.post_json("/score", &format!("{{\"text\": \"probe {p}\"}}")).unwrap();
+        assert_eq!(reply.status, 429, "probe {p}");
+        assert_eq!(reply.header("retry-after"), Some("1"), "probe {p}");
+        let j = reply.json().unwrap();
+        assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+    }
+
+    // the blockers were never evicted by the probes
+    for b in blockers {
+        assert_eq!(b.join().unwrap(), 200, "blockers must complete");
+    }
+
+    // books balance exactly: every sent request is admitted or rejected
+    let sent = (CAP + PROBES) as u64;
+    let stats = http.stats();
+    assert_eq!(stats.admitted(), CAP as u64);
+    assert_eq!(stats.rejected(), PROBES as u64);
+    assert_eq!(stats.admitted() + stats.rejected(), sent);
+    let s = prom::parse_text(&cl.get("/metrics").unwrap().text()).unwrap();
+    assert_eq!(s.sum("http_requests_total", &[("route", "score")]), sent as f64);
+    assert_eq!(s.value("http_rejected_total", &[]), Some(PROBES as f64));
+
+    // the gate drains: slots are released and new work flows again
+    assert_eq!(http.inflight(), 0);
+    let reply = cl.post_json("/score", "{\"text\": \"after the storm\"}").unwrap();
+    assert_eq!(reply.status, 200);
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}

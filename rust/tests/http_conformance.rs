@@ -1,0 +1,229 @@
+//! HTTP conformance under hostile traffic: every malformed request in
+//! the sweep must get a well-formed error response (or a clean close) —
+//! never a panic, never a hung connection — and the server must keep
+//! serving afterwards. Mirrors the TCP garbage-line test from the
+//! quantized-serving PR at the HTTP layer.
+
+use std::io::Read;
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparselm::data::Tokenizer;
+use sparselm::serve::{
+    serve, HttpClient, HttpConfig, HttpHandle, ScoreRequest, Scorer, ServerConfig, ServerHandle,
+};
+
+/// Cheap deterministic server: a fake scorer (1.0 sum-NLL per row), no
+/// generator — conformance is about framing, not the model.
+fn boot(cfg: HttpConfig) -> (ServerHandle, HttpHandle) {
+    let factory = || -> sparselm::Result<Scorer> {
+        Ok(Box::new(|reqs: &[ScoreRequest]| {
+            Ok(reqs.iter().map(|r| (1.0, r.tokens.len().max(1) - 1)).collect())
+        }))
+    };
+    let tok = Arc::new(Tokenizer::fit("the quick brown fox jumps over the lazy dog", 64));
+    let handle = serve(
+        factory,
+        tok,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 8,
+            max_batch: 2,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let http = handle.attach_http(cfg).unwrap();
+    (handle, http)
+}
+
+fn client(http: &HttpHandle) -> HttpClient {
+    let mut cl = HttpClient::connect(http.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(10)).unwrap();
+    cl
+}
+
+#[test]
+fn method_and_path_errors_keep_the_connection_alive() {
+    let (handle, http) = boot(HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    });
+    let mut cl = client(&http);
+
+    // wrong method on a known path: 405 + Allow, connection reusable
+    cl.send_raw(b"DELETE /score HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+    let reply = cl.read_reply().unwrap();
+    assert_eq!(reply.status, 405);
+    assert_eq!(reply.header("allow"), Some("POST"));
+
+    cl.send_raw(b"POST /health HTTP/1.1\r\nHost: x\r\nContent-Length: 0\r\n\r\n").unwrap();
+    assert_eq!(cl.read_reply().unwrap().status, 405);
+
+    // unknown path: 404, still alive
+    assert_eq!(cl.get("/nope").unwrap().status, 404);
+
+    // the same socket still serves real work after all three errors
+    assert_eq!(cl.get("/health").unwrap().status, 200);
+    let reply = cl.post_json("/score", "{\"text\": \"still fine\"}").unwrap();
+    assert_eq!(reply.status, 200);
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn framing_violations_answer_then_close() {
+    let (handle, http) = boot(HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        max_head: 512,
+        max_body: 4096,
+        ..Default::default()
+    });
+
+    // declared body over max_body: rejected from the header alone
+    let mut cl = client(&http);
+    cl.send_raw(b"POST /score HTTP/1.1\r\nHost: x\r\nContent-Length: 1000000\r\n\r\n").unwrap();
+    let reply = cl.read_reply().unwrap();
+    assert_eq!(reply.status, 413);
+    assert_eq!(reply.header("connection"), Some("close"));
+    assert!(cl.get("/health").is_err(), "server must close after 413");
+
+    // head growing past max_head without ever terminating: 431
+    let mut cl = client(&http);
+    let huge = format!("GET /health HTTP/1.1\r\nX-Junk: {}\r\n", "j".repeat(600));
+    cl.send_raw(huge.as_bytes()).unwrap();
+    assert_eq!(cl.read_reply().unwrap().status, 431);
+
+    // chunked transfer encoding is not implemented: 501, close
+    let mut cl = client(&http);
+    cl.send_raw(
+        b"POST /score HTTP/1.1\r\nHost: x\r\nTransfer-Encoding: chunked\r\n\r\n\
+          5\r\nhello\r\n0\r\n\r\n",
+    )
+    .unwrap();
+    assert_eq!(cl.read_reply().unwrap().status, 501);
+
+    // unknown protocol version: 505
+    let mut cl = client(&http);
+    cl.send_raw(b"GET /health HTTP/2.0\r\nHost: x\r\n\r\n").unwrap();
+    assert_eq!(cl.read_reply().unwrap().status, 505);
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn truncated_head_gets_a_400_on_eof() {
+    let (handle, http) = boot(HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    });
+    let stream = TcpStream::connect(http.addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    use std::io::Write;
+    let mut s = stream;
+    s.write_all(b"GET /health HTTP/1.1\r\nHost: trunc").unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    let mut reply = String::new();
+    s.read_to_string(&mut reply).unwrap();
+    assert!(reply.starts_with("HTTP/1.1 400 "), "got {reply:?}");
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn slow_loris_is_cut_off_with_408() {
+    let (handle, http) = boot(HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        read_timeout: Duration::from_millis(200),
+        ..Default::default()
+    });
+    let mut cl = client(&http);
+    // a head that trickles in and never finishes
+    cl.send_raw(b"GET /health HTT").unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    cl.send_raw(b"P/1.1\r\nHost: slo").unwrap();
+    let reply = cl.read_reply().unwrap();
+    assert_eq!(reply.status, 408);
+    assert_eq!(reply.header("connection"), Some("close"));
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn pipelined_requests_are_answered_in_order() {
+    let (handle, http) = boot(HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        ..Default::default()
+    });
+    let mut cl = client(&http);
+    let body = "{\"text\": \"pipelined\"}";
+    let score = format!(
+        "POST /score HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len(),
+    );
+    let burst = format!(
+        "GET /health HTTP/1.1\r\nHost: x\r\n\r\n{score}GET /health HTTP/1.1\r\nHost: x\r\n\r\n"
+    );
+    cl.send_raw(burst.as_bytes()).unwrap();
+    let first = cl.read_reply().unwrap();
+    assert_eq!(first.status, 200);
+    assert!(first.text().contains("\"status\""), "health first: {first:?}");
+    let second = cl.read_reply().unwrap();
+    assert_eq!(second.status, 200);
+    assert!(second.text().contains("mean_nll"), "score second: {second:?}");
+    assert_eq!(cl.read_reply().unwrap().status, 200);
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn garbage_sweep_never_kills_the_server() {
+    let (handle, http) = boot(HttpConfig {
+        addr: "127.0.0.1:0".into(),
+        max_head: 1024,
+        ..Default::default()
+    });
+    let garbage: [&[u8]; 16] = [
+        b"\x00\x01\x02\x03\r\n\r\n",
+        b"\xff\xfe\xfd not utf8 \xba\xad\r\n\r\n",
+        b"GET\r\n\r\n",
+        b"GET /health\r\n\r\n",
+        b"GET /health SPDY/3\r\n\r\n",
+        b"GET /health HTTP/1.1 extra-token\r\n\r\n",
+        b"G\x7fT /health HTTP/1.1\r\n\r\n",
+        b"G=T /health HTTP/1.1\r\n\r\n",
+        b"GET /health HTTP/1.1\r\nNoColonHere\r\n\r\n",
+        b"GET /health HTTP/1.1\r\nBad Name: v\r\n\r\n",
+        b"GET /health HTTP/1.1\r\n folded-before-any-header\r\n\r\n",
+        b"POST /score HTTP/1.1\r\nContent-Length: abc\r\n\r\n",
+        b"POST /score HTTP/1.1\r\nContent-Length: -5\r\n\r\n",
+        b"POST /score HTTP/1.1\r\nContent-Length: 99999999999999999999999\r\n\r\n",
+        b"POST /score HTTP/1.1\r\nContent-Length: 3\r\nContent-Length: 7\r\n\r\nxyz1234",
+        b"lol{\"op\": \"nll\"}\r\n\r\n",
+    ];
+    for (i, payload) in garbage.iter().enumerate() {
+        let mut cl = client(&http);
+        cl.send_raw(payload).unwrap();
+        match cl.read_reply() {
+            Ok(reply) => {
+                let code = reply.status;
+                assert!((400..=505).contains(&code), "garbage #{i} got status {code}");
+            }
+            Err(e) => panic!("garbage #{i}: no well-formed error reply: {e}"),
+        }
+    }
+    // after the whole sweep the server still serves clean traffic
+    let mut cl = client(&http);
+    assert_eq!(cl.get("/health").unwrap().status, 200);
+    assert_eq!(cl.post_json("/score", "{\"text\": \"survived\"}").unwrap().status, 200);
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}

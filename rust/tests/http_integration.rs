@@ -1,0 +1,154 @@
+//! HTTP front-end integration: both ingresses run the same
+//! [`sparselm::serve::Service`], so `POST /score` and `POST /generate`
+//! must answer with the SAME bytes as the TCP line protocol for the
+//! same request (timing fields excluded), and the lifecycle endpoints
+//! (`/health`, drain) must track the handle's state.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparselm::data::{CorpusKind, CorpusSpec, Tokenizer, World};
+use sparselm::model::{ModelConfig, ParamSet, SparseLm};
+use sparselm::serve::{
+    serve_generate, spmm_generator, spmm_scorer, HttpClient, HttpConfig, HttpHandle, ServerConfig,
+    ServerHandle,
+};
+use sparselm::util::json::Json;
+use sparselm::util::prom;
+use sparselm::util::Rng;
+
+/// Boot a tiny packed model behind both ingresses.
+fn boot() -> (ServerHandle, HttpHandle) {
+    let mut cfg = ModelConfig::preset("tiny").unwrap();
+    cfg.n_layers = 2;
+    cfg.seq = 48;
+    cfg.batch = 2;
+    let mut rng = Rng::new(4096);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let lm = Arc::new(SparseLm::compress(&params, 8, 16, 16));
+    let world = World::new(7);
+    let text = CorpusSpec::new(CorpusKind::Wiki, 8_000, 3).generate(&world);
+    let tok = Arc::new(Tokenizer::fit(&text, cfg.vocab));
+    let handle = serve_generate(
+        spmm_scorer(Arc::clone(&lm)),
+        spmm_generator(lm, 4),
+        tok,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 8,
+            max_batch: cfg.batch,
+            max_wait: Duration::from_millis(3),
+            max_gen_tokens: 16,
+        },
+    )
+    .unwrap();
+    let http = handle
+        .attach_http(HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        })
+        .unwrap();
+    (handle, http)
+}
+
+/// One raw line-protocol round trip (no client-side normalization —
+/// the exact bytes the TCP server wrote, newline stripped).
+fn tcp_answer(addr: SocketAddr, line: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    let mut reply = String::new();
+    BufReader::new(s).read_line(&mut reply).unwrap();
+    reply.trim_end().to_string()
+}
+
+/// Drop the wall-clock fields and re-serialize; object keys are
+/// BTreeMap-sorted, so equal results give byte-equal strings.
+fn strip_timing(text: &str) -> String {
+    let mut v = Json::parse(text).unwrap_or_else(|e| panic!("bad json {text:?}: {e}"));
+    if let Json::Obj(m) = &mut v {
+        m.remove("latency_ms");
+        m.remove("mean_batch_fill");
+    }
+    v.to_string()
+}
+
+#[test]
+fn score_and_generate_byte_match_the_tcp_answers() {
+    let (handle, http) = boot();
+    let mut cl = HttpClient::connect(http.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(120)).unwrap();
+
+    // nll: POST /score {"text"} == {"op":"nll","text"} over TCP
+    let text = "the quick brown fox jumps over the lazy dog";
+    let tcp = tcp_answer(handle.addr, &format!("{{\"op\": \"nll\", \"text\": \"{text}\"}}"));
+    let reply = cl.post_json("/score", &format!("{{\"text\": \"{text}\"}}")).unwrap();
+    assert_eq!(reply.status, 200);
+    assert_eq!(strip_timing(&reply.text()), strip_timing(&tcp), "nll parity");
+
+    // choice: a "choices" field routes the same body to the choice op
+    let body = "{\"context\": \"the quick\", \"choices\": [\"brown fox\", \"lazy dog\"]}";
+    let tcp = tcp_answer(handle.addr, &format!("{{\"op\": \"choice\", {}", &body[1..]));
+    let reply = cl.post_json("/score", body).unwrap();
+    assert_eq!(reply.status, 200);
+    assert_eq!(strip_timing(&reply.text()), strip_timing(&tcp), "choice parity");
+
+    // generate: greedy decoding is deterministic, so even the token
+    // stream must agree between the ingresses
+    let body = "{\"prompt\": \"the quick brown\", \"max_tokens\": 8, \"temperature\": 0}";
+    let tcp = tcp_answer(handle.addr, &format!("{{\"op\": \"generate\", {}", &body[1..]));
+    let reply = cl.post_json("/generate", body).unwrap();
+    assert_eq!(reply.status, 200);
+    assert_eq!(strip_timing(&reply.text()), strip_timing(&tcp), "generate parity");
+
+    // validation errors share the validator, so even the error JSON is
+    // byte-identical (HTTP adds only the 400 status around it)
+    let tcp = tcp_answer(handle.addr, "{\"op\": \"nll\", \"text\": \"\"}");
+    let reply = cl.post_json("/score", "{\"text\": \"\"}").unwrap();
+    assert_eq!(reply.status, 400);
+    assert_eq!(reply.text(), tcp, "error-body parity");
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn health_flips_to_503_while_draining_and_metrics_stay_scrapable() {
+    let (handle, http) = boot();
+    let mut cl = HttpClient::connect(http.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(30)).unwrap();
+
+    let reply = cl.get("/health").unwrap();
+    assert_eq!(reply.status, 200);
+    let j = reply.json().unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(true));
+    assert_eq!(j.get("generate").and_then(|v| v.as_bool()), Some(true));
+
+    http.begin_drain();
+
+    // readiness is now refused…
+    let reply = cl.get("/health").unwrap();
+    assert_eq!(reply.status, 503);
+    let j = reply.json().unwrap();
+    assert_eq!(j.get("ok").and_then(|v| v.as_bool()), Some(false));
+    assert_eq!(j.get("status").and_then(|v| v.as_str()), Some("draining"));
+
+    // …model work is refused with a connection close…
+    let reply = cl.post_json("/score", "{\"text\": \"still there?\"}").unwrap();
+    assert_eq!(reply.status, 503);
+    assert_eq!(reply.header("connection"), Some("close"));
+
+    // …but scrapes keep working so the final counters are observable
+    let mut cl2 = HttpClient::connect(http.addr).unwrap();
+    cl2.set_timeout(Duration::from_secs(30)).unwrap();
+    let reply = cl2.get("/metrics").unwrap();
+    assert_eq!(reply.status, 200);
+    let s = prom::parse_text(&reply.text()).expect("drain-time scrape must stay valid");
+    assert_eq!(s.value("http_draining", &[]), Some(1.0));
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}

@@ -1,0 +1,210 @@
+//! Property tests for the HTTP head parser (generated heads vs the
+//! generator's ground truth: case-insensitive names, obs-fold joining,
+//! Content-Length handling) plus the `/metrics` contract: every page a
+//! live server emits parses under the strict in-repo Prometheus
+//! validator, families are properly typed, and counters are monotone
+//! across scrapes.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparselm::data::Tokenizer;
+use sparselm::serve::http::parser::{find_head_end, parse_head};
+use sparselm::serve::{
+    serve, HttpClient, HttpConfig, HttpHandle, ScoreRequest, Scorer, ServerConfig, ServerHandle,
+};
+use sparselm::util::prom;
+use sparselm::util::propcheck::{check, Gen};
+
+/// Flip header-name casing pseudo-randomly; the parser must not care.
+fn random_case(g: &mut Gen, s: &str) -> String {
+    s.chars()
+        .map(|c| {
+            if g.bool() {
+                c.to_ascii_uppercase()
+            } else {
+                c.to_ascii_lowercase()
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn generated_heads_parse_back_to_their_ground_truth() {
+    let methods = ["GET", "POST", "PUT", "DELETE", "OPTIONS"];
+    let targets = ["/health", "/metrics", "/score", "/generate", "/a/b?q=1"];
+    let names = ["host", "content-type", "x-trace", "accept", "user-agent"];
+    let values = ["x", "application/json", "abc-123", "*/*", "loadgen/0.1"];
+    check("http_head_roundtrip", 200, |g| {
+        let method = *g.choose(&methods);
+        let target = *g.choose(&targets);
+        let crlf = if g.bool() { "\r\n" } else { "\n" };
+
+        // ground truth: (lowercased name, folded+trimmed value)
+        let mut expect: Vec<(String, String)> = Vec::new();
+        let mut raw = format!("{method} {target} HTTP/1.1{crlf}");
+        for _ in 0..g.int(0, 5) {
+            let name = *g.choose(&names);
+            let value = *g.choose(&values);
+            // optional whitespace padding around the value: trimmed away
+            let pad = if g.bool() { " \t" } else { "" };
+            raw.push_str(&format!("{}:{pad}{value}{pad}{crlf}", random_case(g, name)));
+            let mut full = value.to_string();
+            if g.bool() {
+                // obs-fold continuation: joined with a single space
+                let cont = *g.choose(&values);
+                raw.push_str(&format!(" \t{cont}{pad}{crlf}"));
+                full.push(' ');
+                full.push_str(cont);
+            }
+            expect.push((name.to_string(), full));
+        }
+        raw.push_str(crlf);
+
+        let end = find_head_end(raw.as_bytes())
+            .ok_or_else(|| format!("no head end found in {raw:?}"))?;
+        if end != raw.len() {
+            return Err(format!("head end {end} != {} in {raw:?}", raw.len()));
+        }
+        let head = parse_head(raw.as_bytes()).map_err(|e| format!("{raw:?}: {e:?}"))?;
+        if head.method != method || head.target != target || head.minor != 1 {
+            return Err(format!("request line mismatch: {head:?}"));
+        }
+        if head.headers != expect {
+            return Err(format!("headers {:?} != expected {expect:?}", head.headers));
+        }
+        // lookups are case-insensitive and first-occurrence-wins (the
+        // generator may emit duplicate names), whatever the wire casing
+        for (name, _) in &expect {
+            let shouting = name.to_ascii_uppercase();
+            let first = expect.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str());
+            if head.header(&shouting) != first {
+                return Err(format!("lookup {shouting:?} missed in {head:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn content_length_cases_resolve_like_the_spec() {
+    check("http_content_length", 200, |g| {
+        let n = g.int(0, 1_000_000);
+        // (header fragment, expected result: Ok(len) or Err)
+        let cases: [(String, Result<Option<usize>, ()>); 7] = [
+            (String::new(), Ok(None)),
+            ("Content-Length: 0\r\n".into(), Ok(Some(0))),
+            (format!("Content-Length: {n}\r\n"), Ok(Some(n))),
+            (format!("Content-Length: {n}\r\nCONTENT-LENGTH: {n}\r\n"), Ok(Some(n))),
+            (format!("Content-Length: {n}, {n}\r\n"), Ok(Some(n))),
+            (format!("Content-Length: {n}\r\nContent-Length: {}\r\n", n + 1), Err(())),
+            ("Content-Length: 99999999999999999999999999\r\n".into(), Err(())),
+        ];
+        let (fragment, want) = g.choose(&cases);
+        let raw = format!("POST /score HTTP/1.1\r\n{fragment}\r\n");
+        let head = parse_head(raw.as_bytes()).map_err(|e| format!("{raw:?}: {e:?}"))?;
+        match (head.content_length(), want) {
+            (Ok(got), Ok(expected)) if got == *expected => Ok(()),
+            (Err(e), Err(())) if e.status == 400 => Ok(()),
+            (got, _) => Err(format!("{raw:?}: got {got:?}, want {want:?}")),
+        }
+    });
+}
+
+// ---------------------------------------------------------------- scrape
+
+fn boot() -> (ServerHandle, HttpHandle) {
+    let factory = || -> sparselm::Result<Scorer> {
+        Ok(Box::new(|reqs: &[ScoreRequest]| {
+            Ok(reqs.iter().map(|r| (1.0, r.tokens.len().max(1) - 1)).collect())
+        }))
+    };
+    let tok = Arc::new(Tokenizer::fit("the quick brown fox jumps over the lazy dog", 64));
+    let handle = serve(
+        factory,
+        tok,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 8,
+            max_batch: 2,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let http = handle
+        .attach_http(HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        })
+        .unwrap();
+    (handle, http)
+}
+
+#[test]
+fn live_scrapes_are_valid_typed_and_monotone() {
+    let (handle, http) = boot();
+    let mut cl = HttpClient::connect(http.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(30)).unwrap();
+
+    // a mixed bag of traffic, errors included
+    assert_eq!(cl.get("/health").unwrap().status, 200);
+    assert_eq!(cl.post_json("/score", "{\"text\": \"one two\"}").unwrap().status, 200);
+    assert_eq!(cl.post_json("/score", "{\"text\": \"three four\"}").unwrap().status, 200);
+    assert_eq!(cl.get("/nope").unwrap().status, 404);
+    assert_eq!(cl.post_json("/score", "{\"wrong\": 1}").unwrap().status, 400);
+
+    let first = prom::parse_text(&cl.get("/metrics").unwrap().text())
+        .expect("first scrape must be valid Prometheus text");
+
+    // TYPE/HELP discipline: the families the dashboards build on
+    for (name, kind) in [
+        ("http_requests_total", "counter"),
+        ("http_connections_total", "counter"),
+        ("http_inflight", "gauge"),
+        ("http_draining", "gauge"),
+        ("http_request_duration_seconds", "histogram"),
+        ("sparselm_score_rows_total", "counter"),
+        ("sparselm_score_queue_depth", "gauge"),
+    ] {
+        let fam = first
+            .families
+            .get(name)
+            .unwrap_or_else(|| panic!("family {name} missing from scrape"));
+        assert_eq!(fam.kind, kind, "{name} mistyped");
+        assert!(!fam.help.is_empty(), "{name} has no HELP text");
+    }
+    assert_eq!(
+        first.value("http_requests_total", &[("route", "score"), ("code", "200")]),
+        Some(2.0)
+    );
+    assert_eq!(
+        first.value("http_requests_total", &[("route", "score"), ("code", "400")]),
+        Some(1.0)
+    );
+    assert!(
+        first.value("http_request_duration_seconds_bucket", &[("le", "+Inf")]).is_some(),
+        "histogram must carry its +Inf bucket"
+    );
+
+    // more traffic, then the monotonicity contract: no counter on the
+    // page may ever decrease between two scrapes
+    assert_eq!(cl.post_json("/score", "{\"text\": \"five six\"}").unwrap().status, 200);
+    assert_eq!(cl.get("/health").unwrap().status, 200);
+    let second = prom::parse_text(&cl.get("/metrics").unwrap().text())
+        .expect("second scrape must be valid Prometheus text");
+    for (name, fam) in &first.families {
+        if fam.kind != "counter" {
+            continue;
+        }
+        let (before, after) = (first.sum(name, &[]), second.sum(name, &[]));
+        assert!(after >= before, "counter {name} went backwards: {before} -> {after}");
+    }
+    assert_eq!(
+        second.value("http_requests_total", &[("route", "score"), ("code", "200")]),
+        Some(3.0)
+    );
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}
