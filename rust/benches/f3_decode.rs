@@ -102,7 +102,7 @@ fn main() {
             };
 
             // timed: prefill once, then steady-state decode steps
-            let mut cache = KvCache::new(cfg);
+            let mut cache = KvCache::new(cfg).expect("cache");
             let dt_prefill = time_it(1, 1, || {
                 cache.clear();
                 lm.prefill(&prompt, &mut cache).expect("prefill")

@@ -1,0 +1,146 @@
+//! Figure (§8, measured) — self-speculative decoding: the int4 draft
+//! proposes a window of greedy tokens, the bf16 target verifies the
+//! whole window in one multi-row forward (one packed-weight pass for
+//! the window instead of one per token), and the accepted prefix is
+//! emitted without ever running a per-token bf16 step for it.
+//!
+//! Both paths decode the same prompt greedily and the speculative
+//! stream is asserted token-for-token identical to the plain bf16
+//! stream — losslessness is the acceptance bar, speed is the
+//! trajectory. The draft and target come from one parameter set
+//! ([`SpecDecoder::from_dense`]) so they share the 8:16 mask and the
+//! 16:256 outlier stream; only the kept base values are quantized,
+//! which is what keeps the draft's argmax aligned with the target's.
+//!
+//! Emits `BENCH_spec.json` (schema: docs/BENCHMARKS.md): acceptance
+//! rate, mean accepted tokens per round, plain-vs-speculative decode
+//! tokens/s and their ratio, and per-token latency percentiles for both
+//! paths. CI gates `spec:accept_rate` and `spec:tokens_per_s_ratio`
+//! (must stay > 1.0) via `ci/bench_gate.py`.
+
+use std::time::Instant;
+
+use sparselm::bench::{fast_mode, BenchReport, TablePrinter};
+use sparselm::eval::argmax;
+use sparselm::model::{KvCache, ModelConfig, ParamSet, SpecDecoder};
+use sparselm::quant::QuantSpec;
+use sparselm::util::pool::default_parallelism;
+use sparselm::util::Rng;
+
+/// Nearest-rank percentile over an ascending-sorted slice.
+fn pct(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * p) as usize]
+}
+
+fn main() {
+    let mut rng = Rng::new(3407);
+    let mut report = BenchReport::new("spec");
+
+    let mut cfg = ModelConfig::preset("tiny").expect("tiny preset");
+    cfg.seq = 128;
+    // emitted tokens per path; prompt + tokens stays inside the window
+    // so neither cache ever slides
+    let tokens = if fast_mode() { 48usize } else { 96 };
+    let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
+    assert!(prompt.len() + tokens <= cfg.seq);
+
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let threads = default_parallelism();
+    let dec = SpecDecoder::from_dense(&params, 8, 16, 16, QuantSpec::int4_g128(), threads)
+        .expect("speculative pair");
+    let target = dec.target();
+
+    // ---- plain bf16 greedy decode, per-token timed --------------------
+    let mut cache = KvCache::new(&cfg).expect("cache");
+    let pl = target.prefill(&prompt, &mut cache).expect("prefill");
+    let mut tok = argmax(pl.row(pl.dims2().0 - 1)) as i32;
+    let mut plain = Vec::with_capacity(tokens);
+    plain.push(tok);
+    let mut plain_lats = Vec::with_capacity(tokens);
+    let t0 = Instant::now();
+    for _ in 1..tokens {
+        let t = Instant::now();
+        let lg = target.decode_step(&[tok], &mut [&mut cache]).expect("step");
+        plain_lats.push(t.elapsed().as_secs_f64());
+        tok = argmax(lg.row(0)) as i32;
+        plain.push(tok);
+    }
+    let plain_dt = t0.elapsed().as_secs_f64();
+
+    // ---- speculative decode over the same prompt ----------------------
+    // (timed from after prefill, like the plain path: steady-state
+    // emission is what speculation accelerates)
+    let before = sparselm::util::perf::snapshot();
+    let mut state = dec.new_state().expect("state");
+    let mut logits = dec.start(&mut state, &prompt).expect("start");
+    let mut spec = Vec::with_capacity(tokens);
+    spec.push(argmax(&logits) as i32);
+    let mut spec_lats = Vec::with_capacity(tokens);
+    let t0 = Instant::now();
+    for _ in 1..tokens {
+        let prev = *spec.last().unwrap();
+        let t = Instant::now();
+        logits = dec.advance(&mut state, prev).expect("advance");
+        spec_lats.push(t.elapsed().as_secs_f64());
+        spec.push(argmax(&logits) as i32);
+    }
+    let spec_dt = t0.elapsed().as_secs_f64();
+    let p = sparselm::util::perf::snapshot().delta(&before);
+
+    // the whole point: speculation must be invisible in the output
+    assert_eq!(spec, plain, "speculative decode must be lossless under greedy sampling");
+
+    let steps = (tokens - 1) as f64;
+    let plain_tps = steps / plain_dt.max(1e-9);
+    let spec_tps = steps / spec_dt.max(1e-9);
+    let ratio = spec_tps / plain_tps.max(1e-9);
+    plain_lats.sort_by(|a, b| a.total_cmp(b));
+    spec_lats.sort_by(|a, b| a.total_cmp(b));
+
+    println!("\n# f5_specdec — int4 draft + bf16 windowed verify vs plain bf16 decode\n");
+    let t = TablePrinter::new(
+        &["path", "tok/s", "p50/tok", "p99/tok", "accept", "mean-acc", "rounds"],
+        &[8, 9, 10, 10, 8, 9, 7],
+    );
+    t.row(&[
+        "plain".into(),
+        format!("{plain_tps:.1}"),
+        format!("{:.0} us", pct(&plain_lats, 0.50) * 1e6),
+        format!("{:.0} us", pct(&plain_lats, 0.99) * 1e6),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    t.row(&[
+        "spec".into(),
+        format!("{spec_tps:.1}"),
+        format!("{:.0} us", pct(&spec_lats, 0.50) * 1e6),
+        format!("{:.0} us", pct(&spec_lats, 0.99) * 1e6),
+        format!("{:.2}", p.spec_accept_rate()),
+        format!("{:.2}", p.spec_mean_accepted()),
+        format!("{}", p.spec_rounds),
+    ]);
+    println!(
+        "\nratio {ratio:.2}x ({} drafted, {} accepted, {} mispredicts; draft streams \
+         {} KiB/step, target {} KiB/step)",
+        p.spec_drafted,
+        p.spec_accepted,
+        p.spec_mispredicts,
+        dec.draft().linear_operand_bytes() / 1024,
+        dec.target().linear_operand_bytes() / 1024
+    );
+
+    report.higher("accept_rate", p.spec_accept_rate(), "frac");
+    report.higher("mean_accepted", p.spec_mean_accepted(), "tok/round");
+    report.higher("tokens_per_s_ratio", ratio, "x");
+    report.higher("tokens_per_s_spec", spec_tps, "tok/s");
+    report.higher("tokens_per_s_plain", plain_tps, "tok/s");
+    report.lower("tok_p50_us_spec", pct(&spec_lats, 0.50) * 1e6, "us");
+    report.lower("tok_p99_us_spec", pct(&spec_lats, 0.99) * 1e6, "us");
+    report.lower("tok_p50_us_plain", pct(&plain_lats, 0.50) * 1e6, "us");
+    report.lower("tok_p99_us_plain", pct(&plain_lats, 0.99) * 1e6, "us");
+    report.emit().expect("emit BENCH_spec.json");
+}

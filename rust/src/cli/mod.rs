@@ -86,7 +86,9 @@ subcommands:
             artifact and serves it zero-copy; --backend spmm re-packs a dense
             checkpoint — requires --repack to acknowledge the lossy magnitude
             selection — spmm-q4 additionally int4-quantizes the kept values
-            (--qbits/--qgroup), dense serves exact weights via the host
+            (--qbits/--qgroup), spec serves self-speculative decode — int4
+            draft + bf16 windowed verify, same tokens as spmm, fewer bf16
+            steps per token — dense serves exact weights via the host
             forward, pjrt uses the AOT artifacts, scoring only; --http ADDR
             adds the HTTP front end: POST /score, POST /generate, GET /health,
             Prometheus GET /metrics, 429 backpressure via --http-max-inflight,
@@ -94,7 +96,7 @@ subcommands:
   generate  one-shot KV-cached generation from a checkpoint or a .spak
             artifact (--model x.spak mmaps the packed model; --random for
             an offline stand-in; --quant for the int4 packed format;
-            --temperature 0 = greedy)
+            --spec for self-speculative decode; --temperature 0 = greedy)
   serve-bench  closed-loop load generator against a running server
 
 common flags: --model <tiny|small|gqa|wide|e2e> --artifacts <dir>

@@ -17,9 +17,9 @@ use std::time::{Duration, Instant};
 use crate::data::tokenizer::{BOS, EOS};
 use crate::data::{CorpusKind, CorpusSpec, Tokenizer, World};
 use crate::eval::Sampler;
-use crate::model::{load_checkpoint, ModelConfig, ParamSet, SparseLm};
+use crate::model::{load_checkpoint, ModelConfig, ParamSet, SparseLm, SpecDecoder};
 use crate::serve::{
-    pjrt_scorer, serve, serve_generate, spmm_generator, spmm_scorer, HttpConfig,
+    pjrt_scorer, serve, serve_generate, spec_generator, spmm_generator, spmm_scorer, HttpConfig,
     ServeClient, ServerConfig, ServerHandle,
 };
 use crate::util::args::Args;
@@ -231,7 +231,32 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
             );
             serve_lm(lm, server_cfg.clone())?
         }
-        other => anyhow::bail!("unknown --backend {other} (expected spmm|spmm-q4|dense|pjrt)"),
+        "spec" => {
+            require_repack(&args, "spec")?;
+            let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
+            let k = args.get_usize("outliers", 16)?;
+            let qspec = super::parse_quant_spec(&args)?;
+            let dec = Arc::new(SpecDecoder::from_dense(&params, n, m, k, qspec, threads)?);
+            println!(
+                "packing checkpoint to {n}:{m} + {k}:256 twice: int{} g{} draft \
+                 ({} KiB/step) + bf16 verify target ({} KiB/step), magnitude \
+                 selection, --repack acknowledged — speculative decode, output \
+                 identical to --backend spmm",
+                qspec.bits,
+                qspec.group,
+                dec.draft().linear_operand_bytes() / 1024,
+                dec.target().linear_operand_bytes() / 1024
+            );
+            serve_generate(
+                spmm_scorer(Arc::clone(dec.target())),
+                spec_generator(dec, gen_batch),
+                tokenizer.clone(),
+                server_cfg.clone(),
+            )?
+        }
+        other => {
+            anyhow::bail!("unknown --backend {other} (expected spmm|spmm-q4|spec|dense|pjrt)")
+        }
     };
     println!(
         "serving {model} ({ckpt}, {backend}) on {} — newline-JSON ops: \
@@ -259,6 +284,53 @@ pub fn cmd_generate(args: Args) -> crate::Result<()> {
     let threads = args.get_usize("threads", crate::util::pool::default_parallelism())?;
     let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
     let k = args.get_usize("outliers", 16)?;
+    let load_params = || -> crate::Result<ParamSet> {
+        if args.get_bool("random") {
+            let cfg = ModelConfig::preset(&model)
+                .ok_or_else(|| anyhow::anyhow!("unknown model preset {model:?}"))?;
+            Ok(ParamSet::init_outliers(&cfg, &mut Rng::new(seed ^ 0xFACE)))
+        } else {
+            let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
+            load_checkpoint(std::path::Path::new(&ckpt))
+        }
+    };
+
+    // --spec: self-speculative decode in-process — int4 draft proposes,
+    // bf16 target verifies in one windowed forward; the emitted tokens
+    // are identical to the plain packed path by construction
+    if args.get_bool("spec") {
+        anyhow::ensure!(
+            !model.ends_with(".spak"),
+            "--spec needs a dense checkpoint or --random: a .spak artifact holds one \
+             packed value stream, not the draft/target pair"
+        );
+        let qspec = super::parse_quant_spec(&args)?;
+        let dec = SpecDecoder::from_dense(&load_params()?, n, m, k, qspec, threads)?;
+        let tokenizer = standard_tokenizer(crate::bench::fast_mode());
+        let mut ids = vec![BOS];
+        ids.extend(tokenizer.encode(&prompt));
+        let mut sampler = Sampler::new(temperature, seed);
+        let before = crate::util::perf::snapshot();
+        let t0 = Instant::now();
+        let emitted = dec.generate(&ids, max_tokens, Some(EOS), |logits| sampler.next(logits))?;
+        let dt = t0.elapsed().as_secs_f64();
+        let p = crate::util::perf::snapshot().delta(&before);
+        println!("{prompt} {}", tokenizer.decode(&emitted));
+        println!(
+            "-- {} tokens in {dt:.2}s ({:.1} tok/s); {} spec rounds, accept rate \
+             {:.2}, mean accepted {:.2}/round, {} mispredicts; draft streams {} KiB \
+             packed weights/step (target {} KiB)",
+            emitted.len(),
+            emitted.len() as f64 / dt.max(1e-9),
+            p.spec_rounds,
+            p.spec_accept_rate(),
+            p.spec_mean_accepted(),
+            p.spec_mispredicts,
+            dec.draft().linear_operand_bytes() / 1024,
+            dec.target().linear_operand_bytes() / 1024
+        );
+        return Ok(());
+    }
 
     // --model x.spak: decode straight from the mmap'd artifact (no
     // re-pack; the stored selection — calibrated when the pipeline
@@ -273,14 +345,7 @@ pub fn cmd_generate(args: Args) -> crate::Result<()> {
         );
         packed.into_sparse_lm()?.with_threads(threads)
     } else {
-        let params = if args.get_bool("random") {
-            let cfg = ModelConfig::preset(&model)
-                .ok_or_else(|| anyhow::anyhow!("unknown model preset {model:?}"))?;
-            ParamSet::init_outliers(&cfg, &mut Rng::new(seed ^ 0xFACE))
-        } else {
-            let ckpt = args.get_str("ckpt", &format!("runs/{model}.ckpt"));
-            load_checkpoint(std::path::Path::new(&ckpt))?
-        };
+        let params = load_params()?;
         if args.get_bool("dense") {
             SparseLm::from_params(&params).with_threads(threads)
         } else if args.get_bool("quant") {

@@ -87,6 +87,17 @@ pub enum Error {
     ChecksumMismatch { path: String, want: u64, got: u64 },
     /// The file ends before a section its header promises.
     Truncated { path: String, need: u64, have: u64 },
+    /// A KV cache (or similar ring buffer) was requested with zero
+    /// slots — a config with `seq == 0` or a bad capacity override.
+    ZeroCapacity { what: &'static str },
+    /// A KV rollback would expose positions the ring has already
+    /// overwritten: once `len > capacity` the window has slid, and
+    /// truncating below `len` cannot restore the discarded state.
+    LossyRollback {
+        len: usize,
+        capacity: usize,
+        new_len: usize,
+    },
 }
 
 impl Error {
@@ -136,6 +147,21 @@ impl std::fmt::Display for Error {
             }
             Error::Truncated { path, need, have } => {
                 write!(f, "{path}: truncated — header promises {need} bytes, file has {have}")
+            }
+            Error::ZeroCapacity { what } => {
+                write!(f, "{what} needs at least one slot (capacity 0 requested)")
+            }
+            Error::LossyRollback {
+                len,
+                capacity,
+                new_len,
+            } => {
+                write!(
+                    f,
+                    "cannot roll back to {new_len} positions: the ring slid past its \
+                     capacity ({len} appended > {capacity} slots), so the discarded \
+                     state is already overwritten"
+                )
             }
         }
     }

@@ -79,12 +79,21 @@ impl SparseLm {
     /// the final norm/head.
     fn prefill_hidden(&self, tokens: &[i32], cache: &mut KvCache) -> crate::Result<Tensor> {
         let _perf = perf::phase(perf::Phase::Prefill);
+        self.extend_hidden(tokens, cache)
+    }
+
+    /// Append `tokens` (one sequence) to `cache` and return the hidden
+    /// states of every appended position — the phase-agnostic body
+    /// shared by prompt prefill and the speculative-decode verify
+    /// window. Callers wrap it in the [`perf::Phase`] that matches
+    /// their role.
+    fn extend_hidden(&self, tokens: &[i32], cache: &mut KvCache) -> crate::Result<Tensor> {
         let cfg = &self.config;
         let s = tokens.len();
-        anyhow::ensure!(s > 0, "prefill: empty token sequence");
+        anyhow::ensure!(s > 0, "extend: empty token sequence");
         anyhow::ensure!(
             cache.len() + s <= cache.capacity(),
-            "prefill: {} cached + {s} new tokens exceed cache capacity {}",
+            "extend: {} cached + {s} new tokens exceed cache capacity {}",
             cache.len(),
             cache.capacity()
         );
@@ -121,6 +130,28 @@ impl SparseLm {
         }
         cache.advance(s);
         Ok(h)
+    }
+
+    /// Append a multi-token window of **one** sequence to its cache and
+    /// return the `(window, vocab)` logits of every appended position —
+    /// the speculative-decode verify path: row `i` is bitwise identical
+    /// to the row [`Self::decode_step`] would have produced for
+    /// `tokens[i]` at the same cache state, but all rows share each
+    /// packed-weight GEMM (the batched `TiledGemm` dispatch), so a
+    /// k-token window streams the weights once instead of k times.
+    ///
+    /// The bitwise identity holds because every per-position computation
+    /// is shared with the single-step path: RoPE tables are computed
+    /// per absolute position in f64, norm is per-row, attention reads
+    /// only the sequence's own cache, and the batched kernels accumulate
+    /// each activation row independently (`tests/spmm_tiling.rs` pins
+    /// GEMV ≡ tiled per row). Time is metered as [`perf::Phase::Decode`]
+    /// — the caller may additionally meter it as a verify region.
+    pub fn decode_window(&self, tokens: &[i32], cache: &mut KvCache) -> crate::Result<Tensor> {
+        let _perf = perf::phase(perf::Phase::Decode);
+        let h = self.extend_hidden(tokens, cache)?;
+        let xf = rmsnorm(&h, &self.ln_f);
+        Ok(self.lin_rows(&self.tok_emb, &xf))
     }
 
     /// Advance a batch of independent sequences by one token each:
@@ -217,7 +248,7 @@ impl SparseLm {
         mut pick: impl FnMut(&[f32]) -> usize,
     ) -> crate::Result<Vec<i32>> {
         anyhow::ensure!(!prompt.is_empty(), "generate: empty prompt");
-        let mut cache = KvCache::new(&self.config);
+        let mut cache = KvCache::new(&self.config)?;
         anyhow::ensure!(
             prompt.len() <= cache.capacity(),
             "generate: prompt of {} tokens exceeds context capacity {}",
@@ -322,7 +353,7 @@ mod tests {
         let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
         let prompt = toks(9, &cfg, &mut rng);
         let want = lm.full_logits(&prompt).unwrap();
-        let mut cache = KvCache::new(&cfg);
+        let mut cache = KvCache::new(&cfg).unwrap();
         let got = lm.prefill(&prompt, &mut cache).unwrap();
         assert_eq!(got.shape(), want.shape());
         assert_eq!(cache.len(), prompt.len());
@@ -332,7 +363,7 @@ mod tests {
             rel_error(&got, &want)
         );
         // the admission-path variant is the last row, bitwise
-        let mut cache2 = KvCache::new(&cfg);
+        let mut cache2 = KvCache::new(&cfg).unwrap();
         let last = lm.prefill_last(&prompt, &mut cache2).unwrap();
         assert_eq!(last.as_slice(), got.row(prompt.len() - 1));
         assert_eq!(cache2.len(), prompt.len());
@@ -344,7 +375,7 @@ mod tests {
         let mut rng = Rng::new(42);
         let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
         let seq = toks(14, &cfg, &mut rng);
-        let mut cache = KvCache::new(&cfg);
+        let mut cache = KvCache::new(&cfg).unwrap();
         lm.prefill(&seq[..4], &mut cache).unwrap();
         for t in 4..seq.len() {
             let lg = lm.decode_step(&[seq[t]], &mut [&mut cache]).unwrap();
@@ -364,8 +395,8 @@ mod tests {
         let b = toks(3, &cfg, &mut rng);
 
         // joint: both sequences share each decode step's GEMMs
-        let mut ca = KvCache::new(&cfg);
-        let mut cb = KvCache::new(&cfg);
+        let mut ca = KvCache::new(&cfg).unwrap();
+        let mut cb = KvCache::new(&cfg).unwrap();
         lm.prefill(&a, &mut ca).unwrap();
         lm.prefill(&b, &mut cb).unwrap();
         let joint = lm
@@ -373,8 +404,8 @@ mod tests {
             .unwrap();
 
         // solo: each sequence decoded alone (spmm_vec fast path)
-        let mut ca2 = KvCache::new(&cfg);
-        let mut cb2 = KvCache::new(&cfg);
+        let mut ca2 = KvCache::new(&cfg).unwrap();
+        let mut cb2 = KvCache::new(&cfg).unwrap();
         lm.prefill(&a, &mut ca2).unwrap();
         lm.prefill(&b, &mut cb2).unwrap();
         let solo_a = lm.decode_step(&[7], &mut [&mut ca2]).unwrap();
@@ -429,11 +460,97 @@ mod tests {
     }
 
     #[test]
+    fn decode_window_rows_bitwise_match_decode_steps() {
+        // the speculative-verify contract: a k-row window through the
+        // batched kernels produces, row for row, the exact bits the
+        // one-token GEMV path would have produced
+        let cfg = small_cfg();
+        let mut rng = Rng::new(47);
+        let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
+        let prompt = toks(6, &cfg, &mut rng);
+        let window = toks(5, &cfg, &mut rng);
+
+        let mut step_cache = KvCache::new(&cfg).unwrap();
+        lm.prefill(&prompt, &mut step_cache).unwrap();
+        let step_rows: Vec<Vec<f32>> = window
+            .iter()
+            .map(|&t| {
+                lm.decode_step(&[t], &mut [&mut step_cache])
+                    .unwrap()
+                    .row(0)
+                    .to_vec()
+            })
+            .collect();
+
+        let mut win_cache = KvCache::new(&cfg).unwrap();
+        lm.prefill(&prompt, &mut win_cache).unwrap();
+        let win = lm.decode_window(&window, &mut win_cache).unwrap();
+        assert_eq!(win.dims2(), (window.len(), cfg.vocab));
+        assert_eq!(win_cache.len(), step_cache.len());
+        for (i, want) in step_rows.iter().enumerate() {
+            assert_eq!(win.row(i), &want[..], "window row {i} diverged");
+        }
+        // the caches themselves agree bitwise (the rollback guarantee
+        // rests on this: truncating a window-fed cache must leave the
+        // same state as stepping one token at a time)
+        for blk in 0..win_cache.n_blocks() {
+            for pos in 0..win_cache.len() {
+                assert_eq!(win_cache.k_row(blk, pos), step_cache.k_row(blk, pos));
+                assert_eq!(win_cache.v_row(blk, pos), step_cache.v_row(blk, pos));
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_then_decode_bitwise_matches_fresh_prefill() {
+        // rollback parity at the ring boundary: fill the cache to its
+        // exact capacity (the last position where rollback is still
+        // exact), truncate away the speculative tail, and re-decode —
+        // the logits must be bit-identical to a never-speculated run
+        let mut cfg = small_cfg();
+        cfg.seq = 12;
+        let mut rng = Rng::new(48);
+        let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
+        let prompt = toks(7, &cfg, &mut rng);
+        let spec_tail = toks(5, &cfg, &mut rng); // fills to len == capacity
+        let replay = toks(3, &cfg, &mut rng);
+
+        let mut cache = KvCache::new(&cfg).unwrap();
+        lm.prefill(&prompt, &mut cache).unwrap();
+        lm.decode_window(&spec_tail, &mut cache).unwrap();
+        assert_eq!(cache.len(), cache.capacity());
+        cache.truncate(prompt.len()).unwrap();
+
+        let mut fresh = KvCache::new(&cfg).unwrap();
+        lm.prefill(&prompt, &mut fresh).unwrap();
+        for &t in &replay {
+            let a = lm.decode_step(&[t], &mut [&mut cache]).unwrap();
+            let b = lm.decode_step(&[t], &mut [&mut fresh]).unwrap();
+            assert_eq!(a.row(0), b.row(0), "post-rollback decode diverged");
+        }
+
+        // past the boundary the ring slides and rollback must refuse:
+        // decode_step happily runs into sliding-window attention, after
+        // which the discarded state is unrecoverable
+        let mut slid = KvCache::with_capacity(&cfg, 4).unwrap();
+        lm.prefill(&toks(4, &cfg, &mut rng), &mut slid).unwrap();
+        lm.decode_step(&[1], &mut [&mut slid]).unwrap(); // len 5 > cap 4
+        let err = slid.truncate(4).unwrap_err();
+        assert!(
+            matches!(
+                err.downcast_ref::<crate::Error>(),
+                Some(crate::Error::LossyRollback { .. })
+            ),
+            "want LossyRollback, got {err:#}"
+        );
+    }
+
+    #[test]
     fn prefill_rejects_overflow_and_empty() {
         let cfg = small_cfg();
         let mut rng = Rng::new(45);
         let lm = SparseLm::from_params(&ParamSet::init(&cfg, &mut rng));
-        let mut cache = KvCache::with_capacity(&cfg, 4);
+        let mut cache = KvCache::with_capacity(&cfg, 4).unwrap();
         assert!(lm.prefill(&[], &mut cache).is_err());
         let long = toks(5, &cfg, &mut rng);
         assert!(lm.prefill(&long, &mut cache).is_err());

@@ -34,21 +34,27 @@ pub struct KvCache {
 
 impl KvCache {
     /// Cache sized to the model's trained context window (`cfg.seq`).
-    pub fn new(cfg: &ModelConfig) -> KvCache {
+    /// Errors (typed [`crate::Error::ZeroCapacity`]) on a config with
+    /// `seq == 0` — configs are untrusted once they come out of
+    /// artifact manifests, and a serving process must survive them.
+    pub fn new(cfg: &ModelConfig) -> crate::Result<KvCache> {
         Self::with_capacity(cfg, cfg.seq)
     }
 
-    /// Cache with an explicit position capacity.
-    pub fn with_capacity(cfg: &ModelConfig, capacity: usize) -> KvCache {
-        assert!(capacity > 0, "KvCache needs at least one slot");
+    /// Cache with an explicit position capacity. Zero capacity is a
+    /// typed error, not a panic (the PR 2 panic-to-Result policy).
+    pub fn with_capacity(cfg: &ModelConfig, capacity: usize) -> crate::Result<KvCache> {
+        if capacity == 0 {
+            return Err(crate::Error::ZeroCapacity { what: "KvCache" }.into());
+        }
         let kv_dim = cfg.kv_dim();
-        KvCache {
+        Ok(KvCache {
             capacity,
             kv_dim,
             len: 0,
             k: (0..cfg.n_layers).map(|_| vec![0.0; capacity * kv_dim]).collect(),
             v: (0..cfg.n_layers).map(|_| vec![0.0; capacity * kv_dim]).collect(),
-        }
+        })
     }
 
     /// Absolute positions appended so far — also the RoPE position of
@@ -116,6 +122,40 @@ impl KvCache {
         self.len += n;
     }
 
+    /// Roll back to `new_len` committed positions, discarding the rest —
+    /// the speculative-decode rejection path: draft positions past the
+    /// accepted prefix are dropped and the next step re-fills their
+    /// slots.
+    ///
+    /// `new_len >= len` clamps to a no-op (nothing to discard), so
+    /// callers may pass a conservative bound without pre-checking.
+    ///
+    /// **Ring-slide interaction**: rollback is exact only while every
+    /// appended position still owns its slot, i.e. `len <= capacity`.
+    /// Once the window has slid (`len > capacity`), position `len-1`
+    /// overwrote the slot of position `len-1-capacity`, which lies
+    /// *inside* any shorter window — the discarded state is gone, so
+    /// truncation is a typed [`crate::Error::LossyRollback`] instead of
+    /// silently resurrecting stale rows. The serving path never trips
+    /// this: the generation scheduler caps `prompt + max_tokens` at the
+    /// capacity, and the speculative decoder bounds each draft window by
+    /// `capacity - committed`.
+    pub fn truncate(&mut self, new_len: usize) -> crate::Result<()> {
+        if new_len >= self.len {
+            return Ok(());
+        }
+        if self.len > self.capacity {
+            return Err(crate::Error::LossyRollback {
+                len: self.len,
+                capacity: self.capacity,
+                new_len,
+            }
+            .into());
+        }
+        self.len = new_len;
+        Ok(())
+    }
+
     /// Bytes of K/V state this sequence holds resident (f32 host cache).
     pub fn resident_bytes(&self) -> usize {
         2 * self.n_blocks() * self.capacity * self.kv_dim * 4
@@ -135,7 +175,7 @@ mod tests {
     #[test]
     fn put_get_roundtrip_and_advance() {
         let c = cfg();
-        let mut kv = KvCache::new(&c);
+        let mut kv = KvCache::new(&c).unwrap();
         assert_eq!(kv.capacity(), 8);
         assert_eq!(kv.kv_dim(), c.kv_dim());
         assert!(kv.is_empty());
@@ -153,7 +193,7 @@ mod tests {
     #[test]
     fn ring_wraps_and_window_slides() {
         let c = cfg();
-        let mut kv = KvCache::with_capacity(&c, 4);
+        let mut kv = KvCache::with_capacity(&c, 4).unwrap();
         let dim = kv.kv_dim();
         for pos in 0..6 {
             let row = vec![pos as f32; dim];
@@ -172,7 +212,7 @@ mod tests {
     #[test]
     fn clear_resets_without_realloc() {
         let c = cfg();
-        let mut kv = KvCache::new(&c);
+        let mut kv = KvCache::new(&c).unwrap();
         let row = vec![1.0; kv.kv_dim()];
         kv.put(0, 0, &row, &row);
         kv.advance(1);
@@ -180,5 +220,71 @@ mod tests {
         assert!(kv.is_empty());
         assert_eq!(kv.window_start(), 0);
         assert!(kv.resident_bytes() > 0);
+    }
+
+    #[test]
+    fn zero_capacity_is_a_typed_error_not_a_panic() {
+        let mut c = cfg();
+        c.seq = 0;
+        for r in [KvCache::new(&c), KvCache::with_capacity(&c, 0)] {
+            let err = r.unwrap_err();
+            match err.downcast_ref::<crate::Error>() {
+                Some(crate::Error::ZeroCapacity { what }) => assert_eq!(*what, "KvCache"),
+                other => panic!("want ZeroCapacity, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn truncate_discards_positions_and_clamps_past_len() {
+        let c = cfg();
+        let mut kv = KvCache::new(&c).unwrap();
+        let dim = kv.kv_dim();
+        for pos in 0..5 {
+            let row = vec![pos as f32; dim];
+            kv.put(0, pos, &row, &row);
+            kv.advance(1);
+        }
+        kv.truncate(3).unwrap();
+        assert_eq!(kv.len(), 3);
+        // surviving rows are untouched — the ring never slid
+        assert_eq!(kv.k_row(0, 2)[0], 2.0);
+        // clamp: rolling "back" to a longer length is a no-op
+        kv.truncate(10).unwrap();
+        assert_eq!(kv.len(), 3);
+        // discarded slots are re-fillable: append fresh position 3
+        let row = vec![30.0; dim];
+        kv.put(0, 3, &row, &row);
+        kv.advance(1);
+        assert_eq!(kv.len(), 4);
+        assert_eq!(kv.k_row(0, 3)[0], 30.0);
+    }
+
+    #[test]
+    fn truncate_after_ring_slide_is_a_typed_error() {
+        let c = cfg();
+        let mut kv = KvCache::with_capacity(&c, 4).unwrap();
+        let dim = kv.kv_dim();
+        for pos in 0..6 {
+            let row = vec![pos as f32; dim];
+            kv.put(0, pos, &row, &row);
+            kv.advance(1);
+        }
+        // len 6 > capacity 4: positions 0/1 are overwritten, so any
+        // shorter window would contain resurrected stale rows
+        let err = kv.truncate(5).unwrap_err();
+        match err.downcast_ref::<crate::Error>() {
+            Some(crate::Error::LossyRollback {
+                len,
+                capacity,
+                new_len,
+            }) => assert_eq!((*len, *capacity, *new_len), (6, 4, 5)),
+            other => panic!("want LossyRollback, got {other:?}"),
+        }
+        assert_eq!(kv.len(), 6, "failed truncate must not move len");
+        // clamping still works even after the slide
+        kv.truncate(6).unwrap();
+        kv.truncate(9).unwrap();
+        assert_eq!(kv.len(), 6);
     }
 }

@@ -21,6 +21,7 @@ mod decode;
 mod forward;
 mod kv;
 mod params;
+mod spec;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint};
 pub(crate) use checkpoint::{config_from_json, config_json};
@@ -28,3 +29,4 @@ pub use config::ModelConfig;
 pub use forward::{BlockWeights, SparseLm, RMS_EPS};
 pub use kv::KvCache;
 pub use params::{ParamSet, BLOCK_LINEAR, BLOCK_PARAMS};
+pub use spec::{SpecDecoder, SpecState, K_MAX, K_MIN};

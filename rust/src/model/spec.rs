@@ -1,0 +1,418 @@
+//! Self-speculative decoding: int4 draft + bf16 batched verify.
+//!
+//! The repo holds two bitwise-characterized views of the same model —
+//! [`SparseLm::compress_quant`] (PackedQnm, 2.9375 bits/param) and
+//! [`SparseLm::compress`] (PackedNm, bf16 values) — built from one
+//! weight set with a shared mask stream. [`SpecDecoder`] turns that
+//! pair into single-stream decode speedup: draft `k` greedy tokens on
+//! the cheap quantized GEMV path, then verify the whole window in one
+//! k-row [`SparseLm::decode_window`] pass through the bf16 target,
+//! whose batched `TiledGemm` dispatch streams the weights once instead
+//! of k times.
+//!
+//! Acceptance is **exact-match**: a drafted token survives iff it
+//! equals the target's own greedy argmax at that position, so the
+//! emitted stream is token-for-token identical to plain bf16 greedy
+//! decoding (no sampling approximation — `tests/spec_decode.rs` holds
+//! the live server to bitwise parity). On the first divergence both KV
+//! caches roll back via [`KvCache::truncate`] and decoding continues
+//! from the target's token.
+//!
+//! Under non-greedy sampling the committed token may differ from the
+//! speculated one: [`SpecDecoder::advance`] keeps a queue of
+//! speculated `(token, logits)` pairs and transparently re-drafts from
+//! the committed prefix on a mismatch, so the decoder is correct under
+//! *any* sampler — speculation then only pays off as far as the
+//! sampler happens to follow the greedy chain.
+//!
+//! The draft window adapts per sequence: full acceptance grows `k`,
+//! under-50% acceptance shrinks it, clamped to `[K_MIN, K_MAX]`.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use crate::eval::argmax;
+use crate::util::perf;
+
+use super::{KvCache, ModelConfig, SparseLm};
+
+/// Smallest adaptive draft window (speculation effectively off).
+pub const K_MIN: usize = 1;
+/// Largest adaptive draft window — the batch-8 tiled-kernel sweet spot
+/// measured by `perf_hotpath`.
+pub const K_MAX: usize = 8;
+/// Fresh sequences start mid-range and adapt from there.
+const K_INIT: usize = 4;
+
+/// A draft/target model pair for lossless greedy speculative decoding.
+///
+/// Both models must share a config (and, for the acceptance rate to be
+/// non-trivial, a weight provenance — the intended pairing is
+/// [`SparseLm::compress_quant`] draft + [`SparseLm::compress`] target
+/// over the same parameters, which share one mask stream by
+/// construction).
+pub struct SpecDecoder {
+    draft: Arc<SparseLm>,
+    target: Arc<SparseLm>,
+}
+
+/// Per-sequence speculative state: the two KV caches (kept in lockstep
+/// by every round), the committed-position counter, and the queue of
+/// speculated tokens awaiting commitment.
+pub struct SpecState {
+    draft_cache: KvCache,
+    target_cache: KvCache,
+    /// cache positions confirmed by committed tokens — the rollback
+    /// target whenever speculation ran ahead of the sampler
+    committed: usize,
+    /// speculated tokens already fed to both caches, front-first:
+    /// `(expected token, target logits after feeding it)`
+    pending: VecDeque<(i32, Vec<f32>)>,
+    /// adaptive draft-window size, clamped to `[K_MIN, K_MAX]`
+    k: usize,
+}
+
+impl SpecState {
+    /// Reset for a fresh sequence, keeping storage **and** the adapted
+    /// window size (acceptance propensity is a property of the model
+    /// pair, not of one sequence).
+    pub fn clear(&mut self) {
+        self.draft_cache.clear();
+        self.target_cache.clear();
+        self.committed = 0;
+        self.pending.clear();
+    }
+
+    /// Current adaptive draft-window size.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Positions committed so far (prompt + accepted tokens).
+    pub fn committed(&self) -> usize {
+        self.committed
+    }
+}
+
+impl SpecDecoder {
+    /// Pair a quantized draft with a bf16 target. The configs must
+    /// match exactly — the two views describe the *same* model.
+    pub fn new(draft: Arc<SparseLm>, target: Arc<SparseLm>) -> crate::Result<SpecDecoder> {
+        anyhow::ensure!(
+            draft.config == target.config,
+            "speculative pair mismatch: draft is {:?} ({} params), target is {:?} ({} params) \
+             — both views must come from the same model",
+            draft.config.name,
+            draft.config.n_params(),
+            target.config.name,
+            target.config.n_params(),
+        );
+        Ok(SpecDecoder { draft, target })
+    }
+
+    /// Build the canonical pair from one dense parameter set: int4
+    /// draft and bf16 target share the mask stream by construction
+    /// (both go through the same magnitude selection).
+    pub fn from_dense(
+        params: &super::ParamSet,
+        n: usize,
+        m: usize,
+        k_out: usize,
+        qspec: crate::quant::QuantSpec,
+        threads: usize,
+    ) -> crate::Result<SpecDecoder> {
+        let draft =
+            Arc::new(SparseLm::compress_quant(params, n, m, k_out, qspec).with_threads(threads));
+        let target = Arc::new(SparseLm::compress(params, n, m, k_out).with_threads(threads));
+        Self::new(draft, target)
+    }
+
+    /// The shared model config (draft and target agree by construction).
+    pub fn config(&self) -> &ModelConfig {
+        &self.target.config
+    }
+
+    /// The bf16 verify model — the distribution the output follows.
+    pub fn target(&self) -> &Arc<SparseLm> {
+        &self.target
+    }
+
+    /// The quantized draft model.
+    pub fn draft(&self) -> &Arc<SparseLm> {
+        &self.draft
+    }
+
+    /// Allocate per-sequence state sized to the model context window.
+    pub fn new_state(&self) -> crate::Result<SpecState> {
+        Ok(SpecState {
+            draft_cache: KvCache::new(&self.draft.config)?,
+            target_cache: KvCache::new(&self.target.config)?,
+            committed: 0,
+            pending: VecDeque::new(),
+            k: K_INIT,
+        })
+    }
+
+    /// Prefill `prompt` into both caches and return the target's
+    /// last-position logits — bitwise identical to a plain
+    /// [`SparseLm::prefill_last`] on the target, so admission through
+    /// the speculative engine is indistinguishable from the plain one.
+    pub fn start(&self, state: &mut SpecState, prompt: &[i32]) -> crate::Result<Vec<f32>> {
+        state.clear();
+        // the draft only needs its cache filled; its logits are unused
+        let _ = self.draft.prefill_last(prompt, &mut state.draft_cache)?;
+        let logits = self.target.prefill_last(prompt, &mut state.target_cache)?;
+        state.committed = state.target_cache.len();
+        Ok(logits)
+    }
+
+    /// Commit `tok` and return the target's next-token logits — the
+    /// speculative equivalent of one [`SparseLm::decode_step`], bitwise
+    /// identical to it row for row.
+    ///
+    /// If `tok` was speculated, the logits are served from the queue
+    /// with no model call at all; otherwise the caches roll back to the
+    /// committed prefix and a fresh draft/verify round runs.
+    pub fn advance(&self, state: &mut SpecState, tok: i32) -> crate::Result<Vec<f32>> {
+        if let Some(&(expected, _)) = state.pending.front() {
+            if expected == tok {
+                let (_, logits) = state.pending.pop_front().expect("front exists");
+                state.committed += 1;
+                return Ok(logits);
+            }
+            // the sampler left the speculated chain (impossible under
+            // greedy): everything queued is stale
+            perf::record_spec_mispredict();
+            state.pending.clear();
+        }
+        self.round(state, tok)
+    }
+
+    /// One draft/verify round from the committed prefix: feed `tok`
+    /// plus `w-1` drafted continuations to both models, accept the
+    /// longest prefix of drafts matching the target's greedy choices,
+    /// queue them for commitment, and return the logits after `tok`.
+    fn round(&self, state: &mut SpecState, tok: i32) -> crate::Result<Vec<f32>> {
+        // discard speculative positions past the committed prefix
+        // (no-op when the previous window was fully committed); both
+        // caches were fed the same window, so they stay in lockstep
+        state.draft_cache.truncate(state.committed)?;
+        state.target_cache.truncate(state.committed)?;
+        let cap = state.target_cache.capacity();
+        anyhow::ensure!(
+            state.committed < cap,
+            "speculative round: {} committed positions already fill the context ({cap})",
+            state.committed
+        );
+        // bound the window so the ring never slides — the rollback
+        // above must stay exact (see KvCache::truncate)
+        let w = state.k.min(cap - state.committed);
+
+        // ---- draft: w greedy steps on the quantized GEMV path --------
+        let mut window = Vec::with_capacity(w);
+        window.push(tok);
+        let mut drafted = Vec::with_capacity(w);
+        {
+            let _d = perf::phase(perf::Phase::Draft);
+            let mut cur = tok;
+            for _ in 0..w {
+                let lg = self.draft.decode_step(&[cur], &mut [&mut state.draft_cache])?;
+                cur = argmax(lg.row(0)) as i32;
+                drafted.push(cur);
+                if window.len() < w {
+                    window.push(cur);
+                }
+            }
+        }
+
+        // ---- verify: one w-row batched forward on the bf16 target ----
+        let logits = {
+            let _v = perf::phase(perf::Phase::Verify);
+            self.target.decode_window(&window, &mut state.target_cache)?
+        };
+
+        // longest prefix of drafts matching the target's own argmax
+        let mut accepted = 0usize;
+        while accepted < w && drafted[accepted] == argmax(logits.row(accepted)) as i32 {
+            accepted += 1;
+        }
+        perf::record_spec_round(w, accepted);
+
+        // window[i] = drafted[i-1] for i >= 1: those positions are fed
+        // and verified — queue them so the sampler can commit them
+        // without another model call
+        for i in 1..=accepted.min(w - 1) {
+            state.pending.push_back((drafted[i - 1], logits.row(i).to_vec()));
+        }
+        state.committed += 1; // `tok` itself is committed by this call
+
+        // adaptive window: grow on full acceptance, shrink under 50%
+        if accepted == w {
+            state.k = (state.k + 1).min(K_MAX);
+        } else if accepted * 2 < w {
+            state.k = state.k.saturating_sub(1).max(K_MIN);
+        }
+        Ok(logits.row(0).to_vec())
+    }
+
+    /// Autoregressive generation mirroring [`SparseLm::generate`]
+    /// (same budget capping, same stop semantics) but speculative —
+    /// under a greedy `pick` the output is token-for-token identical to
+    /// `self.target().generate(..)`.
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        max_tokens: usize,
+        stop: Option<i32>,
+        mut pick: impl FnMut(&[f32]) -> usize,
+    ) -> crate::Result<Vec<i32>> {
+        anyhow::ensure!(!prompt.is_empty(), "generate: empty prompt");
+        let mut state = self.new_state()?;
+        let cap = state.target_cache.capacity();
+        anyhow::ensure!(
+            prompt.len() <= cap,
+            "generate: prompt of {} tokens exceeds context capacity {cap}",
+            prompt.len()
+        );
+        let budget = max_tokens.min(cap - prompt.len());
+        let mut out = Vec::with_capacity(budget);
+        if budget == 0 {
+            return Ok(out);
+        }
+        let mut logits = self.start(&mut state, prompt)?;
+        loop {
+            let tok = pick(&logits) as i32;
+            if Some(tok) == stop {
+                break;
+            }
+            out.push(tok);
+            if out.len() >= budget {
+                break;
+            }
+            logits = self.advance(&mut state, tok)?;
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::Sampler;
+    use crate::model::ParamSet;
+    use crate::quant::QuantSpec;
+    use crate::util::Rng;
+
+    fn spec_cfg(seq: usize) -> ModelConfig {
+        let mut cfg = ModelConfig::preset("gqa").unwrap();
+        cfg.n_layers = 2;
+        cfg.seq = seq;
+        cfg.batch = 1;
+        cfg.vocab = 256;
+        cfg
+    }
+
+    fn pair(cfg: &ModelConfig, seed: u64) -> SpecDecoder {
+        let mut rng = Rng::new(seed);
+        let params = ParamSet::init_outliers(cfg, &mut rng);
+        SpecDecoder::from_dense(&params, 8, 16, 16, QuantSpec::new(4, 128), 1).unwrap()
+    }
+
+    #[test]
+    fn config_mismatch_is_rejected() {
+        let cfg = spec_cfg(32);
+        let mut other = cfg.clone();
+        other.vocab = 512;
+        let mut rng = Rng::new(7);
+        let a = Arc::new(SparseLm::from_params(&ParamSet::init(&cfg, &mut rng)));
+        let b = Arc::new(SparseLm::from_params(&ParamSet::init(&other, &mut rng)));
+        assert!(SpecDecoder::new(a, b).is_err());
+    }
+
+    #[test]
+    fn greedy_spec_generate_is_bitwise_plain_bf16_over_64_tokens() {
+        // the tentpole acceptance bar, in-process: >= 64 greedy tokens,
+        // token-for-token equal to the plain bf16 target decode
+        let cfg = spec_cfg(80);
+        let spec = pair(&cfg, 51);
+        let mut rng = Rng::new(52);
+        let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let want = spec.target().generate(&prompt, 70, None, argmax).unwrap();
+        let got = spec.generate(&prompt, 70, None, argmax).unwrap();
+        assert_eq!(want.len(), 70);
+        assert_eq!(got, want, "speculative output diverged from plain greedy");
+    }
+
+    #[test]
+    fn stop_token_semantics_match_plain_generate() {
+        let cfg = spec_cfg(48);
+        let spec = pair(&cfg, 53);
+        let prompt = [3, 5, 7];
+        let free = spec.generate(&prompt, 24, None, argmax).unwrap();
+        assert_eq!(free.len(), 24);
+        let stop = free[5];
+        let first = free.iter().position(|&t| t == stop).unwrap();
+        let stopped = spec.generate(&prompt, 24, Some(stop), argmax).unwrap();
+        assert_eq!(stopped, free[..first].to_vec());
+        let plain = spec.target().generate(&prompt, 24, Some(stop), argmax).unwrap();
+        assert_eq!(stopped, plain);
+    }
+
+    #[test]
+    fn budget_caps_at_context_window_without_ring_slide() {
+        // drive the speculative windows right up against the cache
+        // boundary: prompt 5 + 27 generated fills seq 32 exactly, and
+        // every round's window is clamped so truncate stays exact
+        let cfg = spec_cfg(32);
+        let spec = pair(&cfg, 54);
+        let prompt = [1, 2, 3, 4, 5];
+        let got = spec.generate(&prompt, 100, None, argmax).unwrap();
+        let want = spec.target().generate(&prompt, 100, None, argmax).unwrap();
+        assert_eq!(got.len(), cfg.seq - prompt.len());
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn sampled_decoding_survives_mispredicts_and_matches_plain_path() {
+        // temperature > 0: the sampler leaves the greedy chain, forcing
+        // rollbacks — the advance() stream must still be bitwise equal
+        // to plain decode_step logits, so same seed -> same tokens
+        let cfg = spec_cfg(48);
+        let spec = pair(&cfg, 55);
+        let prompt = [9, 11, 13];
+        let run = |spec_path: bool| -> Vec<i32> {
+            let mut sampler = Sampler::new(0.9, 424242);
+            if spec_path {
+                spec.generate(&prompt, 30, None, |l| sampler.next(l)).unwrap()
+            } else {
+                spec.target().generate(&prompt, 30, None, |l| sampler.next(l)).unwrap()
+            }
+        };
+        let plain = run(false);
+        let speculative = run(true);
+        assert_eq!(speculative, plain, "sampled stream diverged");
+        let d = perf::snapshot();
+        assert!(d.spec_rounds > 0, "no speculative rounds ran");
+    }
+
+    #[test]
+    fn adaptive_k_stays_clamped() {
+        let cfg = spec_cfg(64);
+        let spec = pair(&cfg, 56);
+        let mut state = spec.new_state().unwrap();
+        let mut logits = spec.start(&mut state, &[2, 4, 6]).unwrap();
+        for _ in 0..40 {
+            assert!((K_MIN..=K_MAX).contains(&state.k()), "k = {}", state.k());
+            if state.committed() + 1 >= cfg.seq {
+                break;
+            }
+            let tok = argmax(&logits) as i32;
+            logits = spec.advance(&mut state, tok).unwrap();
+        }
+        // state reuse across sequences keeps the adapted k
+        let k_after = state.k();
+        spec.start(&mut state, &[1]).unwrap();
+        assert_eq!(state.k(), k_after);
+        assert_eq!(state.committed(), 1);
+    }
+}

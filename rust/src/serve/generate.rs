@@ -29,7 +29,7 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::eval::Sampler;
-use crate::model::{KvCache, SparseLm};
+use crate::model::{KvCache, SparseLm, SpecDecoder, SpecState};
 use crate::util::timer::LatencyRing;
 
 /// Decode-step latency samples retained for the percentile fields of
@@ -485,9 +485,10 @@ impl DecodeEngine for SpmmEngine {
     }
 
     fn start(&mut self, slot: usize, prompt: &[i32]) -> crate::Result<Vec<f32>> {
-        let mut cache = self.slots[slot]
-            .take()
-            .unwrap_or_else(|| KvCache::new(&self.lm.config));
+        let mut cache = match self.slots[slot].take() {
+            Some(c) => c,
+            None => KvCache::new(&self.lm.config)?,
+        };
         cache.clear();
         // last-position head only: admission runs on the decode thread
         // between steps, and the tied-head GEMM over every prompt row
@@ -522,6 +523,76 @@ impl DecodeEngine for SpmmEngine {
     fn finish(&mut self, slot: usize) {
         if let Some(c) = self.slots[slot].as_mut() {
             c.clear();
+        }
+    }
+}
+
+// ------------------------------------------------------------ SpecEngine
+
+/// Speculative [`DecodeEngine`]: per-slot [`SpecState`]s over a shared
+/// [`SpecDecoder`] (int4 draft + bf16 target), so continuous batching
+/// composes with self-speculative decoding — each sequence runs its own
+/// adaptive draft window and the scheduler stays completely unaware.
+///
+/// Slots advance independently (one [`SpecDecoder::advance`] per
+/// `(slot, token)` pair) rather than sharing a cross-slot GEMM: the
+/// per-sequence windows have different lengths and roll back at
+/// different times, and the batched weight amortization the plain
+/// engine gets from its batch dimension is exactly what the verify
+/// window already provides *within* each sequence. Logits returned are
+/// bitwise identical to [`SpmmEngine`] over the target model, so the
+/// two backends generate identical streams for identical requests
+/// (`tests/spec_decode.rs` pins this through a live server).
+pub struct SpecEngine {
+    spec: Arc<SpecDecoder>,
+    slots: Vec<Option<SpecState>>,
+}
+
+impl SpecEngine {
+    /// `max_seqs` bounds concurrent sequences (two KV caches per slot —
+    /// draft and target — so a slot is roughly twice as heavy as a
+    /// [`SpmmEngine`] slot).
+    pub fn new(spec: Arc<SpecDecoder>, max_seqs: usize) -> SpecEngine {
+        SpecEngine {
+            spec,
+            slots: (0..max_seqs.max(1)).map(|_| None).collect(),
+        }
+    }
+}
+
+impl DecodeEngine for SpecEngine {
+    fn max_seqs(&self) -> usize {
+        self.slots.len()
+    }
+
+    fn max_positions(&self) -> usize {
+        self.spec.config().seq
+    }
+
+    fn start(&mut self, slot: usize, prompt: &[i32]) -> crate::Result<Vec<f32>> {
+        let mut state = match self.slots[slot].take() {
+            Some(s) => s,
+            None => self.spec.new_state()?,
+        };
+        let logits = self.spec.start(&mut state, prompt)?;
+        self.slots[slot] = Some(state);
+        Ok(logits)
+    }
+
+    fn step(&mut self, toks: &[(usize, i32)]) -> crate::Result<Vec<Vec<f32>>> {
+        let mut rows = Vec::with_capacity(toks.len());
+        for &(slot, tok) in toks {
+            let state = self.slots[slot]
+                .as_mut()
+                .ok_or_else(|| anyhow::anyhow!("slot {slot} has no started sequence"))?;
+            rows.push(self.spec.advance(state, tok)?);
+        }
+        Ok(rows)
+    }
+
+    fn finish(&mut self, slot: usize) {
+        if let Some(s) = self.slots[slot].as_mut() {
+            s.clear();
         }
     }
 }

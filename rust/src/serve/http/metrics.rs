@@ -298,6 +298,17 @@ pub fn render(service: &Service, http: &HttpStats, gate: &Gate, draining: bool) 
         );
         w.sample("sparselm_decode_batch_fill_sum", &[], fill_sum as f64);
         w.sample("sparselm_decode_batch_fill_count", &[], cum as f64);
+
+        w.metric(
+            "sparselm_gen_queue_depth",
+            "generation requests currently queued",
+            PromKind::Gauge,
+        );
+        w.sample(
+            "sparselm_gen_queue_depth",
+            &[],
+            service.gen_queue_depth() as f64,
+        );
     }
 
     // ---- HTTP front end -----------------------------------------------
@@ -460,6 +471,43 @@ mod tests {
         assert!(s.value("sparselm_spmm_calls_total", &[]).is_some());
         assert_eq!(s.value("sparselm_score_queue_depth", &[]), Some(0.0));
         assert_eq!(s.value("sparselm_ops_total", &[("op", "nll")]), Some(0.0));
+    }
+
+    #[test]
+    fn gen_queue_depth_gauge_tracks_queued_requests() {
+        use crate::serve::generate::{GenRequest, GenScheduler};
+        let gen = Arc::new(GenScheduler::new());
+        let service = Service::new(
+            Arc::new(Batcher::new(BatcherConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+            })),
+            Some(gen.clone()),
+            Arc::new(crate::data::Tokenizer::fit("a b c d", 32)),
+            Arc::new(crate::serve::ServerStats::default()),
+            8,
+        );
+        // no engine thread is draining the queue, so a submitted
+        // request sits in it — exactly what the admission gauge reads
+        let _rx = gen.submit(GenRequest {
+            id: 1,
+            prompt: vec![1],
+            max_tokens: 1,
+            temperature: 0.0,
+            seed: 0,
+            stop: None,
+        });
+        let http = HttpStats::default();
+        let gate = Gate::new(2);
+        let page = render(&service, &http, &gate, false);
+        let s = parse_text(&page).expect("page must be valid prometheus text");
+        assert_eq!(s.value("sparselm_gen_queue_depth", &[]), Some(1.0));
+        // the speculative-decode counter families ride along via the
+        // global perf exporter on the same page
+        assert!(s.value("sparselm_spec_rounds_total", &[]).is_some());
+        assert!(s.value("sparselm_spec_drafted_total", &[]).is_some());
+        assert!(s.value("sparselm_spec_accepted_total", &[]).is_some());
+        assert!(s.value("sparselm_spec_mispredicts_total", &[]).is_some());
     }
 
     #[test]

@@ -51,12 +51,12 @@ pub mod service;
 pub use batcher::{Batcher, BatcherConfig, ScoreRequest, ScoreResponse};
 pub use client::ServeClient;
 pub use generate::{
-    DecodeEngine, GenRequest, GenResponse, GenScheduler, GenStats, SpmmEngine,
+    DecodeEngine, GenRequest, GenResponse, GenScheduler, GenStats, SpecEngine, SpmmEngine,
 };
 pub use http::{serve_http, HttpClient, HttpConfig, HttpHandle, HttpReply};
 pub use protocol::{Request, Response};
 pub use server::{
-    pjrt_scorer, serve, serve_generate, spmm_generator, spmm_scorer, GenEngine, Scorer,
-    ServerConfig, ServerHandle, ServerStats,
+    pjrt_scorer, serve, serve_generate, spec_generator, spmm_generator, spmm_scorer, GenEngine,
+    Scorer, ServerConfig, ServerHandle, ServerStats,
 };
 pub use service::Service;

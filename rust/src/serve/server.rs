@@ -25,7 +25,7 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use super::batcher::{Batcher, BatcherConfig, ScoreRequest};
-use super::generate::{DecodeEngine, GenScheduler, SpmmEngine};
+use super::generate::{DecodeEngine, GenScheduler, SpecEngine, SpmmEngine};
 use super::protocol::{Request, Response};
 use super::service::Service;
 use crate::data::batch::pack_windows;
@@ -298,6 +298,17 @@ pub fn spmm_generator(
     max_seqs: usize,
 ) -> impl FnOnce() -> crate::Result<GenEngine> + Send {
     move || Ok(Box::new(SpmmEngine::new(model, max_seqs)) as GenEngine)
+}
+
+/// Self-speculative generation engine: int4 draft + bf16 verify behind
+/// the same [`GenScheduler`] interface ([`SpecEngine`]). Emits the same
+/// token stream as [`spmm_generator`] over the decoder's target model —
+/// speculation only changes latency, never output.
+pub fn spec_generator(
+    spec: Arc<crate::model::SpecDecoder>,
+    max_seqs: usize,
+) -> impl FnOnce() -> crate::Result<GenEngine> + Send {
+    move || Ok(Box::new(SpecEngine::new(spec, max_seqs)) as GenEngine)
 }
 
 /// Start a scoring-only server (`generate` requests answer with a

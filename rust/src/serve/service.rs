@@ -77,6 +77,12 @@ impl Service {
         self.generator.as_ref().map(|g| g.stats()).unwrap_or_default()
     }
 
+    /// Generation requests currently queued (admission gauge; 0 when
+    /// serving without an engine).
+    pub fn gen_queue_depth(&self) -> usize {
+        self.generator.as_ref().map(|g| g.queue_depth()).unwrap_or(0)
+    }
+
     /// Does this server answer `generate`?
     pub fn has_generator(&self) -> bool {
         self.generator.is_some()
@@ -265,6 +271,15 @@ impl Service {
             fields.push(("decode_nanos", Json::num(gs.decode_nanos as f64)));
             fields.push(("decode_p50_us", Json::num(gs.decode_p50_us)));
             fields.push(("decode_p99_us", Json::num(gs.decode_p99_us)));
+            fields.push(("gen_queue_depth", Json::num(g.queue_depth() as f64)));
+            // speculative-decoding counters (all zero unless the engine
+            // is a SpecEngine; process-wide like the perf phases)
+            let p = crate::util::perf::snapshot();
+            fields.push(("spec_rounds", Json::num(p.spec_rounds as f64)));
+            fields.push(("spec_drafted", Json::num(p.spec_drafted as f64)));
+            fields.push(("spec_accepted", Json::num(p.spec_accepted as f64)));
+            fields.push(("spec_mispredicts", Json::num(p.spec_mispredicts as f64)));
+            fields.push(("spec_accept_rate", Json::num(p.spec_accept_rate())));
         }
         Json::obj(fields)
     }

@@ -28,9 +28,14 @@ use std::time::Instant;
 use super::json::Json;
 
 /// Number of [`Phase`] variants (array sizing).
-pub const N_PHASES: usize = 4;
+pub const N_PHASES: usize = 6;
 
 /// Hot-path phases with dedicated wall-time accumulators.
+///
+/// Phases are independent accumulators, not an exclusive partition
+/// (module docs): the speculative phases wrap the model calls they
+/// drive, so `Draft ⊇ Decode` time for the q4 draft loop and
+/// `Verify ⊇ Decode` for the batched target window.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {
     /// Batch scoring forward (`SparseLm::lm_nll` / `full_logits`).
@@ -41,10 +46,21 @@ pub enum Phase {
     Decode = 2,
     /// Any packed/dense GEMM or GEMV through the spmm drivers.
     Spmm = 3,
+    /// Speculative drafting: the q4 GEMV loop proposing a token window.
+    Draft = 4,
+    /// Speculative verification: the bf16 batched window forward.
+    Verify = 5,
 }
 
 impl Phase {
-    pub const ALL: [Phase; N_PHASES] = [Phase::Score, Phase::Prefill, Phase::Decode, Phase::Spmm];
+    pub const ALL: [Phase; N_PHASES] = [
+        Phase::Score,
+        Phase::Prefill,
+        Phase::Decode,
+        Phase::Spmm,
+        Phase::Draft,
+        Phase::Verify,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -52,6 +68,8 @@ impl Phase {
             Phase::Prefill => "prefill",
             Phase::Decode => "decode",
             Phase::Spmm => "spmm",
+            Phase::Draft => "draft",
+            Phase::Verify => "verify",
         }
     }
 }
@@ -61,27 +79,28 @@ struct Counters {
     gemv_calls: AtomicU64,
     operand_bytes: AtomicU64,
     decoded_blocks: AtomicU64,
+    spec_rounds: AtomicU64,
+    spec_drafted: AtomicU64,
+    spec_accepted: AtomicU64,
+    spec_mispredicts: AtomicU64,
     phase_ns: [AtomicU64; N_PHASES],
     phase_calls: [AtomicU64; N_PHASES],
 }
+
+#[allow(clippy::declare_interior_mutable_const)]
+const ZERO: AtomicU64 = AtomicU64::new(0);
 
 static COUNTERS: Counters = Counters {
     spmm_calls: AtomicU64::new(0),
     gemv_calls: AtomicU64::new(0),
     operand_bytes: AtomicU64::new(0),
     decoded_blocks: AtomicU64::new(0),
-    phase_ns: [
-        AtomicU64::new(0),
-        AtomicU64::new(0),
-        AtomicU64::new(0),
-        AtomicU64::new(0),
-    ],
-    phase_calls: [
-        AtomicU64::new(0),
-        AtomicU64::new(0),
-        AtomicU64::new(0),
-        AtomicU64::new(0),
-    ],
+    spec_rounds: AtomicU64::new(0),
+    spec_drafted: AtomicU64::new(0),
+    spec_accepted: AtomicU64::new(0),
+    spec_mispredicts: AtomicU64::new(0),
+    phase_ns: [ZERO; N_PHASES],
+    phase_calls: [ZERO; N_PHASES],
 };
 
 /// One matrix-path GEMM completed, streaming `operand_bytes` of packed
@@ -105,6 +124,26 @@ pub fn record_gemv(operand_bytes: usize, blocks: usize) {
     COUNTERS
         .decoded_blocks
         .fetch_add(blocks as u64, Ordering::Relaxed);
+}
+
+/// One speculative draft/verify round completed: `drafted` tokens were
+/// proposed by the q4 draft, of which the leading `accepted` matched
+/// the bf16 target's greedy choices.
+pub fn record_spec_round(drafted: usize, accepted: usize) {
+    COUNTERS.spec_rounds.fetch_add(1, Ordering::Relaxed);
+    COUNTERS
+        .spec_drafted
+        .fetch_add(drafted as u64, Ordering::Relaxed);
+    COUNTERS
+        .spec_accepted
+        .fetch_add(accepted as u64, Ordering::Relaxed);
+}
+
+/// The scheduler committed a token the speculative queue did not
+/// predict (non-greedy sampling divergence) — the caches were rolled
+/// back and a fresh round ran.
+pub fn record_spec_mispredict() {
+    COUNTERS.spec_mispredicts.fetch_add(1, Ordering::Relaxed);
 }
 
 /// RAII wall-time meter: the elapsed time between construction and drop
@@ -137,6 +176,10 @@ pub struct Snapshot {
     pub gemv_calls: u64,
     pub operand_bytes: u64,
     pub decoded_blocks: u64,
+    pub spec_rounds: u64,
+    pub spec_drafted: u64,
+    pub spec_accepted: u64,
+    pub spec_mispredicts: u64,
     pub phase_ns: [u64; N_PHASES],
     pub phase_calls: [u64; N_PHASES],
 }
@@ -150,6 +193,12 @@ impl Snapshot {
             gemv_calls: self.gemv_calls.saturating_sub(earlier.gemv_calls),
             operand_bytes: self.operand_bytes.saturating_sub(earlier.operand_bytes),
             decoded_blocks: self.decoded_blocks.saturating_sub(earlier.decoded_blocks),
+            spec_rounds: self.spec_rounds.saturating_sub(earlier.spec_rounds),
+            spec_drafted: self.spec_drafted.saturating_sub(earlier.spec_drafted),
+            spec_accepted: self.spec_accepted.saturating_sub(earlier.spec_accepted),
+            spec_mispredicts: self
+                .spec_mispredicts
+                .saturating_sub(earlier.spec_mispredicts),
             ..Snapshot::default()
         };
         for i in 0..N_PHASES {
@@ -157,6 +206,24 @@ impl Snapshot {
             d.phase_calls[i] = self.phase_calls[i].saturating_sub(earlier.phase_calls[i]);
         }
         d
+    }
+
+    /// Drafted tokens the target accepted, as a rate in `[0, 1]`
+    /// (`0.0` before the first round).
+    pub fn spec_accept_rate(&self) -> f64 {
+        if self.spec_drafted == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_drafted as f64
+    }
+
+    /// Mean accepted draft length per speculative round (`0.0` before
+    /// the first round).
+    pub fn spec_mean_accepted(&self) -> f64 {
+        if self.spec_rounds == 0 {
+            return 0.0;
+        }
+        self.spec_accepted as f64 / self.spec_rounds as f64
     }
 
     /// Accumulated wall seconds in `p`.
@@ -183,6 +250,10 @@ impl Snapshot {
             ("gemv_calls", Json::num(self.gemv_calls as f64)),
             ("operand_bytes", Json::num(self.operand_bytes as f64)),
             ("decoded_blocks", Json::num(self.decoded_blocks as f64)),
+            ("spec_rounds", Json::num(self.spec_rounds as f64)),
+            ("spec_drafted", Json::num(self.spec_drafted as f64)),
+            ("spec_accepted", Json::num(self.spec_accepted as f64)),
+            ("spec_mispredicts", Json::num(self.spec_mispredicts as f64)),
             ("phases", Json::obj(phases)),
         ])
     }
@@ -218,6 +289,38 @@ impl super::prom::PromExport for Snapshot {
         );
         w.sample("sparselm_decoded_blocks_total", &[], self.decoded_blocks as f64);
         w.metric(
+            "sparselm_spec_rounds_total",
+            "speculative draft/verify rounds executed",
+            Counter,
+        );
+        w.sample("sparselm_spec_rounds_total", &[], self.spec_rounds as f64);
+        w.metric(
+            "sparselm_spec_drafted_total",
+            "tokens proposed by the speculative draft model",
+            Counter,
+        );
+        w.sample("sparselm_spec_drafted_total", &[], self.spec_drafted as f64);
+        w.metric(
+            "sparselm_spec_accepted_total",
+            "drafted tokens accepted by the verify pass",
+            Counter,
+        );
+        w.sample(
+            "sparselm_spec_accepted_total",
+            &[],
+            self.spec_accepted as f64,
+        );
+        w.metric(
+            "sparselm_spec_mispredicts_total",
+            "speculative queue rollbacks from non-greedy sampling divergence",
+            Counter,
+        );
+        w.sample(
+            "sparselm_spec_mispredicts_total",
+            &[],
+            self.spec_mispredicts as f64,
+        );
+        w.metric(
             "sparselm_phase_seconds_total",
             "wall seconds accumulated per hot-path phase",
             Counter,
@@ -251,6 +354,10 @@ pub fn snapshot() -> Snapshot {
         gemv_calls: COUNTERS.gemv_calls.load(Ordering::Relaxed),
         operand_bytes: COUNTERS.operand_bytes.load(Ordering::Relaxed),
         decoded_blocks: COUNTERS.decoded_blocks.load(Ordering::Relaxed),
+        spec_rounds: COUNTERS.spec_rounds.load(Ordering::Relaxed),
+        spec_drafted: COUNTERS.spec_drafted.load(Ordering::Relaxed),
+        spec_accepted: COUNTERS.spec_accepted.load(Ordering::Relaxed),
+        spec_mispredicts: COUNTERS.spec_mispredicts.load(Ordering::Relaxed),
         ..Snapshot::default()
     };
     for i in 0..N_PHASES {
@@ -267,6 +374,10 @@ pub fn reset() {
     COUNTERS.gemv_calls.store(0, Ordering::Relaxed);
     COUNTERS.operand_bytes.store(0, Ordering::Relaxed);
     COUNTERS.decoded_blocks.store(0, Ordering::Relaxed);
+    COUNTERS.spec_rounds.store(0, Ordering::Relaxed);
+    COUNTERS.spec_drafted.store(0, Ordering::Relaxed);
+    COUNTERS.spec_accepted.store(0, Ordering::Relaxed);
+    COUNTERS.spec_mispredicts.store(0, Ordering::Relaxed);
     for i in 0..N_PHASES {
         COUNTERS.phase_ns[i].store(0, Ordering::Relaxed);
         COUNTERS.phase_calls[i].store(0, Ordering::Relaxed);
@@ -361,5 +472,42 @@ mod tests {
         assert_eq!(Phase::Prefill.name(), "prefill");
         assert_eq!(Phase::Decode.name(), "decode");
         assert_eq!(Phase::Spmm.name(), "spmm");
+        assert_eq!(Phase::Draft.name(), "draft");
+        assert_eq!(Phase::Verify.name(), "verify");
+    }
+
+    #[test]
+    fn spec_counters_accumulate_and_derive_rates() {
+        let before = snapshot();
+        record_spec_round(4, 3);
+        record_spec_round(4, 4);
+        record_spec_mispredict();
+        let d = snapshot().delta(&before);
+        assert!(d.spec_rounds >= 2);
+        assert!(d.spec_drafted >= 8);
+        assert!(d.spec_accepted >= 7);
+        assert!(d.spec_mispredicts >= 1);
+        assert!(d.spec_accept_rate() > 0.0 && d.spec_accept_rate() <= 1.0);
+        assert!(d.spec_mean_accepted() > 0.0);
+        // zero-division guards
+        assert_eq!(Snapshot::default().spec_accept_rate(), 0.0);
+        assert_eq!(Snapshot::default().spec_mean_accepted(), 0.0);
+        // the json and prom surfaces carry the new counters
+        let j = d.to_json();
+        for key in ["spec_rounds", "spec_drafted", "spec_accepted", "spec_mispredicts"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        use crate::util::prom::{parse_text, PromExport, PromWriter};
+        let mut w = PromWriter::new();
+        d.prom_export(&mut w);
+        let s = parse_text(&w.finish()).expect("spec export must parse");
+        for fam in [
+            "sparselm_spec_rounds_total",
+            "sparselm_spec_drafted_total",
+            "sparselm_spec_accepted_total",
+            "sparselm_spec_mispredicts_total",
+        ] {
+            assert!(s.value(fam, &[]).is_some(), "missing {fam}");
+        }
     }
 }

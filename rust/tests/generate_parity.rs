@@ -17,7 +17,8 @@ use sparselm::data::{CorpusKind, CorpusSpec, Tokenizer, World};
 use sparselm::eval::argmax;
 use sparselm::model::{KvCache, ModelConfig, ParamSet, SparseLm};
 use sparselm::serve::{
-    serve_generate, spmm_generator, spmm_scorer, ServeClient, ServerConfig,
+    serve_generate, spmm_generator, spmm_scorer, GenRequest, GenScheduler, ServeClient,
+    ServerConfig, SpmmEngine,
 };
 use sparselm::util::propcheck::assert_allclose;
 use sparselm::util::Rng;
@@ -45,7 +46,7 @@ fn assert_incremental_matches_full(lm: &SparseLm, label: &str) {
     let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
 
     // incremental path: prefill + 32 decode steps, greedy
-    let mut cache = KvCache::new(cfg);
+    let mut cache = KvCache::new(cfg).unwrap();
     let prefill_logits = lm.prefill(&prompt, &mut cache).unwrap();
     let (prows, _) = prefill_logits.dims2();
     let mut step_logits: Vec<Vec<f32>> = vec![prefill_logits.row(prows - 1).to_vec()];
@@ -105,7 +106,7 @@ fn generate_convenience_reproduces_stepwise_greedy() {
     let prompt: Vec<i32> = vec![3, 17, 99];
     let via_generate = lm.generate(&prompt, 12, None, argmax).unwrap();
 
-    let mut cache = KvCache::new(&cfg);
+    let mut cache = KvCache::new(&cfg).unwrap();
     let pl = lm.prefill(&prompt, &mut cache).unwrap();
     let mut tok = argmax(pl.row(pl.dims2().0 - 1)) as i32;
     let mut manual = vec![tok];
@@ -115,6 +116,54 @@ fn generate_convenience_reproduces_stepwise_greedy() {
         manual.push(tok);
     }
     assert_eq!(via_generate, manual);
+}
+
+/// Capacity edge through the scheduler: a request whose prompt +
+/// max_tokens lands exactly on the KV capacity generates every token;
+/// one past gets clamped to the context window instead of overflowing
+/// the cache — and clamping never changes the emitted stream.
+#[test]
+fn generation_budget_clamps_at_context_capacity() {
+    let cfg = test_config(); // seq = 48
+    let mut rng = Rng::new(55);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let lm = Arc::new(SparseLm::compress(&params, 8, 16, 16));
+
+    let sched = Arc::new(GenScheduler::new());
+    let engine = SpmmEngine::new(Arc::clone(&lm), 2);
+    let runner = {
+        let s = Arc::clone(&sched);
+        std::thread::spawn(move || s.run(engine))
+    };
+
+    let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let exact = cfg.seq - prompt.len(); // fills the window to the brim
+    let mk = |id: u64, max_tokens: usize| GenRequest {
+        id,
+        prompt: prompt.clone(),
+        max_tokens,
+        temperature: 0.0,
+        seed: 0,
+        stop: None, // no early stop: the budget is what terminates
+    };
+    let rx_at = sched.submit(mk(1, exact));
+    let rx_past = sched.submit(mk(2, exact + 1));
+    let at = rx_at.recv().unwrap();
+    let past = rx_past.recv().unwrap();
+
+    assert_eq!(at.tokens.len(), exact, "exact-capacity request runs to the brim");
+    assert_eq!(
+        past.tokens.len(),
+        exact,
+        "one past capacity must clamp to the window, not overflow the cache"
+    );
+    assert_eq!(at.tokens, past.tokens, "clamping must not alter the stream");
+    // final state: prompt + generated inputs never exceeded capacity
+    // (the last sampled token is returned, not fed back)
+    assert_eq!(at.prompt_tokens + at.tokens.len(), cfg.seq);
+
+    sched.close();
+    runner.join().unwrap().unwrap();
 }
 
 #[test]

@@ -1,0 +1,164 @@
+//! Live-server acceptance for self-speculative decoding: a server on
+//! `--backend spec` (int4 draft + bf16 windowed verify behind
+//! [`sparselm::serve::SpecEngine`]) must be **bitwise indistinguishable**
+//! from the plain packed backend — same greedy token stream, same
+//! seeded-sampling stream, same bytes through both ingresses — while
+//! the `stats` op and the Prometheus scrape surface the speculation
+//! counters that prove the fast path actually ran.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use sparselm::data::{CorpusKind, CorpusSpec, Tokenizer, World};
+use sparselm::model::{ModelConfig, ParamSet, SparseLm, SpecDecoder};
+use sparselm::quant::QuantSpec;
+use sparselm::serve::{
+    serve_generate, spec_generator, spmm_generator, spmm_scorer, HttpClient, HttpConfig,
+    ServeClient, ServerConfig,
+};
+use sparselm::util::json::Json;
+use sparselm::util::prom;
+use sparselm::util::Rng;
+
+const GEN_TOKENS: usize = 64;
+
+fn model_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::preset("tiny").unwrap();
+    cfg.n_layers = 2;
+    cfg.seq = 96; // room for prompt + 64 generated tokens
+    cfg.batch = 2;
+    cfg
+}
+
+fn server_cfg() -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".into(),
+        max_conns: 8,
+        max_batch: 2,
+        max_wait: Duration::from_millis(3),
+        max_gen_tokens: GEN_TOKENS,
+    }
+}
+
+/// Drop the wall-clock fields and re-serialize (object keys are
+/// BTreeMap-sorted, so equal results give byte-equal strings).
+fn strip_timing(text: &str) -> String {
+    let mut v = Json::parse(text).unwrap_or_else(|e| panic!("bad json {text:?}: {e}"));
+    if let Json::Obj(m) = &mut v {
+        m.remove("latency_ms");
+        m.remove("mean_batch_fill");
+    }
+    v.to_string()
+}
+
+#[test]
+fn spec_backend_is_bitwise_identical_to_plain_backend_through_live_servers() {
+    let cfg = model_cfg();
+    let mut rng = Rng::new(6001);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let world = World::new(7);
+    let text = CorpusSpec::new(CorpusKind::Wiki, 8_000, 3).generate(&world);
+    let tok = Arc::new(Tokenizer::fit(&text, cfg.vocab));
+
+    // two servers over the SAME parameter set: plain packed bf16, and
+    // the speculative pair built from it
+    let plain_lm = Arc::new(SparseLm::compress(&params, 8, 16, 16));
+    let plain = serve_generate(
+        spmm_scorer(Arc::clone(&plain_lm)),
+        spmm_generator(plain_lm, 4),
+        Arc::clone(&tok),
+        server_cfg(),
+    )
+    .unwrap();
+    let dec = Arc::new(
+        SpecDecoder::from_dense(&params, 8, 16, 16, QuantSpec::int4_g128(), 1).unwrap(),
+    );
+    let spec = serve_generate(
+        spmm_scorer(Arc::clone(dec.target())),
+        spec_generator(Arc::clone(&dec), 4),
+        Arc::clone(&tok),
+        server_cfg(),
+    )
+    .unwrap();
+    let http = spec
+        .attach_http(HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        })
+        .unwrap();
+
+    let mut cp = ServeClient::connect(plain.addr).unwrap();
+    cp.set_timeout(Duration::from_secs(240)).unwrap();
+    let mut cs = ServeClient::connect(spec.addr).unwrap();
+    cs.set_timeout(Duration::from_secs(240)).unwrap();
+
+    // ---- greedy: token-for-token identical streams --------------------
+    let mut compared = 0usize;
+    for prompt in [
+        "the quick brown fox",
+        "a language model is served",
+        "counting one two three four",
+    ] {
+        let (pt, pn) = cp.generate(prompt, GEN_TOKENS, 0.0).unwrap();
+        let (st, sn) = cs.generate(prompt, GEN_TOKENS, 0.0).unwrap();
+        assert_eq!(pn, sn, "{prompt:?}: token counts diverge");
+        assert_eq!(pt, st, "{prompt:?}: greedy streams diverge");
+        compared += sn;
+    }
+    assert!(
+        compared >= GEN_TOKENS,
+        "acceptance demands >= {GEN_TOKENS} compared tokens, got {compared}"
+    );
+
+    // ---- seeded sampling: the engines return bitwise-equal logits, so
+    // the same per-sequence seed must draw the same tokens ------------
+    let (pt, pn) = cp.generate_seeded("sampled text now", 24, 0.8, 777).unwrap();
+    let (st, sn) = cs.generate_seeded("sampled text now", 24, 0.8, 777).unwrap();
+    assert_eq!((pt.as_str(), pn), (st.as_str(), sn), "seeded streams diverge");
+    let (st2, sn2) = cs.generate_seeded("sampled text now", 24, 0.8, 777).unwrap();
+    assert_eq!((st.as_str(), sn), (st2.as_str(), sn2), "same seed must replay");
+
+    // ---- TCP <-> HTTP parity on the speculative server, greedy and
+    // seeded temperature > 0 (the protocol's seed field end-to-end) ----
+    let mut hc = HttpClient::connect(http.addr).unwrap();
+    hc.set_timeout(Duration::from_secs(240)).unwrap();
+    for body in [
+        "{\"prompt\": \"the quick brown\", \"max_tokens\": 12, \"temperature\": 0}",
+        "{\"prompt\": \"the quick brown\", \"max_tokens\": 12, \"temperature\": 0.8, \
+         \"seed\": 424242}",
+    ] {
+        let mut s = std::net::TcpStream::connect(spec.addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(240))).unwrap();
+        use std::io::{BufRead, Write};
+        s.write_all(format!("{{\"op\": \"generate\", {}\n", &body[1..]).as_bytes()).unwrap();
+        let mut tcp = String::new();
+        std::io::BufReader::new(s).read_line(&mut tcp).unwrap();
+        let reply = hc.post_json("/generate", body).unwrap();
+        assert_eq!(reply.status, 200);
+        assert_eq!(
+            strip_timing(&reply.text()),
+            strip_timing(tcp.trim_end()),
+            "ingress parity for {body}"
+        );
+    }
+
+    // ---- telemetry: stats op and scrape surface the speculation ------
+    let stats = cs.stats().unwrap();
+    let field = |k: &str| stats.get(k).and_then(|v| v.as_f64());
+    assert!(field("spec_rounds").unwrap_or(0.0) > 0.0, "no spec rounds: {stats}");
+    assert!(field("spec_drafted").unwrap_or(0.0) > 0.0, "no drafts: {stats}");
+    let rate = field("spec_accept_rate").expect("stats carries spec_accept_rate");
+    assert!((0.0..=1.0).contains(&rate), "accept rate {rate} out of range");
+    assert_eq!(field("gen_queue_depth"), Some(0.0), "idle queue gauge");
+
+    let reply = hc.get("/metrics").unwrap();
+    assert_eq!(reply.status, 200);
+    let s = prom::parse_text(&reply.text()).expect("scrape must stay valid");
+    assert!(s.value("sparselm_spec_rounds_total", &[]).unwrap_or(0.0) > 0.0);
+    assert!(s.value("sparselm_spec_accepted_total", &[]).is_some());
+    assert_eq!(s.value("sparselm_gen_queue_depth", &[]), Some(0.0));
+
+    http.shutdown().unwrap();
+    spec.shutdown().unwrap();
+    plain.shutdown().unwrap();
+}
