@@ -1,0 +1,245 @@
+//! Fleet scaling + shared-memory accounting: boots K=1 / K=2 / K=4
+//! fleets of real worker processes over one packed artifact, drives a
+//! closed-loop TCP load against each, verifies the aggregated
+//! `/metrics` page stays valid under load, and proves the workers
+//! share one physical copy of the weights via `/proc/<pid>/smaps`.
+//! Emits `BENCH_fleet.json` for CI's bench-gate job.
+//!
+//! Gated points (`bench/baseline.json`, schema in docs/BENCHMARKS.md):
+//!
+//! * `error_rate` == 0 — every request in every configuration answered
+//! * `k2_rps_ratio` / `k4_rps_ratio` — fleet throughput vs the K=1
+//!   baseline (same router path, so the ratio isolates scaling)
+//! * `k4_p99_us` — tail latency with 4 workers under load
+//! * `weight_rss_ratio` — Σ Pss of the artifact mapping across 4
+//!   workers / Rss of a single worker's mapping (≈1 when the mmap is
+//!   truly shared; a private copy per worker would read ≈4)
+//! * `shared_weights` — 1 when that ratio stays under 1.5
+
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sparselm::bench::{fast_mode, BenchReport, TablePrinter, WORLD_SEED};
+use sparselm::model::{ModelConfig, ParamSet};
+use sparselm::serve::fleet::{process_spawner, start_fleet, FleetConfig};
+use sparselm::serve::{serve_http, FleetHandle, HttpClient, HttpConfig, ServeClient};
+use sparselm::store::{write_artifact, PackedModel};
+use sparselm::util::prom;
+use sparselm::util::Rng;
+
+const CLIENTS: usize = 4;
+
+fn boot(path: &PathBuf, k: usize) -> sparselm::Result<FleetHandle> {
+    let cfg = FleetConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: k,
+        worker_inflight: 16,
+        ..FleetConfig::default()
+    };
+    let envs = if fast_mode() {
+        vec![("SPARSELM_FAST".to_string(), "1".to_string())]
+    } else {
+        Vec::new()
+    };
+    let spawner = process_spawner(
+        PathBuf::from(env!("CARGO_BIN_EXE_sparselm")),
+        vec!["--model".into(), path.to_string_lossy().into_owned()],
+        envs,
+        cfg.boot_timeout,
+    );
+    start_fleet(cfg, spawner)
+}
+
+/// Closed-loop TCP load: `CLIENTS` keep-alive line-protocol clients,
+/// `per_client` nll ops each. Returns (req/s, p99 seconds, errors,
+/// sent).
+fn drive(addr: SocketAddr, per_client: usize) -> (f64, f64, u64, u64) {
+    let sent = Arc::new(AtomicU64::new(0));
+    let errors = Arc::new(AtomicU64::new(0));
+    let t0 = Instant::now();
+    let mut workers = Vec::new();
+    for c in 0..CLIENTS {
+        let (sent, errors) = (Arc::clone(&sent), Arc::clone(&errors));
+        workers.push(std::thread::spawn(move || {
+            let mut lat = Vec::with_capacity(per_client);
+            let mut cl = ServeClient::connect(addr).expect("connect");
+            cl.set_timeout(Duration::from_secs(300)).expect("timeout");
+            for i in 0..per_client {
+                let text = format!("client {c} sentence {i} about the quick brown fox");
+                let t = Instant::now();
+                sent.fetch_add(1, Ordering::SeqCst);
+                match cl.nll(&text) {
+                    Ok((_, tokens)) if tokens > 0 => lat.push(t.elapsed()),
+                    Ok(_) => {
+                        errors.fetch_add(1, Ordering::SeqCst);
+                    }
+                    Err(e) => {
+                        errors.fetch_add(1, Ordering::SeqCst);
+                        eprintln!("client {c}: request {i} failed: {e}");
+                    }
+                }
+            }
+            lat
+        }));
+    }
+    let mut lat: Vec<Duration> = Vec::new();
+    for w in workers {
+        lat.extend(w.join().expect("client thread"));
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    lat.sort();
+    let p99 = if lat.is_empty() {
+        0.0
+    } else {
+        lat[((lat.len() - 1) as f64 * 0.99).round() as usize].as_secs_f64()
+    };
+    let sent = sent.load(Ordering::SeqCst);
+    (sent as f64 / elapsed, p99, errors.load(Ordering::SeqCst), sent)
+}
+
+/// Sum (Rss kB, Pss kB) over the smaps entries of the artifact mapping
+/// in one worker process. `None` off Linux or if the mapping is absent.
+fn spak_mapping_kb(pid: u32, needle: &str) -> Option<(f64, f64)> {
+    let text = std::fs::read_to_string(format!("/proc/{pid}/smaps")).ok()?;
+    let (mut rss, mut pss) = (0.0f64, 0.0f64);
+    let mut in_target = false;
+    let mut found = false;
+    let kb = |line: &str, prefix: &str| -> Option<f64> {
+        line.strip_prefix(prefix)?.trim().strip_suffix("kB")?.trim().parse().ok()
+    };
+    for line in text.lines() {
+        // mapping headers lead with the "start-end" hex address range;
+        // attribute lines lead with a field name ("Rss:", "Pss:", … —
+        // some of which, like "Anonymous:", also start with hex chars)
+        let header = line.split_whitespace().next().is_some_and(|t| {
+            t.contains('-') && t.bytes().all(|b| b.is_ascii_hexdigit() || b == b'-')
+        });
+        if header {
+            in_target = line.ends_with(needle);
+            found |= in_target;
+        } else if in_target {
+            if let Some(v) = kb(line, "Rss:") {
+                rss += v;
+            }
+            if let Some(v) = kb(line, "Pss:") {
+                pss += v;
+            }
+        }
+    }
+    found.then_some((rss, pss))
+}
+
+fn main() -> sparselm::Result<()> {
+    sparselm::util::logging::init();
+    let mut report = BenchReport::new("fleet");
+    let per_client = if fast_mode() { 8usize } else { 40 };
+
+    // one shared artifact: tiny but real spmm work per request
+    let mut cfg = ModelConfig::preset("tiny").expect("tiny preset");
+    cfg.n_layers = 2;
+    cfg.seq = 48;
+    cfg.batch = 4;
+    let mut rng = Rng::new(WORLD_SEED);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let dir = std::env::temp_dir().join("sparselm-fleet-bench");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("fleet-bench.spak");
+    write_artifact(&path, &PackedModel::compress(&params, 8, 16, 16, None))?;
+    let needle = "fleet-bench.spak";
+    println!("\n# f6_fleet — {CLIENTS} clients x {per_client} nll ops per fleet size\n");
+
+    // ---- K=1 baseline: the router path with a single worker ---------
+    let single = boot(&path, 1)?;
+    let single_rss_kb = single.worker_pids()[0].and_then(|pid| spak_mapping_kb(pid, needle));
+    let (rps1, p99_1, err1, sent1) = drive(single.addr, per_client);
+    single.shutdown()?;
+
+    // ---- K=2 ---------------------------------------------------------
+    let fleet2 = boot(&path, 2)?;
+    let (rps2, p99_2, err2, sent2) = drive(fleet2.addr, per_client);
+    fleet2.shutdown()?;
+
+    // ---- K=4, with a live /metrics scrape mid-load -------------------
+    let fleet4 = boot(&path, 4)?;
+    let http = serve_http(
+        fleet4.router(),
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+    )?;
+    let scrape_addr = http.addr;
+    let scraper = std::thread::spawn(move || -> Result<(), String> {
+        std::thread::sleep(Duration::from_millis(100));
+        let mut cl = HttpClient::connect(scrape_addr).map_err(|e| e.to_string())?;
+        cl.set_timeout(Duration::from_secs(60)).map_err(|e| e.to_string())?;
+        let page = cl.get("/metrics").map_err(|e| e.to_string())?.text();
+        prom::parse_text(&page).map_err(|e| format!("mid-load scrape invalid: {e}"))?;
+        if !page.contains("sparselm_fleet_workers 4") {
+            return Err("fleet rollup missing from mid-load scrape".into());
+        }
+        Ok(())
+    });
+    let (rps4, p99_4, err4, sent4) = drive(fleet4.addr, per_client);
+    scraper
+        .join()
+        .expect("scraper thread")
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    // Σ Pss across the 4 workers ≈ one physical copy iff the mmap is
+    // shared (each worker's Pss charges it 1/4 of every shared page)
+    let mut pss4_kb = 0.0f64;
+    let mut mapped_workers = 0usize;
+    for pid in fleet4.worker_pids().into_iter().flatten() {
+        if let Some((_, pss)) = spak_mapping_kb(pid, needle) {
+            pss4_kb += pss;
+            mapped_workers += 1;
+        }
+    }
+    http.shutdown()?;
+    fleet4.shutdown()?;
+
+    let total_err = err1 + err2 + err4;
+    let total_sent = sent1 + sent2 + sent4;
+    let k2_ratio = rps2 / rps1.max(1e-9);
+    let k4_ratio = rps4 / rps1.max(1e-9);
+
+    let t = TablePrinter::new(&["config", "req/s", "p99 ms", "errors"], &[10, 12, 12, 8]);
+    t.row(&["K=1".into(), format!("{rps1:.1}"), format!("{:.1}", p99_1 * 1e3), format!("{err1}")]);
+    t.row(&["K=2".into(), format!("{rps2:.1}"), format!("{:.1}", p99_2 * 1e3), format!("{err2}")]);
+    t.row(&["K=4".into(), format!("{rps4:.1}"), format!("{:.1}", p99_4 * 1e3), format!("{err4}")]);
+
+    report.lower("error_rate", total_err as f64 / total_sent as f64, "ratio");
+    report.higher("k2_rps_ratio", k2_ratio, "x");
+    report.higher("k4_rps_ratio", k4_ratio, "x");
+    report.lower("k4_p99_us", p99_4 * 1e6, "us");
+    report.lower("k2_p99_us", p99_2 * 1e6, "us");
+
+    // shared-mmap accounting (Linux): gate on the physical footprint
+    match single_rss_kb {
+        Some((rss1, _)) if rss1 > 0.0 && mapped_workers == 4 => {
+            let ratio = pss4_kb / rss1;
+            println!(
+                "\nweights: single worker Rss {rss1:.0} kB; 4-worker Σ Pss {pss4_kb:.0} kB \
+                 (ratio {ratio:.2}; <1.5 proves one shared copy)"
+            );
+            report.lower("weight_rss_ratio", ratio, "x");
+            report.higher(
+                "shared_weights",
+                if ratio < 1.5 { 1.0 } else { 0.0 },
+                "bool",
+            );
+        }
+        _ => {
+            // off Linux the gated keys are absent and the CI gate (which
+            // runs on Linux) would fail loudly rather than silently pass
+            println!("\nweights: /proc/<pid>/smaps unavailable; skipping RSS accounting");
+        }
+    }
+
+    std::fs::remove_file(&path).ok();
+    report.emit()?;
+    Ok(())
+}

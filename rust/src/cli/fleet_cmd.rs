@@ -1,0 +1,148 @@
+//! `sparselm serve --fleet K` and the internal `fleet-worker`
+//! subcommand it re-execs.
+//!
+//! The router side (`cmd_serve_fleet`) boots K `fleet-worker` child
+//! processes over one `.spak`, each a complete single-process server on
+//! an OS-assigned loopback port, and exposes the same TCP + HTTP
+//! ingress a plain `sparselm serve` would — so clients and dashboards
+//! cannot tell a fleet from a single process except by throughput and
+//! the extra `sparselm_fleet_*` metric families.
+//!
+//! The worker side (`cmd_fleet_worker`) is deliberately thin: the same
+//! [`EngineBuilder`] path as `serve --model x.spak`, plus the one-line
+//! stdout readiness handshake the router blocks on.
+//!
+//! [`EngineBuilder`]: crate::serve::EngineBuilder
+
+use std::io::Write;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::serve::fleet::{process_spawner, start_fleet, FleetConfig, READY_PREFIX};
+use crate::serve::http::serve_http;
+use crate::serve::ServerConfig;
+use crate::util::args::Args;
+
+/// Router process: spawn and supervise K workers, fan ops out.
+pub(crate) fn cmd_serve_fleet(args: Args) -> crate::Result<()> {
+    let model = args.get_str("model", "");
+    anyhow::ensure!(
+        model.ends_with(".spak"),
+        "--fleet serves a packed artifact: pass --model <x.spak> (every worker \
+         mmaps the same read-only copy, so K workers cost ~one copy of the weights)"
+    );
+    let defaults = FleetConfig::default();
+    let cfg = FleetConfig {
+        addr: args.get_str("addr", &defaults.addr),
+        workers: args.get_usize("fleet", defaults.workers)?.max(1),
+        max_conns: args.get_usize("max-conns", defaults.max_conns)?,
+        worker_inflight: args.get_usize("worker-inflight", defaults.worker_inflight)?,
+        drain_grace: Duration::from_millis(args.get_u64("drain-grace-ms", 5_000)?),
+        reap_grace: Duration::from_millis(args.get_u64("reap-grace-ms", 5_000)?),
+        ..defaults
+    };
+    // the HTTP gate is the fleet's 429 admission valve: unless the user
+    // pinned it, saturate exactly when every worker is at its cap
+    let mut http = super::serve_cmd::http_cfg(&args)?;
+    if let Some(h) = &mut http {
+        if args.get("http-max-inflight").is_none() {
+            h.max_inflight = cfg.workers * cfg.worker_inflight;
+        }
+    }
+
+    // workers re-exec this binary; flags the worker understands pass
+    // through verbatim (never --addr: workers bind OS-assigned ports)
+    let mut wargs: Vec<String> = vec!["--model".into(), model.clone()];
+    for flag in [
+        "gen-batch",
+        "max-wait-ms",
+        "max-gen-tokens",
+        "threads",
+        "artifacts",
+    ] {
+        if let Some(v) = args.get(flag) {
+            wargs.push(format!("--{flag}"));
+            wargs.push(v.to_string());
+        }
+    }
+    let bin = std::env::current_exe()?;
+    let spawner = process_spawner(bin, wargs, Vec::new(), cfg.boot_timeout);
+
+    let t0 = Instant::now();
+    let handle = Arc::new(start_fleet(cfg, spawner)?);
+    println!(
+        "fleet of {} workers over {model} on {} in {:.1}s — least-inflight routing, \
+         sticky generate placement, restart-on-crash",
+        handle.workers(),
+        handle.addr,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // SIGTERM/SIGINT must walk the full drain (stop admitting → finish
+    // in-flight → reap children) — a dying router never orphans workers
+    crate::util::signal::install();
+    let http_handle = match http {
+        Some(hcfg) => {
+            let h = Arc::new(serve_http(handle.router(), hcfg)?);
+            println!(
+                "http front end on {} — POST /score, POST /generate, GET /health, \
+                 GET /metrics (per-worker labels + fleet rollups)",
+                h.addr
+            );
+            Some(h)
+        }
+        None => None,
+    };
+    let watcher_fleet = Arc::clone(&handle);
+    let watcher_http = http_handle.clone();
+    std::thread::spawn(move || {
+        while !crate::util::signal::termination_requested() {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        if let Some(h) = &watcher_http {
+            let _ = h.shutdown();
+        }
+        let _ = watcher_fleet.shutdown();
+    });
+    handle.join()?;
+    if let Some(h) = &http_handle {
+        h.shutdown()?;
+    }
+    println!("fleet stopped");
+    Ok(())
+}
+
+/// Worker process: one full server over the shared artifact, announced
+/// to the parent router via the stdout handshake.
+pub(crate) fn cmd_fleet_worker(args: Args) -> crate::Result<()> {
+    let model = args.get_str("model", "");
+    anyhow::ensure!(
+        model.ends_with(".spak"),
+        "fleet-worker serves a packed artifact: pass --model <x.spak>"
+    );
+    let gen_batch = args.get_usize("gen-batch", 8)?.max(1);
+    let builder = super::serve_cmd::engine_builder(&args)?;
+    let (engine, info) = builder.open_artifact(std::path::Path::new(&model))?;
+    let cfg = ServerConfig {
+        // OS-assigned port: K workers on one host never collide
+        addr: args.get_str("addr", "127.0.0.1:0"),
+        max_conns: args.get_usize("max-conns", 64)?,
+        max_batch: engine.batch(),
+        max_wait: Duration::from_millis(args.get_u64("max-wait-ms", 15)?),
+        max_gen_tokens: args.get_usize("max-gen-tokens", 512)?,
+    };
+    let tokenizer = Arc::new(super::serve_cmd::standard_tokenizer(crate::bench::fast_mode()));
+    let handle = engine.serve(tokenizer, cfg, gen_batch)?;
+    println!(
+        "worker pid {} serving {model} ({}; zero-copy: {})",
+        std::process::id(),
+        if info.label.is_empty() { "unlabeled" } else { info.label.as_str() },
+        info.mapped
+    );
+    // the line the router's spawner blocks on; flush so it crosses the
+    // pipe immediately even if stdout buffering ever changes
+    println!("{READY_PREFIX}{}", handle.addr);
+    std::io::stdout().flush()?;
+    handle.join()?;
+    Ok(())
+}

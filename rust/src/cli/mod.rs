@@ -14,10 +14,12 @@
 //! sparselm owl      --ckpt runs/tiny.ckpt --m 16 --keep 0.5
 //! sparselm serve    --model tiny --ckpt runs/tiny-8x16.ckpt --addr 127.0.0.1:7433 \
 //!                   --http 127.0.0.1:7080
+//! sparselm serve    --model runs/tiny.spak --fleet 4 --http 127.0.0.1:7080
 //! sparselm generate --model tiny --random --prompt "the quick brown" --max-tokens 32
 //! sparselm serve-bench --addr 127.0.0.1:7433 --clients 4 --requests 50
 //! ```
 
+mod fleet_cmd;
 mod quant_cmd;
 mod serve_cmd;
 
@@ -53,6 +55,7 @@ pub fn main_entry() -> crate::Result<()> {
         "quant" => quant_cmd::cmd_quant(args),
         "owl" => quant_cmd::cmd_owl(args),
         "serve" => serve_cmd::cmd_serve(args),
+        "fleet-worker" => fleet_cmd::cmd_fleet_worker(args),
         "generate" => serve_cmd::cmd_generate(args),
         "serve-bench" => serve_cmd::cmd_serve_bench(args),
         _ => {
@@ -92,7 +95,11 @@ subcommands:
             forward, pjrt uses the AOT artifacts, scoring only; --http ADDR
             adds the HTTP front end: POST /score, POST /generate, GET /health,
             Prometheus GET /metrics, 429 backpressure via --http-max-inflight,
-            graceful SIGTERM drain)
+            graceful SIGTERM drain; --fleet K swaps the single process for a
+            router + K supervised worker processes mmap-ing one .spak —
+            least-inflight routing, sticky generate placement, redispatch of
+            idempotent ops on worker crash, restart-on-crash, fleet-wide
+            /metrics rollups with per-worker labels)
   generate  one-shot KV-cached generation from a checkpoint or a .spak
             artifact (--model x.spak mmaps the packed model; --random for
             an offline stand-in; --quant for the int4 packed format;

@@ -5,11 +5,18 @@
 //! generation protocol on a TCP port — and, with `--http ADDR`, the
 //! same model over the production HTTP front end (`POST /score`,
 //! `POST /generate`, `GET /health`, Prometheus `GET /metrics`) with a
-//! SIGTERM-driven graceful drain; `generate` runs the same KV-cached
+//! SIGTERM-driven graceful drain; `--fleet K` swaps the single process
+//! for a router + K supervised worker processes sharing one mmap'd
+//! artifact ([`super::fleet_cmd`]); `generate` runs the same KV-cached
 //! decode engine in-process for one prompt; `serve-bench` is the
 //! matching closed-loop load generator reporting latency percentiles
 //! and batch fill — the numbers a deployment of the paper's sparse
 //! models would be judged on.
+//!
+//! Backend construction is typed end to end: the `--backend` string
+//! parses into a [`BackendSpec`], and [`EngineBuilder`] (shared with
+//! `generate` and fleet worker boot) owns pattern/outlier/quant policy
+//! and the `--repack` acknowledgment.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -17,10 +24,9 @@ use std::time::{Duration, Instant};
 use crate::data::tokenizer::{BOS, EOS};
 use crate::data::{CorpusKind, CorpusSpec, Tokenizer, World};
 use crate::eval::Sampler;
-use crate::model::{load_checkpoint, ModelConfig, ParamSet, SparseLm, SpecDecoder};
+use crate::model::{load_checkpoint, ModelConfig, ParamSet, SparseLm};
 use crate::serve::{
-    pjrt_scorer, serve, serve_generate, spec_generator, spmm_generator, spmm_scorer, HttpConfig,
-    ServeClient, ServerConfig, ServerHandle,
+    BackendSpec, Engine, EngineBuilder, HttpConfig, ServeClient, ServerConfig, ServerHandle,
 };
 use crate::util::args::Args;
 use crate::util::Rng;
@@ -34,28 +40,22 @@ pub fn standard_tokenizer(fast: bool) -> Tokenizer {
     Tokenizer::fit(&text, 2048)
 }
 
-/// Typed refusal for the silent-approximation trap: `--backend spmm`
-/// on a dense checkpoint re-selects weights by magnitude alone,
-/// discarding whatever calibrated artifacts produced the checkpoint.
-/// The operator must either acknowledge it (`--repack`) or serve a
-/// pipeline-packed `.spak` artifact instead.
-fn require_repack(args: &Args, backend: &str) -> crate::Result<()> {
-    if args.get_bool("repack") {
-        return Ok(());
-    }
-    Err(anyhow::Error::new(crate::Error::BadFlag {
-        key: "repack".into(),
-        value: "absent".into(),
-        want: "to be set: --backend spmm re-packs the checkpoint with magnitude-only \
-               selection, which silently discards calibrated pruning artifacts; pass \
-               --repack to acknowledge the lossy re-pack, or serve a pipeline-packed \
-               artifact with --model <x.spak>",
-    })
-    .context(format!("--backend {backend} on a dense checkpoint")))
+/// The one `--pack`/`--outliers`/`--qbits`/`--threads`/`--repack` →
+/// [`EngineBuilder`] mapping, shared by `serve`, `generate` and fleet
+/// worker boot so the three cannot drift.
+pub(crate) fn engine_builder(args: &Args) -> crate::Result<EngineBuilder> {
+    let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
+    Ok(EngineBuilder::new()
+        .pattern(n, m)
+        .outliers(args.get_usize("outliers", 16)?)
+        .quant(super::parse_quant_spec(args)?)
+        .threads(args.get_usize("threads", crate::util::pool::default_parallelism())?)
+        .acknowledge_repack(args.get_bool("repack"))
+        .artifacts(args.get_str("artifacts", "artifacts")))
 }
 
 /// `--http*` flags → front-end config; `None` when `--http` is absent.
-fn http_cfg(args: &Args) -> crate::Result<Option<HttpConfig>> {
+pub(crate) fn http_cfg(args: &Args) -> crate::Result<Option<HttpConfig>> {
     let Some(addr) = args.get("http") else {
         return Ok(None);
     };
@@ -113,10 +113,12 @@ fn run_front_ends(handle: ServerHandle, http: Option<HttpConfig>) -> crate::Resu
 }
 
 pub fn cmd_serve(args: Args) -> crate::Result<()> {
+    // --fleet K: router + K supervised worker processes over one .spak
+    if args.get("fleet").is_some() {
+        return super::fleet_cmd::cmd_serve_fleet(args);
+    }
     let model = args.get_str("model", "tiny");
-    let artifacts = args.get_str("artifacts", "artifacts");
     let addr = args.get_str("addr", "127.0.0.1:7433");
-    let threads = args.get_usize("threads", crate::util::pool::default_parallelism())?;
     let gen_batch = args.get_usize("gen-batch", 8)?.max(1);
     let mk_cfg = |batch: usize| -> crate::Result<ServerConfig> {
         Ok(ServerConfig {
@@ -128,17 +130,7 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
         })
     };
     let tokenizer = Arc::new(standard_tokenizer(crate::bench::fast_mode()));
-    let serve_lm = |lm: SparseLm,
-                    cfg: ServerConfig|
-     -> crate::Result<crate::serve::ServerHandle> {
-        let lm = Arc::new(lm);
-        serve_generate(
-            spmm_scorer(Arc::clone(&lm)),
-            spmm_generator(lm, gen_batch),
-            tokenizer.clone(),
-            cfg,
-        )
-    };
+    let builder = engine_builder(&args)?;
 
     // --model x.spak: mmap the packed artifact and serve it zero-copy —
     // no re-pack, no backend choice (the artifact *is* the format)
@@ -150,8 +142,7 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
             );
         }
         let t0 = Instant::now();
-        let (packed, info) = crate::store::read_artifact(std::path::Path::new(&model))?;
-        let lm = packed.into_sparse_lm()?.with_threads(threads);
+        let (engine, info) = builder.open_artifact(std::path::Path::new(&model))?;
         println!(
             "mmap'd {model} in {:.0} ms ({}; zero-copy: {}): packed linears {} KiB \
              at {:.4} bits/param base, dense params {} KiB",
@@ -162,8 +153,8 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
             info.base_bits_per_param(),
             info.dense_stream_bytes / 1024
         );
-        let cfg = mk_cfg(lm.config.batch)?;
-        let handle = serve_lm(lm, cfg)?;
+        let cfg = mk_cfg(engine.batch())?;
+        let handle = engine.serve(Arc::clone(&tokenizer), cfg, gen_batch)?;
         println!(
             "serving {model} (spak, spmm) on {} — newline-JSON ops: \
              ping/nll/choice/generate/stats/shutdown",
@@ -186,86 +177,21 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
     } else {
         "spmm"
     };
-    let backend = args.get_str("backend", default_backend);
-    let handle = match backend.as_str() {
-        "pjrt" => serve(
-            pjrt_scorer(artifacts, model.clone(), params),
-            Arc::clone(&tokenizer),
-            server_cfg.clone(),
-        )?,
-        "dense" => serve_lm(
-            SparseLm::from_params(&params).with_threads(threads),
-            server_cfg.clone(),
-        )?,
-        "spmm" => {
-            require_repack(&args, "spmm")?;
-            let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
-            let k = args.get_usize("outliers", 16)?;
-            let lm = SparseLm::compress(&params, n, m, k).with_threads(threads);
-            println!(
-                "packing checkpoint to {n}:{m} + {k}:256 (magnitude selection, \
-                 --repack acknowledged) — use --model <x.spak> for calibrated artifacts"
-            );
-            println!(
-                "packed linear traffic {} KiB (dense {} KiB)",
-                lm.linear_operand_bytes() / 1024,
-                lm.dense_linear_bytes() / 1024
-            );
-            serve_lm(lm, server_cfg.clone())?
-        }
-        "spmm-q4" => {
-            require_repack(&args, "spmm-q4")?;
-            let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
-            let k = args.get_usize("outliers", 16)?;
-            let spec = super::parse_quant_spec(&args)?;
-            let lm = SparseLm::compress_quant(&params, n, m, k, spec).with_threads(threads);
-            println!(
-                "packing checkpoint to {n}:{m} + {k}:256 with int{} g{} kept values \
-                 (magnitude selection, dequant in-kernel, --repack acknowledged)",
-                spec.bits, spec.group
-            );
-            println!(
-                "packed-quant linear traffic {} KiB (dense {} KiB)",
-                lm.linear_operand_bytes() / 1024,
-                lm.dense_linear_bytes() / 1024
-            );
-            serve_lm(lm, server_cfg.clone())?
-        }
-        "spec" => {
-            require_repack(&args, "spec")?;
-            let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
-            let k = args.get_usize("outliers", 16)?;
-            let qspec = super::parse_quant_spec(&args)?;
-            let dec = Arc::new(SpecDecoder::from_dense(&params, n, m, k, qspec, threads)?);
-            println!(
-                "packing checkpoint to {n}:{m} + {k}:256 twice: int{} g{} draft \
-                 ({} KiB/step) + bf16 verify target ({} KiB/step), magnitude \
-                 selection, --repack acknowledged — speculative decode, output \
-                 identical to --backend spmm",
-                qspec.bits,
-                qspec.group,
-                dec.draft().linear_operand_bytes() / 1024,
-                dec.target().linear_operand_bytes() / 1024
-            );
-            serve_generate(
-                spmm_scorer(Arc::clone(dec.target())),
-                spec_generator(dec, gen_batch),
-                tokenizer.clone(),
-                server_cfg.clone(),
-            )?
-        }
-        other => {
-            anyhow::bail!("unknown --backend {other} (expected spmm|spmm-q4|spec|dense|pjrt)")
-        }
-    };
+    let backend: BackendSpec = args.get_str("backend", default_backend).parse()?;
+    let engine = builder.build(backend, params, &model)?;
+    if !engine.describe().is_empty() {
+        println!("{}", engine.describe());
+    }
+    let supports_generate = engine.supports_generate();
+    let handle = engine.serve(Arc::clone(&tokenizer), server_cfg, gen_batch)?;
     println!(
         "serving {model} ({ckpt}, {backend}) on {} — newline-JSON ops: \
          ping/nll/choice/generate/stats/shutdown{}",
         handle.addr,
-        if backend == "pjrt" {
-            " (generate unavailable on pjrt)"
-        } else {
+        if supports_generate {
             ""
+        } else {
+            " (generate unavailable on pjrt)"
         }
     );
     run_front_ends(handle, http_cfg(&args)?)
@@ -281,9 +207,8 @@ pub fn cmd_generate(args: Args) -> crate::Result<()> {
     let max_tokens = args.get_usize("max-tokens", 32)?.max(1);
     let temperature = args.get_f64("temperature", 0.0)? as f32;
     let seed = args.get_u64("seed", 0)?;
-    let threads = args.get_usize("threads", crate::util::pool::default_parallelism())?;
-    let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
-    let k = args.get_usize("outliers", 16)?;
+    // the one-shot tool owns its approximation: no --repack ceremony
+    let builder = engine_builder(&args)?.acknowledge_repack(true);
     let load_params = || -> crate::Result<ParamSet> {
         if args.get_bool("random") {
             let cfg = ModelConfig::preset(&model)
@@ -304,8 +229,11 @@ pub fn cmd_generate(args: Args) -> crate::Result<()> {
             "--spec needs a dense checkpoint or --random: a .spak artifact holds one \
              packed value stream, not the draft/target pair"
         );
-        let qspec = super::parse_quant_spec(&args)?;
-        let dec = SpecDecoder::from_dense(&load_params()?, n, m, k, qspec, threads)?;
+        let Engine::Spec { dec, .. } =
+            builder.build(BackendSpec::Spec, load_params()?, &model)?
+        else {
+            unreachable!("BackendSpec::Spec builds Engine::Spec");
+        };
         let tokenizer = standard_tokenizer(crate::bench::fast_mode());
         let mut ids = vec![BOS];
         ids.extend(tokenizer.encode(&prompt));
@@ -335,25 +263,30 @@ pub fn cmd_generate(args: Args) -> crate::Result<()> {
     // --model x.spak: decode straight from the mmap'd artifact (no
     // re-pack; the stored selection — calibrated when the pipeline
     // wrote it — is what serves)
-    let lm = if model.ends_with(".spak") {
-        let (packed, info) = crate::store::read_artifact(std::path::Path::new(&model))?;
+    let lm: Arc<SparseLm> = if model.ends_with(".spak") {
+        let (engine, info) = builder.open_artifact(std::path::Path::new(&model))?;
         println!(
             "mmap'd {model} ({}; zero-copy: {}): {:.4} bits/param base",
             if info.label.is_empty() { "unlabeled" } else { info.label.as_str() },
             info.mapped,
             info.base_bits_per_param()
         );
-        packed.into_sparse_lm()?.with_threads(threads)
+        let Engine::Spmm { lm, .. } = engine else {
+            unreachable!("artifacts open as Engine::Spmm");
+        };
+        lm
     } else {
-        let params = load_params()?;
-        if args.get_bool("dense") {
-            SparseLm::from_params(&params).with_threads(threads)
+        let backend = if args.get_bool("dense") {
+            BackendSpec::Dense
         } else if args.get_bool("quant") {
-            let spec = super::parse_quant_spec(&args)?;
-            SparseLm::compress_quant(&params, n, m, k, spec).with_threads(threads)
+            BackendSpec::SpmmQ4
         } else {
-            SparseLm::compress(&params, n, m, k).with_threads(threads)
-        }
+            BackendSpec::Spmm
+        };
+        let Engine::Spmm { lm, .. } = builder.build(backend, load_params()?, &model)? else {
+            unreachable!("host-forward backends build Engine::Spmm");
+        };
+        lm
     };
     let tokenizer = standard_tokenizer(crate::bench::fast_mode());
 

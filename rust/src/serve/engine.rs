@@ -1,0 +1,422 @@
+//! Typed backend construction — [`BackendSpec`] + [`EngineBuilder`],
+//! the one path `serve`, `generate` and fleet worker boot all build
+//! their model through.
+//!
+//! Before this module, every caller that wanted a servable model
+//! re-implemented the same `--backend` string `match`: pick a variant,
+//! remember the `--repack` acknowledgment, wire the right
+//! scorer/generator factory pair. The CLI's `serve` and `generate`
+//! subcommands each had a copy, and a fleet worker would have needed a
+//! third. Now the vocabulary is a typed enum (`FromStr`/`Display`, so
+//! CLI flags and log lines round-trip through it), construction policy
+//! lives in one builder, and the product is an [`Engine`] that knows
+//! how to put itself behind a socket.
+//!
+//! The `--repack` refusal moved here with the construction: packing a
+//! *dense* checkpoint through `spmm`/`spmm-q4`/`spec` re-selects
+//! weights by magnitude alone, silently discarding whatever calibrated
+//! pipeline produced the checkpoint, so [`EngineBuilder::build`]
+//! returns the typed [`crate::Error::BadFlag`] unless the caller
+//! acknowledged the lossy re-pack.
+
+use std::fmt;
+use std::path::Path;
+use std::str::FromStr;
+use std::sync::Arc;
+
+use super::server::{
+    pjrt_scorer, serve, serve_generate, spec_generator, spmm_generator, spmm_scorer,
+    ServerConfig, ServerHandle,
+};
+use crate::data::Tokenizer;
+use crate::model::{ParamSet, SparseLm, SpecDecoder};
+use crate::quant::QuantSpec;
+use crate::store::ArtifactInfo;
+
+/// The serving backends, as a closed vocabulary instead of a string.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendSpec {
+    /// Packed bf16 host forward (8:16 + outliers) — the offline default.
+    Spmm,
+    /// Fused sparse + int4-under-mask host forward, dequant in-kernel.
+    SpmmQ4,
+    /// Self-speculative: int4 draft proposes, bf16 target verifies.
+    Spec,
+    /// Exact dense bf16-as-f32 reference forward.
+    Dense,
+    /// AOT PJRT artifacts (`--features xla`) — scoring only.
+    Pjrt,
+}
+
+impl BackendSpec {
+    /// The CLI token (`--backend <name>`); [`fmt::Display`] prints it.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendSpec::Spmm => "spmm",
+            BackendSpec::SpmmQ4 => "spmm-q4",
+            BackendSpec::Spec => "spec",
+            BackendSpec::Dense => "dense",
+            BackendSpec::Pjrt => "pjrt",
+        }
+    }
+
+    /// Does building this backend from a *dense checkpoint* discard
+    /// calibrated pruning artifacts (and therefore require the
+    /// `--repack` acknowledgment)?
+    pub fn needs_repack(self) -> bool {
+        matches!(
+            self,
+            BackendSpec::Spmm | BackendSpec::SpmmQ4 | BackendSpec::Spec
+        )
+    }
+
+    /// Does the backend answer the `generate` op?
+    pub fn supports_generate(self) -> bool {
+        !matches!(self, BackendSpec::Pjrt)
+    }
+}
+
+impl fmt::Display for BackendSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl FromStr for BackendSpec {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<BackendSpec, anyhow::Error> {
+        Ok(match s {
+            "spmm" => BackendSpec::Spmm,
+            "spmm-q4" => BackendSpec::SpmmQ4,
+            "spec" => BackendSpec::Spec,
+            "dense" => BackendSpec::Dense,
+            "pjrt" => BackendSpec::Pjrt,
+            other => anyhow::bail!(
+                "unknown --backend {other} (expected spmm|spmm-q4|spec|dense|pjrt)"
+            ),
+        })
+    }
+}
+
+/// Shared construction policy: pattern, outlier budget, quantization,
+/// thread count, the `--repack` acknowledgment, PJRT artifact dir.
+#[derive(Clone, Debug)]
+pub struct EngineBuilder {
+    pattern: (usize, usize),
+    outliers: usize,
+    quant: QuantSpec,
+    threads: usize,
+    repack_acknowledged: bool,
+    artifacts: String,
+}
+
+impl Default for EngineBuilder {
+    fn default() -> EngineBuilder {
+        EngineBuilder {
+            pattern: (8, 16),
+            outliers: 16,
+            quant: QuantSpec::new(4, 128),
+            threads: crate::util::pool::default_parallelism(),
+            repack_acknowledged: false,
+            artifacts: "artifacts".into(),
+        }
+    }
+}
+
+impl EngineBuilder {
+    pub fn new() -> EngineBuilder {
+        EngineBuilder::default()
+    }
+
+    /// N:M sparsity pattern used when re-packing a dense checkpoint.
+    pub fn pattern(mut self, n: usize, m: usize) -> EngineBuilder {
+        self.pattern = (n, m);
+        self
+    }
+
+    /// Structured outliers kept per 256 columns.
+    pub fn outliers(mut self, k: usize) -> EngineBuilder {
+        self.outliers = k;
+        self
+    }
+
+    /// Group-quantization of kept values (`spmm-q4` / `spec` draft).
+    pub fn quant(mut self, spec: QuantSpec) -> EngineBuilder {
+        self.quant = spec;
+        self
+    }
+
+    /// Host-forward thread count.
+    pub fn threads(mut self, threads: usize) -> EngineBuilder {
+        self.threads = threads;
+        self
+    }
+
+    /// Acknowledge the lossy magnitude-only re-pack of a dense
+    /// checkpoint (the `--repack` flag; in-process `generate` passes
+    /// `true` because the one-shot tool owns its own approximation).
+    pub fn acknowledge_repack(mut self, yes: bool) -> EngineBuilder {
+        self.repack_acknowledged = yes;
+        self
+    }
+
+    /// PJRT artifact directory (`pjrt` backend only).
+    pub fn artifacts(mut self, dir: impl Into<String>) -> EngineBuilder {
+        self.artifacts = dir.into();
+        self
+    }
+
+    /// Typed refusal for the silent-approximation trap: re-packing a
+    /// dense checkpoint by magnitude discards calibrated artifacts, so
+    /// it must be explicitly acknowledged.
+    fn require_repack(&self, spec: BackendSpec) -> crate::Result<()> {
+        if self.repack_acknowledged {
+            return Ok(());
+        }
+        Err(anyhow::Error::new(crate::Error::BadFlag {
+            key: "repack".into(),
+            value: "absent".into(),
+            want: "to be set: --backend spmm re-packs the checkpoint with magnitude-only \
+                   selection, which silently discards calibrated pruning artifacts; pass \
+                   --repack to acknowledge the lossy re-pack, or serve a pipeline-packed \
+                   artifact with --model <x.spak>",
+        })
+        .context(format!("--backend {spec} on a dense checkpoint")))
+    }
+
+    /// Build an engine for `spec` from a dense checkpoint's parameters.
+    /// `model` names the configuration (the PJRT artifact key).
+    pub fn build(
+        &self,
+        spec: BackendSpec,
+        params: ParamSet,
+        model: &str,
+    ) -> crate::Result<Engine> {
+        let (n, m) = self.pattern;
+        let k = self.outliers;
+        match spec {
+            BackendSpec::Dense => Ok(Engine::Spmm {
+                lm: Arc::new(SparseLm::from_params(&params).with_threads(self.threads)),
+                desc: String::new(),
+            }),
+            BackendSpec::Spmm => {
+                self.require_repack(spec)?;
+                let lm = SparseLm::compress(&params, n, m, k).with_threads(self.threads);
+                let desc = format!(
+                    "packing checkpoint to {n}:{m} + {k}:256 (magnitude selection, \
+                     --repack acknowledged) — use --model <x.spak> for calibrated artifacts\n\
+                     packed linear traffic {} KiB (dense {} KiB)",
+                    lm.linear_operand_bytes() / 1024,
+                    lm.dense_linear_bytes() / 1024
+                );
+                Ok(Engine::Spmm { lm: Arc::new(lm), desc })
+            }
+            BackendSpec::SpmmQ4 => {
+                self.require_repack(spec)?;
+                let q = self.quant;
+                let lm =
+                    SparseLm::compress_quant(&params, n, m, k, q).with_threads(self.threads);
+                let desc = format!(
+                    "packing checkpoint to {n}:{m} + {k}:256 with int{} g{} kept values \
+                     (magnitude selection, dequant in-kernel, --repack acknowledged)\n\
+                     packed-quant linear traffic {} KiB (dense {} KiB)",
+                    q.bits,
+                    q.group,
+                    lm.linear_operand_bytes() / 1024,
+                    lm.dense_linear_bytes() / 1024
+                );
+                Ok(Engine::Spmm { lm: Arc::new(lm), desc })
+            }
+            BackendSpec::Spec => {
+                self.require_repack(spec)?;
+                let q = self.quant;
+                let dec = Arc::new(SpecDecoder::from_dense(&params, n, m, k, q, self.threads)?);
+                let desc = format!(
+                    "packing checkpoint to {n}:{m} + {k}:256 twice: int{} g{} draft \
+                     ({} KiB/step) + bf16 verify target ({} KiB/step), magnitude \
+                     selection, --repack acknowledged — speculative decode, output \
+                     identical to --backend spmm",
+                    q.bits,
+                    q.group,
+                    dec.draft().linear_operand_bytes() / 1024,
+                    dec.target().linear_operand_bytes() / 1024
+                );
+                Ok(Engine::Spec { dec, desc })
+            }
+            BackendSpec::Pjrt => Ok(Engine::Pjrt {
+                artifacts: self.artifacts.clone(),
+                model: model.to_string(),
+                params: Box::new(params),
+                desc: String::new(),
+            }),
+        }
+    }
+
+    /// mmap a packed `.spak` artifact and serve it zero-copy — no
+    /// re-pack, no backend choice (the artifact *is* the format). This
+    /// is the path every fleet worker boots through.
+    pub fn open_artifact(&self, path: &Path) -> crate::Result<(Engine, ArtifactInfo)> {
+        let (packed, info) = crate::store::read_artifact(path)?;
+        let lm = packed.into_sparse_lm()?.with_threads(self.threads);
+        Ok((
+            Engine::Spmm {
+                lm: Arc::new(lm),
+                desc: String::new(),
+            },
+            info,
+        ))
+    }
+}
+
+/// A constructed backend, ready to serve or to run in-process.
+pub enum Engine {
+    /// Packed (or dense-reference) host-forward model — `spmm`,
+    /// `spmm-q4`, `dense`, and every `.spak` artifact.
+    Spmm { lm: Arc<SparseLm>, desc: String },
+    /// Draft + target pair for self-speculative decode.
+    Spec { dec: Arc<SpecDecoder>, desc: String },
+    /// Deferred PJRT artifact compile/load (scoring only).
+    Pjrt {
+        artifacts: String,
+        model: String,
+        params: Box<ParamSet>,
+        desc: String,
+    },
+}
+
+impl Engine {
+    /// Human construction summary (empty when there is nothing to say —
+    /// `dense`, `pjrt`, artifacts).
+    pub fn describe(&self) -> &str {
+        match self {
+            Engine::Spmm { desc, .. }
+            | Engine::Spec { desc, .. }
+            | Engine::Pjrt { desc, .. } => desc,
+        }
+    }
+
+    /// Does this engine answer the `generate` op once served?
+    pub fn supports_generate(&self) -> bool {
+        !matches!(self, Engine::Pjrt { .. })
+    }
+
+    /// The servable model's batch size, when the engine knows it before
+    /// boot (host-forward engines do; PJRT reads it from the params).
+    pub fn batch(&self) -> usize {
+        match self {
+            Engine::Spmm { lm, .. } => lm.config.batch,
+            Engine::Spec { dec, .. } => dec.target().config.batch,
+            Engine::Pjrt { params, .. } => params.config.batch,
+        }
+    }
+
+    /// Put the engine behind a TCP socket: wire the scorer/generator
+    /// factory pair every backend previously wired by hand.
+    pub fn serve(
+        self,
+        tokenizer: Arc<Tokenizer>,
+        cfg: ServerConfig,
+        gen_batch: usize,
+    ) -> crate::Result<ServerHandle> {
+        match self {
+            Engine::Spmm { lm, .. } => serve_generate(
+                spmm_scorer(Arc::clone(&lm)),
+                spmm_generator(lm, gen_batch),
+                tokenizer,
+                cfg,
+            ),
+            Engine::Spec { dec, .. } => serve_generate(
+                spmm_scorer(Arc::clone(dec.target())),
+                spec_generator(dec, gen_batch),
+                tokenizer,
+                cfg,
+            ),
+            Engine::Pjrt {
+                artifacts,
+                model,
+                params,
+                ..
+            } => serve(pjrt_scorer(artifacts, model, *params), tokenizer, cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::ModelConfig;
+    use crate::util::Rng;
+
+    fn tiny_params() -> ParamSet {
+        let mut cfg = ModelConfig::preset("tiny").unwrap();
+        cfg.n_layers = 2;
+        cfg.seq = 32;
+        cfg.batch = 2;
+        ParamSet::init_outliers(&cfg, &mut Rng::new(7))
+    }
+
+    #[test]
+    fn backend_spec_roundtrips_through_strings() {
+        for b in [
+            BackendSpec::Spmm,
+            BackendSpec::SpmmQ4,
+            BackendSpec::Spec,
+            BackendSpec::Dense,
+            BackendSpec::Pjrt,
+        ] {
+            assert_eq!(b.to_string().parse::<BackendSpec>().unwrap(), b);
+        }
+    }
+
+    #[test]
+    fn unknown_backend_keeps_the_error_text() {
+        let err = "frob".parse::<BackendSpec>().unwrap_err().to_string();
+        assert_eq!(
+            err,
+            "unknown --backend frob (expected spmm|spmm-q4|spec|dense|pjrt)"
+        );
+    }
+
+    #[test]
+    fn repack_gate_refuses_then_accepts() {
+        let params = tiny_params();
+        let err = EngineBuilder::new()
+            .build(BackendSpec::Spmm, params.clone(), "tiny")
+            .unwrap_err();
+        // the typed condition survives the context chain
+        assert!(
+            err.chain()
+                .any(|c| c.to_string().contains("--repack")),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("--backend spmm on a dense checkpoint"));
+        let engine = EngineBuilder::new()
+            .acknowledge_repack(true)
+            .build(BackendSpec::Spmm, params, "tiny")
+            .unwrap();
+        assert!(engine.supports_generate());
+        assert!(engine.describe().contains("--repack acknowledged"));
+    }
+
+    #[test]
+    fn dense_needs_no_acknowledgment() {
+        let engine = EngineBuilder::new()
+            .build(BackendSpec::Dense, tiny_params(), "tiny")
+            .unwrap();
+        assert!(matches!(engine, Engine::Spmm { .. }));
+        assert_eq!(engine.batch(), 2);
+        assert!(engine.describe().is_empty());
+    }
+
+    #[test]
+    fn pjrt_is_scoring_only() {
+        let engine = EngineBuilder::new()
+            .build(BackendSpec::Pjrt, tiny_params(), "tiny")
+            .unwrap();
+        assert!(!engine.supports_generate());
+        assert!(!BackendSpec::Pjrt.supports_generate());
+        assert!(!BackendSpec::Pjrt.needs_repack());
+        assert!(BackendSpec::SpmmQ4.needs_repack());
+    }
+}

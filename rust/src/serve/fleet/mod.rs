@@ -1,0 +1,359 @@
+//! `serve::fleet` — a router process supervising K single-process
+//! workers behind one ingress.
+//!
+//! ```text
+//!                      ┌────────────┐ line protocol ┌───────────────┐
+//!  TCP  ──┐            │            │ ─────────────▶│ worker 0      │
+//!         ├──▶ gate ──▶│ FleetRouter│ ─────────────▶│ worker 1      │
+//!  HTTP ──┘            │            │      …        │ …  (K procs)  │
+//!                      └────────────┘               └───────────────┘
+//! ```
+//!
+//! Every worker is a full `sparselm serve` equivalent (own
+//! [`GenScheduler`], KV arena, perf counters) mmap-ing the *same*
+//! `.spak`, so K workers cost roughly one copy of the weights in
+//! physical memory plus K copies of the activation state. The router
+//! holds no model state: ops fan out over the existing line protocol
+//! with least-inflight placement, generate streams stick to the worker
+//! that holds their warm KV arena, and idempotent ops (score / choice /
+//! ping / stats) transparently redispatch when a worker dies mid-op.
+//! Non-idempotent failures surface as explicit error replies — an
+//! accepted request is never silently dropped.
+//!
+//! Teardown ordering (see [`FleetHandle::shutdown`]): stop admitting →
+//! wait for in-flight ops (bounded by `drain_grace`) → stop the
+//! supervisor → ask each worker to drain and exit, reap with
+//! `reap_grace` → join the acceptor. A SIGTERM against the router walks
+//! the same path, so workers are never orphaned.
+//!
+//! [`GenScheduler`]: crate::serve::generate::GenScheduler
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+mod router;
+mod worker;
+
+pub use router::FleetRouter;
+pub use worker::{process_spawner, READY_PREFIX, Spawner, Worker};
+
+use super::ops::{Reply, Request};
+
+/// Fleet topology and timing knobs.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Router TCP bind address (workers bind their own OS-assigned
+    /// ports on loopback).
+    pub addr: String,
+    /// Number of worker processes (K).
+    pub workers: usize,
+    /// Router-side concurrent client connection cap.
+    pub max_conns: usize,
+    /// Per-worker in-flight op cap; with every worker at this cap the
+    /// fleet is saturated and new ops are rejected (TCP: typed error
+    /// reply; HTTP: the gate's 429).
+    pub worker_inflight: usize,
+    /// Socket timeout on forwarded ops (generous — a full generate on a
+    /// debug-build worker is slow).
+    pub op_timeout: Duration,
+    /// Supervisor tick (crash detection via `try_wait`).
+    pub health_interval: Duration,
+    /// How often the supervisor also pings workers over the wire.
+    pub probe_interval: Duration,
+    /// Consecutive failed pings before a live-but-wedged worker is
+    /// killed and replaced.
+    pub probe_strikes: u32,
+    /// How long a worker gets to print its readiness handshake.
+    pub boot_timeout: Duration,
+    /// Drain phase: how long shutdown waits for in-flight ops.
+    pub drain_grace: Duration,
+    /// Reap phase: how long a worker gets to exit voluntarily after the
+    /// shutdown op before it is killed.
+    pub reap_grace: Duration,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            addr: "127.0.0.1:7433".into(),
+            workers: 2,
+            max_conns: 64,
+            worker_inflight: 32,
+            op_timeout: Duration::from_secs(120),
+            health_interval: Duration::from_millis(200),
+            probe_interval: Duration::from_secs(2),
+            probe_strikes: 3,
+            boot_timeout: Duration::from_secs(300),
+            drain_grace: Duration::from_secs(5),
+            reap_grace: Duration::from_secs(5),
+        }
+    }
+}
+
+/// A running fleet: TCP acceptor + supervisor + K workers.
+pub struct FleetHandle {
+    pub addr: SocketAddr,
+    router: Arc<FleetRouter>,
+    stop: Arc<AtomicBool>,
+    drain_grace: Duration,
+    reap_grace: Duration,
+    stopped: AtomicBool,
+    shutdown_lock: Mutex<()>,
+    acceptor: Mutex<Option<JoinHandle<()>>>,
+    supervisor: Mutex<Option<JoinHandle<()>>>,
+}
+
+/// Boot K workers (in parallel — cold-starting a worker costs real
+/// time) and start the router's acceptor and supervisor threads.
+pub fn start_fleet(cfg: FleetConfig, spawner: Spawner) -> crate::Result<FleetHandle> {
+    anyhow::ensure!(cfg.workers >= 1, "a fleet needs at least one worker");
+    log::info!("booting fleet of {} workers", cfg.workers);
+    let results: Vec<crate::Result<Worker>> = std::thread::scope(|scope| {
+        let sp = &spawner;
+        let joins: Vec<_> = (0..cfg.workers).map(|i| scope.spawn(move || sp(i))).collect();
+        joins
+            .into_iter()
+            .map(|j| {
+                j.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("worker boot thread panicked")))
+            })
+            .collect()
+    });
+    let mut workers = Vec::with_capacity(results.len());
+    let mut failure: Option<anyhow::Error> = None;
+    for r in results {
+        match r {
+            Ok(w) => workers.push(w),
+            Err(e) => failure = Some(e),
+        }
+    }
+    if let Some(e) = failure {
+        // partial boot: kill what did come up rather than orphaning it
+        for mut w in workers {
+            w.kill();
+        }
+        return Err(e.context("fleet boot failed"));
+    }
+
+    let listener = TcpListener::bind(&cfg.addr)?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let drain_grace = cfg.drain_grace;
+    let reap_grace = cfg.reap_grace;
+    let health_interval = cfg.health_interval;
+    let probe_interval = cfg.probe_interval;
+    let max_conns = cfg.max_conns;
+    let router = Arc::new(FleetRouter::new(cfg, spawner, workers));
+
+    let supervisor = {
+        let router = Arc::clone(&router);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut last_probe = Instant::now();
+            while !stop.load(Ordering::SeqCst) {
+                let probe = last_probe.elapsed() >= probe_interval;
+                if probe {
+                    last_probe = Instant::now();
+                }
+                router.supervise_tick(probe);
+                std::thread::sleep(health_interval);
+            }
+        })
+    };
+
+    let acceptor = {
+        let router = Arc::clone(&router);
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let live: Mutex<Vec<JoinHandle<()>>> = Mutex::new(Vec::new());
+            for conn in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                {
+                    let mut v = live.lock().unwrap();
+                    v.retain(|h| !h.is_finished());
+                    if v.len() >= max_conns {
+                        let _ = respond(
+                            &stream,
+                            &Reply::Error("fleet at connection capacity".into()),
+                        );
+                        continue;
+                    }
+                }
+                let router2 = Arc::clone(&router);
+                let stop2 = Arc::clone(&stop);
+                let h = std::thread::spawn(move || handle_conn(stream, &router2, &stop2));
+                live.lock().unwrap().push(h);
+            }
+            for h in live.lock().unwrap().drain(..) {
+                let _ = h.join();
+            }
+        })
+    };
+
+    Ok(FleetHandle {
+        addr,
+        router,
+        stop,
+        drain_grace,
+        reap_grace,
+        stopped: AtomicBool::new(false),
+        shutdown_lock: Mutex::new(()),
+        acceptor: Mutex::new(Some(acceptor)),
+        supervisor: Mutex::new(Some(supervisor)),
+    })
+}
+
+impl FleetHandle {
+    /// The router as an executor — hand this to
+    /// [`super::http::serve_http`] to put the HTTP front end (with its
+    /// admission gate and 429s) in front of the fleet.
+    pub fn router(&self) -> Arc<FleetRouter> {
+        Arc::clone(&self.router)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.router.workers()
+    }
+
+    pub fn worker_addrs(&self) -> Vec<SocketAddr> {
+        self.router.worker_addrs()
+    }
+
+    pub fn worker_pids(&self) -> Vec<Option<u32>> {
+        self.router.worker_pids()
+    }
+
+    /// Chaos hook: SIGKILL worker `idx` (the supervisor restarts it).
+    pub fn kill_worker(&self, idx: usize) -> bool {
+        self.router.kill_worker(idx)
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.router.restarts()
+    }
+
+    /// Block until a client `shutdown` op (or [`FleetHandle::shutdown`]
+    /// from another thread) stops the fleet, then run the drain.
+    pub fn join(&self) -> crate::Result<()> {
+        while !self.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(100));
+        }
+        self.shutdown()
+    }
+
+    /// Graceful fleet-wide drain. Ordering matters: admission stops
+    /// first, in-flight ops get `drain_grace` to finish, the supervisor
+    /// stops *before* workers are reaped (or it would respawn them),
+    /// and only then are children asked to exit and reaped. Idempotent;
+    /// concurrent callers block until the first drain completes.
+    pub fn shutdown(&self) -> crate::Result<()> {
+        let _g = self.shutdown_lock.lock().unwrap();
+        if self.stopped.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+
+        // 1. stop admitting new ops
+        self.router.begin_drain();
+
+        // 2. bounded wait for in-flight ops to complete
+        let deadline = Instant::now() + self.drain_grace;
+        while self.router.total_inflight() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+
+        // 3. stop the supervisor so it cannot resurrect drained workers
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.supervisor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+
+        // 4. drain and reap every child — never orphan a worker
+        self.router.shutdown_workers(self.reap_grace);
+
+        // 5. unblock and join the acceptor (conn handlers see `stop`)
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.lock().unwrap().take() {
+            let _ = h.join();
+        }
+
+        self.stopped.store(true, Ordering::SeqCst);
+        Ok(())
+    }
+}
+
+fn respond(mut stream: &TcpStream, reply: &Reply) -> std::io::Result<()> {
+    let mut line = reply.to_json().to_string();
+    line.push('\n');
+    stream.write_all(line.as_bytes())
+}
+
+/// Per-connection loop for the fleet's TCP ingress — the same line
+/// protocol as a single server, with per-connection generate affinity.
+fn handle_conn(stream: TcpStream, router: &FleetRouter, stop: &AtomicBool) {
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(50)))
+        .is_err()
+    {
+        return;
+    }
+    let mut reader = BufReader::new(match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    });
+    let mut buf = String::new();
+    let mut affinity: Option<usize> = None;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        match reader.read_line(&mut buf) {
+            Ok(0) => break,
+            Ok(_) if buf.ends_with('\n') => {}
+            Ok(_) => continue,
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => break,
+        }
+        let line = std::mem::take(&mut buf);
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let reply = match Request::parse(line) {
+            Err(e) => {
+                router.note_parse_error();
+                Reply::Error(e)
+            }
+            Ok(Request::Shutdown) => {
+                // lifecycle op, owned by the ingress: acknowledge, then
+                // let join()/shutdown() run the fleet-wide drain
+                let _ = respond(&stream, &Reply::ShuttingDown);
+                stop.store(true, Ordering::SeqCst);
+                return;
+            }
+            Ok(req) => {
+                let sticky = matches!(req, Request::Generate { .. });
+                let (reply, used) =
+                    router.route_with_affinity(&req, if sticky { affinity } else { None });
+                if sticky {
+                    affinity = used;
+                }
+                reply
+            }
+        };
+        if respond(&stream, &reply).is_err() {
+            break;
+        }
+    }
+}

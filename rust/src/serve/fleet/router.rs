@@ -1,0 +1,577 @@
+//! The fleet router: least-inflight op routing, sticky generate
+//! placement, redispatch of idempotent ops, supervision, and fleet-wide
+//! `/metrics` aggregation.
+//!
+//! The router holds no model state at all — every op is forwarded over
+//! the line protocol to one of K worker processes and the worker's
+//! reply is re-serialized through the typed [`Reply`]. Because the wire
+//! form is canonical (see [`crate::serve::ops`]), the bytes a client
+//! receives through the router are identical to what the worker itself
+//! would have written.
+
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::worker::{Spawner, Worker};
+use super::FleetConfig;
+use crate::serve::client::ServeClient;
+use crate::serve::http::{Gate, HttpStats};
+use crate::serve::ops::{OpExecutor, Reply, Request};
+use crate::util::json::Json;
+use crate::util::prom::{PromKind, PromWriter};
+
+/// One supervised worker slot. `gen` bumps on every restart so pooled
+/// connections to the previous incarnation are never reused.
+struct Slot {
+    gen: u64,
+    worker: Worker,
+    up: bool,
+    strikes: u32,
+    inflight: Arc<AtomicUsize>,
+}
+
+/// An idle forwarding connection, keyed by (slot, incarnation).
+struct PooledConn {
+    idx: usize,
+    gen: u64,
+    client: ServeClient,
+}
+
+/// Why a forward attempt failed — connect failures happen before any
+/// bytes reach the worker, so they are safe to retry for *every* op;
+/// mid-op failures are only retried for idempotent requests.
+enum ForwardFail {
+    Connect(String),
+    MidOp(String),
+}
+
+/// Routes ops across the worker fleet. Shared by the fleet's TCP
+/// acceptor and (as an [`OpExecutor`]) by the HTTP front end.
+pub struct FleetRouter {
+    cfg: FleetConfig,
+    spawner: Spawner,
+    slots: Mutex<Vec<Slot>>,
+    pool: Mutex<Vec<PooledConn>>,
+    draining: AtomicBool,
+    requests: AtomicU64,
+    parse_errors: AtomicU64,
+    forwarded: AtomicU64,
+    redispatched: AtomicU64,
+    rejected: AtomicU64,
+    restarts: AtomicU64,
+}
+
+impl FleetRouter {
+    pub(super) fn new(cfg: FleetConfig, spawner: Spawner, workers: Vec<Worker>) -> FleetRouter {
+        let slots = workers
+            .into_iter()
+            .map(|worker| Slot {
+                gen: 0,
+                worker,
+                up: true,
+                strikes: 0,
+                inflight: Arc::new(AtomicUsize::new(0)),
+            })
+            .collect();
+        FleetRouter {
+            cfg,
+            spawner,
+            slots: Mutex::new(slots),
+            pool: Mutex::new(Vec::new()),
+            draining: AtomicBool::new(false),
+            requests: AtomicU64::new(0),
+            parse_errors: AtomicU64::new(0),
+            forwarded: AtomicU64::new(0),
+            redispatched: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            restarts: AtomicU64::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.slots.lock().unwrap().len()
+    }
+
+    pub fn worker_addrs(&self) -> Vec<SocketAddr> {
+        self.slots.lock().unwrap().iter().map(|s| s.worker.addr).collect()
+    }
+
+    pub fn worker_pids(&self) -> Vec<Option<u32>> {
+        self.slots.lock().unwrap().iter().map(|s| s.worker.pid()).collect()
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Relaxed)
+    }
+
+    pub fn redispatches(&self) -> u64 {
+        self.redispatched.load(Ordering::Relaxed)
+    }
+
+    pub fn total_inflight(&self) -> usize {
+        let slots = self.slots.lock().unwrap();
+        slots.iter().map(|s| s.inflight.load(Ordering::SeqCst)).sum()
+    }
+
+    /// Chaos hook: SIGKILL one worker without telling the router. The
+    /// supervisor notices on its next tick and respawns it; in-flight
+    /// ops against it fail over per the redispatch policy.
+    pub fn kill_worker(&self, idx: usize) -> bool {
+        let mut slots = self.slots.lock().unwrap();
+        match slots.get_mut(idx) {
+            Some(s) => {
+                s.worker.kill();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Stop admitting new ops (every subsequent request gets an
+    /// explicit error reply; nothing queues behind a dying fleet).
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    pub fn is_draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    pub(super) fn note_parse_error(&self) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.parse_errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Route one request. `affinity` is the slot that served the
+    /// previous generate op on the same client connection — generate
+    /// streams stay on their worker (warm KV arena) as long as it is up
+    /// and under its inflight cap. Returns the reply and the slot that
+    /// produced it (the caller's next affinity).
+    pub fn route_with_affinity(
+        &self,
+        req: &Request,
+        affinity: Option<usize>,
+    ) -> (Reply, Option<usize>) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if matches!(req, Request::Shutdown) {
+            // mirrors Service::execute — shutdown is connection-level,
+            // intercepted by the ingress, never routed
+            return (Reply::Error("shutdown is a connection-level op".into()), affinity);
+        }
+        if self.is_draining() {
+            return (Reply::Error("fleet is draining".into()), affinity);
+        }
+        let total = self.workers();
+        let mut excluded: Vec<usize> = Vec::new();
+        loop {
+            let Some((idx, gen, addr, inflight)) = self.pick(req, affinity, &excluded) else {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return (Reply::Error("fleet at capacity, retry later".into()), affinity);
+            };
+            inflight.fetch_add(1, Ordering::SeqCst);
+            let outcome = self.forward_once(idx, gen, addr, req);
+            inflight.fetch_sub(1, Ordering::SeqCst);
+            match outcome {
+                Ok(reply) => {
+                    self.forwarded.fetch_add(1, Ordering::Relaxed);
+                    return (reply, Some(idx));
+                }
+                Err(fail) => {
+                    excluded.push(idx);
+                    let (retryable, msg) = match fail {
+                        ForwardFail::Connect(m) => (true, m),
+                        ForwardFail::MidOp(m) => (req.is_idempotent(), m),
+                    };
+                    if retryable && excluded.len() < total {
+                        self.redispatched.fetch_add(1, Ordering::Relaxed);
+                        continue;
+                    }
+                    // never a silent drop: the client always gets an
+                    // explicit error reply when failover is unsafe
+                    return (Reply::Error(format!("worker {idx} failed: {msg}")), None);
+                }
+            }
+        }
+    }
+
+    fn pick(
+        &self,
+        req: &Request,
+        affinity: Option<usize>,
+        excluded: &[usize],
+    ) -> Option<(usize, u64, SocketAddr, Arc<AtomicUsize>)> {
+        let slots = self.slots.lock().unwrap();
+        let usable = |i: usize, s: &Slot| {
+            s.up
+                && !excluded.contains(&i)
+                && s.inflight.load(Ordering::SeqCst) < self.cfg.worker_inflight
+        };
+        if matches!(req, Request::Generate { .. }) {
+            if let Some(i) = affinity {
+                if let Some(s) = slots.get(i) {
+                    if usable(i, s) {
+                        return Some((i, s.gen, s.worker.addr, Arc::clone(&s.inflight)));
+                    }
+                }
+            }
+        }
+        slots
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| usable(*i, s))
+            .min_by_key(|(_, s)| s.inflight.load(Ordering::SeqCst))
+            .map(|(i, s)| (i, s.gen, s.worker.addr, Arc::clone(&s.inflight)))
+    }
+
+    fn forward_once(
+        &self,
+        idx: usize,
+        gen: u64,
+        addr: SocketAddr,
+        req: &Request,
+    ) -> Result<Reply, ForwardFail> {
+        let mut conn = match self.checkout(idx, gen, addr) {
+            Ok(c) => c,
+            Err(e) => return Err(ForwardFail::Connect(e.to_string())),
+        };
+        match conn.client.call(req) {
+            Ok(reply) => {
+                self.checkin(conn);
+                Ok(reply)
+            }
+            Err(e) => Err(ForwardFail::MidOp(e.to_string())),
+        }
+    }
+
+    fn checkout(&self, idx: usize, gen: u64, addr: SocketAddr) -> crate::Result<PooledConn> {
+        {
+            let mut pool = self.pool.lock().unwrap();
+            if let Some(p) = pool.iter().position(|c| c.idx == idx && c.gen == gen) {
+                return Ok(pool.swap_remove(p));
+            }
+        }
+        let client = ServeClient::connect(addr)?;
+        client.set_timeout(self.cfg.op_timeout)?;
+        Ok(PooledConn { idx, gen, client })
+    }
+
+    fn checkin(&self, conn: PooledConn) {
+        let mut pool = self.pool.lock().unwrap();
+        let cap = self.cfg.workers * self.cfg.worker_inflight;
+        if pool.len() < cap.max(4) {
+            pool.push(conn);
+        }
+    }
+
+    /// One supervisor tick: reap/restart crashed workers; when `probe`
+    /// is set, also health-check live ones over the wire (a worker that
+    /// fails `probe_strikes` consecutive pings is killed and replaced).
+    pub fn supervise_tick(&self, probe: bool) {
+        if self.is_draining() {
+            return;
+        }
+        let mut dead: Vec<usize> = Vec::new();
+        {
+            let mut slots = self.slots.lock().unwrap();
+            for (i, s) in slots.iter_mut().enumerate() {
+                if s.worker.has_exited() {
+                    if s.up {
+                        log::warn!("fleet worker {i} exited; restarting");
+                    }
+                    s.up = false;
+                    dead.push(i);
+                    continue;
+                }
+                if !probe {
+                    continue;
+                }
+                match Self::probe_worker(s.worker.addr) {
+                    Ok(()) => {
+                        s.strikes = 0;
+                        s.up = true;
+                    }
+                    Err(_) => {
+                        s.strikes += 1;
+                        if s.strikes >= self.cfg.probe_strikes {
+                            log::warn!(
+                                "fleet worker {i} failed {} health probes; restarting",
+                                s.strikes
+                            );
+                            s.up = false;
+                            s.worker.kill();
+                            dead.push(i);
+                        }
+                    }
+                }
+            }
+        }
+        for i in dead {
+            self.respawn(i);
+        }
+    }
+
+    fn probe_worker(addr: SocketAddr) -> crate::Result<()> {
+        let mut c = ServeClient::connect(addr)?;
+        c.set_timeout(Duration::from_secs(2))?;
+        c.ping()?;
+        Ok(())
+    }
+
+    fn respawn(&self, idx: usize) {
+        if self.is_draining() {
+            return;
+        }
+        // boot outside the slots lock: packing a replacement takes real
+        // time and the rest of the fleet keeps routing meanwhile
+        match (self.spawner)(idx) {
+            Ok(w) => {
+                self.pool.lock().unwrap().retain(|c| c.idx != idx);
+                let mut slots = self.slots.lock().unwrap();
+                let s = &mut slots[idx];
+                s.worker = w;
+                s.gen += 1;
+                s.up = true;
+                s.strikes = 0;
+                self.restarts.fetch_add(1, Ordering::Relaxed);
+                log::info!("fleet worker {idx} restarted (gen {})", s.gen);
+            }
+            Err(e) => log::warn!("fleet worker {idx} respawn failed: {e}"),
+        }
+    }
+
+    /// Drain-phase teardown: politely ask every worker to shut down
+    /// (each drains its own scheduler), then reap with a bounded grace.
+    /// The supervisor must already be stopped or it would respawn them.
+    pub(super) fn shutdown_workers(&self, grace: Duration) {
+        let mut slots = self.slots.lock().unwrap();
+        for s in slots.iter_mut() {
+            s.up = false;
+            if let Ok(mut c) = ServeClient::connect(s.worker.addr) {
+                let _ = c.set_timeout(Duration::from_secs(2));
+                let _ = c.shutdown();
+            }
+        }
+        for (i, s) in slots.iter_mut().enumerate() {
+            if !s.worker.reap(grace) {
+                log::warn!("fleet worker {i} did not exit within {grace:?}; killed");
+            }
+        }
+    }
+
+    /// Poll every worker's `stats` op for the scrape page. Unreachable
+    /// workers yield `None` — the page stays scrapable throughout a
+    /// crash/restart window.
+    fn snapshot_workers(&self) -> Vec<WorkerSnap> {
+        let metas: Vec<(SocketAddr, bool, usize)> = {
+            let slots = self.slots.lock().unwrap();
+            slots
+                .iter()
+                .map(|s| (s.worker.addr, s.up, s.inflight.load(Ordering::SeqCst)))
+                .collect()
+        };
+        metas
+            .into_iter()
+            .map(|(addr, up, inflight)| {
+                let stats = if up { Self::poll_stats(addr).ok() } else { None };
+                WorkerSnap { up, inflight, stats }
+            })
+            .collect()
+    }
+
+    fn poll_stats(addr: SocketAddr) -> crate::Result<Json> {
+        let mut c = ServeClient::connect(addr)?;
+        c.set_timeout(Duration::from_secs(2))?;
+        c.stats()
+    }
+}
+
+struct WorkerSnap {
+    up: bool,
+    inflight: usize,
+    stats: Option<Json>,
+}
+
+fn stat_f64(stats: &Json, key: &str) -> Option<f64> {
+    stats.get(key).and_then(|v| v.as_f64())
+}
+
+/// Emit one per-worker family (`worker="<idx>"` label), skipping
+/// workers whose extractor has nothing (e.g. stats poll failed).
+fn worker_family(
+    w: &mut PromWriter,
+    name: &str,
+    help: &str,
+    kind: PromKind,
+    snaps: &[WorkerSnap],
+    get: impl Fn(usize, &WorkerSnap) -> Option<f64>,
+) {
+    let samples: Vec<(usize, f64)> = snaps
+        .iter()
+        .enumerate()
+        .filter_map(|(i, s)| get(i, s).map(|v| (i, v)))
+        .collect();
+    if samples.is_empty() {
+        return;
+    }
+    w.metric(name, help, kind);
+    for (i, v) in samples {
+        let idx = i.to_string();
+        w.sample(name, &[("worker", &idx)], v);
+    }
+}
+
+impl OpExecutor for FleetRouter {
+    fn execute(&self, req: &Request) -> Reply {
+        // stateless ingress (HTTP): no connection to pin affinity to
+        self.route_with_affinity(req, None).0
+    }
+
+    fn has_generator(&self) -> bool {
+        // fleet workers always serve a packed artifact, which carries
+        // the full generate path
+        true
+    }
+
+    fn metrics_page(&self, http: &HttpStats, gate: &Gate, draining: bool) -> String {
+        let snaps = self.snapshot_workers();
+        let up = snaps.iter().filter(|s| s.up).count();
+        let mut w = PromWriter::new();
+
+        w.metric("sparselm_fleet_workers", "Configured fleet size", PromKind::Gauge);
+        w.sample("sparselm_fleet_workers", &[], snaps.len() as f64);
+        w.metric(
+            "sparselm_fleet_workers_up",
+            "Workers currently believed healthy",
+            PromKind::Gauge,
+        );
+        w.sample("sparselm_fleet_workers_up", &[], up as f64);
+        w.metric(
+            "sparselm_fleet_inflight",
+            "Ops currently forwarded and awaiting a worker reply",
+            PromKind::Gauge,
+        );
+        w.sample("sparselm_fleet_inflight", &[], self.total_inflight() as f64);
+        w.metric(
+            "sparselm_fleet_requests_total",
+            "Requests admitted by the router (all ingresses)",
+            PromKind::Counter,
+        );
+        w.sample(
+            "sparselm_fleet_requests_total",
+            &[],
+            self.requests.load(Ordering::Relaxed) as f64,
+        );
+        w.metric(
+            "sparselm_fleet_request_errors_total",
+            "Malformed requests answered with an error reply",
+            PromKind::Counter,
+        );
+        w.sample(
+            "sparselm_fleet_request_errors_total",
+            &[],
+            self.parse_errors.load(Ordering::Relaxed) as f64,
+        );
+        w.metric(
+            "sparselm_fleet_forwarded_total",
+            "Ops answered by a worker",
+            PromKind::Counter,
+        );
+        w.sample(
+            "sparselm_fleet_forwarded_total",
+            &[],
+            self.forwarded.load(Ordering::Relaxed) as f64,
+        );
+        w.metric(
+            "sparselm_fleet_redispatches_total",
+            "Ops retried on another worker after a failure",
+            PromKind::Counter,
+        );
+        w.sample(
+            "sparselm_fleet_redispatches_total",
+            &[],
+            self.redispatched.load(Ordering::Relaxed) as f64,
+        );
+        w.metric(
+            "sparselm_fleet_rejected_total",
+            "Ops refused because every worker was saturated",
+            PromKind::Counter,
+        );
+        w.sample(
+            "sparselm_fleet_rejected_total",
+            &[],
+            self.rejected.load(Ordering::Relaxed) as f64,
+        );
+        w.metric(
+            "sparselm_fleet_restarts_total",
+            "Workers respawned after a crash or failed health checks",
+            PromKind::Counter,
+        );
+        w.sample(
+            "sparselm_fleet_restarts_total",
+            &[],
+            self.restarts.load(Ordering::Relaxed) as f64,
+        );
+
+        worker_family(
+            &mut w,
+            "sparselm_fleet_worker_up",
+            "Per-worker health (1 = routable)",
+            PromKind::Gauge,
+            &snaps,
+            |_, s| Some(if s.up { 1.0 } else { 0.0 }),
+        );
+        worker_family(
+            &mut w,
+            "sparselm_fleet_worker_inflight",
+            "Ops in flight against each worker",
+            PromKind::Gauge,
+            &snaps,
+            |_, s| Some(s.inflight as f64),
+        );
+        worker_family(
+            &mut w,
+            "sparselm_fleet_worker_requests_total",
+            "Requests served by each worker (its own counter)",
+            PromKind::Counter,
+            &snaps,
+            |_, s| s.stats.as_ref().and_then(|j| stat_f64(j, "requests")),
+        );
+        worker_family(
+            &mut w,
+            "sparselm_fleet_worker_errors_total",
+            "Error replies issued by each worker",
+            PromKind::Counter,
+            &snaps,
+            |_, s| s.stats.as_ref().and_then(|j| stat_f64(j, "errors")),
+        );
+        worker_family(
+            &mut w,
+            "sparselm_fleet_worker_score_queue_depth",
+            "Scoring requests queued inside each worker",
+            PromKind::Gauge,
+            &snaps,
+            |_, s| s.stats.as_ref().and_then(|j| stat_f64(j, "queue_depth")),
+        );
+        worker_family(
+            &mut w,
+            "sparselm_fleet_worker_gen_queue_depth",
+            "Generate requests queued inside each worker",
+            PromKind::Gauge,
+            &snaps,
+            |_, s| s.stats.as_ref().and_then(|j| stat_f64(j, "gen_queue_depth")),
+        );
+        worker_family(
+            &mut w,
+            "sparselm_fleet_worker_tokens_generated_total",
+            "Tokens generated by each worker",
+            PromKind::Counter,
+            &snaps,
+            |_, s| s.stats.as_ref().and_then(|j| stat_f64(j, "tokens_generated")),
+        );
+
+        crate::serve::http::metrics::render_http_families(&mut w, http, gate, draining);
+        w.finish()
+    }
+}

@@ -1,0 +1,160 @@
+//! Worker processes: spawning, the readiness handshake, liveness and
+//! reaping.
+//!
+//! A fleet worker is an ordinary `sparselm fleet-worker` process — a
+//! full single-process server (own [`GenScheduler`], KV arena, perf
+//! counters) that mmaps the shared `.spak` and announces its
+//! OS-assigned port on stdout with one line:
+//!
+//! ```text
+//! FLEET_WORKER_READY 127.0.0.1:41234
+//! ```
+//!
+//! The router blocks on that line at boot (bounded by `boot_timeout`),
+//! then keeps draining the child's stdout on a background thread so
+//! the pipe never fills and the worker's own log lines surface under a
+//! `[worker N]` prefix.
+//!
+//! [`GenScheduler`]: crate::serve::generate::GenScheduler
+
+use std::io::{BufRead, BufReader};
+use std::net::SocketAddr;
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+/// The stdout handshake prefix `sparselm fleet-worker` prints once its
+/// socket is bound (the address follows on the same line).
+pub const READY_PREFIX: &str = "FLEET_WORKER_READY ";
+
+/// Boots one worker (slot index → ready worker). The router calls it
+/// at fleet start and again whenever the supervisor replaces a dead
+/// worker, so the spawner owns everything about *how* a worker comes
+/// up: binary, argv, environment, handshake deadline.
+pub type Spawner = Box<dyn Fn(usize) -> crate::Result<Worker> + Send + Sync>;
+
+/// A supervised worker process and the address it answered on.
+pub struct Worker {
+    pub addr: SocketAddr,
+    child: Option<Child>,
+}
+
+impl Worker {
+    /// Adopt a freshly spawned child: wait (bounded) for the readiness
+    /// line on its piped stdout, then keep forwarding the rest of its
+    /// output from a drain thread.
+    pub fn adopt(mut child: Child, idx: usize, boot_timeout: Duration) -> crate::Result<Worker> {
+        let stdout = child
+            .stdout
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("worker {idx}: stdout was not piped"))?;
+        let (tx, rx) = mpsc::channel::<String>();
+        std::thread::spawn(move || {
+            let reader = BufReader::new(stdout);
+            let mut announced = false;
+            for line in reader.lines() {
+                let Ok(line) = line else { break };
+                if !announced {
+                    if let Some(rest) = line.strip_prefix(READY_PREFIX) {
+                        announced = true;
+                        let _ = tx.send(rest.trim().to_string());
+                        continue;
+                    }
+                }
+                println!("[worker {idx}] {line}");
+            }
+        });
+        let addr_text = match rx.recv_timeout(boot_timeout) {
+            Ok(a) => a,
+            Err(_) => {
+                // no handshake: the child is wedged or already dead —
+                // never leave it running unsupervised
+                let _ = child.kill();
+                let _ = child.wait();
+                anyhow::bail!(
+                    "worker {idx}: no {READY_PREFIX:?} handshake within {boot_timeout:?}"
+                );
+            }
+        };
+        let addr: SocketAddr = addr_text
+            .parse()
+            .with_context(|| format!("worker {idx}: bad handshake address {addr_text:?}"))?;
+        Ok(Worker {
+            addr,
+            child: Some(child),
+        })
+    }
+
+    pub fn pid(&self) -> Option<u32> {
+        self.child.as_ref().map(|c| c.id())
+    }
+
+    /// Has the process exited? (`try_wait`, so an exited child is
+    /// reaped — no zombies accumulate across restarts.)
+    pub fn has_exited(&mut self) -> bool {
+        match &mut self.child {
+            None => true,
+            Some(c) => matches!(c.try_wait(), Ok(Some(_))),
+        }
+    }
+
+    /// Kill and reap immediately (chaos hook + boot-failure cleanup).
+    pub fn kill(&mut self) {
+        if let Some(c) = &mut self.child {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+
+    /// Wait up to `grace` for a voluntary exit, then kill. Returns
+    /// whether the worker left on its own.
+    pub fn reap(&mut self, grace: Duration) -> bool {
+        let Some(c) = &mut self.child else { return true };
+        let deadline = Instant::now() + grace;
+        loop {
+            match c.try_wait() {
+                Ok(Some(_)) => return true,
+                Ok(None) => {
+                    if Instant::now() >= deadline {
+                        let _ = c.kill();
+                        let _ = c.wait();
+                        return false;
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+                Err(_) => {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                    return false;
+                }
+            }
+        }
+    }
+}
+
+/// The standard spawner: re-exec `bin fleet-worker <args..>` with stdout
+/// piped for the handshake, stderr inherited, and `envs` applied (tests
+/// pass `SPARSELM_FAST=1` through here so workers fit the same fast
+/// tokenizer as the in-process reference server).
+pub fn process_spawner(
+    bin: PathBuf,
+    args: Vec<String>,
+    envs: Vec<(String, String)>,
+    boot_timeout: Duration,
+) -> Spawner {
+    Box::new(move |idx| {
+        let child = Command::new(&bin)
+            .arg("fleet-worker")
+            .args(&args)
+            .envs(envs.iter().map(|(k, v)| (k.as_str(), v.as_str())))
+            .stdin(Stdio::null())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning fleet worker {idx} from {}", bin.display()))?;
+        Worker::adopt(child, idx, boot_timeout)
+    })
+}

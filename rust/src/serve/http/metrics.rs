@@ -312,6 +312,22 @@ pub fn render(service: &Service, http: &HttpStats, gate: &Gate, draining: bool) 
     }
 
     // ---- HTTP front end -----------------------------------------------
+    render_http_families(&mut w, http, gate, draining);
+
+    w.finish()
+}
+
+/// The HTTP front end's own families — shared verbatim by the
+/// single-process page above and the fleet router's aggregated page
+/// ([`crate::serve::fleet`]), so dashboards read one schema whichever
+/// topology is behind the scrape. Lives here because it reads
+/// [`HttpStats`]' private histogram state.
+pub(crate) fn render_http_families(
+    w: &mut PromWriter,
+    http: &HttpStats,
+    gate: &Gate,
+    draining: bool,
+) {
     w.metric(
         "http_requests_total",
         "HTTP requests answered, by route and status code",
@@ -411,8 +427,6 @@ pub fn render(service: &Service, http: &HttpStats, gate: &Gate, draining: bool) 
         PromKind::Gauge,
     );
     w.sample("http_request_p99_us", &[], http.latency_percentile(99.0) * 1e6);
-
-    w.finish()
 }
 
 #[cfg(test)]

@@ -1,6 +1,9 @@
 //! Production HTTP/1.1 front end — `/score`, `/generate`, `/health`,
-//! and Prometheus `/metrics` over the same [`Service`] the TCP line
-//! protocol runs on.
+//! and Prometheus `/metrics` over the same [`OpExecutor`] the TCP line
+//! protocol runs on (a single-process [`Service`] or a fleet router —
+//! the front end cannot tell the difference).
+//!
+//! [`Service`]: super::service::Service
 //!
 //! Hand-rolled on `std` TCP like everything else in this repo (the
 //! offline registry carries no HTTP crate), which keeps the surface
@@ -48,7 +51,7 @@ pub use client::{HttpClient, HttpReply};
 pub use limits::Gate;
 pub use metrics::HttpStats;
 
-use super::service::Service;
+use super::ops::OpExecutor;
 use crate::util::json::Json;
 use parser::{find_head_end, parse_head};
 use router::{HttpResponse, Route};
@@ -95,7 +98,7 @@ impl Default for HttpConfig {
 /// Handle to a running HTTP front end.
 pub struct HttpHandle {
     pub addr: SocketAddr,
-    service: Arc<Service>,
+    service: Arc<dyn OpExecutor>,
     stats: Arc<HttpStats>,
     gate: Arc<Gate>,
     stop: Arc<AtomicBool>,
@@ -128,8 +131,7 @@ impl HttpHandle {
     /// Render the metrics page without a socket round-trip (the final
     /// flush on shutdown uses this).
     pub fn metrics_text(&self) -> String {
-        metrics::render(
-            &self.service,
+        self.service.metrics_page(
             &self.stats,
             &self.gate,
             self.draining.load(Ordering::SeqCst),
@@ -170,7 +172,7 @@ impl HttpHandle {
 
 /// Everything a connection thread needs, bundled once.
 struct ConnCtx {
-    service: Arc<Service>,
+    service: Arc<dyn OpExecutor>,
     stats: Arc<HttpStats>,
     gate: Arc<Gate>,
     stop: Arc<AtomicBool>,
@@ -178,10 +180,11 @@ struct ConnCtx {
     cfg: HttpConfig,
 }
 
-/// Start the HTTP front end over `service`. Returns after the socket is
-/// bound; the acceptor and connection threads run until
-/// [`HttpHandle::shutdown`].
-pub fn serve_http(service: Arc<Service>, cfg: HttpConfig) -> crate::Result<HttpHandle> {
+/// Start the HTTP front end over any op executor — a single-process
+/// [`super::service::Service`] or a [`super::fleet::FleetRouter`].
+/// Returns after the socket is bound; the acceptor and connection
+/// threads run until [`HttpHandle::shutdown`].
+pub fn serve_http(service: Arc<dyn OpExecutor>, cfg: HttpConfig) -> crate::Result<HttpHandle> {
     let listener = TcpListener::bind(&cfg.addr)?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -420,7 +423,7 @@ fn dispatch(
             (label, resp, false)
         }
         Route::Metrics => {
-            let page = metrics::render(&ctx.service, &ctx.stats, &ctx.gate, draining);
+            let page = ctx.service.metrics_page(&ctx.stats, &ctx.gate, draining);
             (label, HttpResponse::metrics(page), false)
         }
         Route::Score | Route::Generate => {

@@ -30,31 +30,46 @@
 //!   and property-tested without sockets);
 //! * [`generate`] — the continuous-batching decode scheduler and the
 //!   [`DecodeEngine`] contract (same purity);
+//! * [`ops`] — the typed `Request`/`Reply` vocabulary with canonical
+//!   (sorted-key, byte-stable) JSON round-trips, and the
+//!   [`OpExecutor`] seam every ingress programs against;
 //! * [`service`] — the transport-independent op executor both ingresses
 //!   share (`/score` byte-matches `{"op":"nll"}` by construction);
+//! * [`engine`] — typed backend construction: [`BackendSpec`] +
+//!   [`EngineBuilder`], the one path `serve`, `generate` and fleet
+//!   worker boot all build their model through;
 //! * [`server`] — TCP front end speaking newline-delimited JSON;
-//! * [`http`] — HTTP/1.1 front end over the same [`Service`]: `POST
+//! * [`http`] — HTTP/1.1 front end over any [`OpExecutor`]: `POST
 //!   /score`, `POST /generate`, `GET /health` and a Prometheus-text
 //!   `GET /metrics`, with admission control (429 + `Retry-After`),
 //!   body/header caps and graceful drain;
+//! * [`fleet`] — the sharded topology: a router supervising K worker
+//!   processes that mmap one `.spak`, with least-inflight routing,
+//!   restart-on-crash, redispatch and fleet-wide drain;
 //! * [`client`] — a small blocking client used by tests, examples and
 //!   the `serve-bench` CLI.
 
 pub mod batcher;
 pub mod client;
+pub mod engine;
+pub mod fleet;
 pub mod generate;
 pub mod http;
+pub mod ops;
 pub mod protocol;
 pub mod server;
 pub mod service;
 
 pub use batcher::{Batcher, BatcherConfig, ScoreRequest, ScoreResponse};
 pub use client::ServeClient;
+pub use engine::{BackendSpec, Engine, EngineBuilder};
+pub use fleet::{FleetConfig, FleetHandle, FleetRouter};
 pub use generate::{
     DecodeEngine, GenRequest, GenResponse, GenScheduler, GenStats, SpecEngine, SpmmEngine,
 };
 pub use http::{serve_http, HttpClient, HttpConfig, HttpHandle, HttpReply};
-pub use protocol::{Request, Response};
+pub use ops::{OpExecutor, Reply, Request};
+pub use protocol::Response;
 pub use server::{
     pjrt_scorer, serve, serve_generate, spec_generator, spmm_generator, spmm_scorer, GenEngine,
     Scorer, ServerConfig, ServerHandle, ServerStats,

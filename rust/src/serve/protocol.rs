@@ -1,487 +1,13 @@
-//! Wire protocol: newline-delimited JSON over TCP.
+//! Compatibility surface for the wire protocol, which now lives in
+//! [`super::ops`] as the typed `Request`/`Reply` vocabulary shared by
+//! the TCP handler, the HTTP router and the fleet router.
 //!
-//! Requests (one JSON object per line):
-//!
-//! * `{"op":"ping"}` → `{"ok":true,"pong":true}`
-//! * `{"op":"nll","text":"..."}` → mean/sum NLL of the text under the
-//!   served model
-//! * `{"op":"choice","context":"...","choices":["a","b",...]}` → the
-//!   lm-eval-harness zero-shot protocol: rank continuations by summed
-//!   log-likelihood, report the argmin-NLL choice
-//! * `{"op":"generate","prompt":"...","max_tokens":32,"temperature":0.0,
-//!   "seed":0}` → autoregressive continuation of the prompt through the
-//!   KV-cached continuous-batching decode engine; `max_tokens`
-//!   (default 32, capped server-side), `temperature` (default 0 =
-//!   greedy) and `seed` (default 0, temperature sampling only) are
-//!   optional. Replies with the generated `text`, token count, decode
-//!   `steps` and the mean decode-batch fill the request observed
-//! * `{"op":"stats"}` → server + batcher + generation counters:
-//!   the per-step `batch_fill` histogram plus the decode-phase wall
-//!   clocks (`prefill_nanos`, `decode_nanos` — monotone totals inside
-//!   the engine) and the recent-window decode-step latency percentiles
-//!   (`decode_p50_us`, `decode_p99_us`)
-//! * `{"op":"shutdown"}` → drain and stop (admin)
-//!
-//! Responses always carry `"ok"`; failures put a message in `"error"`
-//! and never kill the connection.
+//! Existing call sites (and external readers of the protocol docs)
+//! keep working through these re-exports; new code should import from
+//! [`super::ops`] directly.
 
-use crate::util::json::Json;
+pub use super::ops::{Reply, Request};
 
-/// Parsed client request.
-#[derive(Clone, Debug, PartialEq)]
-pub enum Request {
-    Ping,
-    Nll { text: String },
-    Choice { context: String, choices: Vec<String> },
-    Generate {
-        prompt: String,
-        max_tokens: usize,
-        temperature: f64,
-        seed: u64,
-    },
-    Stats,
-    Shutdown,
-}
-
-impl Request {
-    pub fn parse(line: &str) -> Result<Request, String> {
-        let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
-        let op = v
-            .get("op")
-            .and_then(|o| o.as_str())
-            .ok_or_else(|| "missing \"op\"".to_string())?;
-        match op {
-            "ping" => Ok(Request::Ping),
-            "stats" => Ok(Request::Stats),
-            "shutdown" => Ok(Request::Shutdown),
-            "nll" => Request::nll_from_json(&v),
-            "choice" => Request::choice_from_json(&v),
-            "generate" => Request::generate_from_json(&v),
-            other => Err(format!("unknown op {other:?}")),
-        }
-    }
-
-    /// Validate an `nll` body (no `"op"` required — the HTTP router maps
-    /// `POST /score` here, so both ingresses share one validator).
-    pub fn nll_from_json(v: &Json) -> Result<Request, String> {
-        let text = v
-            .get("text")
-            .and_then(|t| t.as_str())
-            .ok_or_else(|| "nll needs \"text\"".to_string())?;
-        if text.is_empty() {
-            return Err("empty text".into());
-        }
-        Ok(Request::Nll { text: text.to_string() })
-    }
-
-    /// Validate a `choice` body (shared by the TCP op and `POST /score`
-    /// with a `"choices"` field).
-    pub fn choice_from_json(v: &Json) -> Result<Request, String> {
-        let context = v
-            .get("context")
-            .and_then(|t| t.as_str())
-            .ok_or_else(|| "choice needs \"context\"".to_string())?
-            .to_string();
-        // a non-string element is an error, not a silent drop —
-        // otherwise the reply's indices would not line up with
-        // the array the client sent
-        let choices: Vec<String> = v
-            .get("choices")
-            .and_then(|c| c.as_arr())
-            .ok_or_else(|| "choice needs \"choices\"".to_string())?
-            .iter()
-            .map(|c| {
-                c.as_str()
-                    .map(str::to_string)
-                    .ok_or_else(|| "choices must be strings".to_string())
-            })
-            .collect::<Result<_, _>>()?;
-        if choices.len() < 2 {
-            return Err("need at least 2 choices".into());
-        }
-        Ok(Request::Choice { context, choices })
-    }
-
-    /// Validate a `generate` body (shared by the TCP op and
-    /// `POST /generate`).
-    pub fn generate_from_json(v: &Json) -> Result<Request, String> {
-        let prompt = v
-            .get("prompt")
-            .and_then(|p| p.as_str())
-            .ok_or_else(|| "generate needs \"prompt\"".to_string())?
-            .to_string();
-        if prompt.is_empty() {
-            return Err("empty prompt".into());
-        }
-        // optional fields default when absent, but a present
-        // field of the wrong type is an error, not a silent
-        // fallback
-        let max_tokens = match v.get("max_tokens") {
-            None => 32,
-            Some(m) => {
-                let x = m
-                    .as_f64()
-                    .ok_or_else(|| "max_tokens must be a number".to_string())?;
-                if x < 1.0 || x.fract() != 0.0 {
-                    return Err("max_tokens must be a positive integer".into());
-                }
-                x as usize
-            }
-        };
-        let temperature = match v.get("temperature") {
-            None => 0.0,
-            Some(t) => t
-                .as_f64()
-                .ok_or_else(|| "temperature must be a number".to_string())?,
-        };
-        if !temperature.is_finite() || temperature < 0.0 {
-            return Err("temperature must be finite and >= 0".into());
-        }
-        let seed = match v.get("seed") {
-            None => 0,
-            Some(s) => {
-                let x = s
-                    .as_f64()
-                    .ok_or_else(|| "seed must be a number".to_string())?;
-                // reject rather than silently saturate/round:
-                // the seed names an exact sample path, and json
-                // f64 transport aliases integers at 2^53
-                if x < 0.0 || x.fract() != 0.0 || x >= (1u64 << 53) as f64 {
-                    return Err("seed must be a non-negative integer < 2^53".into());
-                }
-                x as u64
-            }
-        };
-        Ok(Request::Generate {
-            prompt,
-            max_tokens,
-            temperature,
-            seed,
-        })
-    }
-
-    /// Serialize (client side).
-    pub fn to_json(&self) -> Json {
-        match self {
-            Request::Ping => Json::obj(vec![("op", Json::str("ping"))]),
-            Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
-            Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
-            Request::Nll { text } => Json::obj(vec![
-                ("op", Json::str("nll")),
-                ("text", Json::str(text.clone())),
-            ]),
-            Request::Choice { context, choices } => Json::obj(vec![
-                ("op", Json::str("choice")),
-                ("context", Json::str(context.clone())),
-                (
-                    "choices",
-                    Json::Arr(choices.iter().map(|c| Json::str(c.clone())).collect()),
-                ),
-            ]),
-            Request::Generate {
-                prompt,
-                max_tokens,
-                temperature,
-                seed,
-            } => Json::obj(vec![
-                ("op", Json::str("generate")),
-                ("prompt", Json::str(prompt.clone())),
-                ("max_tokens", Json::num(*max_tokens as f64)),
-                ("temperature", Json::num(*temperature)),
-                ("seed", Json::num(*seed as f64)),
-            ]),
-        }
-    }
-}
-
-/// Server responses, serialized with [`Response::to_json`].
-#[derive(Clone, Debug, PartialEq)]
-pub enum Response {
-    Pong,
-    Nll {
-        mean_nll: f64,
-        sum_nll: f64,
-        tokens: usize,
-        latency_ms: f64,
-        batch_fill: usize,
-    },
-    Choice {
-        best: usize,
-        scores: Vec<f64>,
-        latency_ms: f64,
-    },
-    Generate {
-        text: String,
-        tokens: usize,
-        steps: usize,
-        latency_ms: f64,
-        mean_batch_fill: f64,
-    },
-    Stats(Json),
-    ShuttingDown,
-    Error(String),
-}
-
-impl Response {
-    pub fn to_json(&self) -> Json {
-        match self {
-            Response::Pong => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("pong", Json::Bool(true)),
-            ]),
-            Response::Nll {
-                mean_nll,
-                sum_nll,
-                tokens,
-                latency_ms,
-                batch_fill,
-            } => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("mean_nll", Json::num(*mean_nll)),
-                ("sum_nll", Json::num(*sum_nll)),
-                ("tokens", Json::num(*tokens as f64)),
-                ("latency_ms", Json::num(*latency_ms)),
-                ("batch_fill", Json::num(*batch_fill as f64)),
-            ]),
-            Response::Choice {
-                best,
-                scores,
-                latency_ms,
-            } => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("best", Json::num(*best as f64)),
-                (
-                    "scores",
-                    Json::Arr(scores.iter().map(|&s| Json::num(s)).collect()),
-                ),
-                ("latency_ms", Json::num(*latency_ms)),
-            ]),
-            Response::Generate {
-                text,
-                tokens,
-                steps,
-                latency_ms,
-                mean_batch_fill,
-            } => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("text", Json::str(text.clone())),
-                ("tokens", Json::num(*tokens as f64)),
-                ("steps", Json::num(*steps as f64)),
-                ("latency_ms", Json::num(*latency_ms)),
-                ("mean_batch_fill", Json::num(*mean_batch_fill)),
-            ]),
-            Response::Stats(j) => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("stats", j.clone()),
-            ]),
-            Response::ShuttingDown => Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("shutdown", Json::Bool(true)),
-            ]),
-            Response::Error(msg) => Json::obj(vec![
-                ("ok", Json::Bool(false)),
-                ("error", Json::str(msg.clone())),
-            ]),
-        }
-    }
-
-    /// Parse a server line (client side).
-    pub fn parse(line: &str) -> Result<Response, String> {
-        let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
-        let ok = v.get("ok").and_then(|o| o.as_bool()).unwrap_or(false);
-        if !ok {
-            let msg = v
-                .get("error")
-                .and_then(|e| e.as_str())
-                .unwrap_or("unknown error");
-            return Ok(Response::Error(msg.to_string()));
-        }
-        if v.get("pong").is_some() {
-            return Ok(Response::Pong);
-        }
-        if v.get("shutdown").is_some() {
-            return Ok(Response::ShuttingDown);
-        }
-        if let Some(s) = v.get("stats") {
-            return Ok(Response::Stats(s.clone()));
-        }
-        if let Some(text) = v.get("text").and_then(|t| t.as_str()) {
-            return Ok(Response::Generate {
-                text: text.to_string(),
-                tokens: v.get("tokens").and_then(|t| t.as_usize()).unwrap_or(0),
-                steps: v.get("steps").and_then(|s| s.as_usize()).unwrap_or(0),
-                latency_ms: v.get("latency_ms").and_then(|l| l.as_f64()).unwrap_or(0.0),
-                mean_batch_fill: v
-                    .get("mean_batch_fill")
-                    .and_then(|b| b.as_f64())
-                    .unwrap_or(0.0),
-            });
-        }
-        if let Some(best) = v.get("best").and_then(|b| b.as_f64()) {
-            let scores = v
-                .get("scores")
-                .and_then(|s| s.as_arr())
-                .map(|a| a.iter().filter_map(|x| x.as_f64()).collect())
-                .unwrap_or_default();
-            let latency_ms = v.get("latency_ms").and_then(|l| l.as_f64()).unwrap_or(0.0);
-            return Ok(Response::Choice {
-                best: best as usize,
-                scores,
-                latency_ms,
-            });
-        }
-        if let Some(mean) = v.get("mean_nll").and_then(|m| m.as_f64()) {
-            return Ok(Response::Nll {
-                mean_nll: mean,
-                sum_nll: v.get("sum_nll").and_then(|s| s.as_f64()).unwrap_or(0.0),
-                tokens: v
-                    .get("tokens")
-                    .and_then(|t| t.as_usize())
-                    .unwrap_or(0),
-                latency_ms: v.get("latency_ms").and_then(|l| l.as_f64()).unwrap_or(0.0),
-                batch_fill: v
-                    .get("batch_fill")
-                    .and_then(|b| b.as_usize())
-                    .unwrap_or(0),
-            });
-        }
-        Err(format!("unrecognized response {line:?}"))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn request_roundtrip() {
-        for r in [
-            Request::Ping,
-            Request::Stats,
-            Request::Shutdown,
-            Request::Nll {
-                text: "the quick brown fox".into(),
-            },
-            Request::Choice {
-                context: "2+2 =".into(),
-                choices: vec!["4".into(), "5".into()],
-            },
-            Request::Generate {
-                prompt: "the quick".into(),
-                max_tokens: 16,
-                temperature: 0.7,
-                seed: 42,
-            },
-        ] {
-            let line = r.to_json().to_string();
-            assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
-        }
-    }
-
-    #[test]
-    fn generate_request_defaults_and_validation() {
-        let r = Request::parse("{\"op\":\"generate\",\"prompt\":\"hi\"}").unwrap();
-        assert_eq!(
-            r,
-            Request::Generate {
-                prompt: "hi".into(),
-                max_tokens: 32,
-                temperature: 0.0,
-                seed: 0,
-            }
-        );
-        assert!(Request::parse("{\"op\":\"generate\"}").is_err());
-        assert!(Request::parse("{\"op\":\"generate\",\"prompt\":\"\"}").is_err());
-        assert!(
-            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"max_tokens\":0}").is_err()
-        );
-        assert!(
-            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"temperature\":-1}")
-                .is_err()
-        );
-        // present-but-mistyped fields must error, not silently default
-        assert!(
-            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"max_tokens\":\"64\"}")
-                .is_err()
-        );
-        assert!(
-            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"temperature\":\"hot\"}")
-                .is_err()
-        );
-        assert!(
-            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"seed\":\"abc\"}").is_err()
-        );
-        assert!(
-            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"seed\":-5}").is_err(),
-            "negative seeds must not silently saturate to 0"
-        );
-        assert!(
-            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"seed\":1.5}").is_err()
-        );
-        assert!(
-            Request::parse("{\"op\":\"generate\",\"prompt\":\"x\",\"max_tokens\":5.9}")
-                .is_err(),
-            "fractional max_tokens must not silently truncate"
-        );
-    }
-
-    #[test]
-    fn response_roundtrip() {
-        for r in [
-            Response::Pong,
-            Response::ShuttingDown,
-            Response::Error("boom".into()),
-            Response::Nll {
-                mean_nll: 2.5,
-                sum_nll: 10.0,
-                tokens: 4,
-                latency_ms: 1.25,
-                batch_fill: 3,
-            },
-            Response::Choice {
-                best: 1,
-                scores: vec![3.0, 2.0, 4.5],
-                latency_ms: 0.5,
-            },
-            Response::Generate {
-                text: "brown fox".into(),
-                tokens: 2,
-                steps: 1,
-                latency_ms: 4.5,
-                mean_batch_fill: 2.5,
-            },
-        ] {
-            let line = r.to_json().to_string();
-            assert_eq!(Response::parse(&line).unwrap(), r, "{line}");
-        }
-    }
-
-    #[test]
-    fn parse_rejects_garbage() {
-        assert!(Request::parse("not json").is_err());
-        assert!(Request::parse("{}").is_err());
-        assert!(Request::parse("{\"op\":\"frobnicate\"}").is_err());
-        assert!(Request::parse("{\"op\":\"nll\"}").is_err());
-        assert!(Request::parse("{\"op\":\"nll\",\"text\":\"\"}").is_err());
-        assert!(
-            Request::parse("{\"op\":\"choice\",\"context\":\"c\",\"choices\":[\"x\"]}").is_err()
-        );
-        // mistyped fields are errors, never silent coercions/drops
-        assert!(Request::parse("{\"op\":\"nll\",\"text\":5}").is_err());
-        assert!(
-            Request::parse("{\"op\":\"choice\",\"context\":\"c\",\"choices\":\"xy\"}").is_err()
-        );
-        assert!(
-            Request::parse("{\"op\":\"choice\",\"context\":\"c\",\"choices\":[1,2,\"a\"]}")
-                .is_err(),
-            "non-string choice elements must not be dropped"
-        );
-        assert!(Request::parse("{\"op\":5}").is_err());
-    }
-
-    #[test]
-    fn error_response_is_not_fatal_to_parse() {
-        let r = Response::parse("{\"ok\":false,\"error\":\"bad\"}").unwrap();
-        assert_eq!(r, Response::Error("bad".into()));
-    }
-}
+/// Former name of [`Reply`], kept so the server/client/test call sites
+/// that predate the typed-ops split keep compiling unchanged.
+pub type Response = Reply;

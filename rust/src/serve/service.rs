@@ -22,6 +22,8 @@ use std::time::Instant;
 
 use super::batcher::{Batcher, BatcherStats, ScoreRequest};
 use super::generate::{GenRequest, GenScheduler, GenStats};
+use super::http::{Gate, HttpStats};
+use super::ops::OpExecutor;
 use super::protocol::{Request, Response};
 use super::server::ServerStats;
 use crate::data::tokenizer::{BOS, EOS};
@@ -282,5 +284,19 @@ impl Service {
             fields.push(("spec_accept_rate", Json::num(p.spec_accept_rate())));
         }
         Json::obj(fields)
+    }
+}
+
+impl OpExecutor for Service {
+    fn execute(&self, req: &Request) -> Response {
+        Service::execute(self, req)
+    }
+
+    fn has_generator(&self) -> bool {
+        Service::has_generator(self)
+    }
+
+    fn metrics_page(&self, http: &HttpStats, gate: &Gate, draining: bool) -> String {
+        super::http::metrics::render(self, http, gate, draining)
     }
 }

@@ -1,0 +1,255 @@
+//! Fleet integration: a router + K worker *processes* over one shared
+//! `.spak` must be indistinguishable from a single-process server at
+//! the byte level (TCP and HTTP), survive a worker SIGKILL without
+//! dropping an accepted request, and reap every child on drain.
+//!
+//! Workers are real `sparselm fleet-worker` subprocesses of the test
+//! binary's sibling CLI (`CARGO_BIN_EXE_sparselm`), booted with
+//! `SPARSELM_FAST=1` so they fit the same fast standard tokenizer as
+//! the in-process reference server.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sparselm::model::{ModelConfig, ParamSet};
+use sparselm::serve::fleet::{process_spawner, start_fleet, FleetConfig};
+use sparselm::serve::{
+    serve_generate, serve_http, spmm_generator, spmm_scorer, FleetHandle, HttpClient, HttpConfig,
+    ServeClient, ServerConfig, ServerHandle,
+};
+use sparselm::store::{read_artifact, write_artifact, PackedModel};
+use sparselm::util::json::Json;
+use sparselm::util::prom;
+use sparselm::util::Rng;
+
+/// Write the shared artifact every worker (and the reference server)
+/// mmaps. One file per test: the tests run concurrently.
+fn make_spak(name: &str) -> PathBuf {
+    let mut cfg = ModelConfig::preset("tiny").unwrap();
+    cfg.n_layers = 2;
+    cfg.seq = 48;
+    cfg.batch = 2;
+    let mut rng = Rng::new(4096);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let dir = std::env::temp_dir().join("sparselm-fleet-tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{name}.spak"));
+    let packed = PackedModel::compress(&params, 8, 16, 16, None);
+    write_artifact(&path, &packed).unwrap();
+    path
+}
+
+fn boot_fleet(path: &Path, k: usize) -> FleetHandle {
+    let cfg = FleetConfig {
+        addr: "127.0.0.1:0".into(),
+        workers: k,
+        worker_inflight: 8,
+        health_interval: Duration::from_millis(100),
+        ..FleetConfig::default()
+    };
+    let spawner = process_spawner(
+        PathBuf::from(env!("CARGO_BIN_EXE_sparselm")),
+        vec!["--model".into(), path.to_string_lossy().into_owned()],
+        vec![("SPARSELM_FAST".into(), "1".into())],
+        cfg.boot_timeout,
+    );
+    start_fleet(cfg, spawner).unwrap()
+}
+
+/// The single-process ground truth: the same artifact, tokenizer and
+/// server knobs a fleet worker boots with — any byte of divergence in a
+/// reply is a routing bug, not a config delta.
+fn reference_server(path: &Path) -> ServerHandle {
+    let (packed, _info) = read_artifact(path).unwrap();
+    let lm = Arc::new(packed.into_sparse_lm().unwrap());
+    let tok = Arc::new(sparselm::cli::standard_tokenizer(true));
+    serve_generate(
+        spmm_scorer(Arc::clone(&lm)),
+        spmm_generator(lm, 8),
+        tok,
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 8,
+            max_batch: 2,
+            max_wait: Duration::from_millis(15),
+            max_gen_tokens: 512,
+        },
+    )
+    .unwrap()
+}
+
+/// One raw line-protocol round trip — the exact reply bytes, newline
+/// stripped.
+fn tcp_answer(addr: SocketAddr, line: &str) -> String {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(300))).unwrap();
+    s.write_all(line.as_bytes()).unwrap();
+    s.write_all(b"\n").unwrap();
+    let mut reply = String::new();
+    BufReader::new(s).read_line(&mut reply).unwrap();
+    reply.trim_end().to_string()
+}
+
+/// Drop the wall-clock fields and re-serialize; object keys are
+/// BTreeMap-sorted, so equal results give byte-equal strings.
+fn strip_timing(text: &str) -> String {
+    let mut v = Json::parse(text).unwrap_or_else(|e| panic!("bad json {text:?}: {e}"));
+    if let Json::Obj(m) = &mut v {
+        m.remove("latency_ms");
+        m.remove("mean_batch_fill");
+    }
+    v.to_string()
+}
+
+#[test]
+fn fleet_of_four_byte_matches_single_process_then_drains_clean() {
+    let path = make_spak("parity");
+    let fleet = boot_fleet(&path, 4);
+    let reference = reference_server(&path);
+
+    // --- TCP parity: scoring, choice, deterministic greedy generate --
+    let scored_ops = [
+        r#"{"op": "ping"}"#,
+        r#"{"op": "nll", "text": "the quick brown fox jumps over the lazy dog"}"#,
+        r#"{"op": "choice", "context": "the quick", "choices": ["brown fox", "lazy dog"]}"#,
+        r#"{"op": "generate", "prompt": "the quick brown", "max_tokens": 8, "temperature": 0}"#,
+    ];
+    for line in scored_ops {
+        let got = tcp_answer(fleet.addr, line);
+        let want = tcp_answer(reference.addr, line);
+        assert_eq!(strip_timing(&got), strip_timing(&want), "tcp parity for {line}");
+    }
+    // error replies carry no timing fields: byte-identical raw
+    let error_ops = [
+        r#"{"op": "nll", "text": ""}"#,
+        r#"{"op": "frobnicate"}"#,
+        "not json at all",
+    ];
+    for line in error_ops {
+        let got = tcp_answer(fleet.addr, line);
+        let want = tcp_answer(reference.addr, line);
+        assert_eq!(got, want, "error parity for {line}");
+    }
+
+    // --- HTTP ingress over the router vs the reference's TCP answers -
+    let http = serve_http(
+        fleet.router(),
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut cl = HttpClient::connect(http.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(300)).unwrap();
+
+    let text = "the quick brown fox jumps over the lazy dog";
+    let want = tcp_answer(reference.addr, &format!("{{\"op\": \"nll\", \"text\": \"{text}\"}}"));
+    let reply = cl.post_json("/score", &format!("{{\"text\": \"{text}\"}}")).unwrap();
+    assert_eq!(reply.status, 200);
+    assert_eq!(strip_timing(&reply.text()), strip_timing(&want), "http nll parity");
+
+    let body = "{\"prompt\": \"the quick brown\", \"max_tokens\": 8, \"temperature\": 0}";
+    let want = tcp_answer(reference.addr, &format!("{{\"op\": \"generate\", {}", &body[1..]));
+    let reply = cl.post_json("/generate", body).unwrap();
+    assert_eq!(reply.status, 200);
+    assert_eq!(strip_timing(&reply.text()), strip_timing(&want), "http generate parity");
+
+    // fleet metrics: valid exposition with rollups + per-worker labels
+    let page = cl.get("/metrics").unwrap().text();
+    prom::parse_text(&page).unwrap_or_else(|e| panic!("bad metrics page: {e}\n{page}"));
+    assert!(page.contains("sparselm_fleet_workers 4"), "fleet size rollup:\n{page}");
+    assert!(
+        page.contains("sparselm_fleet_worker_up{worker=\"3\"} 1"),
+        "per-worker labels:\n{page}"
+    );
+
+    // --- drain: shutdown op → every child reaped, nothing orphaned ---
+    let worker_addrs = fleet.worker_addrs();
+    assert_eq!(worker_addrs.len(), 4);
+    let bye = tcp_answer(fleet.addr, r#"{"op": "shutdown"}"#);
+    assert_eq!(bye, tcp_answer(reference.addr, r#"{"op": "shutdown"}"#), "shutdown parity");
+    fleet.join().unwrap();
+    for addr in worker_addrs {
+        assert!(
+            TcpStream::connect(addr).is_err(),
+            "worker {addr} still accepting after fleet drain"
+        );
+    }
+    assert!(
+        TcpStream::connect(fleet.addr).is_err(),
+        "router still accepting after drain"
+    );
+    http.shutdown().unwrap();
+    reference.join().unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn killed_worker_restarts_and_no_accepted_request_is_dropped() {
+    let path = make_spak("chaos");
+    let fleet = boot_fleet(&path, 2);
+    let http = serve_http(
+        fleet.router(),
+        HttpConfig {
+            addr: "127.0.0.1:0".into(),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut scrape = HttpClient::connect(http.addr).unwrap();
+    scrape.set_timeout(Duration::from_secs(300)).unwrap();
+
+    let mut cl = ServeClient::connect(fleet.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(300)).unwrap();
+    let text = "the quick brown fox jumps over the lazy dog";
+    let (baseline, base_tokens) = cl.nll(text).unwrap();
+    assert!(base_tokens > 0);
+
+    // closed loop with a SIGKILL in the middle: every accepted request
+    // must still be answered (idempotent nll redispatches to the
+    // survivor), and the scrape page must stay valid throughout
+    for i in 0..30 {
+        if i == 10 {
+            assert!(fleet.kill_worker(0), "kill hook");
+        }
+        let (nll, tokens) = cl
+            .nll(text)
+            .unwrap_or_else(|e| panic!("request {i} dropped after worker kill: {e}"));
+        assert_eq!(tokens, base_tokens, "request {i} token count");
+        assert!(
+            (nll - baseline).abs() < 1e-9,
+            "request {i}: nll {nll} diverged from {baseline}"
+        );
+        if i % 5 == 0 {
+            let page = scrape.get("/metrics").unwrap().text();
+            prom::parse_text(&page)
+                .unwrap_or_else(|e| panic!("metrics unscrapable at i={i}: {e}\n{page}"));
+        }
+    }
+
+    // the supervisor replaces the corpse (a respawn re-fits the
+    // tokenizer, so give it real time in debug builds)
+    let deadline = Instant::now() + Duration::from_secs(280);
+    while fleet.restarts() < 1 {
+        assert!(Instant::now() < deadline, "worker never restarted");
+        std::thread::sleep(Duration::from_millis(250));
+    }
+    // and the restarted fleet still answers with the same bytes
+    let (nll, tokens) = cl.nll(text).unwrap();
+    assert_eq!(tokens, base_tokens);
+    assert!((nll - baseline).abs() < 1e-9);
+    let page = scrape.get("/metrics").unwrap().text();
+    prom::parse_text(&page).unwrap();
+    assert!(
+        page.contains("sparselm_fleet_restarts_total"),
+        "restart counter missing:\n{page}"
+    );
+
+    http.shutdown().unwrap();
+    fleet.shutdown().unwrap();
+    std::fs::remove_file(&path).ok();
+}
