@@ -25,7 +25,7 @@ use sparselm::bench::{fast_mode, time_it, BenchReport, TablePrinter};
 use sparselm::hwsim::{GemmShape, HwModel};
 use sparselm::pruning::mask_topn_per_block;
 use sparselm::quant::QuantSpec;
-use sparselm::sparse::{spmm, spmm_parallel, Kernel, PackedNm, PackedQnm};
+use sparselm::sparse::{spmm, spmm_parallel, Kernel, PackedNm, PackedQnm, PackedTnm};
 use sparselm::tensor::{matmul_wt, rel_error, Tensor};
 use sparselm::util::pool::default_parallelism;
 use sparselm::util::Rng;
@@ -159,6 +159,51 @@ fn main() {
                     (qchk.ratio() - 1.0).abs(),
                     "frac",
                 );
+
+                // the ternary format: 5 trits/byte + bf16 group scales
+                // under the same 8:16 mask, dequantized in-kernel
+                let tgroup = PackedTnm::fit_group(128, n, m, cols);
+                let tpacked = PackedTnm::from_dense_mask(&w, &mask, n, m, tgroup);
+
+                let twant = matmul_wt(&x, &tpacked.to_dense());
+                let tgot = spmm(&x, &tpacked);
+                let terr = rel_error(&tgot, &twant);
+                assert!(terr < 1e-4, "{rows}x{cols} t158: rel err {terr}");
+
+                let dt_t = time_it(1, 3, || spmm(&x, &tpacked));
+                let tmeasured = tpacked.operand_bytes();
+                let tchk = hw.check_nm_ternary_operand(g, n, m, 128, tmeasured);
+                let t_ratio = tmeasured as f64 / dense_bytes;
+                // acceptance: mask meta + trits + scales ≤ 0.12× dense
+                // bf16, measured within 1% of the sparse_nm_ternary model
+                assert!(
+                    t_ratio <= 0.12,
+                    "8:16-t158 packed bytes {tmeasured} > 0.12x dense {dense_bytes}"
+                );
+                assert!(
+                    tchk.within(0.01),
+                    "t158 model mismatch: ratio {}",
+                    tchk.ratio()
+                );
+
+                t.row(&[
+                    format!("{rows}x{cols}"),
+                    "8:16t158".into(),
+                    format!("{:.2} ms", dt_dense * 1e3),
+                    "-".into(),
+                    format!("{:.2} ms", dt_t * 1e3),
+                    "-".into(),
+                    format!("{t_ratio:.3}"),
+                    format!("{:.4}", tchk.ratio()),
+                ]);
+                let ttag = format!("{n}_{m}_t158_{rows}x{cols}");
+                report.lower(&format!("spmm_ms_{ttag}"), dt_t * 1e3, "ms");
+                report.lower(&format!("bytes_over_dense_{ttag}"), t_ratio, "x");
+                report.lower(
+                    &format!("model_err_{ttag}"),
+                    (tchk.ratio() - 1.0).abs(),
+                    "frac",
+                );
             }
         }
         report.lower(&format!("dense_ms_{rows}x{cols}"), dt_dense * 1e3, "ms");
@@ -166,10 +211,11 @@ fn main() {
 
     println!(
         "\nbytes/dense = measured packed operand bytes / dense bf16 weight bytes \
-         (paper Table 1: 8:16 -> (1 + 0.875/8/2)/2 = 0.555; 8:16q4 -> 2.9375/16 = 0.184)\n\
+         (paper Table 1: 8:16 -> (1 + 0.875/8/2)/2 = 0.555; 8:16q4 -> 2.9375/16 = 0.184; \
+         8:16t158 -> ~1.74/16 = 0.109)\n\
          vs-model    = measured / hwsim::traffic prediction (1.0 = exact)\n\
-         acceptance: 8:16 bytes/dense <= 0.60 (q4: <= 0.20) and vs-model within 1% — \
-         asserted above"
+         acceptance: 8:16 bytes/dense <= 0.60 (q4: <= 0.20, t158: <= 0.12) and vs-model \
+         within 1% — asserted above"
     );
     report.emit().expect("emit BENCH_f2_spmm.json");
 }

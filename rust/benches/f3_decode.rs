@@ -68,14 +68,19 @@ fn main() {
             ("8:16+16:256", 16, SparseLm::compress(&params, 8, 16, 16)),
             ("8:16q4", 0, SparseLm::compress_quant(&params, 8, 16, 0, q4)),
             ("8:16q4+16:256", 16, SparseLm::compress_quant(&params, 8, 16, 16, q4)),
+            ("8:16t158", 0, SparseLm::compress_ternary(&params, 8, 16, 0, 128)),
+            ("8:16t158+16:256", 16, SparseLm::compress_ternary(&params, 8, 16, 16, 128)),
         ] {
             let packed = label != "dense";
             let quantized = label.contains("q4");
+            let ternary = label.contains("t158");
             let measured = lm.linear_operand_bytes();
 
             // measured-vs-modeled decode traffic (the acceptance bar)
             let (ratio_dense, ratio_model) = if packed {
-                let chk = if quantized {
+                let chk = if ternary {
+                    hw.check_decode_ternary_operand(&shapes, 8, 16, k_out, 128, measured)
+                } else if quantized {
                     hw.check_decode_quant_operand(&shapes, 8, 16, k_out, q4, measured)
                 } else {
                     hw.check_decode_operand(&shapes, 8, 16, k_out, measured)
@@ -88,8 +93,15 @@ fn main() {
                     chk.ratio()
                 );
                 if k_out == 0 {
-                    // bf16 packed: ≤ 0.60× dense; int4-under-mask: ≤ 0.20×
-                    let bar = if quantized { 0.20 } else { 0.60 };
+                    // bf16 packed: ≤ 0.60× dense; int4-under-mask:
+                    // ≤ 0.20×; ternary-under-mask: ≤ 0.12×
+                    let bar = if ternary {
+                        0.12
+                    } else if quantized {
+                        0.20
+                    } else {
+                        0.60
+                    };
                     assert!(
                         rd <= bar,
                         "{} {label}: decode step streams {measured} B > {bar}x dense",
@@ -118,7 +130,9 @@ fn main() {
             }
             let per_tok = t0.elapsed().as_secs_f64() / steps as f64;
 
-            let speedup = if quantized {
+            let speedup = if ternary {
+                hw.decode_ternary_speedup(&shapes, 8, 16, k_out, 128)
+            } else if quantized {
                 hw.decode_quant_speedup(&shapes, 8, 16, k_out, q4)
             } else if packed {
                 hw.decode_speedup(&shapes, 8, 16, k_out)
@@ -153,7 +167,8 @@ fn main() {
 
     println!(
         "\nbytes/step  = weight operand bytes one decode step streams (all block linears)\n\
-         vs-dense    = measured packed / dense bf16 (acceptance: 8:16 <= 0.60, 8:16q4 <= 0.20)\n\
+         vs-dense    = measured packed / dense bf16 (acceptance: 8:16 <= 0.60, \
+         8:16q4 <= 0.20, 8:16t158 <= 0.12)\n\
          vs-model    = measured / hwsim decode-roofline prediction (acceptance: within 1%)\n\
          speedup*    = modeled decode-step speedup at these shapes (no 8:16 silicon exists;\n\
                        latency columns here are host-CPU reference numbers, not the claim)"

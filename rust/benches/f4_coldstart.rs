@@ -19,9 +19,13 @@
 //! CI's bench-gate job.
 
 use sparselm::bench::{time_it, BenchReport, TablePrinter};
-use sparselm::hwsim::artifact::{model_linear_stream_bytes, model_outlier_stream_bytes};
+use sparselm::hwsim::artifact::{
+    model_linear_stream_bytes, model_linear_stream_bytes_ternary, model_outlier_stream_bytes,
+};
 use sparselm::model::{load_checkpoint, save_checkpoint, ModelConfig, ParamSet, SparseLm};
-use sparselm::quant::{nm_bits_per_param, nm_quant_bits_per_param, QuantSpec};
+use sparselm::quant::{
+    nm_bits_per_param, nm_quant_bits_per_param, nm_ternary_bits_per_param, QuantSpec,
+};
 use sparselm::store::{read_artifact, write_artifact, PackedModel};
 use sparselm::util::Rng;
 
@@ -38,12 +42,16 @@ fn main() -> sparselm::Result<()> {
     let ckpt = dir.join("tiny.ckpt");
     let spak = dir.join("tiny.spak");
     let spak_q4 = dir.join("tiny-q4.spak");
+    let spak_t158 = dir.join("tiny-t158.spak");
     save_checkpoint(&ckpt, &params)?;
     let packed = PackedModel::compress(&params, n, m, k_out, None);
     let info = write_artifact(&spak, &packed)?;
     let spec = QuantSpec::int4_g128();
     let packed_q4 = PackedModel::compress(&params, n, m, k_out, Some(spec));
     let info_q4 = write_artifact(&spak_q4, &packed_q4)?;
+    let tgroup = 128usize;
+    let packed_t158 = PackedModel::compress_ternary(&params, n, m, k_out, tgroup);
+    let info_t158 = write_artifact(&spak_t158, &packed_t158)?;
 
     println!("\n# f4_coldstart — tiny, {n}:{m} + {k_out}:256\n");
     let t = TablePrinter::new(&["cold-start path", "latency", "notes"], &[40, 12, 30]);
@@ -71,6 +79,19 @@ fn main() -> sparselm::Result<()> {
         format!("{} KiB on disk", info.file_bytes / 1024),
     ]);
     report.lower("mmap_coldstart_ms", dt_mmap * 1e3, "ms");
+
+    // ternary artifact: same zero-copy boot path at ~1.75 bits/param
+    let dt_mmap_t158 = time_it(1, 3, || {
+        let (pm, _) = read_artifact(&spak_t158).unwrap();
+        pm.into_sparse_lm().unwrap()
+    });
+    t.row(&[
+        "mmap .spak artifact (t158)".into(),
+        format!("{:.1} ms", dt_mmap_t158 * 1e3),
+        format!("{} KiB on disk", info_t158.file_bytes / 1024),
+    ]);
+    report.lower("mmap_t158_coldstart_ms", dt_mmap_t158 * 1e3, "ms");
+
     let speedup = dt_repack / dt_mmap;
     report.higher("coldstart_speedup", speedup, "x");
     println!("\ncold start speedup (repack / mmap): {speedup:.2}x");
@@ -124,25 +145,56 @@ fn main() -> sparselm::Result<()> {
         "bool",
     );
 
+    let modeled_t158 = model_linear_stream_bytes_ternary(&cfg, n, m, tgroup);
+    let exact_t158 = info_t158.linear_stream_bytes == modeled_t158
+        && info_t158.outlier_stream_bytes == modeled_out
+        && info_t158.file_bytes == info_t158.expected_file_bytes();
+    println!(
+        "t158 artifact: measured {} bytes vs modeled {modeled_t158} — {}",
+        info_t158.linear_stream_bytes,
+        if exact_t158 { "exact" } else { "MISMATCH" }
+    );
+    report.higher(
+        "artifact_t158_bytes_match_model",
+        if exact_t158 { 1.0 } else { 0.0 },
+        "bool",
+    );
+
+    // the mmap'd ternary model must decode like its in-memory twin
+    let (back_t158, _) = read_artifact(&spak_t158)?;
+    let served_t158 = back_t158.into_sparse_lm()?;
+    let ref_t158 = SparseLm::compress_ternary(&params, n, m, k_out, tgroup);
+    assert_eq!(
+        served_t158.generate(&prompt, 12, None, sparselm::eval::argmax)?,
+        ref_t158.generate(&prompt, 12, None, sparselm::eval::argmax)?,
+        "mmap-served ternary generation must match the in-memory packed model"
+    );
+
     // bits/param vs the analytic accounting (≥ 1 by construction; the
     // excess is the pattern stream's trailing-word padding)
     let ratio = info.base_bits_per_param() / nm_bits_per_param(n, m);
     let ratio_q4 =
         info_q4.base_bits_per_param() / nm_quant_bits_per_param(n, m, spec.bits, spec.group);
+    let ratio_t158 =
+        info_t158.base_bits_per_param() / nm_ternary_bits_per_param(n, m, tgroup);
     println!(
         "bits/param: bf16 {:.5} ({ratio:.5}x Table-1 {:.4}), int4 {:.5} \
-         ({ratio_q4:.5}x model {:.4})",
+         ({ratio_q4:.5}x model {:.4}), t158 {:.5} ({ratio_t158:.5}x model {:.4})",
         info.base_bits_per_param(),
         nm_bits_per_param(n, m),
         info_q4.base_bits_per_param(),
-        nm_quant_bits_per_param(n, m, spec.bits, spec.group)
+        nm_quant_bits_per_param(n, m, spec.bits, spec.group),
+        info_t158.base_bits_per_param(),
+        nm_ternary_bits_per_param(n, m, tgroup)
     );
     report.lower("spak_bits_per_param_over_table1", ratio, "x");
     report.lower("spak_q4_bits_per_param_over_model", ratio_q4, "x");
+    report.lower("spak_t158_bits_per_param_over_model", ratio_t158, "x");
 
     report.emit()?;
     std::fs::remove_file(&ckpt).ok();
     std::fs::remove_file(&spak).ok();
     std::fs::remove_file(&spak_q4).ok();
+    std::fs::remove_file(&spak_t158).ok();
     Ok(())
 }

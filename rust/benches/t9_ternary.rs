@@ -1,0 +1,109 @@
+//! t9_ternary — value-format ablation: what does squeezing the kept
+//! values from bf16 through int4 down to 1.58-bit ternary cost in NLL?
+//!
+//! Engine-free (host `SparseLm` forward only, no PJRT): the three
+//! formats share one 8:16 mask + 16:256 outlier selection over the same
+//! tiny-preset parameters, so the measured deltas isolate the value
+//! codec — exactly the comparison the codec-generic kernel seam makes
+//! cheap to run. Reported per format: analytic bits/param, mean NLL
+//! over deterministic token batches, and the delta vs the bf16-valued
+//! baseline.
+//!
+//! Acceptance bar (asserted): every NLL is finite, and the ternary
+//! delta stays under 1.0 nat — coarse values may cost accuracy, but the
+//! format must remain a working language model, not noise.
+//!
+//! Emits `BENCH_t9_ternary.json` (schema: docs/BENCHMARKS.md).
+
+use sparselm::bench::{fast_mode, BenchReport, TablePrinter};
+use sparselm::model::{ModelConfig, ParamSet, SparseLm};
+use sparselm::quant::{
+    nm_bits_per_param, nm_quant_bits_per_param, nm_ternary_bits_per_param, QuantSpec,
+};
+use sparselm::util::Rng;
+
+fn main() -> sparselm::Result<()> {
+    let mut report = BenchReport::new("t9_ternary");
+    let mut cfg = ModelConfig::preset("tiny").expect("tiny preset");
+    cfg.seq = 64;
+    cfg.batch = 4;
+    let (n, m, k_out) = (8usize, 16usize, 16usize);
+    let q4 = QuantSpec::int4_g128();
+    let tgroup = 128usize;
+    let mut rng = Rng::new(0x7E12);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+
+    let batches = if fast_mode() { 2usize } else { 6 };
+    let mean_nll = |lm: &SparseLm| -> sparselm::Result<f64> {
+        // deterministic token windows, shared across formats
+        let mut r = Rng::new(0x709);
+        let (mut total, mut count) = (0.0f64, 0usize);
+        for _ in 0..batches {
+            let toks: Vec<i32> = (0..cfg.batch * (cfg.seq + 1))
+                .map(|_| r.below(cfg.vocab) as i32)
+                .collect();
+            let nll = lm.lm_nll(&toks)?;
+            total += nll.data().iter().map(|&x| x as f64).sum::<f64>();
+            count += nll.data().len();
+        }
+        Ok(total / count as f64)
+    };
+
+    println!("\n# t9_ternary — kept-value format ablation at {n}:{m} + {k_out}:256 (tiny)\n");
+    let t = TablePrinter::new(&["format", "bits/param*", "mean NLL", "delta"], &[22, 12, 10, 9]);
+
+    let base_bits = nm_bits_per_param(n, m);
+    let rows: Vec<(&str, f64, SparseLm)> = vec![
+        (
+            "bf16 values",
+            base_bits,
+            SparseLm::compress(&params, n, m, k_out),
+        ),
+        (
+            "int4 g128",
+            nm_quant_bits_per_param(n, m, q4.bits, q4.group),
+            SparseLm::compress_quant(&params, n, m, k_out, q4),
+        ),
+        (
+            "ternary g128",
+            nm_ternary_bits_per_param(n, m, tgroup),
+            SparseLm::compress_ternary(&params, n, m, k_out, tgroup),
+        ),
+    ];
+
+    let mut baseline = f64::NAN;
+    for (i, (label, bits, lm)) in rows.iter().enumerate() {
+        let nll = mean_nll(lm)?;
+        assert!(nll.is_finite(), "{label}: NLL is not finite");
+        if i == 0 {
+            baseline = nll;
+        }
+        let delta = nll - baseline;
+        t.row(&[
+            label.to_string(),
+            format!("{bits:.4}"),
+            format!("{nll:.4}"),
+            if i == 0 { "-".into() } else { format!("{delta:+.4}") },
+        ]);
+        let tag = label.replace(' ', "_");
+        report.lower(&format!("nll_{tag}"), nll, "nats");
+        if i > 0 {
+            report.lower(&format!("nll_delta_{tag}"), delta.abs(), "nats");
+        }
+        if *label == "ternary g128" {
+            assert!(
+                delta.abs() < 1.0,
+                "ternary NLL delta {delta} vs bf16 values exceeds 1.0 nat"
+            );
+        }
+    }
+
+    println!(
+        "\nbits/param* = analytic base-stream accounting (mask + values + scales, no \
+         outlier side stream)\n\
+         delta       = mean NLL minus the bf16-valued baseline under the same mask — \
+         the cost of the value codec alone (acceptance: ternary < 1.0 nat)"
+    );
+    report.emit()?;
+    Ok(())
+}

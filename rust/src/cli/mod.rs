@@ -6,7 +6,7 @@
 //!                   --outliers 16 --method ria --sq --vc --ebft 40
 //! sparselm eval     --model tiny --ckpt runs/tiny-8x16.ckpt [--zeroshot]
 //! sparselm pack     --ckpt runs/tiny.ckpt --out runs/tiny.spak --sparsity 8:16 \
-//!                   --outliers 16 [--quant --qbits 4 --qgroup 128]
+//!                   --outliers 16 [--quant --qbits 4 --qgroup 128 | --quant ternary --tgroup 128]
 //! sparselm inspect  runs/tiny.spak
 //! sparselm hwsim    --batch 8
 //! sparselm info     --model tiny
@@ -72,12 +72,14 @@ fn print_help() {
 subcommands:
   train     train a stand-in model via the AOT train-step artifact
   compress  run the §4 pipeline (SQ -> RIA -> N:M + k:256 outliers -> VC ->
-            EBFT; --quant adds the pack-time int4 stage; --pack-out x.spak
-            additionally writes the calibrated packed-model artifact)
+            EBFT; --quant adds the pack-time int4 stage, --quant ternary
+            the 1.58-bit PackedTnm stage; --pack-out x.spak additionally
+            writes the calibrated packed-model artifact)
   eval      perplexity (and --zeroshot accuracy) of a checkpoint
   pack      pack a dense checkpoint into a .spak artifact (magnitude
             selection; the calibrated route is compress --pack-out)
   inspect   validate a .spak artifact and print its per-tensor layout,
+            per-kind stream breakdown (mask/values/scales/outliers),
             exact byte accounting and bits/param vs the Table-1 model
   hwsim     projected sparse-GEMM speedups (the paper's §2 analysis)
   info      model/artifact inventory
@@ -89,7 +91,9 @@ subcommands:
             artifact and serves it zero-copy; --backend spmm re-packs a dense
             checkpoint — requires --repack to acknowledge the lossy magnitude
             selection — spmm-q4 additionally int4-quantizes the kept values
-            (--qbits/--qgroup), spec serves self-speculative decode — int4
+            (--qbits/--qgroup), spmm-t packs them as 1.58-bit ternary
+            (--tgroup) for sub-2-bits/param serving, spec serves
+            self-speculative decode — int4
             draft + bf16 windowed verify, same tokens as spmm, fewer bf16
             steps per token — dense serves exact weights via the host
             forward, pjrt uses the AOT artifacts, scoring only; --http ADDR
@@ -102,8 +106,9 @@ subcommands:
             /metrics rollups with per-worker labels)
   generate  one-shot KV-cached generation from a checkpoint or a .spak
             artifact (--model x.spak mmaps the packed model; --random for
-            an offline stand-in; --quant for the int4 packed format;
-            --spec for self-speculative decode; --temperature 0 = greedy)
+            an offline stand-in; --quant for the int4 packed format,
+            --quant ternary for 1.58-bit PackedTnm; --spec for
+            self-speculative decode; --temperature 0 = greedy)
   serve-bench  closed-loop load generator against a running server
 
 common flags: --model <tiny|small|gqa|wide|e2e> --artifacts <dir>
@@ -128,6 +133,39 @@ pub fn parse_quant_spec(args: &Args) -> crate::Result<crate::quant::QuantSpec> {
     anyhow::ensure!((2..=8).contains(&bits), "--qbits must be 2..=8, got {bits}");
     anyhow::ensure!(group > 0, "--qgroup must be > 0, got {group}");
     Ok(crate::quant::QuantSpec::new(bits as u32, group))
+}
+
+/// What `--quant` selects for the kept values.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum QuantMode {
+    /// bf16 kept values (no `--quant`)
+    None,
+    /// bare `--quant` (or `--quant int`): group-quantized intN per
+    /// `--qbits` / `--qgroup`
+    Int(crate::quant::QuantSpec),
+    /// `--quant ternary`: 1.58-bit [`crate::sparse::PackedTnm`] with
+    /// the given `--tgroup` scale group
+    Ternary(usize),
+}
+
+/// Interpret the `--quant` flag value. The bare-flag spelling stays an
+/// int quantizer for backward compatibility; `--quant ternary` routes
+/// to the PackedTnm format, whose only knob is `--tgroup`.
+pub fn parse_quant_mode(args: &Args) -> crate::Result<QuantMode> {
+    match args.get("quant") {
+        None => Ok(QuantMode::None),
+        Some("true") | Some("1") | Some("yes") | Some("int") => {
+            Ok(QuantMode::Int(parse_quant_spec(args)?))
+        }
+        Some("ternary") | Some("t158") => {
+            let group = args.get_usize("tgroup", 128)?;
+            anyhow::ensure!(group > 0, "--tgroup must be > 0, got {group}");
+            Ok(QuantMode::Ternary(group))
+        }
+        Some(other) => anyhow::bail!(
+            "unknown --quant {other:?} (expected bare --quant for intN, or --quant ternary)"
+        ),
+    }
 }
 
 fn cmd_train(args: Args) -> crate::Result<()> {
@@ -177,8 +215,10 @@ fn build_spec(args: &Args) -> crate::Result<PipelineSpec> {
     spec.calib_batches = args.get_usize("calib-batches", 8)?;
     spec.unstructured_outliers = args.get_bool("unstructured");
     spec.use_kernels = !args.get_bool("host-prune");
-    if args.get_bool("quant") {
-        spec.quant = Some(parse_quant_spec(args)?);
+    match parse_quant_mode(args)? {
+        QuantMode::None => {}
+        QuantMode::Int(q) => spec.quant = Some(q),
+        QuantMode::Ternary(group) => spec = spec.ternarize(group),
     }
     Ok(spec)
 }
@@ -236,16 +276,18 @@ fn cmd_pack(args: Args) -> crate::Result<()> {
     anyhow::ensure!(!ckpt.is_empty(), "pack needs --ckpt <checkpoint>");
     let (n, m) = parse_pattern(&args.get_str("sparsity", "8:16"))?;
     let k = args.get_usize("outliers", 16)?;
-    let quant = if args.get_bool("quant") {
-        Some(parse_quant_spec(&args)?)
-    } else {
-        None
-    };
+    let mode = parse_quant_mode(&args)?;
     let default_out = format!("{}.spak", ckpt.trim_end_matches(".ckpt"));
     let out = args.get_str("out", &default_out);
 
     let params = load_checkpoint(&PathBuf::from(&ckpt))?;
-    let packed = crate::store::PackedModel::compress(&params, n, m, k, quant);
+    let packed = match mode {
+        QuantMode::None => crate::store::PackedModel::compress(&params, n, m, k, None),
+        QuantMode::Int(q) => crate::store::PackedModel::compress(&params, n, m, k, Some(q)),
+        QuantMode::Ternary(group) => {
+            crate::store::PackedModel::compress_ternary(&params, n, m, k, group)
+        }
+    };
     let info = crate::store::write_artifact(&PathBuf::from(&out), &packed)?;
     println!(
         "packed {ckpt} -> {out} ({}, {n}:{m} + {k}:256, magnitude selection)",
@@ -267,8 +309,20 @@ fn cmd_pack(args: Args) -> crate::Result<()> {
         info.total_bits_per_param(),
         info.dense_stream_bytes / 1024
     );
-    let modeled =
-        crate::hwsim::artifact::model_linear_stream_bytes(&params.config, n, m, quant);
+    let modeled = match mode {
+        QuantMode::None => {
+            crate::hwsim::artifact::model_linear_stream_bytes(&params.config, n, m, None)
+        }
+        QuantMode::Int(q) => {
+            crate::hwsim::artifact::model_linear_stream_bytes(&params.config, n, m, Some(q))
+        }
+        QuantMode::Ternary(group) => crate::hwsim::artifact::model_linear_stream_bytes_ternary(
+            &params.config,
+            n,
+            m,
+            group,
+        ),
+    };
     println!(
         "hwsim cross-check: modeled base streams {} bytes — {}",
         modeled,
@@ -311,18 +365,70 @@ fn cmd_inspect(args: Args) -> crate::Result<()> {
         cfg.seq,
         cfg.batch
     );
-    println!("{:<12} {:>10} {:>16} {:>12}", "kind", "tensors", "shape-elems", "bytes");
-    let mut by_kind: std::collections::BTreeMap<String, (usize, usize, usize)> =
+    // per-kind stream breakdown — classify every index-declared stream
+    // into mask (combinadic meta), values (bf16/int/trit payload, or
+    // dense f32), scales, outliers. [mask, values, scales, outliers,
+    // total, count, elems] per kind.
+    let class_of = |key: &str| -> usize {
+        if key.starts_with("outlier.") {
+            3
+        } else if key == "meta" {
+            0
+        } else if key == "scales" {
+            2
+        } else {
+            1 // values / codes / trits / dense f32
+        }
+    };
+    println!(
+        "{:<8} {:>7} {:>14} {:>12} {:>12} {:>10} {:>12} {:>12}",
+        "kind", "tensors", "shape-elems", "mask", "values", "scales", "outliers", "bytes"
+    );
+    let mut by_kind: std::collections::BTreeMap<String, [usize; 7]> =
         std::collections::BTreeMap::new();
     for t in &info.tensors {
         let e = by_kind.entry(t.kind.clone()).or_default();
-        e.0 += 1;
-        e.1 += t.shape.iter().product::<usize>();
-        e.2 += t.stream_bytes;
+        e[5] += 1;
+        e[6] += t.shape.iter().product::<usize>();
+        for (key, bytes) in &t.streams {
+            e[class_of(key)] += bytes;
+            e[4] += bytes;
+        }
     }
-    for (kind, (count, elems, bytes)) in &by_kind {
-        println!("{kind:<12} {count:>10} {elems:>16} {bytes:>12}");
+    for (kind, r) in &by_kind {
+        println!(
+            "{kind:<8} {:>7} {:>14} {:>12} {:>12} {:>10} {:>12} {:>12}",
+            r[5], r[6], r[0], r[1], r[2], r[3], r[4]
+        );
     }
+    // byte-exact cross-check: the breakdown must re-derive the headline
+    // bits/param with no residue anywhere
+    let (mut base_sum, mut outlier_sum) = (0usize, 0usize);
+    for (kind, r) in &by_kind {
+        if kind != "dense" {
+            base_sum += r[0] + r[1] + r[2];
+            outlier_sum += r[3];
+        }
+    }
+    anyhow::ensure!(
+        base_sum == info.linear_stream_bytes && outlier_sum == info.outlier_stream_bytes,
+        "stream breakdown ({base_sum} base + {outlier_sum} outlier bytes) does not \
+         re-add to the artifact accounting ({} + {})",
+        info.linear_stream_bytes,
+        info.outlier_stream_bytes
+    );
+    let rebuilt = 8.0 * (base_sum + outlier_sum) as f64 / info.linear_elems.max(1) as f64;
+    anyhow::ensure!(
+        rebuilt == info.total_bits_per_param(),
+        "breakdown-derived bits/param {rebuilt} != total_bits_per_param {}",
+        info.total_bits_per_param()
+    );
+    println!(
+        "breakdown cross-check: {} packed bytes -> {:.4} bits/param (re-adds to \
+         total_bits_per_param exactly)",
+        base_sum + outlier_sum,
+        rebuilt
+    );
     println!(
         "layout: header {} + streams {} + padding {} + trailer 8 = {} bytes",
         info.header_bytes(),
@@ -346,6 +452,38 @@ fn cmd_inspect(args: Args) -> crate::Result<()> {
             info.base_bits_per_param(),
             modeled,
             if modeled == info.linear_stream_bytes { "exact match" } else { "MISMATCH" }
+        );
+    }
+    // PackedTnm carries no QuantSpec, so it bypasses pack_summary —
+    // cross-check it against the ternary hwsim model per layer instead.
+    // Each stored group is already fitted and fit_group is idempotent,
+    // so re-deriving from (rows, cols, group) is exact.
+    let mut tnm_modeled = 0usize;
+    let mut tnm_head = None;
+    for l in &packed.layers {
+        if let crate::store::PackedWeights::Tnm(p) = &l.weights {
+            tnm_modeled += crate::hwsim::artifact::tnm_stream_bytes(
+                p.rows,
+                p.cols,
+                p.pattern.n,
+                p.pattern.m,
+                p.group,
+            );
+            tnm_head.get_or_insert((p.pattern.n, p.pattern.m, p.group));
+        }
+    }
+    if let Some((n, m, group)) = tnm_head {
+        let measured = by_kind.get("tnm").map(|r| r[0] + r[1] + r[2]).unwrap_or(0);
+        let analytic = crate::quant::nm_ternary_bits_per_param(n, m, group);
+        println!(
+            "packed base: {n}:{m} ternary g{group} — {:.4} bits/param measured vs \
+             {analytic:.4} analytic, modeled streams {tnm_modeled} bytes ({})",
+            info.base_bits_per_param(),
+            if tnm_modeled == measured { "exact match" } else { "MISMATCH" }
+        );
+        anyhow::ensure!(
+            tnm_modeled == measured,
+            "tnm streams ({measured} bytes) diverge from the hwsim accounting ({tnm_modeled})"
         );
     }
     Ok(())

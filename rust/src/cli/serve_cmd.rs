@@ -40,15 +40,16 @@ pub fn standard_tokenizer(fast: bool) -> Tokenizer {
     Tokenizer::fit(&text, 2048)
 }
 
-/// The one `--pack`/`--outliers`/`--qbits`/`--threads`/`--repack` →
-/// [`EngineBuilder`] mapping, shared by `serve`, `generate` and fleet
-/// worker boot so the three cannot drift.
+/// The one `--pack`/`--outliers`/`--qbits`/`--tgroup`/`--threads`/
+/// `--repack` → [`EngineBuilder`] mapping, shared by `serve`,
+/// `generate` and fleet worker boot so the three cannot drift.
 pub(crate) fn engine_builder(args: &Args) -> crate::Result<EngineBuilder> {
     let (n, m) = super::parse_pattern(&args.get_str("pack", "8:16"))?;
     Ok(EngineBuilder::new()
         .pattern(n, m)
         .outliers(args.get_usize("outliers", 16)?)
         .quant(super::parse_quant_spec(args)?)
+        .ternary_group(args.get_usize("tgroup", 128)?)
         .threads(args.get_usize("threads", crate::util::pool::default_parallelism())?)
         .acknowledge_repack(args.get_bool("repack"))
         .artifacts(args.get_str("artifacts", "artifacts")))
@@ -278,10 +279,12 @@ pub fn cmd_generate(args: Args) -> crate::Result<()> {
     } else {
         let backend = if args.get_bool("dense") {
             BackendSpec::Dense
-        } else if args.get_bool("quant") {
-            BackendSpec::SpmmQ4
         } else {
-            BackendSpec::Spmm
+            match super::parse_quant_mode(&args)? {
+                super::QuantMode::None => BackendSpec::Spmm,
+                super::QuantMode::Int(_) => BackendSpec::SpmmQ4,
+                super::QuantMode::Ternary(_) => BackendSpec::SpmmT,
+            }
         };
         let Engine::Spmm { lm, .. } = builder.build(backend, load_params()?, &model)? else {
             unreachable!("host-forward backends build Engine::Spmm");

@@ -20,7 +20,10 @@
 //! weights stay bf16 (the SPQR discipline), and the effective dense
 //! weight swapped into the compressed model is the dequantized base +
 //! outliers, so downstream eval measures exactly what a
-//! `--backend spmm-q4` deployment serves.
+//! `--backend spmm-q4` deployment serves. [`PipelineSpec::ternary`]
+//! swaps the int quantizer for the 1.58-bit ternary one
+//! ([`PackedTnm`], label `+T158`) with the same placement and the same
+//! dequantize-for-eval discipline — the `--backend spmm-t` deployment.
 //!
 //! [`CompressionPipeline::run_packed`] adds the **pack-artifact output
 //! stage**: instead of discarding the packed layers after accounting,
@@ -38,7 +41,7 @@ use crate::pruning::{
 };
 use crate::quant::QuantSpec;
 use crate::runtime::{literal_f32, tensor_from_literal, Engine, KernelSet};
-use crate::sparse::{Csr, PackedNm, PackedQnm, StructuredOutliers};
+use crate::sparse::{Csr, PackedNm, PackedQnm, PackedTnm, StructuredOutliers};
 use crate::store::{PackedLayer, PackedModel, PackedWeights};
 use crate::tensor::Tensor;
 use crate::util::Rng;
@@ -67,6 +70,10 @@ pub struct PipelineSpec {
     /// (prune → VC → [EBFT] → quantize → pack into [`PackedQnm`]);
     /// `None` stores them bf16 ([`PackedNm`])
     pub quant: Option<QuantSpec>,
+    /// ternarize the kept base values at pack time instead (the value
+    /// is the scale group, gcd-fitted per layer width; packs into
+    /// [`PackedTnm`]). Mutually exclusive with `quant`.
+    pub ternary: Option<usize>,
 }
 
 impl PipelineSpec {
@@ -80,6 +87,7 @@ impl PipelineSpec {
             seed: 0x5EED,
             unstructured_outliers: false,
             quant: None,
+            ternary: None,
         }
     }
 
@@ -91,6 +99,13 @@ impl PipelineSpec {
     /// Quantize the kept base values at pack time.
     pub fn quantize(mut self, spec: QuantSpec) -> Self {
         self.quant = Some(spec);
+        self
+    }
+
+    /// Ternarize the kept base values at pack time (`group` kept values
+    /// per bf16 scale).
+    pub fn ternarize(mut self, group: usize) -> Self {
+        self.ternary = Some(group);
         self
     }
 
@@ -112,6 +127,10 @@ impl PipelineSpec {
         }
         if let Some(q) = &self.quant {
             s.push_str(&format!("+INT{}", q.bits));
+        }
+        if self.ternary.is_some() {
+            // 1.58 bits/value: log2(3) trits, the BitNet-style tag
+            s.push_str("+T158");
         }
         s
     }
@@ -218,6 +237,10 @@ impl CompressionPipeline {
             !(want_pack && spec.unstructured_outliers),
             "pack-artifact stage supports structured outliers only (drop --unstructured)"
         );
+        anyhow::ensure!(
+            !(spec.quant.is_some() && spec.ternary.is_some()),
+            "pick one pack-time value format: --quant intN or --quant ternary, not both"
+        );
         let mut rng = Rng::new(spec.seed);
         let lits = self.exec.upload(dense)?;
 
@@ -315,6 +338,48 @@ impl CompressionPipeline {
                             });
                         }
                         self.metrics.incr("layers_quantized", 1);
+                    }
+                }
+                Ok(())
+            })?;
+        } else if let Some(group) = spec.ternary {
+            // 4''. pack-time ternarization: same placement as the int
+            // quantizer (post-VC, post-EBFT — the corrected values are
+            // what the per-group absmax scales fit), but the kept base
+            // collapses to {-s, 0, +s} stored 5 trits per byte.
+            self.metrics.time("ternarize", || -> crate::Result<()> {
+                for b in 0..self.exec.config.n_layers {
+                    for (i, lin) in crate::model::BLOCK_LINEAR.iter().enumerate() {
+                        let name = format!("blk{b}.{lin}");
+                        let salient = &block_salient[b][i];
+                        let keep = &block_masks[b][i];
+                        let w_eff = compressed.get(&name);
+                        let w_ns = w_eff.zip(salient, |w, s| w - s);
+                        let (_, cols) = w_ns.dims2();
+                        let fitted =
+                            PackedTnm::fit_group(group, spec.prune.n, spec.prune.m, cols);
+                        let tnm = PackedTnm::from_dense_mask(
+                            &w_ns,
+                            keep,
+                            spec.prune.n,
+                            spec.prune.m,
+                            fitted,
+                        );
+                        let li = b * crate::model::BLOCK_LINEAR.len() + i;
+                        layers[li].nm_bytes = tnm.bytes();
+                        *compressed.get_mut(&name) = tnm.to_dense().add(salient);
+                        if want_pack {
+                            packed_layers.push(PackedLayer {
+                                name,
+                                weights: PackedWeights::Tnm(tnm),
+                                outliers: pack_outliers(
+                                    salient,
+                                    &block_omasks[b][i],
+                                    &spec.prune,
+                                ),
+                            });
+                        }
+                        self.metrics.incr("layers_ternarized", 1);
                     }
                 }
                 Ok(())
@@ -546,6 +611,8 @@ mod tests {
         assert_eq!(spec.label(), "Magnitude");
         let spec = PipelineSpec::new(PruneSpec::new(8, 16)).quantize(QuantSpec::int4_g128());
         assert_eq!(spec.label(), "RIA+SQ+VC+INT4");
+        let spec = PipelineSpec::new(PruneSpec::new(8, 16)).ternarize(128);
+        assert_eq!(spec.label(), "RIA+SQ+VC+T158");
     }
 
     #[test]

@@ -17,7 +17,7 @@
 use crate::model::ModelConfig;
 use crate::quant::QuantSpec;
 use crate::sparse::bits::packed_words;
-use crate::sparse::{PackedQnm, PatternInfo};
+use crate::sparse::{PackedQnm, PackedTnm, PatternInfo};
 
 /// Exact serialized bytes of one [`crate::sparse::PackedNm`] base:
 /// bf16 kept values + full `u64` pattern words.
@@ -47,6 +47,26 @@ pub fn qnm_stream_bytes(
     codes + scales + packed_words(blocks, bits) * 8
 }
 
+/// Exact serialized bytes of one [`crate::sparse::PackedTnm`] base:
+/// row-aligned base-3 trit bytes + bf16 group scales + full `u64`
+/// pattern words. `group` is gcd-fitted to the row's kept count exactly
+/// as pack time does ([`PackedTnm::fit_group`]).
+pub fn tnm_stream_bytes(
+    rows: usize,
+    cols: usize,
+    n: usize,
+    m: usize,
+    group: usize,
+) -> usize {
+    let fitted = PackedTnm::fit_group(group, n, m, cols);
+    let kpr = cols / m * n;
+    let trits = rows * PackedTnm::trit_row_bytes(kpr);
+    let scales = rows * (kpr / fitted) * 2;
+    let blocks = rows * cols / m;
+    let bits = PatternInfo::new(n, m).codebook_bits();
+    trits + scales + packed_words(blocks, bits) * 8
+}
+
 /// Exact serialized bytes of one `k`:256 structured-outlier side stream
 /// (bf16 value + one-byte index per salient entry).
 pub fn outlier_stream_bytes(rows: usize, cols: usize, k_out: usize) -> usize {
@@ -69,6 +89,22 @@ pub fn model_linear_stream_bytes(
             None => nm_stream_bytes(rows, cols, n, m),
             Some(spec) => qnm_stream_bytes(rows, cols, n, m, spec),
         })
+        .sum()
+}
+
+/// Exact packed-**ternary** base-stream bytes of every prunable linear
+/// of `cfg` under pattern `n:m` — the ternary counterpart of
+/// [`model_linear_stream_bytes`], gated against the written artifact by
+/// `cargo bench --bench f4_coldstart`.
+pub fn model_linear_stream_bytes_ternary(
+    cfg: &ModelConfig,
+    n: usize,
+    m: usize,
+    group: usize,
+) -> usize {
+    cfg.decode_linear_shapes()
+        .iter()
+        .map(|&(rows, cols)| tnm_stream_bytes(rows, cols, n, m, group))
         .sum()
 }
 
@@ -118,6 +154,22 @@ mod tests {
     }
 
     #[test]
+    fn tnm_model_is_byte_exact_against_the_packer() {
+        let mut rng = Rng::new(74);
+        for (rows, cols, n, m) in
+            [(16usize, 256usize, 8usize, 16usize), (8, 512, 4, 8), (7, 64, 2, 4)]
+        {
+            let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+            let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+            let fitted = PackedTnm::fit_group(128, n, m, cols);
+            let p = PackedTnm::from_dense_mask(&w, &mask, n, m, fitted);
+            let measured =
+                p.trits_raw().len() + p.scales_raw().len() * 2 + p.meta_words().len() * 8;
+            assert_eq!(measured, tnm_stream_bytes(rows, cols, n, m, 128), "{n}:{m}");
+        }
+    }
+
+    #[test]
     fn outlier_model_is_byte_exact_against_the_packer() {
         let mut rng = Rng::new(73);
         let w = Tensor::randn(vec![16, 512], 0.05, &mut rng);
@@ -141,6 +193,11 @@ mod tests {
             crate::quant::nm_quant_bits_per_param(8, 16, 4, 128) * (rows * cols) as f64 / 8.0;
         let ratio_q = exact_q as f64 / analytic_q;
         assert!(ratio_q >= 1.0 && ratio_q < 1.005, "{ratio_q}");
+        let exact_t = tnm_stream_bytes(rows, cols, 8, 16, 128);
+        let analytic_t =
+            crate::quant::nm_ternary_bits_per_param(8, 16, 128) * (rows * cols) as f64 / 8.0;
+        let ratio_t = exact_t as f64 / analytic_t;
+        assert!(ratio_t >= 1.0 && ratio_t < 1.005, "{ratio_t}");
     }
 
     #[test]

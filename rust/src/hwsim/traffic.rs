@@ -112,6 +112,40 @@ impl HwModel {
         self.finish(weight_bytes, meta_bytes, act_bytes, macs)
     }
 
+    /// N:M sparse GEMM with **ternary kept values** (the
+    /// [`crate::sparse::PackedTnm`] format): weight bytes are the base-3
+    /// trit stream (5 trits per byte, row-aligned — priced *exactly*,
+    /// `ceil(kept_per_row / 5)` bytes per output row, not the asymptotic
+    /// 1.6 bits/value, so the ±1% measured-vs-modeled gate holds at
+    /// small widths) plus one bf16 scale per `group` kept values, with
+    /// the group gcd-fitted per shape exactly as
+    /// [`crate::sparse::PackedTnm::fit_group`] does at pack time.
+    /// Metadata is the same codebook mask stream as [`Self::sparse_nm`].
+    /// At 8:16 / g128 the operand streams ≈ 1.75 bits/param — 0.11× the
+    /// dense bf16 bytes.
+    pub fn sparse_nm_ternary(
+        &self,
+        g: GemmShape,
+        n: usize,
+        m: usize,
+        group: usize,
+    ) -> TrafficReport {
+        use crate::sparse::PackedTnm;
+        let p = PatternInfo::new(n, m);
+        let kept_per_row = g.k / m * n;
+        let fitted = PackedTnm::fit_group(group, n, m, g.k);
+        let weight_bytes = (g.n * PackedTnm::trit_row_bytes(kept_per_row)) as f64
+            + (g.n * (kept_per_row / fitted) * 2) as f64;
+        let meta_bytes = (g.n * g.k) as f64 * p.bits_per_element_codebook() / 8.0;
+        let act_bytes = ((g.b * g.k) + (g.b * g.n)) as f64 * self.elem_bytes;
+        let macs = if self.sparse_compute {
+            g.macs() as f64 * p.density()
+        } else {
+            g.macs() as f64
+        };
+        self.finish(weight_bytes, meta_bytes, act_bytes, macs)
+    }
+
     /// Structured k:256 outlier side-stream (added to a sparse GEMM when
     /// salient weights are recovered).
     pub fn outlier_overhead(&self, g: GemmShape, k: usize) -> f64 {
@@ -223,6 +257,38 @@ impl HwModel {
         ModelCheck {
             measured_bytes: measured_bytes as f64,
             modeled_bytes: self.nm_quant_operand_bytes(g, n, m, spec),
+        }
+    }
+
+    /// Modeled weight-operand traffic of one packed-ternary N:M GEMM
+    /// (trits + scales + pattern metadata) — the prediction side of the
+    /// measured-vs-modeled comparison for [`crate::sparse::PackedTnm`].
+    pub fn nm_ternary_operand_bytes(
+        &self,
+        g: GemmShape,
+        n: usize,
+        m: usize,
+        group: usize,
+    ) -> f64 {
+        let r = self.sparse_nm_ternary(g, n, m, group);
+        r.weight_bytes + r.meta_bytes
+    }
+
+    /// Measured-vs-modeled for a packed-ternary operand
+    /// ([`crate::sparse::PackedTnm::bytes`] against
+    /// [`Self::nm_ternary_operand_bytes`]); `cargo bench --bench
+    /// f2_spmm` asserts agreement within ±1%.
+    pub fn check_nm_ternary_operand(
+        &self,
+        g: GemmShape,
+        n: usize,
+        m: usize,
+        group: usize,
+        measured_bytes: usize,
+    ) -> ModelCheck {
+        ModelCheck {
+            measured_bytes: measured_bytes as f64,
+            modeled_bytes: self.nm_ternary_operand_bytes(g, n, m, group),
         }
     }
 
@@ -395,6 +461,82 @@ impl HwModel {
         ModelCheck {
             measured_bytes: measured_bytes as f64,
             modeled_bytes: self.decode_quant_operand_bytes(shapes, n, m, k_out, spec),
+        }
+    }
+
+    /// Modeled packed-ternary weight-operand bytes one decode step
+    /// streams across `shapes` (trits + scales + mask metadata, plus the
+    /// `k_out`:256 bf16 outlier side stream when `k_out > 0`). The
+    /// group is gcd-fitted per shape exactly as
+    /// [`crate::sparse::PackedTnm::fit_group`] does at pack time.
+    pub fn decode_ternary_operand_bytes(
+        &self,
+        shapes: &[(usize, usize)],
+        n: usize,
+        m: usize,
+        k_out: usize,
+        group: usize,
+    ) -> f64 {
+        shapes
+            .iter()
+            .map(|&(rows, cols)| {
+                let g = GemmShape::new(1, rows, cols);
+                let mut b = self.nm_ternary_operand_bytes(g, n, m, group);
+                if k_out > 0 {
+                    b += self.outlier_overhead(g, k_out);
+                }
+                b
+            })
+            .sum()
+    }
+
+    /// Modeled end-to-end speedup of one packed-ternary decode step over
+    /// dense — [`Self::decode_speedup`] with the trit operand's
+    /// (smallest) memory time on the packed side.
+    pub fn decode_ternary_speedup(
+        &self,
+        shapes: &[(usize, usize)],
+        n: usize,
+        m: usize,
+        k_out: usize,
+        group: usize,
+    ) -> f64 {
+        let dense: f64 = shapes
+            .iter()
+            .map(|&(rows, cols)| self.dense(GemmShape::new(1, rows, cols)).latency)
+            .sum();
+        let sparse: f64 = shapes
+            .iter()
+            .map(|&(rows, cols)| {
+                let g = GemmShape::new(1, rows, cols);
+                let r = self.sparse_nm_ternary(g, n, m, group);
+                let extra = if k_out > 0 {
+                    self.outlier_overhead(g, k_out) / self.bandwidth
+                } else {
+                    0.0
+                };
+                self.overhead + (r.mem_time + extra).max(r.compute_time)
+            })
+            .sum();
+        dense / sparse
+    }
+
+    /// Measured-vs-modeled for the ternary decode phase
+    /// (`SparseLm::linear_operand_bytes` of a `compress_ternary` model
+    /// against [`Self::decode_ternary_operand_bytes`]). Driven by `cargo
+    /// bench --bench f3_decode`.
+    pub fn check_decode_ternary_operand(
+        &self,
+        shapes: &[(usize, usize)],
+        n: usize,
+        m: usize,
+        k_out: usize,
+        group: usize,
+        measured_bytes: usize,
+    ) -> ModelCheck {
+        ModelCheck {
+            measured_bytes: measured_bytes as f64,
+            modeled_bytes: self.decode_ternary_operand_bytes(shapes, n, m, k_out, group),
         }
     }
 }
@@ -643,6 +785,79 @@ mod tests {
         let s_bf16 = hw.decode_speedup(&shapes, 8, 16, 0);
         let s_q4 = hw.decode_quant_speedup(&shapes, 8, 16, 0, spec);
         assert!(s_q4 > s_bf16, "{s_q4} !> {s_bf16}");
+    }
+
+    #[test]
+    fn ternary_operand_is_sub_2_bits_per_param() {
+        let hw = HwModel::default();
+        let g = GemmShape::new(1, 1024, 1024);
+        let bytes = hw.nm_ternary_operand_bytes(g, 8, 16, 128);
+        let bits_per_param = bytes * 8.0 / (1024.0 * 1024.0);
+        // kept/row = 512 -> 103 trit bytes/row (exact) + 4 scales/row:
+        // 0.875 mask + (103*8 + 64)/1024 = 1.7422 bits/param
+        assert!((bits_per_param - (0.875 + (103.0 * 8.0 + 64.0) / 1024.0)).abs() < 1e-9);
+        assert!(bits_per_param < 2.0, "{bits_per_param}");
+        // ≤ 0.12× dense bf16 — the t158 f2/f3 acceptance bar, at model
+        // level, and strictly under the int4 operand
+        let dense = hw.dense(g).weight_bytes;
+        assert!(bytes <= 0.12 * dense, "{bytes} vs {dense}");
+        assert!(bytes < hw.nm_quant_operand_bytes(g, 8, 16, QuantSpec::int4_g128()));
+    }
+
+    #[test]
+    fn measured_packed_ternary_bytes_match_model() {
+        use crate::pruning::mask_topn_per_block;
+        use crate::sparse::{Kernel, PackedTnm};
+        use crate::tensor::Tensor;
+        use crate::util::Rng;
+        let hw = HwModel::default();
+        let mut rng = Rng::new(29);
+        let (rows, cols) = (256usize, 512usize);
+        let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let group = PackedTnm::fit_group(128, 8, 16, cols);
+        let packed = PackedTnm::from_dense_mask(&w, &mask, 8, 16, group);
+        let g = GemmShape::new(8, rows, cols);
+        let chk = hw.check_nm_ternary_operand(g, 8, 16, 128, packed.operand_bytes());
+        assert!(chk.within(0.01), "ratio {}", chk.ratio());
+    }
+
+    #[test]
+    fn measured_ternary_decode_bytes_match_decode_model() {
+        use crate::model::{ModelConfig, ParamSet, SparseLm};
+        use crate::util::Rng;
+        let hw = HwModel::default();
+        let mut cfg = ModelConfig::preset("tiny").unwrap();
+        cfg.n_layers = 2;
+        cfg.vocab = 512;
+        let mut rng = Rng::new(23);
+        let params = ParamSet::init(&cfg, &mut rng);
+        let shapes = cfg.decode_linear_shapes();
+        for k_out in [0usize, 16] {
+            let lm = SparseLm::compress_ternary(&params, 8, 16, k_out, 128);
+            let chk = hw.check_decode_ternary_operand(
+                &shapes,
+                8,
+                16,
+                k_out,
+                128,
+                lm.linear_operand_bytes(),
+            );
+            assert!(
+                chk.within(0.01),
+                "k_out={k_out}: measured/modeled ratio {}",
+                chk.ratio()
+            );
+            // ternary decode streams ≤ 0.12× the dense bf16 bytes
+            if k_out == 0 {
+                let dense = hw.decode_dense_bytes(&shapes);
+                assert!(lm.linear_operand_bytes() as f64 <= 0.12 * dense);
+            }
+        }
+        // fewer bytes than int4, same macs: modeled speedup must rise
+        let s_q4 = hw.decode_quant_speedup(&shapes, 8, 16, 0, QuantSpec::int4_g128());
+        let s_t = hw.decode_ternary_speedup(&shapes, 8, 16, 0, 128);
+        assert!(s_t > s_q4, "{s_t} !> {s_q4}");
     }
 
     #[test]

@@ -23,7 +23,9 @@
 //! `model/decode.rs`).
 
 use crate::quant::QuantSpec;
-use crate::sparse::{spmm, spmm_parallel, Kernel, PackedLinear, PackedQuantLinear};
+use crate::sparse::{
+    spmm, spmm_parallel, Kernel, PackedLinear, PackedQuantLinear, PackedTernaryLinear,
+};
 use crate::tensor::{dot, Tensor};
 use crate::util::perf;
 
@@ -90,6 +92,25 @@ impl SparseLm {
     ) -> SparseLm {
         Self::build(params, |w| {
             Box::new(PackedQuantLinear::compress(w, &w.map(f32::abs), n, m, k_out, spec))
+        })
+    }
+
+    /// [`Self::compress`] with the kept base values quantized to
+    /// **ternary** {-1, 0, +1} against per-group bf16 scales
+    /// ([`PackedTernaryLinear`], `group` gcd-fitted per layer width);
+    /// outliers stay bf16. This is the `--backend spmm-t` deployment —
+    /// at 8:16 / g128 a decode step streams ≈ 1.75 bits/param, ≤ 0.12×
+    /// the dense bf16 weight traffic (asserted by `cargo bench --bench
+    /// f3_decode`).
+    pub fn compress_ternary(
+        params: &ParamSet,
+        n: usize,
+        m: usize,
+        k_out: usize,
+        group: usize,
+    ) -> SparseLm {
+        Self::build(params, |w| {
+            Box::new(PackedTernaryLinear::compress(w, &w.map(f32::abs), n, m, k_out, group))
         })
     }
 
@@ -519,6 +540,40 @@ mod tests {
         assert!(
             rel_error(&got, &want) < 1e-4,
             "quant packed vs dense-of-dequant: {}",
+            rel_error(&got, &want)
+        );
+    }
+
+    #[test]
+    fn ternary_forward_tracks_dequantized_dense_forward() {
+        // same contract as the int4 path: the ternary kernel adds no
+        // error beyond what the stored {-s, 0, +s} values already carry
+        let cfg = tiny_test_config();
+        let mut rng = Rng::new(19);
+        let params = ParamSet::init_outliers(&cfg, &mut rng);
+        let w = window(&cfg, &mut rng);
+
+        let packed = SparseLm::compress_ternary(&params, 8, 16, 16, 128);
+        let got = packed.lm_nll(&w).unwrap();
+
+        let mut dequant = params.clone();
+        for (_, idx) in params.linear_indices() {
+            let wt = &params.tensors[idx];
+            let layer = crate::sparse::PackedTernaryLinear::compress(
+                wt,
+                &wt.map(f32::abs),
+                8,
+                16,
+                16,
+                128,
+            );
+            dequant.tensors[idx] = layer.to_dense();
+        }
+        let reference = SparseLm::from_params(&dequant);
+        let want = reference.lm_nll(&w).unwrap();
+        assert!(
+            rel_error(&got, &want) < 1e-4,
+            "ternary packed vs dense-of-dequant: {}",
             rel_error(&got, &want)
         );
     }

@@ -127,6 +127,26 @@ impl SpecDecoder {
         Self::new(draft, target)
     }
 
+    /// [`Self::from_dense`] with a **ternary** draft
+    /// ([`SparseLm::compress_ternary`], ≈ 1.75 bits/param at 8:16/g128)
+    /// instead of int4. The acceptance contract is unchanged — exact
+    /// match against the bf16 target keeps the emitted stream lossless —
+    /// so a coarser draft only moves the accept *rate*, trading draft
+    /// bandwidth (0.6× the int4 bytes) against shorter accepted runs.
+    pub fn from_dense_ternary(
+        params: &super::ParamSet,
+        n: usize,
+        m: usize,
+        k_out: usize,
+        group: usize,
+        threads: usize,
+    ) -> crate::Result<SpecDecoder> {
+        let draft =
+            Arc::new(SparseLm::compress_ternary(params, n, m, k_out, group).with_threads(threads));
+        let target = Arc::new(SparseLm::compress(params, n, m, k_out).with_threads(threads));
+        Self::new(draft, target)
+    }
+
     /// The shared model config (draft and target agree by construction).
     pub fn config(&self) -> &ModelConfig {
         &self.target.config
@@ -341,6 +361,20 @@ mod tests {
         let got = spec.generate(&prompt, 70, None, argmax).unwrap();
         assert_eq!(want.len(), 70);
         assert_eq!(got, want, "speculative output diverged from plain greedy");
+    }
+
+    #[test]
+    fn ternary_draft_stream_is_still_bitwise_plain_bf16() {
+        // a coarser draft may accept less, never emit differently: the
+        // exact-match rule makes losslessness draft-independent
+        let cfg = spec_cfg(64);
+        let mut rng = Rng::new(57);
+        let params = ParamSet::init_outliers(&cfg, &mut rng);
+        let spec = SpecDecoder::from_dense_ternary(&params, 8, 16, 16, 128, 1).unwrap();
+        let prompt: Vec<i32> = (0..6).map(|_| rng.below(cfg.vocab) as i32).collect();
+        let want = spec.target().generate(&prompt, 50, None, argmax).unwrap();
+        let got = spec.generate(&prompt, 50, None, argmax).unwrap();
+        assert_eq!(got, want, "ternary-draft output diverged from plain greedy");
     }
 
     #[test]

@@ -41,6 +41,18 @@ pub fn nm_quant_bits_per_param(n: usize, m: usize, bits: u32, group: usize) -> f
     info.bits_per_element_codebook() + info.density() * quant_bits_per_param(bits, group)
 }
 
+/// Bits per (dense) parameter of the ternary sparse format
+/// ([`crate::sparse::PackedTnm`]): codebook mask metadata + 1.6-bit trit
+/// codes (5 trits per byte, log2 not byte-rounded here — this is the
+/// asymptotic model; exact per-row byte accounting lives on the format
+/// itself) and one bf16 scale per `group` kept values, scaled by the
+/// pattern density. 8:16 / g128 → 0.875 + 0.5·(1.6 + 16/128) = 1.7375
+/// — the sub-2-bits/param point the `spmm-t` backend serves from.
+pub fn nm_ternary_bits_per_param(n: usize, m: usize, group: usize) -> f64 {
+    let info = crate::sparse::PatternInfo::new(n, m);
+    info.bits_per_element_codebook() + info.density() * (1.6 + 16.0 / group as f64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -70,5 +82,19 @@ mod tests {
         assert!(nm_quant_bits_per_param(8, 16, 4, 128) < quant_bits_per_param(4, 128));
         // and lands ≤ 0.20× dense bf16 — the f2/f3 acceptance bar
         assert!(nm_quant_bits_per_param(8, 16, 4, 128) / 16.0 <= 0.20);
+    }
+
+    #[test]
+    fn ternary_sparse_accounting() {
+        // 8:16 g128: 0.875 mask + 0.5·(1.6 + 0.125) = 1.7375 bits/param
+        assert!((nm_ternary_bits_per_param(8, 16, 128) - 1.7375).abs() < 1e-12);
+        // ternary undercuts the int4 fused format and the ≤ 0.12× dense
+        // bar the t158 f2/f3 gates enforce
+        assert!(nm_ternary_bits_per_param(8, 16, 128) < nm_quant_bits_per_param(8, 16, 4, 128));
+        assert!(nm_ternary_bits_per_param(8, 16, 128) / 16.0 <= 0.12);
+        // the value-side streams alone (trits + scales, no mask) sit at
+        // 0.8625 ≤ 1.5 bits/param — the "streamed on decode" headline
+        let info = crate::sparse::PatternInfo::new(8, 16);
+        assert!(info.density() * (1.6 + 16.0 / 128.0) <= 1.5);
     }
 }

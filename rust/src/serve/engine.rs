@@ -13,7 +13,7 @@
 //! how to put itself behind a socket.
 //!
 //! The `--repack` refusal moved here with the construction: packing a
-//! *dense* checkpoint through `spmm`/`spmm-q4`/`spec` re-selects
+//! *dense* checkpoint through `spmm`/`spmm-q4`/`spmm-t`/`spec` re-selects
 //! weights by magnitude alone, silently discarding whatever calibrated
 //! pipeline produced the checkpoint, so [`EngineBuilder::build`]
 //! returns the typed [`crate::Error::BadFlag`] unless the caller
@@ -40,6 +40,9 @@ pub enum BackendSpec {
     Spmm,
     /// Fused sparse + int4-under-mask host forward, dequant in-kernel.
     SpmmQ4,
+    /// Fused sparse + ternary-under-mask host forward (5 trits/byte,
+    /// dequant in-kernel) — sub-2-bits/param serving.
+    SpmmT,
     /// Self-speculative: int4 draft proposes, bf16 target verifies.
     Spec,
     /// Exact dense bf16-as-f32 reference forward.
@@ -54,6 +57,7 @@ impl BackendSpec {
         match self {
             BackendSpec::Spmm => "spmm",
             BackendSpec::SpmmQ4 => "spmm-q4",
+            BackendSpec::SpmmT => "spmm-t",
             BackendSpec::Spec => "spec",
             BackendSpec::Dense => "dense",
             BackendSpec::Pjrt => "pjrt",
@@ -66,7 +70,7 @@ impl BackendSpec {
     pub fn needs_repack(self) -> bool {
         matches!(
             self,
-            BackendSpec::Spmm | BackendSpec::SpmmQ4 | BackendSpec::Spec
+            BackendSpec::Spmm | BackendSpec::SpmmQ4 | BackendSpec::SpmmT | BackendSpec::Spec
         )
     }
 
@@ -89,11 +93,12 @@ impl FromStr for BackendSpec {
         Ok(match s {
             "spmm" => BackendSpec::Spmm,
             "spmm-q4" => BackendSpec::SpmmQ4,
+            "spmm-t" => BackendSpec::SpmmT,
             "spec" => BackendSpec::Spec,
             "dense" => BackendSpec::Dense,
             "pjrt" => BackendSpec::Pjrt,
             other => anyhow::bail!(
-                "unknown --backend {other} (expected spmm|spmm-q4|spec|dense|pjrt)"
+                "unknown --backend {other} (expected spmm|spmm-q4|spmm-t|spec|dense|pjrt)"
             ),
         })
     }
@@ -106,6 +111,8 @@ pub struct EngineBuilder {
     pattern: (usize, usize),
     outliers: usize,
     quant: QuantSpec,
+    /// ternary scale group (`spmm-t`), gcd-fitted per layer width
+    tgroup: usize,
     threads: usize,
     repack_acknowledged: bool,
     artifacts: String,
@@ -117,6 +124,7 @@ impl Default for EngineBuilder {
             pattern: (8, 16),
             outliers: 16,
             quant: QuantSpec::new(4, 128),
+            tgroup: 128,
             threads: crate::util::pool::default_parallelism(),
             repack_acknowledged: false,
             artifacts: "artifacts".into(),
@@ -144,6 +152,12 @@ impl EngineBuilder {
     /// Group-quantization of kept values (`spmm-q4` / `spec` draft).
     pub fn quant(mut self, spec: QuantSpec) -> EngineBuilder {
         self.quant = spec;
+        self
+    }
+
+    /// Ternary scale group (`spmm-t`): kept values per bf16 scale.
+    pub fn ternary_group(mut self, group: usize) -> EngineBuilder {
+        self.tgroup = group;
         self
     }
 
@@ -223,6 +237,21 @@ impl EngineBuilder {
                      packed-quant linear traffic {} KiB (dense {} KiB)",
                     q.bits,
                     q.group,
+                    lm.linear_operand_bytes() / 1024,
+                    lm.dense_linear_bytes() / 1024
+                );
+                Ok(Engine::Spmm { lm: Arc::new(lm), desc })
+            }
+            BackendSpec::SpmmT => {
+                self.require_repack(spec)?;
+                let lm = SparseLm::compress_ternary(&params, n, m, k, self.tgroup)
+                    .with_threads(self.threads);
+                let desc = format!(
+                    "packing checkpoint to {n}:{m} + {k}:256 with ternary g{} kept values \
+                     (magnitude selection, 5 trits/byte, dequant in-kernel, --repack \
+                     acknowledged)\n\
+                     packed-ternary linear traffic {} KiB (dense {} KiB)",
+                    self.tgroup,
                     lm.linear_operand_bytes() / 1024,
                     lm.dense_linear_bytes() / 1024
                 );
@@ -361,6 +390,7 @@ mod tests {
         for b in [
             BackendSpec::Spmm,
             BackendSpec::SpmmQ4,
+            BackendSpec::SpmmT,
             BackendSpec::Spec,
             BackendSpec::Dense,
             BackendSpec::Pjrt,
@@ -374,7 +404,7 @@ mod tests {
         let err = "frob".parse::<BackendSpec>().unwrap_err().to_string();
         assert_eq!(
             err,
-            "unknown --backend frob (expected spmm|spmm-q4|spec|dense|pjrt)"
+            "unknown --backend frob (expected spmm|spmm-q4|spmm-t|spec|dense|pjrt)"
         );
     }
 
@@ -418,5 +448,16 @@ mod tests {
         assert!(!BackendSpec::Pjrt.supports_generate());
         assert!(!BackendSpec::Pjrt.needs_repack());
         assert!(BackendSpec::SpmmQ4.needs_repack());
+        assert!(BackendSpec::SpmmT.needs_repack());
+    }
+
+    #[test]
+    fn ternary_backend_builds_and_reports_traffic() {
+        let engine = EngineBuilder::new()
+            .acknowledge_repack(true)
+            .build(BackendSpec::SpmmT, tiny_params(), "tiny")
+            .unwrap();
+        assert!(engine.supports_generate());
+        assert!(engine.describe().contains("ternary g128"));
     }
 }

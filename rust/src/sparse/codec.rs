@@ -1,0 +1,207 @@
+//! The **value-codec seam**: one set of micro-kernel loop bodies for
+//! every combinadic-masked packed format.
+//!
+//! [`PackedNm`](super::PackedNm), [`PackedQnm`](super::PackedQnm),
+//! [`PackedVnm`](super::PackedVnm) and [`PackedTnm`](super::PackedTnm)
+//! share the entire spmm loop structure — enumerate `(1, m)` blocks
+//! row-major, unrank the combinadic pattern id, sweep activation rows
+//! over the decoded block — and differ **only** in how a block's `n`
+//! kept values are materialized as f32 (bf16 widen, int dequant, tile
+//! lookup, trit decode) and where the block's rank lives in the pattern
+//! stream (per-row for the row-major formats, shared across `v` rows
+//! for the V-tiled one). [`ValueCodec`] captures exactly that
+//! difference; [`accumulate_rows_codec`] / [`accumulate_vec_codec`] are
+//! the Gemv / small-batch / prefill-GEMM loop orders written **once**,
+//! generic over the codec. The per-format [`super::Kernel`] impls in
+//! [`mod@super::spmm`] are thin adapters onto these two functions.
+//!
+//! Bitwise contract: for every output element the generic loops
+//! accumulate blocks ascending, in-block terms ascending — the same
+//! order as the retained per-row reference kernels
+//! (`PackedNm::accumulate_rows_rowwise`,
+//! `PackedQnm::accumulate_rows_rowwise`) and the pre-seam per-format
+//! loop bodies they replaced. `tests/spmm_tiling.rs` and
+//! `tests/quant_pack.rs` property-check the equality across formats ×
+//! batch 1..64 × worker counts 1..8.
+
+use super::bits::read_bits;
+use super::patterns::{PatternInfo, Unranker};
+use super::spmm::ROW_TILE;
+use crate::tensor::Tensor;
+
+/// The only thing the packed combinadic formats differ in: where a
+/// block's pattern rank lives and how its kept values widen to f32.
+///
+/// Implementations also expose their value-side storage accounting
+/// (`values_bytes`, `bits_per_kept`) so stream-breakdown reporting (the
+/// `inspect` CLI, [`crate::store`]) needs no per-format matches. Length
+/// validation of decoder-side streams stays on each format's
+/// `from_raw_parts` (all of them share the
+/// `super::bits::packed_words` rule for the pattern stream).
+pub trait ValueCodec: Send + Sync {
+    /// The N:M pattern of the combinadic mask stream.
+    fn pattern(&self) -> &PatternInfo;
+
+    /// `(out_features, in_features)` dense shape.
+    fn dims(&self) -> (usize, usize);
+
+    /// Bit-packed combinadic pattern ids, `codebook_bits` each.
+    fn meta_words(&self) -> &[u64];
+
+    /// Index of block `(r, bblk)`'s rank within the pattern stream —
+    /// `r * (cols/m) + bblk` for the row-major formats, shared across
+    /// the `v` rows of a tile for the V-tiled one.
+    fn rank_index(&self, r: usize, bblk: usize) -> usize;
+
+    /// Materialize the `n` kept values of block `(r, bblk)` as f32 —
+    /// the per-format decode step every loop order shares, so all
+    /// dispatch paths see identical floats.
+    fn decode_block_into(&self, r: usize, bblk: usize, out: &mut [f32]);
+
+    /// Serialized bytes of the value-side streams (values / codes +
+    /// scales / trits + scales — everything except the pattern stream).
+    fn values_bytes(&self) -> usize;
+
+    /// Stored bits per kept value of the value-side streams (16 for
+    /// bf16, `bits + 16/group` quantized, 1.6 + 16/group ternary).
+    fn bits_per_kept(&self) -> f64;
+}
+
+/// Cache-blocked multi-row loop order, generic over the codec: decode
+/// `wt` weight rows' worth of one block column into a stack tile
+/// (`wt == 1` is the small-batch order, `wt == WEIGHT_TILE` the
+/// prefill-GEMM order, `wt == v` the V-tiled format's natural tile),
+/// then sweep [`ROW_TILE`]-wide groups of activation rows over the
+/// decoded tile. Consecutive tile rows sharing one rank (the V:N:M
+/// layout) reuse the previous row's unranked indices instead of
+/// re-unranking.
+pub(crate) fn accumulate_rows_codec<C: ValueCodec + ?Sized>(
+    c: &C,
+    x: &Tensor,
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+    wt: usize,
+) {
+    let p = c.pattern();
+    let (n, m) = (p.n, p.m);
+    let bits = p.codebook_bits();
+    let (rows, cols) = c.dims();
+    let (bsz, cin) = x.dims2();
+    debug_assert_eq!(cin, cols);
+    debug_assert!(r1 <= rows && r0 <= r1);
+    debug_assert_eq!(out.len(), bsz * (r1 - r0));
+    let bpr = cols / m;
+    let unranker = Unranker::new(m, n);
+    let width = r1 - r0;
+    let xd = x.data();
+    let meta = c.meta_words();
+    // decoded (indices, materialized values) for one weight tile × block
+    let mut tidx = vec![0usize; wt * n];
+    let mut tval = vec![0.0f32; wt * n];
+    let mut rt = r0;
+    while rt < r1 {
+        let hi = (rt + wt).min(r1);
+        let th = hi - rt;
+        for bblk in 0..bpr {
+            let mut prev_ri = usize::MAX;
+            for (ti, r) in (rt..hi).enumerate() {
+                let ri = c.rank_index(r, bblk);
+                if ti > 0 && ri == prev_ri {
+                    // tile-shared rank: copy the previous row's indices
+                    let (done, rest) = tidx.split_at_mut(ti * n);
+                    rest[..n].copy_from_slice(&done[(ti - 1) * n..]);
+                } else {
+                    let rank = read_bits(meta, ri * bits as usize, bits);
+                    unranker.unrank_into(rank, &mut tidx[ti * n..ti * n + n]);
+                }
+                prev_ri = ri;
+                c.decode_block_into(r, bblk, &mut tval[ti * n..ti * n + n]);
+            }
+            let base = bblk * m;
+            let mut i = 0usize;
+            while i + ROW_TILE <= bsz {
+                let x0 = &xd[i * cin + base..i * cin + base + m];
+                let x1 = &xd[(i + 1) * cin + base..(i + 1) * cin + base + m];
+                let x2 = &xd[(i + 2) * cin + base..(i + 2) * cin + base + m];
+                let x3 = &xd[(i + 3) * cin + base..(i + 3) * cin + base + m];
+                for ti in 0..th {
+                    let iv = &tidx[ti * n..ti * n + n];
+                    let vv = &tval[ti * n..ti * n + n];
+                    let (mut a0, mut a1) = (0.0f32, 0.0f32);
+                    let (mut a2, mut a3) = (0.0f32, 0.0f32);
+                    for t in 0..n {
+                        let v = vv[t];
+                        let j = iv[t];
+                        a0 += v * x0[j];
+                        a1 += v * x1[j];
+                        a2 += v * x2[j];
+                        a3 += v * x3[j];
+                    }
+                    let o = rt + ti - r0;
+                    out[i * width + o] += a0;
+                    out[(i + 1) * width + o] += a1;
+                    out[(i + 2) * width + o] += a2;
+                    out[(i + 3) * width + o] += a3;
+                }
+                i += ROW_TILE;
+            }
+            while i < bsz {
+                let xr = &xd[i * cin + base..i * cin + base + m];
+                for ti in 0..th {
+                    let iv = &tidx[ti * n..ti * n + n];
+                    let vv = &tval[ti * n..ti * n + n];
+                    let mut acc = 0.0f32;
+                    for t in 0..n {
+                        acc += vv[t] * xr[iv[t]];
+                    }
+                    out[i * width + (rt + ti - r0)] += acc;
+                }
+                i += 1;
+            }
+        }
+        rt = hi;
+    }
+}
+
+/// The GEMV loop order, generic over the codec — the decode-step path.
+/// Allocation-free: one block's scratch lives on the stack (every
+/// packed format asserts `m ≤ 64` ⇒ `n ≤ 64` at pack time). Per output
+/// row the accumulation order (blocks ascending, in-block terms
+/// ascending) matches [`accumulate_rows_codec`] exactly.
+pub(crate) fn accumulate_vec_codec<C: ValueCodec + ?Sized>(
+    c: &C,
+    x: &[f32],
+    r0: usize,
+    r1: usize,
+    out: &mut [f32],
+) {
+    let p = c.pattern();
+    let (n, m) = (p.n, p.m);
+    let bits = p.codebook_bits();
+    let (rows, cols) = c.dims();
+    debug_assert_eq!(x.len(), cols);
+    debug_assert!(r1 <= rows && r0 <= r1);
+    debug_assert_eq!(out.len(), r1 - r0);
+    let bpr = cols / m;
+    let unranker = Unranker::new(m, n);
+    let meta = c.meta_words();
+    let mut idx_buf = [0usize; 64];
+    let mut val_buf = [0.0f32; 64];
+    let idx = &mut idx_buf[..n];
+    let vals = &mut val_buf[..n];
+    for r in r0..r1 {
+        for bblk in 0..bpr {
+            let ri = c.rank_index(r, bblk);
+            let rank = read_bits(meta, ri * bits as usize, bits);
+            unranker.unrank_into(rank, idx);
+            c.decode_block_into(r, bblk, vals);
+            let xblk = &x[bblk * m..(bblk + 1) * m];
+            let mut acc = 0.0f32;
+            for t in 0..n {
+                acc += vals[t] * xblk[idx[t]];
+            }
+            out[r - r0] += acc;
+        }
+    }
+}

@@ -1,9 +1,13 @@
 //! Sparse storage substrates **and the decode-free GEMM that consumes
 //! them**: the N:M pattern codebook, packed N:M weight storage (bf16
-//! values in [`PackedNm`], int-quantized values in [`PackedQnm`]), V:N:M
-//! tiles, the structured k:256 outlier format, CSR for the unstructured
-//! baseline, and the [`Kernel`] trait + [`spmm()`]/[`spmm_parallel()`]
-//! hot path that computes `y = x @ Wᵀ` straight from packed bits.
+//! values in [`PackedNm`], int-quantized values in [`PackedQnm`],
+//! 1.58-bit ternary values in [`PackedTnm`]), V:N:M tiles, the
+//! structured k:256 outlier format, CSR for the unstructured baseline,
+//! and the [`Kernel`] trait + [`spmm()`]/[`spmm_parallel()`] hot path
+//! that computes `y = x @ Wᵀ` straight from packed bits. The packed
+//! formats differ only in their value decode step, captured by the
+//! [`ValueCodec`] seam ([`mod@codec`]) — the micro-kernel loop bodies
+//! exist once, generic over the codec.
 //!
 //! The formats implement the storage-accounting side of the paper's §2
 //! (Table 1 bits/element, configuration counts) and the formats
@@ -18,6 +22,7 @@
 //! walkthrough: `docs/ARCHITECTURE.md`.
 
 pub(crate) mod bits;
+pub mod codec;
 pub mod csr;
 pub mod nm;
 pub mod outliers;
@@ -25,8 +30,10 @@ pub mod patterns;
 pub mod qnm;
 pub mod spmm;
 pub mod storage;
+pub mod tnm;
 pub mod vnm;
 
+pub use codec::ValueCodec;
 pub use csr::Csr;
 pub use nm::PackedNm;
 pub use outliers::StructuredOutliers;
@@ -35,8 +42,9 @@ pub use qnm::PackedQnm;
 pub use storage::Storage;
 pub use spmm::{
     dispatch, spmm, spmm_parallel, spmm_parallel_scoped, spmm_vec, MicroKernel, PackedLinear,
-    PackedQuantLinear, GEMM_MIN_ROWS, ROW_TILE, WEIGHT_TILE,
+    PackedQuantLinear, PackedTernaryLinear, GEMM_MIN_ROWS, ROW_TILE, WEIGHT_TILE,
 };
+pub use tnm::PackedTnm;
 pub use vnm::{vnm_select, PackedVnm};
 
 use crate::tensor::Tensor;

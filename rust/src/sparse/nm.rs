@@ -251,6 +251,49 @@ impl PackedNm {
     pub fn is_mapped(&self) -> bool {
         self.values.is_mapped() && self.meta.is_mapped()
     }
+
+    /// Widen the `n` bf16 values of block `(r, bblk)` into f32 — the
+    /// [`super::codec::ValueCodec`] decode step.
+    #[inline]
+    pub(crate) fn decode_block_into(&self, r: usize, bblk: usize, out: &mut [f32]) {
+        let n = self.pattern.n;
+        let vi = (r * (self.cols / self.pattern.m) + bblk) * n;
+        for (t, o) in out.iter_mut().enumerate().take(n) {
+            *o = bf16_to_f32(self.values[vi + t]);
+        }
+    }
+}
+
+impl super::codec::ValueCodec for PackedNm {
+    fn pattern(&self) -> &PatternInfo {
+        &self.pattern
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn meta_words(&self) -> &[u64] {
+        &self.meta
+    }
+
+    #[inline]
+    fn rank_index(&self, r: usize, bblk: usize) -> usize {
+        r * (self.cols / self.pattern.m) + bblk
+    }
+
+    #[inline]
+    fn decode_block_into(&self, r: usize, bblk: usize, out: &mut [f32]) {
+        PackedNm::decode_block_into(self, r, bblk, out)
+    }
+
+    fn values_bytes(&self) -> usize {
+        self.values.len() * 2
+    }
+
+    fn bits_per_kept(&self) -> f64 {
+        16.0
+    }
 }
 
 #[cfg(test)]

@@ -32,8 +32,8 @@ use crate::quant::{GroupQuant, QuantSpec};
 use crate::tensor::{bf16_to_f32, Tensor};
 
 /// Greatest common divisor (used to fit a quant group to a row's kept
-/// count).
-fn gcd(a: usize, b: usize) -> usize {
+/// count — here and by [`super::PackedTnm::fit_group`]).
+pub(crate) fn gcd(a: usize, b: usize) -> usize {
     let (mut a, mut b) = (a, b);
     while b != 0 {
         let t = a % b;
@@ -329,6 +329,39 @@ impl PackedQnm {
     /// straight from a live mmap (the `.spak` zero-copy property).
     pub fn is_mapped(&self) -> bool {
         self.quant.is_mapped() && self.meta.is_mapped()
+    }
+}
+
+impl super::codec::ValueCodec for PackedQnm {
+    fn pattern(&self) -> &PatternInfo {
+        &self.pattern
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn meta_words(&self) -> &[u64] {
+        &self.meta
+    }
+
+    #[inline]
+    fn rank_index(&self, r: usize, bblk: usize) -> usize {
+        r * (self.cols / self.pattern.m) + bblk
+    }
+
+    #[inline]
+    fn decode_block_into(&self, r: usize, bblk: usize, out: &mut [f32]) {
+        self.dequant_block_into(r, bblk, out);
+    }
+
+    fn values_bytes(&self) -> usize {
+        self.value_bytes()
+    }
+
+    fn bits_per_kept(&self) -> f64 {
+        let spec = self.quant.spec;
+        spec.bits as f64 + 16.0 / spec.group as f64
     }
 }
 

@@ -14,11 +14,15 @@
 //!
 //! * [`Kernel`] impls for [`PackedNm`] (per-row N:M), [`PackedQnm`]
 //!   (N:M with int-quantized values, dequantized in-kernel),
-//!   [`PackedVnm`] (V-row tiles), [`StructuredOutliers`] and [`Csr`]
-//!   (salient side streams), dense [`Tensor`] (reference),
+//!   [`PackedTnm`] (1.58-bit ternary values), [`PackedVnm`] (V-row
+//!   tiles) — all four are thin adapters over the codec-generic loop
+//!   bodies in [`mod@super::codec`] — plus [`StructuredOutliers`] and
+//!   [`Csr`] (salient side streams), dense [`Tensor`] (reference),
 //!   [`PackedLinear`] (N:M base + structured outliers — the paper's
-//!   full format) and [`PackedQuantLinear`] (quantized base + bf16
-//!   outliers — the memory-equivalent deployment);
+//!   full format), [`PackedQuantLinear`] (quantized base + bf16
+//!   outliers — the memory-equivalent deployment) and
+//!   [`PackedTernaryLinear`] (ternary base + bf16 outliers — the
+//!   sub-2-bit deployment);
 //! * [`spmm()`] — single-thread driver;
 //! * [`spmm_vec()`] — one-activation-row GEMV driver (the decode step;
 //!   [`Kernel::accumulate_vec`] skips the batch indirection entirely);
@@ -49,11 +53,13 @@
 //! with batch size while the dense path's traffic does not.
 
 use super::bits::read_bits;
+use super::codec::{accumulate_rows_codec, accumulate_vec_codec};
 use super::csr::Csr;
 use super::nm::PackedNm;
 use super::outliers::StructuredOutliers;
 use super::patterns::Unranker;
 use super::qnm::PackedQnm;
+use super::tnm::PackedTnm;
 use super::vnm::PackedVnm;
 use super::Kernel;
 use crate::pruning::{mask_excluding, mask_topn_per_block};
@@ -287,94 +293,6 @@ impl PackedNm {
         }
     }
 
-    /// Cache-blocked multi-row kernel: decode `wt` weight rows' worth of
-    /// one block column into a stack tile (`wt == 1` is the small-batch
-    /// order, `wt == WEIGHT_TILE` the prefill-GEMM order), then sweep
-    /// [`ROW_TILE`]-wide groups of activation rows over the decoded
-    /// tile. Per output element the accumulation order matches
-    /// [`Self::accumulate_rows_rowwise`] exactly (blocks ascending,
-    /// in-block terms ascending), so the paths are bitwise equal.
-    fn accumulate_rows_tiled(
-        &self,
-        x: &Tensor,
-        r0: usize,
-        r1: usize,
-        out: &mut [f32],
-        wt: usize,
-    ) {
-        let (n, m) = (self.pattern.n, self.pattern.m);
-        let bits = self.pattern.codebook_bits();
-        let (bsz, cin) = x.dims2();
-        debug_assert_eq!(cin, self.cols);
-        debug_assert!(r1 <= self.rows && r0 <= r1);
-        debug_assert_eq!(out.len(), bsz * (r1 - r0));
-        let bpr = self.cols / m;
-        let unranker = Unranker::new(m, n);
-        let width = r1 - r0;
-        let xd = x.data();
-        let values = self.values_raw();
-        let meta = self.meta_words();
-        // decoded (indices, widened values) for one weight tile × block
-        let mut tidx = vec![0usize; wt * n];
-        let mut tval = vec![0.0f32; wt * n];
-        let mut rt = r0;
-        while rt < r1 {
-            let hi = (rt + wt).min(r1);
-            let th = hi - rt;
-            for bblk in 0..bpr {
-                for (ti, r) in (rt..hi).enumerate() {
-                    let rank = read_bits(meta, (r * bpr + bblk) * bits as usize, bits);
-                    unranker.unrank_into(rank, &mut tidx[ti * n..ti * n + n]);
-                    let vi = (r * bpr + bblk) * n;
-                    for t in 0..n {
-                        tval[ti * n + t] = bf16_to_f32(values[vi + t]);
-                    }
-                }
-                let base = bblk * m;
-                let mut i = 0usize;
-                while i + ROW_TILE <= bsz {
-                    let x0 = &xd[i * cin + base..i * cin + base + m];
-                    let x1 = &xd[(i + 1) * cin + base..(i + 1) * cin + base + m];
-                    let x2 = &xd[(i + 2) * cin + base..(i + 2) * cin + base + m];
-                    let x3 = &xd[(i + 3) * cin + base..(i + 3) * cin + base + m];
-                    for ti in 0..th {
-                        let iv = &tidx[ti * n..ti * n + n];
-                        let vv = &tval[ti * n..ti * n + n];
-                        let (mut a0, mut a1) = (0.0f32, 0.0f32);
-                        let (mut a2, mut a3) = (0.0f32, 0.0f32);
-                        for t in 0..n {
-                            let v = vv[t];
-                            let j = iv[t];
-                            a0 += v * x0[j];
-                            a1 += v * x1[j];
-                            a2 += v * x2[j];
-                            a3 += v * x3[j];
-                        }
-                        let o = rt + ti - r0;
-                        out[i * width + o] += a0;
-                        out[(i + 1) * width + o] += a1;
-                        out[(i + 2) * width + o] += a2;
-                        out[(i + 3) * width + o] += a3;
-                    }
-                    i += ROW_TILE;
-                }
-                while i < bsz {
-                    let xr = &xd[i * cin + base..i * cin + base + m];
-                    for ti in 0..th {
-                        let iv = &tidx[ti * n..ti * n + n];
-                        let vv = &tval[ti * n..ti * n + n];
-                        let mut acc = 0.0f32;
-                        for t in 0..n {
-                            acc += vv[t] * xr[iv[t]];
-                        }
-                        out[i * width + (rt + ti - r0)] += acc;
-                    }
-                    i += 1;
-                }
-            }
-            rt = hi;
-        }
-    }
 }
 
 impl Kernel for PackedNm {
@@ -394,38 +312,13 @@ impl Kernel for PackedNm {
         let (bsz, _) = x.dims2();
         match dispatch(bsz) {
             MicroKernel::Gemv => self.accumulate_vec(&x.data()[..self.cols], r0, r1, out),
-            MicroKernel::SmallBatch => self.accumulate_rows_tiled(x, r0, r1, out, 1),
-            MicroKernel::TiledGemm => self.accumulate_rows_tiled(x, r0, r1, out, WEIGHT_TILE),
+            MicroKernel::SmallBatch => accumulate_rows_codec(self, x, r0, r1, out, 1),
+            MicroKernel::TiledGemm => accumulate_rows_codec(self, x, r0, r1, out, WEIGHT_TILE),
         }
     }
 
     fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
-        let (n, m) = (self.pattern.n, self.pattern.m);
-        let bits = self.pattern.codebook_bits();
-        debug_assert_eq!(x.len(), self.cols);
-        debug_assert!(r1 <= self.rows && r0 <= r1);
-        debug_assert_eq!(out.len(), r1 - r0);
-        let bpr = self.cols / m;
-        let unranker = Unranker::new(m, n);
-        let values = self.values_raw();
-        let meta = self.meta_words();
-        let mut idx = vec![0usize; n];
-        for r in r0..r1 {
-            let mut pos = r * bpr * bits as usize;
-            let mut vi = r * bpr * n;
-            for bblk in 0..bpr {
-                let rank = read_bits(meta, pos, bits);
-                pos += bits as usize;
-                unranker.unrank_into(rank, &mut idx);
-                let xblk = &x[bblk * m..(bblk + 1) * m];
-                let mut acc = 0.0f32;
-                for t in 0..n {
-                    acc += bf16_to_f32(values[vi + t]) * xblk[idx[t]];
-                }
-                vi += n;
-                out[r - r0] += acc;
-            }
-        }
+        accumulate_vec_codec(self, x, r0, r1, out)
     }
 }
 
@@ -470,91 +363,6 @@ impl PackedQnm {
         }
     }
 
-    /// Cache-blocked multi-row kernel, same tiling scheme as the bf16
-    /// format's `accumulate_rows_tiled`: decode `wt` weight rows'
-    /// worth of one block column — **mask unrank + int4 dequant, once
-    /// per weight tile** — then sweep [`ROW_TILE`]-wide groups of
-    /// activation rows over the decoded tile. Accumulation order per
-    /// output element matches [`Self::accumulate_rows_rowwise`] exactly
-    /// (blocks ascending, in-block terms ascending), so all dispatch
-    /// paths are bitwise interchangeable.
-    fn accumulate_rows_tiled(
-        &self,
-        x: &Tensor,
-        r0: usize,
-        r1: usize,
-        out: &mut [f32],
-        wt: usize,
-    ) {
-        let (n, m) = (self.pattern.n, self.pattern.m);
-        let bits = self.pattern.codebook_bits();
-        let (bsz, cin) = x.dims2();
-        debug_assert_eq!(cin, self.cols);
-        debug_assert!(r1 <= self.rows && r0 <= r1);
-        debug_assert_eq!(out.len(), bsz * (r1 - r0));
-        let bpr = self.cols / m;
-        let unranker = Unranker::new(m, n);
-        let width = r1 - r0;
-        let xd = x.data();
-        let meta = self.meta_words();
-        // decoded (indices, dequantized values) for one weight tile × block
-        let mut tidx = vec![0usize; wt * n];
-        let mut tval = vec![0.0f32; wt * n];
-        let mut rt = r0;
-        while rt < r1 {
-            let hi = (rt + wt).min(r1);
-            let th = hi - rt;
-            for bblk in 0..bpr {
-                for (ti, r) in (rt..hi).enumerate() {
-                    let rank = read_bits(meta, (r * bpr + bblk) * bits as usize, bits);
-                    unranker.unrank_into(rank, &mut tidx[ti * n..ti * n + n]);
-                    self.dequant_block_into(r, bblk, &mut tval[ti * n..ti * n + n]);
-                }
-                let base = bblk * m;
-                let mut i = 0usize;
-                while i + ROW_TILE <= bsz {
-                    let x0 = &xd[i * cin + base..i * cin + base + m];
-                    let x1 = &xd[(i + 1) * cin + base..(i + 1) * cin + base + m];
-                    let x2 = &xd[(i + 2) * cin + base..(i + 2) * cin + base + m];
-                    let x3 = &xd[(i + 3) * cin + base..(i + 3) * cin + base + m];
-                    for ti in 0..th {
-                        let iv = &tidx[ti * n..ti * n + n];
-                        let vv = &tval[ti * n..ti * n + n];
-                        let (mut a0, mut a1) = (0.0f32, 0.0f32);
-                        let (mut a2, mut a3) = (0.0f32, 0.0f32);
-                        for t in 0..n {
-                            let v = vv[t];
-                            let j = iv[t];
-                            a0 += v * x0[j];
-                            a1 += v * x1[j];
-                            a2 += v * x2[j];
-                            a3 += v * x3[j];
-                        }
-                        let o = rt + ti - r0;
-                        out[i * width + o] += a0;
-                        out[(i + 1) * width + o] += a1;
-                        out[(i + 2) * width + o] += a2;
-                        out[(i + 3) * width + o] += a3;
-                    }
-                    i += ROW_TILE;
-                }
-                while i < bsz {
-                    let xr = &xd[i * cin + base..i * cin + base + m];
-                    for ti in 0..th {
-                        let iv = &tidx[ti * n..ti * n + n];
-                        let vv = &tval[ti * n..ti * n + n];
-                        let mut acc = 0.0f32;
-                        for t in 0..n {
-                            acc += vv[t] * xr[iv[t]];
-                        }
-                        out[i * width + (rt + ti - r0)] += acc;
-                    }
-                    i += 1;
-                }
-            }
-            rt = hi;
-        }
-    }
 }
 
 impl Kernel for PackedQnm {
@@ -574,42 +382,13 @@ impl Kernel for PackedQnm {
         let (bsz, _) = x.dims2();
         match dispatch(bsz) {
             MicroKernel::Gemv => self.accumulate_vec(&x.data()[..self.cols], r0, r1, out),
-            MicroKernel::SmallBatch => self.accumulate_rows_tiled(x, r0, r1, out, 1),
-            MicroKernel::TiledGemm => self.accumulate_rows_tiled(x, r0, r1, out, WEIGHT_TILE),
+            MicroKernel::SmallBatch => accumulate_rows_codec(self, x, r0, r1, out, 1),
+            MicroKernel::TiledGemm => accumulate_rows_codec(self, x, r0, r1, out, WEIGHT_TILE),
         }
     }
 
     fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
-        let (n, m) = (self.pattern.n, self.pattern.m);
-        let bits = self.pattern.codebook_bits();
-        debug_assert_eq!(x.len(), self.cols);
-        debug_assert!(r1 <= self.rows && r0 <= r1);
-        debug_assert_eq!(out.len(), r1 - r0);
-        let bpr = self.cols / m;
-        let unranker = Unranker::new(m, n);
-        let meta = self.meta_words();
-        // allocation-free: the decode-step GEMV runs once per output
-        // token per linear, so the block scratch lives on the stack
-        // (m ≤ 64 ⇒ n ≤ 64, asserted at pack time)
-        let mut idx_buf = [0usize; 64];
-        let mut val_buf = [0.0f32; 64];
-        let idx = &mut idx_buf[..n];
-        let vals = &mut val_buf[..n];
-        for r in r0..r1 {
-            let mut pos = r * bpr * bits as usize;
-            for bblk in 0..bpr {
-                let rank = read_bits(meta, pos, bits);
-                pos += bits as usize;
-                unranker.unrank_into(rank, idx);
-                self.dequant_block_into(r, bblk, vals);
-                let xblk = &x[bblk * m..(bblk + 1) * m];
-                let mut acc = 0.0f32;
-                for t in 0..n {
-                    acc += vals[t] * xblk[idx[t]];
-                }
-                out[r - r0] += acc;
-            }
-        }
+        accumulate_vec_codec(self, x, r0, r1, out)
     }
 }
 
@@ -633,117 +412,47 @@ impl Kernel for PackedVnm {
     }
 
     fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
-        let (bsz, cin) = x.dims2();
+        let (bsz, _) = x.dims2();
         if dispatch(bsz) == MicroKernel::Gemv {
             return self.accumulate_vec(&x.data()[..self.cols], r0, r1, out);
         }
         // the V-row tile IS the natural weight tile here: one pattern
-        // decode serves v rows, so both multi-row families share the
-        // tiled-by-v order with the ROW_TILE-wide j-loop
-        let (n, m) = (self.pattern.n, self.pattern.m);
-        let bits = self.pattern.codebook_bits();
-        debug_assert_eq!(cin, self.cols);
-        debug_assert_eq!(out.len(), bsz * (r1 - r0));
-        let bpr = self.cols / m;
-        let unranker = Unranker::new(m, n);
-        let width = r1 - r0;
-        let xd = x.data();
-        let values = self.values_raw();
-        let meta = self.meta_words();
-        let mut idx = vec![0usize; n];
-        let mut tval = vec![0.0f32; self.v * n];
-        // first tile covering r0 (ranges from spmm_parallel are v-aligned;
-        // arbitrary ranges still work, decoding the partial tile)
-        let mut t0 = r0 - r0 % self.v;
-        while t0 < r1 {
-            let tile_row = t0 / self.v;
-            let lo = t0.max(r0);
-            let hi = (t0 + self.v).min(r1);
-            for bblk in 0..bpr {
-                let ti = tile_row * bpr + bblk;
-                let rank = read_bits(meta, ti * bits as usize, bits);
-                unranker.unrank_into(rank, &mut idx);
-                for r in lo..hi {
-                    let vi = ti * self.v * n + (r - t0) * n;
-                    for t in 0..n {
-                        tval[(r - lo) * n + t] = bf16_to_f32(values[vi + t]);
-                    }
-                }
-                let base = bblk * m;
-                let mut i = 0usize;
-                while i + ROW_TILE <= bsz {
-                    let x0 = &xd[i * cin + base..i * cin + base + m];
-                    let x1 = &xd[(i + 1) * cin + base..(i + 1) * cin + base + m];
-                    let x2 = &xd[(i + 2) * cin + base..(i + 2) * cin + base + m];
-                    let x3 = &xd[(i + 3) * cin + base..(i + 3) * cin + base + m];
-                    for r in lo..hi {
-                        let vv = &tval[(r - lo) * n..(r - lo) * n + n];
-                        let (mut a0, mut a1) = (0.0f32, 0.0f32);
-                        let (mut a2, mut a3) = (0.0f32, 0.0f32);
-                        for t in 0..n {
-                            let v = vv[t];
-                            let j = idx[t];
-                            a0 += v * x0[j];
-                            a1 += v * x1[j];
-                            a2 += v * x2[j];
-                            a3 += v * x3[j];
-                        }
-                        let o = r - r0;
-                        out[i * width + o] += a0;
-                        out[(i + 1) * width + o] += a1;
-                        out[(i + 2) * width + o] += a2;
-                        out[(i + 3) * width + o] += a3;
-                    }
-                    i += ROW_TILE;
-                }
-                while i < bsz {
-                    let xr = &xd[i * cin + base..i * cin + base + m];
-                    for r in lo..hi {
-                        let vv = &tval[(r - lo) * n..(r - lo) * n + n];
-                        let mut acc = 0.0f32;
-                        for t in 0..n {
-                            acc += vv[t] * xr[idx[t]];
-                        }
-                        out[i * width + (r - r0)] += acc;
-                    }
-                    i += 1;
-                }
-            }
-            t0 += self.v;
+        // decode serves v rows (the generic loop's shared-rank copy), so
+        // both multi-row families share the tiled-by-v order
+        accumulate_rows_codec(self, x, r0, r1, out, self.v);
+    }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        accumulate_vec_codec(self, x, r0, r1, out)
+    }
+}
+
+// ------------------------------------------------------------ PackedTnm
+
+impl Kernel for PackedTnm {
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.bytes()
+    }
+
+    fn decode_blocks(&self) -> usize {
+        self.n_blocks()
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        let (bsz, _) = x.dims2();
+        match dispatch(bsz) {
+            MicroKernel::Gemv => self.accumulate_vec(&x.data()[..self.cols], r0, r1, out),
+            MicroKernel::SmallBatch => accumulate_rows_codec(self, x, r0, r1, out, 1),
+            MicroKernel::TiledGemm => accumulate_rows_codec(self, x, r0, r1, out, WEIGHT_TILE),
         }
     }
 
     fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
-        let (n, m) = (self.pattern.n, self.pattern.m);
-        let bits = self.pattern.codebook_bits();
-        debug_assert_eq!(x.len(), self.cols);
-        debug_assert_eq!(out.len(), r1 - r0);
-        let bpr = self.cols / m;
-        let unranker = Unranker::new(m, n);
-        let values = self.values_raw();
-        let meta = self.meta_words();
-        let mut idx = vec![0usize; n];
-        let mut t0 = r0 - r0 % self.v;
-        while t0 < r1 {
-            let tile_row = t0 / self.v;
-            let lo = t0.max(r0);
-            let hi = (t0 + self.v).min(r1);
-            for bblk in 0..bpr {
-                let ti = tile_row * bpr + bblk;
-                let rank = read_bits(meta, ti * bits as usize, bits);
-                unranker.unrank_into(rank, &mut idx);
-                let xblk = &x[bblk * m..(bblk + 1) * m];
-                for r in lo..hi {
-                    let vi = ti * self.v * n + (r - t0) * n;
-                    let mut acc = 0.0f32;
-                    for t in 0..n {
-                        acc += bf16_to_f32(values[vi + t]) * xblk[idx[t]];
-                    }
-                    out[r - r0] += acc;
-                }
-            }
-            t0 += self.v;
-        }
+        accumulate_vec_codec(self, x, r0, r1, out)
     }
 }
 
@@ -1141,6 +850,89 @@ impl Kernel for PackedQuantLinear {
     }
 }
 
+// -------------------------------------------------- PackedTernaryLinear
+
+/// The sub-2-bit per-layer format: a [`PackedTnm`] non-salient base
+/// (mask meta + 1.58-bit ternary trits + per-group bf16 scales, decoded
+/// in-kernel through the [`super::codec::ValueCodec`] seam) plus an
+/// optional [`StructuredOutliers`] salient side stream kept at bf16 —
+/// the same SPQR discipline as [`PackedQuantLinear`], pushed past int4:
+/// carving the salient weights out *before* ternarization is what keeps
+/// a three-level grid viable at all.
+#[derive(Clone, Debug)]
+pub struct PackedTernaryLinear {
+    pub weights: PackedTnm,
+    pub outliers: Option<StructuredOutliers>,
+}
+
+impl PackedTernaryLinear {
+    pub fn new(weights: PackedTnm, outliers: Option<StructuredOutliers>) -> Self {
+        if let Some(o) = &outliers {
+            assert_eq!((o.rows, o.cols), (weights.rows, weights.cols));
+        }
+        PackedTernaryLinear { weights, outliers }
+    }
+
+    /// Prune + ternarize + pack a dense weight under `score`: the same
+    /// §4 selection as [`PackedLinear::compress`] (one shared
+    /// [`select_outliers_and_keep`] body), with the surviving base
+    /// values ternary-quantized per `group` kept values (fitted to the
+    /// row's kept count via [`PackedTnm::fit_group`]).
+    pub fn compress(
+        w: &Tensor,
+        score: &Tensor,
+        n: usize,
+        m: usize,
+        k_out: usize,
+        group: usize,
+    ) -> Self {
+        let (_, cols) = w.dims2();
+        let (outliers, keep) = select_outliers_and_keep(w, score, n, m, k_out);
+        let group = PackedTnm::fit_group(group, n, m, cols);
+        PackedTernaryLinear {
+            weights: PackedTnm::from_dense_mask(w, &keep, n, m, group),
+            outliers,
+        }
+    }
+
+    /// Effective dense weight (reconstruction-error reporting only).
+    pub fn to_dense(&self) -> Tensor {
+        let mut d = self.weights.to_dense();
+        if let Some(o) = &self.outliers {
+            o.add_into(&mut d);
+        }
+        d
+    }
+}
+
+impl Kernel for PackedTernaryLinear {
+    fn dims(&self) -> (usize, usize) {
+        (self.weights.rows, self.weights.cols)
+    }
+
+    fn operand_bytes(&self) -> usize {
+        self.weights.bytes() + self.outliers.as_ref().map_or(0, |o| o.bytes())
+    }
+
+    fn decode_blocks(&self) -> usize {
+        self.weights.n_blocks()
+    }
+
+    fn accumulate_rows(&self, x: &Tensor, r0: usize, r1: usize, out: &mut [f32]) {
+        self.weights.accumulate_rows(x, r0, r1, out);
+        if let Some(o) = &self.outliers {
+            o.accumulate_rows(x, r0, r1, out);
+        }
+    }
+
+    fn accumulate_vec(&self, x: &[f32], r0: usize, r1: usize, out: &mut [f32]) {
+        self.weights.accumulate_vec(x, r0, r1, out);
+        if let Some(o) = &self.outliers {
+            o.accumulate_vec(x, r0, r1, out);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1489,6 +1281,103 @@ mod tests {
         let serial = spmm(&x, &layer);
         for threads in [2usize, 3, 8] {
             assert_eq!(spmm_parallel(&x, &layer, threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn tnm_matches_dense_of_dequantized() {
+        // the ternary kernel must reproduce exactly the product of its
+        // own decoded expansion — ternarization error lives in the
+        // *stored values*, never in the kernel math
+        let mut rng = Rng::new(118);
+        let w = Tensor::randn_outliers(vec![48, 256], 0.05, 0.01, 8.0, &mut rng);
+        for (n, m) in [(2usize, 4usize), (4, 8), (8, 16)] {
+            let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+            let group = PackedTnm::fit_group(128, n, m, 256);
+            let packed = PackedTnm::from_dense_mask(&w, &mask, n, m, group);
+            let x = Tensor::randn(vec![5, 256], 1.0, &mut rng);
+            let got = spmm(&x, &packed);
+            let want = dense_ref(&x, &packed.to_dense());
+            assert!(
+                rel_error(&got, &want) < 1e-5,
+                "{n}:{m} rel {}",
+                rel_error(&got, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn ternary_linear_outlier_side_stream_composes() {
+        let mut rng = Rng::new(119);
+        let w = Tensor::randn_outliers(vec![16, 512], 0.05, 0.02, 10.0, &mut rng);
+        let layer = PackedTernaryLinear::compress(&w, &w.map(f32::abs), 8, 16, 16, 128);
+        let x = Tensor::randn(vec![3, 512], 1.0, &mut rng);
+        let base = spmm(&x, &layer.weights);
+        let side = spmm(&x, layer.outliers.as_ref().unwrap());
+        let fused = spmm(&x, &layer);
+        assert_allclose(fused.data(), base.add(&side).data(), 1e-5, 1e-6).unwrap();
+        // and the fused product tracks the decoded-dense reference
+        let want = dense_ref(&x, &layer.to_dense());
+        assert_allclose(fused.data(), want.data(), 1e-4, 1e-5).unwrap();
+    }
+
+    #[test]
+    fn ternary_operand_bytes_le_012_dense_at_8_16() {
+        let mut rng = Rng::new(120);
+        let w = Tensor::randn(vec![256, 512], 0.05, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let packed = PackedTnm::from_dense_mask(&w, &mask, 8, 16, 128);
+        let dense_bytes = Kernel::operand_bytes(&w);
+        // acceptance: mask meta + trits + scales ≤ 0.12× dense bf16
+        assert!(
+            (packed.operand_bytes() as f64) <= 0.12 * dense_bytes as f64,
+            "{} vs dense {}",
+            packed.operand_bytes(),
+            dense_bytes
+        );
+        // and the ternary format beats the int4 format by > 1.5×
+        let spec = PackedQnm::fit_spec(QuantSpec::int4_g128(), 8, 16, 512);
+        let q4 = PackedQnm::from_dense_mask(&w, &mask, 8, 16, spec);
+        assert!((q4.operand_bytes() as f64) > 1.5 * packed.operand_bytes() as f64);
+    }
+
+    #[test]
+    fn tnm_parallel_matches_serial_bitwise() {
+        let mut rng = Rng::new(121);
+        let w = Tensor::randn_outliers(vec![67, 512], 0.05, 0.01, 8.0, &mut rng);
+        let layer = PackedTernaryLinear::compress(&w, &w.map(f32::abs), 8, 16, 16, 128);
+        let x = Tensor::randn(vec![7, 512], 1.0, &mut rng);
+        let serial = spmm(&x, &layer);
+        for threads in [2usize, 3, 8] {
+            assert_eq!(spmm_parallel(&x, &layer, threads), serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn codec_generic_loops_bitwise_match_retained_rowwise_references() {
+        // the ValueCodec refactor's core contract: the shared generic
+        // loop bodies reproduce the retained pre-seam per-row kernels
+        // bit for bit, for both formats that kept a reference, at every
+        // dispatch family and on parallel-driver sub-ranges
+        let mut rng = Rng::new(122);
+        let w = Tensor::randn_outliers(vec![37, 512], 0.05, 0.02, 8.0, &mut rng);
+        let mask = mask_topn_per_block(&w.map(f32::abs), 8, 16);
+        let nm = PackedNm::from_dense_mask(&w, &mask, 8, 16);
+        let spec = PackedQnm::fit_spec(QuantSpec::int4_g128(), 8, 16, 512);
+        let qnm = PackedQnm::from_dense_mask(&w, &mask, 8, 16, spec);
+        for bsz in [1usize, 2, 5, 15, 16, 33, 64] {
+            let x = Tensor::randn(vec![bsz, 512], 1.0, &mut rng);
+            let mut want = vec![0.0f32; bsz * 37];
+            nm.accumulate_rows_rowwise(&x, 0, 37, &mut want);
+            assert_eq!(spmm(&x, &nm).data(), want.as_slice(), "nm bsz={bsz}");
+            let mut want_q = vec![0.0f32; bsz * 37];
+            qnm.accumulate_rows_rowwise(&x, 0, 37, &mut want_q);
+            assert_eq!(spmm(&x, &qnm).data(), want_q.as_slice(), "qnm bsz={bsz}");
+            let mut want_part = vec![0.0f32; bsz * 20];
+            nm.accumulate_rows_rowwise(&x, 9, 29, &mut want_part);
+            let mut got_part = vec![0.0f32; bsz * 20];
+            nm.accumulate_rows(&x, 9, 29, &mut got_part);
+            assert_eq!(got_part, want_part, "nm bsz={bsz} subrange");
         }
     }
 }

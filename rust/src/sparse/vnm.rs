@@ -239,6 +239,47 @@ impl PackedVnm {
     }
 }
 
+impl super::codec::ValueCodec for PackedVnm {
+    fn pattern(&self) -> &PatternInfo {
+        &self.pattern
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    fn meta_words(&self) -> &[u64] {
+        &self.meta
+    }
+
+    /// One rank per `(V, M)` tile: rows of a tile share their pattern
+    /// id, which the generic loops exploit by copying the previous
+    /// row's unranked indices when consecutive rows resolve to the same
+    /// index.
+    #[inline]
+    fn rank_index(&self, r: usize, bblk: usize) -> usize {
+        (r / self.v) * (self.cols / self.pattern.m) + bblk
+    }
+
+    #[inline]
+    fn decode_block_into(&self, r: usize, bblk: usize, out: &mut [f32]) {
+        let n = self.pattern.n;
+        let tile = (r / self.v) * (self.cols / self.pattern.m) + bblk;
+        let vi = tile * self.v * n + (r % self.v) * n;
+        for (t, o) in out.iter_mut().enumerate().take(n) {
+            *o = bf16_to_f32(self.values[vi + t]);
+        }
+    }
+
+    fn values_bytes(&self) -> usize {
+        self.values.len() * 2
+    }
+
+    fn bits_per_kept(&self) -> f64 {
+        16.0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -21,8 +21,8 @@
 //! that lies about offsets would otherwise remap windows silently).
 //!
 //! Every index entry names a tensor, its kind (`dense`/`nm`/`vnm`/
-//! `qnm`), its dense shape, the kind's parameters (`n`, `m`, `v`,
-//! `qbits`, `qgroup`) and its streams (`{off, bytes}` each); packed
+//! `qnm`/`tnm`), its dense shape, the kind's parameters (`n`, `m`, `v`,
+//! `qbits`, `qgroup`, `tgroup`) and its streams (`{off, bytes}` each); packed
 //! linears may carry a nested `outliers` object. The reader validates
 //! magic/version/checksum with the shared typed errors
 //! ([`crate::Error::BadMagic`] / [`crate::Error::BadVersion`] /
@@ -41,7 +41,7 @@ use anyhow::Context;
 use crate::model::{config_from_json, config_json};
 use crate::quant::QuantSpec;
 use crate::sparse::storage::{Pod, Storage};
-use crate::sparse::{PackedNm, PackedQnm, PackedVnm, StructuredOutliers};
+use crate::sparse::{PackedNm, PackedQnm, PackedTnm, PackedVnm, StructuredOutliers};
 use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::mmap::MappedFile;
@@ -183,6 +183,18 @@ fn plan_entries(model: &PackedModel) -> Vec<EntryPlan<'_>> {
                     StreamRec { key: "meta", data: StreamData::U64(p.meta_words()), off: 0 },
                 ],
             ),
+            PackedWeights::Tnm(p) => (
+                vec![
+                    ("n", Json::num(p.pattern.n as f64)),
+                    ("m", Json::num(p.pattern.m as f64)),
+                    ("tgroup", Json::num(p.group as f64)),
+                ],
+                vec![
+                    StreamRec { key: "trits", data: StreamData::U8(p.trits_raw()), off: 0 },
+                    StreamRec { key: "scales", data: StreamData::U16(p.scales_raw()), off: 0 },
+                    StreamRec { key: "meta", data: StreamData::U64(p.meta_words()), off: 0 },
+                ],
+            ),
         };
         let outlier = layer.outliers.as_ref().map(|o| {
             (
@@ -215,6 +227,12 @@ pub struct TensorInfo {
     pub kind: String,
     pub shape: Vec<usize>,
     pub stream_bytes: usize,
+    /// Per-stream byte breakdown: `(stream key, bytes)` in index order,
+    /// outlier-side streams prefixed `outlier.`. Sums to
+    /// [`TensorInfo::stream_bytes`] on both the write and mmap-read
+    /// paths — the `inspect` CLI folds these into its per-kind table
+    /// and re-derives `total_bits_per_param` from them byte-exactly.
+    pub streams: Vec<(String, usize)>,
 }
 
 /// Byte-exact accounting for a written or opened `.spak` artifact — the
@@ -338,6 +356,11 @@ pub fn write_artifact(path: &Path, model: &PackedModel) -> crate::Result<Artifac
             fields.push((k, v.clone()));
         }
         fields.push(("streams", stream_obj(&e.streams)));
+        let mut stream_list: Vec<(String, usize)> = e
+            .streams
+            .iter()
+            .map(|s| (s.key.to_string(), s.data.byte_len()))
+            .collect();
         let mut total = base_bytes;
         if e.kind == "dense" {
             dense_b += base_bytes;
@@ -349,6 +372,11 @@ pub fn write_artifact(path: &Path, model: &PackedModel) -> crate::Result<Artifac
             let ob: usize = streams.iter().map(|s| s.data.byte_len()).sum();
             outlier_b += ob;
             total += ob;
+            stream_list.extend(
+                streams
+                    .iter()
+                    .map(|s| (format!("outlier.{}", s.key), s.data.byte_len())),
+            );
             fields.push((
                 "outliers",
                 Json::obj(vec![
@@ -363,6 +391,7 @@ pub fn write_artifact(path: &Path, model: &PackedModel) -> crate::Result<Artifac
             kind: e.kind.to_string(),
             shape: e.shape.clone(),
             stream_bytes: total,
+            streams: stream_list,
         });
         tensors_json.push(Json::obj(fields));
     }
@@ -456,6 +485,29 @@ fn want_usize(j: &Json, key: &str, what: &str) -> crate::Result<usize> {
         "artifact index: {what}.{key} = {x} is not a non-negative integer"
     );
     Ok(x as usize)
+}
+
+/// Collect the `(key, bytes)` pairs a `streams` index object declares,
+/// in key order, for [`TensorInfo::streams`]. The byte counts come from
+/// the index itself, so the `inspect` breakdown reports exactly what
+/// the container promises — any drift from the mapped windows would
+/// already have failed `mapped_stream`'s bounds checks.
+fn stream_breakdown(
+    streams: &Json,
+    prefix: &str,
+    what: &str,
+) -> crate::Result<Vec<(String, usize)>> {
+    let m = streams
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("artifact index: {what}.streams is not an object"))?;
+    let mut out = Vec::with_capacity(m.len());
+    for (k, s) in m {
+        out.push((
+            format!("{prefix}{k}"),
+            want_usize(s, "bytes", &format!("{what}.streams.{k}"))?,
+        ));
+    }
+    Ok(out)
 }
 
 /// Resolve one `{off, bytes}` stream of `streams` into a typed mapped
@@ -572,6 +624,7 @@ pub fn read_artifact(path: &Path) -> crate::Result<(PackedModel, ArtifactInfo)> 
             .usize_arr()
             .ok_or_else(|| anyhow::anyhow!("artifact index: {what}.shape malformed"))?;
         let streams = want_obj(e, "streams", &what)?;
+        let mut stream_list = stream_breakdown(streams, "", &what)?;
         let elems: usize = shape.iter().product();
         let entry_bytes = if kind == "dense" {
             let data: Storage<f32> =
@@ -631,6 +684,19 @@ pub fn read_artifact(path: &Path) -> crate::Result<(PackedModel, ArtifactInfo)> 
                         mapped_stream(&map, streams, "meta", &what, data_start, data_end)?,
                     )?)
                 }
+                "tnm" => {
+                    let tgroup = want_usize(e, "tgroup", &what)?;
+                    PackedWeights::Tnm(PackedTnm::from_raw_parts(
+                        n,
+                        m,
+                        rows,
+                        cols,
+                        tgroup,
+                        mapped_stream(&map, streams, "trits", &what, data_start, data_end)?,
+                        mapped_stream(&map, streams, "scales", &what, data_start, data_end)?,
+                        mapped_stream(&map, streams, "meta", &what, data_start, data_end)?,
+                    )?)
+                }
                 other => anyhow::bail!("{what}: unknown tensor kind {other:?}"),
             };
             let mut eb = weights.stream_bytes();
@@ -654,6 +720,7 @@ pub fn read_artifact(path: &Path) -> crate::Result<(PackedModel, ArtifactInfo)> 
                     let ob = so.values_raw().len() * 2 + so.indices_raw().len();
                     outlier_b += ob;
                     eb += ob;
+                    stream_list.extend(stream_breakdown(ostreams, "outlier.", &ow)?);
                     Some(so)
                 }
             };
@@ -661,11 +728,16 @@ pub fn read_artifact(path: &Path) -> crate::Result<(PackedModel, ArtifactInfo)> 
             eb
         };
         payload += entry_bytes;
+        anyhow::ensure!(
+            stream_list.iter().map(|(_, b)| b).sum::<usize>() == entry_bytes,
+            "tensor {name}: index stream bytes disagree with the mapped windows"
+        );
         tensor_infos.push(TensorInfo {
             name,
             kind,
             shape,
             stream_bytes: entry_bytes,
+            streams: stream_list,
         });
     }
 

@@ -14,8 +14,8 @@
 //! * [`PackedModel`] — the fully compressed model in memory: config,
 //!   dense non-linear params (embeddings/norms), and one
 //!   [`PackedLayer`] per prunable linear ([`PackedNm`] bf16 /
-//!   [`PackedQnm`] int-quantized / [`PackedVnm`] base, plus the
-//!   structured-outlier side stream). Produced by the pipeline's
+//!   [`PackedQnm`] int-quantized / [`PackedTnm`] ternary /
+//!   [`PackedVnm`] base, plus the structured-outlier side stream). Produced by the pipeline's
 //!   pack-artifact stage ([`crate::coordinator::CompressionPipeline::run_packed`])
 //!   or, magnitude-only, by [`PackedModel::compress`] (the `sparselm
 //!   pack` subcommand).
@@ -46,7 +46,8 @@ use std::collections::BTreeMap;
 use crate::model::{BlockWeights, ModelConfig, ParamSet, SparseLm};
 use crate::quant::QuantSpec;
 use crate::sparse::{
-    Kernel, PackedLinear, PackedNm, PackedQnm, PackedQuantLinear, PackedVnm, StructuredOutliers,
+    Kernel, PackedLinear, PackedNm, PackedQnm, PackedQuantLinear, PackedTernaryLinear, PackedTnm,
+    PackedVnm, StructuredOutliers,
 };
 use crate::tensor::Tensor;
 
@@ -60,6 +61,9 @@ pub enum PackedWeights {
     Vnm(PackedVnm),
     /// per-row N:M, int-quantized kept values (dequantized in-kernel)
     Qnm(PackedQnm),
+    /// per-row N:M, ternary kept values (5 trits/byte, dequantized
+    /// in-kernel)
+    Tnm(PackedTnm),
 }
 
 impl PackedWeights {
@@ -69,6 +73,7 @@ impl PackedWeights {
             PackedWeights::Nm(p) => (p.rows, p.cols),
             PackedWeights::Vnm(p) => (p.rows, p.cols),
             PackedWeights::Qnm(p) => (p.rows, p.cols),
+            PackedWeights::Tnm(p) => (p.rows, p.cols),
         }
     }
 
@@ -82,15 +87,20 @@ impl PackedWeights {
             PackedWeights::Qnm(p) => {
                 p.codes_raw().len() * 4 + p.scales_raw().len() * 2 + p.meta_words().len() * 8
             }
+            PackedWeights::Tnm(p) => {
+                p.trits_raw().len() + p.scales_raw().len() * 2 + p.meta_words().len() * 8
+            }
         }
     }
 
-    /// Short format tag used in the artifact index (`nm`/`vnm`/`qnm`).
+    /// Short format tag used in the artifact index
+    /// (`nm`/`vnm`/`qnm`/`tnm`).
     pub fn kind(&self) -> &'static str {
         match self {
             PackedWeights::Nm(_) => "nm",
             PackedWeights::Vnm(_) => "vnm",
             PackedWeights::Qnm(_) => "qnm",
+            PackedWeights::Tnm(_) => "tnm",
         }
     }
 }
@@ -130,6 +140,7 @@ impl PackedLayer {
         Ok(match self.weights {
             PackedWeights::Nm(p) => Box::new(PackedLinear::new(p, self.outliers)),
             PackedWeights::Qnm(p) => Box::new(PackedQuantLinear::new(p, self.outliers)),
+            PackedWeights::Tnm(p) => Box::new(PackedTernaryLinear::new(p, self.outliers)),
             PackedWeights::Vnm(p) => {
                 anyhow::ensure!(
                     self.outliers.is_none(),
@@ -208,6 +219,43 @@ impl PackedModel {
         }
     }
 
+    /// Magnitude-selection **ternary** pack — the sub-2-bits/param
+    /// counterpart of [`Self::compress`] with the same shared selection
+    /// body, kept values quantized to {-1, 0, +1} per
+    /// [`crate::sparse::PackedTnm`] (`group` gcd-fitted per layer
+    /// width). This is the `sparselm pack --quant ternary` path.
+    pub fn compress_ternary(
+        params: &ParamSet,
+        n: usize,
+        m: usize,
+        k_out: usize,
+        group: usize,
+    ) -> PackedModel {
+        let linear: std::collections::BTreeSet<String> =
+            params.linear_indices().into_iter().map(|(name, _)| name).collect();
+        let mut dense = Vec::new();
+        let mut layers = Vec::new();
+        for (name, t) in params.names.iter().zip(&params.tensors) {
+            if !linear.contains(name) {
+                dense.push((name.clone(), t.clone()));
+                continue;
+            }
+            let score = t.map(f32::abs);
+            let l = PackedTernaryLinear::compress(t, &score, n, m, k_out, group);
+            layers.push(PackedLayer {
+                name: name.clone(),
+                weights: PackedWeights::Tnm(l.weights),
+                outliers: l.outliers,
+            });
+        }
+        PackedModel {
+            config: params.config.clone(),
+            label: "Magnitude+T158".to_string(),
+            dense,
+            layers,
+        }
+    }
+
     /// The uniform pack settings across every linear, when consistent:
     /// `(n, m, quant spec of the base)`. `None` when layers mix
     /// patterns, formats, or quant specs — including quant groups that
@@ -222,7 +270,10 @@ impl PackedModel {
             let this = match &l.weights {
                 PackedWeights::Nm(p) => (p.pattern.n, p.pattern.m, None),
                 PackedWeights::Qnm(p) => (p.pattern.n, p.pattern.m, Some(p.spec())),
-                PackedWeights::Vnm(_) => return None,
+                // V:N:M and ternary have no QuantSpec representation;
+                // analytic cross-checks use the per-kind breakdown
+                // instead (`inspect`, hwsim::artifact)
+                PackedWeights::Vnm(_) | PackedWeights::Tnm(_) => return None,
             };
             match summary {
                 None => summary = Some(this),
@@ -341,6 +392,7 @@ impl PackedModel {
                 PackedWeights::Nm(p) => p.is_mapped(),
                 PackedWeights::Vnm(p) => p.is_mapped(),
                 PackedWeights::Qnm(p) => p.is_mapped(),
+                PackedWeights::Tnm(p) => p.is_mapped(),
             };
             base && l.outliers.iter().all(|o| o.is_mapped())
         })

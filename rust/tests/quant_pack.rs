@@ -10,7 +10,11 @@
 //!   extended to the quantized kernel);
 //! * `--backend spmm-q4` generates **token-parity** output against the
 //!   dequantized-dense reference over ≥ 32 greedy steps, in-process and
-//!   through a live server.
+//!   through a live server;
+//! * the same three contracts for the 1.58-bit ternary codec
+//!   ([`PackedTnm`] / `--backend spmm-t`): stream accounting vs the
+//!   `sparse_nm_ternary` traffic model, value-side streams ≤ 1.5
+//!   bits/param, and greedy token parity in-process and over TCP.
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -21,9 +25,14 @@ use sparselm::eval::argmax;
 use sparselm::hwsim::{GemmShape, HwModel};
 use sparselm::model::{ModelConfig, ParamSet, SparseLm};
 use sparselm::pruning::mask_topn_per_block;
-use sparselm::quant::{nm_quant_bits_per_param, GroupQuant, QuantSpec};
+use sparselm::quant::{
+    nm_quant_bits_per_param, nm_ternary_bits_per_param, GroupQuant, QuantSpec,
+};
 use sparselm::serve::{serve_generate, spmm_generator, spmm_scorer, ServeClient, ServerConfig};
-use sparselm::sparse::{spmm, spmm_parallel, spmm_vec, Kernel, PackedQnm, PackedQuantLinear};
+use sparselm::sparse::{
+    spmm, spmm_parallel, spmm_vec, Kernel, PackedQnm, PackedQuantLinear, PackedTernaryLinear,
+    PackedTnm,
+};
 use sparselm::tensor::Tensor;
 use sparselm::util::propcheck::{check, Gen};
 use sparselm::util::Rng;
@@ -80,6 +89,47 @@ fn storage_accounting_agrees_across_format_quantizer_and_model() {
         (reported - analytic).abs() < 0.01,
         "quant_cmd report {reported} vs analytic {analytic}"
     );
+}
+
+#[test]
+fn ternary_storage_accounting_agrees_with_model() {
+    let mut rng = Rng::new(0xACC8);
+    let (rows, cols) = (128usize, 512usize);
+    let (n, m) = (8usize, 16usize);
+    let group = 128usize;
+    let w = Tensor::randn(vec![rows, cols], 0.05, &mut rng);
+    let mask = mask_topn_per_block(&w.map(f32::abs), n, m);
+    let p = PackedTnm::from_dense_mask(&w, &mask, n, m, group);
+
+    // 1. exact stream identity: row-aligned trits + bf16 group scales
+    let kpr = cols / m * n;
+    assert_eq!(
+        p.value_bytes(),
+        rows * PackedTnm::trit_row_bytes(kpr) + rows * (kpr / group) * 2
+    );
+    assert_eq!(p.operand_bytes(), p.value_bytes() + p.meta_bytes());
+
+    // 2. the hwsim model prices the identical streams: exact on
+    // trits+scales+meta bits, within the ≤8-byte u64 padding overall
+    let hw = HwModel::default();
+    let modeled = hw.sparse_nm_ternary(GemmShape::new(1, rows, cols), n, m, group);
+    assert_eq!(modeled.weight_bytes, p.value_bytes() as f64, "model trits+scales");
+    assert_eq!(modeled.meta_bytes, (p.meta_bits() / 8) as f64, "model mask meta");
+    let pad = p.operand_bytes() as f64 - (modeled.weight_bytes + modeled.meta_bytes);
+    assert!((0.0..=8.0).contains(&pad), "padding sliver {pad}");
+
+    // 3. bits/param: measured sits within the row-padding sliver above
+    // the analytic 1.7375 — and the value-side streams alone are under
+    // the 1.5 bits/param headline
+    let analytic = nm_ternary_bits_per_param(n, m, group);
+    assert!((analytic - 1.7375).abs() < 1e-12);
+    assert!(
+        p.bits_per_param() >= analytic && p.bits_per_param() < analytic * 1.01,
+        "{}",
+        p.bits_per_param()
+    );
+    let value_bits = 8.0 * p.value_bytes() as f64 / (rows * cols) as f64;
+    assert!(value_bits <= 1.5, "value streams {value_bits} bits/param > 1.5");
 }
 
 // ------------------------------------- quantize → pack → spmm parity
@@ -185,6 +235,82 @@ fn quantized_backend_generates_token_parity_with_dequantized_dense() {
         got, want,
         "quantized packed decode must token-match its dequantized-dense reference"
     );
+}
+
+/// The dequantized-dense reference of a `compress_ternary` model,
+/// mirroring [`dequantized_reference`] for the ternary codec.
+fn dequantized_ternary_reference(params: &ParamSet, k_out: usize, group: usize) -> SparseLm {
+    let mut dq = params.clone();
+    for (_, idx) in params.linear_indices() {
+        let w = &params.tensors[idx];
+        let layer = PackedTernaryLinear::compress(w, &w.map(f32::abs), 8, 16, k_out, group);
+        dq.tensors[idx] = layer.to_dense();
+    }
+    SparseLm::from_params(&dq)
+}
+
+#[test]
+fn ternary_backend_generates_token_parity_with_dequantized_dense() {
+    let cfg = test_config();
+    let mut rng = Rng::new(63);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let packed = SparseLm::compress_ternary(&params, 8, 16, 16, 128);
+    let reference = dequantized_ternary_reference(&params, 16, 128);
+
+    let prompt: Vec<i32> = (0..8).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let got = packed.generate(&prompt, GEN_TOKENS, None, argmax).unwrap();
+    let want = reference.generate(&prompt, GEN_TOKENS, None, argmax).unwrap();
+    assert_eq!(got.len(), GEN_TOKENS);
+    assert_eq!(
+        got, want,
+        "ternary packed decode must token-match its dequantized-dense reference"
+    );
+}
+
+#[test]
+fn ternary_generate_server_end_to_end() {
+    // the `--backend spmm-t` composition: compress_ternary model behind
+    // spmm_scorer + spmm_generator, scoring and generating over TCP,
+    // with the generated text token-matching the in-process reference
+    let cfg = test_config();
+    let mut rng = Rng::new(64);
+    let params = ParamSet::init_outliers(&cfg, &mut rng);
+    let lm = Arc::new(SparseLm::compress_ternary(&params, 8, 16, 16, 128));
+    let reference = dequantized_ternary_reference(&params, 16, 128);
+
+    let world = World::new(7);
+    let text = CorpusSpec::new(CorpusKind::Wiki, 4_000, 3).generate(&world);
+    let tok = Arc::new(Tokenizer::fit(&text, cfg.vocab));
+
+    let handle = serve_generate(
+        spmm_scorer(Arc::clone(&lm)),
+        spmm_generator(Arc::clone(&lm), 4),
+        Arc::clone(&tok),
+        ServerConfig {
+            addr: "127.0.0.1:0".into(),
+            max_conns: 4,
+            max_batch: cfg.batch,
+            max_wait: Duration::from_millis(5),
+            max_gen_tokens: GEN_TOKENS,
+        },
+    )
+    .unwrap();
+
+    let mut cl = ServeClient::connect(handle.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(120)).unwrap();
+    let prompt = "the quick brown fox";
+    let (served, _) = cl.generate(prompt, GEN_TOKENS, 0.0).unwrap();
+
+    let mut ids = vec![BOS];
+    ids.extend(tok.encode(prompt));
+    let want = reference
+        .generate(&ids, GEN_TOKENS, Some(EOS), argmax)
+        .unwrap();
+    assert_eq!(served, tok.decode(&want), "server output != dequantized ternary reference");
+
+    let (nll, toks) = cl.nll(prompt).unwrap();
+    assert!(nll.is_finite() && toks > 0);
+    handle.shutdown().unwrap();
 }
 
 #[test]

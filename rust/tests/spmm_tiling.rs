@@ -12,9 +12,10 @@
 //! against it.
 
 use sparselm::pruning::mask_topn_per_block;
+use sparselm::quant::QuantSpec;
 use sparselm::sparse::{
     spmm, spmm_parallel, spmm_parallel_scoped, spmm_vec, vnm_select, Csr, Kernel, PackedLinear,
-    PackedNm, PackedVnm,
+    PackedNm, PackedQnm, PackedTnm, PackedVnm,
 };
 use sparselm::tensor::Tensor;
 use sparselm::util::pool::{chunk_ranges, WorkerPool};
@@ -45,7 +46,7 @@ fn bitwise_eq(a: &Tensor, b: &Tensor) -> bool {
 #[test]
 fn property_tiled_kernels_bitwise_equal_gemv_reference() {
     check("spmm (tiled dispatch) == per-row GEMV oracle", 20, |g: &mut Gen| {
-        let kind = *g.choose(&["nm", "nm+out", "vnm", "csr", "dense"]);
+        let kind = *g.choose(&["nm", "nm+out", "vnm", "qnm", "tnm", "csr", "dense"]);
         let (n, m) = *g.choose(&[(2usize, 4usize), (4, 8), (8, 16)]);
         let rows = g.int(1, 48).max(1);
         let cols = if kind == "nm+out" {
@@ -72,6 +73,18 @@ fn property_tiled_kernels_bitwise_equal_gemv_reference() {
                 let wv = Tensor::new(vec![rows_v, cols], g.vec_normal(rows_v * cols));
                 let mask = vnm_select(&wv.map(f32::abs), v, n, m);
                 Box::new(PackedVnm::from_dense_mask(&wv, &mask, v, n, m))
+            }
+            "qnm" => {
+                // int-under-mask through the same codec-generic loops
+                let mask = mask_topn_per_block(&score, n, m);
+                let spec = PackedQnm::fit_spec(QuantSpec::int4_g128(), n, m, cols);
+                Box::new(PackedQnm::from_dense_mask(&w, &mask, n, m, spec))
+            }
+            "tnm" => {
+                // ternary-under-mask: 5 trits/byte + bf16 group scales
+                let mask = mask_topn_per_block(&score, n, m);
+                let tg = PackedTnm::fit_group(128, n, m, cols);
+                Box::new(PackedTnm::from_dense_mask(&w, &mask, n, m, tg))
             }
             "csr" => Box::new(Csr::from_topk_global(&w, &score, (rows * cols) / 3 + 1)),
             _ => Box::new(w.clone()),

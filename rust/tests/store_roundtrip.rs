@@ -6,12 +6,14 @@
 
 use std::path::PathBuf;
 
-use sparselm::hwsim::artifact::{model_linear_stream_bytes, model_outlier_stream_bytes};
+use sparselm::hwsim::artifact::{
+    model_linear_stream_bytes, model_linear_stream_bytes_ternary, model_outlier_stream_bytes,
+};
 use sparselm::model::{ModelConfig, ParamSet, SparseLm};
 use sparselm::pruning::mask_topn_per_block;
 use sparselm::quant::QuantSpec;
 use sparselm::sparse::{
-    spmm_parallel, vnm_select, Kernel, PackedNm, PackedQnm, PackedVnm,
+    spmm_parallel, vnm_select, Kernel, PackedNm, PackedQnm, PackedTnm, PackedVnm,
 };
 use sparselm::store::{
     read_artifact, write_artifact, PackedLayer, PackedModel, PackedWeights,
@@ -50,7 +52,7 @@ fn single_layer_model(layer: PackedLayer) -> PackedModel {
 #[test]
 fn property_artifact_spmm_bitwise_across_formats_batches_workers() {
     check("spak roundtrip == in-memory packed", 12, |g: &mut Gen| {
-        let kind = *g.choose(&["nm", "vnm", "qnm"]);
+        let kind = *g.choose(&["nm", "vnm", "qnm", "tnm"]);
         let (n, m) = *g.choose(&[(2usize, 4usize), (4, 8), (8, 16)]);
         let with_outliers = kind != "vnm" && g.bool();
         let v = *g.choose(&[2usize, 4]);
@@ -85,6 +87,16 @@ fn property_artifact_spmm_bitwise_across_formats_batches_workers() {
                 PackedLayer {
                     name: "w".into(),
                     weights: PackedWeights::Qnm(l.weights),
+                    outliers: l.outliers,
+                }
+            }
+            "tnm" => {
+                let l = sparselm::sparse::PackedTernaryLinear::compress(
+                    &w, &score, n, m, k_out, 128,
+                );
+                PackedLayer {
+                    name: "w".into(),
+                    weights: PackedWeights::Tnm(l.weights),
                     outliers: l.outliers,
                 }
             }
@@ -199,6 +211,42 @@ fn model_artifact_serves_bitwise_equal_to_in_memory_compress() {
         assert_eq!(served.linear_operand_bytes(), reference.linear_operand_bytes());
         std::fs::remove_file(&path).ok();
     }
+
+    // the ternary model walks the same pack → write → mmap → spmm
+    // contract through the "tnm" section kind
+    let packed = PackedModel::compress_ternary(&params, 8, 16, 16, 128);
+    let path = tmp("model-ternary.spak");
+    let winfo = write_artifact(&path, &packed).unwrap();
+    assert_eq!(
+        winfo.linear_stream_bytes,
+        model_linear_stream_bytes_ternary(&cfg, 8, 16, 128)
+    );
+    assert_eq!(winfo.outlier_stream_bytes, model_outlier_stream_bytes(&cfg, 16));
+    assert_eq!(winfo.file_bytes, winfo.expected_file_bytes());
+
+    let (back, rinfo) = read_artifact(&path).unwrap();
+    assert_eq!(rinfo.linear_stream_bytes, winfo.linear_stream_bytes);
+    #[cfg(unix)]
+    assert!(back.all_streams_mapped(), "ternary streams should be zero-copy");
+    let served = back.into_sparse_lm().unwrap();
+    let reference = SparseLm::compress_ternary(&params, 8, 16, 16, 128);
+
+    let window: Vec<i32> = (0..cfg.batch * (cfg.seq + 1))
+        .map(|i| (i * 37 % cfg.vocab) as i32)
+        .collect();
+    assert_eq!(
+        served.lm_nll(&window).unwrap(),
+        reference.lm_nll(&window).unwrap(),
+        "ternary artifact nll diverged"
+    );
+    let prompt: Vec<i32> = vec![1, 5, 9, 2];
+    assert_eq!(
+        served.generate(&prompt, 16, None, sparselm::eval::argmax).unwrap(),
+        reference.generate(&prompt, 16, None, sparselm::eval::argmax).unwrap(),
+        "ternary artifact decode diverged"
+    );
+    assert_eq!(served.linear_operand_bytes(), reference.linear_operand_bytes());
+    std::fs::remove_file(&path).ok();
 }
 
 #[test]
@@ -306,6 +354,44 @@ fn raw_parts_reject_corrupt_stream_lengths() {
         q.codes_raw().to_vec().into(),
         vec![0u16; 1].into(),
         q.meta_words().to_vec().into()
+    )
+    .is_err());
+    let tg = PackedTnm::fit_group(128, 8, 16, 64);
+    let t = PackedTnm::from_dense_mask(&w, &mask, 8, 16, tg);
+    // short trit stream
+    assert!(PackedTnm::from_raw_parts(
+        8,
+        16,
+        8,
+        64,
+        tg,
+        t.trits_raw()[..3].to_vec().into(),
+        t.scales_raw().to_vec().into(),
+        t.meta_words().to_vec().into()
+    )
+    .is_err());
+    // short scale stream
+    assert!(PackedTnm::from_raw_parts(
+        8,
+        16,
+        8,
+        64,
+        tg,
+        t.trits_raw().to_vec().into(),
+        vec![0u16; 1].into(),
+        t.meta_words().to_vec().into()
+    )
+    .is_err());
+    // a group that does not divide kept-per-row is rejected, not fitted
+    assert!(PackedTnm::from_raw_parts(
+        8,
+        16,
+        8,
+        64,
+        5,
+        t.trits_raw().to_vec().into(),
+        t.scales_raw().to_vec().into(),
+        t.meta_words().to_vec().into()
     )
     .is_err());
 }
