@@ -31,6 +31,7 @@ pub(crate) fn cmd_serve_fleet(args: Args) -> crate::Result<()> {
         "--fleet serves a packed artifact: pass --model <x.spak> (every worker \
          mmaps the same read-only copy, so K workers cost ~one copy of the weights)"
     );
+    super::serve_cmd::apply_trace_flags(&args)?;
     let defaults = FleetConfig::default();
     let cfg = FleetConfig {
         addr: args.get_str("addr", &defaults.addr),
@@ -59,6 +60,7 @@ pub(crate) fn cmd_serve_fleet(args: Args) -> crate::Result<()> {
         "max-gen-tokens",
         "threads",
         "artifacts",
+        "trace-slow-ms",
     ] {
         if let Some(v) = args.get(flag) {
             wargs.push(format!("--{flag}"));
@@ -120,6 +122,10 @@ pub(crate) fn cmd_fleet_worker(args: Args) -> crate::Result<()> {
         model.ends_with(".spak"),
         "fleet-worker serves a packed artifact: pass --model <x.spak>"
     );
+    // one trace lane per worker process in merged fleet exports — the
+    // pid keeps the label unique without threading the slot index in
+    crate::util::trace::set_process_name(&format!("worker-{}", std::process::id()));
+    super::serve_cmd::apply_trace_flags(&args)?;
     let gen_batch = args.get_usize("gen-batch", 8)?.max(1);
     let builder = super::serve_cmd::engine_builder(&args)?;
     let (engine, info) = builder.open_artifact(std::path::Path::new(&model))?;

@@ -17,6 +17,7 @@
 //! sparselm serve    --model runs/tiny.spak --fleet 4 --http 127.0.0.1:7080
 //! sparselm generate --model tiny --random --prompt "the quick brown" --max-tokens 32
 //! sparselm serve-bench --addr 127.0.0.1:7433 --clients 4 --requests 50
+//! sparselm trace    --addr 127.0.0.1:7433 --last 5 --out trace.json
 //! ```
 
 mod fleet_cmd;
@@ -58,6 +59,7 @@ pub fn main_entry() -> crate::Result<()> {
         "fleet-worker" => fleet_cmd::cmd_fleet_worker(args),
         "generate" => serve_cmd::cmd_generate(args),
         "serve-bench" => serve_cmd::cmd_serve_bench(args),
+        "trace" => serve_cmd::cmd_trace(args),
         _ => {
             print_help();
             Ok(())
@@ -110,6 +112,11 @@ subcommands:
             --quant ternary for 1.58-bit PackedTnm; --spec for
             self-speculative decode; --temperature 0 = greedy)
   serve-bench  closed-loop load generator against a running server
+  trace     export Chrome trace-event JSON from a running server or fleet
+            router (--addr, --id <hex>[,<hex>..] | --last K, --out x.json);
+            load the page in Perfetto or chrome://tracing. serve-side knobs:
+            --trace-slow-ms N logs any request slower than N ms with its
+            trace id; GET /debug/trace serves the same export over HTTP
 
 common flags: --model <tiny|small|gqa|wide|e2e> --artifacts <dir>
 run a subcommand with --help for its flags"

@@ -29,7 +29,7 @@ use crate::serve::{
     BackendSpec, Engine, EngineBuilder, HttpConfig, ServeClient, ServerConfig, ServerHandle,
 };
 use crate::util::args::Args;
-use crate::util::Rng;
+use crate::util::{trace, Rng};
 
 /// Rebuild the deterministic tokenizer every component shares (the same
 /// construction as `ExperimentCtx::new`, without touching PJRT).
@@ -53,6 +53,16 @@ pub(crate) fn engine_builder(args: &Args) -> crate::Result<EngineBuilder> {
         .threads(args.get_usize("threads", crate::util::pool::default_parallelism())?)
         .acknowledge_repack(args.get_bool("repack"))
         .artifacts(args.get_str("artifacts", "artifacts")))
+}
+
+/// Apply `--trace-slow-ms` (slow-request structured log threshold; the
+/// span recorder itself is always on). Shared by `serve`, the fleet
+/// router and fleet workers so the flag means the same thing per role.
+pub(crate) fn apply_trace_flags(args: &Args) -> crate::Result<()> {
+    if args.get("trace-slow-ms").is_some() {
+        trace::set_slow_ms(args.get_u64("trace-slow-ms", u64::MAX)?);
+    }
+    Ok(())
 }
 
 /// `--http*` flags → front-end config; `None` when `--http` is absent.
@@ -118,6 +128,8 @@ pub fn cmd_serve(args: Args) -> crate::Result<()> {
     if args.get("fleet").is_some() {
         return super::fleet_cmd::cmd_serve_fleet(args);
     }
+    trace::set_process_name("server");
+    apply_trace_flags(&args)?;
     let model = args.get_str("model", "tiny");
     let addr = args.get_str("addr", "127.0.0.1:7433");
     let gen_batch = args.get_usize("gen-batch", 8)?.max(1);
@@ -311,6 +323,43 @@ pub fn cmd_generate(args: Args) -> crate::Result<()> {
         lm.linear_operand_bytes() / 1024,
         lm.dense_linear_bytes() / 1024
     );
+    Ok(())
+}
+
+/// `sparselm trace` — pull Chrome trace-event JSON out of a running
+/// server's (or fleet router's) flight recorder over the line protocol.
+/// Explicit `--id` hex ids win over `--last K`; the page loads directly
+/// in Perfetto / `chrome://tracing`.
+pub fn cmd_trace(args: Args) -> crate::Result<()> {
+    let addr = args.get_str("addr", "127.0.0.1:7433");
+    let mut ids: Vec<u64> = Vec::new();
+    if let Some(v) = args.get("id") {
+        for part in v.split(',').filter(|p| !p.is_empty()) {
+            ids.push(
+                trace::parse_hex(part).ok_or_else(|| anyhow::anyhow!("bad trace id {part:?}"))?,
+            );
+        }
+    }
+    let last = args.get_usize("last", 1)?;
+    anyhow::ensure!(
+        (1..=1024).contains(&last),
+        "--last must be in 1..=1024, got {last}"
+    );
+    let mut cl = ServeClient::connect(&addr)?;
+    cl.set_timeout(Duration::from_secs(10))?;
+    let page = cl.trace_export(&ids, last)?;
+    let events = page
+        .get("traceEvents")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.len())
+        .unwrap_or(0);
+    let out = args.get_str("out", "");
+    if out.is_empty() {
+        println!("{page}");
+    } else {
+        std::fs::write(&out, page.to_string())?;
+        eprintln!("wrote {out}: {events} events — load in Perfetto or chrome://tracing");
+    }
     Ok(())
 }
 

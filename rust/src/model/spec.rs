@@ -32,7 +32,7 @@ use std::collections::VecDeque;
 use std::sync::Arc;
 
 use crate::eval::argmax;
-use crate::util::perf;
+use crate::util::{perf, trace};
 
 use super::{KvCache, ModelConfig, SparseLm};
 
@@ -213,11 +213,20 @@ impl SpecDecoder {
     /// longest prefix of drafts matching the target's greedy choices,
     /// queue them for commitment, and return the logits after `tok`.
     fn round(&self, state: &mut SpecState, tok: i32) -> crate::Result<Vec<f32>> {
+        let mut rsp = trace::span("spec.round");
+        let _in_round = trace::scope(trace::Ctx {
+            trace: rsp.trace(),
+            span: rsp.id(),
+        });
         // discard speculative positions past the committed prefix
         // (no-op when the previous window was fully committed); both
         // caches were fed the same window, so they stay in lockstep
-        state.draft_cache.truncate(state.committed)?;
-        state.target_cache.truncate(state.committed)?;
+        {
+            let mut sp = trace::span("spec.rollback");
+            sp.arg("to", state.committed);
+            state.draft_cache.truncate(state.committed)?;
+            state.target_cache.truncate(state.committed)?;
+        }
         let cap = state.target_cache.capacity();
         anyhow::ensure!(
             state.committed < cap,
@@ -227,6 +236,7 @@ impl SpecDecoder {
         // bound the window so the ring never slides — the rollback
         // above must stay exact (see KvCache::truncate)
         let w = state.k.min(cap - state.committed);
+        rsp.arg("k", w);
 
         // ---- draft: w greedy steps on the quantized GEMV path --------
         let mut window = Vec::with_capacity(w);
@@ -234,6 +244,12 @@ impl SpecDecoder {
         let mut drafted = Vec::with_capacity(w);
         {
             let _d = perf::phase(perf::Phase::Draft);
+            let mut sp = trace::span("spec.draft");
+            sp.arg("tokens", w);
+            let _in_draft = trace::scope(trace::Ctx {
+                trace: sp.trace(),
+                span: sp.id(),
+            });
             let mut cur = tok;
             for _ in 0..w {
                 let lg = self.draft.decode_step(&[cur], &mut [&mut state.draft_cache])?;
@@ -248,6 +264,12 @@ impl SpecDecoder {
         // ---- verify: one w-row batched forward on the bf16 target ----
         let logits = {
             let _v = perf::phase(perf::Phase::Verify);
+            let mut sp = trace::span("spec.verify");
+            sp.arg("rows", w);
+            let _in_verify = trace::scope(trace::Ctx {
+                trace: sp.trace(),
+                span: sp.id(),
+            });
             self.target.decode_window(&window, &mut state.target_cache)?
         };
 
@@ -257,6 +279,7 @@ impl SpecDecoder {
             accepted += 1;
         }
         perf::record_spec_round(w, accepted);
+        rsp.arg("accepted", accepted);
 
         // window[i] = drafted[i-1] for i >= 1: those positions are fed
         // and verified — queue them so the sampler can commit them

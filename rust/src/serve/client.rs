@@ -7,6 +7,7 @@ use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::protocol::{Request, Response};
+use crate::util::trace;
 
 /// One TCP connection speaking the line protocol.
 pub struct ServeClient {
@@ -36,6 +37,39 @@ impl ServeClient {
         let n = self.reader.read_line(&mut buf)?;
         anyhow::ensure!(n > 0, "server closed the connection");
         Response::parse(buf.trim_end()).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// [`Self::call`] with a trace context riding the wire as transport
+    /// metadata — the receiving ingress parents its spans under
+    /// `ctx.span`. With an inactive context the line is byte-identical
+    /// to [`Self::call`]'s.
+    pub fn call_traced(&mut self, req: &Request, ctx: trace::Ctx) -> crate::Result<Response> {
+        let mut line = req.to_json_traced(ctx).to_string();
+        line.push('\n');
+        self.stream.write_all(line.as_bytes())?;
+        let mut buf = String::new();
+        let n = self.reader.read_line(&mut buf)?;
+        anyhow::ensure!(n > 0, "server closed the connection");
+        Response::parse(buf.trim_end()).map_err(|e| anyhow::anyhow!(e))
+    }
+
+    /// Export traces from the server's flight recorder as a Chrome
+    /// trace-event page: explicit `ids` win; otherwise the most recent
+    /// `last` completed traces.
+    pub fn trace_export(
+        &mut self,
+        ids: &[u64],
+        last: usize,
+    ) -> crate::Result<crate::util::json::Json> {
+        let req = Request::Trace {
+            ids: ids.to_vec(),
+            last: if ids.is_empty() { last.max(1) } else { 1 },
+        };
+        match self.call(&req)? {
+            Response::Trace(j) => Ok(j),
+            Response::Error(e) => anyhow::bail!("server error: {e}"),
+            other => anyhow::bail!("unexpected response {other:?}"),
+        }
     }
 
     /// Send a raw line (protocol fuzzing / tests) and parse the reply.

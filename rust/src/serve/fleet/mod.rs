@@ -42,6 +42,7 @@ pub use router::FleetRouter;
 pub use worker::{process_spawner, READY_PREFIX, Spawner, Worker};
 
 use super::ops::{Reply, Request};
+use crate::util::{logging, trace};
 
 /// Fleet topology and timing knobs.
 #[derive(Clone, Debug)]
@@ -111,6 +112,7 @@ pub struct FleetHandle {
 /// time) and start the router's acceptor and supervisor threads.
 pub fn start_fleet(cfg: FleetConfig, spawner: Spawner) -> crate::Result<FleetHandle> {
     anyhow::ensure!(cfg.workers >= 1, "a fleet needs at least one worker");
+    trace::set_process_name("router");
     log::info!("booting fleet of {} workers", cfg.workers);
     let results: Vec<crate::Result<Worker>> = std::thread::scope(|scope| {
         let sp = &spawner;
@@ -330,22 +332,44 @@ fn handle_conn(stream: TcpStream, router: &FleetRouter, stop: &AtomicBool) {
         if line.is_empty() {
             continue;
         }
-        let reply = match Request::parse(line) {
+        let reply = match Request::parse_traced(line) {
             Err(e) => {
                 router.note_parse_error();
                 Reply::Error(e)
             }
-            Ok(Request::Shutdown) => {
+            Ok((Request::Shutdown, _)) => {
                 // lifecycle op, owned by the ingress: acknowledge, then
                 // let join()/shutdown() run the fleet-wide drain
                 let _ = respond(&stream, &Reply::ShuttingDown);
                 stop.store(true, Ordering::SeqCst);
                 return;
             }
-            Ok(req) => {
+            Ok((req, wire)) => {
+                let trace_id = if wire.active() { wire.trace } else { trace::mint_id() };
                 let sticky = matches!(req, Request::Generate { .. });
-                let (reply, used) =
-                    router.route_with_affinity(&req, if sticky { affinity } else { None });
+                let t0 = Instant::now();
+                let (reply, used) = {
+                    let mut root = trace::root("ingress.tcp", trace_id, wire.span);
+                    root.arg("op", req.op());
+                    let _in_req = trace::scope(trace::Ctx {
+                        trace: root.trace(),
+                        span: root.id(),
+                    });
+                    router.route_with_affinity(&req, if sticky { affinity } else { None })
+                };
+                let ms = t0.elapsed().as_millis() as u64;
+                if ms >= trace::slow_ms() {
+                    logging::kv(
+                        log::Level::Warn,
+                        "fleet",
+                        "slow_request",
+                        &[
+                            ("trace", trace::id_hex(trace_id)),
+                            ("op", req.op().to_string()),
+                            ("ms", ms.to_string()),
+                        ],
+                    );
+                }
                 if sticky {
                     affinity = used;
                 }

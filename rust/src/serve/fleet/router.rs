@@ -21,6 +21,7 @@ use crate::serve::http::{Gate, HttpStats};
 use crate::serve::ops::{OpExecutor, Reply, Request};
 use crate::util::json::Json;
 use crate::util::prom::{PromKind, PromWriter};
+use crate::util::{logging, trace};
 
 /// One supervised worker slot. `gen` bumps on every restart so pooled
 /// connections to the previous incarnation are never reused.
@@ -160,6 +161,13 @@ impl FleetRouter {
             // intercepted by the ingress, never routed
             return (Reply::Error("shutdown is a connection-level op".into()), affinity);
         }
+        if let Request::Trace { ids, last } = req {
+            // answered by the router itself: its flight recorder holds
+            // the ingress + dispatch spans, and the workers' pages are
+            // merged in by trace id. Stays available while draining so
+            // the last traces of a dying fleet remain inspectable.
+            return (self.merged_trace(ids, *last), affinity);
+        }
         if self.is_draining() {
             return (Reply::Error("fleet is draining".into()), affinity);
         }
@@ -171,7 +179,7 @@ impl FleetRouter {
                 return (Reply::Error("fleet at capacity, retry later".into()), affinity);
             };
             inflight.fetch_add(1, Ordering::SeqCst);
-            let outcome = self.forward_once(idx, gen, addr, req);
+            let outcome = self.forward_once(idx, gen, addr, req, excluded.len());
             inflight.fetch_sub(1, Ordering::SeqCst);
             match outcome {
                 Ok(reply) => {
@@ -231,18 +239,72 @@ impl FleetRouter {
         gen: u64,
         addr: SocketAddr,
         req: &Request,
+        attempt: usize,
     ) -> Result<Reply, ForwardFail> {
         let mut conn = match self.checkout(idx, gen, addr) {
             Ok(c) => c,
             Err(e) => return Err(ForwardFail::Connect(e.to_string())),
         };
-        match conn.client.call(req) {
+        // The dispatch span rides the wire as `trace/span` transport
+        // metadata, so the worker's ingress root parents under it and a
+        // redispatch shows up as a second `router.dispatch` child of
+        // the same ingress span.
+        let mut sp = trace::span("router.dispatch");
+        sp.arg("worker", idx as u64);
+        sp.arg("attempt", attempt as u64);
+        let ctx = trace::Ctx { trace: sp.trace(), span: sp.id() };
+        match conn.client.call_traced(req, ctx) {
             Ok(reply) => {
                 self.checkin(conn);
                 Ok(reply)
             }
-            Err(e) => Err(ForwardFail::MidOp(e.to_string())),
+            Err(e) => {
+                let msg = e.to_string();
+                sp.arg("error", msg.clone());
+                Err(ForwardFail::MidOp(msg))
+            }
         }
+    }
+
+    /// Answer a `trace` op fleet-wide: export the router's own page,
+    /// poll each live worker for the same trace ids, and merge with one
+    /// process lane per contributor. `ids` win over `last`, mirroring
+    /// the single-process selection semantics.
+    fn merged_trace(&self, ids: &[u64], last: usize) -> Reply {
+        let keep: Vec<u64> = if ids.is_empty() {
+            // "last K" is resolved against the *router's* completed
+            // ring — the router saw every request, so its ring is the
+            // fleet-wide notion of recency
+            let done = trace::completed_ids();
+            let skip = done.len().saturating_sub(last.max(1));
+            done[skip..].to_vec()
+        } else {
+            ids.to_vec()
+        };
+        let own = trace::export_chrome(&trace::Selection { ids: keep.clone(), last: 1 });
+        if keep.is_empty() {
+            return Reply::Trace(own);
+        }
+        let addrs: Vec<(SocketAddr, bool)> = {
+            let slots = self.slots.lock().unwrap();
+            slots.iter().map(|s| (s.worker.addr, s.up)).collect()
+        };
+        let mut pages = vec![own];
+        for (addr, up) in addrs {
+            if !up {
+                continue;
+            }
+            if let Ok(page) = Self::poll_trace(addr, &keep) {
+                pages.push(page);
+            }
+        }
+        Reply::Trace(trace::merge_chrome(&pages, &keep))
+    }
+
+    fn poll_trace(addr: SocketAddr, ids: &[u64]) -> crate::Result<Json> {
+        let mut c = ServeClient::connect(addr)?;
+        c.set_timeout(Duration::from_secs(2))?;
+        c.trace_export(ids, 1)
     }
 
     fn checkout(&self, idx: usize, gen: u64, addr: SocketAddr) -> crate::Result<PooledConn> {
@@ -278,7 +340,12 @@ impl FleetRouter {
             for (i, s) in slots.iter_mut().enumerate() {
                 if s.worker.has_exited() {
                     if s.up {
-                        log::warn!("fleet worker {i} exited; restarting");
+                        logging::kv(
+                            log::Level::Warn,
+                            "fleet",
+                            "worker_exit",
+                            &[("worker", i.to_string())],
+                        );
                     }
                     s.up = false;
                     dead.push(i);
@@ -295,9 +362,14 @@ impl FleetRouter {
                     Err(_) => {
                         s.strikes += 1;
                         if s.strikes >= self.cfg.probe_strikes {
-                            log::warn!(
-                                "fleet worker {i} failed {} health probes; restarting",
-                                s.strikes
+                            logging::kv(
+                                log::Level::Warn,
+                                "fleet",
+                                "worker_unresponsive",
+                                &[
+                                    ("worker", i.to_string()),
+                                    ("strikes", s.strikes.to_string()),
+                                ],
                             );
                             s.up = false;
                             s.worker.kill();
@@ -335,9 +407,19 @@ impl FleetRouter {
                 s.up = true;
                 s.strikes = 0;
                 self.restarts.fetch_add(1, Ordering::Relaxed);
-                log::info!("fleet worker {idx} restarted (gen {})", s.gen);
+                logging::kv(
+                    log::Level::Info,
+                    "fleet",
+                    "worker_restart",
+                    &[("worker", idx.to_string()), ("gen", s.gen.to_string())],
+                );
             }
-            Err(e) => log::warn!("fleet worker {idx} respawn failed: {e}"),
+            Err(e) => logging::kv(
+                log::Level::Warn,
+                "fleet",
+                "worker_respawn_failed",
+                &[("worker", idx.to_string()), ("error", e.to_string())],
+            ),
         }
     }
 

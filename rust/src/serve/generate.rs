@@ -31,11 +31,18 @@ use std::time::{Duration, Instant};
 use crate::eval::Sampler;
 use crate::model::{KvCache, SparseLm, SpecDecoder, SpecState};
 use crate::util::timer::LatencyRing;
+use crate::util::trace;
 
 /// Decode-step latency samples retained for the percentile fields of
 /// [`GenStats`] — a sliding window, so `decode_p50_us` reads "p50 now",
 /// not "p50 since boot".
 const STEP_LATENCY_WINDOW: usize = 4096;
+
+/// Queue-age histogram bucket upper bounds in seconds (time from
+/// `submit` to admission), the `sparselm_queue_age_seconds` Prometheus
+/// family. [`GenStats::queue_age`] holds one non-cumulative count per
+/// bound plus a final overflow slot.
+pub const QUEUE_AGE_BOUNDS: [f64; 8] = [0.0001, 0.001, 0.005, 0.02, 0.1, 0.5, 2.0, 10.0];
 
 /// One generation request: a tokenized prompt plus sampling policy.
 #[derive(Clone, Debug)]
@@ -53,6 +60,9 @@ pub struct GenRequest {
     pub seed: u64,
     /// token id that terminates generation without being emitted
     pub stop: Option<i32>,
+    /// trace context the scheduler's spans (queue wait, prefill, steps)
+    /// parent under; [`trace::Ctx::NONE`] when the request isn't traced
+    pub trace: trace::Ctx,
 }
 
 /// Per-request result.
@@ -101,6 +111,13 @@ pub struct GenStats {
     pub decode_p50_us: f64,
     /// decode-step latency p99 in µs over the recent window
     pub decode_p99_us: f64,
+    /// submit→admission age histogram: one non-cumulative count per
+    /// [`QUEUE_AGE_BOUNDS`] entry plus a final overflow slot (empty
+    /// until the first admission)
+    pub queue_age: Vec<u64>,
+    /// total submit→admission seconds across all admissions (the
+    /// histogram family's `_sum`)
+    pub queue_age_sum_secs: f64,
 }
 
 impl GenStats {
@@ -286,6 +303,29 @@ impl GenScheduler {
         slot: usize,
         engine: &mut impl DecodeEngine,
     ) -> crate::Result<Option<ActiveSeq>> {
+        // queue age: histogram for the scrape page, span for the trace
+        let age = p.enqueued.elapsed();
+        let age_secs = age.as_secs_f64();
+        {
+            let mut s = self.stats.lock().unwrap();
+            if s.queue_age.len() != QUEUE_AGE_BOUNDS.len() + 1 {
+                s.queue_age = vec![0; QUEUE_AGE_BOUNDS.len() + 1];
+            }
+            let idx = QUEUE_AGE_BOUNDS
+                .iter()
+                .position(|&b| age_secs <= b)
+                .unwrap_or(QUEUE_AGE_BOUNDS.len());
+            s.queue_age[idx] += 1;
+            s.queue_age_sum_secs += age_secs;
+        }
+        let age_us = age.as_micros().min(u64::MAX as u128) as u64;
+        trace::record_at(
+            "sched.queue_wait",
+            p.req.trace,
+            trace::now_us().saturating_sub(age_us),
+            age_us,
+            vec![],
+        );
         let max_pos = engine.max_positions().max(2);
         if p.req.prompt.is_empty() {
             return Ok(None); // drop reply: protocol layer validates first
@@ -299,7 +339,14 @@ impl GenScheduler {
             return Ok(None);
         }
         let t0 = Instant::now();
-        let logits = engine.start(slot, &prompt)?;
+        let logits = {
+            // prefill span parents under the request; spmm spans inside
+            // the engine's forward nest under it via the ambient scope
+            let _as_req = trace::scope(p.req.trace);
+            let mut sp = trace::span("sched.prefill");
+            sp.arg("prompt_tokens", prompt.len());
+            engine.start(slot, &prompt)?
+        };
         let prefill_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
         let mut sampler = Sampler::new(p.req.temperature, p.req.seed);
         let tok = sampler.next(&logits) as i32;
@@ -406,9 +453,38 @@ impl GenScheduler {
             active.sort_by_key(|a| a.slot);
             let toks: Vec<(usize, i32)> =
                 active.iter().map(|a| (a.slot, a.next_tok)).collect();
+            // batch-leader attribution: the first traced member's trace
+            // gets a real step span (the engine's spmm spans nest under
+            // it via the ambient scope); every other traced member gets
+            // the same interval recorded into its own trace afterwards
+            let leader_idx = active.iter().position(|a| a.pending.req.trace.active());
+            let step_start_us = trace::now_us();
             let t0 = Instant::now();
-            let rows = engine.step(&toks)?;
+            let rows = {
+                let leader = leader_idx
+                    .map(|i| active[i].pending.req.trace)
+                    .unwrap_or(trace::Ctx::NONE);
+                let _as_leader = trace::scope(leader);
+                let mut sp = trace::span("sched.step");
+                sp.arg("fill", active.len());
+                engine.step(&toks)?
+            };
             let step_dt = t0.elapsed();
+            if leader_idx.is_some() {
+                let dur_us = step_dt.as_micros().min(u64::MAX as u128) as u64;
+                for (i, a) in active.iter().enumerate() {
+                    if Some(i) == leader_idx {
+                        continue;
+                    }
+                    trace::record_at(
+                        "sched.step",
+                        a.pending.req.trace,
+                        step_start_us,
+                        dur_us,
+                        vec![("fill", trace::ArgVal::U(active.len() as u64))],
+                    );
+                }
+            }
             debug_assert_eq!(rows.len(), active.len());
             let fill = active.len();
             let mut done: Vec<usize> = Vec::new();
@@ -667,6 +743,7 @@ mod tests {
             temperature: 0.0,
             seed: id,
             stop: None,
+            trace: trace::Ctx::NONE,
         }
     }
 
@@ -789,6 +866,7 @@ mod tests {
             temperature: 0.0,
             seed: 0,
             stop: None,
+            trace: trace::Ctx::NONE,
         };
         let r2 = s
             .submit(long)
@@ -810,6 +888,7 @@ mod tests {
                 temperature: 0.0,
                 seed: 0,
                 stop: None,
+                trace: trace::Ctx::NONE,
             };
             assert!(s.submit(empty).recv().is_err(), "empty prompt disconnects");
             // the loop survives and serves the next request
@@ -885,6 +964,7 @@ mod tests {
                             temperature: 0.0,
                             seed: i,
                             stop: None,
+                            trace: trace::Ctx::NONE,
                         })
                         .recv_timeout(Duration::from_secs(10))
                         .map_err(|e| format!("generate {i} starved: {e}"))?;

@@ -42,6 +42,8 @@ struct Inner {
     bucket_counts: [u64; BOUNDS.len() + 1],
     duration_sum: f64,
     duration_count: u64,
+    /// per-route duration histograms: non-cumulative bucket counts + sum
+    route_duration: BTreeMap<&'static str, ([u64; BOUNDS.len() + 1], f64)>,
 }
 
 /// HTTP front-end counters, shared by every connection thread.
@@ -64,6 +66,7 @@ impl Default for HttpStats {
                 bucket_counts: [0; BOUNDS.len() + 1],
                 duration_sum: 0.0,
                 duration_count: 0,
+                route_duration: BTreeMap::new(),
             }),
         }
     }
@@ -99,6 +102,12 @@ impl HttpStats {
         inner.bucket_counts[slot] += 1;
         inner.duration_sum += secs;
         inner.duration_count += 1;
+        let (buckets, sum) = inner
+            .route_duration
+            .entry(route)
+            .or_insert(([0; BOUNDS.len() + 1], 0.0));
+        buckets[slot] += 1;
+        *sum += secs;
     }
 
     pub fn connections(&self) -> u64 {
@@ -309,6 +318,47 @@ pub fn render(service: &Service, http: &HttpStats, gate: &Gate, draining: bool) 
             &[],
             service.gen_queue_depth() as f64,
         );
+
+        // queue-age histogram: how long requests waited before the
+        // scheduler admitted them into the decode batch
+        use crate::serve::generate::QUEUE_AGE_BOUNDS;
+        w.metric(
+            "sparselm_queue_age_seconds",
+            "queue wait before admission to the decode batch",
+            PromKind::Histogram,
+        );
+        let age_counts: Vec<u64> = if gs.queue_age.len() == QUEUE_AGE_BOUNDS.len() + 1 {
+            gs.queue_age.clone()
+        } else {
+            vec![0; QUEUE_AGE_BOUNDS.len() + 1]
+        };
+        w.histogram_series(
+            "sparselm_queue_age_seconds",
+            &[],
+            &QUEUE_AGE_BOUNDS,
+            &age_counts,
+            gs.queue_age_sum_secs,
+        );
+    }
+
+    // ---- per-op latency percentiles (both ingresses) ------------------
+    w.metric(
+        "sparselm_op_latency_seconds",
+        "per-op request latency percentiles over the recent window",
+        PromKind::Gauge,
+    );
+    for (i, op) in crate::serve::service::LAT_OPS.into_iter().enumerate() {
+        let (p50, p99, _n) = service.op_latency(i);
+        w.sample(
+            "sparselm_op_latency_seconds",
+            &[("op", op), ("quantile", "0.5")],
+            p50,
+        );
+        w.sample(
+            "sparselm_op_latency_seconds",
+            &[("op", op), ("quantile", "0.99")],
+            p99,
+        );
     }
 
     // ---- HTTP front end -----------------------------------------------
@@ -416,6 +466,23 @@ pub(crate) fn render_http_families(
         );
     }
     w.metric(
+        "http_route_duration_seconds",
+        "request wall time by route",
+        PromKind::Histogram,
+    );
+    {
+        let inner = http.inner.lock().unwrap();
+        for (route, (buckets, sum)) in &inner.route_duration {
+            w.histogram_series(
+                "http_route_duration_seconds",
+                &[("route", route)],
+                &BOUNDS,
+                buckets,
+                *sum,
+            );
+        }
+    }
+    w.metric(
         "http_request_p50_us",
         "median request latency over the recent window",
         PromKind::Gauge,
@@ -485,6 +552,36 @@ mod tests {
         assert!(s.value("sparselm_spmm_calls_total", &[]).is_some());
         assert_eq!(s.value("sparselm_score_queue_depth", &[]), Some(0.0));
         assert_eq!(s.value("sparselm_ops_total", &[("op", "nll")]), Some(0.0));
+        // per-route duration histogram: score saw 3 requests (2x200 + 429)
+        assert_eq!(
+            s.value(
+                "http_route_duration_seconds_bucket",
+                &[("route", "score"), ("le", "+Inf")]
+            ),
+            Some(3.0)
+        );
+        assert_eq!(
+            s.value(
+                "http_route_duration_seconds_count",
+                &[("route", "health")]
+            ),
+            Some(1.0)
+        );
+        // per-op latency percentiles are always present (0 when idle)
+        assert_eq!(
+            s.value(
+                "sparselm_op_latency_seconds",
+                &[("op", "nll"), ("quantile", "0.5")]
+            ),
+            Some(0.0)
+        );
+        assert_eq!(
+            s.value(
+                "sparselm_op_latency_seconds",
+                &[("op", "generate"), ("quantile", "0.99")]
+            ),
+            Some(0.0)
+        );
     }
 
     #[test]
@@ -510,12 +607,19 @@ mod tests {
             temperature: 0.0,
             seed: 0,
             stop: None,
+            trace: crate::util::trace::Ctx::NONE,
         });
         let http = HttpStats::default();
         let gate = Gate::new(2);
         let page = render(&service, &http, &gate, false);
         let s = parse_text(&page).expect("page must be valid prometheus text");
         assert_eq!(s.value("sparselm_gen_queue_depth", &[]), Some(1.0));
+        // queue-age histogram renders (all-zero: nothing admitted yet)
+        assert_eq!(
+            s.value("sparselm_queue_age_seconds_bucket", &[("le", "+Inf")]),
+            Some(0.0)
+        );
+        assert_eq!(s.value("sparselm_queue_age_seconds_count", &[]), Some(0.0));
         // the speculative-decode counter families ride along via the
         // global perf exporter on the same page
         assert!(s.value("sparselm_spec_rounds_total", &[]).is_some());

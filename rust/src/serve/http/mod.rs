@@ -52,7 +52,9 @@ pub use limits::Gate;
 pub use metrics::HttpStats;
 
 use super::ops::OpExecutor;
+use super::protocol::Response;
 use crate::util::json::Json;
+use crate::util::{logging, trace};
 use parser::{find_head_end, parse_head};
 use router::{HttpResponse, Route};
 
@@ -216,7 +218,8 @@ pub fn serve_http(service: Arc<dyn OpExecutor>, cfg: HttpConfig) -> crate::Resul
                     v.retain(|h| !h.is_finished());
                     if v.len() >= ctx.cfg.max_conns {
                         let resp =
-                            HttpResponse::error(503, "server at connection capacity");
+                            HttpResponse::error(503, "server at connection capacity")
+                                .with_header("X-Request-Id", trace::id_hex(trace::mint_id()));
                         let mut s = stream;
                         let _ = resp.write_to(&mut s, true);
                         continue;
@@ -286,7 +289,8 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
         }
         if let Some(t) = started {
             if t.elapsed() > ctx.cfg.read_timeout {
-                let resp = HttpResponse::error(408, "request timed out");
+                let resp = HttpResponse::error(408, "request timed out")
+                    .with_header("X-Request-Id", trace::id_hex(trace::mint_id()));
                 let _ = resp.write_to(&mut stream, true);
                 ctx.stats.observe("other", 408, t.elapsed());
                 break;
@@ -297,7 +301,8 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
             Ok(0) => {
                 if !buf.is_empty() {
                     // mid-request EOF: best-effort error, then close
-                    let resp = HttpResponse::error(400, "truncated request");
+                    let resp = HttpResponse::error(400, "truncated request")
+                        .with_header("X-Request-Id", trace::id_hex(trace::mint_id()));
                     let _ = resp.write_to(&mut stream, true);
                     ctx.stats.observe("other", 400, Duration::ZERO);
                 }
@@ -320,15 +325,20 @@ fn handle_conn(mut stream: TcpStream, ctx: &ConnCtx) {
     }
 }
 
-/// Write `resp`, record the observation, and translate into a [`Step`].
+/// Write `resp` (stamped with the request's trace ID), record the
+/// observation, and translate into a [`Step`]. Every reply that leaves
+/// through here — success or typed error — echoes `X-Request-Id`, so a
+/// client can always hand the ID to `/debug/trace` or grep the slow log.
 fn finish(
     stream: &mut TcpStream,
     ctx: &ConnCtx,
     label: &'static str,
-    resp: &HttpResponse,
+    resp: HttpResponse,
     close: bool,
     t0: Instant,
+    rid: u64,
 ) -> Step {
+    let resp = resp.with_header("X-Request-Id", trace::id_hex(rid));
     let wrote = resp.write_to(stream, close).is_ok();
     ctx.stats.observe(label, resp.status, t0.elapsed());
     if close || !wrote {
@@ -338,19 +348,31 @@ fn finish(
     }
 }
 
+/// The request's trace ID: honor a client-supplied `X-Request-Id`
+/// (hex IDs pass through verbatim, anything else hashes to a stable
+/// ID), mint a fresh one otherwise.
+fn request_trace_id(head: &parser::Head) -> u64 {
+    match head.header("x-request-id").map(str::trim) {
+        Some(v) if !v.is_empty() => {
+            trace::parse_hex(v).unwrap_or_else(|| trace::id_from_label(v))
+        }
+        _ => trace::mint_id(),
+    }
+}
+
 /// Try to carve one complete request out of `buf` and answer it.
 fn step(buf: &mut Vec<u8>, stream: &mut TcpStream, ctx: &ConnCtx) -> Step {
     let t0 = Instant::now();
     let Some(head_end) = find_head_end(buf) else {
         if buf.len() > ctx.cfg.max_head {
             let resp = HttpResponse::error(431, "request head too large");
-            return finish(stream, ctx, "other", &resp, true, t0);
+            return finish(stream, ctx, "other", resp, true, t0, trace::mint_id());
         }
         return Step::NeedMore;
     };
     if head_end > ctx.cfg.max_head {
         let resp = HttpResponse::error(431, "request head too large");
-        return finish(stream, ctx, "other", &resp, true, t0);
+        return finish(stream, ctx, "other", resp, true, t0, trace::mint_id());
     }
     let head = match parse_head(&buf[..head_end]) {
         Ok(h) => h,
@@ -358,23 +380,24 @@ fn step(buf: &mut Vec<u8>, stream: &mut TcpStream, ctx: &ConnCtx) -> Step {
             // after a malformed head the request framing is unknowable;
             // answer and close rather than guess at a resync point
             let resp = HttpResponse::from_http_error(&e);
-            return finish(stream, ctx, "other", &resp, true, t0);
+            return finish(stream, ctx, "other", resp, true, t0, trace::mint_id());
         }
     };
+    let rid = request_trace_id(&head);
     if head.is_chunked() {
         let resp = HttpResponse::error(501, "chunked transfer encoding not supported");
-        return finish(stream, ctx, "other", &resp, true, t0);
+        return finish(stream, ctx, "other", resp, true, t0, rid);
     }
     let body_len = match head.content_length() {
         Ok(n) => n.unwrap_or(0),
         Err(e) => {
             let resp = HttpResponse::from_http_error(&e);
-            return finish(stream, ctx, "other", &resp, true, t0);
+            return finish(stream, ctx, "other", resp, true, t0, rid);
         }
     };
     if body_len > ctx.cfg.max_body {
         let resp = HttpResponse::error(413, "request body too large");
-        return finish(stream, ctx, "other", &resp, true, t0);
+        return finish(stream, ctx, "other", resp, true, t0, rid);
     }
     if buf.len() < head_end + body_len {
         return Step::NeedMore;
@@ -382,9 +405,9 @@ fn step(buf: &mut Vec<u8>, stream: &mut TcpStream, ctx: &ConnCtx) -> Step {
 
     let body: Vec<u8> = buf[head_end..head_end + body_len].to_vec();
     buf.drain(..head_end + body_len);
-    let (label, resp, force_close) = dispatch(&head, &body, ctx);
+    let (label, resp, force_close) = dispatch(&head, &body, ctx, rid);
     let close = force_close || head.wants_close();
-    finish(stream, ctx, label, &resp, close, t0)
+    finish(stream, ctx, label, resp, close, t0, rid)
 }
 
 /// Route and execute one well-framed request. Returns the route label
@@ -393,6 +416,7 @@ fn dispatch(
     head: &parser::Head,
     body: &[u8],
     ctx: &ConnCtx,
+    rid: u64,
 ) -> (&'static str, HttpResponse, bool) {
     let route = match router::route(&head.method, &head.target) {
         Ok(r) => r,
@@ -426,6 +450,19 @@ fn dispatch(
             let page = ctx.service.metrics_page(&ctx.stats, &ctx.gate, draining);
             (label, HttpResponse::metrics(page), false)
         }
+        Route::Trace => {
+            // debug read: no gate, and it keeps working while draining
+            // (like /metrics) so the last requests stay inspectable
+            let resp = match router::trace_query(&head.target) {
+                Err(msg) => HttpResponse::error(400, &msg),
+                Ok(req) => match ctx.service.execute(&req) {
+                    Response::Trace(page) => HttpResponse::json(200, &page),
+                    Response::Error(e) => HttpResponse::error(400, &e),
+                    other => HttpResponse::from_protocol(&other),
+                },
+            };
+            (label, resp, false)
+        }
         Route::Score | Route::Generate => {
             if draining {
                 // close so load balancers stop reusing this socket
@@ -440,7 +477,34 @@ fn dispatch(
             ctx.stats.record_admitted();
             let resp = match router::body_to_request(route, body) {
                 Err(msg) => HttpResponse::error(400, &msg),
-                Ok(req) => HttpResponse::from_protocol(&ctx.service.execute(&req)),
+                Ok(req) => {
+                    let t0 = Instant::now();
+                    let reply = {
+                        let mut root = trace::root("ingress.http", rid, 0);
+                        root.arg("route", label);
+                        root.arg("op", req.op());
+                        let _in_req = trace::scope(trace::Ctx {
+                            trace: root.trace(),
+                            span: root.id(),
+                        });
+                        ctx.service.execute(&req)
+                    };
+                    let ms = t0.elapsed().as_millis() as u64;
+                    if ms >= trace::slow_ms() {
+                        logging::kv(
+                            log::Level::Warn,
+                            "serve::http",
+                            "slow_request",
+                            &[
+                                ("trace", trace::id_hex(rid)),
+                                ("route", label.to_string()),
+                                ("op", req.op().to_string()),
+                                ("ms", ms.to_string()),
+                            ],
+                        );
+                    }
+                    HttpResponse::from_protocol(&reply)
+                }
             };
             (label, resp, false)
         }

@@ -14,8 +14,9 @@ use std::io::Write;
 use super::parser::HttpError;
 use crate::serve::protocol::{Request, Response};
 use crate::util::json::Json;
+use crate::util::trace;
 
-/// The four endpoints the front end serves.
+/// The endpoints the front end serves.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Route {
     /// `GET /health` — liveness/readiness (503 while draining).
@@ -26,6 +27,9 @@ pub enum Route {
     Score,
     /// `POST /generate` — KV-cached generation.
     Generate,
+    /// `GET /debug/trace` — Chrome-trace export from the flight
+    /// recorder (`?id=<hex>[,<hex>..]` or `?last=K`).
+    Trace,
 }
 
 impl Route {
@@ -36,6 +40,7 @@ impl Route {
             Route::Metrics => "metrics",
             Route::Score => "score",
             Route::Generate => "generate",
+            Route::Trace => "trace",
         }
     }
 }
@@ -50,6 +55,7 @@ pub fn route(method: &str, target: &str) -> Result<Route, HttpError> {
         "/metrics" => ("GET", Route::Metrics),
         "/score" => ("POST", Route::Score),
         "/generate" => ("POST", Route::Generate),
+        "/debug/trace" => ("GET", Route::Trace),
         _ => {
             return Err(HttpError::new(404, format!("no route for {path:?}")));
         }
@@ -83,6 +89,46 @@ pub fn body_to_request(route: Route, body: &[u8]) -> Result<Request, String> {
         Route::Generate => Request::generate_from_json(&v),
         Route::Health | Route::Metrics => Err("route carries no body".into()),
     }
+}
+
+/// Parse the `/debug/trace` query string into the protocol [`Request`]
+/// a TCP client would send over the `{"op":"trace"}` line — same
+/// normalization (explicit `id`s win over `last`, `last` in 1..=1024,
+/// default 1), so the two ingresses export identical pages.
+pub fn trace_query(target: &str) -> Result<Request, String> {
+    let query = target
+        .splitn(2, '?')
+        .nth(1)
+        .unwrap_or("")
+        .split('#')
+        .next()
+        .unwrap_or("");
+    let mut ids: Vec<u64> = Vec::new();
+    let mut last = 1usize;
+    for pair in query.split('&').filter(|p| !p.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        match k {
+            "id" => {
+                for part in v.split(',').filter(|p| !p.is_empty()) {
+                    let id = trace::parse_hex(part)
+                        .ok_or_else(|| format!("bad trace id {part:?}"))?;
+                    ids.push(id);
+                }
+            }
+            "last" => {
+                let n: usize = v.parse().map_err(|_| format!("bad last {v:?}"))?;
+                if n == 0 || n > 1024 {
+                    return Err(format!("last must be in 1..=1024, got {n}"));
+                }
+                last = n;
+            }
+            other => return Err(format!("unknown trace query key {other:?}")),
+        }
+    }
+    if !ids.is_empty() {
+        last = 1;
+    }
+    Ok(Request::Trace { ids, last })
 }
 
 /// Reason phrase for the statuses this server emits.
@@ -205,6 +251,29 @@ mod tests {
         assert_eq!(route("GET", "/metrics?format=prom").unwrap(), Route::Metrics);
         assert_eq!(route("POST", "/score").unwrap(), Route::Score);
         assert_eq!(route("POST", "/generate").unwrap(), Route::Generate);
+        assert_eq!(route("GET", "/debug/trace?last=3").unwrap(), Route::Trace);
+        assert_eq!(route("POST", "/debug/trace").unwrap_err().status, 405);
+    }
+
+    #[test]
+    fn trace_query_mirrors_protocol_normalization() {
+        assert_eq!(
+            trace_query("/debug/trace").unwrap(),
+            Request::Trace { ids: vec![], last: 1 }
+        );
+        assert_eq!(
+            trace_query("/debug/trace?last=5").unwrap(),
+            Request::Trace { ids: vec![], last: 5 }
+        );
+        // explicit ids win: last resets to 1 like trace_from_json
+        assert_eq!(
+            trace_query("/debug/trace?id=0a,ff&last=9").unwrap(),
+            Request::Trace { ids: vec![0x0a, 0xff], last: 1 }
+        );
+        assert!(trace_query("/debug/trace?last=0").is_err());
+        assert!(trace_query("/debug/trace?last=2000").is_err());
+        assert!(trace_query("/debug/trace?id=zz").is_err());
+        assert!(trace_query("/debug/trace?frob=1").is_err());
     }
 
     #[test]

@@ -22,10 +22,24 @@
 //!   clocks (`prefill_nanos`, `decode_nanos` — monotone totals inside
 //!   the engine) and the recent-window decode-step latency percentiles
 //!   (`decode_p50_us`, `decode_p99_us`)
+//! * `{"op":"trace","last":K}` or `{"op":"trace","ids":["<hex>",...]}`
+//!   → Chrome trace-event JSON for the last K (default 1) completed
+//!   request traces, or for explicit trace IDs, from the in-process
+//!   flight recorder (`util::trace`). On a fleet router this merges the
+//!   router's spans with every worker's under one page, one process
+//!   lane each
 //! * `{"op":"shutdown"}` → drain and stop (admin)
 //!
 //! Replies always carry `"ok"`; failures put a message in `"error"`
 //! and never kill the connection.
+//!
+//! **Trace context on the wire.** A request line may carry one extra
+//! transport-metadata field, `"trace":"<trace_hex>/<span_hex>"`, read
+//! by [`Request::parse_traced`]. It is *not* part of the typed
+//! [`Request`] (so [`Request::to_json`] never emits it and canonical
+//! bytes are unchanged); the fleet router injects it when forwarding so
+//! worker-side spans parent under the router's dispatch span, the same
+//! way `X-Request-Id` rides an HTTP header rather than the body.
 //!
 //! Serialization is canonical by construction: [`Json`] objects sort
 //! keys and print numbers deterministically, so
@@ -45,6 +59,7 @@
 
 use super::http::{Gate, HttpStats};
 use crate::util::json::Json;
+use crate::util::trace;
 
 /// Parsed client request.
 #[derive(Clone, Debug, PartialEq)]
@@ -59,6 +74,9 @@ pub enum Request {
         seed: u64,
     },
     Stats,
+    /// Export traces from the flight recorder: explicit `ids` win;
+    /// otherwise the most recent `last` completed traces.
+    Trace { ids: Vec<u64>, last: usize },
     Shutdown,
 }
 
@@ -67,6 +85,36 @@ impl Request {
     pub fn parse(line: &str) -> Result<Request, String> {
         let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
         Request::from_json(&v)
+    }
+
+    /// Parse one wire line plus its optional `"trace"` transport tag
+    /// (`"<trace_hex>/<span_hex>"`). A malformed tag is ignored rather
+    /// than rejected — it is cross-process metadata, not client input,
+    /// and a mixed-version fleet must keep answering.
+    pub fn parse_traced(line: &str) -> Result<(Request, trace::Ctx), String> {
+        let v = Json::parse(line).map_err(|e| format!("bad json: {e}"))?;
+        let ctx = v
+            .get("trace")
+            .and_then(|t| t.as_str())
+            .and_then(parse_wire_tag)
+            .unwrap_or(trace::Ctx::NONE);
+        Ok((Request::from_json(&v)?, ctx))
+    }
+
+    /// Serialize with the `"trace"` transport tag attached (the fleet
+    /// router's forwarding side of [`Request::parse_traced`]).
+    pub fn to_json_traced(&self, ctx: trace::Ctx) -> Json {
+        let j = self.to_json();
+        if !ctx.active() {
+            return j;
+        }
+        match j {
+            Json::Obj(mut m) => {
+                m.insert("trace".to_string(), Json::str(wire_tag(ctx)));
+                Json::Obj(m)
+            }
+            other => other,
+        }
     }
 
     /// Validate a parsed JSON object carrying an `"op"` field.
@@ -82,8 +130,42 @@ impl Request {
             "nll" => Request::nll_from_json(v),
             "choice" => Request::choice_from_json(v),
             "generate" => Request::generate_from_json(v),
+            "trace" => Request::trace_from_json(v),
             other => Err(format!("unknown op {other:?}")),
         }
+    }
+
+    /// Validate a `trace` body (shared by the TCP op and
+    /// `GET /debug/trace`). Present-but-mistyped fields are errors.
+    pub fn trace_from_json(v: &Json) -> Result<Request, String> {
+        let ids: Vec<u64> = match v.get("ids") {
+            None => Vec::new(),
+            Some(a) => a
+                .as_arr()
+                .ok_or_else(|| "ids must be an array".to_string())?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .and_then(trace::parse_hex)
+                        .ok_or_else(|| "ids must be hex trace IDs".to_string())
+                })
+                .collect::<Result<_, _>>()?,
+        };
+        let last = match v.get("last") {
+            None => 1,
+            Some(l) => {
+                let x = l
+                    .as_f64()
+                    .ok_or_else(|| "last must be a number".to_string())?;
+                if x < 1.0 || x.fract() != 0.0 || x > 1024.0 {
+                    return Err("last must be an integer in [1, 1024]".into());
+                }
+                x as usize
+            }
+        };
+        // explicit ids win; normalize so serialization is canonical
+        let last = if ids.is_empty() { last } else { 1 };
+        Ok(Request::Trace { ids, last })
     }
 
     /// Validate an `nll` body (no `"op"` required — the HTTP router maps
@@ -193,12 +275,43 @@ impl Request {
         !matches!(self, Request::Generate { .. } | Request::Shutdown)
     }
 
+    /// Wire name of the op — span/log label material.
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::Ping => "ping",
+            Request::Nll { .. } => "nll",
+            Request::Choice { .. } => "choice",
+            Request::Generate { .. } => "generate",
+            Request::Stats => "stats",
+            Request::Trace { .. } => "trace",
+            Request::Shutdown => "shutdown",
+        }
+    }
+
     /// Serialize (client side).
     pub fn to_json(&self) -> Json {
         match self {
             Request::Ping => Json::obj(vec![("op", Json::str("ping"))]),
             Request::Stats => Json::obj(vec![("op", Json::str("stats"))]),
             Request::Shutdown => Json::obj(vec![("op", Json::str("shutdown"))]),
+            Request::Trace { ids, last } => {
+                if ids.is_empty() {
+                    Json::obj(vec![
+                        ("op", Json::str("trace")),
+                        ("last", Json::num(*last as f64)),
+                    ])
+                } else {
+                    Json::obj(vec![
+                        ("op", Json::str("trace")),
+                        (
+                            "ids",
+                            Json::Arr(
+                                ids.iter().map(|i| Json::str(trace::id_hex(*i))).collect(),
+                            ),
+                        ),
+                    ])
+                }
+            }
             Request::Nll { text } => Json::obj(vec![
                 ("op", Json::str("nll")),
                 ("text", Json::str(text.clone())),
@@ -227,6 +340,26 @@ impl Request {
     }
 }
 
+/// Render a [`trace::Ctx`] as the wire transport tag
+/// (`"<trace_hex>/<span_hex>"`).
+pub fn wire_tag(ctx: trace::Ctx) -> String {
+    format!("{}/{}", trace::id_hex(ctx.trace), trace::id_hex(ctx.span))
+}
+
+/// Parse the wire transport tag back into a [`trace::Ctx`].
+pub fn parse_wire_tag(s: &str) -> Option<trace::Ctx> {
+    let (t, p) = s.split_once('/')?;
+    let trace_id = trace::parse_hex(t)?;
+    let span = trace::parse_hex(p)?;
+    if trace_id == 0 {
+        return None;
+    }
+    Some(trace::Ctx {
+        trace: trace_id,
+        span,
+    })
+}
+
 /// Server replies, serialized with [`Reply::to_json`].
 #[derive(Clone, Debug, PartialEq)]
 pub enum Reply {
@@ -251,6 +384,9 @@ pub enum Reply {
         mean_batch_fill: f64,
     },
     Stats(Json),
+    /// A Chrome trace-event page from the flight recorder (see
+    /// `util::trace::export_chrome` / `validate_chrome`).
+    Trace(Json),
     ShuttingDown,
     Error(String),
 }
@@ -307,6 +443,10 @@ impl Reply {
                 ("ok", Json::Bool(true)),
                 ("stats", j.clone()),
             ]),
+            Reply::Trace(j) => Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("trace", j.clone()),
+            ]),
             Reply::ShuttingDown => Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("shutdown", Json::Bool(true)),
@@ -342,6 +482,9 @@ impl Reply {
         }
         if let Some(s) = v.get("stats") {
             return Ok(Reply::Stats(s.clone()));
+        }
+        if let Some(t) = v.get("trace") {
+            return Ok(Reply::Trace(t.clone()));
         }
         if let Some(text) = v.get("text").and_then(|t| t.as_str()) {
             return Ok(Reply::Generate {
@@ -433,10 +576,81 @@ mod tests {
                 temperature: 0.7,
                 seed: 42,
             },
+            Request::Trace {
+                ids: vec![],
+                last: 5,
+            },
+            Request::Trace {
+                ids: vec![0xabc, 0xdef],
+                last: 1,
+            },
         ] {
             let line = r.to_json().to_string();
             assert_eq!(Request::parse(&line).unwrap(), r, "{line}");
         }
+    }
+
+    #[test]
+    fn trace_request_validation() {
+        assert_eq!(
+            Request::parse("{\"op\":\"trace\"}").unwrap(),
+            Request::Trace {
+                ids: vec![],
+                last: 1,
+            }
+        );
+        assert_eq!(
+            Request::parse("{\"op\":\"trace\",\"last\":8}").unwrap(),
+            Request::Trace {
+                ids: vec![],
+                last: 8,
+            }
+        );
+        // explicit ids win over last, normalized at parse
+        assert_eq!(
+            Request::parse("{\"op\":\"trace\",\"ids\":[\"ff\"],\"last\":9}").unwrap(),
+            Request::Trace {
+                ids: vec![0xff],
+                last: 1,
+            }
+        );
+        assert!(Request::parse("{\"op\":\"trace\",\"last\":0}").is_err());
+        assert!(Request::parse("{\"op\":\"trace\",\"last\":1.5}").is_err());
+        assert!(Request::parse("{\"op\":\"trace\",\"last\":\"3\"}").is_err());
+        assert!(Request::parse("{\"op\":\"trace\",\"ids\":\"ff\"}").is_err());
+        assert!(Request::parse("{\"op\":\"trace\",\"ids\":[12]}").is_err());
+        assert!(Request::parse("{\"op\":\"trace\",\"ids\":[\"zz\"]}").is_err());
+    }
+
+    #[test]
+    fn wire_tag_roundtrip_and_parse_traced() {
+        let ctx = trace::Ctx {
+            trace: 0xdead_beef,
+            span: 0x1234,
+        };
+        assert_eq!(parse_wire_tag(&wire_tag(ctx)), Some(ctx));
+        assert_eq!(parse_wire_tag("nope"), None);
+        assert_eq!(parse_wire_tag("zz/11"), None);
+        // zero trace id means "not tracing", never a valid tag
+        assert_eq!(
+            parse_wire_tag(&format!("{}/{}", trace::id_hex(0), trace::id_hex(7))),
+            None
+        );
+
+        let req = Request::Nll { text: "hi".into() };
+        let line = req.to_json_traced(ctx).to_string();
+        let (back, got) = Request::parse_traced(&line).unwrap();
+        assert_eq!(back, req);
+        assert_eq!(got, ctx);
+        // the tag is transport metadata: the typed request re-serializes
+        // WITHOUT it, byte-identical to the untagged form
+        assert_eq!(back.to_json().to_string(), req.to_json().to_string());
+        // untagged lines parse with no context; malformed tags are ignored
+        let (_, none) = Request::parse_traced(&req.to_json().to_string()).unwrap();
+        assert_eq!(none, trace::Ctx::NONE);
+        let (_, bad) =
+            Request::parse_traced("{\"op\":\"ping\",\"trace\":\"garbage\"}").unwrap();
+        assert_eq!(bad, trace::Ctx::NONE);
     }
 
     #[test]
@@ -511,6 +725,10 @@ mod tests {
                 latency_ms: 4.5,
                 mean_batch_fill: 2.5,
             },
+            Reply::Trace(Json::obj(vec![(
+                "traceEvents",
+                Json::Arr(vec![]),
+            )])),
         ] {
             let line = r.to_json().to_string();
             assert_eq!(Reply::parse(&line).unwrap(), r, "{line}");
@@ -550,6 +768,11 @@ mod tests {
     fn idempotence_classification() {
         assert!(Request::Ping.is_idempotent());
         assert!(Request::Stats.is_idempotent());
+        assert!(Request::Trace {
+            ids: vec![],
+            last: 1,
+        }
+        .is_idempotent());
         assert!(Request::Nll { text: "x".into() }.is_idempotent());
         assert!(Request::Choice {
             context: "c".into(),
@@ -588,7 +811,7 @@ mod tests {
     }
 
     fn arb_request(g: &mut Gen) -> Request {
-        match g.int(0, 5) {
+        match g.int(0, 6) {
             0 => Request::Ping,
             1 => Request::Stats,
             2 => Request::Shutdown,
@@ -598,6 +821,20 @@ mod tests {
                 Request::Choice {
                     context: arb_text(g, 1),
                     choices: (0..n).map(|_| arb_text(g, 1)).collect(),
+                }
+            }
+            5 => {
+                if g.int(0, 1) == 0 {
+                    Request::Trace {
+                        ids: vec![],
+                        last: g.int(1, 64),
+                    }
+                } else {
+                    let n = g.int(1, 4);
+                    Request::Trace {
+                        ids: (0..n).map(|_| g.rng.next_u64().max(1)).collect(),
+                        last: 1,
+                    }
                 }
             }
             _ => Request::Generate {
@@ -610,10 +847,28 @@ mod tests {
     }
 
     fn arb_reply(g: &mut Gen) -> Reply {
-        match g.int(0, 6) {
+        match g.int(0, 7) {
             0 => Reply::Pong,
             1 => Reply::ShuttingDown,
             2 => Reply::Error(arb_text(g, 1)),
+            6 => Reply::Trace(Json::obj(vec![
+                (
+                    "traceEvents",
+                    Json::Arr(
+                        (0..g.int(0, 3))
+                            .map(|_| {
+                                Json::obj(vec![
+                                    ("name", Json::str(arb_text(g, 1))),
+                                    ("ph", Json::str("X")),
+                                    ("ts", Json::num(g.int(0, 1_000_000) as f64)),
+                                    ("dur", Json::num(g.int(0, 10_000) as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+                ("displayTimeUnit", Json::str("ms")),
+            ])),
             3 => Reply::Nll {
                 mean_nll: arb_f64(g),
                 sum_nll: arb_f64(g),

@@ -30,6 +30,7 @@ use super::protocol::{Request, Response};
 use super::service::Service;
 use crate::data::batch::pack_windows;
 use crate::data::Tokenizer;
+use crate::util::{logging, trace};
 
 /// Server tuning.
 #[derive(Clone, Debug)]
@@ -533,12 +534,12 @@ fn handle_conn(stream: TcpStream, stop: &AtomicBool, service: &Service) {
             continue;
         }
         stats.requests.fetch_add(1, Ordering::Relaxed);
-        let resp = match Request::parse(line) {
+        let resp = match Request::parse_traced(line) {
             Err(e) => {
                 stats.errors.fetch_add(1, Ordering::Relaxed);
                 Response::Error(e)
             }
-            Ok(Request::Shutdown) => {
+            Ok((Request::Shutdown, _)) => {
                 // lifecycle op: tear down here, where the sockets and
                 // worker queues are owned — not in Service::execute
                 let _ = respond(&stream, &Response::ShuttingDown);
@@ -546,7 +547,36 @@ fn handle_conn(stream: TcpStream, stop: &AtomicBool, service: &Service) {
                 service.close();
                 return;
             }
-            Ok(req) => service.execute(&req),
+            Ok((req, wire)) => {
+                // a wire tag means an upstream hop (the fleet router)
+                // already owns the trace: parent under its dispatch
+                // span; otherwise this ingress mints the trace ID
+                let trace_id = if wire.active() { wire.trace } else { trace::mint_id() };
+                let t0 = std::time::Instant::now();
+                let resp = {
+                    let mut root = trace::root("ingress.tcp", trace_id, wire.span);
+                    root.arg("op", req.op());
+                    let _in_req = trace::scope(trace::Ctx {
+                        trace: root.trace(),
+                        span: root.id(),
+                    });
+                    service.execute(&req)
+                };
+                let ms = t0.elapsed().as_millis() as u64;
+                if ms >= trace::slow_ms() {
+                    logging::kv(
+                        log::Level::Warn,
+                        "serve::tcp",
+                        "slow_request",
+                        &[
+                            ("trace", trace::id_hex(trace_id)),
+                            ("op", req.op().to_string()),
+                            ("ms", ms.to_string()),
+                        ],
+                    );
+                }
+                resp
+            }
         };
         if respond(&stream, &resp).is_err() {
             break;

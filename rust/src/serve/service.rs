@@ -17,7 +17,7 @@
 //! handler intercepts it first.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use super::batcher::{Batcher, BatcherStats, ScoreRequest};
@@ -29,6 +29,20 @@ use super::server::ServerStats;
 use crate::data::tokenizer::{BOS, EOS};
 use crate::data::Tokenizer;
 use crate::util::json::Json;
+use crate::util::timer::LatencyRing;
+use crate::util::trace;
+
+/// Ops with dedicated latency rings, index-aligned with
+/// [`Service::op_latency`]. The names are the `op` label values on the
+/// `sparselm_op_latency_seconds` Prometheus family.
+pub const LAT_OPS: [&str; 3] = ["nll", "choice", "generate"];
+
+const OP_NLL: usize = 0;
+const OP_CHOICE: usize = 1;
+const OP_GENERATE: usize = 2;
+
+/// Per-op latency ring window (recent-percentile read, bounded memory).
+const OP_LAT_WINDOW: usize = 512;
 
 /// Shared op-execution state: one per server, `Arc`-shared by every
 /// connection of every ingress.
@@ -39,6 +53,7 @@ pub struct Service {
     stats: Arc<ServerStats>,
     max_gen_tokens: usize,
     next_id: AtomicU64,
+    op_lat: [Mutex<LatencyRing>; LAT_OPS.len()],
 }
 
 impl Service {
@@ -56,6 +71,25 @@ impl Service {
             stats,
             max_gen_tokens: max_gen_tokens.max(1),
             next_id: AtomicU64::new(1),
+            op_lat: std::array::from_fn(|_| Mutex::new(LatencyRing::new(OP_LAT_WINDOW))),
+        }
+    }
+
+    /// `(p50_secs, p99_secs, samples)` over the recent window for the
+    /// op at `idx` in [`LAT_OPS`]. Zeros before the first request.
+    pub fn op_latency(&self, idx: usize) -> (f64, f64, usize) {
+        match self.op_lat[idx].lock() {
+            Ok(r) => {
+                let (p50, p99) = r.p50_p99();
+                (p50, p99, r.count())
+            }
+            Err(_) => (0.0, 0.0, 0),
+        }
+    }
+
+    fn record_op_latency(&self, idx: usize, secs: f64) {
+        if let Ok(mut r) = self.op_lat[idx].lock() {
+            r.record_secs(secs);
         }
     }
 
@@ -110,6 +144,12 @@ impl Service {
                 // not route it at all)
                 Response::Error("shutdown is a connection-level op".into())
             }
+            Request::Trace { ids, last } => Response::Trace(trace::export_chrome(
+                &trace::Selection {
+                    ids: ids.clone(),
+                    last: *last,
+                },
+            )),
             Request::Nll { text } => self.run_nll(text),
             Request::Choice { context, choices } => self.run_choice(context, choices),
             Request::Generate {
@@ -123,6 +163,12 @@ impl Service {
 
     fn run_nll(&self, text: &str) -> Response {
         self.stats.nll_ops.fetch_add(1, Ordering::Relaxed);
+        let mut sp = trace::span("op.nll");
+        sp.arg("chars", text.len());
+        let _in_op = trace::scope(trace::Ctx {
+            trace: sp.trace(),
+            span: sp.id(),
+        });
         let t0 = Instant::now();
         let mut ids = vec![BOS];
         ids.extend(self.tokenizer.encode(text));
@@ -131,7 +177,7 @@ impl Service {
             tokens: ids,
             scored_from: 1,
         });
-        match rx.recv() {
+        let resp = match rx.recv() {
             Ok(r) if r.tokens > 0 => Response::Nll {
                 mean_nll: r.sum_nll / r.tokens as f64,
                 sum_nll: r.sum_nll,
@@ -141,11 +187,19 @@ impl Service {
             },
             Ok(_) => Response::Error("text tokenized to nothing scorable".into()),
             Err(_) => Response::Error("server shutting down".into()),
-        }
+        };
+        self.record_op_latency(OP_NLL, t0.elapsed().as_secs_f64());
+        resp
     }
 
     fn run_choice(&self, context: &str, choices: &[String]) -> Response {
         self.stats.choice_ops.fetch_add(1, Ordering::Relaxed);
+        let mut sp = trace::span("op.choice");
+        sp.arg("choices", choices.len());
+        let _in_op = trace::scope(trace::Ctx {
+            trace: sp.trace(),
+            span: sp.id(),
+        });
         let t0 = Instant::now();
         // submit all candidates, then await — they share batches
         let ctx_len = self.tokenizer.encode(context).len();
@@ -167,7 +221,10 @@ impl Service {
             match rx.recv() {
                 Ok(r) if r.tokens > 0 => scores.push(r.sum_nll / r.tokens as f64),
                 Ok(_) => scores.push(f64::INFINITY),
-                Err(_) => return Response::Error("server shutting down".into()),
+                Err(_) => {
+                    self.record_op_latency(OP_CHOICE, t0.elapsed().as_secs_f64());
+                    return Response::Error("server shutting down".into());
+                }
             }
         }
         // total_cmp, not partial_cmp().unwrap(): a NaN score
@@ -193,6 +250,7 @@ impl Service {
                 *s = f64::MAX;
             }
         }
+        self.record_op_latency(OP_CHOICE, t0.elapsed().as_secs_f64());
         Response::Choice {
             best,
             scores,
@@ -213,6 +271,8 @@ impl Service {
             );
         };
         self.stats.generate_ops.fetch_add(1, Ordering::Relaxed);
+        let mut sp = trace::span("op.generate");
+        sp.arg("max_tokens", max_tokens);
         let t0 = Instant::now();
         let mut ids = vec![BOS];
         ids.extend(self.tokenizer.encode(prompt));
@@ -223,8 +283,12 @@ impl Service {
             temperature: temperature as f32,
             seed,
             stop: Some(EOS),
+            trace: trace::Ctx {
+                trace: sp.trace(),
+                span: sp.id(),
+            },
         });
-        match rx.recv() {
+        let resp = match rx.recv() {
             Ok(r) => Response::Generate {
                 text: self.tokenizer.decode(&r.tokens),
                 tokens: r.tokens.len(),
@@ -233,7 +297,9 @@ impl Service {
                 mean_batch_fill: r.mean_batch_fill,
             },
             Err(_) => Response::Error("server shutting down".into()),
-        }
+        };
+        self.record_op_latency(OP_GENERATE, t0.elapsed().as_secs_f64());
+        resp
     }
 
     /// The `{"op":"stats"}` object — also reused by the HTTP `/metrics`
@@ -258,6 +324,17 @@ impl Service {
             ("timeout_flushes", Json::num(b.timeout_flushes as f64)),
             ("queue_depth", Json::num(self.batcher.queue_depth() as f64)),
         ];
+        // per-op latency percentiles over the recent window (satellite
+        // view of the `sparselm_op_latency_seconds` Prometheus family)
+        let (nll50, nll99, _) = self.op_latency(OP_NLL);
+        let (ch50, ch99, _) = self.op_latency(OP_CHOICE);
+        let (gen50, gen99, _) = self.op_latency(OP_GENERATE);
+        fields.push(("nll_p50_ms", Json::num(nll50 * 1e3)));
+        fields.push(("nll_p99_ms", Json::num(nll99 * 1e3)));
+        fields.push(("choice_p50_ms", Json::num(ch50 * 1e3)));
+        fields.push(("choice_p99_ms", Json::num(ch99 * 1e3)));
+        fields.push(("generate_p50_ms", Json::num(gen50 * 1e3)));
+        fields.push(("generate_p99_ms", Json::num(gen99 * 1e3)));
         if let Some(g) = &self.generator {
             let gs = g.stats();
             fields.push(("gen_requests", Json::num(gs.requests as f64)));

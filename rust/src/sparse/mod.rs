@@ -103,4 +103,11 @@ pub trait Kernel: Send + Sync {
     fn row_align(&self) -> usize {
         1
     }
+
+    /// Short codec label for observability — trace spans and logs tag
+    /// each spmm dispatch with the operand's format (`"nm"`, `"qnm"`,
+    /// `"tnm"`, `"dense"`, ...). Purely diagnostic; never dispatched on.
+    fn kind(&self) -> &'static str {
+        "kernel"
+    }
 }

@@ -67,6 +67,7 @@ use crate::quant::QuantSpec;
 use crate::tensor::{bf16_to_f32, dot, Tensor};
 use crate::util::pool::{self, chunk_ranges, scoped_map};
 use crate::util::perf;
+use crate::util::trace;
 use std::sync::Mutex;
 
 // ------------------------------------------------------ dispatch table
@@ -121,12 +122,32 @@ pub fn dispatch(rows: usize) -> MicroKernel {
 
 // ------------------------------------------------------------- drivers
 
+/// Trace span for one driver call, named by the dispatch family and
+/// tagged with codec kind + operand bytes. Inert (two thread-local
+/// reads) when the calling thread isn't serving a traced request —
+/// the ≤2% overhead budget `benches/f7_trace.rs` gates lives here.
+fn spmm_span(rows: usize, w: &dyn Kernel) -> trace::Span {
+    let name = match dispatch(rows) {
+        MicroKernel::Gemv => "spmm.gemv",
+        MicroKernel::SmallBatch => "spmm.small_batch",
+        MicroKernel::TiledGemm => "spmm.tiled_gemm",
+    };
+    let mut sp = trace::span(name);
+    if sp.active() {
+        sp.arg("codec", w.kind());
+        sp.arg("operand_bytes", w.operand_bytes());
+        sp.arg("rows", rows);
+    }
+    sp
+}
+
 /// `y (b, out) = x (b, in) @ Wᵀ`, single-threaded.
 pub fn spmm(x: &Tensor, w: &dyn Kernel) -> Tensor {
     let _p = perf::phase(perf::Phase::Spmm);
     let (rows, cols) = w.dims();
     let (b, cin) = x.dims2();
     assert_eq!(cin, cols, "spmm: x has {cin} features, W expects {cols}");
+    let _t = spmm_span(b, w);
     let mut out = vec![0.0f32; b * rows];
     w.accumulate_rows(x, 0, rows, &mut out);
     perf::record_spmm(w.operand_bytes(), w.decode_blocks());
@@ -150,6 +171,7 @@ pub fn spmm_vec(x: &[f32], w: &dyn Kernel) -> Vec<f32> {
         "spmm_vec: x has {} features, W expects {cols}",
         x.len()
     );
+    let _t = spmm_span(1, w);
     let mut out = vec![0.0f32; rows];
     w.accumulate_vec(x, 0, rows, &mut out);
     perf::record_gemv(w.operand_bytes(), w.decode_blocks());
@@ -184,6 +206,7 @@ pub fn spmm_parallel(x: &Tensor, w: &dyn Kernel, threads: usize) -> Tensor {
         return spmm(x, w);
     }
     let _p = perf::phase(perf::Phase::Spmm);
+    let _t = spmm_span(b, w);
     // per-chunk buffers behind (uncontended) mutexes: each task locks
     // its own index exactly once, keeping the fan-out closure safe Rust
     let parts: Vec<Mutex<Vec<f32>>> = ranges
@@ -229,6 +252,7 @@ pub fn spmm_parallel_scoped(x: &Tensor, w: &dyn Kernel, threads: usize) -> Tenso
         return spmm(x, w);
     }
     let _p = perf::phase(perf::Phase::Spmm);
+    let _t = spmm_span(b, w);
     let parts = scoped_map(threads, ranges.clone(), |(a, z)| {
         let mut buf = vec![0.0f32; b * (z - a)];
         w.accumulate_rows(x, a, z, &mut buf);
@@ -296,6 +320,10 @@ impl PackedNm {
 }
 
 impl Kernel for PackedNm {
+    fn kind(&self) -> &'static str {
+        "nm"
+    }
+
     fn dims(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
@@ -366,6 +394,10 @@ impl PackedQnm {
 }
 
 impl Kernel for PackedQnm {
+    fn kind(&self) -> &'static str {
+        "qnm"
+    }
+
     fn dims(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
@@ -395,6 +427,10 @@ impl Kernel for PackedQnm {
 // ------------------------------------------------------------ PackedVnm
 
 impl Kernel for PackedVnm {
+    fn kind(&self) -> &'static str {
+        "vnm"
+    }
+
     fn dims(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
@@ -430,6 +466,10 @@ impl Kernel for PackedVnm {
 // ------------------------------------------------------------ PackedTnm
 
 impl Kernel for PackedTnm {
+    fn kind(&self) -> &'static str {
+        "tnm"
+    }
+
     fn dims(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
@@ -459,6 +499,10 @@ impl Kernel for PackedTnm {
 // --------------------------------------------------- StructuredOutliers
 
 impl Kernel for StructuredOutliers {
+    fn kind(&self) -> &'static str {
+        "outliers"
+    }
+
     fn dims(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
@@ -556,6 +600,10 @@ impl Kernel for StructuredOutliers {
 // ------------------------------------------------------------------ Csr
 
 impl Kernel for Csr {
+    fn kind(&self) -> &'static str {
+        "csr"
+    }
+
     fn dims(&self) -> (usize, usize) {
         (self.rows, self.cols)
     }
@@ -639,6 +687,10 @@ impl Kernel for Csr {
 /// row-major order (per-element math is [`dot`] on every path — the
 /// bitwise contract holds trivially).
 impl Kernel for Tensor {
+    fn kind(&self) -> &'static str {
+        "dense"
+    }
+
     fn dims(&self) -> (usize, usize) {
         self.dims2()
     }
@@ -741,6 +793,10 @@ impl PackedLinear {
 }
 
 impl Kernel for PackedLinear {
+    fn kind(&self) -> &'static str {
+        "linear"
+    }
+
     fn dims(&self) -> (usize, usize) {
         (self.weights.rows, self.weights.cols)
     }
@@ -823,6 +879,10 @@ impl PackedQuantLinear {
 }
 
 impl Kernel for PackedQuantLinear {
+    fn kind(&self) -> &'static str {
+        "qlinear"
+    }
+
     fn dims(&self) -> (usize, usize) {
         (self.weights.rows, self.weights.cols)
     }
@@ -906,6 +966,10 @@ impl PackedTernaryLinear {
 }
 
 impl Kernel for PackedTernaryLinear {
+    fn kind(&self) -> &'static str {
+        "tlinear"
+    }
+
     fn dims(&self) -> (usize, usize) {
         (self.weights.rows, self.weights.cols)
     }

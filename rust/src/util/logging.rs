@@ -1,5 +1,17 @@
-//! Minimal `log` backend: timestamped stderr logging, level from
-//! `SPARSELM_LOG` (error|warn|info|debug|trace; default info).
+//! Minimal `log` backend: timestamped stderr logging with structured
+//! `key=value` lines.
+//!
+//! `SPARSELM_LOG` controls filtering. The plain forms set one global
+//! level (`error|warn|info|debug|trace`; default `info`); a comma list
+//! adds per-target overrides, e.g. `SPARSELM_LOG=warn,fleet=debug`
+//! keeps everything at `warn` but lets `fleet`-targeted records
+//! through at `debug`. Targets match by prefix, so `serve` covers
+//! `serve::http` too.
+//!
+//! [`kv`] renders structured event lines (`event=slow_request
+//! trace=03ab.. ms=412`) used by the slow-request log and the fleet
+//! supervisor, so operators can grep a trace ID straight from the log
+//! into `sparselm trace --id`.
 
 use std::sync::Once;
 use std::time::Instant;
@@ -8,12 +20,83 @@ use log::{Level, LevelFilter, Log, Metadata, Record};
 use std::sync::OnceLock;
 
 static START: OnceLock<Instant> = OnceLock::new();
+static FILTER: OnceLock<Filter> = OnceLock::new();
+
+/// Parsed `SPARSELM_LOG`: a default level plus per-target overrides.
+struct Filter {
+    default: LevelFilter,
+    per_target: Vec<(String, LevelFilter)>,
+}
+
+fn parse_level(s: &str) -> Option<LevelFilter> {
+    match s {
+        "off" => Some(LevelFilter::Off),
+        "error" => Some(LevelFilter::Error),
+        "warn" => Some(LevelFilter::Warn),
+        "info" => Some(LevelFilter::Info),
+        "debug" => Some(LevelFilter::Debug),
+        "trace" => Some(LevelFilter::Trace),
+        _ => None,
+    }
+}
+
+fn parse_filter(spec: &str) -> Filter {
+    let mut f = Filter {
+        default: LevelFilter::Info,
+        per_target: Vec::new(),
+    };
+    for part in spec.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        match part.split_once('=') {
+            None => {
+                if let Some(l) = parse_level(part) {
+                    f.default = l;
+                }
+            }
+            Some((target, level)) => {
+                if let Some(l) = parse_level(level.trim()) {
+                    f.per_target.push((target.trim().to_string(), l));
+                }
+            }
+        }
+    }
+    f
+}
+
+impl Filter {
+    fn allows(&self, target: &str, level: Level) -> bool {
+        for (t, l) in &self.per_target {
+            if target.starts_with(t.as_str()) {
+                return level <= *l;
+            }
+        }
+        level <= self.default
+    }
+
+    /// The most permissive level any rule admits — what `log::set_max_level`
+    /// must be for per-target overrides to reach [`Log::log`] at all.
+    fn max(&self) -> LevelFilter {
+        self.per_target
+            .iter()
+            .map(|(_, l)| *l)
+            .fold(self.default, |a, b| a.max(b))
+    }
+}
+
+fn filter() -> &'static Filter {
+    FILTER.get_or_init(|| {
+        parse_filter(&std::env::var("SPARSELM_LOG").unwrap_or_default())
+    })
+}
 
 struct StderrLogger;
 
 impl Log for StderrLogger {
     fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
+        filter().allows(metadata.target(), metadata.level())
     }
 
     fn log(&self, record: &Record) {
@@ -40,25 +123,93 @@ static INIT: Once = Once::new();
 /// Install the logger (idempotent).
 pub fn init() {
     INIT.call_once(|| {
-        let level = match std::env::var("SPARSELM_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
-        };
         let _ = log::set_logger(&LOGGER);
-        log::set_max_level(level);
+        log::set_max_level(filter().max());
         START.get_or_init(Instant::now);
     });
 }
 
+/// Render pairs as a structured `key=value` line body: keys bare,
+/// values quoted only when they contain whitespace, `=`, or quotes.
+/// The `event` key leads so lines grep cleanly.
+pub fn format_kv(event: &str, pairs: &[(&str, String)]) -> String {
+    let mut out = String::with_capacity(32 + pairs.len() * 16);
+    out.push_str("event=");
+    out.push_str(event);
+    for (k, v) in pairs {
+        out.push(' ');
+        out.push_str(k);
+        out.push('=');
+        let needs_quote =
+            v.is_empty() || v.contains(|c: char| c.is_whitespace() || c == '=' || c == '"');
+        if needs_quote {
+            out.push('"');
+            for c in v.chars() {
+                if c == '"' || c == '\\' {
+                    out.push('\\');
+                }
+                out.push(c);
+            }
+            out.push('"');
+        } else {
+            out.push_str(v);
+        }
+    }
+    out
+}
+
+/// Emit a structured `key=value` event line at `level` under `target`.
+pub fn kv(level: Level, target: &str, event: &str, pairs: &[(&str, String)]) {
+    log::log!(target: target, level, "{}", format_kv(event, pairs));
+}
+
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
         log::info!("logging smoke test");
+    }
+
+    #[test]
+    fn filter_spec_parses_default_and_targets() {
+        let f = parse_filter("warn,fleet=debug,serve::http=trace");
+        assert_eq!(f.default, LevelFilter::Warn);
+        assert!(f.allows("fleet", Level::Debug));
+        assert!(!f.allows("fleet", Level::Trace));
+        // prefix match covers submodules
+        assert!(f.allows("serve::http::metrics", Level::Trace));
+        assert!(!f.allows("other", Level::Info));
+        assert_eq!(f.max(), LevelFilter::Trace);
+    }
+
+    #[test]
+    fn filter_defaults_to_info_on_junk() {
+        let f = parse_filter("banana");
+        assert_eq!(f.default, LevelFilter::Info);
+        assert!(f.allows("x", Level::Info));
+        assert!(!f.allows("x", Level::Debug));
+        let empty = parse_filter("");
+        assert_eq!(empty.default, LevelFilter::Info);
+    }
+
+    #[test]
+    fn kv_lines_quote_only_when_needed() {
+        let line = format_kv(
+            "slow_request",
+            &[
+                ("trace", "03ab".to_string()),
+                ("op", "generate".to_string()),
+                ("detail", "took too long".to_string()),
+                ("q", "a\"b".to_string()),
+            ],
+        );
+        assert_eq!(
+            line,
+            "event=slow_request trace=03ab op=generate detail=\"took too long\" q=\"a\\\"b\""
+        );
     }
 }

@@ -16,6 +16,7 @@ pub mod propcheck;
 pub mod rng;
 pub mod signal;
 pub mod timer;
+pub mod trace;
 
 pub use rng::Rng;
 

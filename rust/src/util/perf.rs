@@ -74,6 +74,10 @@ impl Phase {
     }
 }
 
+/// Accepted-length histogram buckets: rounds with `accepted == i` for
+/// `i` in `0..SPEC_LEN_BUCKETS-1`, longer runs clamped into the last.
+pub const SPEC_LEN_BUCKETS: usize = 9;
+
 struct Counters {
     spmm_calls: AtomicU64,
     gemv_calls: AtomicU64,
@@ -83,6 +87,7 @@ struct Counters {
     spec_drafted: AtomicU64,
     spec_accepted: AtomicU64,
     spec_mispredicts: AtomicU64,
+    spec_len_hist: [AtomicU64; SPEC_LEN_BUCKETS],
     phase_ns: [AtomicU64; N_PHASES],
     phase_calls: [AtomicU64; N_PHASES],
 }
@@ -99,6 +104,7 @@ static COUNTERS: Counters = Counters {
     spec_drafted: AtomicU64::new(0),
     spec_accepted: AtomicU64::new(0),
     spec_mispredicts: AtomicU64::new(0),
+    spec_len_hist: [ZERO; SPEC_LEN_BUCKETS],
     phase_ns: [ZERO; N_PHASES],
     phase_calls: [ZERO; N_PHASES],
 };
@@ -137,6 +143,8 @@ pub fn record_spec_round(drafted: usize, accepted: usize) {
     COUNTERS
         .spec_accepted
         .fetch_add(accepted as u64, Ordering::Relaxed);
+    COUNTERS.spec_len_hist[accepted.min(SPEC_LEN_BUCKETS - 1)]
+        .fetch_add(1, Ordering::Relaxed);
 }
 
 /// The scheduler committed a token the speculative queue did not
@@ -180,6 +188,7 @@ pub struct Snapshot {
     pub spec_drafted: u64,
     pub spec_accepted: u64,
     pub spec_mispredicts: u64,
+    pub spec_len_hist: [u64; SPEC_LEN_BUCKETS],
     pub phase_ns: [u64; N_PHASES],
     pub phase_calls: [u64; N_PHASES],
 }
@@ -201,6 +210,9 @@ impl Snapshot {
                 .saturating_sub(earlier.spec_mispredicts),
             ..Snapshot::default()
         };
+        for i in 0..SPEC_LEN_BUCKETS {
+            d.spec_len_hist[i] = self.spec_len_hist[i].saturating_sub(earlier.spec_len_hist[i]);
+        }
         for i in 0..N_PHASES {
             d.phase_ns[i] = self.phase_ns[i].saturating_sub(earlier.phase_ns[i]);
             d.phase_calls[i] = self.phase_calls[i].saturating_sub(earlier.phase_calls[i]);
@@ -254,6 +266,15 @@ impl Snapshot {
             ("spec_drafted", Json::num(self.spec_drafted as f64)),
             ("spec_accepted", Json::num(self.spec_accepted as f64)),
             ("spec_mispredicts", Json::num(self.spec_mispredicts as f64)),
+            (
+                "spec_len_hist",
+                Json::Arr(
+                    self.spec_len_hist
+                        .iter()
+                        .map(|&c| Json::num(c as f64))
+                        .collect(),
+                ),
+            ),
             ("phases", Json::obj(phases)),
         ])
     }
@@ -321,6 +342,19 @@ impl super::prom::PromExport for Snapshot {
             self.spec_mispredicts as f64,
         );
         w.metric(
+            "sparselm_spec_accepted_length",
+            "accepted draft length per speculative round",
+            super::prom::PromKind::Histogram,
+        );
+        let bounds: Vec<f64> = (0..SPEC_LEN_BUCKETS - 1).map(|i| i as f64).collect();
+        w.histogram_series(
+            "sparselm_spec_accepted_length",
+            &[],
+            &bounds,
+            &self.spec_len_hist,
+            self.spec_accepted as f64,
+        );
+        w.metric(
             "sparselm_phase_seconds_total",
             "wall seconds accumulated per hot-path phase",
             Counter,
@@ -360,6 +394,9 @@ pub fn snapshot() -> Snapshot {
         spec_mispredicts: COUNTERS.spec_mispredicts.load(Ordering::Relaxed),
         ..Snapshot::default()
     };
+    for i in 0..SPEC_LEN_BUCKETS {
+        s.spec_len_hist[i] = COUNTERS.spec_len_hist[i].load(Ordering::Relaxed);
+    }
     for i in 0..N_PHASES {
         s.phase_ns[i] = COUNTERS.phase_ns[i].load(Ordering::Relaxed);
         s.phase_calls[i] = COUNTERS.phase_calls[i].load(Ordering::Relaxed);
@@ -378,6 +415,9 @@ pub fn reset() {
     COUNTERS.spec_drafted.store(0, Ordering::Relaxed);
     COUNTERS.spec_accepted.store(0, Ordering::Relaxed);
     COUNTERS.spec_mispredicts.store(0, Ordering::Relaxed);
+    for i in 0..SPEC_LEN_BUCKETS {
+        COUNTERS.spec_len_hist[i].store(0, Ordering::Relaxed);
+    }
     for i in 0..N_PHASES {
         COUNTERS.phase_ns[i].store(0, Ordering::Relaxed);
         COUNTERS.phase_calls[i].store(0, Ordering::Relaxed);
@@ -487,6 +527,8 @@ mod tests {
         assert!(d.spec_drafted >= 8);
         assert!(d.spec_accepted >= 7);
         assert!(d.spec_mispredicts >= 1);
+        assert!(d.spec_len_hist[3] >= 1 && d.spec_len_hist[4] >= 1);
+        assert!(d.spec_len_hist.iter().sum::<u64>() >= 2);
         assert!(d.spec_accept_rate() > 0.0 && d.spec_accept_rate() <= 1.0);
         assert!(d.spec_mean_accepted() > 0.0);
         // zero-division guards
@@ -509,5 +551,22 @@ mod tests {
         ] {
             assert!(s.value(fam, &[]).is_some(), "missing {fam}");
         }
+        // the accepted-length histogram is cumulative with an +Inf cap
+        let inf = s
+            .value("sparselm_spec_accepted_length_bucket", &[("le", "+Inf")])
+            .expect("accepted-length +Inf bucket");
+        assert_eq!(
+            s.value("sparselm_spec_accepted_length_count", &[]),
+            Some(inf)
+        );
+        assert!(inf >= 2.0);
+    }
+
+    #[test]
+    fn spec_len_hist_clamps_long_runs_into_last_bucket() {
+        let before = snapshot();
+        record_spec_round(SPEC_LEN_BUCKETS + 5, SPEC_LEN_BUCKETS + 3);
+        let d = snapshot().delta(&before);
+        assert!(d.spec_len_hist[SPEC_LEN_BUCKETS - 1] >= 1);
     }
 }

@@ -97,6 +97,40 @@ impl PromWriter {
         self.out.push('\n');
     }
 
+    /// Append one histogram series — the `_bucket` ladder plus `_sum`
+    /// and `_count` — for a single label set. `counts[i]` is the
+    /// **non-cumulative** number of observations in bucket `i`
+    /// (`counts.len() == bounds.len() + 1`; the final slot is the
+    /// overflow bucket, rendered as `le="+Inf"`); the cumulative sums
+    /// Prometheus requires are computed here. Call
+    /// [`PromWriter::metric`] with [`PromKind::Histogram`] once for the
+    /// family first; repeat this per label set for labeled histograms.
+    pub fn histogram_series(
+        &mut self,
+        family: &str,
+        labels: &[(&str, &str)],
+        bounds: &[f64],
+        counts: &[u64],
+        sum: f64,
+    ) {
+        debug_assert_eq!(counts.len(), bounds.len() + 1, "{family}: counts/bounds");
+        let bucket = format!("{family}_bucket");
+        let mut cum = 0u64;
+        for (i, &c) in counts.iter().enumerate() {
+            cum += c;
+            let le = if i < bounds.len() {
+                fmt_value(bounds[i])
+            } else {
+                "+Inf".to_string()
+            };
+            let mut with_le: Vec<(&str, &str)> = labels.to_vec();
+            with_le.push(("le", &le));
+            self.sample(&bucket, &with_le, cum as f64);
+        }
+        self.sample(&format!("{family}_sum"), labels, sum);
+        self.sample(&format!("{family}_count"), labels, cum as f64);
+    }
+
     /// The assembled page.
     pub fn finish(self) -> String {
         self.out
@@ -457,6 +491,31 @@ mod tests {
         assert_eq!(s.value("demo_inflight", &[]), Some(2.0));
         assert_eq!(s.families["demo_requests_total"].kind, "counter");
         assert_eq!(s.families["demo_requests_total"].help, "requests seen");
+    }
+
+    #[test]
+    fn histogram_series_accumulates_and_validates() {
+        let mut w = PromWriter::new();
+        w.metric("demo_hist", "labeled ladder", PromKind::Histogram);
+        w.histogram_series("demo_hist", &[("op", "nll")], &[1.0, 5.0], &[2, 3, 1], 7.5);
+        w.histogram_series("demo_hist", &[("op", "gen")], &[1.0, 5.0], &[0, 0, 4], 40.0);
+        let s = parse_text(&w.finish()).unwrap();
+        assert_eq!(
+            s.value("demo_hist_bucket", &[("op", "nll"), ("le", "1")]),
+            Some(2.0)
+        );
+        assert_eq!(
+            s.value("demo_hist_bucket", &[("op", "nll"), ("le", "5")]),
+            Some(5.0),
+            "buckets must be cumulative"
+        );
+        assert_eq!(
+            s.value("demo_hist_bucket", &[("op", "nll"), ("le", "+Inf")]),
+            Some(6.0)
+        );
+        assert_eq!(s.value("demo_hist_count", &[("op", "nll")]), Some(6.0));
+        assert_eq!(s.value("demo_hist_sum", &[("op", "gen")]), Some(40.0));
+        assert_eq!(s.value("demo_hist_count", &[("op", "gen")]), Some(4.0));
     }
 
     #[test]

@@ -135,6 +135,21 @@ impl LatencyRing {
     pub fn percentile(&self, p: f64) -> f64 {
         percentile_of(&self.buf, p)
     }
+
+    /// `(p50, p99)` over the retained window — the pair every serving
+    /// stats surface reports (one sort instead of two).
+    pub fn p50_p99(&self) -> (f64, f64) {
+        if self.buf.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut s = self.buf.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let at = |p: f64| {
+            let idx = ((p / 100.0) * (s.len() - 1) as f64).round() as usize;
+            s[idx.min(s.len() - 1)]
+        };
+        (at(50.0), at(99.0))
+    }
 }
 
 /// Nearest-rank percentile (`p` in [0, 100]) over an unsorted sample
@@ -208,6 +223,18 @@ mod tests {
         assert!((r.mean() - 8.5).abs() < 1e-9);
         assert_eq!(r.percentile(0.0), 7.0);
         assert_eq!(r.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn ring_p50_p99_pair_matches_percentile() {
+        let mut r = LatencyRing::new(256);
+        assert_eq!(r.p50_p99(), (0.0, 0.0));
+        for i in 1..=100 {
+            r.record_secs(i as f64);
+        }
+        let (p50, p99) = r.p50_p99();
+        assert_eq!(p50, r.percentile(50.0));
+        assert_eq!(p99, r.percentile(99.0));
     }
 
     #[test]

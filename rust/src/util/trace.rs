@@ -1,0 +1,1250 @@
+//! Always-on request tracing: a low-overhead span recorder with
+//! Chrome-trace-event export.
+//!
+//! Every request gets a 64-bit trace ID minted at ingress (TCP or HTTP;
+//! a client-supplied `X-Request-Id` is honored by hashing it). Code on
+//! the request path opens [`span`]s; each span inherits the ambient
+//! thread-local context (trace ID + parent span ID), times itself with
+//! a monotonic clock anchored to the process's wall-clock epoch, and on
+//! drop appends a fixed-size record to a *per-thread* buffer. When a
+//! root span closes, all thread buffers are drained into the central
+//! flight recorder — a bounded ring of the last N completed traces,
+//! oldest evicted — from which traces export as Chrome trace-event JSON
+//! (loadable in Perfetto / `chrome://tracing`).
+//!
+//! Design constraints, in order:
+//! 1. **Cheap enough to stay on in production.** An inactive span (no
+//!    ambient trace, or recording disabled) costs two thread-local
+//!    reads. An active span costs two `Instant::now()` calls plus a
+//!    push under an uncontended per-thread mutex. The bench gate
+//!    (`benches/f7_trace.rs`, `trace:overhead_ratio`) enforces ≤2%
+//!    overhead on the spmm + generate hot path.
+//! 2. **Bounded memory.** Per-trace span count is capped
+//!    ([`MAX_SPANS_PER_TRACE`], excess counted in `dropped`), the
+//!    completed-trace ring is capped ([`set_ring_capacity`]), and
+//!    still-open traces are capped ([`MAX_PENDING_TRACES`]).
+//! 3. **Cross-process mergeable.** Timestamps are UNIX-epoch
+//!    microseconds (monotonic within a process), span/trace IDs embed
+//!    the PID, and [`merge_chrome`] unions exports from a fleet router
+//!    and its workers into one page with per-process lanes.
+//!
+//! The strict [`validate_chrome`] validator (the trace analog of
+//! `prom::parse_text`) is what CI asserts exported pages against.
+
+use std::cell::Cell;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, Weak};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use crate::util::json::Json;
+use crate::util::{fnv1a, FNV_OFFSET};
+
+/// Spans retained per trace; later spans are dropped and counted.
+pub const MAX_SPANS_PER_TRACE: usize = 4096;
+/// Open (not yet completed) traces retained; oldest evicted beyond this.
+pub const MAX_PENDING_TRACES: usize = 256;
+/// Default completed-trace ring capacity (see [`set_ring_capacity`]).
+pub const DEFAULT_RING_CAP: usize = 64;
+/// Clock-skew slack (µs) the validator allows between spans from
+/// *different* processes (each process anchors its own wall epoch).
+pub const CROSS_PROCESS_SKEW_US: u64 = 5_000;
+
+// ------------------------------------------------------------------ ids
+
+/// Ambient trace context: the trace a thread is currently working for
+/// and the span new children should parent under. `trace == 0` means
+/// "not tracing" and makes every span on the thread inert.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ctx {
+    pub trace: u64,
+    pub span: u64,
+}
+
+impl Ctx {
+    pub const NONE: Ctx = Ctx { trace: 0, span: 0 };
+
+    pub fn active(&self) -> bool {
+        self.trace != 0
+    }
+}
+
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+fn pid_salt() -> u64 {
+    static SALT: OnceLock<u64> = OnceLock::new();
+    *SALT.get_or_init(|| {
+        let pid = std::process::id() as u64;
+        // spread the pid across high bits so IDs from different fleet
+        // processes can't collide even though each counts from 1
+        (pid.wrapping_mul(0x9e3779b97f4a7c15)) & 0xffff_ffff_0000_0000
+    })
+}
+
+/// Mint a process-unique, fleet-unique nonzero 64-bit ID.
+pub fn mint_id() -> u64 {
+    let n = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+    let id = pid_salt() | (n & 0x0000_0000_ffff_ffff);
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+/// Render an ID the way exports do: 16 lowercase hex digits.
+pub fn id_hex(id: u64) -> String {
+    format!("{id:016x}")
+}
+
+/// Parse an ID as rendered by [`id_hex`] (any-length hex accepted).
+pub fn parse_hex(s: &str) -> Option<u64> {
+    if s.is_empty() || s.len() > 16 {
+        return None;
+    }
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Deterministically derive a trace ID from a client-supplied request
+/// ID string (`X-Request-Id`), so the client's handle and the recorded
+/// trace agree.
+pub fn id_from_label(label: &str) -> u64 {
+    let h = fnv1a(label.as_bytes(), FNV_OFFSET);
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+// ---------------------------------------------------------------- clock
+
+/// (monotonic anchor, wall-clock µs at the anchor)
+fn epoch() -> &'static (Instant, u64) {
+    static EPOCH: OnceLock<(Instant, u64)> = OnceLock::new();
+    EPOCH.get_or_init(|| {
+        let wall = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_micros() as u64)
+            .unwrap_or(0);
+        (Instant::now(), wall)
+    })
+}
+
+/// Current time in UNIX-epoch microseconds, monotonic within the
+/// process (wall clock is only read once, at first use).
+pub fn now_us() -> u64 {
+    let (anchor, wall) = epoch();
+    wall + anchor.elapsed().as_micros() as u64
+}
+
+// ------------------------------------------------------------- switches
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+/// Slow-request threshold in ms; `u64::MAX` disables the slow log.
+static SLOW_MS: AtomicU64 = AtomicU64::new(u64::MAX);
+
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Threshold for the slow-request structured log line (`--trace-slow-ms`).
+pub fn slow_ms() -> u64 {
+    SLOW_MS.load(Ordering::Relaxed)
+}
+
+pub fn set_slow_ms(ms: u64) {
+    SLOW_MS.store(ms, Ordering::Relaxed);
+}
+
+/// Human-readable lane name for this process in merged exports
+/// (e.g. `"router"`, `"worker"`); defaults to the binary role `"sparselm"`.
+pub fn set_process_name(name: &str) {
+    *process_name().lock().unwrap() = name.to_string();
+}
+
+fn process_name() -> &'static Mutex<String> {
+    static NAME: OnceLock<Mutex<String>> = OnceLock::new();
+    NAME.get_or_init(|| Mutex::new("sparselm".to_string()))
+}
+
+// ------------------------------------------------------------ arg values
+
+/// A span argument value (rendered into the event's `args` object).
+#[derive(Clone, Debug)]
+pub enum ArgVal {
+    U(u64),
+    F(f64),
+    Sym(&'static str),
+    Str(String),
+}
+
+impl From<u64> for ArgVal {
+    fn from(v: u64) -> ArgVal {
+        ArgVal::U(v)
+    }
+}
+impl From<usize> for ArgVal {
+    fn from(v: usize) -> ArgVal {
+        ArgVal::U(v as u64)
+    }
+}
+impl From<u32> for ArgVal {
+    fn from(v: u32) -> ArgVal {
+        ArgVal::U(v as u64)
+    }
+}
+impl From<f64> for ArgVal {
+    fn from(v: f64) -> ArgVal {
+        ArgVal::F(v)
+    }
+}
+impl From<&'static str> for ArgVal {
+    fn from(v: &'static str) -> ArgVal {
+        ArgVal::Sym(v)
+    }
+}
+impl From<String> for ArgVal {
+    fn from(v: String) -> ArgVal {
+        ArgVal::Str(v)
+    }
+}
+
+impl ArgVal {
+    fn to_json(&self) -> Json {
+        match self {
+            ArgVal::U(v) => Json::num(*v as f64),
+            ArgVal::F(v) => Json::num(*v),
+            ArgVal::Sym(s) => Json::str(*s),
+            ArgVal::Str(s) => Json::str(s.clone()),
+        }
+    }
+}
+
+// ---------------------------------------------------------- span records
+
+/// One completed span, as it sits in a thread buffer / the recorder.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub trace: u64,
+    pub id: u64,
+    pub parent: u64,
+    pub name: &'static str,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub tid: u64,
+    pub args: Vec<(&'static str, ArgVal)>,
+}
+
+// ------------------------------------------------------- ambient context
+
+thread_local! {
+    static CURRENT: Cell<Ctx> = const { Cell::new(Ctx::NONE) };
+    static TID: Cell<u64> = const { Cell::new(0) };
+    static BUF: ThreadBufHandle = ThreadBufHandle::register();
+}
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+/// Small stable per-thread lane number (not the OS tid).
+fn tid() -> u64 {
+    TID.with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+}
+
+/// The ambient context for this thread ([`Ctx::NONE`] when not tracing).
+pub fn current() -> Ctx {
+    CURRENT.with(|c| c.get())
+}
+
+/// Replace the ambient context, returning the previous one.
+pub fn set_current(ctx: Ctx) -> Ctx {
+    CURRENT.with(|c| c.replace(ctx))
+}
+
+/// RAII guard restoring the previous ambient context on drop. Use to
+/// run a closure's worth of work "as" some request (e.g. the engine
+/// stepping one scheduler slot).
+pub struct ScopeGuard {
+    prev: Ctx,
+}
+
+impl Drop for ScopeGuard {
+    fn drop(&mut self) {
+        set_current(self.prev);
+    }
+}
+
+/// Enter `ctx` for the current scope.
+pub fn scope(ctx: Ctx) -> ScopeGuard {
+    ScopeGuard {
+        prev: set_current(ctx),
+    }
+}
+
+// ------------------------------------------------------- thread buffers
+
+struct ThreadBuf {
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+struct ThreadBufHandle {
+    buf: Arc<ThreadBuf>,
+}
+
+impl ThreadBufHandle {
+    fn register() -> ThreadBufHandle {
+        let buf = Arc::new(ThreadBuf {
+            spans: Mutex::new(Vec::new()),
+        });
+        registry().lock().unwrap().push(Arc::downgrade(&buf));
+        ThreadBufHandle { buf }
+    }
+}
+
+impl Drop for ThreadBufHandle {
+    fn drop(&mut self) {
+        // a dying thread hands its residue to the central recorder so
+        // spans recorded off the root's thread aren't lost
+        let residue = std::mem::take(&mut *self.buf.spans.lock().unwrap());
+        if !residue.is_empty() {
+            central().lock().unwrap().absorb(residue);
+        }
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Weak<ThreadBuf>>> {
+    static REG: OnceLock<Mutex<Vec<Weak<ThreadBuf>>>> = OnceLock::new();
+    REG.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn push_record(rec: SpanRecord) {
+    BUF.with(|h| h.buf.spans.lock().unwrap().push(rec));
+}
+
+/// Move every live thread buffer's spans into the central recorder.
+fn drain_all() {
+    let bufs: Vec<Arc<ThreadBuf>> = {
+        let mut reg = registry().lock().unwrap();
+        reg.retain(|w| w.strong_count() > 0);
+        reg.iter().filter_map(|w| w.upgrade()).collect()
+    };
+    let mut moved = Vec::new();
+    for b in bufs {
+        let mut g = b.spans.lock().unwrap();
+        moved.append(&mut g);
+    }
+    if !moved.is_empty() {
+        central().lock().unwrap().absorb(moved);
+    }
+}
+
+// ------------------------------------------------------ central recorder
+
+struct PendingTrace {
+    seq: u64,
+    spans: Vec<SpanRecord>,
+    dropped: u64,
+}
+
+/// A fully assembled trace in the flight-recorder ring.
+struct CompletedTrace {
+    trace: u64,
+    spans: Vec<SpanRecord>,
+    dropped: u64,
+}
+
+struct Central {
+    pending: BTreeMap<u64, PendingTrace>,
+    done: VecDeque<CompletedTrace>,
+    cap: usize,
+    next_seq: u64,
+}
+
+impl Central {
+    fn absorb(&mut self, spans: Vec<SpanRecord>) {
+        for s in spans {
+            let seq = self.next_seq;
+            let p = self.pending.entry(s.trace).or_insert_with(|| {
+                self.next_seq += 1;
+                PendingTrace {
+                    seq,
+                    spans: Vec::new(),
+                    dropped: 0,
+                }
+            });
+            if p.spans.len() >= MAX_SPANS_PER_TRACE {
+                p.dropped += 1;
+            } else {
+                p.spans.push(s);
+            }
+        }
+        while self.pending.len() > MAX_PENDING_TRACES {
+            // evict the stalest open trace (lowest insertion seq)
+            let oldest = self
+                .pending
+                .iter()
+                .min_by_key(|(_, p)| p.seq)
+                .map(|(k, _)| *k);
+            match oldest {
+                Some(k) => {
+                    self.pending.remove(&k);
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn complete(&mut self, trace: u64) {
+        let Some(p) = self.pending.remove(&trace) else {
+            return;
+        };
+        self.done.push_back(CompletedTrace {
+            trace,
+            spans: p.spans,
+            dropped: p.dropped,
+        });
+        while self.done.len() > self.cap {
+            self.done.pop_front();
+        }
+    }
+}
+
+fn central() -> &'static Mutex<Central> {
+    static CENTRAL: OnceLock<Mutex<Central>> = OnceLock::new();
+    CENTRAL.get_or_init(|| {
+        Mutex::new(Central {
+            pending: BTreeMap::new(),
+            done: VecDeque::new(),
+            cap: DEFAULT_RING_CAP,
+            next_seq: 0,
+        })
+    })
+}
+
+/// Resize the completed-trace ring (evicting oldest if shrinking).
+pub fn set_ring_capacity(cap: usize) {
+    let mut c = central().lock().unwrap();
+    c.cap = cap.max(1);
+    while c.done.len() > c.cap {
+        c.done.pop_front();
+    }
+}
+
+// ----------------------------------------------------------------- spans
+
+/// An open span. Created by [`span`]/[`root`]; records itself on drop.
+/// Inert spans (no ambient trace / recording disabled) skip all work.
+pub struct Span {
+    trace: u64,
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    start_us: u64,
+    started: Option<Instant>,
+    args: Vec<(&'static str, ArgVal)>,
+    prev: Ctx,
+    is_root: bool,
+}
+
+impl Span {
+    /// False for inert spans — use to skip arg computation.
+    pub fn active(&self) -> bool {
+        self.started.is_some()
+    }
+
+    /// This span's ID (0 when inert). Children across a wire hop parent
+    /// under this.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn trace(&self) -> u64 {
+        self.trace
+    }
+
+    /// Attach a key/value argument (no-op on inert spans).
+    pub fn arg(&mut self, key: &'static str, val: impl Into<ArgVal>) {
+        if self.active() {
+            self.args.push((key, val.into()));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(started) = self.started.take() else {
+            return;
+        };
+        set_current(self.prev);
+        push_record(SpanRecord {
+            trace: self.trace,
+            id: self.id,
+            parent: self.parent,
+            name: self.name,
+            start_us: self.start_us,
+            dur_us: started.elapsed().as_micros() as u64,
+            tid: tid(),
+            args: std::mem::take(&mut self.args),
+        });
+        if self.is_root {
+            drain_all();
+            central().lock().unwrap().complete(self.trace);
+        }
+    }
+}
+
+fn inert(name: &'static str) -> Span {
+    Span {
+        trace: 0,
+        id: 0,
+        parent: 0,
+        name,
+        start_us: 0,
+        started: None,
+        args: Vec::new(),
+        prev: Ctx::NONE,
+        is_root: false,
+    }
+}
+
+fn open(name: &'static str, trace: u64, parent: u64, is_root: bool) -> Span {
+    let id = mint_id();
+    let prev = set_current(Ctx { trace, span: id });
+    Span {
+        trace,
+        id,
+        parent,
+        name,
+        start_us: now_us(),
+        started: Some(Instant::now()),
+        args: Vec::new(),
+        prev,
+        is_root,
+    }
+}
+
+/// Open a child span of the ambient context. Inert (and nearly free)
+/// when the thread isn't tracing or recording is disabled.
+pub fn span(name: &'static str) -> Span {
+    if !enabled() {
+        return inert(name);
+    }
+    let cur = current();
+    if !cur.active() {
+        return inert(name);
+    }
+    open(name, cur.trace, cur.span, false)
+}
+
+/// Open a trace's root span at ingress. `parent` is 0 for a true root,
+/// or the upstream span ID carried over a wire hop (a fleet worker
+/// parents its root under the router's dispatch span). Closing a root
+/// drains all thread buffers and commits the trace to the ring.
+pub fn root(name: &'static str, trace: u64, parent: u64) -> Span {
+    if !enabled() || trace == 0 {
+        return inert(name);
+    }
+    open(name, trace, parent, true)
+}
+
+/// Record an already-measured interval (e.g. queue wait computed at
+/// admission) as a span under `ctx` without RAII timing.
+pub fn record_at(
+    name: &'static str,
+    ctx: Ctx,
+    start_us: u64,
+    dur_us: u64,
+    args: Vec<(&'static str, ArgVal)>,
+) {
+    if !enabled() || !ctx.active() {
+        return;
+    }
+    push_record(SpanRecord {
+        trace: ctx.trace,
+        id: mint_id(),
+        parent: ctx.span,
+        name,
+        start_us,
+        dur_us,
+        tid: tid(),
+        args,
+    });
+}
+
+// ---------------------------------------------------------------- export
+
+/// Which traces to export.
+#[derive(Clone, Debug, Default)]
+pub struct Selection {
+    /// Explicit trace IDs (wins over `last` when non-empty).
+    pub ids: Vec<u64>,
+    /// Otherwise: the most recent `last` completed traces.
+    pub last: usize,
+}
+
+/// Trace IDs currently in the ring, oldest→newest.
+pub fn completed_ids() -> Vec<u64> {
+    central().lock().unwrap().done.iter().map(|t| t.trace).collect()
+}
+
+/// Export selected traces from this process's recorder as one Chrome
+/// trace-event page ([`Json::Obj`] with a `traceEvents` array).
+pub fn export_chrome(sel: &Selection) -> Json {
+    let c = central().lock().unwrap();
+    let picked: Vec<&CompletedTrace> = if !sel.ids.is_empty() {
+        c.done.iter().filter(|t| sel.ids.contains(&t.trace)).collect()
+    } else {
+        let k = sel.last.max(1);
+        let skip = c.done.len().saturating_sub(k);
+        c.done.iter().skip(skip).collect()
+    };
+    let pid = std::process::id() as u64;
+    let mut events = Vec::new();
+    if !picked.is_empty() {
+        events.push(process_name_event(pid, &process_name().lock().unwrap()));
+    }
+    for t in picked {
+        for s in &t.spans {
+            events.push(span_event(pid, s));
+        }
+        if t.dropped > 0 {
+            // surface truncation rather than pretending to completeness
+            events.push(Json::obj(vec![
+                ("name", Json::str("trace.dropped_spans")),
+                ("cat", Json::str("sparselm")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(0.0)),
+                ("dur", Json::num(0.0)),
+                ("pid", Json::num(pid as f64)),
+                ("tid", Json::num(0.0)),
+                (
+                    "args",
+                    Json::obj(vec![
+                        ("trace", Json::str(id_hex(t.trace))),
+                        ("id", Json::str(id_hex(mint_id()))),
+                        ("parent", Json::str("0")),
+                        ("dropped", Json::num(t.dropped as f64)),
+                    ]),
+                ),
+            ]));
+        }
+    }
+    page(events)
+}
+
+fn page(events: Vec<Json>) -> Json {
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+fn process_name_event(pid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("cat", Json::str("__metadata")),
+        ("ph", Json::str("M")),
+        ("ts", Json::num(0.0)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(0.0)),
+        (
+            "args",
+            Json::obj(vec![(
+                "name",
+                Json::str(format!("{name} (pid {pid})")),
+            )]),
+        ),
+    ])
+}
+
+fn span_event(pid: u64, s: &SpanRecord) -> Json {
+    let mut args = vec![
+        ("trace", Json::str(id_hex(s.trace))),
+        ("id", Json::str(id_hex(s.id))),
+        (
+            "parent",
+            Json::str(if s.parent == 0 {
+                "0".to_string()
+            } else {
+                id_hex(s.parent)
+            }),
+        ),
+    ];
+    for (k, v) in &s.args {
+        args.push((*k, v.to_json()));
+    }
+    Json::obj(vec![
+        ("name", Json::str(s.name)),
+        ("cat", Json::str("sparselm")),
+        ("ph", Json::str("X")),
+        ("ts", Json::num(s.start_us as f64)),
+        ("dur", Json::num(s.dur_us as f64)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(s.tid as f64)),
+        ("args", Json::obj(args)),
+    ])
+}
+
+/// Union several Chrome pages (a router's own + its workers') into one,
+/// keeping every process's lane. When `ids` is non-empty, span events
+/// whose `args.trace` isn't in the set are filtered out (metadata
+/// events for processes that contributed nothing are dropped too).
+pub fn merge_chrome(pages: &[Json], ids: &[u64]) -> Json {
+    let keep: Vec<String> = ids.iter().map(|i| id_hex(*i)).collect();
+    let mut spans: Vec<Json> = Vec::new();
+    let mut meta: BTreeMap<String, Json> = BTreeMap::new(); // pid -> event
+    let mut live_pids: Vec<String> = Vec::new();
+    for p in pages {
+        let Some(events) = p.get("traceEvents").and_then(|e| e.as_arr()) else {
+            continue;
+        };
+        for ev in events {
+            let ph = ev.get("ph").and_then(|v| v.as_str()).unwrap_or("");
+            let pid = ev
+                .get("pid")
+                .and_then(|v| v.as_f64())
+                .map(|v| format!("{v}"))
+                .unwrap_or_default();
+            if ph == "M" {
+                meta.entry(pid).or_insert_with(|| ev.clone());
+                continue;
+            }
+            let trace = ev
+                .get("args")
+                .and_then(|a| a.get("trace"))
+                .and_then(|t| t.as_str())
+                .unwrap_or("");
+            if !keep.is_empty() && !keep.iter().any(|k| k == trace) {
+                continue;
+            }
+            if !live_pids.contains(&pid) {
+                live_pids.push(pid);
+            }
+            spans.push(ev.clone());
+        }
+    }
+    let mut events: Vec<Json> = meta
+        .into_iter()
+        .filter(|(pid, _)| live_pids.contains(pid))
+        .map(|(_, ev)| ev)
+        .collect();
+    events.extend(spans);
+    page(events)
+}
+
+// ------------------------------------------------------------- validator
+
+/// Strictly validate a Chrome trace-event page (the trace analog of
+/// `prom::parse_text`). Checks, per event: required keys and types,
+/// `ph` ∈ {"X","M"}, integral non-negative `ts`/`dur`, hex span IDs.
+/// Structurally, per trace: at least one root anchor (parent `"0"` or
+/// a parent outside the page — a worker-local export legitimately
+/// parents under a router span it doesn't hold), no self-parenting,
+/// children contained in their parent's [ts, ts+dur] window (with
+/// [`CROSS_PROCESS_SKEW_US`] slack across process boundaries only),
+/// and same-lane siblings monotone and non-overlapping.
+pub fn validate_chrome(page: &Json) -> Result<(), String> {
+    let events = page
+        .get("traceEvents")
+        .ok_or("missing traceEvents")?
+        .as_arr()
+        .ok_or("traceEvents is not an array")?;
+
+    struct Ev {
+        trace: String,
+        id: String,
+        parent: String,
+        name: String,
+        ts: u64,
+        dur: u64,
+        pid: u64,
+        tid: u64,
+    }
+    let mut spans: Vec<Ev> = Vec::new();
+
+    let int_field = |ev: &Json, key: &str, i: usize| -> Result<u64, String> {
+        let v = ev
+            .get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("event {i}: missing numeric {key}"))?;
+        if v < 0.0 || v.fract() != 0.0 || v >= 1e15 {
+            return Err(format!("event {i}: {key}={v} not a non-negative integer"));
+        }
+        Ok(v as u64)
+    };
+
+    for (i, ev) in events.iter().enumerate() {
+        if ev.as_obj().is_none() {
+            return Err(format!("event {i}: not an object"));
+        }
+        let name = ev
+            .get("name")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing name"))?;
+        if name.is_empty() {
+            return Err(format!("event {i}: empty name"));
+        }
+        let ph = ev
+            .get("ph")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        let pid = int_field(ev, "pid", i)?;
+        let tid = int_field(ev, "tid", i)?;
+        let ts = int_field(ev, "ts", i)?;
+        match ph {
+            "M" => {
+                let ok = ev
+                    .get("args")
+                    .and_then(|a| a.get("name"))
+                    .and_then(|n| n.as_str())
+                    .is_some();
+                if !ok {
+                    return Err(format!("event {i}: metadata event without args.name"));
+                }
+            }
+            "X" => {
+                let dur = int_field(ev, "dur", i)?;
+                let args = ev
+                    .get("args")
+                    .and_then(|a| a.as_obj())
+                    .ok_or_else(|| format!("event {i}: complete event without args"))?;
+                let hexish = |key: &str| -> Result<String, String> {
+                    let s = args
+                        .get(key)
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| format!("event {i}: args.{key} missing"))?;
+                    if s != "0" && parse_hex(s).is_none() {
+                        return Err(format!("event {i}: args.{key}={s:?} is not hex"));
+                    }
+                    Ok(s.to_string())
+                };
+                let trace = hexish("trace")?;
+                let id = hexish("id")?;
+                let parent = hexish("parent")?;
+                if trace == "0" || id == "0" {
+                    return Err(format!("event {i}: zero trace/span id"));
+                }
+                if id == parent {
+                    return Err(format!("event {i}: span {id} parents itself"));
+                }
+                spans.push(Ev {
+                    trace,
+                    id,
+                    parent,
+                    name: name.to_string(),
+                    ts,
+                    dur,
+                    pid,
+                    tid,
+                });
+            }
+            other => return Err(format!("event {i}: unsupported ph {other:?}")),
+        }
+    }
+
+    // structural checks per trace
+    let mut by_trace: BTreeMap<&str, Vec<&Ev>> = BTreeMap::new();
+    for s in &spans {
+        by_trace.entry(&s.trace).or_default().push(s);
+    }
+    for (trace, evs) in &by_trace {
+        let ids: BTreeMap<&str, &Ev> = evs.iter().map(|e| (e.id.as_str(), *e)).collect();
+        if ids.len() != evs.len() {
+            return Err(format!("trace {trace}: duplicate span ids"));
+        }
+        let anchors = evs
+            .iter()
+            .filter(|e| e.parent == "0" || !ids.contains_key(e.parent.as_str()))
+            .count();
+        if anchors == 0 {
+            return Err(format!("trace {trace}: no root anchor (parent cycle?)"));
+        }
+        // child containment
+        for e in evs {
+            let Some(p) = ids.get(e.parent.as_str()) else {
+                continue;
+            };
+            let skew = if e.pid == p.pid { 0 } else { CROSS_PROCESS_SKEW_US };
+            // +1µs: ts and dur are independently floor-truncated, so a
+            // child's floored end may overshoot its parent's by one tick
+            if e.ts + skew < p.ts || e.ts + e.dur > p.ts + p.dur + skew + 1 {
+                return Err(format!(
+                    "trace {trace}: span {} [{}..{}] escapes parent {} [{}..{}]",
+                    e.name,
+                    e.ts,
+                    e.ts + e.dur,
+                    p.name,
+                    p.ts,
+                    p.ts + p.dur,
+                ));
+            }
+        }
+        // same-lane sibling monotonicity
+        let mut lanes: BTreeMap<(&str, u64, u64), Vec<&&Ev>> = BTreeMap::new();
+        for e in evs {
+            lanes
+                .entry((e.parent.as_str(), e.pid, e.tid))
+                .or_default()
+                .push(e);
+        }
+        for ((parent, pid, tid), mut sibs) in lanes {
+            sibs.sort_by_key(|e| (e.ts, e.ts + e.dur));
+            for w in sibs.windows(2) {
+                let (a, b) = (w[0], w[1]);
+                if b.ts < a.ts + a.dur {
+                    return Err(format!(
+                        "trace {trace}: siblings {} and {} overlap under parent \
+                         {parent} (pid {pid} tid {tid})",
+                        a.name, b.name,
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Convenience: parse a JSON string and validate it as a Chrome page.
+pub fn validate_chrome_str(text: &str) -> Result<(), String> {
+    let j = Json::parse(text).map_err(|e| e.to_string())?;
+    validate_chrome(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // the recorder is process-global; serialize tests that depend on
+    // ring contents or global switches
+    fn lock() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+        match GATE.get_or_init(|| Mutex::new(())).lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
+    }
+
+    fn span_names(page: &Json, trace: u64) -> Vec<String> {
+        let hex = id_hex(trace);
+        page.get("traceEvents")
+            .and_then(|e| e.as_arr())
+            .unwrap()
+            .iter()
+            .filter(|ev| {
+                ev.get("args")
+                    .and_then(|a| a.get("trace"))
+                    .and_then(|t| t.as_str())
+                    == Some(&hex)
+            })
+            .map(|ev| ev.get("name").unwrap().as_str().unwrap().to_string())
+            .collect()
+    }
+
+    #[test]
+    fn ids_roundtrip_hex() {
+        let id = mint_id();
+        assert_eq!(parse_hex(&id_hex(id)), Some(id));
+        assert_eq!(parse_hex("zz"), None);
+        assert_eq!(parse_hex(""), None);
+        assert_ne!(id_from_label("req-1"), 0);
+        assert_eq!(id_from_label("req-1"), id_from_label("req-1"));
+    }
+
+    #[test]
+    fn nested_spans_record_parentage_and_validate() {
+        let _g = lock();
+        let trace = mint_id();
+        let root_id;
+        let child_id;
+        {
+            let r = root("ingress.tcp", trace, 0);
+            root_id = r.id();
+            {
+                let mut c = span("execute");
+                c.arg("op", "nll");
+                child_id = c.id();
+                let _grand = span("spmm.gemv");
+            }
+        }
+        let page = export_chrome(&Selection {
+            ids: vec![trace],
+            last: 0,
+        });
+        validate_chrome(&page).expect("export must validate");
+        let names = span_names(&page, trace);
+        assert_eq!(names, vec!["ingress.tcp", "execute", "spmm.gemv"]);
+        // check explicit parent links
+        let evs = page.get("traceEvents").unwrap().as_arr().unwrap();
+        let parent_of = |id: u64| -> String {
+            evs.iter()
+                .find(|e| {
+                    e.get("args").and_then(|a| a.get("id")).and_then(|v| v.as_str())
+                        == Some(&id_hex(id))
+                })
+                .and_then(|e| e.get("args").unwrap().get("parent"))
+                .and_then(|p| p.as_str())
+                .unwrap()
+                .to_string()
+        };
+        assert_eq!(parent_of(root_id), "0");
+        assert_eq!(parent_of(child_id), id_hex(root_id));
+    }
+
+    #[test]
+    fn spans_from_other_threads_are_drained_on_root_close() {
+        let _g = lock();
+        let trace = mint_id();
+        {
+            let r = root("root", trace, 0);
+            let ctx = Ctx {
+                trace,
+                span: r.id(),
+            };
+            std::thread::spawn(move || {
+                let _s = scope(ctx);
+                let _sp = span("offthread");
+            })
+            .join()
+            .unwrap();
+        }
+        let page = export_chrome(&Selection {
+            ids: vec![trace],
+            last: 0,
+        });
+        let names = span_names(&page, trace);
+        assert!(
+            names.contains(&"offthread".to_string()),
+            "got {names:?}"
+        );
+        validate_chrome(&page).unwrap();
+    }
+
+    #[test]
+    fn record_at_lands_manual_interval() {
+        let _g = lock();
+        let trace = mint_id();
+        {
+            let r = root("root", trace, 0);
+            let start = now_us();
+            record_at(
+                "sched.queue",
+                Ctx {
+                    trace,
+                    span: r.id(),
+                },
+                start,
+                0,
+                vec![("depth", ArgVal::U(3))],
+            );
+        }
+        let page = export_chrome(&Selection {
+            ids: vec![trace],
+            last: 0,
+        });
+        assert!(span_names(&page, trace).contains(&"sched.queue".to_string()));
+        validate_chrome(&page).unwrap();
+    }
+
+    #[test]
+    fn ring_evicts_oldest_completed_trace() {
+        let _g = lock();
+        set_ring_capacity(4);
+        let mut ids = Vec::new();
+        for _ in 0..6 {
+            let t = mint_id();
+            ids.push(t);
+            let _r = root("root", t, 0);
+        }
+        let kept = completed_ids();
+        assert!(!kept.contains(&ids[0]), "oldest should be evicted");
+        assert!(!kept.contains(&ids[1]));
+        for t in &ids[2..] {
+            assert!(kept.contains(t), "recent trace missing from ring");
+        }
+        set_ring_capacity(DEFAULT_RING_CAP);
+    }
+
+    #[test]
+    fn disabled_recorder_emits_nothing() {
+        let _g = lock();
+        set_enabled(false);
+        let trace = mint_id();
+        {
+            let r = root("root", trace, 0);
+            assert!(!r.active());
+            let s = span("child");
+            assert!(!s.active());
+        }
+        set_enabled(true);
+        let page = export_chrome(&Selection {
+            ids: vec![trace],
+            last: 0,
+        });
+        assert!(span_names(&page, trace).is_empty());
+    }
+
+    #[test]
+    fn spans_without_ambient_context_are_inert() {
+        let _g = lock();
+        assert_eq!(current(), Ctx::NONE);
+        let s = span("orphan");
+        assert!(!s.active());
+        assert_eq!(s.id(), 0);
+    }
+
+    #[test]
+    fn span_cap_is_counted_not_unbounded() {
+        let _g = lock();
+        let trace = mint_id();
+        {
+            let _r = root("root", trace, 0);
+            for _ in 0..(MAX_SPANS_PER_TRACE + 10) {
+                let _s = span("leaf");
+            }
+        }
+        let page = export_chrome(&Selection {
+            ids: vec![trace],
+            last: 0,
+        });
+        let names = span_names(&page, trace);
+        assert!(names.len() <= MAX_SPANS_PER_TRACE + 1);
+        assert!(
+            names.contains(&"trace.dropped_spans".to_string()),
+            "truncation must be surfaced"
+        );
+    }
+
+    #[test]
+    fn validator_rejects_malformed_pages() {
+        // not an object / missing traceEvents
+        assert!(validate_chrome(&Json::obj(vec![])).is_err());
+        // bad ph
+        let bad_ph = page(vec![Json::obj(vec![
+            ("name", Json::str("x")),
+            ("ph", Json::str("B")),
+            ("ts", Json::num(0.0)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(1.0)),
+        ])]);
+        assert!(validate_chrome(&bad_ph).unwrap_err().contains("ph"));
+        // non-integral ts
+        let frac = page(vec![mk_span("a", "f1", "01", "0", 1.5, 1.0, 1, 1)]);
+        assert!(validate_chrome(&frac).is_err());
+        // self-parenting
+        let selfp = page(vec![mk_span("a", "f1", "02", "02", 0.0, 1.0, 1, 1)]);
+        assert!(validate_chrome(&selfp).is_err());
+        // duplicate ids
+        let dup = page(vec![
+            mk_span("a", "f1", "03", "0", 0.0, 1.0, 1, 1),
+            mk_span("b", "f1", "03", "0", 5.0, 1.0, 1, 1),
+        ]);
+        assert!(validate_chrome(&dup).unwrap_err().contains("duplicate"));
+    }
+
+    fn mk_span(
+        name: &str,
+        trace: &str,
+        id: &str,
+        parent: &str,
+        ts: f64,
+        dur: f64,
+        pid: u64,
+        tid: u64,
+    ) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(name)),
+            ("cat", Json::str("sparselm")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(ts)),
+            ("dur", Json::num(dur)),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            (
+                "args",
+                Json::obj(vec![
+                    ("trace", Json::str(trace)),
+                    ("id", Json::str(id)),
+                    ("parent", Json::str(parent)),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn validator_enforces_containment_and_sibling_monotonicity() {
+        // child escapes parent window
+        let escape = page(vec![
+            mk_span("p", "f1", "0a", "0", 100.0, 50.0, 1, 1),
+            mk_span("c", "f1", "0b", "0a", 140.0, 50.0, 1, 1),
+        ]);
+        assert!(validate_chrome(&escape).unwrap_err().contains("escapes"));
+        // overlapping same-lane siblings
+        let overlap = page(vec![
+            mk_span("p", "f1", "0a", "0", 0.0, 100.0, 1, 1),
+            mk_span("c1", "f1", "0b", "0a", 10.0, 30.0, 1, 1),
+            mk_span("c2", "f1", "0c", "0a", 20.0, 30.0, 1, 1),
+        ]);
+        assert!(validate_chrome(&overlap).unwrap_err().contains("overlap"));
+        // well-formed nesting passes
+        let ok = page(vec![
+            mk_span("p", "f1", "0a", "0", 0.0, 100.0, 1, 1),
+            mk_span("c1", "f1", "0b", "0a", 10.0, 30.0, 1, 1),
+            mk_span("c2", "f1", "0c", "0a", 50.0, 30.0, 1, 1),
+        ]);
+        validate_chrome(&ok).unwrap();
+        // cross-process child may lead its parent by small skew
+        let skew = page(vec![
+            mk_span("p", "f1", "0a", "0", 1000.0, 5000.0, 1, 1),
+            mk_span("c", "f1", "0b", "0a", 900.0, 500.0, 2, 1),
+        ]);
+        validate_chrome(&skew).unwrap();
+    }
+
+    #[test]
+    fn merge_unions_pages_and_filters_by_trace() {
+        let p1 = page(vec![
+            process_name_event(1, "router"),
+            mk_span("root", "aa", "01", "0", 0.0, 100.0, 1, 1),
+            mk_span("noise", "bb", "02", "0", 0.0, 10.0, 1, 1),
+        ]);
+        let p2 = page(vec![
+            process_name_event(2, "worker"),
+            mk_span("w", "aa", "03", "01", 10.0, 20.0, 2, 1),
+        ]);
+        let merged = merge_chrome(&[p1, p2], &[parse_hex("aa").unwrap()]);
+        validate_chrome(&merged).unwrap();
+        let evs = merged.get("traceEvents").unwrap().as_arr().unwrap();
+        let names: Vec<&str> = evs
+            .iter()
+            .map(|e| e.get("name").unwrap().as_str().unwrap())
+            .collect();
+        assert!(names.contains(&"root"));
+        assert!(names.contains(&"w"));
+        assert!(!names.contains(&"noise"), "other traces filtered out");
+        // both process lanes present
+        assert_eq!(
+            names.iter().filter(|n| **n == "process_name").count(),
+            2
+        );
+    }
+
+    #[test]
+    fn slow_threshold_switch() {
+        assert_eq!(slow_ms(), u64::MAX);
+        set_slow_ms(250);
+        assert_eq!(slow_ms(), 250);
+        set_slow_ms(u64::MAX);
+    }
+}

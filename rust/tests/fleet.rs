@@ -23,7 +23,7 @@ use sparselm::serve::{
 use sparselm::store::{read_artifact, write_artifact, PackedModel};
 use sparselm::util::json::Json;
 use sparselm::util::prom;
-use sparselm::util::Rng;
+use sparselm::util::{trace, Rng};
 
 /// Write the shared artifact every worker (and the reference server)
 /// mmaps. One file per test: the tests run concurrently.
@@ -185,6 +185,171 @@ fn fleet_of_four_byte_matches_single_process_then_drains_clean() {
     );
     http.shutdown().unwrap();
     reference.join().unwrap();
+    std::fs::remove_file(&path).ok();
+}
+
+/// Span events of one trace id in an exported page, as
+/// `(name, parent_hex, id_hex, pid)` tuples.
+fn trace_spans(page: &Json, tid_hex: &str) -> Vec<(String, String, String, f64)> {
+    page.get("traceEvents")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+        .filter(|e| {
+            e.get("args")
+                .and_then(|a| a.get("trace"))
+                .and_then(|t| t.as_str())
+                == Some(tid_hex)
+        })
+        .map(|e| {
+            let s = |k: &str| {
+                e.get(k)
+                    .or_else(|| e.get("args").and_then(|a| a.get(k)))
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string()
+            };
+            (
+                s("name"),
+                e.get("args")
+                    .and_then(|a| a.get("parent"))
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                e.get("args")
+                    .and_then(|a| a.get("id"))
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                e.get("pid").and_then(|v| v.as_f64()).unwrap_or(-1.0),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn trace_export_merges_router_and_worker_lanes_under_one_trace_id() {
+    let path = make_spak("tracing");
+    let fleet = boot_fleet(&path, 2);
+    let mut cl = ServeClient::connect(fleet.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(300)).unwrap();
+
+    // --- a traced generate: the client pins the trace id via the wire
+    // tag, so concurrent tests sharing this process's recorder cannot
+    // collide with the export below ---------------------------------
+    let tid = 0x7e57_0001_0000_0001u64;
+    let tid_hex = trace::id_hex(tid);
+    let line = format!(
+        "{{\"op\": \"generate\", \"prompt\": \"the quick brown\", \"max_tokens\": 6, \
+         \"temperature\": 0, \"trace\": \"{tid_hex}/0\"}}"
+    );
+    let reply = tcp_answer(fleet.addr, &line);
+    assert!(reply.contains("\"text\""), "traced generate failed: {reply}");
+
+    // --- merged export: router lane + the answering worker's lane ----
+    let page = cl.trace_export(&[tid], 1).unwrap();
+    trace::validate_chrome(&page)
+        .unwrap_or_else(|e| panic!("merged page rejected by validator: {e}\n{page}"));
+    let spans = trace_spans(&page, &tid_hex);
+
+    // the router's ingress root anchors the trace…
+    let root = spans
+        .iter()
+        .find(|(name, parent, _, _)| name == "ingress.tcp" && parent == "0")
+        .unwrap_or_else(|| panic!("no router ingress root: {spans:?}"))
+        .clone();
+    // …its dispatch span is the root's child in the same process…
+    let dispatch = spans
+        .iter()
+        .find(|(name, parent, _, _)| name == "router.dispatch" && *parent == root.2)
+        .unwrap_or_else(|| panic!("no router.dispatch under the ingress root: {spans:?}"))
+        .clone();
+    assert_eq!(dispatch.3, root.3, "dispatch runs in the router process");
+    // …and the worker's own ingress root parents under the dispatch
+    // span, across the process boundary
+    let worker_root = spans
+        .iter()
+        .find(|(name, parent, _, _)| name == "ingress.tcp" && *parent == dispatch.2)
+        .unwrap_or_else(|| panic!("no worker root under router.dispatch: {spans:?}"))
+        .clone();
+    assert_ne!(worker_root.3, root.3, "worker spans live in their own process lane");
+
+    // worker-side request anatomy arrives in the same merged page
+    for want in ["op.generate", "sched.queue_wait", "sched.prefill", "sched.step"] {
+        assert!(
+            spans.iter().any(|(n, _, _, pid)| n == want && *pid == worker_root.3),
+            "worker span {want} missing: {spans:?}"
+        );
+    }
+    assert!(
+        spans.iter().any(|(n, _, _, _)| n.starts_with("spmm.")),
+        "no spmm dispatch spans in the merged page: {spans:?}"
+    );
+
+    // --- chaos: SIGKILL a worker, then catch a traced request that
+    // redispatches — its trace must show BOTH dispatch attempts as
+    // children of one ingress root ------------------------------------
+    let text = "the quick brown fox jumps over the lazy dog";
+    let deadline = Instant::now() + Duration::from_secs(280);
+    let mut seq = 0u64;
+    let redispatched = 'hunt: loop {
+        assert!(
+            Instant::now() < deadline,
+            "never observed a redispatched traced request"
+        );
+        // kill the tie-break pick: with both workers idle, least-inflight
+        // resolves to the last slot, so the next op dispatches into the
+        // corpse and must redispatch
+        fleet.kill_worker(1);
+        for _ in 0..8 {
+            seq += 1;
+            let tid = 0x7e57_0002_0000_0000u64 + seq;
+            let tid_hex = trace::id_hex(tid);
+            let line = format!(
+                "{{\"op\": \"nll\", \"text\": \"{text}\", \"trace\": \"{tid_hex}/0\"}}"
+            );
+            // idempotent op: must be answered even mid-kill
+            let reply = tcp_answer(fleet.addr, &line);
+            assert!(reply.contains("mean_nll"), "accepted request dropped: {reply}");
+            let page = cl.trace_export(&[tid], 1).unwrap();
+            trace::validate_chrome(&page)
+                .unwrap_or_else(|e| panic!("chaos page invalid: {e}\n{page}"));
+            let spans = trace_spans(&page, &tid_hex);
+            let dispatches: Vec<_> = spans
+                .iter()
+                .filter(|(n, _, _, _)| n == "router.dispatch")
+                .collect();
+            if dispatches.len() >= 2 {
+                break 'hunt spans;
+            }
+        }
+        // the supervisor needs a beat to respawn before the next kill
+        std::thread::sleep(Duration::from_millis(300));
+    };
+    let root = redispatched
+        .iter()
+        .find(|(n, p, _, _)| n == "ingress.tcp" && p == "0")
+        .expect("redispatched trace keeps its ingress root")
+        .clone();
+    let attempts: Vec<_> = redispatched
+        .iter()
+        .filter(|(n, p, _, _)| n == "router.dispatch" && *p == root.2)
+        .collect();
+    assert!(
+        attempts.len() >= 2,
+        "both dispatch attempts must parent under the one ingress root: {redispatched:?}"
+    );
+    // the surviving worker's spans still arrive under the same trace
+    assert!(
+        redispatched
+            .iter()
+            .any(|(n, _, _, pid)| n == "ingress.tcp" && *pid != root.3),
+        "answering worker's lane missing from the redispatched trace: {redispatched:?}"
+    );
+
+    fleet.shutdown().unwrap();
     std::fs::remove_file(&path).ok();
 }
 

@@ -145,6 +145,7 @@ fn generation_budget_clamps_at_context_capacity() {
         temperature: 0.0,
         seed: 0,
         stop: None, // no early stop: the budget is what terminates
+        trace: sparselm::util::trace::Ctx::NONE,
     };
     let rx_at = sched.submit(mk(1, exact));
     let rx_past = sched.submit(mk(2, exact + 1));

@@ -17,7 +17,7 @@ use sparselm::serve::{
 };
 use sparselm::util::json::Json;
 use sparselm::util::prom;
-use sparselm::util::Rng;
+use sparselm::util::{trace, Rng};
 
 /// Boot a tiny packed model behind both ingresses.
 fn boot() -> (ServerHandle, HttpHandle) {
@@ -110,6 +110,131 @@ fn score_and_generate_byte_match_the_tcp_answers() {
     let reply = cl.post_json("/score", "{\"text\": \"\"}").unwrap();
     assert_eq!(reply.status, 400);
     assert_eq!(reply.text(), tcp, "error-body parity");
+
+    http.shutdown().unwrap();
+    handle.shutdown().unwrap();
+}
+
+#[test]
+fn request_ids_echo_and_debug_trace_exports_a_valid_page() {
+    let (handle, http) = boot();
+    let mut cl = HttpClient::connect(http.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(120)).unwrap();
+
+    // no inbound id: the front end mints one and echoes it as 16 hex
+    let reply = cl.get("/health").unwrap();
+    let minted = reply
+        .header("x-request-id")
+        .expect("every reply carries X-Request-Id")
+        .to_string();
+    assert_eq!(minted.len(), 16, "canonical 16-hex id, got {minted:?}");
+    assert!(minted.chars().all(|c| c.is_ascii_hexdigit()), "{minted:?}");
+
+    // a well-formed hex id becomes the request's trace id and is echoed
+    // canonically; the request's spans then export under exactly that id
+    let rid = "00000000c0ffee42";
+    let body = "{\"prompt\": \"the quick brown\", \"max_tokens\": 6, \"temperature\": 0}";
+    let req = format!(
+        "POST /generate HTTP/1.1\r\nHost: sparselm\r\nX-Request-Id: {rid}\r\n\
+         Content-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    cl.send_raw(req.as_bytes()).unwrap();
+    let reply = cl.read_reply().unwrap();
+    assert_eq!(reply.status, 200);
+    assert_eq!(reply.header("x-request-id"), Some(rid), "inbound id honored");
+
+    // /debug/trace?id= exports that request as a Chrome trace-event page
+    // that the in-repo validator accepts (parented spans, monotone
+    // non-overlapping same-lane siblings)
+    let reply = cl.get(&format!("/debug/trace?id={rid}")).unwrap();
+    assert_eq!(reply.status, 200);
+    assert_eq!(reply.header("content-type"), Some("application/json"));
+    let text = reply.text();
+    trace::validate_chrome_str(&text)
+        .unwrap_or_else(|e| panic!("exported page rejected by validator: {e}\n{text}"));
+    let page = Json::parse(&text).unwrap();
+    let names: Vec<String> = page
+        .get("traceEvents")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter(|e| {
+            e.get("args")
+                .and_then(|a| a.get("trace"))
+                .and_then(|t| t.as_str())
+                == Some(rid)
+        })
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()).map(str::to_string))
+        .collect();
+    let expected = ["ingress.http", "op.generate", "sched.queue_wait", "sched.prefill"];
+    for want in expected.into_iter().chain(["sched.step"]) {
+        assert!(names.iter().any(|n| n == want), "span {want} missing: {names:?}");
+    }
+    assert!(
+        names.iter().any(|n| n.starts_with("spmm.")),
+        "no spmm dispatch spans: {names:?}"
+    );
+
+    // ?last=K works without knowing an id and stays valid
+    let reply = cl.get("/debug/trace?last=3").unwrap();
+    assert_eq!(reply.status, 200);
+    trace::validate_chrome_str(&reply.text()).unwrap();
+    // bad queries are typed 400s, not export crashes
+    assert_eq!(cl.get("/debug/trace?id=zz").unwrap().status, 400);
+    assert_eq!(cl.get("/debug/trace?last=0").unwrap().status, 400);
+
+    // a non-hex inbound id maps deterministically (hashed, not dropped)
+    let probe = |cl: &mut HttpClient| -> String {
+        let req = "GET /health HTTP/1.1\r\nHost: sparselm\r\n\
+                   X-Request-Id: not-hex-at-all\r\n\r\n";
+        cl.send_raw(req.as_bytes()).unwrap();
+        cl.read_reply().unwrap().header("x-request-id").unwrap().to_string()
+    };
+    let a = probe(&mut cl);
+    let b = probe(&mut cl);
+    assert_eq!(a, b, "non-hex ids must hash deterministically");
+    assert_eq!(a.len(), 16);
+
+    // hardening replies carry the id too: an oversized declared body is
+    // answered 413 with the inbound id echoed (connection then closes)
+    let rid2 = "00000000deadbeef";
+    let req = format!(
+        "POST /score HTTP/1.1\r\nHost: sparselm\r\nX-Request-Id: {rid2}\r\n\
+         Content-Type: application/json\r\nContent-Length: 2000000\r\n\r\n"
+    );
+    cl.send_raw(req.as_bytes()).unwrap();
+    let reply = cl.read_reply().unwrap();
+    assert_eq!(reply.status, 413);
+    assert_eq!(reply.header("x-request-id"), Some(rid2), "413 carries the id");
+
+    // the new metric families render with HELP/TYPE and parse strictly
+    let mut cl = HttpClient::connect(http.addr).unwrap();
+    cl.set_timeout(Duration::from_secs(120)).unwrap();
+    let page = cl.get("/metrics").unwrap().text();
+    let s = prom::parse_text(&page).unwrap_or_else(|e| panic!("bad scrape: {e}\n{page}"));
+    let dur = s
+        .value(
+            "http_route_duration_seconds_bucket",
+            &[("route", "generate"), ("le", "+Inf")],
+        )
+        .expect("route duration histogram");
+    assert!(dur >= 1.0, "one generate observed, got {dur}");
+    let aged = s
+        .value("sparselm_queue_age_seconds_count", &[])
+        .expect("queue-age histogram");
+    assert!(aged >= 1.0, "one admission aged, got {aged}");
+    assert!(
+        s.value("sparselm_op_latency_seconds", &[("op", "generate"), ("quantile", "0.99")])
+            .expect("op latency summary")
+            > 0.0,
+        "generate p99 should be nonzero after a request"
+    );
+    assert!(
+        s.value("sparselm_spec_accepted_length_bucket", &[("le", "+Inf")]).is_some(),
+        "spec accepted-length family missing:\n{page}"
+    );
 
     http.shutdown().unwrap();
     handle.shutdown().unwrap();

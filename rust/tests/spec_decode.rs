@@ -9,7 +9,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
+use sparselm::data::tokenizer::{BOS, EOS};
 use sparselm::data::{CorpusKind, CorpusSpec, Tokenizer, World};
+use sparselm::eval::Sampler;
 use sparselm::model::{ModelConfig, ParamSet, SparseLm, SpecDecoder};
 use sparselm::quant::QuantSpec;
 use sparselm::serve::{
@@ -157,6 +159,69 @@ fn spec_backend_is_bitwise_identical_to_plain_backend_through_live_servers() {
     assert!(s.value("sparselm_spec_rounds_total", &[]).unwrap_or(0.0) > 0.0);
     assert!(s.value("sparselm_spec_accepted_total", &[]).is_some());
     assert_eq!(s.value("sparselm_gen_queue_depth", &[]), Some(0.0));
+
+    // ---- tracing: a traced speculative decode exports per-round
+    // draft/verify spans the in-repo validator accepts ------------------
+    {
+        use sparselm::util::trace;
+        let tid = 0x5bec_0000_0000_0001u64;
+        {
+            let root = trace::root("test.spec_generate", tid, 0);
+            let _in_req = trace::scope(trace::Ctx {
+                trace: root.trace(),
+                span: root.id(),
+            });
+            let mut ids = vec![BOS];
+            ids.extend(tok.encode("the quick brown fox"));
+            let mut sampler = Sampler::new(0.0, 0);
+            dec.generate(&ids, 16, Some(EOS), |logits| sampler.next(logits))
+                .unwrap();
+        }
+        let page = trace::export_chrome(&trace::Selection {
+            ids: vec![tid],
+            last: 1,
+        });
+        trace::validate_chrome(&page)
+            .unwrap_or_else(|e| panic!("spec trace rejected by validator: {e}\n{page}"));
+        let events: Vec<&Json> = page
+            .get("traceEvents")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .filter(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .collect();
+        let named = |name: &str| -> Vec<&&Json> {
+            events
+                .iter()
+                .filter(|e| e.get("name").and_then(|n| n.as_str()) == Some(name))
+                .collect()
+        };
+        let rounds = named("spec.round");
+        assert!(!rounds.is_empty(), "no spec.round spans: {page}");
+        assert!(
+            rounds.iter().any(|e| {
+                let args = e.get("args").unwrap();
+                args.get("k").is_some() && args.get("accepted").is_some()
+            }),
+            "spec.round must carry k and accepted-length args: {page}"
+        );
+        let round_ids: Vec<&str> = rounds
+            .iter()
+            .filter_map(|e| e.get("args").and_then(|a| a.get("id")).and_then(|v| v.as_str()))
+            .collect();
+        for child in ["spec.draft", "spec.verify"] {
+            assert!(
+                named(child).iter().any(|e| {
+                    e.get("args")
+                        .and_then(|a| a.get("parent"))
+                        .and_then(|v| v.as_str())
+                        .is_some_and(|p| round_ids.contains(&p))
+                }),
+                "{child} spans must nest under a spec.round: {page}"
+            );
+        }
+    }
 
     http.shutdown().unwrap();
     spec.shutdown().unwrap();
